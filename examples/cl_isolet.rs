@@ -1,0 +1,103 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): continual learning on the
+//! ISOLET-like workload in bypass mode, through the full stack — synthetic
+//! dataset artifact -> task-incremental stream -> AOT Pallas encoder via
+//! PJRT -> progressive search -> gradient-free updates — against the FP32
+//! SGD baseline (with and without replay) and nearest-class-mean.
+//!
+//!     make artifacts && cargo run --release --example cl_isolet
+//!
+//! Flags: --config isolet|ucihar|tiny  --tasks N  --tau F  --eval-cap N
+
+use clo_hdnn::baselines::{LinearSgd, NearestMean};
+use clo_hdnn::cl::learners::{HdLearner, NcmLearner, SgdLearner};
+use clo_hdnn::cl::ClHarness;
+use clo_hdnn::data::{Dataset, TaskStream};
+use clo_hdnn::hdc::{HdClassifier, ProgressiveSearch, Trainer};
+use clo_hdnn::runtime::{Engine, Manifest, PjrtBackend};
+use clo_hdnn::sim::{Chip, Mode};
+use clo_hdnn::util::stats::Table;
+use clo_hdnn::util::Args;
+
+fn main() -> clo_hdnn::Result<()> {
+    let args = Args::from_env();
+    let cfg_name = args.str_or("config", "isolet");
+    let n_tasks = args.usize_or("tasks", 5);
+    let tau = args.f64_or("tau", 0.5) as f32;
+
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    let mut engine = Engine::load(&dir)?;
+    let cfg = engine.manifest.config(&cfg_name)?.clone();
+    let train = Dataset::load(engine.manifest.dataset_path(&format!("ds_{cfg_name}_train"))?)?;
+    let test = Dataset::load(engine.manifest.dataset_path(&format!("ds_{cfg_name}_test"))?)?;
+    println!(
+        "== continual learning on {cfg_name}: {} train / {} test samples, \
+         {} classes in {n_tasks} tasks, F={} D={} ==",
+        train.n, test.n, cfg.classes, cfg.features(), cfg.dim()
+    );
+
+    let stream = TaskStream::class_incremental(&train, n_tasks, 1);
+    let mut harness = ClHarness::new(&train, &test, &stream);
+    harness.eval_cap = args.usize_or("eval-cap", 150);
+
+    // learners
+    let mut hd = HdLearner::new(
+        HdClassifier::new(
+            Box::new(PjrtBackend::new(&mut engine, &cfg_name, 1)?),
+            ProgressiveSearch { tau, min_segments: 1 },
+        ),
+        Trainer { retrain_epochs: 1 },
+    );
+    let mut sgd = SgdLearner(LinearSgd::new(train.dim, cfg.classes, 0.05, 4, 0, 7));
+    let mut sgd_replay = SgdLearner(LinearSgd::new(train.dim, cfg.classes, 0.05, 4, 500, 7));
+    let mut ncm = NcmLearner(NearestMean::new(train.dim, cfg.classes));
+
+    let t0 = std::time::Instant::now();
+    let hd_run = harness.run(&mut hd)?;
+    let hd_wall = t0.elapsed().as_secs_f64();
+    let sgd_run = harness.run(&mut sgd)?;
+    let sgd_replay_run = harness.run(&mut sgd_replay)?;
+    let ncm_run = harness.run(&mut ncm)?;
+
+    let mut t = Table::new(&[
+        "learner", "final acc", "forgetting", "acc curve", "mean segs",
+    ]);
+    for run in [&hd_run, &sgd_run, &sgd_replay_run, &ncm_run] {
+        t.row(&[
+            run.learner.clone(),
+            format!("{:.4}", run.final_accuracy),
+            format!("{:.4}", run.mean_forgetting),
+            run.matrix
+                .curve()
+                .iter()
+                .map(|a| format!("{a:.2}"))
+                .collect::<Vec<_>>()
+                .join(" "),
+            run.mean_segments
+                .map(|s| format!("{s:.2}/{}", cfg.segments))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.print();
+
+    // throughput + chip-model summary for the HDC path
+    let trained_inferences = (0..n_tasks).map(|t| (t + 1) * harness.eval_cap).sum::<usize>();
+    println!(
+        "\nHDC stack wall time {:.2}s (~{:.0} train+infer ops/s through PJRT)",
+        hd_wall,
+        (train.n + trained_inferences) as f64 / hd_wall
+    );
+    if let Some(segs) = hd_run.mean_segments {
+        let chip = Chip::default();
+        let r = chip.simulate_inference(&cfg, Mode::Bypass, segs.round() as usize, None, 0.7);
+        println!(
+            "chip model @0.7V: {:.2} us / inference, {:.3} uJ (progressive, {:.1}% work skipped)",
+            r.latency_s * 1e6,
+            r.energy_j * 1e6,
+            (1.0 - segs / cfg.segments as f64) * 100.0
+        );
+    }
+    Ok(())
+}

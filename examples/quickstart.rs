@@ -1,0 +1,60 @@
+//! Quickstart: load the AOT artifacts, train the HDC classifier on the tiny
+//! synthetic dataset, classify with progressive search, and print the chip
+//! model's latency/energy estimate for what just ran.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use clo_hdnn::data::Dataset;
+use clo_hdnn::hdc::{HdClassifier, ProgressiveSearch, Trainer};
+use clo_hdnn::hdc::HdBackend;
+use clo_hdnn::runtime::{Engine, Manifest, PjrtBackend};
+use clo_hdnn::sim::{Chip, Mode};
+use clo_hdnn::util::stats::fmt_secs;
+
+fn main() -> clo_hdnn::Result<()> {
+    // 1. open the artifact directory and start the PJRT engine
+    let dir = Manifest::default_dir();
+    let mut engine = Engine::load(&dir)?;
+    println!("engine up on {} ({} executables in manifest)",
+             engine.platform(), engine.manifest.executables.len());
+
+    // 2. build the HD classifier on the AOT backend (Pallas kernels inside)
+    let backend = PjrtBackend::new(&mut engine, "tiny", 1)?;
+    let cfg = backend.cfg().clone();
+    let mut classifier = HdClassifier::new(
+        Box::new(backend),
+        ProgressiveSearch { tau: 0.5, min_segments: 1 },
+    );
+
+    // 3. gradient-free training: single pass + one mistake-driven epoch
+    let train = Dataset::load(engine.manifest.dataset_path("ds_tiny_train")?)?;
+    let test = Dataset::load(engine.manifest.dataset_path("ds_tiny_test")?)?;
+    let idx: Vec<usize> = (0..train.n).collect();
+    let report = Trainer { retrain_epochs: 1 }.train_indices(&mut classifier, &train, &idx)?;
+    println!("trained on {} samples; retrain mistakes per epoch: {:?}",
+             report.samples, report.mistakes);
+
+    // 4. progressive inference
+    let eval = classifier.evaluate(
+        (0..test.n).map(|i| (test.sample(i).to_vec(), test.label(i))))?;
+    println!(
+        "accuracy {:.4} | {:.2}/{} segments used on average -> {:.1}% of the \
+         encode+search work skipped (Fig.4)",
+        eval.accuracy,
+        eval.mean_segments,
+        eval.total_segments,
+        eval.complexity_reduction() * 100.0
+    );
+
+    // 5. what would this cost on the 40nm chip?
+    let chip = Chip::default();
+    for v in [0.7, 1.2] {
+        let r = chip.simulate_inference(&cfg, Mode::Bypass,
+                                        eval.mean_segments.round() as usize, None, v);
+        println!(
+            "chip model @ {:.1}V/{:.0}MHz: {} per inference, {:.3} uJ",
+            r.op.voltage, r.op.freq_mhz, fmt_secs(r.latency_s), r.energy_j * 1e6
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Debug utility: load an HLO text file, execute it on the PJRT CPU client
+//! with deterministic inputs, print output stats.
+//!
+//! Usage: cargo run --example run_hlo -- <file.hlo.txt> <shape1> [shape2...]
+//! Shapes as comma-separated dims, e.g. 1,64. `i` prefix = i32 scalar.
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let path = &args[0];
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    let mut literals = Vec::new();
+    for spec in &args[1..] {
+        if let Some(v) = spec.strip_prefix('i') {
+            literals.push(xla::Literal::scalar(v.parse::<i32>()?));
+        } else {
+            let dims: Vec<i64> = spec.split(',').map(|d| d.parse().unwrap()).collect();
+            let n: i64 = dims.iter().product();
+            let data: Vec<f32> = (0..n).map(|i| ((i % 13) as f32) - 6.0).collect();
+            literals.push(xla::Literal::vec1(&data).reshape(&dims)?);
+        }
+    }
+    let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+    let out = result.to_tuple1()?;
+    let v = out.to_vec::<f32>()?;
+    let nonzero = v.iter().filter(|x| **x != 0.0).count();
+    println!(
+        "out len={} nonzero={} head={:?}",
+        v.len(),
+        nonzero,
+        &v[..v.len().min(8)]
+    );
+    Ok(())
+}

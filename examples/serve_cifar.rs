@@ -1,0 +1,95 @@
+//! Serving driver: normal-mode (WCFE -> HDC) classification of CIFAR-100-
+//! like images through the coordinator — dual-mode routing, the AOT WCFE
+//! artifact, progressive search — under Poisson traffic, reporting
+//! latency percentiles and throughput.
+//!
+//!     make artifacts && cargo run --release --example serve_cifar
+//!
+//! Flags: --samples N  --rate RPS  --tau F  --learn N
+
+use clo_hdnn::coordinator::{
+    BackendSpec, Coordinator, CoordinatorOptions, Payload, ServeMetrics,
+};
+use clo_hdnn::data::Dataset;
+use clo_hdnn::runtime::Manifest;
+use clo_hdnn::util::stats::fmt_secs;
+use clo_hdnn::util::{Args, Rng};
+
+fn main() -> clo_hdnn::Result<()> {
+    let args = Args::from_env();
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    let manifest = Manifest::load(&dir)?;
+    let cfg = manifest.config("cifar100")?.clone();
+
+    // feature-space sets for online learning; image set for serving
+    let feat_train = Dataset::load(manifest.dataset_path("ds_cifar100_train")?)?;
+    let img_test = Dataset::load(manifest.dataset_path("ds_cifar100_img_test")?)?;
+
+    let coord = Coordinator::start(CoordinatorOptions {
+        backend: BackendSpec::Pjrt { artifacts: dir, config: "cifar100".into() },
+        tau: args.f64_or("tau", 0.5) as f32,
+        min_segments: args.usize_or("min-seg", 1),
+        mode_policy: Default::default(),
+        queue_depth: 256,
+    })?;
+
+    // online gradient-free learning on WCFE features
+    let learn_n = args.usize_or("learn", 2000).min(feat_train.n);
+    let t0 = std::time::Instant::now();
+    for i in 0..learn_n {
+        coord.call(Payload::Learn(feat_train.sample(i).to_vec(), feat_train.label(i)))?;
+    }
+    println!(
+        "learned {learn_n} samples in {} ({:.0} updates/s)",
+        fmt_secs(t0.elapsed().as_secs_f64()),
+        learn_n as f64 / t0.elapsed().as_secs_f64()
+    );
+
+    // serve raw images (normal mode: WCFE artifact runs per request)
+    let n = args.usize_or("samples", 300).min(img_test.n);
+    let rate = args.f64_or("rate", 300.0);
+    let mut rng = Rng::new(11);
+    let mut metrics = ServeMetrics::default();
+    let mut correct = 0usize;
+    let t1 = std::time::Instant::now();
+    for i in 0..n {
+        std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(rate)));
+        let r = coord.call(Payload::Image(img_test.sample(i).to_vec()))?;
+        match r.error {
+            Some(e) => {
+                eprintln!("request {i} failed: {e}");
+                metrics.record_error();
+            }
+            None => {
+                metrics.record(r.latency_s, r.segments_used, r.early_exit, r.used_wcfe);
+                correct += usize::from(r.class == Some(img_test.label(i)));
+            }
+        }
+    }
+    metrics.wall_s = t1.elapsed().as_secs_f64();
+
+    println!(
+        "served {} image requests (normal mode, WCFE ran on {}):",
+        metrics.total, metrics.wcfe_runs
+    );
+    println!(
+        "  accuracy {:.4} | p50 {} p95 {} mean {} | {:.1} req/s",
+        correct as f64 / n as f64,
+        fmt_secs(metrics.latency_percentile(50.0)),
+        fmt_secs(metrics.latency_percentile(95.0)),
+        fmt_secs(metrics.mean_latency()),
+        metrics.throughput_rps()
+    );
+    println!(
+        "  progressive search: {:.2}/{} segments on average (-{:.1}% complexity), \
+         {:.1}% early exits",
+        metrics.mean_segments(),
+        cfg.segments,
+        metrics.complexity_reduction(cfg.segments) * 100.0,
+        100.0 * metrics.early_exits as f64 / metrics.total.max(1) as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,205 @@
+"""AOT artifact pipeline: lower every L2 graph to HLO text, generate the
+synthetic datasets, pretrain + cluster the WCFE, and write the manifest.
+
+Run once via `make artifacts`; Python never runs on the request path.
+Emits HLO *text* (NOT .serialize()) — see hlo.py and
+/opt/xla-example/load_hlo/gen_hlo.py for why.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+       [--configs tiny,isolet,...] [--fast]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from . import datasets as D
+from . import hlo as H
+from . import model as M
+from . import pretrain as P
+from . import weights_io as W
+from .config import CONFIGS, WCFE, WcfeConfig
+
+
+def gen_factors(cfg):
+    """The +-1 Kronecker factors A (d1, f1), B (d2, f2) — the entire encoder
+    state (the 1376x memory saving vs a dense D x F projection)."""
+    rng = np.random.default_rng(cfg.seed + 77)
+    a = np.sign(rng.standard_normal((cfg.d1, cfg.f1))).astype(np.float32)
+    b = np.sign(rng.standard_normal((cfg.d2, cfg.f2))).astype(np.float32)
+    a[a == 0] = 1.0
+    b[b == 0] = 1.0
+    return a, b
+
+
+def quantize_features(x, scale):
+    return np.clip(np.round(x / scale), -127, 127).astype(np.float32)
+
+
+def calibrate(cfg, a, b, x_train):
+    """Choose the feature and QHV quantization steps from training data."""
+    scale_x = float(np.abs(x_train).max() / 127.0) or 1.0
+    xq = quantize_features(x_train[:256], scale_x)
+    xm = xq.reshape(-1, cfg.f1, cfg.f2)
+    y = np.einsum("rj,njk,ck->nrc", a, xm, b)
+    scale_q = float(np.abs(y).max() / 127.0) or 1.0
+    # expected per-element |q_i - q_j| between independent QHVs: feeds the
+    # progressive-search margin threshold (rust hdc/progressive.rs)
+    q = np.clip(np.round(y / scale_q), -127, 127).reshape(y.shape[0], -1)
+    half = q.shape[0] // 2
+    mean_absdiff = float(np.abs(q[:half] - q[half:2 * half]).mean())
+    return scale_x, scale_q, mean_absdiff
+
+
+def emit_hd_artifacts(cfg, out_dir, manifest, x_train):
+    a, b = gen_factors(cfg)
+    scale_x, scale_q, mean_absdiff = calibrate(cfg, a, b, x_train)
+    meta = cfg.to_meta()
+    meta.update(scale_x=scale_x, scale_q=scale_q, mean_absdiff=mean_absdiff)
+    manifest["configs"][cfg.name] = meta
+
+    W.write_tensors(os.path.join(out_dir, f"hd_factors_{cfg.name}.bin"),
+                    {"a": a, "b": b})
+    manifest["weights"].append({
+        "name": f"hd_factors_{cfg.name}", "config": cfg.name,
+        "file": f"hd_factors_{cfg.name}.bin",
+        "tensors": {"a": [cfg.d1, cfg.f1], "b": [cfg.d2, cfg.f2]},
+    })
+
+    def emit(name, fn, args, kind, batch, extra=None):
+        fname = f"{name}.hlo.txt"
+        entry = H.write_hlo(os.path.join(out_dir, fname), fn, args)
+        entry.update(name=name, file=fname, config=cfg.name, kind=kind,
+                     batch=batch, **(extra or {}))
+        manifest["executables"].append(entry)
+
+    for batch in cfg.batches:
+        fn, args = M.make_encode_segment(cfg, a, b, scale_q, batch)
+        emit(f"encode_segment_{cfg.name}_b{batch}", fn, args,
+             "encode_segment", batch, {"out": [batch, cfg.seg_len]})
+        fn, args = M.make_encode_full(cfg, a, b, scale_q, batch)
+        emit(f"encode_full_{cfg.name}_b{batch}", fn, args,
+             "encode_full", batch, {"out": [batch, cfg.dim]})
+        fn, args = M.make_search(cfg, cfg.seg_len, batch)
+        emit(f"search_seg_{cfg.name}_b{batch}", fn, args,
+             "search_seg", batch, {"out": [batch, cfg.classes],
+                                   "length": cfg.seg_len})
+    fn, args = M.make_search(cfg, cfg.dim, 1)
+    emit(f"search_full_{cfg.name}_b1", fn, args, "search_full", 1,
+         {"out": [1, cfg.classes], "length": cfg.dim})
+    fn, args = M.make_train_update(cfg)
+    emit(f"train_update_{cfg.name}", fn, args, "train_update", 1,
+         {"out": [cfg.classes, cfg.dim]})
+
+
+def emit_dataset(name, out_dir, manifest, x, y, classes, img_shape=(0, 0, 0),
+                 as_u8=False):
+    fname = f"ds_{name}.bin"
+    D.write_bin(os.path.join(out_dir, fname), x, y, classes, img_shape, as_u8)
+    manifest["datasets"].append({
+        "name": f"ds_{name}", "file": fname, "n": int(x.shape[0]),
+        "dim": int(np.prod(x.shape[1:])), "classes": classes,
+        "image": list(img_shape) if img_shape[0] else None,
+    })
+
+
+def build_cifar(cfg, wcfe, out_dir, manifest, log):
+    (x_tr, y_tr), (x_te, y_te) = D.gen_images(cfg, wcfe.image_hw, wcfe.image_c)
+    emit_dataset(f"{cfg.name}_img_train", out_dir, manifest, x_tr, y_tr,
+                 cfg.classes, (wcfe.image_hw, wcfe.image_hw, wcfe.image_c), True)
+    emit_dataset(f"{cfg.name}_img_test", out_dir, manifest, x_te, y_te,
+                 cfg.classes, (wcfe.image_hw, wcfe.image_hw, wcfe.image_c), True)
+
+    params, acc = P.pretrain(wcfe, x_tr, y_tr, x_te, y_te, log)
+    clustered, codebooks = P.cluster_weights(params, wcfe, log)
+    acc_q = P.evaluate(clustered, x_te, y_te)
+    log(f"[cluster] clustered test accuracy {acc_q:.4f} (dense {acc:.4f})")
+
+    # weights + codebook binaries (rust wcfe module and Fig.7 bench)
+    W.write_tensors(os.path.join(out_dir, "wcfe_weights.bin"),
+                    {k: v for k, v in clustered.items() if k != "head"})
+    W.write_tensors(os.path.join(out_dir, "wcfe_weights_dense.bin"),
+                    {k: v for k, v in params.items() if k != "head"})
+    cb_tensors = {}
+    for lname, (cent, idx) in codebooks.items():
+        cb_tensors[f"{lname}_centroids"] = cent
+        cb_tensors[f"{lname}_idx"] = idx.astype(np.int32)
+    W.write_tensors(os.path.join(out_dir, "wcfe_codebook.bin"), cb_tensors)
+    manifest["wcfe"] = {
+        "image_hw": wcfe.image_hw, "image_c": wcfe.image_c,
+        "channels": list(wcfe.channels), "fc_out": wcfe.fc_out,
+        "clusters": wcfe.clusters, "pretrain_acc": acc,
+        "clustered_acc": acc_q,
+        "weights": "wcfe_weights.bin", "weights_dense": "wcfe_weights_dense.bin",
+        "codebook": "wcfe_codebook.bin",
+    }
+
+    # lowered feature extractor (clustered weights baked)
+    infer_params = {k: v for k, v in clustered.items() if k != "head"}
+    for batch in cfg.batches:
+        fn, args = M.make_wcfe_forward(infer_params, batch, wcfe.image_hw,
+                                       wcfe.image_c)
+        fname = f"wcfe_fwd_b{batch}.hlo.txt"
+        entry = H.write_hlo(os.path.join(out_dir, fname), fn, args)
+        entry.update(name=f"wcfe_fwd_b{batch}", file=fname, config=cfg.name,
+                     kind="wcfe_fwd", batch=batch, out=[batch, wcfe.fc_out])
+        manifest["executables"].append(entry)
+
+    # WCFE features of the image sets -> the HD module's input space
+    import jax.numpy as jnp
+    feats = []
+    for xs in (x_tr, x_te):
+        fs = []
+        for i in range(0, xs.shape[0], 100):
+            fs.append(np.asarray(M.wcfe_forward(
+                {k: jnp.asarray(v) for k, v in infer_params.items()},
+                jnp.asarray(xs[i:i + 100]), use_kernel=False)))
+        feats.append(np.concatenate(fs))
+    emit_dataset(f"{cfg.name}_train", out_dir, manifest, feats[0], y_tr, cfg.classes)
+    emit_dataset(f"{cfg.name}_test", out_dir, manifest, feats[1], y_te, cfg.classes)
+    return feats[0]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,isolet,ucihar,cifar100")
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer pretrain steps (CI)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    t0 = time.time()
+    manifest = {"version": 1, "configs": {}, "executables": [],
+                "datasets": [], "weights": []}
+    wcfe = WCFE
+    if args.fast or os.environ.get("ARTIFACT_FAST"):
+        wcfe = WcfeConfig(train_steps=80)
+
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name]
+        print(f"=== config {name}: F={cfg.features} D={cfg.dim} "
+              f"C={cfg.classes} segs={cfg.segments}")
+        if cfg.image:
+            x_train = build_cifar(cfg, wcfe, args.out_dir, manifest, print)
+        else:
+            (x_tr, y_tr), (x_te, y_te) = D.gen_features(cfg)
+            emit_dataset(f"{cfg.name}_train", args.out_dir, manifest,
+                         x_tr, y_tr, cfg.classes)
+            emit_dataset(f"{cfg.name}_test", args.out_dir, manifest,
+                         x_te, y_te, cfg.classes)
+            x_train = x_tr
+        emit_hd_artifacts(cfg, args.out_dir, manifest, x_train)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    n_exe = len(manifest["executables"])
+    print(f"wrote {n_exe} executables + {len(manifest['datasets'])} datasets "
+          f"to {args.out_dir} in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

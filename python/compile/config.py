@@ -1,0 +1,109 @@
+"""Build-time configuration for the Clo-HDnn artifact pipeline.
+
+Each `HdConfig` mirrors one operating point of the chip (Fig.11 summary):
+feature dimension F (8-1024), HDC dimension D (1024-8192), <=128 classes,
+INT1-8 inference / INT8 training. The Kronecker factorization requires
+F = f1*f2 and D = d1*d2; progressive search splits D into `segments`
+contiguous row-groups of A (so segment length = (d1/segments) * d2).
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class HdConfig:
+    name: str
+    # feature space
+    f1: int
+    f2: int
+    # hyperspace
+    d1: int
+    d2: int
+    segments: int
+    classes: int
+    # quantization (bits for QHV elements during inference; CHVs are INT8)
+    qbits: int = 8
+    # batch sizes to emit executables for
+    batches: tuple = (1, 8)
+    # dataset generation
+    n_train: int = 2000
+    n_test: int = 500
+    sep: float = 4.0
+    noise: float = 1.0
+    seed: int = 0
+    # normal-mode (WCFE) datasets are image shaped
+    image: bool = False
+
+    @property
+    def features(self) -> int:
+        return self.f1 * self.f2
+
+    @property
+    def dim(self) -> int:
+        return self.d1 * self.d2
+
+    @property
+    def seg_rows(self) -> int:
+        assert self.d1 % self.segments == 0, "segments must divide d1"
+        return self.d1 // self.segments
+
+    @property
+    def seg_len(self) -> int:
+        return self.seg_rows * self.d2
+
+    def to_meta(self) -> dict:
+        m = asdict(self)
+        m.update(
+            features=self.features,
+            dim=self.dim,
+            seg_rows=self.seg_rows,
+            seg_len=self.seg_len,
+        )
+        m["batches"] = list(self.batches)
+        return m
+
+
+# Operating points mirroring the paper's three benchmarks plus a tiny config
+# used by fast integration tests. Synthetic datasets keep the real datasets'
+# (F, #classes) geometry (see DESIGN.md Substitutions).
+CONFIGS = {
+    # fast tests / quickstart
+    "tiny": HdConfig(
+        name="tiny", f1=8, f2=8, d1=32, d2=32, segments=8, classes=10,
+        batches=(1, 8), n_train=400, n_test=200, sep=5.0, seed=7,
+    ),
+    # ISOLET: 617 features (padded to 640 = 32*20), 26 classes, bypass mode
+    "isolet": HdConfig(
+        name="isolet", f1=32, f2=20, d1=64, d2=32, segments=16, classes=26,
+        batches=(1, 8), n_train=6238, n_test=1559, sep=1.45, noise=1.0, seed=1,
+    ),
+    # UCIHAR: 561 features (padded to 576 = 24*24), 6 classes, bypass mode
+    "ucihar": HdConfig(
+        name="ucihar", f1=24, f2=24, d1=64, d2=32, segments=16, classes=6,
+        batches=(1, 8), n_train=7352, n_test=2947, sep=1.35, noise=1.0, seed=2,
+    ),
+    # CIFAR-100: WCFE features F=512 (32*16), 100 classes, normal mode
+    "cifar100": HdConfig(
+        name="cifar100", f1=32, f2=16, d1=128, d2=32, segments=16, classes=100,
+        batches=(1, 8), n_train=5000, n_test=1000, sep=3.0, noise=1.0, seed=3,
+        image=True,
+    ),
+}
+
+
+@dataclass(frozen=True)
+class WcfeConfig:
+    """The BF16 CNN front-end (Fig.7). 3 conv stages + GAP + FC."""
+    image_hw: int = 32
+    image_c: int = 3
+    channels: tuple = (32, 64, 128)
+    fc_out: int = 512  # must equal CONFIGS["cifar100"].features
+    clusters: int = 16  # post-training weight-clustering codebook size
+    classes: int = 100
+    train_steps: int = 500
+    batch: int = 64
+    lr: float = 1e-2
+    seed: int = 42
+
+
+WCFE = WcfeConfig()

@@ -1,0 +1,108 @@
+"""Deterministic synthetic dataset generators + binary writers.
+
+Substitution rule (DESIGN.md): ISOLET / UCIHAR / CIFAR-100 are not available
+offline, so we generate class-mean Gaussian-cluster datasets with the same
+(F, #classes, #samples) geometry. HDC accuracy, forgetting behaviour and the
+bypass-vs-normal trade-off depend on class-cluster geometry, which the
+generator controls (`sep` = between-class separation in within-class sigma
+units along the mean-difference direction).
+
+Binary format (little-endian), magic "CLOD":
+  u8[4]  magic          "CLOD"
+  u32    version        1
+  u32    dtype          0 = f32, 1 = u8
+  u32    n              samples
+  u32    dim            flattened feature count
+  u32    classes
+  u32    h, w, c        image shape (0,0,0 for flat feature data)
+  u16[n] labels
+  data   n*dim elements (f32 or u8)
+"""
+
+import struct
+
+import numpy as np
+
+
+MAGIC = b"CLOD"
+
+
+def gen_features(cfg):
+    """Flat-feature dataset (bypass mode): returns train/test (x, y)."""
+    rng = np.random.default_rng(cfg.seed + 1000)
+    feat = cfg.f1 * cfg.f2
+    # Unit-norm mean directions scaled so E||mu_i - mu_j|| ~ sep * noise;
+    # with per-element within-class sigma = noise/sqrt(F) the projected
+    # margin along (mu_i - mu_j) is ~ sep within-class sigmas.
+    means = rng.standard_normal((cfg.classes, feat))
+    means /= np.linalg.norm(means, axis=1, keepdims=True)
+    means *= cfg.sep * cfg.noise / np.sqrt(2.0)
+
+    def draw(n, seed_off):
+        r = np.random.default_rng(cfg.seed + seed_off)
+        y = r.integers(0, cfg.classes, size=n).astype(np.uint16)
+        # mild per-class covariance variation for realism
+        cls_scale = 1.0 + 0.1 * np.sin(np.arange(cfg.classes))
+        x = means[y] + r.standard_normal((n, feat)) * (
+            cfg.noise * cls_scale[y][:, None]) / np.sqrt(feat)
+        return x.astype(np.float32), y
+
+    return draw(cfg.n_train, 1), draw(cfg.n_test, 2)
+
+
+def gen_images(cfg, hw: int = 32, c: int = 3):
+    """Image dataset (normal mode): low-frequency class-mean patterns + noise."""
+    rng = np.random.default_rng(cfg.seed + 2000)
+    base = rng.standard_normal((cfg.classes, 4, 4, c))
+    # bilinear-ish upsample x8 by repetition then box smoothing
+    mean_img = base.repeat(hw // 4, axis=1).repeat(hw // 4, axis=2)
+    k = 5
+    pad = k // 2
+    mp = np.pad(mean_img, ((0, 0), (pad, pad), (pad, pad), (0, 0)), mode="edge")
+    sm = np.zeros_like(mean_img)
+    for dy in range(k):
+        for dx in range(k):
+            sm += mp[:, dy:dy + hw, dx:dx + hw, :]
+    mean_img = sm / (k * k)
+    mean_img = 0.5 + 0.22 * mean_img / np.abs(mean_img).max()
+
+    def draw(n, seed_off):
+        r = np.random.default_rng(cfg.seed + seed_off)
+        y = r.integers(0, cfg.classes, size=n).astype(np.uint16)
+        x = mean_img[y] + r.standard_normal((n, hw, hw, c)) * 0.20
+        return np.clip(x, 0.0, 1.0).astype(np.float32), y
+
+    return draw(cfg.n_train, 3), draw(cfg.n_test, 4)
+
+
+def write_bin(path, x: np.ndarray, y: np.ndarray, classes: int,
+              img_shape=(0, 0, 0), as_u8: bool = False):
+    n = x.shape[0]
+    flat = x.reshape(n, -1)
+    dim = flat.shape[1]
+    dtype = 1 if as_u8 else 0
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<6I", 1, dtype, n, dim, classes, img_shape[0]))
+        f.write(struct.pack("<2I", img_shape[1], img_shape[2]))
+        f.write(y.astype("<u2").tobytes())
+        if as_u8:
+            f.write((np.clip(flat, 0.0, 1.0) * 255.0).round().astype(np.uint8).tobytes())
+        else:
+            f.write(flat.astype("<f4").tobytes())
+
+
+def read_bin(path):
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC
+        ver, dtype, n, dim, classes, h = struct.unpack("<6I", f.read(24))
+        w, c = struct.unpack("<2I", f.read(8))
+        y = np.frombuffer(f.read(2 * n), dtype="<u2")
+        if dtype == 1:
+            x = np.frombuffer(f.read(n * dim), dtype=np.uint8).astype(np.float32) / 255.0
+        else:
+            x = np.frombuffer(f.read(4 * n * dim), dtype="<f4").copy()
+        x = x.reshape(n, dim)
+        if h:
+            x = x.reshape(n, h, w, c)
+    return x, np.asarray(y), classes

@@ -1,0 +1,86 @@
+"""Golden fixtures: JAX-oracle inputs/outputs consumed by the Rust tests.
+
+`rust/tests/golden.rs` and unit tests in rust/src/hdc cross-check the Rust
+software implementations (encoder fallback, distances, training, quantizer)
+against these exact vectors, pinning L3 to the same arithmetic the L1/L2
+artifacts carry.
+
+Usage: cd python && python -m compile.fixtures --out ../artifacts/golden.bin
+"""
+
+import argparse
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import ref
+from . import weights_io as W
+
+
+def build(seed: int = 123) -> dict:
+    rng = np.random.default_rng(seed)
+    t = {}
+
+    # Kronecker encode (f1=8, f2=8, d1=32, d2=32; INT8, scale 4.0)
+    f1 = f2 = 8
+    d1 = d2 = 32
+    a = np.sign(rng.standard_normal((d1, f1))).astype(np.float32)
+    b = np.sign(rng.standard_normal((d2, f2))).astype(np.float32)
+    a[a == 0] = 1
+    b[b == 0] = 1
+    x = rng.integers(-100, 101, size=(4, f1 * f2)).astype(np.float32)
+    t["kron_a"], t["kron_b"], t["kron_x"] = a, b, x
+    t["kron_scale"] = np.array([4.0], np.float32)
+    t["kron_out"] = np.asarray(ref.kron_encode_batch(
+        jnp.asarray(x), jnp.asarray(a), jnp.asarray(b), bits=8, scale=4.0))
+    t["kron_out_b1"] = np.asarray(ref.kron_encode_batch(
+        jnp.asarray(x), jnp.asarray(a), jnp.asarray(b), bits=1, scale=4.0))
+    t["kron_out_b4"] = np.asarray(ref.kron_encode_batch(
+        jnp.asarray(x), jnp.asarray(a), jnp.asarray(b), bits=4, scale=4.0))
+
+    # HD search
+    q = rng.integers(-127, 128, size=(3, 256)).astype(np.float32)
+    chv = rng.integers(-127, 128, size=(12, 256)).astype(np.float32)
+    t["search_q"], t["search_chv"] = q, chv
+    t["search_l1"] = np.asarray(ref.hd_search_l1_batch(jnp.asarray(q),
+                                                       jnp.asarray(chv)))
+    t["search_dot"] = np.asarray(ref.hd_search_dot_batch(jnp.asarray(q),
+                                                         jnp.asarray(chv)))
+
+    # Train update
+    chvs = rng.integers(-120, 121, size=(12, 256)).astype(np.float32)
+    qhv = rng.integers(-127, 128, size=(256,)).astype(np.float32)
+    coef = np.zeros(12, np.float32)
+    coef[3], coef[7] = 1.0, -1.0
+    t["train_chvs"], t["train_qhv"], t["train_coef"] = chvs, qhv, coef
+    t["train_out"] = np.asarray(ref.train_update(
+        jnp.asarray(chvs), jnp.asarray(qhv), jnp.asarray(coef)))
+
+    # Quantizer sweep
+    y = (rng.standard_normal(128) * 300).astype(np.float32)
+    t["quant_in"] = y
+    for bits in (1, 2, 4, 8):
+        t[f"quant_out_b{bits}"] = np.asarray(
+            ref.quantize(jnp.asarray(y), bits, 2.5))
+
+    # Codebook conv
+    patches = rng.standard_normal((8, 18)).astype(np.float32)
+    idx = rng.integers(0, 4, size=(18, 5)).astype(np.int32)
+    cen = rng.standard_normal(4).astype(np.float32)
+    t["conv_patches"], t["conv_idx"], t["conv_cen"] = patches, idx, cen
+    t["conv_out"] = np.asarray(ref.conv_codebook(
+        jnp.asarray(patches), jnp.asarray(idx), jnp.asarray(cen)))
+    return t
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/golden.bin")
+    args = ap.parse_args()
+    t = build()
+    W.write_tensors(args.out, t)
+    print(f"wrote {len(t)} golden tensors to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

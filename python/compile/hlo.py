@@ -1,0 +1,39 @@
+"""Lower jitted JAX functions to HLO *text* for the Rust PJRT loader.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published `xla` 0.1.6 crate links) rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly. Lowered with
+return_tuple=True; the Rust side unwraps with `to_tuple1()`.
+"""
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big literals as
+    # "constant({...})", which the 0.5.1 text parser reads back as ZEROS —
+    # any graph with baked weights would silently return garbage.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_to_text(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def write_hlo(path, fn, example_args) -> dict:
+    """Lower + write; returns manifest entry fragment (shapes/dtypes)."""
+    text = lower_to_text(fn, example_args)
+    with open(path, "w") as f:
+        f.write(text)
+    return {
+        "inputs": [
+            {"shape": list(a.shape), "dtype": str(a.dtype)} for a in example_args
+        ],
+        "bytes": len(text),
+    }

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: associative HD search (Fig.6).
+
+The chip's HD Search module fetches 64-bit slices of each class hypervector
+per cycle and reduces them through an XOR tree against the query segment.
+The Pallas mapping is a (classes x seg_len) block reduction: the query
+segment is the small VMEM-resident operand, CHV rows stream through the
+grid in class-blocks.
+
+Two distance modes, matching the chip's precision modes:
+  * 'l1'  — INT2-8 CHVs: Manhattan distance (per-element |q - c| add-reduce)
+  * 'dot' — INT1 (+-1)  : negative dot product == XOR-tree Hamming up to an
+            affine map (hamming = (L - dot) / 2)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _search_kernel(q_ref, c_ref, o_ref, *, metric: str):
+    q = q_ref[0]        # (L,)
+    c = c_ref[...]      # (cb, L)
+    if metric == "l1":
+        d = jnp.sum(jnp.abs(c - q[None, :]), axis=1)
+    elif metric == "dot":
+        d = -jnp.dot(c, q, preferred_element_type=jnp.float32)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    o_ref[0] = d
+
+
+def hd_search(qs, chvs, *, metric: str = "l1", class_block: int = 0,
+              interpret: bool = True):
+    """Distances from each query (segment) to each class hypervector.
+
+    qs   : (n, L)  query hypervector (segments)
+    chvs : (C, L)  class hypervector (segments)
+    returns (n, C) distances (smaller = closer for both metrics).
+    """
+    n, length = qs.shape
+    classes, l2 = chvs.shape
+    assert length == l2
+    cb = class_block or classes
+    assert classes % cb == 0
+    kern = functools.partial(_search_kernel, metric=metric)
+    return pl.pallas_call(
+        kern,
+        grid=(n, classes // cb),
+        in_specs=[
+            pl.BlockSpec((1, length), lambda i, j: (i, 0)),
+            pl.BlockSpec((cb, length), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, classes), jnp.float32),
+        interpret=interpret,
+    )(qs, chvs)

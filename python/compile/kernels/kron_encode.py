@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: Kronecker HD encoder (Fig.5).
+
+The chip's encoder holds the two small +-1 factor matrices A (d1 x f1) and
+B (d2 x f2) in an 8-bank 1 KB weight buffer (256 b of weights per cycle feed
+32 8-to-1 adder trees); the full D x F projection matrix never exists. The
+Pallas mapping keeps the same memory story: A-segment and B are the small
+VMEM-resident operands (BlockSpec constant index maps), the feature matrix X
+streams per batch element, and the two-stage block matmul
+`(A_seg @ X) @ B^T` produces one partial QHV per grid step.
+
+On a real TPU the +-1 matmuls land on the MXU as bf16; under interpret=True
+(required on CPU PJRT) numerics are exact f32. Quantization to INT1-8 QHV
+elements happens in-kernel so the executable's output already carries the
+chip's precision mode.
+
+TPU sizing note (DESIGN.md SPerf): with the default configs the VMEM
+footprint per grid step is A_seg (seg_rows x f1) + X (f1 x f2) + B (d2 x f2)
++ out (seg_rows x d2), e.g. isolet-full: 64*32 + 32*20 + 32*20 + 64*32 floats
+= ~22 KiB << 16 MiB VMEM, so the whole encoder is resident and the grid only
+iterates over the batch.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_kernel(x_ref, a_ref, b_ref, o_ref, *, bits: int, scale: float):
+    """One batch element: out = quantize(A_seg @ X @ B^T)."""
+    x = x_ref[0]          # (f1, f2)
+    a = a_ref[...]        # (dr, f1)
+    b = b_ref[...]        # (d2, f2)
+    # Stage 1: reshape + first block matmul (the chip's adder trees: A is
+    # +-1 so this is add/subtract only).
+    t = jnp.dot(a, x, preferred_element_type=jnp.float32)      # (dr, f2)
+    # Stage 2: second block matmul against B^T.
+    y = jnp.dot(t, b.T, preferred_element_type=jnp.float32)    # (dr, d2)
+    if bits == 1:
+        q = jnp.where(y >= 0, 1.0, -1.0)
+    else:
+        qmax = float(2 ** (bits - 1) - 1)
+        q = jnp.clip(jnp.round(y / scale), -qmax, qmax)
+    o_ref[0] = q
+
+
+def kron_encode(xs, a_seg, b, *, bits: int = 8, scale: float = 1.0,
+                interpret: bool = True):
+    """Encode a batch of feature vectors into (partial) QHVs.
+
+    xs    : (n, F)  f32 (values already INT-quantized features)
+    a_seg : (dr, f1) +-1 — full A or one progressive-search segment
+    b     : (d2, f2) +-1
+    returns (n, dr*d2) f32 carrying INT`bits` values.
+    """
+    n, feat = xs.shape
+    dr, f1 = a_seg.shape
+    d2, f2 = b.shape
+    assert feat == f1 * f2, f"F={feat} != f1*f2={f1 * f2}"
+    xm = xs.reshape(n, f1, f2)
+    kern = functools.partial(_encode_kernel, bits=bits, scale=scale)
+    out = pl.pallas_call(
+        kern,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, f1, f2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((dr, f1), lambda i: (0, 0)),
+            pl.BlockSpec((d2, f2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dr, d2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dr, d2), jnp.float32),
+        interpret=interpret,
+    )(xm, a_seg, b)
+    return out.reshape(n, dr * d2)

@@ -1,0 +1,98 @@
+"""Pure-jnp correctness oracles for every Pallas kernel (L1).
+
+These are the ground truth the pytest suite checks the kernels against,
+and the fixtures the Rust software implementations are cross-checked with
+(python/tests/test_fixtures.py writes golden vectors consumed by
+rust/src tests).
+"""
+
+import jax.numpy as jnp
+
+
+def quantize(y, bits: int, scale: float):
+    """Symmetric signed quantization to `bits` (INT1..INT8), kept in f32.
+
+    INT1 is sign (+-1, never 0) — the XOR-tree/Hamming mode of the chip.
+    """
+    if bits == 1:
+        return jnp.where(y >= 0, 1.0, -1.0)
+    qmax = float(2 ** (bits - 1) - 1)
+    return jnp.clip(jnp.round(y / scale), -qmax, qmax)
+
+
+def kron_encode(x, a, b, bits: int = 8, scale: float = 1.0):
+    """Kronecker HD encoding (Fig.5): QHV = quantize(vec(A @ X @ B^T)).
+
+    x : (F,)      input feature vector (already INT-quantized values, f32)
+    a : (dr, f1)  row-block of the first factor (full A or one segment)
+    b : (d2, f2)  second factor
+    returns (dr*d2,) flattened row-major:
+    QHV[i1*d2+i2] = sum_j1,j2 A[i1,j1] X[j1,j2] B[i2,j2]
+    which equals (A kron B) @ vec(X) for row-major vec.
+    """
+    f1 = a.shape[1]
+    f2 = b.shape[1]
+    xm = x.reshape(f1, f2)
+    y = a @ xm @ b.T
+    return quantize(y, bits, scale).reshape(-1)
+
+
+def kron_encode_batch(xs, a, b, bits: int = 8, scale: float = 1.0):
+    """Batched encode: xs (n, F) -> (n, dr*d2)."""
+    f1 = a.shape[1]
+    f2 = b.shape[1]
+    xm = xs.reshape(xs.shape[0], f1, f2)
+    y = jnp.einsum("rj,njk,ck->nrc", a, xm, b)
+    return quantize(y, bits, scale).reshape(xs.shape[0], -1)
+
+
+def hd_search_l1(q, chvs):
+    """Associative search, L1 (Manhattan) distance: q (L,), chvs (C, L)."""
+    return jnp.sum(jnp.abs(chvs - q[None, :]), axis=1)
+
+
+def hd_search_dot(q, chvs):
+    """Associative search, negative dot similarity (Hamming-equivalent for
+    +-1 hypervectors: hamming = (L - dot)/2, monotone in -dot)."""
+    return -(chvs @ q)
+
+
+def hd_search_l1_batch(qs, chvs):
+    return jnp.sum(jnp.abs(chvs[None, :, :] - qs[:, None, :]), axis=2)
+
+
+def hd_search_dot_batch(qs, chvs):
+    return -(qs @ chvs.T)
+
+
+def train_update(chvs, qhv, coef):
+    """Gradient-free CHV update (Fig.6): chvs += coef (outer) qhv, clipped INT8.
+
+    coef is per-class: +1 for the true class, -1 for a mispredicted class,
+    0 elsewhere (single-pass training uses only the +1 row).
+    """
+    out = chvs + coef[:, None] * qhv[None, :]
+    return jnp.clip(out, -127.0, 127.0)
+
+
+def conv_codebook(patches, idx, centroids):
+    """Weight-clustered conv inner product (Fig.7b pattern reuse).
+
+    patches   : (P, K)   im2col patches (P output positions, K = kh*kw*Cin)
+    idx       : (K, Co)  int32 codebook indices per weight
+    centroids : (ncl,)   f32 cluster centroids
+    returns (P, Co) = patches @ centroids[idx], computed cluster-wise:
+    inputs sharing a weight index are accumulated first, multiplied once.
+    """
+    ncl = centroids.shape[0]
+    # one-hot (K, Co, ncl) -> cluster-accumulated patches (P, Co, ncl)
+    onehot = (idx[:, :, None] == jnp.arange(ncl)[None, None, :]).astype(patches.dtype)
+    acc = jnp.einsum("pk,kcn->pcn", patches, onehot)
+    return acc @ centroids
+
+
+def conv_dense_bf16(patches, w):
+    """Dense BF16 conv reference: (P, K) @ (K, Co), bf16 operands with f32
+    accumulation (the chip's BF16 MAC array keeps a wide accumulator)."""
+    return jnp.dot(patches.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)

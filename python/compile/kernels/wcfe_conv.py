@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: weight-clustered conv inner product (Fig.7).
+
+The WCFE's trick: after post-training clustering, each weight is a 4-bit
+index into a small centroid codebook, and inputs sharing a weight index are
+ACCUMULATED FIRST and MULTIPLIED ONCE (pattern reuse) — turning K BF16
+multiplies per output into `ncl` multiplies plus K adds.
+
+Two kernel modes:
+  * 'codebook'  — the faithful cluster-accumulate data flow in f32
+                  (bit-exact vs ref.conv_codebook); used for correctness.
+  * 'dense_bf16'— centroid-reconstructed dense weights in BF16 (the MXU
+                  path the lowered model uses; numerically identical weight
+                  VALUES, bf16 rounding as on the chip's BF16 MACs).
+
+The cycle/energy story of the 4x16 PE array lives in rust/src/wcfe/pe_array.rs;
+this kernel carries the numerics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _codebook_kernel(p_ref, oh_ref, cen_ref, o_ref):
+    p = p_ref[...]          # (pb, K)
+    onehot = oh_ref[...]    # (K, Co*ncl) flattened one-hot codebook indices
+    cen = cen_ref[...]      # (ncl,)
+    ncl = cen.shape[0]
+    co = onehot.shape[1] // ncl
+    # Pattern reuse: accumulate inputs per (out-channel, cluster) pair...
+    acc = jnp.dot(p, onehot, preferred_element_type=jnp.float32)  # (pb, Co*ncl)
+    acc = acc.reshape(p.shape[0], co, ncl)
+    # ...then one multiply per cluster.
+    o_ref[...] = jnp.dot(acc, cen, preferred_element_type=jnp.float32)
+
+
+def _dense_bf16_kernel(p_ref, w_ref, o_ref):
+    p = p_ref[...].astype(jnp.bfloat16)
+    w = w_ref[...].astype(jnp.bfloat16)
+    o_ref[...] = jnp.dot(p, w, preferred_element_type=jnp.float32)
+
+
+def conv_codebook(patches, idx, centroids, *, patch_block: int = 0,
+                  interpret: bool = True):
+    """Cluster-accumulate conv: patches (P, K) x idx (K, Co) -> (P, Co)."""
+    pcount, k = patches.shape
+    k2, co = idx.shape
+    assert k == k2
+    ncl = centroids.shape[0]
+    pb = patch_block or pcount
+    assert pcount % pb == 0
+    onehot = (idx[:, :, None] == jnp.arange(ncl)[None, None, :]).astype(
+        jnp.float32).reshape(k, co * ncl)
+    return pl.pallas_call(
+        _codebook_kernel,
+        grid=(pcount // pb,),
+        in_specs=[
+            pl.BlockSpec((pb, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, co * ncl), lambda i: (0, 0)),
+            pl.BlockSpec((ncl,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((pb, co), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pcount, co), jnp.float32),
+        interpret=interpret,
+    )(patches, onehot, centroids)
+
+
+def conv_dense_bf16(patches, w, *, patch_block: int = 0, interpret: bool = True):
+    """BF16 dense conv inner product: (P, K) @ (K, Co) -> (P, Co) f32."""
+    pcount, k = patches.shape
+    k2, co = w.shape
+    assert k == k2
+    pb = patch_block or pcount
+    assert pcount % pb == 0
+    return pl.pallas_call(
+        _dense_bf16_kernel,
+        grid=(pcount // pb,),
+        in_specs=[
+            pl.BlockSpec((pb, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, co), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((pb, co), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pcount, co), jnp.float32),
+        interpret=interpret,
+    )(patches, w)

@@ -1,0 +1,166 @@
+"""L2: JAX compute graphs for Clo-HDnn, lowered once by aot.py.
+
+Every graph here is a pure function of runtime arguments plus baked-in
+constants (the +-1 Kronecker factors A/B, quantization scales, clustered
+WCFE weights). Each is jit-lowered to one HLO-text executable that the Rust
+runtime loads and drives from the request path.
+
+Graphs (one per artifact kind):
+  encode_segment  — progressive search: one QHV segment, segment index is a
+                    runtime operand (dynamic-slice over the baked A factor)
+  encode_full     — whole-QHV encoding (single-shot mode)
+  search          — partial/full associative search (L1 or dot metric)
+  train_update    — gradient-free CHV update (INT8, clipped)
+  wcfe_forward    — BF16 CNN feature extraction with weight-clustered convs
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import kron_encode as _ke
+from .kernels import wcfe_conv as _wc
+from .kernels import hd_search as _hs
+
+
+# ---------------------------------------------------------------------------
+# HD module graphs
+# ---------------------------------------------------------------------------
+
+def make_encode_segment(cfg, a: np.ndarray, b: np.ndarray, scale: float, batch: int):
+    """fn(xs (batch, F), seg_idx ()) -> (batch, seg_len) INT`qbits` QHV segment.
+
+    A and B are baked constants (they live in the chip's weight buffer); the
+    segment index is a runtime operand so ONE executable serves all segments
+    of the progressive search.
+    """
+    a_c = jnp.asarray(a, jnp.float32)
+    b_c = jnp.asarray(b, jnp.float32)
+    seg_rows = cfg.seg_rows
+
+    def fn(xs, seg_idx):
+        a_seg = jax.lax.dynamic_slice(
+            a_c, (seg_idx * seg_rows, 0), (seg_rows, cfg.f1))
+        return _ke.kron_encode(xs, a_seg, b_c, bits=cfg.qbits, scale=scale)
+
+    args = (
+        jax.ShapeDtypeStruct((batch, cfg.features), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return fn, args
+
+
+def make_encode_full(cfg, a: np.ndarray, b: np.ndarray, scale: float, batch: int):
+    """fn(xs (batch, F)) -> (batch, D) full QHV."""
+    a_c = jnp.asarray(a, jnp.float32)
+    b_c = jnp.asarray(b, jnp.float32)
+
+    def fn(xs):
+        return _ke.kron_encode(xs, a_c, b_c, bits=cfg.qbits, scale=scale)
+
+    return fn, (jax.ShapeDtypeStruct((batch, cfg.features), jnp.float32),)
+
+
+def make_search(cfg, length: int, batch: int, metric: str = "l1"):
+    """fn(qs (batch, L), chvs (C, L)) -> (batch, C) distances."""
+
+    def fn(qs, chvs):
+        return _hs.hd_search(qs, chvs, metric=metric)
+
+    args = (
+        jax.ShapeDtypeStruct((batch, length), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.classes, length), jnp.float32),
+    )
+    return fn, args
+
+
+def make_train_update(cfg):
+    """fn(chvs (C, D), qhv (D,), coef (C,)) -> updated clipped-INT8 CHVs."""
+
+    def fn(chvs, qhv, coef):
+        out = chvs + coef[:, None] * qhv[None, :]
+        return jnp.clip(out, -127.0, 127.0)
+
+    args = (
+        jax.ShapeDtypeStruct((cfg.classes, cfg.dim), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.dim,), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.classes,), jnp.float32),
+    )
+    return fn, args
+
+
+# ---------------------------------------------------------------------------
+# WCFE forward (Fig.7): conv(3x3) -> relu -> maxpool2, x3, GAP, FC
+# ---------------------------------------------------------------------------
+
+def im2col(x, k: int = 3):
+    """SAME-padded 3x3 patch extraction: (n,h,w,c) -> (n,h,w,k*k*c)."""
+    n, h, w, c = x.shape
+    pad = k // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    cols = [xp[:, dy:dy + h, dx:dx + w, :] for dy in range(k) for dx in range(k)]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def maxpool2(x):
+    n, h, w, c = x.shape
+    return x.reshape(n, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def conv_layer_dense(x, w, use_kernel: bool = True, interpret: bool = True):
+    """One BF16 conv layer via the L1 kernel. w: (k*k*cin, cout)."""
+    n, h, wd, _ = x.shape
+    patches = im2col(x).reshape(n * h * wd, -1)
+    if use_kernel:
+        out = _wc.conv_dense_bf16(patches, w, interpret=interpret)
+    else:
+        out = (patches.astype(jnp.bfloat16) @ w.astype(jnp.bfloat16)).astype(jnp.float32)
+    return out.reshape(n, h, wd, -1)
+
+
+def wcfe_forward(params, imgs, use_kernel: bool = True, interpret: bool = True):
+    """Feature extraction: imgs (n, 32, 32, 3) in [0,1] -> features (n, F).
+
+    params: dict with conv1/conv2/conv3 (k*k*cin, cout) and fc (c3, F).
+    On the lowered artifact the conv weights are the CLUSTERED (codebook-
+    reconstructed) values — numerics match the chip's post-clustering BF16
+    datapath.
+    """
+    x = imgs * 2.0 - 1.0
+    for name in ("conv1", "conv2", "conv3"):
+        x = conv_layer_dense(x, params[name], use_kernel, interpret)
+        x = jnp.maximum(x, 0.0)
+        x = maxpool2(x)
+    feat = x.mean(axis=(1, 2))                      # GAP -> (n, c3)
+    out = (feat.astype(jnp.bfloat16) @ params["fc"].astype(jnp.bfloat16))
+    return out.astype(jnp.float32)                  # (n, F)
+
+
+def make_wcfe_forward(params, batch: int, hw: int = 32, c: int = 3):
+    p = {k: jnp.asarray(v, jnp.float32) for k, v in params.items()}
+
+    def fn(imgs):
+        return wcfe_forward(p, imgs)
+
+    return fn, (jax.ShapeDtypeStruct((batch, hw, hw, c), jnp.float32),)
+
+
+def wcfe_classifier_forward(params, imgs):
+    """Pretraining-time forward: WCFE features -> linear head logits.
+
+    Runs in plain f32 (no pallas, no bf16) for fast, stable training; the
+    clustered/bf16 path is what gets lowered for inference.
+    """
+    x = imgs * 2.0 - 1.0
+    for name in ("conv1", "conv2", "conv3"):
+        n, h, w, _ = x.shape
+        patches = im2col(x).reshape(n * h * w, -1)
+        x = (patches @ params[name]).reshape(n, h, w, -1)
+        x = jnp.maximum(x, 0.0)
+        x = maxpool2(x)
+    feat = x.mean(axis=(1, 2))
+    feats = feat @ params["fc"]
+    logits = feats @ params["head"]
+    return feats, logits

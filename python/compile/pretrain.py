@@ -1,0 +1,109 @@
+"""WCFE pretraining + post-training weight clustering (Fig.7a).
+
+Pretrains the small CNN front-end on the synthetic CIFAR-100-like dataset
+with plain SGD+momentum (gradient training happens ONCE, at build time —
+the chip never backprops; continual learning is handled by the HDC module),
+then clusters each conv layer's weights with 1-D k-means into a
+`clusters`-entry codebook (4-bit indices for the default 16).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+
+def init_params(wcfe, rng):
+    """He-initialized conv stack + FC + (pretraining-only) classifier head."""
+    chans = [wcfe.image_c, *wcfe.channels]
+    params = {}
+    for i in range(len(wcfe.channels)):
+        fan_in = 9 * chans[i]
+        params[f"conv{i + 1}"] = (rng.standard_normal((fan_in, chans[i + 1]))
+                                  * np.sqrt(2.0 / fan_in)).astype(np.float32)
+    params["fc"] = (rng.standard_normal((wcfe.channels[-1], wcfe.fc_out))
+                    * np.sqrt(2.0 / wcfe.channels[-1])).astype(np.float32)
+    params["head"] = (rng.standard_normal((wcfe.fc_out, wcfe.classes))
+                      * np.sqrt(1.0 / wcfe.fc_out)).astype(np.float32)
+    return params
+
+
+def _loss_fn(params, imgs, labels):
+    _, logits = M.wcfe_classifier_forward(params, imgs)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def pretrain(wcfe, x_train, y_train, x_test, y_test, log=print):
+    """SGD+momentum pretraining; returns (params, test_accuracy)."""
+    rng = np.random.default_rng(wcfe.seed)
+    params = {k: jnp.asarray(v) for k, v in init_params(wcfe, rng).items()}
+    vel = {k: jnp.zeros_like(v) for k, v in params.items()}
+    grad_fn = jax.jit(jax.value_and_grad(_loss_fn))
+
+    n = x_train.shape[0]
+    for step in range(wcfe.train_steps):
+        idx = rng.integers(0, n, size=wcfe.batch)
+        loss, g = grad_fn(params, jnp.asarray(x_train[idx]),
+                          jnp.asarray(y_train[idx].astype(np.int32)))
+        for k in params:
+            vel[k] = 0.9 * vel[k] - wcfe.lr * g[k]
+            params[k] = params[k] + vel[k]
+        if step % 100 == 0 or step == wcfe.train_steps - 1:
+            log(f"[pretrain] step {step:4d} loss {float(loss):.4f}")
+
+    acc = evaluate(params, x_test, y_test)
+    log(f"[pretrain] test accuracy {acc:.4f}")
+    return {k: np.asarray(v) for k, v in params.items()}, acc
+
+
+def evaluate(params, x, y, batch: int = 200):
+    fwd = jax.jit(lambda p, im: M.wcfe_classifier_forward(p, im)[1])
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        logits = fwd(params, jnp.asarray(x[i:i + batch]))
+        correct += int((np.argmax(np.asarray(logits), axis=1)
+                        == y[i:i + batch]).sum())
+    return correct / x.shape[0]
+
+
+def kmeans_1d(values: np.ndarray, k: int, iters: int = 30, seed: int = 0):
+    """Lloyd's algorithm on scalar weight values (k-means++ style init).
+
+    Returns (centroids (k,), idx (len(values),) int32).
+    """
+    rng = np.random.default_rng(seed)
+    v = values.astype(np.float64)
+    # quantile init: robust and deterministic for 1-D
+    cent = np.quantile(v, (np.arange(k) + 0.5) / k)
+    cent += rng.standard_normal(k) * 1e-9  # break exact ties
+    for _ in range(iters):
+        idx = np.argmin(np.abs(v[:, None] - cent[None, :]), axis=1)
+        for j in range(k):
+            sel = v[idx == j]
+            if sel.size:
+                cent[j] = sel.mean()
+    idx = np.argmin(np.abs(v[:, None] - cent[None, :]), axis=1)
+    return cent.astype(np.float32), idx.astype(np.int32)
+
+
+def cluster_weights(params, wcfe, log=print):
+    """Post-training clustering of every conv layer (Fig.7a).
+
+    Returns (clustered_params, codebooks) where codebooks maps layer name ->
+    (centroids (k,), idx (fan_in, cout) int32). FC/head stay dense (the
+    paper clusters the CONV filters).
+    """
+    clustered = dict(params)
+    codebooks = {}
+    for name in ("conv1", "conv2", "conv3"):
+        w = params[name]
+        cent, idx = kmeans_1d(w.reshape(-1), wcfe.clusters, seed=wcfe.seed)
+        wq = cent[idx].reshape(w.shape)
+        err = float(np.abs(wq - w).mean() / (np.abs(w).mean() + 1e-12))
+        log(f"[cluster] {name}: {w.size} weights -> {wcfe.clusters} centroids, "
+            f"rel L1 err {err:.4f}")
+        clustered[name] = wq
+        codebooks[name] = (cent, idx.reshape(w.shape))
+    return clustered, codebooks

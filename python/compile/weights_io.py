@@ -1,0 +1,57 @@
+"""Named-tensor binary format shared with rust/src/data/tensors.rs.
+
+Format (little-endian), magic "CLOW":
+  u8[4] magic "CLOW"
+  u32   version 1
+  u32   n_tensors
+  per tensor:
+    u16      name_len, name bytes (utf-8)
+    u8       dtype: 0 = f32, 1 = i32
+    u32      ndim, u32 dims[ndim]
+    payload  prod(dims) elements
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"CLOW"
+
+
+def write_tensors(path, tensors: dict):
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<2I", 1, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.asarray(arr)
+            if arr.dtype in (np.int32, np.int64):
+                arr = arr.astype("<i4")
+                dt = 1
+            else:
+                arr = arr.astype("<f4")
+                dt = 0
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BI", dt, arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def read_tensors(path) -> dict:
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC
+        _, n = struct.unpack("<2I", f.read(8))
+        for _ in range(n):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            dt, ndim = struct.unpack("<BI", f.read(5))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            count = int(np.prod(dims)) if ndim else 1
+            if dt == 1:
+                arr = np.frombuffer(f.read(4 * count), dtype="<i4")
+            else:
+                arr = np.frombuffer(f.read(4 * count), dtype="<f4")
+            out[name] = arr.reshape(dims).copy()
+    return out

@@ -1,0 +1,66 @@
+"""Dataset generators + binary container roundtrip."""
+
+import numpy as np
+import pytest
+
+from compile import datasets as D
+from compile.config import CONFIGS
+
+
+def test_features_deterministic():
+    cfg = CONFIGS["tiny"]
+    (x1, y1), _ = D.gen_features(cfg)
+    (x2, y2), _ = D.gen_features(cfg)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_features_shapes_and_labels():
+    cfg = CONFIGS["tiny"]
+    (xtr, ytr), (xte, yte) = D.gen_features(cfg)
+    assert xtr.shape == (cfg.n_train, cfg.features)
+    assert xte.shape == (cfg.n_test, cfg.features)
+    assert ytr.max() < cfg.classes and yte.max() < cfg.classes
+    assert len(np.unique(ytr)) == cfg.classes
+
+
+def test_features_separable_by_nearest_mean():
+    """Classes must be learnable — nearest-class-mean should beat 90% on
+    tiny (sep=5); this anchors all Fig.9 accuracy results."""
+    cfg = CONFIGS["tiny"]
+    (xtr, ytr), (xte, yte) = D.gen_features(cfg)
+    means = np.stack([xtr[ytr == c].mean(axis=0) for c in range(cfg.classes)])
+    pred = np.argmin(
+        ((xte[:, None, :] - means[None]) ** 2).sum(axis=2), axis=1)
+    assert (pred == yte).mean() > 0.9
+
+
+def test_images_shapes_and_range():
+    cfg = CONFIGS["cifar100"]
+    (xtr, ytr), (xte, yte) = D.gen_images(cfg)
+    assert xtr.shape == (cfg.n_train, 32, 32, 3)
+    assert 0.0 <= xtr.min() and xtr.max() <= 1.0
+    assert ytr.dtype == np.uint16
+
+
+def test_bin_roundtrip_f32(tmp_path):
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((10, 7)).astype(np.float32)
+    y = rng.integers(0, 3, 10).astype(np.uint16)
+    p = tmp_path / "d.bin"
+    D.write_bin(str(p), x, y, 3)
+    x2, y2, classes = D.read_bin(str(p))
+    assert classes == 3
+    np.testing.assert_array_equal(x, x2)
+    np.testing.assert_array_equal(y, y2)
+
+
+def test_bin_roundtrip_u8_images(tmp_path):
+    rng = np.random.default_rng(1)
+    x = rng.uniform(0, 1, size=(4, 8, 8, 3)).astype(np.float32)
+    y = rng.integers(0, 2, 4).astype(np.uint16)
+    p = tmp_path / "img.bin"
+    D.write_bin(str(p), x, y, 2, (8, 8, 3), as_u8=True)
+    x2, y2, _ = D.read_bin(str(p))
+    assert x2.shape == (4, 8, 8, 3)
+    assert np.abs(x2 - x).max() <= (0.5 / 255.0) + 1e-6

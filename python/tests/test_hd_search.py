@@ -1,0 +1,79 @@
+"""HD search kernel vs oracle + metric semantics."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hd_search as HS
+from compile.kernels import ref
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    classes=st.sampled_from([2, 6, 10, 26]),
+    length=st.sampled_from([16, 64, 128]),
+    metric=st.sampled_from(["l1", "dot"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_search_matches_ref(n, classes, length, metric, seed):
+    rng = np.random.default_rng(seed)
+    qs = rng.integers(-127, 128, size=(n, length)).astype(np.float32)
+    chvs = rng.integers(-127, 128, size=(classes, length)).astype(np.float32)
+    got = HS.hd_search(jnp.asarray(qs), jnp.asarray(chvs), metric=metric)
+    if metric == "l1":
+        want = ref.hd_search_l1_batch(jnp.asarray(qs), jnp.asarray(chvs))
+    else:
+        want = ref.hd_search_dot_batch(jnp.asarray(qs), jnp.asarray(chvs))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_class_blocking_invariant():
+    """Streaming CHVs in class-blocks (the XOR-tree fetch pattern) must not
+    change results."""
+    rng = np.random.default_rng(1)
+    qs = rng.integers(-8, 9, size=(3, 32)).astype(np.float32)
+    chvs = rng.integers(-8, 9, size=(12, 32)).astype(np.float32)
+    a = HS.hd_search(jnp.asarray(qs), jnp.asarray(chvs), class_block=12)
+    b = HS.hd_search(jnp.asarray(qs), jnp.asarray(chvs), class_block=4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dot_metric_equals_hamming_for_pm1():
+    """For +-1 hypervectors: hamming = (L - dot) / 2 — the chip's XOR tree."""
+    rng = np.random.default_rng(2)
+    length = 64
+    q = np.sign(rng.standard_normal((1, length))).astype(np.float32)
+    chvs = np.sign(rng.standard_normal((5, length))).astype(np.float32)
+    q[q == 0] = 1
+    chvs[chvs == 0] = 1
+    negdot = np.asarray(HS.hd_search(jnp.asarray(q), jnp.asarray(chvs),
+                                     metric="dot"))[0]
+    hamming = (chvs != q).sum(axis=1)
+    np.testing.assert_array_equal((length + negdot) / 2.0, hamming)
+
+
+def test_self_distance_zero_l1():
+    rng = np.random.default_rng(3)
+    chvs = rng.integers(-127, 128, size=(4, 100)).astype(np.float32)
+    d = np.asarray(HS.hd_search(jnp.asarray(chvs[:1]), jnp.asarray(chvs),
+                                metric="l1"))
+    assert d[0, 0] == 0.0
+    assert (d[0, 1:] > 0).all()
+
+
+def test_partial_distances_sum_to_full():
+    """L1 distance is additive over segments — the progressive-search
+    accumulation identity."""
+    rng = np.random.default_rng(4)
+    seg, nseg = 32, 4
+    q = rng.integers(-127, 128, size=(1, seg * nseg)).astype(np.float32)
+    chvs = rng.integers(-127, 128, size=(7, seg * nseg)).astype(np.float32)
+    full = np.asarray(HS.hd_search(jnp.asarray(q), jnp.asarray(chvs)))
+    acc = np.zeros_like(full)
+    for s in range(nseg):
+        sl = slice(s * seg, (s + 1) * seg)
+        acc += np.asarray(HS.hd_search(jnp.asarray(q[:, sl]),
+                                       jnp.asarray(chvs[:, sl])))
+    np.testing.assert_array_equal(full, acc)

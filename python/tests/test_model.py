@@ -1,0 +1,128 @@
+"""L2 graph semantics: shapes, quantization carry-through, update rule,
+WCFE forward pipeline."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import pretrain as P
+from compile.config import CONFIGS, WcfeConfig
+from compile.kernels import ref
+
+
+CFG = CONFIGS["tiny"]
+
+
+def factors(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    a = np.sign(rng.standard_normal((cfg.d1, cfg.f1))).astype(np.float32)
+    b = np.sign(rng.standard_normal((cfg.d2, cfg.f2))).astype(np.float32)
+    a[a == 0] = 1
+    b[b == 0] = 1
+    return a, b
+
+
+def test_encode_segment_graph_matches_manual_slice():
+    a, b = factors(CFG)
+    fn, args = M.make_encode_segment(CFG, a, b, scale=2.0, batch=3)
+    rng = np.random.default_rng(1)
+    xs = rng.integers(-40, 40, size=(3, CFG.features)).astype(np.float32)
+    for seg in range(CFG.segments):
+        out = np.asarray(fn(jnp.asarray(xs), jnp.int32(seg)))
+        rows = CFG.seg_rows
+        want = np.asarray(ref.kron_encode_batch(
+            jnp.asarray(xs), jnp.asarray(a[seg * rows:(seg + 1) * rows]),
+            jnp.asarray(b), bits=CFG.qbits, scale=2.0))
+        np.testing.assert_array_equal(out, want)
+
+
+def test_encode_full_equals_segment_concat():
+    a, b = factors(CFG)
+    full_fn, _ = M.make_encode_full(CFG, a, b, scale=2.0, batch=2)
+    seg_fn, _ = M.make_encode_segment(CFG, a, b, scale=2.0, batch=2)
+    rng = np.random.default_rng(2)
+    xs = rng.integers(-40, 40, size=(2, CFG.features)).astype(np.float32)
+    full = np.asarray(full_fn(jnp.asarray(xs)))
+    parts = [np.asarray(seg_fn(jnp.asarray(xs), jnp.int32(s)))
+             for s in range(CFG.segments)]
+    np.testing.assert_array_equal(full, np.concatenate(parts, axis=1))
+
+
+def test_search_graph_shapes_and_values():
+    fn, _ = M.make_search(CFG, CFG.seg_len, batch=2)
+    rng = np.random.default_rng(3)
+    qs = rng.integers(-127, 128, size=(2, CFG.seg_len)).astype(np.float32)
+    chvs = rng.integers(-127, 128, size=(CFG.classes, CFG.seg_len)).astype(np.float32)
+    out = np.asarray(fn(jnp.asarray(qs), jnp.asarray(chvs)))
+    assert out.shape == (2, CFG.classes)
+    want = np.abs(chvs[None] - qs[:, None]).sum(axis=2)
+    np.testing.assert_allclose(out, want, rtol=1e-6)
+
+
+def test_train_update_add_and_subtract():
+    fn, _ = M.make_train_update(CFG)
+    chvs = np.zeros((CFG.classes, CFG.dim), dtype=np.float32)
+    qhv = np.full((CFG.dim,), 3.0, dtype=np.float32)
+    coef = np.zeros((CFG.classes,), dtype=np.float32)
+    coef[2], coef[5] = 1.0, -1.0
+    out = np.asarray(fn(jnp.asarray(chvs), jnp.asarray(qhv), jnp.asarray(coef)))
+    assert (out[2] == 3.0).all() and (out[5] == -3.0).all()
+    mask = np.ones(CFG.classes, bool)
+    mask[[2, 5]] = False
+    assert (out[mask] == 0).all()
+
+
+def test_train_update_clips_to_int8():
+    fn, _ = M.make_train_update(CFG)
+    chvs = np.full((CFG.classes, CFG.dim), 126.0, dtype=np.float32)
+    qhv = np.full((CFG.dim,), 100.0, dtype=np.float32)
+    coef = np.ones((CFG.classes,), dtype=np.float32)
+    out = np.asarray(fn(jnp.asarray(chvs), jnp.asarray(qhv), jnp.asarray(coef)))
+    assert out.max() == 127.0
+
+
+def test_wcfe_forward_shapes():
+    wcfe = WcfeConfig()
+    rng = np.random.default_rng(4)
+    params = P.init_params(wcfe, rng)
+    infer = {k: v for k, v in params.items() if k != "head"}
+    fn, args = M.make_wcfe_forward(infer, batch=2)
+    imgs = rng.uniform(0, 1, size=(2, 32, 32, 3)).astype(np.float32)
+    out = np.asarray(fn(jnp.asarray(imgs)))
+    assert out.shape == (2, wcfe.fc_out)
+    assert np.isfinite(out).all()
+
+
+def test_wcfe_kernel_path_matches_plain_path():
+    """Pallas dense-bf16 conv path == plain jnp bf16 path."""
+    wcfe = WcfeConfig(channels=(8, 8, 8), fc_out=16)
+    rng = np.random.default_rng(5)
+    params = {k: jnp.asarray(v) for k, v in P.init_params(wcfe, rng).items()
+              if k != "head"}
+    imgs = jnp.asarray(rng.uniform(0, 1, size=(1, 32, 32, 3)).astype(np.float32))
+    a = np.asarray(M.wcfe_forward(params, imgs, use_kernel=True))
+    b = np.asarray(M.wcfe_forward(params, imgs, use_kernel=False))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_im2col_matches_direct_conv():
+    rng = np.random.default_rng(6)
+    x = rng.standard_normal((1, 8, 8, 2)).astype(np.float32)
+    w = rng.standard_normal((18, 3)).astype(np.float32)
+    patches = np.asarray(M.im2col(jnp.asarray(x))).reshape(64, 18)
+    out = (patches @ w).reshape(8, 8, 3)
+    # direct SAME conv at an interior pixel
+    wk = w.reshape(3, 3, 2, 3)
+    py, px = 4, 5
+    want = sum(
+        x[0, py + dy - 1, px + dx - 1, ci] * wk[dy, dx, ci, :]
+        for dy in range(3) for dx in range(3) for ci in range(2)
+    )
+    np.testing.assert_allclose(out[py, px], want, rtol=1e-4)
+
+
+def test_maxpool2():
+    x = jnp.asarray(np.arange(16, dtype=np.float32).reshape(1, 4, 4, 1))
+    out = np.asarray(M.maxpool2(x))
+    np.testing.assert_array_equal(out[0, :, :, 0], [[5, 7], [13, 15]])

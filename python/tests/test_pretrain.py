@@ -1,0 +1,58 @@
+"""Pretraining utilities: k-means clustering + init shapes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import pretrain as P
+from compile.config import WcfeConfig
+
+
+def test_kmeans_recovers_well_separated_clusters():
+    rng = np.random.default_rng(0)
+    centers = np.array([-3.0, 0.0, 4.0])
+    v = np.concatenate([c + 0.01 * rng.standard_normal(50) for c in centers])
+    cent, idx = P.kmeans_1d(v, 3, seed=0)
+    np.testing.assert_allclose(np.sort(cent), centers, atol=0.05)
+    assert idx.shape == v.shape
+
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.sampled_from([2, 4, 16]), n=st.integers(50, 300),
+       seed=st.integers(0, 2**31 - 1))
+def test_kmeans_invariants(k, n, seed):
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal(n).astype(np.float32)
+    cent, idx = P.kmeans_1d(v, k, seed=1)
+    assert cent.shape == (k,)
+    assert idx.min() >= 0 and idx.max() < k
+    # assignment is nearest-centroid
+    want = np.argmin(np.abs(v[:, None] - cent[None]), axis=1)
+    np.testing.assert_array_equal(idx, want)
+    # clustering reduces within-cluster error vs a single centroid
+    err_k = np.abs(v - cent[idx]).mean()
+    err_1 = np.abs(v - v.mean()).mean()
+    assert err_k <= err_1 + 1e-6
+
+
+def test_cluster_weights_reconstruction_error_small():
+    wcfe = WcfeConfig(channels=(4, 4, 4), fc_out=8, clusters=16)
+    rng = np.random.default_rng(2)
+    params = P.init_params(wcfe, rng)
+    clustered, codebooks = P.cluster_weights(params, wcfe, log=lambda *_: None)
+    for name in ("conv1", "conv2", "conv3"):
+        cent, idx = codebooks[name]
+        np.testing.assert_array_equal(clustered[name], cent[idx])
+        rel = np.abs(clustered[name] - params[name]).mean() / np.abs(params[name]).mean()
+        assert rel < 0.2
+        assert cent.shape == (wcfe.clusters,)
+
+
+def test_init_params_shapes():
+    wcfe = WcfeConfig()
+    params = P.init_params(wcfe, np.random.default_rng(0))
+    assert params["conv1"].shape == (27, 32)
+    assert params["conv2"].shape == (288, 64)
+    assert params["conv3"].shape == (576, 128)
+    assert params["fc"].shape == (128, 512)
+    assert params["head"].shape == (512, 100)

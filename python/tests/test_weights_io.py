@@ -1,0 +1,28 @@
+"""Named-tensor container roundtrip (shared with rust/src/data/tensors.rs)."""
+
+import numpy as np
+import pytest
+
+from compile import weights_io as W
+
+
+def test_roundtrip_mixed_dtypes(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a": rng.standard_normal((4, 5)).astype(np.float32),
+        "idx": rng.integers(0, 16, size=(3, 2, 2)).astype(np.int32),
+        "scalarish": np.array([1.5], dtype=np.float32),
+    }
+    p = tmp_path / "t.bin"
+    W.write_tensors(str(p), tensors)
+    out = W.read_tensors(str(p))
+    assert set(out) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(out[k], tensors[k])
+        assert out[k].dtype == tensors[k].dtype
+
+
+def test_empty_file(tmp_path):
+    p = tmp_path / "e.bin"
+    W.write_tensors(str(p), {})
+    assert W.read_tensors(str(p)) == {}

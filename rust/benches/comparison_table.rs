@@ -1,0 +1,82 @@
+//! Fig.11 — chip summary + SOTA comparison table. The competitor rows are
+//! the published constants from the paper's table; our row comes from the
+//! calibrated model. Prints the headline ratios: 1.73-7.77x (FE) and
+//! 4.85x (classifier) higher energy efficiency.
+
+use clo_hdnn::config::ChipConfig;
+use clo_hdnn::energy::report::{comparison_table, sota_rows};
+use clo_hdnn::energy::EnergyModel;
+use clo_hdnn::util::stats::Table;
+
+fn main() {
+    let chip = ChipConfig::default();
+    let model = EnergyModel::default();
+
+    println!("== Fig.11 chip summary (this reproduction's model envelope) ==");
+    let mut s = Table::new(&["field", "value"]);
+    for (k, v) in [
+        ("Technology", format!("{} nm CMOS (modeled)", chip.technology_nm)),
+        ("Die size", format!("{} mm^2", chip.die_area_mm2)),
+        ("SRAM", format!("{} KB (WCFE) + {} KB (HDC)", chip.sram_wcfe_kb, chip.sram_hdc_kb)),
+        ("Supply", format!("{}-{} V", chip.vmin, chip.vmax)),
+        ("Frequency", format!("{}-{} MHz", chip.fmin_mhz, chip.fmax_mhz)),
+        ("Model", "CNN (WCFE) + HDC".to_string()),
+        ("Precision", "BF16 (CNN), INT1-8 (HDC inf), INT8 (HDC train)".to_string()),
+        ("Feature dim F", "8-1024".to_string()),
+        ("HDC dim D", "1024-8192".to_string()),
+        ("Max classes", format!("{}", chip.max_classes)),
+        (
+            "Peak EE",
+            format!(
+                "WCFE {:.2}-{:.2} TFLOPS/W, HDC {:.2}-{:.2} TOPS/W",
+                model.efficiency(clo_hdnn::energy::Domain::Wcfe, 1.2),
+                model.efficiency(clo_hdnn::energy::Domain::Wcfe, 0.7),
+                model.efficiency(clo_hdnn::energy::Domain::Hdc, 1.2),
+                model.efficiency(clo_hdnn::energy::Domain::Hdc, 0.7),
+            ),
+        ),
+    ] {
+        s.row(&[k.to_string(), v]);
+    }
+    s.print();
+
+    println!("\n== Fig.11 SOTA comparison (EE scaled to 40 nm, as in the paper) ==");
+    let (ours, rows, ratios) = comparison_table(&model);
+    let mut t = Table::new(&[
+        "chip", "tech", "learning", "design", "encoder", "precision",
+        "mem (KB)", "area (mm^2)", "EE CNN (TFLOPS/W)", "EE clf (TOPS/W)",
+    ]);
+    for r in std::iter::once(&ours).chain(rows.iter()) {
+        t.row(&[
+            r.name.to_string(),
+            format!("{} nm", r.technology_nm),
+            r.learning_mode.into(),
+            r.design.into(),
+            r.encoder.into(),
+            r.precision.into(),
+            format!("{}", r.on_chip_mem_kb),
+            format!("{}", r.area_mm2),
+            r.ee_cnn.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+            r.ee_classifier.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.print();
+
+    println!("\nheadline ratios:");
+    println!(
+        "  FE energy efficiency vs ESSERC'24 [4]: {:.2}x   (paper: 1.73x)",
+        ratios.fe_vs_hdc_sota
+    );
+    println!(
+        "  FE energy efficiency vs VLSI'23  [8]: {:.2}x   (paper: 7.77x)",
+        ratios.fe_vs_cim_sota
+    );
+    println!(
+        "  classifier EE        vs ESSERC'24 [4]: {:.2}x   (paper: 4.85x)",
+        ratios.classifier_vs_sota
+    );
+    println!(
+        "  first chip in the table supporting end-to-end CONTINUAL learning for HDC: {}",
+        sota_rows().iter().all(|r| r.learning_mode != "CL HDC")
+    );
+}

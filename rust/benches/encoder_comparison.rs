@@ -1,0 +1,135 @@
+//! Fig.5 — Kronecker HD encoder vs RP [11], cRP [4], ID-LEVEL [12].
+//!
+//! Regenerates the paper's encoder-comparison panel: arithmetic ops,
+//! encoder parameter storage, measured software encode latency, and the
+//! headline ratios (paper: 43x speedup, 1376x memory saving at the large
+//! operating point). Absolute times are this machine's; the *ratios* are
+//! the reproduction target.
+
+use clo_hdnn::baselines::encoders::{BaselineEncoder, CrpEncoder, IdLevelEncoder, RpEncoder};
+use clo_hdnn::config::HdConfig;
+use clo_hdnn::hdc::encoder::{kron_cost, SoftwareEncoder};
+use clo_hdnn::hdc::HdBackend;
+use clo_hdnn::util::prop::gen;
+use clo_hdnn::util::stats::{fmt_secs, Bench, Table};
+use clo_hdnn::util::Rng;
+
+fn human_bits(bits: u64) -> String {
+    if bits >= 8 * 1024 * 1024 {
+        format!("{:.1} MiB", bits as f64 / 8.0 / 1024.0 / 1024.0)
+    } else if bits >= 8 * 1024 {
+        format!("{:.1} KiB", bits as f64 / 8.0 / 1024.0)
+    } else {
+        format!("{bits} b")
+    }
+}
+
+fn main() {
+    // the paper's worst-case point: F=640 (ISOLET padded), D=8192
+    let points = [
+        ("D=2048", HdConfig::synthetic("f5a", 32, 20, 64, 32, 16, 26)),
+        ("D=4096", HdConfig::synthetic("f5b", 32, 20, 128, 32, 16, 26)),
+        ("D=8192", HdConfig::synthetic("f5c", 32, 20, 256, 32, 16, 26)),
+    ];
+    let bench = Bench::new(2, 8);
+
+    for (label, cfg) in &points {
+        println!("\n== Fig.5 encoder comparison @ F={} {} ==", cfg.features(), label);
+        let mut rng = Rng::new(1);
+        let x = gen::int8_vec(&mut rng, cfg.features());
+
+        let mut kron = SoftwareEncoder::random(cfg.clone(), 2);
+        let kcost = kron_cost(cfg);
+        let kt = bench.run(|| kron.encode_full(&x, 1).unwrap());
+
+        let mut table = Table::new(&[
+            "encoder", "ops/encode", "memory", "time/encode", "speedup", "mem saving",
+        ]);
+        table.row(&[
+            "Kronecker (ours)".into(),
+            format!("{}", kcost.ops),
+            human_bits(kcost.mem_bits),
+            fmt_secs(kt.median),
+            "1.00x".into(),
+            "1.00x".into(),
+        ]);
+
+        let baselines: Vec<Box<dyn BaselineEncoder>> = vec![
+            Box::new(RpEncoder::new(cfg.clone(), 3)),
+            Box::new(CrpEncoder::new(cfg.clone(), 4)),
+            Box::new(IdLevelEncoder::new(cfg.clone(), 32, 5)),
+        ];
+        for enc in &baselines {
+            let t = bench.run(|| enc.encode(&x));
+            table.row(&[
+                enc.name().into(),
+                format!("{}", enc.ops()),
+                human_bits(enc.mem_bits()),
+                fmt_secs(t.median),
+                format!("{:.1}x", t.median / kt.median),
+                format!("{:.0}x", enc.mem_bits() as f64 / kcost.mem_bits as f64),
+            ]);
+        }
+        table.print();
+        let rp = &baselines[0];
+        println!(
+            "model-level: op ratio {:.1}x, memory ratio {:.0}x (paper Fig.5: 43x speedup, 1376x memory @D=8192)",
+            rp.ops() as f64 / kcost.ops as f64,
+            rp.mem_bits() as f64 / kcost.mem_bits as f64
+        );
+    }
+
+    // accuracy is not sacrificed: all encoders classify the same blobs
+    println!("\n== encoder quality check (nearest-CHV accuracy on synthetic blobs) ==");
+    let cfg = HdConfig::synthetic("f5q", 8, 8, 32, 32, 8, 10);
+    let mut rng = Rng::new(9);
+    let protos: Vec<Vec<f32>> = (0..10)
+        .map(|_| (0..64).map(|_| rng.normal_f32() * 40.0).collect())
+        .collect();
+    let sample = |rng: &mut Rng, c: usize| -> Vec<f32> {
+        protos[c].iter().map(|&v| v + rng.normal_f32() * 14.0).collect()
+    };
+    let mut encoders: Vec<(String, Box<dyn FnMut(&[f32]) -> Vec<f32>>)> = {
+        let mut kron = SoftwareEncoder::random(cfg.clone(), 10);
+        let rp = RpEncoder::new(cfg.clone(), 11);
+        let crp = CrpEncoder::new(cfg.clone(), 12);
+        let id = IdLevelEncoder::new(cfg.clone(), 16, 13);
+        vec![
+            ("Kronecker".into(), Box::new(move |x: &[f32]| kron.encode_full(x, 1).unwrap())
+                as Box<dyn FnMut(&[f32]) -> Vec<f32>>),
+            ("RP".into(), Box::new(move |x: &[f32]| rp.encode(x))),
+            ("cRP".into(), Box::new(move |x: &[f32]| crp.encode(x))),
+            ("ID-LEVEL".into(), Box::new(move |x: &[f32]| id.encode(x))),
+        ]
+    };
+    let mut table = Table::new(&["encoder", "accuracy (20 samples/class)"]);
+    for (name, encode) in encoders.iter_mut().map(|(n, e)| (n.clone(), e)) {
+        // bundle 10 train samples per class, test on 20
+        let mut chvs = vec![0.0f32; 10 * cfg.dim()];
+        let mut r2 = Rng::new(77);
+        for c in 0..10 {
+            for _ in 0..10 {
+                let q = encode(&sample(&mut r2, c));
+                for (i, v) in q.iter().enumerate() {
+                    chvs[c * cfg.dim() + i] = (chvs[c * cfg.dim() + i] + v).clamp(-127.0, 127.0);
+                }
+            }
+        }
+        let mut correct = 0;
+        let total = 200;
+        for t in 0..total {
+            let c = t % 10;
+            let q = encode(&sample(&mut r2, c));
+            let d = clo_hdnn::hdc::distance::l1_batch(&q, 1, &chvs, 10, cfg.dim()).unwrap();
+            let best = d
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            correct += usize::from(best == c);
+        }
+        table.row(&[name, format!("{:.3}", correct as f64 / total as f64)]);
+    }
+    table.print();
+}

@@ -1,0 +1,132 @@
+//! §Perf — L3 hot-path microbenchmarks: per-stage latency of the serving
+//! loop (quantize / encode-segment / partial-search / full pipeline)
+//! through both backends, plus the dynamic batcher's b8 amortization.
+//! This is the bench the EXPERIMENTS.md §Perf iteration log quotes.
+
+use clo_hdnn::config::HdConfig;
+use clo_hdnn::data::TensorFile;
+use clo_hdnn::hdc::encoder::SoftwareEncoder;
+use clo_hdnn::hdc::quantize::quantize_features;
+use clo_hdnn::hdc::{ChvStore, HdBackend, HdClassifier, ProgressiveSearch, Trainer};
+use clo_hdnn::runtime::{Engine, Manifest, PjrtBackend};
+use clo_hdnn::util::stats::{fmt_secs, Bench, Table};
+use clo_hdnn::util::Rng;
+
+fn main() {
+    let Ok(mut engine) = Engine::load(Manifest::default_dir()) else {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(1);
+    };
+    let cfg_name = "isolet";
+    let cfg = engine.manifest.config(cfg_name).unwrap().clone();
+    let tf = TensorFile::load(engine.manifest.dir.join(format!("hd_factors_{cfg_name}.bin")))
+        .unwrap();
+    let mut sw = SoftwareEncoder::new(
+        cfg.clone(),
+        tf.f32("a").unwrap().to_vec(),
+        tf.f32("b").unwrap().to_vec(),
+    )
+    .unwrap();
+    let mut pjrt = PjrtBackend::new(&mut engine, cfg_name, 1).unwrap();
+    let mut pjrt8 = PjrtBackend::new(&mut engine, cfg_name, 8).unwrap();
+
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..cfg.features()).map(|_| rng.normal_f32()).collect();
+    let xq = quantize_features(&x, cfg.scale_x);
+    let x8: Vec<f32> = (0..8).flat_map(|_| xq.clone()).collect();
+    let mut store = ChvStore::new(cfg.clone());
+    for c in 0..cfg.classes {
+        let q: Vec<f32> = (0..cfg.dim()).map(|_| rng.range(-40, 41) as f32).collect();
+        store.update(c, &q, 1.0).unwrap();
+    }
+    let qseg = sw.encode_segment(&xq, 1, 0).unwrap();
+
+    let bench = Bench::new(5, 40);
+    println!("== L3 hot-path stages (config {cfg_name}: F={} D={} segs={}) ==",
+             cfg.features(), cfg.dim(), cfg.segments);
+    let mut t = Table::new(&["stage", "median", "p95", "notes"]);
+
+    let s = bench.run(|| quantize_features(&x, cfg.scale_x));
+    t.row(&["quantize features".into(), fmt_secs(s.median), fmt_secs(s.p95), "rust".into()]);
+
+    let s = bench.run(|| sw.encode_segment(&xq, 1, 0).unwrap());
+    t.row(&["encode segment (software)".into(), fmt_secs(s.median), fmt_secs(s.p95), "rust twin".into()]);
+    let s = bench.run(|| pjrt.encode_segment(&xq, 1, 0).unwrap());
+    t.row(&["encode segment (PJRT b1)".into(), fmt_secs(s.median), fmt_secs(s.p95), "AOT Pallas".into()]);
+    let s = bench.run(|| pjrt8.encode_segment(&x8, 8, 0).unwrap());
+    t.row(&[
+        "encode segment (PJRT b8)".into(),
+        fmt_secs(s.median),
+        fmt_secs(s.p95),
+        format!("{} per sample", fmt_secs(s.median / 8.0)),
+    ]);
+
+    let s = bench.run(|| pjrt.encode_full(&xq, 1).unwrap());
+    t.row(&["encode full (PJRT b1)".into(), fmt_secs(s.median), fmt_secs(s.p95), "16 segs worth".into()]);
+
+    let s = bench.run(|| {
+        pjrt.search(&qseg, 1, store.segment(0), cfg.classes, cfg.seg_len())
+            .unwrap()
+    });
+    t.row(&["partial search (PJRT b1)".into(), fmt_secs(s.median), fmt_secs(s.p95), "26 CHVs".into()]);
+    let s = bench.run(|| {
+        clo_hdnn::hdc::distance::l1_batch(&qseg, 1, store.segment(0), cfg.classes, cfg.seg_len())
+            .unwrap()
+    });
+    t.row(&["partial search (software)".into(), fmt_secs(s.median), fmt_secs(s.p95), "rust twin".into()]);
+    t.print();
+
+    // end-to-end progressive classify, both backends
+    println!("\n== end-to-end progressive classify ==");
+    let mut t2 = Table::new(&["pipeline", "median", "p95", "throughput"]);
+    for (name, backend) in [
+        ("PJRT", Box::new(PjrtBackend::new(&mut engine, cfg_name, 1).unwrap()) as Box<dyn HdBackend>),
+        ("software", Box::new(sw.clone()) as Box<dyn HdBackend>),
+    ] {
+        let mut cl = HdClassifier::new(backend, ProgressiveSearch { tau: 0.5, min_segments: 1 });
+        cl.store = store.clone();
+        let s = bench.run(|| cl.classify(&x).unwrap());
+        t2.row(&[
+            format!("{name} progressive"),
+            fmt_secs(s.median),
+            fmt_secs(s.p95),
+            format!("{:.0}/s", 1.0 / s.median),
+        ]);
+        let mut cl_full =
+            HdClassifier::new(match name {
+                "PJRT" => Box::new(PjrtBackend::new(&mut engine, cfg_name, 1).unwrap()) as Box<dyn HdBackend>,
+                _ => Box::new(sw.clone()) as Box<dyn HdBackend>,
+            }, ProgressiveSearch { tau: f32::INFINITY, min_segments: usize::MAX });
+        cl_full.store = store.clone();
+        let s = bench.run(|| cl_full.classify(&x).unwrap());
+        t2.row(&[
+            format!("{name} exhaustive"),
+            fmt_secs(s.median),
+            fmt_secs(s.p95),
+            format!("{:.0}/s", 1.0 / s.median),
+        ]);
+    }
+    t2.print();
+
+    // training path
+    let train_bench = Bench::new(2, 10);
+    let mut cl = HdClassifier::new(
+        Box::new(PjrtBackend::new(&mut engine, cfg_name, 1).unwrap()),
+        ProgressiveSearch { tau: 0.5, min_segments: 1 },
+    );
+    let trainer = Trainer { retrain_epochs: 0 };
+    let ds = clo_hdnn::data::Dataset::from_parts(
+        (0..32).flat_map(|_| x.clone()).collect(),
+        (0..32).map(|i| (i % cfg.classes) as u16).collect(),
+        cfg.features(),
+        cfg.classes,
+    )
+    .unwrap();
+    let idx: Vec<usize> = (0..32).collect();
+    let s = train_bench.run(|| trainer.train_indices(&mut cl, &ds, &idx).unwrap());
+    println!(
+        "\ntraining single-pass: {} per 32 samples ({} per update)",
+        fmt_secs(s.median),
+        fmt_secs(s.median / 32.0)
+    );
+}

@@ -1,0 +1,196 @@
+//! FP32 softmax-regression learner trained by SGD — the gradient-based
+//! float baseline (stand-in for [5], see DESIGN.md Substitutions). Under
+//! the task-incremental protocol WITHOUT replay it exhibits the
+//! catastrophic forgetting the paper's Fig.1 motivates (challenge C2);
+//! `replay_budget > 0` enables a small episodic-replay buffer for the
+//! stronger baseline variant.
+
+use crate::data::{Dataset, Task};
+use crate::util::Rng;
+
+pub struct LinearSgd {
+    pub w: Vec<f32>,
+    /// per-class bias — trained jointly; under class-incremental fine-tuning
+    /// the new classes' biases grow while unseen-in-batch classes' biases
+    /// only ever receive downward gradient (task-recency bias), the textbook
+    /// forgetting mechanism of challenge C2
+    pub b: Vec<f32>,
+    pub dim: usize,
+    pub classes: usize,
+    pub lr: f32,
+    pub epochs: usize,
+    /// replay-buffer capacity in samples (0 = pure SGD, forgets)
+    pub replay_budget: usize,
+    replay: Vec<(Vec<f32>, usize)>,
+    rng: Rng,
+    /// FP32 multiply-accumulate count (cost accounting vs gradient-free HDC)
+    pub flops: u64,
+}
+
+impl LinearSgd {
+    pub fn new(dim: usize, classes: usize, lr: f32, epochs: usize,
+               replay_budget: usize, seed: u64) -> LinearSgd {
+        LinearSgd {
+            w: vec![0.0; dim * classes],
+            b: vec![0.0; classes],
+            dim,
+            classes,
+            lr,
+            epochs,
+            replay_budget,
+            replay: Vec::new(),
+            rng: Rng::new(seed),
+            flops: 0,
+        }
+    }
+
+    pub fn logits(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = self.b.clone();
+        for (j, &v) in x.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            let row = &self.w[j * self.classes..(j + 1) * self.classes];
+            for (o, &w) in out.iter_mut().zip(row) {
+                *o += v * w;
+            }
+        }
+        out
+    }
+
+    pub fn predict(&self, x: &[f32]) -> usize {
+        let l = self.logits(x);
+        l.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    fn sgd_step(&mut self, x: &[f32], y: usize) {
+        let logits = self.logits(x);
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = logits.iter().map(|&l| (l - m).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        for c in 0..self.classes {
+            let err = exps[c] / z - f32::from(c == y);
+            self.b[c] -= self.lr * err;
+        }
+        for (j, &v) in x.iter().enumerate() {
+            let row = &mut self.w[j * self.classes..(j + 1) * self.classes];
+            for (c, w) in row.iter_mut().enumerate() {
+                let p = exps[c] / z;
+                let g = (p - f32::from(c == y)) * v;
+                *w -= self.lr * g;
+            }
+        }
+        self.flops += (2 * self.dim * self.classes) as u64 * 2; // fwd + bwd
+    }
+
+    /// Train on one task's samples (+ replay buffer), SGD with shuffling.
+    pub fn train_task(&mut self, ds: &Dataset, task: &Task) {
+        // stash replay samples from this task
+        if self.replay_budget > 0 {
+            let per_task = self.replay_budget / (task.id + 1).max(1);
+            for &i in task.train_indices.iter().take(per_task) {
+                self.replay.push((ds.sample(i).to_vec(), ds.label(i)));
+            }
+            while self.replay.len() > self.replay_budget {
+                let k = self.rng.below(self.replay.len());
+                self.replay.swap_remove(k);
+            }
+        }
+        for _ in 0..self.epochs {
+            let mut order = task.train_indices.clone();
+            self.rng.shuffle(&mut order);
+            for &i in &order {
+                let (x, y) = (ds.sample(i).to_vec(), ds.label(i));
+                self.sgd_step(&x, y);
+            }
+            if !self.replay.is_empty() {
+                let replay_snapshot: Vec<(Vec<f32>, usize)> = self.replay.clone();
+                for (x, y) in replay_snapshot {
+                    self.sgd_step(&x, y);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TaskStream;
+
+    fn blob_dataset(classes: usize, per_class: usize, feat: usize, seed: u64) -> Dataset {
+        // Non-negative-ish data (like pixels / spectral features): a shared
+        // positive base + class proto. The shared component is what couples
+        // tasks — new-task gradients push old-class weights down along it,
+        // producing the catastrophic forgetting of challenge C2.
+        let mut rng = Rng::new(seed);
+        let protos: Vec<Vec<f32>> = (0..classes)
+            .map(|_| (0..feat).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for c in 0..classes {
+            for _ in 0..per_class {
+                x.extend(
+                    protos[c]
+                        .iter()
+                        .map(|&v| 1.0 + v + rng.normal_f32() * 0.15),
+                );
+                y.push(c as u16);
+            }
+        }
+        Dataset::from_parts(x, y, feat, classes).unwrap()
+    }
+
+    fn acc(m: &LinearSgd, ds: &Dataset, classes: &[usize]) -> f64 {
+        let idx = ds.indices_of_classes(classes);
+        let ok = idx.iter().filter(|&&i| m.predict(ds.sample(i)) == ds.label(i)).count();
+        ok as f64 / idx.len() as f64
+    }
+
+    #[test]
+    fn learns_single_task_blobs() {
+        let ds = blob_dataset(5, 20, 16, 1);
+        let stream = TaskStream::class_incremental(&ds, 1, 1);
+        let mut m = LinearSgd::new(16, 5, 0.1, 5, 0, 2);
+        m.train_task(&ds, &stream.tasks[0]);
+        assert!(acc(&m, &ds, &(0..5).collect::<Vec<_>>()) > 0.9);
+        assert!(m.flops > 0);
+    }
+
+    #[test]
+    fn forgets_without_replay_hdc_does_not() {
+        // The paper's core CL story (Fig.1 C2 vs Fig.2): gradient training
+        // overwrites earlier tasks; HDC's independent CHVs do not.
+        let ds = blob_dataset(6, 25, 16, 3);
+        let stream = TaskStream::class_incremental(&ds, 3, 5);
+        let mut m = LinearSgd::new(16, 6, 0.1, 8, 0, 4);
+        m.train_task(&ds, &stream.tasks[0]);
+        let before = acc(&m, &ds, &stream.tasks[0].classes);
+        m.train_task(&ds, &stream.tasks[1]);
+        m.train_task(&ds, &stream.tasks[2]);
+        let after = acc(&m, &ds, &stream.tasks[0].classes);
+        assert!(before > 0.9, "task0 never learned: {before}");
+        assert!(
+            after < before - 0.3,
+            "expected catastrophic forgetting: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn replay_mitigates_forgetting() {
+        let ds = blob_dataset(6, 25, 16, 3);
+        let stream = TaskStream::class_incremental(&ds, 3, 5);
+        let mut m = LinearSgd::new(16, 6, 0.1, 8, 60, 4);
+        m.train_task(&ds, &stream.tasks[0]);
+        let before = acc(&m, &ds, &stream.tasks[0].classes);
+        m.train_task(&ds, &stream.tasks[1]);
+        m.train_task(&ds, &stream.tasks[2]);
+        let after = acc(&m, &ds, &stream.tasks[0].classes);
+        assert!(after > before - 0.25, "replay failed: {before} -> {after}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Baselines the paper compares against:
+//! * encoder families for Fig.5 — RP [11], cyclic RP [4], ID-LEVEL [12];
+//! * the FP32 gradient learner standing in for the float baseline [5] of
+//!   Fig.9 (exhibits catastrophic forgetting without replay);
+//! * nearest-class-mean (the geometry sanity floor).
+
+pub mod encoders;
+pub mod linear_sgd;
+pub mod nearest_mean;
+
+pub use encoders::{CrpEncoder, IdLevelEncoder, RpEncoder};
+pub use linear_sgd::LinearSgd;
+pub use nearest_mean::NearestMean;

@@ -1,0 +1,80 @@
+//! Nearest-class-mean baseline: the geometry floor every encoder/classifier
+//! comparison is sanity-checked against (and itself a replay-free continual
+//! learner, since class means are independent).
+
+use crate::data::{Dataset, Task};
+
+pub struct NearestMean {
+    pub sums: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+impl NearestMean {
+    pub fn new(dim: usize, classes: usize) -> NearestMean {
+        NearestMean { sums: vec![0.0; dim * classes], counts: vec![0; classes], dim, classes }
+    }
+
+    pub fn learn(&mut self, x: &[f32], y: usize) {
+        for (j, &v) in x.iter().enumerate() {
+            self.sums[y * self.dim + j] += v as f64;
+        }
+        self.counts[y] += 1;
+    }
+
+    pub fn train_task(&mut self, ds: &Dataset, task: &Task) {
+        for &i in &task.train_indices {
+            self.learn(ds.sample(i), ds.label(i));
+        }
+    }
+
+    pub fn predict(&self, x: &[f32]) -> usize {
+        let mut best = 0usize;
+        let mut bd = f64::INFINITY;
+        for c in 0..self.classes {
+            if self.counts[c] == 0 {
+                continue;
+            }
+            let inv = 1.0 / self.counts[c] as f64;
+            let mut d = 0.0f64;
+            for (j, &v) in x.iter().enumerate() {
+                let m = self.sums[c * self.dim + j] * inv;
+                let diff = v as f64 - m;
+                d += diff * diff;
+            }
+            if d < bd {
+                bd = d;
+                best = c;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn classifies_two_blobs() {
+        let mut m = NearestMean::new(4, 2);
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let a: Vec<f32> = (0..4).map(|_| 1.0 + rng.normal_f32() * 0.1).collect();
+            let b: Vec<f32> = (0..4).map(|_| -1.0 + rng.normal_f32() * 0.1).collect();
+            m.learn(&a, 0);
+            m.learn(&b, 1);
+        }
+        assert_eq!(m.predict(&[1.0, 1.0, 1.0, 1.0]), 0);
+        assert_eq!(m.predict(&[-1.0, -1.0, -1.0, -1.0]), 1);
+    }
+
+    #[test]
+    fn untrained_classes_never_predicted() {
+        let mut m = NearestMean::new(2, 3);
+        m.learn(&[1.0, 0.0], 0);
+        assert_eq!(m.predict(&[100.0, 100.0]), 0);
+    }
+}

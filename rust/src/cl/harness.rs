@@ -1,0 +1,158 @@
+//! The task-incremental experiment loop behind Fig.9: train task t, then
+//! evaluate on every seen task's test samples; produces the accuracy
+//! matrix + forgetting report per learner.
+
+use crate::cl::learners::ContinualLearner;
+use crate::cl::metrics::AccuracyMatrix;
+use crate::data::{Dataset, TaskStream};
+use crate::Result;
+
+/// One learner's full run over a task stream.
+#[derive(Clone, Debug)]
+pub struct ClRun {
+    pub learner: String,
+    pub matrix: AccuracyMatrix,
+    pub final_accuracy: f64,
+    pub mean_forgetting: f64,
+    pub mean_segments: Option<f64>,
+}
+
+pub struct ClHarness<'a> {
+    pub train: &'a Dataset,
+    pub test: &'a Dataset,
+    pub stream: &'a TaskStream,
+    /// cap evaluation samples per task (speed knob for big test sets)
+    pub eval_cap: usize,
+}
+
+impl<'a> ClHarness<'a> {
+    pub fn new(train: &'a Dataset, test: &'a Dataset, stream: &'a TaskStream) -> ClHarness<'a> {
+        ClHarness { train, test, stream, eval_cap: usize::MAX }
+    }
+
+    /// Accuracy of `learner` on the test samples of one task's classes.
+    fn eval_task(&self, learner: &mut dyn ContinualLearner, task_id: usize) -> Result<f64> {
+        let classes = &self.stream.tasks[task_id].classes;
+        let idx = self.test.indices_of_classes(classes);
+        let take = idx.len().min(self.eval_cap);
+        let mut correct = 0usize;
+        for &i in idx.iter().take(take) {
+            if learner.predict(self.test.sample(i))? == self.test.label(i) {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / take.max(1) as f64)
+    }
+
+    /// Run the full stream for one learner.
+    pub fn run(&self, learner: &mut dyn ContinualLearner) -> Result<ClRun> {
+        let n = self.stream.len();
+        let mut matrix = AccuracyMatrix::new(n);
+        for t in 0..n {
+            learner.learn_task(self.train, &self.stream.tasks[t])?;
+            for tau in 0..=t {
+                let acc = self.eval_task(learner, tau)?;
+                matrix.set(t, tau, acc);
+            }
+        }
+        Ok(ClRun {
+            learner: learner.name(),
+            final_accuracy: matrix.final_average(),
+            mean_forgetting: matrix.mean_forgetting(),
+            mean_segments: learner.mean_segments(),
+            matrix,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{LinearSgd, NearestMean};
+    use crate::cl::learners::{HdLearner, NcmLearner, SgdLearner};
+    use crate::config::HdConfig;
+    use crate::hdc::encoder::SoftwareEncoder;
+    use crate::hdc::{HdClassifier, ProgressiveSearch, Trainer};
+    use crate::util::Rng;
+
+    fn blob_pair(classes: usize, feat: usize, seed: u64) -> (Dataset, Dataset) {
+        // shared positive base couples tasks (see linear_sgd tests): HDC is
+        // insensitive to it, gradient fine-tuning forgets through it
+        let mut rng = Rng::new(seed);
+        let protos: Vec<Vec<f32>> = (0..classes)
+            .map(|_| (0..feat).map(|_| rng.normal_f32() * 30.0).collect())
+            .collect();
+        let mk = |per: usize, rng: &mut Rng| {
+            let mut x = Vec::new();
+            let mut y = Vec::new();
+            for c in 0..classes {
+                for _ in 0..per {
+                    x.extend(
+                        protos[c]
+                            .iter()
+                            .map(|&v| 60.0 + v + rng.normal_f32() * 4.0),
+                    );
+                    y.push(c as u16);
+                }
+            }
+            Dataset::from_parts(x, y, feat, classes).unwrap()
+        };
+        (mk(12, &mut rng), mk(6, &mut rng))
+    }
+
+    #[test]
+    fn hdc_beats_naive_sgd_on_forgetting() {
+        let (train, test) = blob_pair(8, 64, 61);
+        let stream = TaskStream::class_incremental(&train, 4, 2);
+        let h = ClHarness::new(&train, &test, &stream);
+
+        let cfg = HdConfig::synthetic("t", 8, 8, 32, 32, 8, 8);
+        let mut hd = HdLearner::new(
+            HdClassifier::new(
+                Box::new(SoftwareEncoder::random(cfg, 62)),
+                ProgressiveSearch { tau: 0.4, min_segments: 1 },
+            ),
+            Trainer { retrain_epochs: 1 },
+        );
+        let mut sgd = SgdLearner(LinearSgd::new(64, 8, 0.1, 6, 0, 63));
+
+        let hd_run = h.run(&mut hd).unwrap();
+        let sgd_run = h.run(&mut sgd).unwrap();
+
+        assert!(hd_run.final_accuracy > 0.85, "hdc {}", hd_run.final_accuracy);
+        assert!(
+            hd_run.mean_forgetting < 0.1,
+            "hdc forgetting {}",
+            hd_run.mean_forgetting
+        );
+        assert!(
+            sgd_run.mean_forgetting > hd_run.mean_forgetting + 0.15,
+            "sgd {} vs hdc {}",
+            sgd_run.mean_forgetting,
+            hd_run.mean_forgetting
+        );
+        assert!(hd_run.mean_segments.is_some());
+    }
+
+    #[test]
+    fn ncm_also_immune_to_forgetting() {
+        let (train, test) = blob_pair(6, 32, 71);
+        let stream = TaskStream::class_incremental(&train, 3, 3);
+        let h = ClHarness::new(&train, &test, &stream);
+        let mut ncm = NcmLearner(NearestMean::new(32, 6));
+        let run = h.run(&mut ncm).unwrap();
+        assert!(run.final_accuracy > 0.9);
+        assert!(run.mean_forgetting < 0.05);
+    }
+
+    #[test]
+    fn eval_cap_limits_work() {
+        let (train, test) = blob_pair(4, 32, 81);
+        let stream = TaskStream::class_incremental(&train, 2, 4);
+        let mut h = ClHarness::new(&train, &test, &stream);
+        h.eval_cap = 3;
+        let mut ncm = NcmLearner(NearestMean::new(32, 4));
+        let run = h.run(&mut ncm).unwrap();
+        assert!(run.final_accuracy >= 0.0 && run.final_accuracy <= 1.0);
+    }
+}

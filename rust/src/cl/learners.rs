@@ -1,0 +1,93 @@
+//! [`ContinualLearner`] — the interface the CL harness drives — and its
+//! implementations: the HDC classifier (ours) and the baselines.
+
+use crate::baselines::{LinearSgd, NearestMean};
+use crate::data::{Dataset, Task};
+use crate::hdc::{HdClassifier, Trainer};
+use crate::Result;
+
+pub trait ContinualLearner {
+    fn name(&self) -> String;
+    fn learn_task(&mut self, ds: &Dataset, task: &Task) -> Result<()>;
+    fn predict(&mut self, x: &[f32]) -> Result<usize>;
+    /// mean segments used per prediction, if the learner is progressive
+    fn mean_segments(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// The Clo-HDnn learner: gradient-free HDC with progressive search.
+pub struct HdLearner {
+    pub classifier: HdClassifier,
+    pub trainer: Trainer,
+    seg_used: u64,
+    preds: u64,
+}
+
+impl HdLearner {
+    pub fn new(classifier: HdClassifier, trainer: Trainer) -> HdLearner {
+        HdLearner { classifier, trainer, seg_used: 0, preds: 0 }
+    }
+}
+
+impl ContinualLearner for HdLearner {
+    fn name(&self) -> String {
+        format!("Clo-HDnn (tau={})", self.classifier.policy.tau)
+    }
+
+    fn learn_task(&mut self, ds: &Dataset, task: &Task) -> Result<()> {
+        self.trainer.train_task(&mut self.classifier, ds, task)?;
+        Ok(())
+    }
+
+    fn predict(&mut self, x: &[f32]) -> Result<usize> {
+        let r = self.classifier.classify(x)?;
+        self.seg_used += r.segments_used as u64;
+        self.preds += 1;
+        Ok(r.class)
+    }
+
+    fn mean_segments(&self) -> Option<f64> {
+        (self.preds > 0).then(|| self.seg_used as f64 / self.preds as f64)
+    }
+}
+
+/// FP32 gradient baseline (stand-in for [5]).
+pub struct SgdLearner(pub LinearSgd);
+
+impl ContinualLearner for SgdLearner {
+    fn name(&self) -> String {
+        if self.0.replay_budget > 0 {
+            format!("FP32 SGD + replay({})", self.0.replay_budget)
+        } else {
+            "FP32 SGD (no replay)".into()
+        }
+    }
+
+    fn learn_task(&mut self, ds: &Dataset, task: &Task) -> Result<()> {
+        self.0.train_task(ds, task);
+        Ok(())
+    }
+
+    fn predict(&mut self, x: &[f32]) -> Result<usize> {
+        Ok(self.0.predict(x))
+    }
+}
+
+/// Nearest-class-mean baseline.
+pub struct NcmLearner(pub NearestMean);
+
+impl ContinualLearner for NcmLearner {
+    fn name(&self) -> String {
+        "Nearest-class-mean".into()
+    }
+
+    fn learn_task(&mut self, ds: &Dataset, task: &Task) -> Result<()> {
+        self.0.train_task(ds, task);
+        Ok(())
+    }
+
+    fn predict(&mut self, x: &[f32]) -> Result<usize> {
+        Ok(self.0.predict(x))
+    }
+}

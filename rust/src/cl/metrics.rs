@@ -1,0 +1,98 @@
+//! Continual-learning metrics: the accuracy matrix A[t][tau] (accuracy on
+//! task tau's classes after training task t), average accuracy, and
+//! backward-transfer / forgetting.
+
+/// Row-major accuracy matrix over `n_tasks` training checkpoints.
+#[derive(Clone, Debug)]
+pub struct AccuracyMatrix {
+    pub n_tasks: usize,
+    /// a[t * n_tasks + tau] = accuracy on task tau after training task t
+    /// (NaN for tau > t: not yet seen)
+    pub a: Vec<f64>,
+}
+
+impl AccuracyMatrix {
+    pub fn new(n_tasks: usize) -> AccuracyMatrix {
+        AccuracyMatrix { n_tasks, a: vec![f64::NAN; n_tasks * n_tasks] }
+    }
+
+    pub fn set(&mut self, after_task: usize, on_task: usize, acc: f64) {
+        self.a[after_task * self.n_tasks + on_task] = acc;
+    }
+
+    pub fn get(&self, after_task: usize, on_task: usize) -> f64 {
+        self.a[after_task * self.n_tasks + on_task]
+    }
+
+    /// Mean accuracy over all seen tasks after the final task — the Fig.9
+    /// end-of-stream number.
+    pub fn final_average(&self) -> f64 {
+        let t = self.n_tasks - 1;
+        (0..self.n_tasks).map(|tau| self.get(t, tau)).sum::<f64>() / self.n_tasks as f64
+    }
+
+    /// Average accuracy on seen tasks after each checkpoint (learning curve).
+    pub fn curve(&self) -> Vec<f64> {
+        (0..self.n_tasks)
+            .map(|t| (0..=t).map(|tau| self.get(t, tau)).sum::<f64>() / (t + 1) as f64)
+            .collect()
+    }
+
+    /// Mean forgetting: max historical accuracy minus final accuracy, over
+    /// tasks 0..n-1 (classic CL metric; ~0 for HDC, large for naive SGD).
+    pub fn mean_forgetting(&self) -> f64 {
+        if self.n_tasks < 2 {
+            return 0.0;
+        }
+        let last = self.n_tasks - 1;
+        let mut total = 0.0;
+        for tau in 0..last {
+            let peak = (tau..self.n_tasks)
+                .map(|t| self.get(t, tau))
+                .fold(f64::NEG_INFINITY, f64::max);
+            total += (peak - self.get(last, tau)).max(0.0);
+        }
+        total / last as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> AccuracyMatrix {
+        // 2 tasks: task0 acc 0.9 after t0, drops to 0.5 after t1; task1 0.8
+        let mut m = AccuracyMatrix::new(2);
+        m.set(0, 0, 0.9);
+        m.set(1, 0, 0.5);
+        m.set(1, 1, 0.8);
+        m
+    }
+
+    #[test]
+    fn final_average() {
+        assert!((demo().final_average() - 0.65).abs() < 1e-12);
+    }
+
+    #[test]
+    fn forgetting() {
+        assert!((demo().mean_forgetting() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn curve_shape() {
+        let c = demo().curve();
+        assert_eq!(c.len(), 2);
+        assert!((c[0] - 0.9).abs() < 1e-12);
+        assert!((c[1] - 0.65).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_forgetting_when_stable() {
+        let mut m = AccuracyMatrix::new(2);
+        m.set(0, 0, 0.9);
+        m.set(1, 0, 0.92); // improved!
+        m.set(1, 1, 0.8);
+        assert_eq!(m.mean_forgetting(), 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Continual-learning harness (Fig.1/Fig.9): task-incremental protocol,
+//! accuracy matrix, forgetting metrics, over any [`ContinualLearner`].
+
+pub mod harness;
+pub mod learners;
+pub mod metrics;
+
+pub use harness::{ClHarness, ClRun};
+pub use learners::ContinualLearner;
+pub use metrics::AccuracyMatrix;

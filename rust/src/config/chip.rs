@@ -1,0 +1,126 @@
+//! Physical chip envelope (Fig.11 summary table): 40 nm CMOS, 14.4 mm²,
+//! 0.7-1.2 V, 50-250 MHz, 168 KB WCFE SRAM + 32 KB HDC SRAM.
+//!
+//! The DVFS mapping between supply voltage and clock frequency follows the
+//! measured range linearly (the paper reports the two endpoints); energy
+//! scaling lives in `crate::energy`.
+
+/// Static chip parameters (constants from the paper's summary table).
+#[derive(Clone, Debug)]
+pub struct ChipConfig {
+    pub technology_nm: u32,
+    pub die_area_mm2: f64,
+    pub sram_wcfe_kb: u32,
+    pub sram_hdc_kb: u32,
+    pub vmin: f64,
+    pub vmax: f64,
+    pub fmin_mhz: f64,
+    pub fmax_mhz: f64,
+    pub max_classes: usize,
+    /// WCFE PE array geometry (Fig.7c): 4 x 16 PEs, 4 register files + 1 MAC each.
+    pub pe_rows: usize,
+    pub pe_cols: usize,
+    pub rf_per_pe: usize,
+    /// HD search fetch width: 64-bit CHV slice per cycle (Fig.6).
+    pub search_bits_per_cycle: usize,
+    /// Encoder datapath (Fig.5): 8-bank 1KB weight buffer, 256 b weights per
+    /// cycle, 32 adder trees of 8:1.
+    pub enc_weight_buffer_kb: usize,
+    pub enc_weight_banks: usize,
+    pub enc_weight_bits_per_cycle: usize,
+    pub enc_adder_trees: usize,
+    pub enc_adder_fan_in: usize,
+}
+
+impl Default for ChipConfig {
+    fn default() -> Self {
+        ChipConfig {
+            technology_nm: 40,
+            die_area_mm2: 14.4,
+            sram_wcfe_kb: 168,
+            sram_hdc_kb: 32,
+            vmin: 0.7,
+            vmax: 1.2,
+            fmin_mhz: 50.0,
+            fmax_mhz: 250.0,
+            max_classes: 128,
+            pe_rows: 4,
+            pe_cols: 16,
+            rf_per_pe: 4,
+            search_bits_per_cycle: 64,
+            enc_weight_buffer_kb: 1,
+            enc_weight_banks: 8,
+            enc_weight_bits_per_cycle: 256,
+            enc_adder_trees: 32,
+            enc_adder_fan_in: 8,
+        }
+    }
+}
+
+/// One DVFS operating point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OperatingPoint {
+    pub voltage: f64,
+    pub freq_mhz: f64,
+}
+
+impl ChipConfig {
+    /// Linear V->f mapping across the measured envelope.
+    pub fn point_at_voltage(&self, v: f64) -> OperatingPoint {
+        let v = v.clamp(self.vmin, self.vmax);
+        let t = (v - self.vmin) / (self.vmax - self.vmin);
+        OperatingPoint {
+            voltage: v,
+            freq_mhz: self.fmin_mhz + t * (self.fmax_mhz - self.fmin_mhz),
+        }
+    }
+
+    /// Sweep the DVFS envelope in `n` steps (used by the Fig.10 bench).
+    pub fn dvfs_sweep(&self, n: usize) -> Vec<OperatingPoint> {
+        assert!(n >= 2);
+        (0..n)
+            .map(|i| {
+                let v = self.vmin + (self.vmax - self.vmin) * i as f64 / (n - 1) as f64;
+                self.point_at_voltage(v)
+            })
+            .collect()
+    }
+
+    /// Total PE count of the WCFE array.
+    pub fn pe_count(&self) -> usize {
+        self.pe_rows * self.pe_cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints_match_paper() {
+        let c = ChipConfig::default();
+        let lo = c.point_at_voltage(0.7);
+        let hi = c.point_at_voltage(1.2);
+        assert_eq!(lo.freq_mhz, 50.0);
+        assert_eq!(hi.freq_mhz, 250.0);
+        assert_eq!(c.pe_count(), 64);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let c = ChipConfig::default();
+        assert_eq!(c.point_at_voltage(0.2).voltage, 0.7);
+        assert_eq!(c.point_at_voltage(2.0).voltage, 1.2);
+    }
+
+    #[test]
+    fn sweep_monotone() {
+        let c = ChipConfig::default();
+        let pts = c.dvfs_sweep(6);
+        assert_eq!(pts.len(), 6);
+        for w in pts.windows(2) {
+            assert!(w[1].voltage > w[0].voltage);
+            assert!(w[1].freq_mhz > w[0].freq_mhz);
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Runtime configuration: HD operating points (parsed from the artifact
+//! manifest, mirroring `python/compile/config.py`) and the chip's physical
+//! operating envelope (Fig.11 summary table).
+
+pub mod chip;
+
+pub use chip::{ChipConfig, OperatingPoint};
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+
+/// One HD operating point: the Kronecker factorization geometry, progressive
+/// search segmentation, and quantization scales calibrated at build time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HdConfig {
+    pub name: String,
+    pub f1: usize,
+    pub f2: usize,
+    pub d1: usize,
+    pub d2: usize,
+    pub segments: usize,
+    pub classes: usize,
+    pub qbits: u8,
+    /// feature quantization step (f32 feature -> INT8 value)
+    pub scale_x: f32,
+    /// QHV quantization step (accumulator -> INT`qbits` value)
+    pub scale_q: f32,
+    /// expected per-element |q_i - q_j| between independent QHVs (feeds the
+    /// progressive-search confidence threshold)
+    pub mean_absdiff: f32,
+    /// batch sizes with emitted executables
+    pub batches: Vec<usize>,
+    /// normal-mode (image -> WCFE) config?
+    pub image: bool,
+}
+
+impl HdConfig {
+    /// Feature dimension F = f1 * f2 (chip supports 8-1024).
+    pub fn features(&self) -> usize {
+        self.f1 * self.f2
+    }
+
+    /// HDC dimension D = d1 * d2 (chip supports 1024-8192).
+    pub fn dim(&self) -> usize {
+        self.d1 * self.d2
+    }
+
+    /// Rows of A per progressive-search segment.
+    pub fn seg_rows(&self) -> usize {
+        self.d1 / self.segments
+    }
+
+    /// QHV elements per progressive-search segment.
+    pub fn seg_len(&self) -> usize {
+        self.seg_rows() * self.d2
+    }
+
+    pub fn from_manifest(name: &str, meta: &Json) -> Result<HdConfig> {
+        let u = |k: &str| -> Result<usize> {
+            meta.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("config {name}: missing field {k}"))
+        };
+        let f = |k: &str| -> Result<f64> {
+            meta.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("config {name}: missing field {k}"))
+        };
+        let cfg = HdConfig {
+            name: name.to_string(),
+            f1: u("f1")?,
+            f2: u("f2")?,
+            d1: u("d1")?,
+            d2: u("d2")?,
+            segments: u("segments")?,
+            classes: u("classes")?,
+            qbits: u("qbits")? as u8,
+            scale_x: f("scale_x")? as f32,
+            scale_q: f("scale_q")? as f32,
+            mean_absdiff: f("mean_absdiff")? as f32,
+            batches: meta
+                .get("batches")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_else(|| vec![1]),
+            image: matches!(meta.get("image"), Some(Json::Bool(true))),
+        };
+        cfg.validate().context(format!("config {name}"))?;
+        Ok(cfg)
+    }
+
+    /// Chip envelope checks (Fig.11 summary): F in 8..=1024, D in 1024..=8192,
+    /// <=128 classes, segments divide d1.
+    pub fn validate(&self) -> Result<()> {
+        let f = self.features();
+        let d = self.dim();
+        if !(8..=1024).contains(&f) {
+            return Err(anyhow!("feature dim {f} outside chip range 8-1024"));
+        }
+        if !(1024..=8192).contains(&d) {
+            return Err(anyhow!("HDC dim {d} outside chip range 1024-8192"));
+        }
+        if self.classes == 0 || self.classes > 128 {
+            return Err(anyhow!("classes {} outside chip range 1-128", self.classes));
+        }
+        if self.segments == 0 || self.d1 % self.segments != 0 {
+            return Err(anyhow!(
+                "segments {} must divide d1 {}",
+                self.segments,
+                self.d1
+            ));
+        }
+        if !(1..=8).contains(&self.qbits) {
+            return Err(anyhow!("qbits {} outside INT1-8", self.qbits));
+        }
+        Ok(())
+    }
+
+    /// A test/bench config without manifest round-trip.
+    pub fn synthetic(name: &str, f1: usize, f2: usize, d1: usize, d2: usize,
+                     segments: usize, classes: usize) -> HdConfig {
+        HdConfig {
+            name: name.into(),
+            f1,
+            f2,
+            d1,
+            d2,
+            segments,
+            classes,
+            qbits: 8,
+            scale_x: 1.0,
+            scale_q: 8.0,
+            mean_absdiff: 40.0,
+            batches: vec![1],
+            image: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_dims() {
+        let c = HdConfig::synthetic("t", 8, 8, 32, 32, 8, 10);
+        assert_eq!(c.features(), 64);
+        assert_eq!(c.dim(), 1024);
+        assert_eq!(c.seg_rows(), 4);
+        assert_eq!(c.seg_len(), 128);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_envelope() {
+        let mut c = HdConfig::synthetic("t", 8, 8, 32, 32, 8, 10);
+        c.classes = 200;
+        assert!(c.validate().is_err());
+        let mut c2 = HdConfig::synthetic("t", 8, 8, 32, 32, 7, 10);
+        c2.segments = 7; // does not divide 32
+        assert!(c2.validate().is_err());
+        let c3 = HdConfig::synthetic("t", 2, 2, 32, 32, 8, 10); // F = 4 < 8
+        assert!(c3.validate().is_err());
+    }
+
+    #[test]
+    fn from_manifest_roundtrip() {
+        let meta = Json::parse(
+            r#"{"f1": 8, "f2": 8, "d1": 32, "d2": 32, "segments": 8,
+                "classes": 10, "qbits": 8, "scale_x": 0.5, "scale_q": 3.0,
+                "mean_absdiff": 40.5, "batches": [1, 8], "image": false}"#,
+        )
+        .unwrap();
+        let c = HdConfig::from_manifest("tiny", &meta).unwrap();
+        assert_eq!(c.batches, vec![1, 8]);
+        assert_eq!(c.scale_q, 3.0);
+        assert!(!c.image);
+    }
+}

@@ -1,0 +1,118 @@
+//! Dynamic batcher: accumulates queued requests up to the lowered batch
+//! size or a deadline, whichever first (the standard serving trade-off —
+//! the b8 executables amortize dispatch overhead across the batch).
+
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Generic deadline batcher over any item type.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    pub policy: BatchPolicy,
+    pending: Vec<T>,
+    oldest: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Batcher<T> {
+        Batcher { policy, pending: Vec::new(), oldest: None }
+    }
+
+    pub fn push(&mut self, item: T) {
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending.push(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Should the current batch be dispatched now?
+    pub fn ready(&self) -> bool {
+        if self.pending.is_empty() {
+            return false;
+        }
+        self.pending.len() >= self.policy.max_batch
+            || self.oldest.map(|t| t.elapsed() >= self.policy.max_wait).unwrap_or(false)
+    }
+
+    /// Time until the deadline fires (for blocking waits); None if empty.
+    pub fn time_to_deadline(&self) -> Option<Duration> {
+        self.oldest
+            .map(|t| self.policy.max_wait.saturating_sub(t.elapsed()))
+    }
+
+    /// Take up to max_batch items.
+    pub fn take(&mut self) -> Vec<T> {
+        let n = self.pending.len().min(self.policy.max_batch);
+        let batch: Vec<T> = self.pending.drain(..n).collect();
+        self.oldest = if self.pending.is_empty() {
+            None
+        } else {
+            Some(Instant::now())
+        };
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_to_max_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(60) });
+        b.push(1);
+        b.push(2);
+        assert!(!b.ready());
+        b.push(3);
+        assert!(b.ready());
+        assert_eq!(b.take(), vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_fires() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) });
+        b.push(1);
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.ready());
+        assert_eq!(b.take(), vec![1]);
+    }
+
+    #[test]
+    fn take_caps_at_max_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(60) });
+        for i in 0..5 {
+            b.push(i);
+        }
+        assert_eq!(b.take(), vec![0, 1]);
+        assert_eq!(b.len(), 3);
+        assert!(b.ready()); // still >= max_batch
+    }
+
+    #[test]
+    fn empty_never_ready() {
+        let b: Batcher<u32> = Batcher::new(BatchPolicy::default());
+        assert!(!b.ready());
+        assert!(b.time_to_deadline().is_none());
+    }
+}

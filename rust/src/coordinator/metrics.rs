@@ -1,0 +1,87 @@
+//! Serving metrics: latency percentiles, throughput, progressive-search
+//! savings — what the serve example and Fig.4/Fig.10 benches report.
+
+use crate::util::stats::percentile_sorted;
+
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub latencies_s: Vec<f64>,
+    pub segments_used: Vec<usize>,
+    pub early_exits: u64,
+    pub wcfe_runs: u64,
+    pub errors: u64,
+    pub total: u64,
+    pub wall_s: f64,
+}
+
+impl ServeMetrics {
+    pub fn record(&mut self, latency_s: f64, segments: usize, early: bool, wcfe: bool) {
+        self.latencies_s.push(latency_s);
+        self.segments_used.push(segments);
+        self.early_exits += u64::from(early);
+        self.wcfe_runs += u64::from(wcfe);
+        self.total += 1;
+    }
+
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+        self.total += 1;
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.total as f64 / self.wall_s
+    }
+
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        if self.latencies_s.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_s.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile_sorted(&v, p)
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        if self.latencies_s.is_empty() {
+            return 0.0;
+        }
+        self.latencies_s.iter().sum::<f64>() / self.latencies_s.len() as f64
+    }
+
+    pub fn mean_segments(&self) -> f64 {
+        if self.segments_used.is_empty() {
+            return 0.0;
+        }
+        self.segments_used.iter().sum::<usize>() as f64 / self.segments_used.len() as f64
+    }
+
+    /// Fig.4 complexity-reduction metric over the served traffic.
+    pub fn complexity_reduction(&self, total_segments: usize) -> f64 {
+        1.0 - self.mean_segments() / total_segments as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let mut m = ServeMetrics::default();
+        m.record(0.010, 4, true, false);
+        m.record(0.020, 8, false, true);
+        m.record_error();
+        m.wall_s = 1.0;
+        assert_eq!(m.total, 3);
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.early_exits, 1);
+        assert!((m.mean_latency() - 0.015).abs() < 1e-12);
+        assert!((m.mean_segments() - 6.0).abs() < 1e-12);
+        assert!((m.complexity_reduction(8) - 0.25).abs() < 1e-12);
+        assert_eq!(m.throughput_rps(), 3.0);
+        assert!(m.latency_percentile(95.0) >= m.latency_percentile(50.0));
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator: the chip's system-software layer — request routing
+//! (dual-mode), dynamic batching, the progressive-search control loop, and
+//! serving metrics. PJRT handles are not Send, so a dedicated executor
+//! thread owns the engine/backends (leader/worker pattern) and talks to
+//! clients over channels.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use metrics::ServeMetrics;
+pub use request::{Payload, Request, Response};
+pub use router::Router;
+pub use server::{BackendSpec, Coordinator, CoordinatorOptions};

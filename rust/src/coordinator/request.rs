@@ -1,0 +1,50 @@
+//! Request/response types crossing the client <-> executor channel.
+
+use std::time::Instant;
+
+/// What the client submits.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// pre-extracted features (bypass mode candidates)
+    Features(Vec<f32>),
+    /// raw image (h*w*c in [0,1]) — requires the WCFE (normal mode)
+    Image(Vec<f32>),
+    /// labeled sample: learn instead of classify
+    Learn(Vec<f32>, usize),
+}
+
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub payload: Payload,
+    pub submitted: Instant,
+    /// reply channel (one-shot)
+    pub reply: std::sync::mpsc::SyncSender<Response>,
+}
+
+/// What the executor returns.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub class: Option<usize>,
+    pub segments_used: usize,
+    pub early_exit: bool,
+    /// whether the WCFE ran (normal mode)
+    pub used_wcfe: bool,
+    pub latency_s: f64,
+    pub error: Option<String>,
+}
+
+impl Response {
+    pub fn error(id: u64, msg: String) -> Response {
+        Response {
+            id,
+            class: None,
+            segments_used: 0,
+            early_exit: false,
+            used_wcfe: false,
+            latency_s: 0.0,
+            error: Some(msg),
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! Dual-mode router (Fig.4): decides per request whether the WCFE runs
+//! (normal mode) or is bypassed. The chip's rule is payload-driven — raw
+//! images need feature extraction, pre-extracted features go straight to
+//! the HD module through the CDC FIFO — with an optional force override
+//! (the host can pin a mode for a deployment).
+
+use crate::coordinator::request::Payload;
+use crate::sim::Mode;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub enum ModePolicy {
+    /// payload-driven (images -> normal, features -> bypass)
+    #[default]
+    Auto,
+    ForceBypass,
+    ForceNormal,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Router {
+    pub policy: ModePolicy,
+}
+
+impl Router {
+    pub fn route(&self, payload: &Payload) -> Mode {
+        match (self.policy, payload) {
+            (ModePolicy::ForceBypass, _) => Mode::Bypass,
+            (ModePolicy::ForceNormal, _) => Mode::Normal,
+            (ModePolicy::Auto, Payload::Image(_)) => Mode::Normal,
+            (ModePolicy::Auto, _) => Mode::Bypass,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_routes_by_payload() {
+        let r = Router::default();
+        assert_eq!(r.route(&Payload::Features(vec![0.0])), Mode::Bypass);
+        assert_eq!(r.route(&Payload::Image(vec![0.0])), Mode::Normal);
+        assert_eq!(r.route(&Payload::Learn(vec![0.0], 1)), Mode::Bypass);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let rb = Router { policy: ModePolicy::ForceBypass };
+        assert_eq!(rb.route(&Payload::Image(vec![0.0])), Mode::Bypass);
+        let rn = Router { policy: ModePolicy::ForceNormal };
+        assert_eq!(rn.route(&Payload::Features(vec![0.0])), Mode::Normal);
+    }
+}

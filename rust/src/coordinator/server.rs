@@ -1,0 +1,287 @@
+//! The coordinator proper: a dedicated executor thread owns the (non-Send)
+//! PJRT engine + HD backend and serves requests from an MPSC queue —
+//! the leader/worker shape the chip's host driver uses.
+//!
+//! Request path (per Fig.4): route (dual-mode) -> [WCFE via AOT artifact]
+//! -> quantize -> progressive encode/search loop -> reply. `Learn` payloads
+//! go through the gradient-free training path instead.
+
+use crate::config::HdConfig;
+use crate::coordinator::request::{Payload, Request, Response};
+use crate::coordinator::router::{ModePolicy, Router};
+use crate::hdc::encoder::SoftwareEncoder;
+use crate::hdc::{HdClassifier, ProgressiveSearch};
+use crate::runtime::{Engine, PjrtBackend};
+use crate::sim::Mode;
+use crate::Result;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Which backend the executor thread builds.
+#[derive(Clone, Debug)]
+pub enum BackendSpec {
+    /// pure-Rust encoder (no artifacts needed)
+    Software { cfg: HdConfig, seed: u64 },
+    /// PJRT over the artifact directory
+    Pjrt { artifacts: std::path::PathBuf, config: String },
+}
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorOptions {
+    pub backend: BackendSpec,
+    pub tau: f32,
+    pub min_segments: usize,
+    pub mode_policy: ModePolicy,
+    pub queue_depth: usize,
+}
+
+impl CoordinatorOptions {
+    pub fn software(cfg: HdConfig) -> CoordinatorOptions {
+        CoordinatorOptions {
+            backend: BackendSpec::Software { cfg, seed: 7 },
+            tau: 0.5,
+            min_segments: 1,
+            mode_policy: ModePolicy::Auto,
+            queue_depth: 256,
+        }
+    }
+}
+
+/// Client handle: submit requests, join on drop.
+pub struct Coordinator {
+    tx: Option<mpsc::SyncSender<Request>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Coordinator {
+    pub fn start(opts: CoordinatorOptions) -> Result<Coordinator> {
+        let (tx, rx) = mpsc::sync_channel::<Request>(opts.queue_depth);
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<std::result::Result<(), String>>(1);
+        let worker = std::thread::Builder::new()
+            .name("clo-hdnn-executor".into())
+            .spawn(move || executor_main(opts, rx, ready_tx))?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => anyhow::bail!("executor failed to start: {e}"),
+            Err(_) => anyhow::bail!("executor thread died during startup"),
+        }
+        Ok(Coordinator {
+            tx: Some(tx),
+            worker: Some(worker),
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        })
+    }
+
+    /// Submit and wait (simple synchronous client call).
+    pub fn call(&self, payload: Payload) -> Result<Response> {
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.tx
+            .as_ref()
+            .expect("coordinator stopped")
+            .send(Request { id, payload, submitted: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("executor gone"))?;
+        Ok(reply_rx.recv()?)
+    }
+
+    /// Submit without waiting; returns the receiver.
+    pub fn submit(&self, payload: Payload) -> Result<mpsc::Receiver<Response>> {
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.tx
+            .as_ref()
+            .expect("coordinator stopped")
+            .send(Request { id, payload, submitted: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("executor gone"))?;
+        Ok(reply_rx)
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue; executor drains + exits
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Executor state living on the worker thread.
+struct Executor {
+    classifier: HdClassifier,
+    router: Router,
+    /// WCFE forward executable (normal mode), if artifacts provide it
+    wcfe: Option<std::rc::Rc<crate::runtime::Executable>>,
+    image_elems: usize,
+}
+
+fn executor_main(
+    opts: CoordinatorOptions,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::SyncSender<std::result::Result<(), String>>,
+) {
+    let built = build_executor(&opts);
+    let mut ex = match built {
+        Ok(ex) => {
+            let _ = ready.send(Ok(()));
+            ex
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        let resp = ex.handle(&req);
+        let _ = req.reply.send(resp.unwrap_or_else(|e| Response::error(req.id, format!("{e:#}"))));
+    }
+}
+
+fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
+    let policy = ProgressiveSearch { tau: opts.tau, min_segments: opts.min_segments };
+    match &opts.backend {
+        BackendSpec::Software { cfg, seed } => Ok(Executor {
+            classifier: HdClassifier::new(
+                Box::new(SoftwareEncoder::random(cfg.clone(), *seed)),
+                policy,
+            ),
+            router: Router { policy: opts.mode_policy },
+            wcfe: None,
+            image_elems: 0,
+        }),
+        BackendSpec::Pjrt { artifacts, config } => {
+            let mut engine = Engine::load(artifacts)?;
+            let backend = PjrtBackend::new(&mut engine, config, 1)?;
+            let (wcfe, image_elems) = match engine.manifest.wcfe.clone() {
+                Some(meta) if engine.manifest.config(config)?.image => {
+                    let exe = engine.executable("wcfe_fwd_b1")?;
+                    (Some(exe), meta.image_hw * meta.image_hw * meta.image_c)
+                }
+                _ => (None, 0),
+            };
+            Ok(Executor {
+                classifier: HdClassifier::new(Box::new(backend), policy),
+                router: Router { policy: opts.mode_policy },
+                wcfe,
+                image_elems,
+            })
+        }
+    }
+}
+
+impl Executor {
+    fn extract_features(&mut self, img: &[f32]) -> Result<Vec<f32>> {
+        let exe = self
+            .wcfe
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("normal mode needs WCFE artifacts"))?;
+        if img.len() != self.image_elems {
+            anyhow::bail!("image has {} elems, expected {}", img.len(), self.image_elems);
+        }
+        exe.run(&[crate::runtime::Arg::F32(img, &[1, 32, 32, 3])])
+    }
+
+    fn handle(&mut self, req: &Request) -> Result<Response> {
+        let t0 = Instant::now();
+        match &req.payload {
+            Payload::Learn(x, class) => {
+                self.classifier.learn(x, *class)?;
+                Ok(Response {
+                    id: req.id,
+                    class: Some(*class),
+                    segments_used: self.classifier.cfg().segments,
+                    early_exit: false,
+                    used_wcfe: false,
+                    latency_s: t0.elapsed().as_secs_f64(),
+                    error: None,
+                })
+            }
+            payload => {
+                let mode = self.router.route(payload);
+                let (features, used_wcfe) = match (payload, mode) {
+                    (Payload::Image(img), Mode::Normal) => (self.extract_features(img)?, true),
+                    (Payload::Image(img), Mode::Bypass) => (img.clone(), false),
+                    (Payload::Features(x), Mode::Normal) => (x.clone(), false),
+                    (Payload::Features(x), Mode::Bypass) => (x.clone(), false),
+                    (Payload::Learn(..), _) => unreachable!(),
+                };
+                let r = self.classifier.classify(&features)?;
+                Ok(Response {
+                    id: req.id,
+                    class: Some(r.class),
+                    segments_used: r.segments_used,
+                    early_exit: r.early_exit,
+                    used_wcfe,
+                    latency_s: t0.elapsed().as_secs_f64(),
+                    error: None,
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn proto_and_coordinator() -> (Coordinator, Vec<Vec<f32>>) {
+        let cfg = HdConfig::synthetic("t", 8, 8, 32, 32, 8, 4);
+        let coord = Coordinator::start(CoordinatorOptions::software(cfg.clone())).unwrap();
+        let mut rng = Rng::new(91);
+        let protos: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..cfg.features()).map(|_| rng.normal_f32() * 40.0).collect())
+            .collect();
+        (coord, protos)
+    }
+
+    #[test]
+    fn learn_then_classify_through_channels() {
+        let (coord, protos) = proto_and_coordinator();
+        for (c, p) in protos.iter().enumerate() {
+            for _ in 0..3 {
+                let r = coord.call(Payload::Learn(p.clone(), c)).unwrap();
+                assert!(r.error.is_none());
+            }
+        }
+        for (c, p) in protos.iter().enumerate() {
+            let r = coord.call(Payload::Features(p.clone())).unwrap();
+            assert_eq!(r.class, Some(c));
+            assert!(r.latency_s > 0.0);
+            assert!(!r.used_wcfe);
+        }
+    }
+
+    #[test]
+    fn async_submission_order_independent() {
+        let (coord, protos) = proto_and_coordinator();
+        for (c, p) in protos.iter().enumerate() {
+            coord.call(Payload::Learn(p.clone(), c)).unwrap();
+        }
+        let rxs: Vec<_> = protos
+            .iter()
+            .map(|p| coord.submit(Payload::Features(p.clone())).unwrap())
+            .collect();
+        for (c, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().class, Some(c));
+        }
+    }
+
+    #[test]
+    fn image_payload_without_wcfe_errors_cleanly() {
+        let (coord, _) = proto_and_coordinator();
+        let r = coord.call(Payload::Image(vec![0.0; 3072])).unwrap();
+        assert!(r.error.is_some());
+    }
+
+    #[test]
+    fn drop_joins_executor() {
+        let (coord, _) = proto_and_coordinator();
+        drop(coord); // must not hang
+    }
+}

@@ -1,0 +1,181 @@
+//! Reader for the "CLOD" dataset container written by
+//! `python/compile/datasets.py` (see that module for the layout).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// An in-memory labeled dataset. Features are f32 (u8 image payloads are
+/// rescaled to [0,1] on load, matching the Python reader).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<u16>,
+    pub n: usize,
+    pub dim: usize,
+    pub classes: usize,
+    /// (h, w, c) when the payload is image shaped.
+    pub image: Option<(usize, usize, usize)>,
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+impl Dataset {
+    pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open dataset {}", path.display()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"CLOD" {
+            bail!("{}: bad magic {:?}", path.display(), magic);
+        }
+        let version = read_u32(&mut f)?;
+        if version != 1 {
+            bail!("{}: unsupported version {version}", path.display());
+        }
+        let dtype = read_u32(&mut f)?;
+        let n = read_u32(&mut f)? as usize;
+        let dim = read_u32(&mut f)? as usize;
+        let classes = read_u32(&mut f)? as usize;
+        let h = read_u32(&mut f)? as usize;
+        let w = read_u32(&mut f)? as usize;
+        let c = read_u32(&mut f)? as usize;
+
+        let mut ybytes = vec![0u8; 2 * n];
+        f.read_exact(&mut ybytes)?;
+        let y: Vec<u16> = ybytes
+            .chunks_exact(2)
+            .map(|b| u16::from_le_bytes([b[0], b[1]]))
+            .collect();
+
+        let x = match dtype {
+            0 => {
+                let mut buf = vec![0u8; 4 * n * dim];
+                f.read_exact(&mut buf)?;
+                buf.chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect()
+            }
+            1 => {
+                let mut buf = vec![0u8; n * dim];
+                f.read_exact(&mut buf)?;
+                buf.iter().map(|&v| v as f32 / 255.0).collect()
+            }
+            other => bail!("{}: unknown dtype {other}", path.display()),
+        };
+        if let Some(&bad) = y.iter().find(|&&l| l as usize >= classes) {
+            bail!("{}: label {bad} >= classes {classes}", path.display());
+        }
+        Ok(Dataset {
+            x,
+            y,
+            n,
+            dim,
+            classes,
+            image: if h > 0 { Some((h, w, c)) } else { None },
+        })
+    }
+
+    /// Row view of sample `i`.
+    pub fn sample(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn label(&self, i: usize) -> usize {
+        self.y[i] as usize
+    }
+
+    /// Indices belonging to the given set of classes (CL task construction).
+    pub fn indices_of_classes(&self, classes: &[usize]) -> Vec<usize> {
+        (0..self.n)
+            .filter(|&i| classes.contains(&(self.y[i] as usize)))
+            .collect()
+    }
+
+    /// Per-class sample counts.
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.classes];
+        for &l in &self.y {
+            h[l as usize] += 1;
+        }
+        h
+    }
+
+    /// Construct from raw parts (tests, synthetic workloads).
+    pub fn from_parts(x: Vec<f32>, y: Vec<u16>, dim: usize, classes: usize) -> Result<Dataset> {
+        if x.len() != y.len() * dim {
+            return Err(anyhow!(
+                "x len {} != n {} * dim {dim}",
+                x.len(),
+                y.len()
+            ));
+        }
+        Ok(Dataset { n: y.len(), x, y, dim, classes, image: None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_f32_dataset(path: &Path, x: &[f32], y: &[u16], dim: u32, classes: u32) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"CLOD").unwrap();
+        for v in [1u32, 0, y.len() as u32, dim, classes, 0, 0, 0] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        for l in y {
+            f.write_all(&l.to_le_bytes()).unwrap();
+        }
+        for v in x {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn roundtrip_f32() {
+        let dir = std::env::temp_dir().join("clo_hdnn_test_ds");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        let x = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let y = vec![0u16, 2];
+        write_f32_dataset(&p, &x, &y, 3, 3);
+        let ds = Dataset::load(&p).unwrap();
+        assert_eq!(ds.n, 2);
+        assert_eq!(ds.dim, 3);
+        assert_eq!(ds.sample(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(ds.label(1), 2);
+        assert_eq!(ds.class_histogram(), vec![1, 0, 1]);
+        assert_eq!(ds.indices_of_classes(&[2]), vec![1]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("clo_hdnn_test_ds2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOPE00000000000000000000000000000000").unwrap();
+        assert!(Dataset::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_label_out_of_range() {
+        let dir = std::env::temp_dir().join("clo_hdnn_test_ds3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        write_f32_dataset(&p, &[0.0, 0.0], &[5, 0], 1, 2);
+        assert!(Dataset::load(&p).is_err());
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        assert!(Dataset::from_parts(vec![0.0; 6], vec![0, 1], 3, 2).is_ok());
+        assert!(Dataset::from_parts(vec![0.0; 5], vec![0, 1], 3, 2).is_err());
+    }
+}

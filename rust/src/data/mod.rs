@@ -1,0 +1,10 @@
+//! Dataset + named-tensor containers (shared binary formats with the Python
+//! build pipeline) and continual-learning task streams.
+
+pub mod dataset;
+pub mod stream;
+pub mod tensors;
+
+pub use dataset::Dataset;
+pub use stream::{Task, TaskStream};
+pub use tensors::TensorFile;

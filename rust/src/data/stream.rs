@@ -1,0 +1,120 @@
+//! Continual-learning task streams (Fig.1/Fig.9 protocol).
+//!
+//! Task-incremental: the class set is partitioned into `n_tasks` groups that
+//! arrive sequentially; each task exposes only its own classes' training
+//! samples, while evaluation after task t covers ALL classes seen so far
+//! (that is where catastrophic forgetting shows up for gradient learners).
+
+use crate::data::Dataset;
+use crate::util::Rng;
+
+/// One task: the classes it introduces + its training sample indices.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: usize,
+    pub classes: Vec<usize>,
+    pub train_indices: Vec<usize>,
+}
+
+/// Partition of a dataset into an ordered task sequence.
+#[derive(Clone, Debug)]
+pub struct TaskStream {
+    pub tasks: Vec<Task>,
+}
+
+impl TaskStream {
+    /// Split `train.classes` into `n_tasks` contiguous groups after a seeded
+    /// shuffle of class order (deterministic per seed).
+    pub fn class_incremental(train: &Dataset, n_tasks: usize, seed: u64) -> TaskStream {
+        assert!(n_tasks >= 1 && n_tasks <= train.classes);
+        let mut rng = Rng::new(seed);
+        let order = rng.permutation(train.classes);
+        let base = train.classes / n_tasks;
+        let extra = train.classes % n_tasks;
+        let mut tasks = Vec::with_capacity(n_tasks);
+        let mut cursor = 0usize;
+        for id in 0..n_tasks {
+            let take = base + usize::from(id < extra);
+            let classes: Vec<usize> = order[cursor..cursor + take].to_vec();
+            cursor += take;
+            let mut train_indices = train.indices_of_classes(&classes);
+            rng.shuffle(&mut train_indices);
+            tasks.push(Task { id, classes, train_indices });
+        }
+        TaskStream { tasks }
+    }
+
+    /// Classes seen up to and including task `t`.
+    pub fn seen_classes(&self, t: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self.tasks[..=t]
+            .iter()
+            .flat_map(|task| task.classes.iter().copied())
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_dataset(classes: usize, per_class: usize) -> Dataset {
+        let n = classes * per_class;
+        let y: Vec<u16> = (0..n).map(|i| (i % classes) as u16).collect();
+        Dataset::from_parts(vec![0.0; n * 2], y, 2, classes).unwrap()
+    }
+
+    #[test]
+    fn partitions_all_classes_exactly_once() {
+        let ds = toy_dataset(10, 5);
+        let ts = TaskStream::class_incremental(&ds, 4, 1);
+        assert_eq!(ts.len(), 4);
+        let mut all: Vec<usize> = ts.tasks.iter().flat_map(|t| t.classes.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+        // sizes 3,3,2,2
+        let sizes: Vec<usize> = ts.tasks.iter().map(|t| t.classes.len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn task_indices_only_contain_task_classes() {
+        let ds = toy_dataset(6, 4);
+        let ts = TaskStream::class_incremental(&ds, 3, 2);
+        for task in &ts.tasks {
+            for &i in &task.train_indices {
+                assert!(task.classes.contains(&ds.label(i)));
+            }
+            assert_eq!(task.train_indices.len(), task.classes.len() * 4);
+        }
+    }
+
+    #[test]
+    fn seen_classes_accumulates() {
+        let ds = toy_dataset(6, 2);
+        let ts = TaskStream::class_incremental(&ds, 3, 3);
+        assert_eq!(ts.seen_classes(0).len(), 2);
+        assert_eq!(ts.seen_classes(1).len(), 4);
+        assert_eq!(ts.seen_classes(2), (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let ds = toy_dataset(8, 3);
+        let a = TaskStream::class_incremental(&ds, 4, 7);
+        let b = TaskStream::class_incremental(&ds, 4, 7);
+        for (ta, tb) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(ta.classes, tb.classes);
+            assert_eq!(ta.train_indices, tb.train_indices);
+        }
+    }
+}

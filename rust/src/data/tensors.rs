@@ -1,0 +1,183 @@
+//! Reader for the "CLOW" named-tensor container written by
+//! `python/compile/weights_io.py` (Kronecker factors, WCFE weights/codebook,
+//! golden test fixtures).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { dims, .. } | Tensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TensorFile {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl TensorFile {
+    pub fn load(path: impl AsRef<Path>) -> Result<TensorFile> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open tensor file {}", path.display()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"CLOW" {
+            bail!("{}: bad magic", path.display());
+        }
+        let mut hdr = [0u8; 8];
+        f.read_exact(&mut hdr)?;
+        let version = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+        let count = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        if version != 1 {
+            bail!("{}: unsupported version {version}", path.display());
+        }
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let mut nlen = [0u8; 2];
+            f.read_exact(&mut nlen)?;
+            let mut name = vec![0u8; u16::from_le_bytes(nlen) as usize];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            let mut meta = [0u8; 5];
+            f.read_exact(&mut meta)?;
+            let dtype = meta[0];
+            let ndim = u32::from_le_bytes(meta[1..5].try_into().unwrap()) as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let mut d = [0u8; 4];
+                f.read_exact(&mut d)?;
+                dims.push(u32::from_le_bytes(d) as usize);
+            }
+            let count: usize = dims.iter().product::<usize>().max(if ndim == 0 { 1 } else { 0 });
+            let mut buf = vec![0u8; 4 * count];
+            f.read_exact(&mut buf)?;
+            let tensor = match dtype {
+                0 => Tensor::F32 {
+                    dims,
+                    data: buf
+                        .chunks_exact(4)
+                        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                        .collect(),
+                },
+                1 => Tensor::I32 {
+                    dims,
+                    data: buf
+                        .chunks_exact(4)
+                        .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+                        .collect(),
+                },
+                other => bail!("{}: unknown dtype {other}", path.display()),
+            };
+            tensors.insert(name, tensor);
+        }
+        Ok(TensorFile { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("missing tensor {name}"))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<&[f32]> {
+        self.get(name)?.as_f32()
+    }
+
+    pub fn i32(&self, name: &str) -> Result<&[i32]> {
+        self.get(name)?.as_i32()
+    }
+
+    /// f32 tensor with shape check.
+    pub fn f32_shaped(&self, name: &str, dims: &[usize]) -> Result<&[f32]> {
+        let t = self.get(name)?;
+        if t.dims() != dims {
+            bail!("tensor {name}: dims {:?} != expected {:?}", t.dims(), dims);
+        }
+        t.as_f32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_file(path: &Path) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"CLOW").unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        // "m" f32 (2,2)
+        f.write_all(&1u16.to_le_bytes()).unwrap();
+        f.write_all(b"m").unwrap();
+        f.write_all(&[0u8]).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        // "i" i32 (3,)
+        f.write_all(&1u16.to_le_bytes()).unwrap();
+        f.write_all(b"i").unwrap();
+        f.write_all(&[1u8]).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        for v in [7i32, -1, 0] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn reads_mixed_tensors() {
+        let dir = std::env::temp_dir().join("clo_hdnn_test_tf");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        write_file(&p);
+        let tf = TensorFile::load(&p).unwrap();
+        assert_eq!(tf.f32("m").unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(tf.get("m").unwrap().dims(), &[2, 2]);
+        assert_eq!(tf.i32("i").unwrap(), &[7, -1, 0]);
+        assert!(tf.f32("i").is_err());
+        assert!(tf.get("absent").is_err());
+        assert!(tf.f32_shaped("m", &[2, 2]).is_ok());
+        assert!(tf.f32_shaped("m", &[4]).is_err());
+    }
+}

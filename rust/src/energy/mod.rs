@@ -1,0 +1,10 @@
+//! DVFS energy/latency model calibrated to the chip's silicon measurements
+//! (Fig.10/Fig.11). See DESIGN.md "Substitutions" — this model stands in
+//! for the 40 nm test chip; its calibration endpoints ARE the paper's
+//! measured numbers, and every relative claim is derived from it.
+
+pub mod model;
+pub mod report;
+
+pub use model::{Domain, EnergyModel};
+pub use report::{comparison_table, SotaChip};

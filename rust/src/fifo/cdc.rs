@@ -1,0 +1,168 @@
+//! Dual-clock (CDC) FIFO model with backpressure.
+//!
+//! Functionally a bounded queue; for timing it models a producer domain at
+//! `w_freq` and consumer domain at `r_freq` (the WCFE and HD modules run on
+//! independent clocks in the 50-250 MHz envelope) with gray-code-sync
+//! latency of 2 consumer cycles per pointer crossing.
+
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+
+#[derive(Clone, Debug, Default)]
+pub struct FifoStats {
+    pub pushed: u64,
+    pub popped: u64,
+    /// push attempts rejected because the FIFO was full (backpressure)
+    pub stalls_full: u64,
+    /// pop attempts rejected because the FIFO was empty
+    pub stalls_empty: u64,
+    pub max_occupancy: usize,
+}
+
+/// Bounded CDC FIFO carrying f32 words (feature values crossing domains).
+#[derive(Clone, Debug)]
+pub struct CdcFifo {
+    q: VecDeque<f32>,
+    pub capacity: usize,
+    pub stats: FifoStats,
+}
+
+impl CdcFifo {
+    pub fn new(capacity: usize) -> CdcFifo {
+        assert!(capacity > 0);
+        CdcFifo { q: VecDeque::with_capacity(capacity), capacity, stats: FifoStats::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.q.len() >= self.capacity
+    }
+
+    /// Push one word; Err = backpressure (caller must retry — nothing is
+    /// dropped silently).
+    pub fn push(&mut self, v: f32) -> Result<()> {
+        if self.is_full() {
+            self.stats.stalls_full += 1;
+            bail!("fifo full (capacity {})", self.capacity);
+        }
+        self.q.push_back(v);
+        self.stats.pushed += 1;
+        self.stats.max_occupancy = self.stats.max_occupancy.max(self.q.len());
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Result<f32> {
+        match self.q.pop_front() {
+            Some(v) => {
+                self.stats.popped += 1;
+                Ok(v)
+            }
+            None => {
+                self.stats.stalls_empty += 1;
+                bail!("fifo empty")
+            }
+        }
+    }
+
+    /// Push a whole slice, returning how many words were accepted.
+    pub fn push_slice(&mut self, vs: &[f32]) -> usize {
+        let mut n = 0;
+        for &v in vs {
+            if self.push(v).is_err() {
+                break;
+            }
+            n += 1;
+        }
+        n
+    }
+
+    /// Pop up to `n` words.
+    pub fn pop_n(&mut self, n: usize) -> Vec<f32> {
+        let take = n.min(self.q.len());
+        (0..take).map(|_| self.pop().unwrap()).collect()
+    }
+
+    /// Cycle cost (in CONSUMER cycles) of transferring `words` across the
+    /// domain crossing: limited by the slower of the two domains, plus the
+    /// 2-cycle gray-code pointer synchronization.
+    pub fn transfer_cycles(&self, words: usize, w_freq_mhz: f64, r_freq_mhz: f64) -> u64 {
+        if words == 0 {
+            return 0;
+        }
+        // producer fills at w_freq, consumer drains at r_freq; the transfer
+        // rate in consumer cycles/word is max(1, r/w).
+        let ratio = (r_freq_mhz / w_freq_mhz).max(1.0);
+        (words as f64 * ratio).ceil() as u64 + 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut f = CdcFifo::new(4);
+        for v in [1.0, 2.0, 3.0] {
+            f.push(v).unwrap();
+        }
+        assert_eq!(f.pop().unwrap(), 1.0);
+        assert_eq!(f.pop().unwrap(), 2.0);
+        assert_eq!(f.pop().unwrap(), 3.0);
+        assert!(f.pop().is_err());
+        assert_eq!(f.stats.stalls_empty, 1);
+    }
+
+    #[test]
+    fn backpressure_on_full() {
+        let mut f = CdcFifo::new(2);
+        assert_eq!(f.push_slice(&[1.0, 2.0, 3.0]), 2);
+        assert!(f.is_full());
+        assert_eq!(f.stats.stalls_full, 1);
+        f.pop().unwrap();
+        assert!(f.push(3.0).is_ok());
+    }
+
+    #[test]
+    fn prop_no_loss_no_duplication() {
+        forall(30, 0xF1F0, |rng| {
+            let cap = 1 + rng.below(64);
+            let mut f = CdcFifo::new(cap);
+            let mut reference = std::collections::VecDeque::new();
+            for _ in 0..200 {
+                if rng.bool(0.55) {
+                    let v = rng.next_u64() as u32 as f32;
+                    if f.push(v).is_ok() {
+                        reference.push_back(v);
+                    }
+                } else if let Ok(v) = f.pop() {
+                    assert_eq!(Some(v), reference.pop_front());
+                }
+                assert_eq!(f.len(), reference.len());
+                assert!(f.len() <= cap);
+            }
+            assert_eq!(f.stats.pushed - f.stats.popped, f.len() as u64);
+        });
+    }
+
+    #[test]
+    fn transfer_cycles_scales_with_domain_ratio() {
+        let f = CdcFifo::new(1024);
+        // same speed domains: 1 cycle/word + 2 sync
+        assert_eq!(f.transfer_cycles(100, 250.0, 250.0), 102);
+        // slow producer (50 MHz) into fast consumer (250 MHz): consumer
+        // waits 5 cycles/word
+        assert_eq!(f.transfer_cycles(100, 50.0, 250.0), 502);
+        // fast producer into slow consumer: consumer-bound, 1 cycle/word
+        assert_eq!(f.transfer_cycles(100, 250.0, 50.0), 102);
+        assert_eq!(f.transfer_cycles(0, 50.0, 250.0), 0);
+    }
+}

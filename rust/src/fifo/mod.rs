@@ -1,0 +1,6 @@
+//! Global CDC FIFO (Fig.3/Fig.4): the dual-clock handoff between the WCFE
+//! and HD clock domains that makes the dual-mode data flows composable.
+
+pub mod cdc;
+
+pub use cdc::{CdcFifo, FifoStats};

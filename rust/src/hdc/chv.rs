@@ -1,0 +1,260 @@
+//! CHV associative-memory cache model (Fig.6).
+//!
+//! Class hypervectors are stored **per progressive-search segment** — the
+//! layout the chip uses so that "only partial CHVs need to be stored in the
+//! cache": segment s holds a (classes x seg_len) row-major block. Early
+//! termination after k segments means segments k..S were never fetched;
+//! [`ChvStore::bytes_resident`] quantifies the cache-capacity story against
+//! the chip's 32 KB HDC SRAM.
+//!
+//! Bundling semantics: the store keeps a training-time accumulator per class
+//! and serves a **count-normalized INT8 view** (clip(round(sum / count))) —
+//! the INT8-feasible equivalent of mean bundling (OnlineHD-style; on the
+//! chip this is the Training module's per-class shift/renormalization).
+//! Naive saturating accumulation (the raw Fig.6 add/sub the `train_update`
+//! HLO artifact implements — see [`raw_update`]) pins 80%+ of elements at
+//! +-127 after a few dozen samples and destroys class information; the
+//! normalized view is what search reads.
+
+use crate::config::HdConfig;
+use crate::Result;
+use anyhow::bail;
+
+/// The raw chip-level CHV update (Fig.6 step 3, == the `train_update` HLO
+/// artifact): chvs += coef (outer) qhv, saturating at INT8.
+pub fn raw_update(chvs: &mut [f32], qhv: &[f32], coef: &[f32]) {
+    let d = qhv.len();
+    for (c, &co) in coef.iter().enumerate() {
+        if co == 0.0 {
+            continue;
+        }
+        for (v, &q) in chvs[c * d..(c + 1) * d].iter_mut().zip(qhv) {
+            *v = (*v + co * q).clamp(-127.0, 127.0);
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ChvStore {
+    cfg: HdConfig,
+    /// training accumulator: sums[s] = (classes x seg_len) raw sums
+    sums: Vec<Vec<f32>>,
+    /// the INT8 view search reads: clip(round(sum / count))
+    view: Vec<Vec<f32>>,
+    /// per-class bundled-sample count (positive updates)
+    counts: Vec<u64>,
+}
+
+impl ChvStore {
+    pub fn new(cfg: HdConfig) -> ChvStore {
+        let seg_block = cfg.classes * cfg.seg_len();
+        ChvStore {
+            sums: (0..cfg.segments).map(|_| vec![0.0; seg_block]).collect(),
+            view: (0..cfg.segments).map(|_| vec![0.0; seg_block]).collect(),
+            counts: vec![0; cfg.classes],
+            cfg,
+        }
+    }
+
+    pub fn cfg(&self) -> &HdConfig {
+        &self.cfg
+    }
+
+    /// The (classes x seg_len) INT8-view block of segment `s`.
+    pub fn segment(&self, s: usize) -> &[f32] {
+        &self.view[s]
+    }
+
+    /// One class's row within segment `s` (INT8 view).
+    pub fn class_segment(&self, class: usize, s: usize) -> &[f32] {
+        let sl = self.cfg.seg_len();
+        &self.view[s][class * sl..(class + 1) * sl]
+    }
+
+    /// Reassemble one class's full CHV (INT8 view).
+    pub fn class_hv(&self, class: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.cfg.dim());
+        for s in 0..self.cfg.segments {
+            out.extend_from_slice(self.class_segment(class, s));
+        }
+        out
+    }
+
+    /// Add (sign=+1) or subtract (sign=-1) a full QHV into a class row and
+    /// refresh its INT8 view.
+    pub fn update(&mut self, class: usize, qhv: &[f32], sign: f32) -> Result<()> {
+        if class >= self.cfg.classes {
+            bail!("class {class} out of range");
+        }
+        if qhv.len() != self.cfg.dim() {
+            bail!("qhv len {} != D {}", qhv.len(), self.cfg.dim());
+        }
+        if sign > 0.0 {
+            self.counts[class] += 1;
+        }
+        let sl = self.cfg.seg_len();
+        let norm = self.counts[class].max(1) as f32;
+        for s in 0..self.cfg.segments {
+            let qseg = &qhv[s * sl..(s + 1) * sl];
+            let sums = &mut self.sums[s][class * sl..(class + 1) * sl];
+            let view = &mut self.view[s][class * sl..(class + 1) * sl];
+            for ((acc, v), &q) in sums.iter_mut().zip(view.iter_mut()).zip(qseg) {
+                *acc += sign * q;
+                *v = (*acc / norm).round_ties_even().clamp(-127.0, 127.0);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn count(&self, class: usize) -> u64 {
+        self.counts[class]
+    }
+
+    /// Has this class ever been bundled into? (The chip's AM only holds
+    /// CHVs of classes seen so far; search skips empty slots.)
+    pub fn is_trained(&self, class: usize) -> bool {
+        self.counts[class] > 0
+    }
+
+    /// Classes with at least one bundled sample.
+    pub fn trained_classes(&self) -> usize {
+        self.counts.iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Cache bytes touched when a search stops after `segments_used`
+    /// segments (INT8 elements = 1 byte each).
+    pub fn bytes_resident(&self, segments_used: usize) -> usize {
+        segments_used.min(self.cfg.segments) * self.cfg.classes * self.cfg.seg_len()
+    }
+
+    /// Full-CHV cache footprint in bytes.
+    pub fn bytes_total(&self) -> usize {
+        self.bytes_resident(self.cfg.segments)
+    }
+
+    pub fn reset(&mut self) {
+        for s in 0..self.cfg.segments {
+            self.sums[s].fill(0.0);
+            self.view[s].fill(0.0);
+        }
+        self.counts.fill(0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+
+    fn tiny() -> HdConfig {
+        HdConfig::synthetic("t", 8, 8, 32, 32, 8, 10)
+    }
+
+    #[test]
+    fn update_then_reassemble() {
+        let cfg = tiny();
+        let mut store = ChvStore::new(cfg.clone());
+        let qhv: Vec<f32> = (0..cfg.dim()).map(|i| (i % 7) as f32 - 3.0).collect();
+        store.update(3, &qhv, 1.0).unwrap();
+        assert_eq!(store.class_hv(3), qhv); // count 1 -> view == qhv
+        assert_eq!(store.class_hv(2), vec![0.0; cfg.dim()]);
+        assert_eq!(store.count(3), 1);
+        assert_eq!(store.trained_classes(), 1);
+    }
+
+    #[test]
+    fn add_then_subtract_roundtrips() {
+        let cfg = tiny();
+        let mut store = ChvStore::new(cfg.clone());
+        let qhv: Vec<f32> = (0..cfg.dim()).map(|i| ((i % 11) as f32) - 5.0).collect();
+        store.update(0, &qhv, 1.0).unwrap();
+        store.update(0, &qhv, -1.0).unwrap();
+        assert_eq!(store.class_hv(0), vec![0.0; cfg.dim()]);
+    }
+
+    #[test]
+    fn view_is_count_normalized_mean() {
+        let cfg = tiny();
+        let mut store = ChvStore::new(cfg.clone());
+        let q1 = vec![100.0; cfg.dim()];
+        let q2 = vec![20.0; cfg.dim()];
+        store.update(1, &q1, 1.0).unwrap();
+        store.update(1, &q2, 1.0).unwrap();
+        // mean of (100, 20) = 60 — no saturation, magnitude stays INT8-true
+        assert!(store.class_hv(1).iter().all(|&v| v == 60.0));
+    }
+
+    #[test]
+    fn bundling_many_samples_does_not_saturate() {
+        // the failure mode that motivated the normalized view: 40 strong
+        // QHVs bundled raw would pin everything at 127
+        let cfg = tiny();
+        let mut store = ChvStore::new(cfg.clone());
+        for _ in 0..40 {
+            store.update(0, &vec![90.0; cfg.dim()], 1.0).unwrap();
+        }
+        assert!(store.class_hv(0).iter().all(|&v| v == 90.0));
+    }
+
+    #[test]
+    fn view_clips_to_int8_when_sums_exceed_range() {
+        let cfg = tiny();
+        let mut store = ChvStore::new(cfg.clone());
+        store.update(1, &vec![127.0; cfg.dim()], 1.0).unwrap();
+        store.update(1, &vec![-127.0; cfg.dim()], -1.0).unwrap(); // sums = 254, count 1
+        assert!(store.class_hv(1).iter().all(|&v| v == 127.0));
+    }
+
+    #[test]
+    fn raw_update_matches_hlo_semantics() {
+        let mut chvs = vec![120.0, -120.0, 0.0, 50.0];
+        raw_update(&mut chvs, &[10.0, -10.0], &[1.0, -1.0]);
+        assert_eq!(chvs, vec![127.0, -127.0, -10.0, 60.0]);
+    }
+
+    #[test]
+    fn cache_residency_model() {
+        let cfg = tiny(); // 10 classes, seg_len 128, 8 segments
+        let store = ChvStore::new(cfg);
+        assert_eq!(store.bytes_resident(1), 10 * 128);
+        assert_eq!(store.bytes_total(), 10 * 128 * 8);
+        assert_eq!(store.bytes_resident(99), store.bytes_total());
+    }
+
+    #[test]
+    fn paper_config_fits_hdc_sram() {
+        // Chip summary: 32 KB HDC SRAM. ISOLET point: 26 classes x D=2048
+        // INT8 = 52 KB full — progressive search with partial residency is
+        // what makes it fit; half the segments -> 26 KB < 32 KB.
+        let cfg = HdConfig::synthetic("isolet", 32, 20, 64, 32, 16, 26);
+        let store = ChvStore::new(cfg);
+        assert!(store.bytes_total() > 32 * 1024);
+        assert!(store.bytes_resident(8) <= 32 * 1024);
+    }
+
+    #[test]
+    fn prop_segment_layout_consistent_with_class_hv() {
+        forall(20, 0xC44, |rng| {
+            let cfg = tiny();
+            let mut store = ChvStore::new(cfg.clone());
+            let q = gen::int8_vec(rng, cfg.dim());
+            let class = rng.below(cfg.classes);
+            store.update(class, &q, 1.0).unwrap();
+            let sl = cfg.seg_len();
+            for s in 0..cfg.segments {
+                assert_eq!(
+                    store.class_segment(class, s),
+                    &q[s * sl..(s + 1) * sl]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        let cfg = tiny();
+        let mut store = ChvStore::new(cfg.clone());
+        assert!(store.update(99, &vec![0.0; cfg.dim()], 1.0).is_err());
+        assert!(store.update(0, &[0.0; 3], 1.0).is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! [`HdClassifier`]: the user-facing HD module — quantization, encoding,
+//! progressive/full search, and gradient-free updates behind one API.
+
+use crate::config::HdConfig;
+use crate::hdc::chv::ChvStore;
+use crate::hdc::progressive::{ProgressiveResult, ProgressiveSearch};
+use crate::hdc::quantize::quantize_features;
+use crate::hdc::HdBackend;
+use crate::Result;
+
+pub struct HdClassifier {
+    backend: Box<dyn HdBackend>,
+    pub store: ChvStore,
+    pub policy: ProgressiveSearch,
+    cfg: HdConfig,
+}
+
+impl HdClassifier {
+    pub fn new(backend: Box<dyn HdBackend>, policy: ProgressiveSearch) -> HdClassifier {
+        let cfg = backend.cfg().clone();
+        HdClassifier {
+            store: ChvStore::new(cfg.clone()),
+            backend,
+            policy,
+            cfg,
+        }
+    }
+
+    pub fn cfg(&self) -> &HdConfig {
+        &self.cfg
+    }
+
+    /// Quantize raw features into the HD module's INT8 input format.
+    pub fn quantize(&self, x: &[f32]) -> Vec<f32> {
+        quantize_features(x, self.cfg.scale_x)
+    }
+
+    /// Encode a full QHV from raw features.
+    pub fn encode(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        let xq = self.quantize(x);
+        self.backend.encode_full(&xq, 1)
+    }
+
+    /// Progressive classification from raw features.
+    pub fn classify(&mut self, x: &[f32]) -> Result<ProgressiveResult> {
+        let xq = self.quantize(x);
+        self.policy.classify(self.backend.as_mut(), &self.store, &xq)
+    }
+
+    /// Full (exhaustive) classification from raw features.
+    pub fn classify_full(&mut self, x: &[f32]) -> Result<ProgressiveResult> {
+        let xq = self.quantize(x);
+        ProgressiveSearch::classify_full(self.backend.as_mut(), &self.store, &xq)
+    }
+
+    /// Single-pass learn: bundle the sample's QHV into its class CHV.
+    pub fn learn(&mut self, x: &[f32], class: usize) -> Result<()> {
+        let q = self.encode(x)?;
+        self.store.update(class, &q, 1.0)
+    }
+
+    /// Retrain step (mistake-driven): full-classify; on error add to the
+    /// true class and subtract from the mispredicted one. Returns whether
+    /// the prediction was correct.
+    pub fn retrain_step(&mut self, x: &[f32], class: usize) -> Result<bool> {
+        let r = self.classify_full(x)?;
+        if r.class == class {
+            return Ok(true);
+        }
+        let q = self.encode(x)?;
+        self.store.update(class, &q, 1.0)?;
+        self.store.update(r.class, &q, -1.0)?;
+        Ok(false)
+    }
+
+    /// Accuracy over (x, y) pairs using progressive search; also returns the
+    /// mean fraction of segments used (the Fig.4 complexity metric).
+    pub fn evaluate(
+        &mut self,
+        samples: impl Iterator<Item = (Vec<f32>, usize)>,
+    ) -> Result<EvalReport> {
+        let mut n = 0usize;
+        let mut correct = 0usize;
+        let mut seg_used = 0usize;
+        let mut early = 0usize;
+        for (x, y) in samples {
+            let r = self.classify(&x)?;
+            n += 1;
+            correct += usize::from(r.class == y);
+            seg_used += r.segments_used;
+            early += usize::from(r.early_exit);
+        }
+        Ok(EvalReport {
+            n,
+            accuracy: correct as f64 / n.max(1) as f64,
+            mean_segments: seg_used as f64 / n.max(1) as f64,
+            early_exit_rate: early as f64 / n.max(1) as f64,
+            total_segments: self.cfg.segments,
+        })
+    }
+
+    pub fn backend_mut(&mut self) -> &mut dyn HdBackend {
+        self.backend.as_mut()
+    }
+}
+
+/// Evaluation summary (accuracy + progressive-search complexity).
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub n: usize,
+    pub accuracy: f64,
+    pub mean_segments: f64,
+    pub early_exit_rate: f64,
+    pub total_segments: usize,
+}
+
+impl EvalReport {
+    /// Fraction of encode+search complexity saved vs full search (Fig.4's
+    /// "up to 61%").
+    pub fn complexity_reduction(&self) -> f64 {
+        1.0 - self.mean_segments / self.total_segments as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdc::encoder::SoftwareEncoder;
+    use crate::util::Rng;
+
+    fn classifier(tau: f32) -> HdClassifier {
+        let cfg = HdConfig::synthetic("t", 8, 8, 32, 32, 8, 5);
+        let enc = SoftwareEncoder::random(cfg, 21);
+        HdClassifier::new(Box::new(enc), ProgressiveSearch { tau, min_segments: 1 })
+    }
+
+    fn protos(cl: &HdClassifier, n: usize) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(5);
+        (0..n)
+            .map(|_| (0..cl.cfg().features()).map(|_| rng.normal_f32() * 30.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn learn_then_classify_recovers_classes() {
+        let mut cl = classifier(0.4);
+        let ps = protos(&cl, 5);
+        let mut rng = Rng::new(6);
+        for (c, p) in ps.iter().enumerate() {
+            for _ in 0..4 {
+                let noisy: Vec<f32> = p.iter().map(|&v| v + rng.normal_f32() * 3.0).collect();
+                cl.learn(&noisy, c).unwrap();
+            }
+        }
+        for (c, p) in ps.iter().enumerate() {
+            assert_eq!(cl.classify(p).unwrap().class, c);
+        }
+    }
+
+    #[test]
+    fn retrain_improves_or_keeps_training_accuracy() {
+        let mut cl = classifier(0.4);
+        let ps = protos(&cl, 5);
+        let mut rng = Rng::new(7);
+        let mut samples = Vec::new();
+        for (c, p) in ps.iter().enumerate() {
+            for _ in 0..6 {
+                let noisy: Vec<f32> =
+                    p.iter().map(|&v| v + rng.normal_f32() * 25.0).collect();
+                samples.push((noisy, c));
+            }
+        }
+        for (x, y) in &samples {
+            cl.learn(x, *y).unwrap();
+        }
+        let acc_before = {
+            let r = cl
+                .evaluate(samples.iter().cloned())
+                .unwrap();
+            r.accuracy
+        };
+        for _ in 0..3 {
+            for (x, y) in &samples {
+                cl.retrain_step(x, *y).unwrap();
+            }
+        }
+        let acc_after = cl.evaluate(samples.iter().cloned()).unwrap().accuracy;
+        assert!(
+            acc_after >= acc_before - 1e-9,
+            "retraining regressed: {acc_before} -> {acc_after}"
+        );
+    }
+
+    #[test]
+    fn eval_report_complexity() {
+        let r = EvalReport {
+            n: 10,
+            accuracy: 1.0,
+            mean_segments: 4.0,
+            early_exit_rate: 1.0,
+            total_segments: 8,
+        };
+        assert!((r.complexity_reduction() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,142 @@
+//! Distance kernels for associative search (software side).
+//!
+//! L1 over INT8 CHVs is the default inference metric; negative dot doubles
+//! as Hamming for +-1 hypervectors (the chip's XOR tree). Both are additive
+//! over progressive-search segments, which is what makes partial-distance
+//! accumulation exact.
+
+use crate::Result;
+use anyhow::bail;
+
+/// L1 distances: qs (batch, len) vs chvs (classes, len) -> (batch, classes).
+pub fn l1_batch(
+    qs: &[f32],
+    batch: usize,
+    chvs: &[f32],
+    classes: usize,
+    len: usize,
+) -> Result<Vec<f32>> {
+    if qs.len() != batch * len {
+        bail!("qs len {} != batch {batch} * len {len}", qs.len());
+    }
+    if chvs.len() != classes * len {
+        bail!("chvs len {} != classes {classes} * len {len}", chvs.len());
+    }
+    let mut out = vec![0.0f32; batch * classes];
+    for n in 0..batch {
+        let q = &qs[n * len..(n + 1) * len];
+        let row = &mut out[n * classes..(n + 1) * classes];
+        for (c, o) in row.iter_mut().enumerate() {
+            let chv = &chvs[c * len..(c + 1) * len];
+            let mut acc = 0.0f32;
+            for (&qv, &cv) in q.iter().zip(chv) {
+                acc += (qv - cv).abs();
+            }
+            *o = acc;
+        }
+    }
+    Ok(out)
+}
+
+/// Negative dot similarity (Hamming-equivalent for +-1 HVs).
+pub fn neg_dot_batch(
+    qs: &[f32],
+    batch: usize,
+    chvs: &[f32],
+    classes: usize,
+    len: usize,
+) -> Result<Vec<f32>> {
+    if qs.len() != batch * len || chvs.len() != classes * len {
+        bail!("shape mismatch");
+    }
+    let mut out = vec![0.0f32; batch * classes];
+    for n in 0..batch {
+        let q = &qs[n * len..(n + 1) * len];
+        for c in 0..classes {
+            let chv = &chvs[c * len..(c + 1) * len];
+            let dot: f32 = q.iter().zip(chv).map(|(&a, &b)| a * b).sum();
+            out[n * classes + c] = -dot;
+        }
+    }
+    Ok(out)
+}
+
+/// Hamming distance between +-1 hypervectors.
+pub fn hamming_pm1(a: &[f32], b: &[f32]) -> usize {
+    a.iter().zip(b).filter(|(x, y)| x != y).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+
+    #[test]
+    fn l1_manual() {
+        let qs = [1.0, 2.0];
+        let chvs = [1.0, 2.0, -1.0, 4.0];
+        let d = l1_batch(&qs, 1, &chvs, 2, 2).unwrap();
+        assert_eq!(d, vec![0.0, 4.0]);
+    }
+
+    #[test]
+    fn neg_dot_matches_hamming_for_pm1() {
+        let mut rng = crate::util::Rng::new(1);
+        let len = 64;
+        let q: Vec<f32> = (0..len).map(|_| rng.sign()).collect();
+        let c: Vec<f32> = (0..len).map(|_| rng.sign()).collect();
+        let nd = neg_dot_batch(&q, 1, &c, 1, len).unwrap()[0];
+        let ham = hamming_pm1(&q, &c) as f32;
+        assert_eq!((len as f32 + nd) / 2.0, ham);
+    }
+
+    #[test]
+    fn prop_l1_additive_over_segments() {
+        forall(30, 0xD15, |rng| {
+            let (segs, seg_len, classes) = (4usize, 16usize, 5usize);
+            let len = segs * seg_len;
+            let q = gen::int8_vec(rng, len);
+            let chvs = gen::int8_vec(rng, classes * len);
+            let full = l1_batch(&q, 1, &chvs, classes, len).unwrap();
+            let mut acc = vec![0.0f32; classes];
+            for s in 0..segs {
+                let qseg = &q[s * seg_len..(s + 1) * seg_len];
+                // gather the CHV columns of this segment
+                let mut cseg = Vec::with_capacity(classes * seg_len);
+                for c in 0..classes {
+                    cseg.extend_from_slice(
+                        &chvs[c * len + s * seg_len..c * len + (s + 1) * seg_len],
+                    );
+                }
+                let d = l1_batch(qseg, 1, &cseg, classes, seg_len).unwrap();
+                for (a, v) in acc.iter_mut().zip(d) {
+                    *a += v;
+                }
+            }
+            for (a, f) in acc.iter().zip(&full) {
+                assert!((a - f).abs() < 1e-3, "{a} vs {f}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_l1_metric_axioms() {
+        forall(30, 0xA71, |rng| {
+            let len = 32;
+            let a = gen::int8_vec(rng, len);
+            let b = gen::int8_vec(rng, len);
+            let dab = l1_batch(&a, 1, &b, 1, len).unwrap()[0];
+            let dba = l1_batch(&b, 1, &a, 1, len).unwrap()[0];
+            let daa = l1_batch(&a, 1, &a, 1, len).unwrap()[0];
+            assert_eq!(dab, dba); // symmetry
+            assert_eq!(daa, 0.0); // identity
+            assert!(dab >= 0.0);
+        });
+    }
+
+    #[test]
+    fn shape_errors() {
+        assert!(l1_batch(&[0.0; 3], 1, &[0.0; 4], 2, 2).is_err());
+        assert!(l1_batch(&[0.0; 2], 1, &[0.0; 3], 2, 2).is_err());
+    }
+}

@@ -1,0 +1,317 @@
+//! Software Kronecker HD encoder (Fig.5) — the pure-Rust reference for the
+//! AOT Pallas kernel, the fallback backend, and the op/memory cost model the
+//! Fig.5 comparison bench is built on.
+//!
+//! Encoding: QHV = quantize(vec(A_seg @ X @ B^T)) with X = reshape(x, f1, f2)
+//! and +-1 factors A (d1 x f1), B (d2 x f2). Because A and B are +-1, every
+//! "multiply" in stage 1/2 is an add/subtract — the chip's adder trees; we
+//! count ops accordingly in [`kron_cost`].
+
+use crate::config::HdConfig;
+use crate::hdc::quantize;
+use crate::hdc::HdBackend;
+use crate::util::Rng;
+use crate::Result;
+use anyhow::bail;
+
+/// Pure-Rust Kronecker encoder + L1 search backend.
+#[derive(Clone, Debug)]
+pub struct SoftwareEncoder {
+    cfg: HdConfig,
+    /// A: (d1, f1) row-major +-1
+    pub a: Vec<f32>,
+    /// B: (d2, f2) row-major +-1
+    pub b: Vec<f32>,
+    /// scratch for stage-1 output (seg_rows x f2 max = d1 x f2)
+    scratch: Vec<f32>,
+}
+
+impl SoftwareEncoder {
+    pub fn new(cfg: HdConfig, a: Vec<f32>, b: Vec<f32>) -> Result<SoftwareEncoder> {
+        if a.len() != cfg.d1 * cfg.f1 {
+            bail!("A has {} elements, expected {}", a.len(), cfg.d1 * cfg.f1);
+        }
+        if b.len() != cfg.d2 * cfg.f2 {
+            bail!("B has {} elements, expected {}", b.len(), cfg.d2 * cfg.f2);
+        }
+        let scratch = vec![0.0; cfg.d1 * cfg.f2];
+        Ok(SoftwareEncoder { cfg, a, b, scratch })
+    }
+
+    /// Random +-1 factors (matches the build-time generator's distribution;
+    /// exact factor values come from artifacts/hd_factors_<cfg>.bin in
+    /// production).
+    pub fn random(cfg: HdConfig, seed: u64) -> SoftwareEncoder {
+        let mut rng = Rng::new(seed);
+        let a = (0..cfg.d1 * cfg.f1).map(|_| rng.sign()).collect();
+        let b = (0..cfg.d2 * cfg.f2).map(|_| rng.sign()).collect();
+        SoftwareEncoder::new(cfg, a, b).unwrap()
+    }
+
+    /// Set `scale_q` so the raw accumulator range maps onto INT8 without
+    /// saturation — the Rust twin of aot.py's build-time calibration (the
+    /// AOT artifacts bake the python-calibrated value; synthetic/bench
+    /// configs must call this before training or QHVs clip to +-127 and
+    /// bundling degenerates).
+    pub fn calibrate(&mut self, xs: &[f32], batch: usize) {
+        let (f1, f2, d1, d2) = (self.cfg.f1, self.cfg.f2, self.cfg.d1, self.cfg.d2);
+        let mut max_abs = 0.0f32;
+        let mut t = vec![0.0f32; f2];
+        for n in 0..batch {
+            let x = &xs[n * f1 * f2..(n + 1) * f1 * f2];
+            for i1 in 0..d1 {
+                let arow = &self.a[i1 * f1..(i1 + 1) * f1];
+                t.fill(0.0);
+                for (j1, &av) in arow.iter().enumerate() {
+                    for (tv, &xv) in t.iter_mut().zip(&x[j1 * f2..(j1 + 1) * f2]) {
+                        *tv += av * xv;
+                    }
+                }
+                for i2 in 0..d2 {
+                    let brow = &self.b[i2 * f2..(i2 + 1) * f2];
+                    let acc: f32 = t.iter().zip(brow).map(|(&tv, &bv)| tv * bv).sum();
+                    max_abs = max_abs.max(acc.abs());
+                }
+            }
+        }
+        if max_abs > 0.0 {
+            self.cfg.scale_q = max_abs / 127.0;
+        }
+    }
+
+    /// Encode rows [row0, row0+rows) of A against one feature vector,
+    /// writing `rows * d2` QHV values into `out`.
+    fn encode_rows(&mut self, x: &[f32], row0: usize, rows: usize, out: &mut [f32]) {
+        let (f1, f2, d2) = (self.cfg.f1, self.cfg.f2, self.cfg.d2);
+        debug_assert_eq!(x.len(), f1 * f2);
+        debug_assert_eq!(out.len(), rows * d2);
+        // Stage 1: T = A_rows @ X  (rows x f2); A is +-1 -> adds only.
+        for r in 0..rows {
+            let arow = &self.a[(row0 + r) * f1..(row0 + r + 1) * f1];
+            let trow = &mut self.scratch[r * f2..(r + 1) * f2];
+            trow.fill(0.0);
+            for (j1, &aval) in arow.iter().enumerate() {
+                let xrow = &x[j1 * f2..(j1 + 1) * f2];
+                if aval >= 0.0 {
+                    for (t, &xv) in trow.iter_mut().zip(xrow) {
+                        *t += xv;
+                    }
+                } else {
+                    for (t, &xv) in trow.iter_mut().zip(xrow) {
+                        *t -= xv;
+                    }
+                }
+            }
+        }
+        // Stage 2: Y = T @ B^T (rows x d2), quantize.
+        let (bits, scale) = (self.cfg.qbits, self.cfg.scale_q);
+        for r in 0..rows {
+            let trow = &self.scratch[r * f2..(r + 1) * f2];
+            for i2 in 0..d2 {
+                let brow = &self.b[i2 * f2..(i2 + 1) * f2];
+                let mut acc = 0.0f32;
+                for (&t, &bv) in trow.iter().zip(brow) {
+                    acc += if bv >= 0.0 { t } else { -t };
+                }
+                out[r * d2 + i2] = quantize::quantize(acc, bits, scale);
+            }
+        }
+    }
+}
+
+impl HdBackend for SoftwareEncoder {
+    fn cfg(&self) -> &HdConfig {
+        &self.cfg
+    }
+
+    fn encode_segment(&mut self, xs: &[f32], batch: usize, seg: usize) -> Result<Vec<f32>> {
+        let (feat, rows, seg_len) = (self.cfg.features(), self.cfg.seg_rows(), self.cfg.seg_len());
+        if seg >= self.cfg.segments {
+            bail!("segment {seg} out of range (<{})", self.cfg.segments);
+        }
+        if xs.len() != batch * feat {
+            bail!("xs len {} != batch {batch} * F {feat}", xs.len());
+        }
+        let mut out = vec![0.0; batch * seg_len];
+        for n in 0..batch {
+            self.encode_rows(
+                &xs[n * feat..(n + 1) * feat].to_vec(),
+                seg * rows,
+                rows,
+                &mut out[n * seg_len..(n + 1) * seg_len],
+            );
+        }
+        Ok(out)
+    }
+
+    fn encode_full(&mut self, xs: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let (feat, dim, d1) = (self.cfg.features(), self.cfg.dim(), self.cfg.d1);
+        if xs.len() != batch * feat {
+            bail!("xs len {} != batch {batch} * F {feat}", xs.len());
+        }
+        let mut out = vec![0.0; batch * dim];
+        for n in 0..batch {
+            self.encode_rows(
+                &xs[n * feat..(n + 1) * feat].to_vec(),
+                0,
+                d1,
+                &mut out[n * dim..(n + 1) * dim],
+            );
+        }
+        Ok(out)
+    }
+
+    fn search(
+        &mut self,
+        qs: &[f32],
+        batch: usize,
+        chvs: &[f32],
+        classes: usize,
+        len: usize,
+    ) -> Result<Vec<f32>> {
+        crate::hdc::distance::l1_batch(qs, batch, chvs, classes, len)
+    }
+}
+
+/// Cost model of one full-QHV encode per encoder family (Fig.5 table).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EncoderCost {
+    /// add-equivalent arithmetic ops
+    pub ops: u64,
+    /// encoder parameter storage (bits)
+    pub mem_bits: u64,
+}
+
+/// Kronecker encoder: stage1 d1*f1*f2 adds + stage2 d1*d2*f2 adds; memory is
+/// the two binary factors only.
+pub fn kron_cost(cfg: &HdConfig) -> EncoderCost {
+    let (d1, d2, f1, f2) = (cfg.d1 as u64, cfg.d2 as u64, cfg.f1 as u64, cfg.f2 as u64);
+    EncoderCost {
+        ops: d1 * f1 * f2 + d1 * d2 * f2,
+        mem_bits: d1 * f1 + d2 * f2,
+    }
+}
+
+/// Conventional random projection [11]: dense +-1 D x F matrix.
+pub fn rp_cost(cfg: &HdConfig) -> EncoderCost {
+    let (d, f) = (cfg.dim() as u64, cfg.features() as u64);
+    EncoderCost { ops: d * f, mem_bits: d * f }
+}
+
+/// Cyclic RP [4]: one +-1 row of length F per block, rotated D/F times —
+/// same op count as RP, F*ceil(D/F)-ish storage (one seed row per block).
+pub fn crp_cost(cfg: &HdConfig) -> EncoderCost {
+    let (d, f) = (cfg.dim() as u64, cfg.features() as u64);
+    EncoderCost { ops: d * f, mem_bits: f * d.div_ceil(f) }
+}
+
+/// ID-LEVEL encoder [12]: F item HVs of length D (binary) + L level HVs;
+/// encoding XORs/adds F hypervectors of length D.
+pub fn id_level_cost(cfg: &HdConfig, levels: u64) -> EncoderCost {
+    let (d, f) = (cfg.dim() as u64, cfg.features() as u64);
+    EncoderCost { ops: d * f, mem_bits: d * (f + levels) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+
+    fn tiny() -> HdConfig {
+        HdConfig::synthetic("t", 8, 8, 32, 32, 8, 10)
+    }
+
+    /// Direct dense (A kron B) @ x oracle.
+    fn dense_oracle(cfg: &HdConfig, a: &[f32], b: &[f32], x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; cfg.dim()];
+        for i1 in 0..cfg.d1 {
+            for i2 in 0..cfg.d2 {
+                let mut acc = 0.0;
+                for j1 in 0..cfg.f1 {
+                    for j2 in 0..cfg.f2 {
+                        acc += a[i1 * cfg.f1 + j1] * b[i2 * cfg.f2 + j2] * x[j1 * cfg.f2 + j2];
+                    }
+                }
+                out[i1 * cfg.d2 + i2] =
+                    quantize::quantize(acc, cfg.qbits, cfg.scale_q);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_dense_kronecker_oracle() {
+        let cfg = tiny();
+        let mut enc = SoftwareEncoder::random(cfg.clone(), 1);
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..cfg.features()).map(|_| rng.range(-100, 101) as f32).collect();
+        let got = enc.encode_full(&x, 1).unwrap();
+        let want = dense_oracle(&cfg, &enc.a.clone(), &enc.b.clone(), &x);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn segments_concatenate_to_full() {
+        let cfg = tiny();
+        let mut enc = SoftwareEncoder::random(cfg.clone(), 3);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..cfg.features()).map(|_| rng.range(-50, 51) as f32).collect();
+        let full = enc.encode_full(&x, 1).unwrap();
+        let mut cat = Vec::new();
+        for s in 0..cfg.segments {
+            cat.extend(enc.encode_segment(&x, 1, s).unwrap());
+        }
+        assert_eq!(full, cat);
+    }
+
+    #[test]
+    fn batch_equals_loop() {
+        let cfg = tiny();
+        let mut enc = SoftwareEncoder::random(cfg.clone(), 5);
+        let mut rng = Rng::new(6);
+        let xs: Vec<f32> = (0..3 * cfg.features()).map(|_| rng.range(-50, 51) as f32).collect();
+        let batched = enc.encode_full(&xs, 3).unwrap();
+        for n in 0..3 {
+            let one = enc
+                .encode_full(&xs[n * cfg.features()..(n + 1) * cfg.features()], 1)
+                .unwrap();
+            assert_eq!(&batched[n * cfg.dim()..(n + 1) * cfg.dim()], &one[..]);
+        }
+    }
+
+    #[test]
+    fn prop_output_is_quantized(){
+        forall(20, 0xE0C, |rng| {
+            let cfg = tiny();
+            let mut enc = SoftwareEncoder::random(cfg.clone(), rng.next_u64());
+            let x = gen::int8_vec(rng, cfg.features());
+            let q = enc.encode_full(&x, 1).unwrap();
+            for v in q {
+                assert!(v.abs() <= 127.0 && v.fract() == 0.0);
+            }
+        });
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let cfg = tiny();
+        let mut enc = SoftwareEncoder::random(cfg.clone(), 1);
+        assert!(enc.encode_full(&[0.0; 3], 1).is_err());
+        assert!(enc.encode_segment(&vec![0.0; cfg.features()], 1, 99).is_err());
+        assert!(SoftwareEncoder::new(cfg.clone(), vec![1.0; 3], vec![1.0; 3]).is_err());
+    }
+
+    #[test]
+    fn cost_model_ratios_match_paper_scale() {
+        // Paper Fig.5: 43x speedup, 1376x memory vs lengthy encoders at the
+        // large operating point (F=640 padded from 617, D=8192).
+        let cfg = HdConfig::synthetic("big", 32, 20, 256, 32, 16, 26);
+        assert_eq!(cfg.dim(), 8192);
+        let k = kron_cost(&cfg);
+        let rp = rp_cost(&cfg);
+        let speedup = rp.ops as f64 / k.ops as f64;
+        let memsave = rp.mem_bits as f64 / k.mem_bits as f64;
+        assert!(speedup > 15.0, "speedup {speedup}");
+        assert!(memsave > 500.0, "memsave {memsave}");
+    }
+}

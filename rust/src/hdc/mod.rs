@@ -1,0 +1,99 @@
+//! The HD module (Fig.3 right / Fig.6): Kronecker encoder, associative
+//! search, CHV cache, gradient-free training, and the progressive-search
+//! controller — the paper's classifier contribution.
+//!
+//! Compute can run on two interchangeable backends via [`HdBackend`]:
+//! * [`SoftwareEncoder`]-based pure-Rust backend (reference + fallback), and
+//! * the PJRT backend in [`crate::runtime`], executing the AOT-lowered
+//!   Pallas/JAX artifacts (the production path).
+//! Both are held to the same golden vectors (artifacts/golden.bin).
+
+pub mod chv;
+pub mod classifier;
+pub mod distance;
+pub mod encoder;
+pub mod progressive;
+pub mod quantize;
+pub mod train;
+
+pub use chv::ChvStore;
+pub use classifier::HdClassifier;
+pub use encoder::SoftwareEncoder;
+pub use progressive::{ProgressiveResult, ProgressiveSearch};
+pub use train::{RetrainReport, Trainer};
+
+use crate::config::HdConfig;
+use crate::Result;
+
+/// Execution backend for the HD module's two hot operations.
+///
+/// Shapes are row-major flattened; `batch` rows of `cfg.features()` in,
+/// `batch` rows of segment/D out.
+/// NOTE: not `Send` — the PJRT backend wraps raw C-API handles; the
+/// coordinator therefore runs all backends on a dedicated executor thread
+/// (leader/worker pattern, see `crate::coordinator`).
+pub trait HdBackend {
+    fn cfg(&self) -> &HdConfig;
+
+    /// Encode one progressive-search segment: xs (batch, F) -> (batch, seg_len).
+    fn encode_segment(&mut self, xs: &[f32], batch: usize, seg: usize) -> Result<Vec<f32>>;
+
+    /// Encode the full QHV: xs (batch, F) -> (batch, D).
+    fn encode_full(&mut self, xs: &[f32], batch: usize) -> Result<Vec<f32>>;
+
+    /// L1 distances: qs (batch, len) vs chvs (classes, len) -> (batch, classes).
+    fn search(
+        &mut self,
+        qs: &[f32],
+        batch: usize,
+        chvs: &[f32],
+        classes: usize,
+        len: usize,
+    ) -> Result<Vec<f32>>;
+}
+
+/// argmin + runner-up over one row of distances; returns
+/// (best_class, best, second_best).
+pub fn best_two(dists: &[f32]) -> (usize, f32, f32) {
+    assert!(!dists.is_empty());
+    let (mut bi, mut b1, mut b2) = (0usize, f32::INFINITY, f32::INFINITY);
+    for (i, &d) in dists.iter().enumerate() {
+        if d < b1 {
+            b2 = b1;
+            b1 = d;
+            bi = i;
+        } else if d < b2 {
+            b2 = d;
+        }
+    }
+    (bi, b1, b2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_two_basic() {
+        let (i, b1, b2) = best_two(&[5.0, 1.0, 3.0, 1.5]);
+        assert_eq!(i, 1);
+        assert_eq!(b1, 1.0);
+        assert_eq!(b2, 1.5);
+    }
+
+    #[test]
+    fn best_two_single_class() {
+        let (i, b1, b2) = best_two(&[2.0]);
+        assert_eq!(i, 0);
+        assert_eq!(b1, 2.0);
+        assert!(b2.is_infinite());
+    }
+
+    #[test]
+    fn best_two_ties_prefer_first() {
+        let (i, b1, b2) = best_two(&[3.0, 3.0]);
+        assert_eq!(i, 0);
+        assert_eq!(b1, 3.0);
+        assert_eq!(b2, 3.0);
+    }
+}

@@ -1,0 +1,220 @@
+//! Progressive search controller (Fig.4 right / Fig.6) — the paper's
+//! inference-complexity contribution.
+//!
+//! The QHV is encoded one segment at a time; after each segment the partial
+//! L1 distances (exactly additive over segments) are accumulated and the
+//! margin between the best and runner-up class is tested against a
+//! confidence threshold. If the margin exceeds what the remaining segments
+//! could plausibly overturn, encoding + search terminate early — saving up
+//! to 61% of the encode/search work with negligible accuracy loss.
+//!
+//! Threshold: `margin > tau * mean_absdiff * remaining_len`, where
+//! `mean_absdiff` (from build-time calibration, manifest) estimates the
+//! expected per-element |q - c| contribution of a *wrong* class; `tau` is
+//! the preset confidence knob the Fig.4 bench sweeps.
+
+use crate::hdc::chv::ChvStore;
+use crate::hdc::{best_two, HdBackend};
+use crate::Result;
+
+/// Confidence policy for early termination.
+#[derive(Clone, Copy, Debug)]
+pub struct ProgressiveSearch {
+    /// Confidence threshold in units of expected per-element distance.
+    pub tau: f32,
+    /// Never terminate before this many segments (>= 1).
+    pub min_segments: usize,
+}
+
+impl Default for ProgressiveSearch {
+    fn default() -> Self {
+        ProgressiveSearch { tau: 0.5, min_segments: 1 }
+    }
+}
+
+/// Outcome of one progressive classification.
+#[derive(Clone, Debug)]
+pub struct ProgressiveResult {
+    pub class: usize,
+    /// segments actually encoded + searched (<= cfg.segments)
+    pub segments_used: usize,
+    /// accumulated distances over the used segments
+    pub dists: Vec<f32>,
+    /// margin (second - best) at termination
+    pub margin: f32,
+    pub early_exit: bool,
+}
+
+impl ProgressiveResult {
+    /// Fraction of encode+search work skipped vs a full search.
+    pub fn complexity_saving(&self, total_segments: usize) -> f64 {
+        1.0 - self.segments_used as f64 / total_segments as f64
+    }
+}
+
+impl ProgressiveSearch {
+    /// Classify one (already feature-quantized) sample against the CHV store.
+    pub fn classify(
+        &self,
+        backend: &mut dyn HdBackend,
+        store: &ChvStore,
+        x: &[f32],
+    ) -> Result<ProgressiveResult> {
+        let cfg = backend.cfg().clone();
+        let (segments, seg_len, classes) = (cfg.segments, cfg.seg_len(), cfg.classes);
+        let mut acc = vec![0.0f32; classes];
+        let mut used = 0usize;
+        let mut early = false;
+        let mut margin = 0.0f32;
+        // the AM cache only holds CHVs of classes seen so far — empty slots
+        // are excluded from the search (their all-zero rows would otherwise
+        // attract low-magnitude queries)
+        let untrained: Vec<usize> =
+            (0..classes).filter(|&c| !store.is_trained(c)).collect();
+        let mask = |acc: &mut Vec<f32>| {
+            for &c in &untrained {
+                acc[c] = f32::INFINITY;
+            }
+        };
+        for s in 0..segments {
+            let q = backend.encode_segment(x, 1, s)?;
+            let d = backend.search(&q, 1, store.segment(s), classes, seg_len)?;
+            for (a, v) in acc.iter_mut().zip(&d) {
+                *a += v;
+            }
+            mask(&mut acc);
+            used = s + 1;
+            let (_, b1, b2) = best_two(&acc);
+            margin = b2 - b1;
+            if used >= self.min_segments && used < segments {
+                let remaining = ((segments - used) * seg_len) as f32;
+                if margin > self.tau * cfg.mean_absdiff * remaining {
+                    early = true;
+                    break;
+                }
+            }
+        }
+        let (class, b1, b2) = best_two(&acc);
+        Ok(ProgressiveResult {
+            class,
+            segments_used: used,
+            dists: acc,
+            margin: b2 - b1,
+            early_exit: early,
+        })
+    }
+
+    /// Full (non-progressive) classification: encode everything, one search.
+    pub fn classify_full(
+        backend: &mut dyn HdBackend,
+        store: &ChvStore,
+        x: &[f32],
+    ) -> Result<ProgressiveResult> {
+        ProgressiveSearch { tau: f32::INFINITY, min_segments: usize::MAX }
+            .classify(backend, store, x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HdConfig;
+    use crate::hdc::encoder::SoftwareEncoder;
+    use crate::hdc::quantize::quantize_features;
+    use crate::util::Rng;
+
+    fn setup() -> (SoftwareEncoder, ChvStore, Vec<Vec<f32>>) {
+        let cfg = HdConfig::synthetic("t", 8, 8, 32, 32, 8, 4);
+        let mut enc = SoftwareEncoder::random(cfg.clone(), 9);
+        let mut store = ChvStore::new(cfg.clone());
+        let mut rng = Rng::new(10);
+        // four well-separated class prototypes, bundled from 5 noisy draws
+        let protos: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..cfg.features()).map(|_| rng.normal_f32() * 50.0).collect())
+            .collect();
+        for (c, p) in protos.iter().enumerate() {
+            for _ in 0..5 {
+                let noisy: Vec<f32> = p.iter().map(|&v| v + rng.normal_f32() * 5.0).collect();
+                let xq = quantize_features(&noisy, 1.0);
+                let q = enc.encode_full(&xq, 1).unwrap();
+                store.update(c, &q, 1.0).unwrap();
+            }
+        }
+        (enc, store, protos)
+    }
+
+    #[test]
+    fn progressive_matches_full_on_confident_inputs() {
+        let (mut enc, store, protos) = setup();
+        let ps = ProgressiveSearch { tau: 0.3, min_segments: 1 };
+        for (c, p) in protos.iter().enumerate() {
+            let xq = quantize_features(p, 1.0);
+            let full = ProgressiveSearch::classify_full(&mut enc, &store, &xq).unwrap();
+            let prog = ps.classify(&mut enc, &store, &xq).unwrap();
+            assert_eq!(full.class, c);
+            assert_eq!(prog.class, c, "progressive disagreed on class {c}");
+            assert!(prog.segments_used <= full.segments_used);
+        }
+    }
+
+    #[test]
+    fn early_exit_happens_for_confident_inputs() {
+        let (mut enc, store, protos) = setup();
+        // generous threshold: should exit well before all 8 segments
+        let ps = ProgressiveSearch { tau: 0.05, min_segments: 1 };
+        let xq = quantize_features(&protos[0], 1.0);
+        let r = ps.classify(&mut enc, &store, &xq).unwrap();
+        assert!(r.early_exit);
+        assert!(r.segments_used < enc.cfg().segments);
+        assert!(r.complexity_saving(enc.cfg().segments) > 0.0);
+    }
+
+    #[test]
+    fn infinite_tau_never_exits_early() {
+        let (mut enc, store, protos) = setup();
+        let xq = quantize_features(&protos[1], 1.0);
+        let r = ProgressiveSearch::classify_full(&mut enc, &store, &xq).unwrap();
+        assert!(!r.early_exit);
+        assert_eq!(r.segments_used, enc.cfg().segments);
+    }
+
+    #[test]
+    fn min_segments_respected() {
+        let (mut enc, store, protos) = setup();
+        let ps = ProgressiveSearch { tau: 0.0, min_segments: 3 };
+        let xq = quantize_features(&protos[2], 1.0);
+        let r = ps.classify(&mut enc, &store, &xq).unwrap();
+        assert!(r.segments_used >= 3);
+    }
+
+    #[test]
+    fn margin_bound_guarantees_agreement_with_full() {
+        // Soundness: if the margin exceeds the MAXIMUM possible remaining
+        // contribution (254 per element), early exit can NEVER change the
+        // argmin. tau chosen so tau*mean_absdiff >= 254 with min margin.
+        let (mut enc, store, protos) = setup();
+        let cfg = enc.cfg().clone();
+        let tau_sound = 254.0 / cfg.mean_absdiff;
+        let ps = ProgressiveSearch { tau: tau_sound, min_segments: 1 };
+        let mut rng = Rng::new(33);
+        for p in &protos {
+            let noisy: Vec<f32> = p.iter().map(|&v| v + rng.normal_f32() * 20.0).collect();
+            let xq = quantize_features(&noisy, 1.0);
+            let full = ProgressiveSearch::classify_full(&mut enc, &store, &xq).unwrap();
+            let prog = ps.classify(&mut enc, &store, &xq).unwrap();
+            assert_eq!(full.class, prog.class);
+        }
+    }
+
+    #[test]
+    fn complexity_saving_math() {
+        let r = ProgressiveResult {
+            class: 0,
+            segments_used: 4,
+            dists: vec![],
+            margin: 0.0,
+            early_exit: true,
+        };
+        assert!((r.complexity_saving(16) - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,92 @@
+//! INT1-8 quantization (the chip's HDC inference precision modes) —
+//! value-identical to `python/compile/kernels/ref.py::quantize`.
+
+/// Max magnitude representable at `bits` (symmetric signed): 2^(bits-1) - 1.
+pub fn qmax(bits: u8) -> f32 {
+    ((1i32 << (bits - 1)) - 1) as f32
+}
+
+/// Quantize one accumulator value to INT`bits` (kept in f32).
+/// INT1 is sign (+-1, never 0) — the Hamming/XOR-tree mode.
+pub fn quantize(y: f32, bits: u8, scale: f32) -> f32 {
+    if bits == 1 {
+        return if y >= 0.0 { 1.0 } else { -1.0 };
+    }
+    let m = qmax(bits);
+    (y / scale).round_ties_even().clamp(-m, m)
+}
+
+/// Quantize a slice in place.
+pub fn quantize_slice(ys: &mut [f32], bits: u8, scale: f32) {
+    for y in ys.iter_mut() {
+        *y = quantize(*y, bits, scale);
+    }
+}
+
+/// Feature quantization (f32 -> INT8 values, the HD module's input format).
+pub fn quantize_features(x: &[f32], scale_x: f32) -> Vec<f32> {
+    x.iter()
+        .map(|&v| (v / scale_x).round_ties_even().clamp(-127.0, 127.0))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+
+    #[test]
+    fn int1_is_sign() {
+        assert_eq!(quantize(0.0, 1, 5.0), 1.0);
+        assert_eq!(quantize(-0.1, 1, 5.0), -1.0);
+        assert_eq!(quantize(123.0, 1, 5.0), 1.0);
+    }
+
+    #[test]
+    fn int8_clips() {
+        assert_eq!(quantize(1e9, 8, 1.0), 127.0);
+        assert_eq!(quantize(-1e9, 8, 1.0), -127.0);
+    }
+
+    #[test]
+    fn scale_divides_before_round() {
+        assert_eq!(quantize(10.0, 8, 4.0), 2.0); // 2.5 rounds-to-even -> 2
+        assert_eq!(quantize(14.0, 8, 4.0), 4.0); // 3.5 rounds-to-even -> 4
+        assert_eq!(quantize(9.0, 8, 4.0), 2.0);
+    }
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax(8), 127.0);
+        assert_eq!(qmax(4), 7.0);
+        assert_eq!(qmax(2), 1.0);
+    }
+
+    #[test]
+    fn prop_quantized_within_range_and_integer() {
+        forall(100, 0xBEEF, |rng| {
+            let bits = gen::choice(rng, &[2u8, 4, 8]);
+            let scale = rng.range_f64(0.5, 100.0) as f32;
+            let y = rng.normal_f32() * 500.0;
+            let q = quantize(y, bits, scale);
+            assert!(q.abs() <= qmax(bits));
+            assert_eq!(q.fract(), 0.0);
+        });
+    }
+
+    #[test]
+    fn prop_monotone_in_input() {
+        forall(100, 0xCAFE, |rng| {
+            let scale = rng.range_f64(0.5, 10.0) as f32;
+            let a = rng.normal_f32() * 100.0;
+            let b = a + rng.uniform() as f32 * 50.0;
+            assert!(quantize(a, 8, scale) <= quantize(b, 8, scale));
+        });
+    }
+
+    #[test]
+    fn features_match_manual() {
+        let q = quantize_features(&[1.0, -0.26, 300.0], 0.5);
+        assert_eq!(q, vec![2.0, -1.0, 127.0]);
+    }
+}

@@ -1,0 +1,165 @@
+//! Two-pass textual assembler for the 20-bit ISA.
+//!
+//! Syntax (one instruction per line):
+//! ```text
+//! ; comment
+//! start:            ; label
+//!   cfg classes 26  ; cfg takes a register name + 12-bit value
+//!   ldf 0
+//! loop:
+//!   enc 3
+//!   srch 3
+//!   cmp 128
+//!   bnz loop        ; branch targets may be labels or absolute pcs
+//!   halt
+//! ```
+
+use crate::isa::instruction::Instr;
+use crate::isa::opcode::{CfgReg, Opcode};
+use crate::isa::program::Program;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+fn cfg_reg(name: &str) -> Option<CfgReg> {
+    Some(match name {
+        "classes" => CfgReg::Classes,
+        "minseg" => CfgReg::MinSeg,
+        "qbits" => CfgReg::QBits,
+        "mode" => CfgReg::Mode,
+        "trainmode" => CfgReg::TrainMode,
+        _ => return None,
+    })
+}
+
+pub fn assemble(src: &str) -> Result<Program> {
+    // pass 1: collect labels
+    let mut labels: BTreeMap<String, usize> = BTreeMap::new();
+    let mut pc = 0usize;
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip(raw);
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(label) = line.strip_suffix(':') {
+            let label = label.trim();
+            if label.is_empty() || labels.insert(label.to_string(), pc).is_some() {
+                bail!("line {}: bad or duplicate label '{label}'", lineno + 1);
+            }
+        } else {
+            pc += 1;
+        }
+    }
+    // pass 2: encode
+    let mut instrs = Vec::with_capacity(pc);
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip(raw);
+        if line.is_empty() || line.ends_with(':') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let mnemonic = parts.next().unwrap();
+        let op = Opcode::from_mnemonic(mnemonic)
+            .ok_or_else(|| anyhow!("line {}: unknown mnemonic '{mnemonic}'", lineno + 1))?;
+        let instr = match op {
+            Opcode::Cfg => {
+                let reg = parts
+                    .next()
+                    .and_then(cfg_reg)
+                    .ok_or_else(|| anyhow!("line {}: cfg needs a register name", lineno + 1))?;
+                let val: u16 = parts
+                    .next()
+                    .ok_or_else(|| anyhow!("line {}: cfg needs a value", lineno + 1))?
+                    .parse()
+                    .map_err(|_| anyhow!("line {}: bad cfg value", lineno + 1))?;
+                if val >= 1 << 12 {
+                    bail!("line {}: cfg value must fit 12 bits", lineno + 1);
+                }
+                Instr::cfg(reg, val)
+            }
+            Opcode::Bnz | Opcode::Jmp => {
+                let target = parts
+                    .next()
+                    .ok_or_else(|| anyhow!("line {}: branch needs a target", lineno + 1))?;
+                let dest = if let Some(&pc) = labels.get(target) {
+                    pc as u16
+                } else {
+                    target
+                        .parse()
+                        .map_err(|_| anyhow!("line {}: unknown target '{target}'", lineno + 1))?
+                };
+                Instr::new(op, dest)
+            }
+            Opcode::Nop | Opcode::Halt => Instr::new(op, 0),
+            _ => {
+                let operand: u16 = parts
+                    .next()
+                    .unwrap_or("0")
+                    .parse()
+                    .map_err(|_| anyhow!("line {}: bad operand", lineno + 1))?;
+                Instr::new(op, operand)
+            }
+        };
+        if let Some(extra) = parts.next() {
+            bail!("line {}: trailing token '{extra}'", lineno + 1);
+        }
+        instrs.push(instr);
+    }
+    Ok(Program { instrs, labels })
+}
+
+fn strip(line: &str) -> &str {
+    let line = line.split(';').next().unwrap_or("");
+    line.trim()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DEMO: &str = r#"
+        ; progressive inference demo
+        cfg classes 26
+        cfg minseg 1
+          ldf 0
+        loop:
+          enc 0
+          srch 0
+          cmp 128
+          bnz loop
+          sto 0
+          halt
+    "#;
+
+    #[test]
+    fn assembles_demo() {
+        let p = assemble(DEMO).unwrap();
+        assert_eq!(p.len(), 9);
+        assert_eq!(p.labels["loop"], 3);
+        assert_eq!(p.instrs[5].op, Opcode::Cmp);
+        // bnz points back at the loop label
+        assert_eq!(p.instrs[6], Instr::new(Opcode::Bnz, 3));
+    }
+
+    #[test]
+    fn assemble_disassemble_reassemble_fixpoint() {
+        let p = assemble(DEMO).unwrap();
+        let text = p.disassemble();
+        let p2 = assemble(&text).unwrap();
+        assert_eq!(p.instrs, p2.instrs);
+    }
+
+    #[test]
+    fn rejects_unknown_mnemonic_and_labels() {
+        assert!(assemble("frobnicate 1").is_err());
+        assert!(assemble("bnz nowhere").is_err());
+        assert!(assemble("a:\na:\nnop").is_err());
+        assert!(assemble("cfg bogus 1").is_err());
+        assert!(assemble("enc 1 2").is_err());
+    }
+
+    #[test]
+    fn numeric_branch_targets() {
+        let p = assemble("nop\njmp 0").unwrap();
+        assert_eq!(p.instrs[1], Instr::new(Opcode::Jmp, 0));
+    }
+}

@@ -1,0 +1,96 @@
+//! The unified 20-bit instruction word: 4-bit opcode | 16-bit operand.
+
+use crate::isa::opcode::Opcode;
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Instr {
+    pub op: Opcode,
+    pub operand: u16,
+}
+
+impl Instr {
+    pub fn new(op: Opcode, operand: u16) -> Instr {
+        Instr { op, operand }
+    }
+
+    /// Encode into the low 20 bits of a u32 (the chip's bytecode word).
+    pub fn encode(&self) -> u32 {
+        ((self.op as u32) << 16) | self.operand as u32
+    }
+
+    pub fn decode(word: u32) -> Result<Instr> {
+        if word >> 20 != 0 {
+            return Err(anyhow!("instruction word {word:#x} exceeds 20 bits"));
+        }
+        let op = Opcode::from_bits((word >> 16) as u8)
+            .ok_or_else(|| anyhow!("bad opcode in {word:#x}"))?;
+        Ok(Instr { op, operand: (word & 0xFFFF) as u16 })
+    }
+
+    /// `cfg` packs (reg << 12) | value into the operand.
+    pub fn cfg(reg: crate::isa::opcode::CfgReg, value: u16) -> Instr {
+        assert!(value < (1 << 12), "cfg value must fit 12 bits");
+        Instr::new(Opcode::Cfg, ((reg as u16) << 12) | value)
+    }
+
+    pub fn asm(&self) -> String {
+        match self.op {
+            Opcode::Cfg => {
+                if let Some(reg) =
+                    crate::isa::opcode::CfgReg::from_bits((self.operand >> 12) as u8)
+                {
+                    return format!("cfg {} {}", reg.name(), self.operand & 0xFFF);
+                }
+                format!("cfg? {}", self.operand)
+            }
+            Opcode::Nop | Opcode::Halt => self.op.mnemonic().to_string(),
+            _ => format!("{} {}", self.op.mnemonic(), self.operand),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::opcode::CfgReg;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn encode_layout() {
+        let i = Instr::new(Opcode::Enc, 0x0123);
+        assert_eq!(i.encode(), 0x8_0123);
+        let j = Instr::new(Opcode::Halt, 0);
+        assert_eq!(j.encode(), 0x1_0000);
+    }
+
+    #[test]
+    fn prop_encode_decode_roundtrip() {
+        forall(200, 0x15A, |rng| {
+            let op = Opcode::all()[rng.below(16)];
+            let operand = (rng.next_u64() & 0xFFFF) as u16;
+            let i = Instr::new(op, operand);
+            let back = Instr::decode(i.encode()).unwrap();
+            assert_eq!(back, i);
+            assert!(i.encode() < (1 << 20), "20-bit overflow");
+        });
+    }
+
+    #[test]
+    fn decode_rejects_wide_words() {
+        assert!(Instr::decode(1 << 20).is_err());
+    }
+
+    #[test]
+    fn cfg_packing() {
+        let i = Instr::cfg(CfgReg::Mode, 1);
+        assert_eq!(i.operand >> 12, 0x3);
+        assert_eq!(i.operand & 0xFFF, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cfg_value_overflow_panics() {
+        let _ = Instr::cfg(CfgReg::Classes, 4096);
+    }
+}

@@ -1,0 +1,264 @@
+//! Execution model for the 20-bit ISA.
+//!
+//! The interpreter owns architectural state (pc, config registers, the exit
+//! flag, cycle/instruction counters); functional semantics of the
+//! arithmetic/memory instructions are delegated to a [`Device`] — the chip
+//! simulator in production ([`crate::sim`]), or a mock in tests. This split
+//! mirrors the chip: the sequencer is tiny, the datapath does the work.
+
+use crate::isa::instruction::Instr;
+use crate::isa::opcode::{CfgReg, Opcode};
+use crate::isa::program::Program;
+use crate::Result;
+use anyhow::bail;
+
+/// Architectural state visible to programs.
+#[derive(Clone, Debug, Default)]
+pub struct MachineState {
+    pub pc: usize,
+    pub halted: bool,
+    /// confidence-compare result: true = margin exceeded, search may exit
+    pub exit_flag: bool,
+    pub classes: u16,
+    pub min_seg: u16,
+    pub qbits: u16,
+    /// 0 = bypass mode, 1 = normal (WCFE) mode
+    pub mode: u16,
+    pub train_mode: u16,
+    pub instructions_retired: u64,
+}
+
+/// Datapath hooks the interpreter calls into.
+pub trait Device {
+    /// memory-class ops; return value is the cycle cost of the operation.
+    fn load_weights(&mut self, tile: u16) -> Result<u64>;
+    fn load_features(&mut self, slot: u16) -> Result<u64>;
+    fn store(&mut self, slot: u16) -> Result<u64>;
+    fn fifo_push(&mut self, words: u16) -> Result<u64>;
+    fn fifo_pop(&mut self, words: u16) -> Result<u64>;
+    /// arithmetic-class ops
+    fn encode_segment(&mut self, seg: u16) -> Result<u64>;
+    fn search_segment(&mut self, seg: u16) -> Result<u64>;
+    fn train_update(&mut self, class: u16) -> Result<u64>;
+    fn conv_layer(&mut self, layer: u16) -> Result<u64>;
+    /// margin test; returns (margin_exceeded, cycles)
+    fn compare_margin(&mut self, tau_q8_8: u16, state: &MachineState) -> Result<(bool, u64)>;
+    fn quantize(&mut self, bits: u16) -> Result<u64>;
+}
+
+/// Interpreter outcome.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub cycles: u64,
+    pub instructions: u64,
+    pub state: MachineState,
+}
+
+pub struct Interpreter {
+    /// hard cap against runaway programs (branch loops)
+    pub max_instructions: u64,
+}
+
+impl Default for Interpreter {
+    fn default() -> Self {
+        Interpreter { max_instructions: 1_000_000 }
+    }
+}
+
+impl Interpreter {
+    pub fn run(&self, program: &Program, device: &mut dyn Device) -> Result<RunReport> {
+        let mut st = MachineState::default();
+        let mut cycles = 0u64;
+        while !st.halted {
+            if st.pc >= program.instrs.len() {
+                bail!("pc {} fell off the program (missing halt?)", st.pc);
+            }
+            if st.instructions_retired >= self.max_instructions {
+                bail!("instruction budget exceeded (runaway loop?)");
+            }
+            let instr = program.instrs[st.pc];
+            let mut next_pc = st.pc + 1;
+            let cost = self.step(instr, &mut st, &mut next_pc, device)?;
+            cycles += cost.max(1); // every instruction costs >= 1 cycle
+            st.instructions_retired += 1;
+            st.pc = next_pc;
+        }
+        Ok(RunReport { cycles, instructions: st.instructions_retired, state: st })
+    }
+
+    fn step(
+        &self,
+        instr: Instr,
+        st: &mut MachineState,
+        next_pc: &mut usize,
+        device: &mut dyn Device,
+    ) -> Result<u64> {
+        use Opcode::*;
+        Ok(match instr.op {
+            Nop => 0,
+            Halt => {
+                st.halted = true;
+                0
+            }
+            Cfg => {
+                let reg = CfgReg::from_bits((instr.operand >> 12) as u8)
+                    .ok_or_else(|| anyhow::anyhow!("bad cfg register"))?;
+                let val = instr.operand & 0xFFF;
+                match reg {
+                    CfgReg::Classes => st.classes = val,
+                    CfgReg::MinSeg => st.min_seg = val,
+                    CfgReg::QBits => st.qbits = val,
+                    CfgReg::Mode => st.mode = val,
+                    CfgReg::TrainMode => st.train_mode = val,
+                }
+                0
+            }
+            Ldw => device.load_weights(instr.operand)?,
+            Ldf => device.load_features(instr.operand)?,
+            Sto => device.store(instr.operand)?,
+            Push => device.fifo_push(instr.operand)?,
+            Pop => device.fifo_pop(instr.operand)?,
+            Enc => device.encode_segment(instr.operand)?,
+            Srch => device.search_segment(instr.operand)?,
+            Upd => device.train_update(instr.operand)?,
+            Conv => device.conv_layer(instr.operand)?,
+            Cmp => {
+                let (exceeded, c) = device.compare_margin(instr.operand, st)?;
+                st.exit_flag = exceeded;
+                c
+            }
+            Qnt => device.quantize(instr.operand)?,
+            Bnz => {
+                if !st.exit_flag {
+                    *next_pc = instr.operand as usize;
+                }
+                0
+            }
+            Jmp => {
+                *next_pc = instr.operand as usize;
+                0
+            }
+        })
+    }
+}
+
+/// A scripted mock device for interpreter tests: fixed cycle costs, margin
+/// exceeds after `exit_after` compares; records the call sequence.
+#[derive(Debug, Default)]
+pub struct MockDevice {
+    pub calls: Vec<String>,
+    pub exit_after: usize,
+    pub compares: usize,
+}
+
+impl Device for MockDevice {
+    fn load_weights(&mut self, t: u16) -> Result<u64> {
+        self.calls.push(format!("ldw {t}"));
+        Ok(4)
+    }
+    fn load_features(&mut self, s: u16) -> Result<u64> {
+        self.calls.push(format!("ldf {s}"));
+        Ok(8)
+    }
+    fn store(&mut self, s: u16) -> Result<u64> {
+        self.calls.push(format!("sto {s}"));
+        Ok(2)
+    }
+    fn fifo_push(&mut self, w: u16) -> Result<u64> {
+        self.calls.push(format!("push {w}"));
+        Ok(w as u64)
+    }
+    fn fifo_pop(&mut self, w: u16) -> Result<u64> {
+        self.calls.push(format!("pop {w}"));
+        Ok(w as u64)
+    }
+    fn encode_segment(&mut self, s: u16) -> Result<u64> {
+        self.calls.push(format!("enc {s}"));
+        Ok(16)
+    }
+    fn search_segment(&mut self, s: u16) -> Result<u64> {
+        self.calls.push(format!("srch {s}"));
+        Ok(12)
+    }
+    fn train_update(&mut self, c: u16) -> Result<u64> {
+        self.calls.push(format!("upd {c}"));
+        Ok(6)
+    }
+    fn conv_layer(&mut self, l: u16) -> Result<u64> {
+        self.calls.push(format!("conv {l}"));
+        Ok(100)
+    }
+    fn compare_margin(&mut self, _tau: u16, _st: &MachineState) -> Result<(bool, u64)> {
+        self.compares += 1;
+        self.calls.push(format!("cmp#{}", self.compares));
+        Ok((self.compares >= self.exit_after, 1))
+    }
+    fn quantize(&mut self, b: u16) -> Result<u64> {
+        self.calls.push(format!("qnt {b}"));
+        Ok(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assembler::assemble;
+
+    #[test]
+    fn straight_line_program() {
+        let p = assemble("ldf 0\nenc 0\nsrch 0\nsto 1\nhalt").unwrap();
+        let mut dev = MockDevice { exit_after: 1, ..Default::default() };
+        let r = Interpreter::default().run(&p, &mut dev).unwrap();
+        assert_eq!(dev.calls, vec!["ldf 0", "enc 0", "srch 0", "sto 1"]);
+        assert_eq!(r.instructions, 5);
+        assert_eq!(r.cycles, 8 + 16 + 12 + 2 + 1); // halt costs 1 (min)
+    }
+
+    #[test]
+    fn progressive_loop_exits_via_flag() {
+        // the Fig.4 control flow: encode/search segments until cmp sets the
+        // exit flag, then fall through to sto/halt.
+        let src = r#"
+            ldf 0
+            loop:
+              enc 0
+              srch 0
+              cmp 128
+              bnz loop
+            sto 0
+            halt
+        "#;
+        let p = assemble(src).unwrap();
+        let mut dev = MockDevice { exit_after: 3, ..Default::default() };
+        let r = Interpreter::default().run(&p, &mut dev).unwrap();
+        let encs = dev.calls.iter().filter(|c| c.starts_with("enc")).count();
+        assert_eq!(encs, 3, "loop should run exactly 3 iterations");
+        assert!(r.state.exit_flag);
+        assert!(r.state.halted);
+    }
+
+    #[test]
+    fn cfg_registers_set_state() {
+        let p = assemble("cfg classes 26\ncfg mode 1\ncfg qbits 8\nhalt").unwrap();
+        let mut dev = MockDevice { exit_after: 1, ..Default::default() };
+        let r = Interpreter::default().run(&p, &mut dev).unwrap();
+        assert_eq!(r.state.classes, 26);
+        assert_eq!(r.state.mode, 1);
+        assert_eq!(r.state.qbits, 8);
+    }
+
+    #[test]
+    fn runaway_loop_is_caught() {
+        let p = assemble("loop:\njmp loop").unwrap();
+        let mut dev = MockDevice::default();
+        let itp = Interpreter { max_instructions: 1000 };
+        assert!(itp.run(&p, &mut dev).is_err());
+    }
+
+    #[test]
+    fn missing_halt_is_error() {
+        let p = assemble("nop").unwrap();
+        let mut dev = MockDevice::default();
+        assert!(Interpreter::default().run(&p, &mut dev).is_err());
+    }
+}

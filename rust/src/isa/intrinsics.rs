@@ -1,0 +1,195 @@
+//! Programming-model intrinsics (Fig.8): the Rust twin of the chip's C/C++
+//! intrinsic header. High-level CL application code calls these builders;
+//! each emits the exact instruction sequence the inline-assembly operator
+//! would, so `Program::bytecode()` is the deployable image.
+
+use crate::config::HdConfig;
+use crate::isa::instruction::Instr;
+use crate::isa::opcode::{CfgReg, Opcode};
+use crate::isa::program::Program;
+
+/// Builder that accumulates instructions + labels.
+#[derive(Default)]
+pub struct ProgramBuilder {
+    instrs: Vec<Instr>,
+    labels: std::collections::BTreeMap<String, usize>,
+}
+
+impl ProgramBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn label(&mut self, name: &str) -> &mut Self {
+        self.labels.insert(name.to_string(), self.instrs.len());
+        self
+    }
+
+    pub fn emit(&mut self, op: Opcode, operand: u16) -> &mut Self {
+        self.instrs.push(Instr::new(op, operand));
+        self
+    }
+
+    pub fn cfg(&mut self, reg: CfgReg, val: u16) -> &mut Self {
+        self.instrs.push(Instr::cfg(reg, val));
+        self
+    }
+
+    pub fn branch_if_not_exit(&mut self, label: &str) -> &mut Self {
+        let target = self.labels[label] as u16;
+        self.emit(Opcode::Bnz, target)
+    }
+
+    pub fn build(&mut self) -> Program {
+        Program {
+            instrs: std::mem::take(&mut self.instrs),
+            labels: std::mem::take(&mut self.labels),
+        }
+    }
+}
+
+/// Encode tau (confidence knob) into the Cmp operand's q8.8 fixed point.
+pub fn tau_to_q88(tau: f32) -> u16 {
+    (tau * 256.0).round().clamp(0.0, 65535.0) as u16
+}
+
+pub fn q88_to_tau(q: u16) -> f32 {
+    q as f32 / 256.0
+}
+
+/// `clo_infer_progressive()` intrinsic: dual-mode progressive inference.
+/// In normal mode the conv layers run first and their features cross the
+/// CDC FIFO into the HD domain; bypass skips straight to load-features.
+pub fn program_inference(cfg: &HdConfig, n_conv_layers: usize, normal_mode: bool,
+                         tau: f32, min_seg: usize) -> Program {
+    let mut b = ProgramBuilder::new();
+    b.cfg(CfgReg::Classes, cfg.classes as u16)
+        .cfg(CfgReg::QBits, cfg.qbits as u16)
+        .cfg(CfgReg::MinSeg, min_seg as u16)
+        .cfg(CfgReg::Mode, u16::from(normal_mode));
+    if normal_mode {
+        for l in 0..n_conv_layers {
+            b.emit(Opcode::Conv, l as u16);
+        }
+        // WCFE -> HD handoff through the global CDC FIFO
+        b.emit(Opcode::Push, cfg.features() as u16);
+        b.emit(Opcode::Pop, cfg.features() as u16);
+    }
+    b.emit(Opcode::Ldf, 0);
+    b.emit(Opcode::Qnt, cfg.qbits as u16);
+    // Unrolled progressive-search loop (the chip sequencer's macro
+    // expansion): after each segment's cmp, `bnz <next segment>` continues
+    // when the confidence flag is CLEAR; when SET, the guarded `jmp done`
+    // terminates encoding + search early (Fig.4).
+    let mut done_fixups = Vec::new();
+    for seg in 0..cfg.segments {
+        b.emit(Opcode::Enc, seg as u16);
+        b.emit(Opcode::Srch, seg as u16);
+        if seg + 1 >= min_seg && seg + 1 < cfg.segments {
+            b.emit(Opcode::Cmp, tau_to_q88(tau));
+            let next_seg_pc = (b.instrs.len() + 2) as u16;
+            b.emit(Opcode::Bnz, next_seg_pc);
+            done_fixups.push(b.instrs.len());
+            b.emit(Opcode::Jmp, 0); // patched to `done` below
+        }
+    }
+    b.label("done");
+    b.emit(Opcode::Sto, 0);
+    b.emit(Opcode::Halt, 0);
+    let mut p = b.build();
+    let done = p.labels["done"] as u16;
+    for pc in done_fixups {
+        p.instrs[pc] = Instr::new(Opcode::Jmp, done);
+    }
+    p
+}
+
+/// `clo_train_single_pass()` intrinsic: encode all segments, bundle into the
+/// class CHV.
+pub fn program_train(cfg: &HdConfig, class: usize) -> Program {
+    let mut b = ProgramBuilder::new();
+    b.cfg(CfgReg::Classes, cfg.classes as u16)
+        .cfg(CfgReg::QBits, 8)
+        .cfg(CfgReg::TrainMode, 0);
+    b.emit(Opcode::Ldf, 0);
+    b.emit(Opcode::Qnt, 8);
+    for seg in 0..cfg.segments {
+        b.emit(Opcode::Enc, seg as u16);
+    }
+    b.emit(Opcode::Upd, class as u16);
+    b.emit(Opcode::Sto, class as u16);
+    b.emit(Opcode::Halt, 0);
+    b.build()
+}
+
+/// `clo_load_model()` intrinsic: stream encoder factor tiles into the
+/// 8-bank weight buffer.
+pub fn program_load_weights(n_tiles: usize) -> Program {
+    let mut b = ProgramBuilder::new();
+    for t in 0..n_tiles {
+        b.emit(Opcode::Ldw, t as u16);
+    }
+    b.emit(Opcode::Halt, 0);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::interpreter::{Interpreter, MockDevice};
+
+    fn cfg() -> HdConfig {
+        HdConfig::synthetic("t", 8, 8, 32, 32, 8, 10)
+    }
+
+    #[test]
+    fn tau_q88_roundtrip() {
+        for tau in [0.0f32, 0.5, 1.0, 2.25] {
+            assert!((q88_to_tau(tau_to_q88(tau)) - tau).abs() < 1.0 / 256.0);
+        }
+    }
+
+    #[test]
+    fn bypass_program_has_no_conv() {
+        let p = program_inference(&cfg(), 3, false, 0.5, 1);
+        assert!(!p.instrs.iter().any(|i| i.op == Opcode::Conv));
+        assert!(!p.instrs.iter().any(|i| i.op == Opcode::Push));
+        assert_eq!(p.instrs.iter().filter(|i| i.op == Opcode::Enc).count(), 8);
+    }
+
+    #[test]
+    fn normal_program_runs_conv_then_fifo() {
+        let p = program_inference(&cfg(), 3, true, 0.5, 1);
+        let ops: Vec<Opcode> = p.instrs.iter().map(|i| i.op).collect();
+        let conv_pos = ops.iter().position(|&o| o == Opcode::Conv).unwrap();
+        let push_pos = ops.iter().position(|&o| o == Opcode::Push).unwrap();
+        let enc_pos = ops.iter().position(|&o| o == Opcode::Enc).unwrap();
+        assert!(conv_pos < push_pos && push_pos < enc_pos);
+    }
+
+    #[test]
+    fn progressive_program_early_exits_on_device_flag() {
+        let p = program_inference(&cfg(), 0, false, 0.5, 1);
+        let mut dev = MockDevice { exit_after: 2, ..Default::default() };
+        let r = Interpreter::default().run(&p, &mut dev).unwrap();
+        let encs = dev.calls.iter().filter(|c| c.starts_with("enc")).count();
+        assert_eq!(encs, 2, "should stop after the 2nd segment's cmp");
+        assert!(r.state.halted);
+    }
+
+    #[test]
+    fn progressive_program_runs_all_segments_if_never_confident() {
+        let p = program_inference(&cfg(), 0, false, 0.5, 1);
+        let mut dev = MockDevice { exit_after: usize::MAX, ..Default::default() };
+        let _ = Interpreter::default().run(&p, &mut dev).unwrap();
+        let encs = dev.calls.iter().filter(|c| c.starts_with("enc")).count();
+        assert_eq!(encs, 8);
+    }
+
+    #[test]
+    fn train_program_shape() {
+        let p = program_train(&cfg(), 3);
+        assert_eq!(p.instrs.iter().filter(|i| i.op == Opcode::Enc).count(), 8);
+        assert!(p.instrs.iter().any(|i| i.op == Opcode::Upd && i.operand == 3));
+    }
+}

@@ -1,0 +1,21 @@
+//! Customized ISA + programming model (Fig.8).
+//!
+//! Unified 20-bit instruction format: 4-bit opcode + 16-bit operand, two
+//! instruction classes (memory / arithmetic) covering the WCFE, the HD
+//! module and the global FIFO. The chip is programmed through C/C++
+//! intrinsics compiled to this bytecode; here [`intrinsics`] is the Rust
+//! twin of that header, [`assembler`] the textual route, and
+//! [`interpreter`] the execution model driving a [`interpreter::Device`].
+
+pub mod assembler;
+pub mod instruction;
+pub mod interpreter;
+pub mod intrinsics;
+pub mod opcode;
+pub mod program;
+
+pub use assembler::assemble;
+pub use instruction::Instr;
+pub use interpreter::{Device, Interpreter, MachineState};
+pub use opcode::Opcode;
+pub use program::Program;

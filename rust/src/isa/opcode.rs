@@ -1,0 +1,217 @@
+//! The 4-bit opcode space (Fig.8): memory-class and arithmetic-class
+//! instructions for the WCFE, HD module and global FIFO, plus minimal
+//! control flow for programmability.
+
+/// All 16 opcodes. Encodings are frozen (they appear in golden tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Opcode {
+    /// no operation
+    Nop = 0x0,
+    /// stop execution
+    Halt = 0x1,
+    /// set config register [operand: (reg << 12) | value]
+    Cfg = 0x2,
+    // ---- memory class ----
+    /// load weight tile into the encoder weight buffer [operand: tile id]
+    Ldw = 0x3,
+    /// load feature vector from input buffer [operand: slot]
+    Ldf = 0x4,
+    /// store result/CHV block back to cache [operand: slot]
+    Sto = 0x5,
+    /// push through the global CDC FIFO [operand: word count]
+    Push = 0x6,
+    /// pop from the global CDC FIFO [operand: word count]
+    Pop = 0x7,
+    // ---- arithmetic class ----
+    /// Kronecker-encode one QHV segment [operand: segment index]
+    Enc = 0x8,
+    /// associative search over one segment [operand: segment index]
+    Srch = 0x9,
+    /// CHV train update (+QHV / -QHV per coef) [operand: class]
+    Upd = 0xA,
+    /// run one WCFE conv layer [operand: layer index]
+    Conv = 0xB,
+    /// margin/confidence compare; sets the exit flag [operand: tau q8.8]
+    Cmp = 0xC,
+    /// quantize the feature/QHV buffer [operand: bits]
+    Qnt = 0xD,
+    // ---- control ----
+    /// branch to absolute pc if exit flag CLEAR [operand: target]
+    Bnz = 0xE,
+    /// unconditional jump [operand: target]
+    Jmp = 0xF,
+}
+
+impl Opcode {
+    pub fn from_bits(bits: u8) -> Option<Opcode> {
+        use Opcode::*;
+        Some(match bits {
+            0x0 => Nop,
+            0x1 => Halt,
+            0x2 => Cfg,
+            0x3 => Ldw,
+            0x4 => Ldf,
+            0x5 => Sto,
+            0x6 => Push,
+            0x7 => Pop,
+            0x8 => Enc,
+            0x9 => Srch,
+            0xA => Upd,
+            0xB => Conv,
+            0xC => Cmp,
+            0xD => Qnt,
+            0xE => Bnz,
+            0xF => Jmp,
+            _ => return None,
+        })
+    }
+
+    pub fn mnemonic(&self) -> &'static str {
+        use Opcode::*;
+        match self {
+            Nop => "nop",
+            Halt => "halt",
+            Cfg => "cfg",
+            Ldw => "ldw",
+            Ldf => "ldf",
+            Sto => "sto",
+            Push => "push",
+            Pop => "pop",
+            Enc => "enc",
+            Srch => "srch",
+            Upd => "upd",
+            Conv => "conv",
+            Cmp => "cmp",
+            Qnt => "qnt",
+            Bnz => "bnz",
+            Jmp => "jmp",
+        }
+    }
+
+    pub fn from_mnemonic(s: &str) -> Option<Opcode> {
+        use Opcode::*;
+        Some(match s {
+            "nop" => Nop,
+            "halt" => Halt,
+            "cfg" => Cfg,
+            "ldw" => Ldw,
+            "ldf" => Ldf,
+            "sto" => Sto,
+            "push" => Push,
+            "pop" => Pop,
+            "enc" => Enc,
+            "srch" => Srch,
+            "upd" => Upd,
+            "conv" => Conv,
+            "cmp" => Cmp,
+            "qnt" => Qnt,
+            "bnz" => Bnz,
+            "jmp" => Jmp,
+            _ => return None,
+        })
+    }
+
+    /// Instruction class (Fig.8 groups): memory vs arithmetic vs control.
+    pub fn class(&self) -> InstrClass {
+        use Opcode::*;
+        match self {
+            Ldw | Ldf | Sto | Push | Pop => InstrClass::Memory,
+            Enc | Srch | Upd | Conv | Cmp | Qnt => InstrClass::Arithmetic,
+            Nop | Halt | Cfg | Bnz | Jmp => InstrClass::Control,
+        }
+    }
+
+    pub fn all() -> [Opcode; 16] {
+        use Opcode::*;
+        [
+            Nop, Halt, Cfg, Ldw, Ldf, Sto, Push, Pop, Enc, Srch, Upd, Conv,
+            Cmp, Qnt, Bnz, Jmp,
+        ]
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InstrClass {
+    Memory,
+    Arithmetic,
+    Control,
+}
+
+/// Config register ids (operand high nibble of `Cfg`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum CfgReg {
+    /// active class count
+    Classes = 0x0,
+    /// progressive-search minimum segments
+    MinSeg = 0x1,
+    /// quantization bits
+    QBits = 0x2,
+    /// dual-mode select: 0 = bypass, 1 = normal (through WCFE)
+    Mode = 0x3,
+    /// train coefficient select: 0 = add-only, 1 = add/sub
+    TrainMode = 0x4,
+}
+
+impl CfgReg {
+    pub fn name(&self) -> &'static str {
+        use CfgReg::*;
+        match self {
+            Classes => "classes",
+            MinSeg => "minseg",
+            QBits => "qbits",
+            Mode => "mode",
+            TrainMode => "trainmode",
+        }
+    }
+
+    pub fn from_bits(bits: u8) -> Option<CfgReg> {
+        use CfgReg::*;
+        Some(match bits {
+            0x0 => Classes,
+            0x1 => MinSeg,
+            0x2 => QBits,
+            0x3 => Mode,
+            0x4 => TrainMode,
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opcode_bits_roundtrip() {
+        for op in Opcode::all() {
+            assert_eq!(Opcode::from_bits(op as u8), Some(op));
+        }
+        assert_eq!(Opcode::from_bits(16), None);
+    }
+
+    #[test]
+    fn mnemonics_roundtrip() {
+        for op in Opcode::all() {
+            assert_eq!(Opcode::from_mnemonic(op.mnemonic()), Some(op));
+        }
+        assert_eq!(Opcode::from_mnemonic("bogus"), None);
+    }
+
+    #[test]
+    fn classes_partition() {
+        use InstrClass::*;
+        let mut mem = 0;
+        let mut arith = 0;
+        let mut ctl = 0;
+        for op in Opcode::all() {
+            match op.class() {
+                Memory => mem += 1,
+                Arithmetic => arith += 1,
+                Control => ctl += 1,
+            }
+        }
+        assert_eq!((mem, arith, ctl), (5, 6, 5));
+    }
+}

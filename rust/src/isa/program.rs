@@ -1,0 +1,92 @@
+//! Program container: ordered instructions + label map, bytecode emission
+//! and disassembly.
+
+use crate::isa::instruction::Instr;
+use crate::Result;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+    pub labels: BTreeMap<String, usize>,
+}
+
+impl Program {
+    pub fn new(instrs: Vec<Instr>) -> Program {
+        Program { instrs, labels: BTreeMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Emit the 20-bit bytecode words (one u32 per instruction, as the
+    /// inline-assembly operator would).
+    pub fn bytecode(&self) -> Vec<u32> {
+        self.instrs.iter().map(Instr::encode).collect()
+    }
+
+    /// Rebuild a program from bytecode words.
+    pub fn from_bytecode(words: &[u32]) -> Result<Program> {
+        let instrs = words
+            .iter()
+            .map(|&w| Instr::decode(w))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Program::new(instrs))
+    }
+
+    /// Textual disassembly with label annotations.
+    pub fn disassemble(&self) -> String {
+        let rev: BTreeMap<usize, &String> =
+            self.labels.iter().map(|(k, v)| (*v, k)).collect();
+        let mut out = String::new();
+        for (pc, i) in self.instrs.iter().enumerate() {
+            if let Some(l) = rev.get(&pc) {
+                out.push_str(&format!("{l}:\n"));
+            }
+            out.push_str(&format!("  {:<20} ; pc={pc} word={:#07x}\n", i.asm(), i.encode()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::opcode::Opcode;
+
+    #[test]
+    fn bytecode_roundtrip() {
+        let p = Program::new(vec![
+            Instr::new(Opcode::Ldf, 0),
+            Instr::new(Opcode::Enc, 3),
+            Instr::new(Opcode::Halt, 0),
+        ]);
+        let bc = p.bytecode();
+        assert_eq!(bc.len(), 3);
+        let back = Program::from_bytecode(&bc).unwrap();
+        assert_eq!(back.instrs, p.instrs);
+    }
+
+    #[test]
+    fn disassembly_contains_mnemonics_and_labels() {
+        let mut p = Program::new(vec![
+            Instr::new(Opcode::Enc, 0),
+            Instr::new(Opcode::Bnz, 0),
+        ]);
+        p.labels.insert("loop".into(), 0);
+        let d = p.disassemble();
+        assert!(d.contains("loop:"));
+        assert!(d.contains("enc 0"));
+        assert!(d.contains("bnz 0"));
+    }
+
+    #[test]
+    fn from_bytecode_rejects_garbage() {
+        assert!(Program::from_bytecode(&[u32::MAX]).is_err());
+    }
+}

@@ -1,0 +1,37 @@
+//! # Clo-HDnn — continual on-device learning accelerator, reproduced in software
+//!
+//! Rust implementation of the Clo-HDnn system (Song, Xu, et al., VLSI 2025):
+//! a continual-learning accelerator pairing a weight-clustering CNN feature
+//! extractor (WCFE) with a gradient-free hyperdimensional-computing (HDC)
+//! classifier, a Kronecker HD encoder, and progressive associative search.
+//!
+//! Layering (see DESIGN.md):
+//! * **L3 (this crate)** — the chip's coordination fabric: dual-mode routing,
+//!   progressive-search control, CHV cache, training, the custom ISA, the
+//!   CDC FIFO, plus the DVFS energy/latency model calibrated to the paper's
+//!   silicon measurements.
+//! * **L2/L1 (python, build-time only)** — JAX graphs + Pallas kernels,
+//!   AOT-lowered to HLO text under `artifacts/`, loaded and executed here via
+//!   the PJRT C API ([`runtime`]).
+//!
+//! The public API a downstream user touches: [`runtime::Engine`] to load
+//! artifacts, [`hdc::HdClassifier`] + [`coordinator::Coordinator`] for
+//! serving/learning, [`cl::ClHarness`] for continual-learning experiments,
+//! and [`sim::Chip`] for cycle/energy estimates.
+
+pub mod baselines;
+pub mod cl;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod fifo;
+pub mod hdc;
+pub mod isa;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod wcfe;
+
+/// Crate-wide result type (anyhow, matching the xla crate's error style).
+pub type Result<T> = anyhow::Result<T>;

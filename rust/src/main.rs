@@ -1,0 +1,285 @@
+//! Clo-HDnn CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   info                         inspect the artifact manifest
+//!   infer   --config <name>      progressive inference over the test set
+//!   cl-run  --config <name>      continual-learning experiment (Fig.9 row)
+//!   sim     --config <name>      chip latency/energy report (Fig.10)
+//!   serve   --config <name>      Poisson-traffic serving demo
+//!   asm     <file>               assemble + disassemble an ISA program
+//!
+//! Global flags: --artifacts <dir> (default ./artifacts or $CLO_ARTIFACTS),
+//! --tau, --min-seg, --samples, --tasks, --voltage.
+
+use clo_hdnn::cl::learners::HdLearner;
+use clo_hdnn::cl::ClHarness;
+use clo_hdnn::config::HdConfig;
+use clo_hdnn::coordinator::{BackendSpec, Coordinator, CoordinatorOptions, Payload};
+use clo_hdnn::data::{Dataset, TaskStream};
+use clo_hdnn::hdc::{HdClassifier, ProgressiveSearch, Trainer};
+use clo_hdnn::runtime::{Engine, Manifest, PjrtBackend};
+use clo_hdnn::sim::{Chip, Mode};
+use clo_hdnn::util::stats::fmt_secs;
+use clo_hdnn::util::{Args, Rng};
+use clo_hdnn::Result;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => cmd_info(&args),
+        "infer" => cmd_infer(&args),
+        "cl-run" => cmd_cl_run(&args),
+        "sim" => cmd_sim(&args),
+        "serve" => cmd_serve(&args),
+        "asm" => cmd_asm(&args),
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "clo-hdnn <info|infer|cl-run|sim|serve|asm> [flags]
+  --artifacts <dir>   artifact directory (default ./artifacts)
+  --config <name>     HD config: tiny|isolet|ucihar|cifar100
+  --tau <f>           progressive-search confidence (default 0.5)
+  --min-seg <n>       minimum segments before early exit (default 1)
+  --samples <n>       evaluation sample cap
+  --tasks <n>         CL tasks (default 5)
+  --voltage <v>       DVFS point for sim (default 0.9)";
+
+fn artifacts_dir(args: &Args) -> std::path::PathBuf {
+    args.get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir)
+}
+
+fn load_datasets(m: &Manifest, cfg: &str) -> Result<(Dataset, Dataset)> {
+    Ok((
+        Dataset::load(m.dataset_path(&format!("ds_{cfg}_train"))?)?,
+        Dataset::load(m.dataset_path(&format!("ds_{cfg}_test"))?)?,
+    ))
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let m = Manifest::load(artifacts_dir(args))?;
+    m.check_files()?;
+    println!("artifact dir: {}", m.dir.display());
+    println!("configs:");
+    for (name, c) in &m.configs {
+        println!(
+            "  {name:10} F={:<5} D={:<5} classes={:<4} segments={} qbits={} {}",
+            c.features(),
+            c.dim(),
+            c.classes,
+            c.segments,
+            c.qbits,
+            if c.image { "(normal mode)" } else { "(bypass mode)" }
+        );
+    }
+    println!("executables: {}", m.executables.len());
+    for e in m.executables.values() {
+        println!("  {:34} {:14} batch={}", e.name, e.kind, e.batch);
+    }
+    println!("datasets: {}", m.datasets.len());
+    if let Some(w) = &m.wcfe {
+        println!(
+            "wcfe: channels={:?} fc_out={} clusters={} pretrain_acc={:.3} clustered_acc={:.3}",
+            w.channels, w.fc_out, w.clusters, w.pretrain_acc, w.clustered_acc
+        );
+    }
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let cfg_name = args.str_or("config", "tiny");
+    let tau = args.f64_or("tau", 0.5) as f32;
+    let dir = artifacts_dir(args);
+    let mut engine = Engine::load(&dir)?;
+    println!("PJRT platform: {}", engine.platform());
+    let backend = PjrtBackend::new(&mut engine, &cfg_name, 1)?;
+    let mut cl = HdClassifier::new(
+        Box::new(backend),
+        ProgressiveSearch { tau, min_segments: args.usize_or("min-seg", 1) },
+    );
+    let m = &engine.manifest;
+    let (train, test) = load_datasets(m, &cfg_name)?;
+    let cap = args.usize_or("samples", 400);
+
+    let t0 = std::time::Instant::now();
+    let trainer = Trainer { retrain_epochs: args.usize_or("retrain", 1) };
+    let idx: Vec<usize> = (0..train.n.min(cap * 4)).collect();
+    trainer.train_indices(&mut cl, &train, &idx)?;
+    println!("trained on {} samples in {}", idx.len(), fmt_secs(t0.elapsed().as_secs_f64()));
+
+    let t1 = std::time::Instant::now();
+    let n = test.n.min(cap);
+    let report = cl.evaluate((0..n).map(|i| (test.sample(i).to_vec(), test.label(i))))?;
+    let dt = t1.elapsed().as_secs_f64();
+    println!(
+        "accuracy {:.4} over {} samples | mean segments {:.2}/{} (complexity -{:.1}%) | early-exit {:.1}% | {:.1} inf/s",
+        report.accuracy,
+        report.n,
+        report.mean_segments,
+        report.total_segments,
+        report.complexity_reduction() * 100.0,
+        report.early_exit_rate * 100.0,
+        report.n as f64 / dt
+    );
+    Ok(())
+}
+
+fn cmd_cl_run(args: &Args) -> Result<()> {
+    let cfg_name = args.str_or("config", "tiny");
+    let dir = artifacts_dir(args);
+    let mut engine = Engine::load(&dir)?;
+    let cfg = engine.manifest.config(&cfg_name)?.clone();
+    let (train, test) = load_datasets(&engine.manifest, &cfg_name)?;
+    let n_tasks = args.usize_or("tasks", 5).min(cfg.classes);
+    let stream = TaskStream::class_incremental(&train, n_tasks, 1);
+    let mut harness = ClHarness::new(&train, &test, &stream);
+    harness.eval_cap = args.usize_or("samples", 200);
+
+    let backend = PjrtBackend::new(&mut engine, &cfg_name, 1)?;
+    let mut hd = HdLearner::new(
+        HdClassifier::new(
+            Box::new(backend),
+            ProgressiveSearch {
+                tau: args.f64_or("tau", 0.5) as f32,
+                min_segments: args.usize_or("min-seg", 1),
+            },
+        ),
+        Trainer { retrain_epochs: args.usize_or("retrain", 1) },
+    );
+    let run = harness.run(&mut hd)?;
+    println!("learner: {}", run.learner);
+    println!("accuracy curve: {:?}", run
+        .matrix
+        .curve()
+        .iter()
+        .map(|a| (a * 1000.0).round() / 1000.0)
+        .collect::<Vec<_>>());
+    println!(
+        "final avg accuracy {:.4} | mean forgetting {:.4} | mean segments {:?}",
+        run.final_accuracy, run.mean_forgetting, run.mean_segments
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let cfg_name = args.str_or("config", "cifar100");
+    let v = args.f64_or("voltage", 0.9);
+    let m = Manifest::load(artifacts_dir(args))?;
+    let cfg = m.config(&cfg_name)?.clone();
+    let chip = Chip::default();
+    let report = if cfg.image {
+        let wm = m.wcfe.as_ref().ok_or_else(|| anyhow::anyhow!("no wcfe in manifest"))?;
+        let tf = clo_hdnn::data::TensorFile::load(m.dir.join(&wm.weights))?;
+        let model = clo_hdnn::wcfe::WcfeModel::load(
+            &tf, &wm.channels, wm.fc_out, wm.image_hw, wm.image_c)?;
+        let cb_tf = clo_hdnn::data::TensorFile::load(m.dir.join(&wm.codebook))?;
+        let cb = clo_hdnn::wcfe::Codebook::load(
+            &cb_tf,
+            &["conv1", "conv2", "conv3"],
+            (wm.channels.last().unwrap() * wm.fc_out) as u64,
+        )?;
+        chip.simulate_inference(&cfg, Mode::Normal, cfg.segments, Some((&model, &cb)), v)
+    } else {
+        chip.simulate_inference(&cfg, Mode::Bypass, cfg.segments, None, v)
+    };
+    println!(
+        "config {cfg_name} @ {:.2} V / {:.0} MHz:",
+        report.op.voltage, report.op.freq_mhz
+    );
+    for mc in &report.trace.modules {
+        println!(
+            "  {:10} {:>10} cycles {:>12} ops {:>9.3} uJ",
+            mc.name,
+            mc.cycles,
+            mc.ops,
+            mc.energy_j * 1e6
+        );
+    }
+    println!(
+        "latency {} | energy {:.3} uJ | WCFE share: {:.1}% latency, {:.1}% energy",
+        fmt_secs(report.latency_s),
+        report.energy_j * 1e6,
+        report.wcfe_latency_share * 100.0,
+        report.wcfe_energy_share * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg_name = args.str_or("config", "tiny");
+    let dir = artifacts_dir(args);
+    let m = Manifest::load(&dir)?;
+    let cfg = m.config(&cfg_name)?.clone();
+    let (train, test) = load_datasets(&m, &cfg_name)?;
+    let opts = CoordinatorOptions {
+        backend: BackendSpec::Pjrt { artifacts: dir, config: cfg_name.clone() },
+        tau: args.f64_or("tau", 0.5) as f32,
+        min_segments: args.usize_or("min-seg", 1),
+        mode_policy: Default::default(),
+        queue_depth: 256,
+    };
+    let coord = Coordinator::start(opts)?;
+    // online learning phase
+    let learn_n = args.usize_or("learn", 400).min(train.n);
+    for i in 0..learn_n {
+        coord.call(Payload::Learn(train.sample(i).to_vec(), train.label(i)))?;
+    }
+    // serving phase with Poisson arrivals
+    let n = args.usize_or("samples", 200).min(test.n);
+    let rate = args.f64_or("rate", 200.0);
+    let mut rng = Rng::new(9);
+    let mut metrics = clo_hdnn::coordinator::ServeMetrics::default();
+    let mut correct = 0usize;
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(rate)));
+        let r = coord.call(Payload::Features(test.sample(i).to_vec()))?;
+        if r.error.is_some() {
+            metrics.record_error();
+            continue;
+        }
+        metrics.record(r.latency_s, r.segments_used, r.early_exit, r.used_wcfe);
+        correct += usize::from(r.class == Some(test.label(i)));
+    }
+    metrics.wall_s = t0.elapsed().as_secs_f64();
+    println!(
+        "served {} requests | acc {:.4} | p50 {} p95 {} | {:.1} req/s | segments {:.2}/{} (-{:.1}% complexity)",
+        metrics.total,
+        correct as f64 / n as f64,
+        fmt_secs(metrics.latency_percentile(50.0)),
+        fmt_secs(metrics.latency_percentile(95.0)),
+        metrics.throughput_rps(),
+        metrics.mean_segments(),
+        cfg.segments,
+        metrics.complexity_reduction(cfg.segments) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_asm(args: &Args) -> Result<()> {
+    let path = args
+        .positional()
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("asm needs a file path"))?;
+    let src = std::fs::read_to_string(path)?;
+    let prog = clo_hdnn::isa::assemble(&src)?;
+    println!("{} instructions, bytecode words:", prog.len());
+    for (i, w) in prog.bytecode().iter().enumerate() {
+        println!("  [{i:3}] {w:#07x}");
+    }
+    println!("\ndisassembly:\n{}", prog.disassemble());
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! [`PjrtBackend`]: the production [`HdBackend`] executing the AOT-lowered
+//! Pallas/JAX artifacts (encode_segment / encode_full / search_seg) through
+//! the PJRT engine. Holds `Rc` executable handles so several backends can
+//! share one engine's compilation cache.
+
+use crate::config::HdConfig;
+use crate::hdc::HdBackend;
+use crate::runtime::engine::{Arg, Engine, Executable};
+use crate::Result;
+use anyhow::bail;
+use std::rc::Rc;
+
+pub struct PjrtBackend {
+    cfg: HdConfig,
+    enc_seg: Rc<Executable>,
+    enc_full: Rc<Executable>,
+    search_seg: Rc<Executable>,
+    /// batch size the handles were lowered for
+    batch: usize,
+}
+
+impl PjrtBackend {
+    /// Build from an engine for the named config and batch size (an
+    /// executable set for that batch must exist in the manifest).
+    pub fn new(engine: &mut Engine, config: &str, batch: usize) -> Result<PjrtBackend> {
+        let cfg = engine.manifest.config(config)?.clone();
+        if !cfg.batches.contains(&batch) {
+            bail!(
+                "config {config} has no batch-{batch} executables (has {:?})",
+                cfg.batches
+            );
+        }
+        Ok(PjrtBackend {
+            enc_seg: engine.executable(&format!("encode_segment_{config}_b{batch}"))?,
+            enc_full: engine.executable(&format!("encode_full_{config}_b{batch}"))?,
+            search_seg: engine.executable(&format!("search_seg_{config}_b{batch}"))?,
+            cfg,
+            batch,
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Pad a partial batch up to the lowered batch size (replicating the
+    /// last row) and run; callers slice the result back down.
+    fn pad(&self, xs: &[f32], batch: usize, width: usize) -> Vec<f32> {
+        let mut padded = Vec::with_capacity(self.batch * width);
+        padded.extend_from_slice(xs);
+        let last = &xs[(batch - 1) * width..batch * width];
+        for _ in batch..self.batch {
+            padded.extend_from_slice(last);
+        }
+        padded
+    }
+}
+
+impl HdBackend for PjrtBackend {
+    fn cfg(&self) -> &HdConfig {
+        &self.cfg
+    }
+
+    fn encode_segment(&mut self, xs: &[f32], batch: usize, seg: usize) -> Result<Vec<f32>> {
+        let feat = self.cfg.features();
+        if batch > self.batch || xs.len() != batch * feat {
+            bail!("encode_segment: bad batch {batch} / len {}", xs.len());
+        }
+        if seg >= self.cfg.segments {
+            bail!("segment {seg} out of range");
+        }
+        let padded = self.pad(xs, batch, feat);
+        let out = self.enc_seg.run(&[
+            Arg::F32(&padded, &[self.batch, feat]),
+            Arg::I32(seg as i32),
+        ])?;
+        Ok(out[..batch * self.cfg.seg_len()].to_vec())
+    }
+
+    fn encode_full(&mut self, xs: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let feat = self.cfg.features();
+        if batch > self.batch || xs.len() != batch * feat {
+            bail!("encode_full: bad batch {batch} / len {}", xs.len());
+        }
+        let padded = self.pad(xs, batch, feat);
+        let out = self
+            .enc_full
+            .run(&[Arg::F32(&padded, &[self.batch, feat])])?;
+        Ok(out[..batch * self.cfg.dim()].to_vec())
+    }
+
+    fn search(
+        &mut self,
+        qs: &[f32],
+        batch: usize,
+        chvs: &[f32],
+        classes: usize,
+        len: usize,
+    ) -> Result<Vec<f32>> {
+        if len != self.cfg.seg_len() || classes != self.cfg.classes {
+            bail!(
+                "search executable lowered for (C={}, L={}), got (C={classes}, L={len})",
+                self.cfg.classes,
+                self.cfg.seg_len()
+            );
+        }
+        if batch > self.batch || qs.len() != batch * len {
+            bail!("search: bad batch {batch} / len {}", qs.len());
+        }
+        let padded = self.pad(qs, batch, len);
+        let out = self.search_seg.run(&[
+            Arg::F32(&padded, &[self.batch, len]),
+            Arg::F32(chvs, &[classes, len]),
+        ])?;
+        Ok(out[..batch * classes].to_vec())
+    }
+}

@@ -1,0 +1,147 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once on
+//! the CPU PJRT client, and executes them from the request path.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`, with
+//! outputs unwrapped via `to_tuple1` (everything is lowered with
+//! return_tuple=True).
+
+use crate::runtime::manifest::Manifest;
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Executable handle + its manifest shapes.
+pub struct Executable {
+    pub exe: xla::PjRtLoadedExecutable,
+    pub inputs: Vec<Vec<usize>>,
+    pub out: Vec<usize>,
+    pub name: String,
+    /// execution counter (perf accounting)
+    pub calls: std::cell::Cell<u64>,
+}
+
+/// An argument for [`Executable::run`].
+pub enum Arg<'a> {
+    /// f32 tensor with explicit dims
+    F32(&'a [f32], &'a [usize]),
+    /// i32 scalar
+    I32(i32),
+}
+
+impl Executable {
+    /// Execute with shape-checked arguments; returns the flat f32 output.
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<f32>> {
+        if args.len() != self.inputs.len() {
+            bail!(
+                "{}: got {} args, expected {}",
+                self.name,
+                args.len(),
+                self.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, arg) in args.iter().enumerate() {
+            match arg {
+                Arg::F32(data, dims) => {
+                    let want: usize = self.inputs[i].iter().product();
+                    if data.len() != want {
+                        bail!(
+                            "{}: arg {i} has {} elems, manifest says {:?}",
+                            self.name,
+                            data.len(),
+                            self.inputs[i]
+                        );
+                    }
+                    // single-copy literal construction (PERF: vec1+reshape
+                    // copied the buffer twice; see EXPERIMENTS.md §Perf)
+                    let bytes = unsafe {
+                        std::slice::from_raw_parts(
+                            data.as_ptr() as *const u8,
+                            std::mem::size_of_val(*data),
+                        )
+                    };
+                    literals.push(xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::F32,
+                        dims,
+                        bytes,
+                    )?);
+                }
+                Arg::I32(v) => literals.push(xla::Literal::scalar(*v)),
+            }
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let out = lit.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?).map(|v| {
+            self.calls.set(self.calls.get() + 1);
+            v
+        })
+    }
+}
+
+/// Loads + compiles + caches executables for one artifact directory.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, Rc<Executable>>,
+}
+
+impl Engine {
+    /// Open the artifact directory and start a CPU PJRT client.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an executable by manifest name.
+    pub fn executable(&mut self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self.manifest.executable(name)?.clone();
+        let path = self.manifest.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {}", path.display()))?,
+        )
+        .with_context(|| format!("parse HLO {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {name}"))?;
+        let handle = Rc::new(Executable {
+            exe,
+            inputs: meta.inputs,
+            out: meta.out,
+            name: name.to_string(),
+            calls: std::cell::Cell::new(0),
+        });
+        self.cache.insert(name.to_string(), handle.clone());
+        Ok(handle)
+    }
+
+    /// Convenience: run by name with f32 tensors shaped per the manifest.
+    pub fn run_f32(&mut self, name: &str, tensors: &[&[f32]]) -> Result<Vec<f32>> {
+        let exe = self.executable(name)?;
+        let shapes = exe.inputs.clone();
+        let args: Vec<Arg> = tensors
+            .iter()
+            .zip(shapes.iter())
+            .map(|(t, s)| Arg::F32(t, s))
+            .collect();
+        exe.run(&args)
+    }
+
+    /// Number of distinct compiled executables (startup-cost accounting).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}

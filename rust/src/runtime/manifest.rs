@@ -1,0 +1,253 @@
+//! Parsed form of `artifacts/manifest.json` (written by aot.py): the
+//! catalogue of AOT-lowered executables, datasets, weights, and per-config
+//! calibration the Rust side runs against.
+
+use crate::config::HdConfig;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lowered executable's metadata.
+#[derive(Clone, Debug)]
+pub struct ExeMeta {
+    pub name: String,
+    pub file: String,
+    pub config: String,
+    pub kind: String,
+    pub batch: usize,
+    /// input shapes as lowered (row-major dims)
+    pub inputs: Vec<Vec<usize>>,
+    /// output shape
+    pub out: Vec<usize>,
+}
+
+/// One dataset artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct DatasetMeta {
+    pub name: String,
+    pub file: String,
+    pub n: usize,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+/// WCFE build info (normal mode only).
+#[derive(Clone, Debug)]
+pub struct WcfeMeta {
+    pub image_hw: usize,
+    pub image_c: usize,
+    pub channels: Vec<usize>,
+    pub fc_out: usize,
+    pub clusters: usize,
+    pub pretrain_acc: f64,
+    pub clustered_acc: f64,
+    pub weights: String,
+    pub weights_dense: String,
+    pub codebook: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, HdConfig>,
+    pub executables: BTreeMap<String, ExeMeta>,
+    pub datasets: BTreeMap<String, DatasetMeta>,
+    pub wcfe: Option<WcfeMeta>,
+}
+
+fn usize_arr(j: &Json) -> Vec<usize> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+
+        let mut configs = BTreeMap::new();
+        for (name, meta) in j
+            .get("configs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing configs"))?
+        {
+            configs.insert(name.clone(), HdConfig::from_manifest(name, meta)?);
+        }
+
+        let mut executables = BTreeMap::new();
+        for e in j
+            .get("executables")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing executables"))?
+        {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("executable missing name"))?
+                .to_string();
+            let inputs = e
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .map(|i| usize_arr(i.get("shape").unwrap_or(&Json::Null)))
+                        .collect()
+                })
+                .unwrap_or_default();
+            executables.insert(
+                name.clone(),
+                ExeMeta {
+                    file: e
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: missing file"))?
+                        .to_string(),
+                    config: e
+                        .get("config")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    kind: e.get("kind").and_then(Json::as_str).unwrap_or("").to_string(),
+                    batch: e.get("batch").and_then(Json::as_usize).unwrap_or(1),
+                    inputs,
+                    out: usize_arr(e.get("out").unwrap_or(&Json::Null)),
+                    name,
+                },
+            );
+        }
+
+        let mut datasets = BTreeMap::new();
+        for d in j.get("datasets").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = d
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("dataset missing name"))?
+                .to_string();
+            datasets.insert(
+                name.clone(),
+                DatasetMeta {
+                    file: d
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    n: d.get("n").and_then(Json::as_usize).unwrap_or(0),
+                    dim: d.get("dim").and_then(Json::as_usize).unwrap_or(0),
+                    classes: d.get("classes").and_then(Json::as_usize).unwrap_or(0),
+                    name,
+                },
+            );
+        }
+
+        let wcfe = j.get("wcfe").map(|w| WcfeMeta {
+            image_hw: w.get("image_hw").and_then(Json::as_usize).unwrap_or(32),
+            image_c: w.get("image_c").and_then(Json::as_usize).unwrap_or(3),
+            channels: usize_arr(w.get("channels").unwrap_or(&Json::Null)),
+            fc_out: w.get("fc_out").and_then(Json::as_usize).unwrap_or(0),
+            clusters: w.get("clusters").and_then(Json::as_usize).unwrap_or(16),
+            pretrain_acc: w.get("pretrain_acc").and_then(Json::as_f64).unwrap_or(0.0),
+            clustered_acc: w.get("clustered_acc").and_then(Json::as_f64).unwrap_or(0.0),
+            weights: w.get("weights").and_then(Json::as_str).unwrap_or("").to_string(),
+            weights_dense: w
+                .get("weights_dense")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            codebook: w.get("codebook").and_then(Json::as_str).unwrap_or("").to_string(),
+        });
+
+        Ok(Manifest { dir, configs, executables, datasets, wcfe })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&HdConfig> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow!("no config {name} in manifest"))
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&ExeMeta> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable {name} in manifest"))
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetMeta> {
+        self.datasets
+            .get(name)
+            .ok_or_else(|| anyhow!("no dataset {name} in manifest"))
+    }
+
+    pub fn dataset_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.dataset(name)?.file))
+    }
+
+    pub fn exe_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.executable(name)?.file))
+    }
+
+    /// Default artifact directory: $CLO_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CLO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Validate that every referenced file exists on disk.
+    pub fn check_files(&self) -> Result<()> {
+        for e in self.executables.values() {
+            let p = self.dir.join(&e.file);
+            if !p.exists() {
+                bail!("missing artifact {}", p.display());
+            }
+        }
+        for d in self.datasets.values() {
+            let p = self.dir.join(&d.file);
+            if !p.exists() {
+                bail!("missing dataset {}", p.display());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "configs": {"tiny": {"f1":8,"f2":8,"d1":32,"d2":32,"segments":8,
+        "classes":10,"qbits":8,"scale_x":0.5,"scale_q":3.0,
+        "mean_absdiff":40.0,"batches":[1,8],"image":false}},
+      "executables": [
+        {"name":"encode_full_tiny_b1","file":"e.hlo.txt","config":"tiny",
+         "kind":"encode_full","batch":1,
+         "inputs":[{"shape":[1,64],"dtype":"float32"}],"out":[1,1024]}],
+      "datasets": [{"name":"ds_tiny_train","file":"d.bin","n":400,
+                    "dim":64,"classes":10}]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("clo_hdnn_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(SAMPLE.as_bytes()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let cfg = m.config("tiny").unwrap();
+        assert_eq!(cfg.dim(), 1024);
+        let e = m.executable("encode_full_tiny_b1").unwrap();
+        assert_eq!(e.inputs, vec![vec![1, 64]]);
+        assert_eq!(e.out, vec![1, 1024]);
+        assert_eq!(m.dataset("ds_tiny_train").unwrap().n, 400);
+        assert!(m.config("absent").is_err());
+        // files don't exist -> check_files errors
+        assert!(m.check_files().is_err());
+    }
+}

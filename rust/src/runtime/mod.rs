@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT artifacts (HLO text lowered from JAX/Pallas by
+//! `python/compile/aot.py`), compile once per process, execute on the hot
+//! path. Python never runs here.
+
+pub mod backend;
+pub mod engine;
+pub mod manifest;
+
+pub use backend::PjrtBackend;
+pub use engine::{Arg, Engine, Executable};
+pub use manifest::Manifest;

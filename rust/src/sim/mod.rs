@@ -1,0 +1,11 @@
+//! Whole-chip simulator: composes the WCFE PE-array model, the encoder and
+//! search datapath models, the CDC FIFO and the energy model into
+//! per-inference latency/energy reports (Fig.10) and an ISA [`crate::isa::Device`].
+
+pub mod chip;
+pub mod device;
+pub mod trace;
+
+pub use chip::{Chip, Mode, SimReport};
+pub use device::SimDevice;
+pub use trace::{ModuleCost, Trace};

@@ -1,0 +1,119 @@
+//! Per-module cycle/energy accounting used by the chip simulator and the
+//! Fig.10c/d breakdown bench.
+
+use crate::energy::Domain;
+
+/// One module's contribution to an inference.
+#[derive(Clone, Debug)]
+pub struct ModuleCost {
+    pub name: String,
+    pub domain: Domain,
+    pub cycles: u64,
+    /// arithmetic ops (FLOPs for WCFE, INT ops for HDC)
+    pub ops: u64,
+    /// SRAM bytes touched
+    pub sram_bytes: u64,
+    pub energy_j: f64,
+}
+
+/// Ordered collection of module costs for one simulated operation.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub modules: Vec<ModuleCost>,
+}
+
+impl Trace {
+    pub fn push(&mut self, m: ModuleCost) {
+        self.modules.push(m);
+    }
+
+    pub fn total_cycles(&self, domain: Option<Domain>) -> u64 {
+        self.modules
+            .iter()
+            .filter(|m| domain.map(|d| m.domain == d).unwrap_or(true))
+            .map(|m| m.cycles)
+            .sum()
+    }
+
+    pub fn total_energy_j(&self, domain: Option<Domain>) -> f64 {
+        self.modules
+            .iter()
+            .filter(|m| domain.map(|d| m.domain == d).unwrap_or(true))
+            .map(|m| m.energy_j)
+            .sum()
+    }
+
+    pub fn total_ops(&self, domain: Option<Domain>) -> u64 {
+        self.modules
+            .iter()
+            .filter(|m| domain.map(|d| m.domain == d).unwrap_or(true))
+            .map(|m| m.ops)
+            .sum()
+    }
+
+    /// (latency%, energy%) share of one domain — the Fig.10c/d numbers.
+    pub fn domain_share(&self, domain: Domain) -> (f64, f64) {
+        let lat = self.total_cycles(Some(domain)) as f64
+            / self.total_cycles(None).max(1) as f64;
+        let e = self.total_energy_j(Some(domain)) / self.total_energy_j(None).max(1e-30);
+        (lat, e)
+    }
+
+    /// Merge another trace into this one (multi-inference accumulation).
+    pub fn merge(&mut self, other: &Trace) {
+        for m in &other.modules {
+            if let Some(existing) = self
+                .modules
+                .iter_mut()
+                .find(|e| e.name == m.name && e.domain == m.domain)
+            {
+                existing.cycles += m.cycles;
+                existing.ops += m.ops;
+                existing.sram_bytes += m.sram_bytes;
+                existing.energy_j += m.energy_j;
+            } else {
+                self.modules.push(m.clone());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(name: &str, domain: Domain, cycles: u64, energy: f64) -> ModuleCost {
+        ModuleCost {
+            name: name.into(),
+            domain,
+            cycles,
+            ops: cycles,
+            sram_bytes: 0,
+            energy_j: energy,
+        }
+    }
+
+    #[test]
+    fn totals_and_shares() {
+        let mut t = Trace::default();
+        t.push(m("wcfe", Domain::Wcfe, 90, 9e-6));
+        t.push(m("enc", Domain::Hdc, 5, 0.5e-6));
+        t.push(m("srch", Domain::Hdc, 5, 0.5e-6));
+        assert_eq!(t.total_cycles(None), 100);
+        let (lat, e) = t.domain_share(Domain::Wcfe);
+        assert!((lat - 0.9).abs() < 1e-12);
+        assert!((e - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_accumulates_by_name() {
+        let mut a = Trace::default();
+        a.push(m("enc", Domain::Hdc, 5, 1e-6));
+        let mut b = Trace::default();
+        b.push(m("enc", Domain::Hdc, 7, 2e-6));
+        b.push(m("srch", Domain::Hdc, 3, 1e-6));
+        a.merge(&b);
+        assert_eq!(a.modules.len(), 2);
+        assert_eq!(a.total_cycles(None), 15);
+    }
+}

@@ -1,0 +1,110 @@
+//! Dependency-free CLI argument parser (no clap in the offline vendor set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments; typed getters with defaults.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    flags.insert(stripped.to_string(), v);
+                } else {
+                    flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Args { flags, positional }
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number")))
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_styles() {
+        let a = parse(&["--mode", "serve", "--batch=8", "--fast"]);
+        assert_eq!(a.str_or("mode", ""), "serve");
+        assert_eq!(a.usize_or("batch", 0), 8);
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = parse(&["run", "--x", "1", "path/to/file"]);
+        assert_eq!(a.positional(), &["run".to_string(), "path/to/file".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("n", 42), 42);
+        assert_eq!(a.f64_or("tau", 1.5), 1.5);
+        assert_eq!(a.str_or("name", "tiny"), "tiny");
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "2"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.usize_or("b", 0), 2);
+    }
+}

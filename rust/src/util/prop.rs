@@ -1,0 +1,103 @@
+//! Mini property-testing framework (the vendor set has no proptest).
+//!
+//! `forall(cases, seed, |rng| ...)` runs a property against `cases`
+//! independently seeded [`Rng`] streams; on failure it reports the failing
+//! stream's seed so the case can be replayed deterministically with
+//! `replay(seed, ...)`. Generators are just closures over `Rng` — shapes,
+//! vectors, quantized values, etc. live next to their modules.
+
+use super::rng::Rng;
+
+/// Run `prop` against `cases` independent random streams. Panics with the
+/// failing seed embedded in the message.
+pub fn forall<F: FnMut(&mut Rng)>(cases: usize, seed: u64, mut prop: F) {
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed on case {case} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn replay<F: FnMut(&mut Rng)>(case_seed: u64, mut prop: F) {
+    let mut rng = Rng::new(case_seed);
+    prop(&mut rng);
+}
+
+/// Common generators.
+pub mod gen {
+    use super::Rng;
+
+    /// Vector of INT8-valued f32 in [-127, 127].
+    pub fn int8_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.range(-127, 128) as f32).collect()
+    }
+
+    /// +-1 matrix (flattened row-major).
+    pub fn sign_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
+        (0..rows * cols).map(|_| rng.sign()).collect()
+    }
+
+    /// Gaussian f32 vector.
+    pub fn normal_vec(rng: &mut Rng, len: usize, sigma: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.normal_f32() * sigma).collect()
+    }
+
+    /// Pick one of the given values.
+    pub fn choice<T: Copy>(rng: &mut Rng, options: &[T]) -> T {
+        options[rng.below(options.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially_true_property() {
+        forall(50, 1, |rng| {
+            let x = rng.uniform();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn forall_reports_seed_on_failure() {
+        forall(50, 2, |rng| {
+            assert!(rng.uniform() < 0.5, "coin landed high");
+        });
+    }
+
+    #[test]
+    fn generators_shapes() {
+        let mut rng = Rng::new(3);
+        assert_eq!(gen::int8_vec(&mut rng, 10).len(), 10);
+        assert_eq!(gen::sign_matrix(&mut rng, 3, 4).len(), 12);
+        let c = gen::choice(&mut rng, &[1, 2, 3]);
+        assert!((1..=3).contains(&c));
+    }
+
+    #[test]
+    fn int8_vec_in_range() {
+        let mut rng = Rng::new(4);
+        for v in gen::int8_vec(&mut rng, 1000) {
+            assert!((-127.0..=127.0).contains(&v));
+            assert_eq!(v.fract(), 0.0);
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Timing + statistics for the hand-rolled benchmark harness.
+//!
+//! `cargo bench` runs `[[bench]] harness = false` binaries built on
+//! [`Bench`]: warmup, repeated timed runs, robust summary (median / p95 /
+//! mean / stddev), and table-formatted reporting so each bench reproduces
+//! one of the paper's figures/tables as printed rows.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a set of per-iteration durations (seconds).
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    pub fn from_secs(mut xs: Vec<f64>) -> Summary {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            median: percentile_sorted(&xs, 50.0),
+            p95: percentile_sorted(&xs, 95.0),
+            min: xs[0],
+            max: xs[n - 1],
+            stddev: var.sqrt(),
+        }
+    }
+}
+
+/// Percentile over a pre-sorted slice (linear interpolation).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Micro-benchmark runner.
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 3, iters: 20 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bench { warmup, iters }
+    }
+
+    /// Time `f` (excluding warmup runs); returns per-iteration seconds.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Summary {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Summary::from_secs(samples)
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Throughput formatting (ops/s).
+pub fn fmt_rate(ops_per_sec: f64) -> String {
+    if ops_per_sec >= 1e9 {
+        format!("{:.2} Gop/s", ops_per_sec / 1e9)
+    } else if ops_per_sec >= 1e6 {
+        format!("{:.2} Mop/s", ops_per_sec / 1e6)
+    } else if ops_per_sec >= 1e3 {
+        format!("{:.2} Kop/s", ops_per_sec / 1e3)
+    } else {
+        format!("{ops_per_sec:.2} op/s")
+    }
+}
+
+/// Fixed-width table printer used by every figure-bench.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let cols: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            println!("| {} |", cols.join(" | "));
+        };
+        line(&self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::from_secs(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = vec![0.0, 10.0];
+        assert!((percentile_sorted(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn bench_runs_expected_iters() {
+        let mut count = 0usize;
+        let b = Bench::new(2, 5);
+        let s = b.run(|| count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with("ms"));
+        assert!(fmt_secs(2e-6).ends_with("us"));
+        assert!(fmt_rate(5e6).contains("Mop/s"));
+    }
+}

@@ -1,0 +1,147 @@
+//! Weight codebook (Fig.7a): per-layer centroid table + per-weight indices,
+//! and the storage model behind the paper's 1.9x parameter reduction.
+
+use crate::data::TensorFile;
+use crate::wcfe::clustering::kmeans_1d;
+use crate::Result;
+use anyhow::bail;
+
+/// One conv layer's clustered weights: idx is (k_in x c_out) row-major.
+#[derive(Clone, Debug)]
+pub struct LayerCodebook {
+    pub name: String,
+    pub centroids: Vec<f32>,
+    pub idx: Vec<u32>,
+    pub k_in: usize,
+    pub c_out: usize,
+}
+
+impl LayerCodebook {
+    pub fn from_weights(name: &str, w: &[f32], k_in: usize, c_out: usize,
+                        clusters: usize) -> LayerCodebook {
+        assert_eq!(w.len(), k_in * c_out);
+        let (centroids, idx) = kmeans_1d(w, clusters, 30);
+        LayerCodebook { name: name.into(), centroids, idx, k_in, c_out }
+    }
+
+    /// Reconstruct the dense weight matrix from the codebook.
+    pub fn reconstruct(&self) -> Vec<f32> {
+        self.idx.iter().map(|&i| self.centroids[i as usize]).collect()
+    }
+
+    /// Index width in bits (ceil log2 of codebook size).
+    pub fn index_bits(&self) -> u32 {
+        (usize::BITS - (self.centroids.len() - 1).leading_zeros()).max(1)
+    }
+
+    /// Storage bits: dense BF16 vs clustered (index table + centroid table).
+    pub fn dense_bits(&self) -> u64 {
+        self.idx.len() as u64 * 16
+    }
+
+    pub fn clustered_bits(&self) -> u64 {
+        self.idx.len() as u64 * self.index_bits() as u64
+            + self.centroids.len() as u64 * 16
+    }
+}
+
+/// The whole WCFE's codebooks (conv layers clustered; FC stays dense BF16,
+/// mirroring the paper which clusters the CONV filters).
+#[derive(Clone, Debug)]
+pub struct Codebook {
+    pub layers: Vec<LayerCodebook>,
+    /// dense (unclustered) parameter bits outside the codebooks (FC)
+    pub dense_tail_bits: u64,
+}
+
+impl Codebook {
+    /// Load the build-time codebook artifact (wcfe_codebook.bin).
+    pub fn load(tf: &TensorFile, layer_names: &[&str], fc_params: u64) -> Result<Codebook> {
+        let mut layers = Vec::new();
+        for name in layer_names {
+            let cent = tf.f32(&format!("{name}_centroids"))?;
+            let idx_t = tf.get(&format!("{name}_idx"))?;
+            let dims = idx_t.dims().to_vec();
+            if dims.len() != 2 {
+                bail!("{name}_idx must be 2-D, got {dims:?}");
+            }
+            let idx: Vec<u32> = idx_t.as_i32()?.iter().map(|&v| v as u32).collect();
+            layers.push(LayerCodebook {
+                name: name.to_string(),
+                centroids: cent.to_vec(),
+                idx,
+                k_in: dims[0],
+                c_out: dims[1],
+            });
+        }
+        Ok(Codebook { layers, dense_tail_bits: fc_params * 16 })
+    }
+
+    /// Total model parameter bits, dense BF16 baseline.
+    pub fn total_dense_bits(&self) -> u64 {
+        self.layers.iter().map(|l| l.dense_bits()).sum::<u64>() + self.dense_tail_bits
+    }
+
+    /// Total model parameter bits with clustering.
+    pub fn total_clustered_bits(&self) -> u64 {
+        self.layers.iter().map(|l| l.clustered_bits()).sum::<u64>() + self.dense_tail_bits
+    }
+
+    /// The Fig.7 parameter-reduction factor (paper: 1.9x).
+    pub fn param_reduction(&self) -> f64 {
+        self.total_dense_bits() as f64 / self.total_clustered_bits() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn toy_layer(k_in: usize, c_out: usize, clusters: usize, seed: u64) -> LayerCodebook {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..k_in * c_out).map(|_| rng.normal_f32() * 0.1).collect();
+        LayerCodebook::from_weights("l", &w, k_in, c_out, clusters)
+    }
+
+    #[test]
+    fn reconstruct_uses_centroid_values() {
+        let l = toy_layer(9, 4, 4, 1);
+        let w = l.reconstruct();
+        assert_eq!(w.len(), 36);
+        for (v, &i) in w.iter().zip(&l.idx) {
+            assert_eq!(*v, l.centroids[i as usize]);
+        }
+    }
+
+    #[test]
+    fn index_bits() {
+        assert_eq!(toy_layer(9, 4, 16, 2).index_bits(), 4);
+        assert_eq!(toy_layer(9, 4, 2, 3).index_bits(), 1);
+        assert_eq!(toy_layer(9, 4, 5, 4).index_bits(), 3);
+    }
+
+    #[test]
+    fn param_reduction_matches_paper_shape() {
+        // Our cifar WCFE: conv 27x32, 288x64, 576x128 clustered @16 (4-bit
+        // idx), FC 128*512 dense bf16 -> overall ~1.8-2x, the paper's 1.9x.
+        let layers = vec![
+            toy_layer(27, 32, 16, 5),
+            toy_layer(288, 64, 16, 6),
+            toy_layer(576, 128, 16, 7),
+        ];
+        let cb = Codebook { layers, dense_tail_bits: 128 * 512 * 16 };
+        let r = cb.param_reduction();
+        assert!(r > 1.6 && r < 2.4, "param reduction {r}");
+    }
+
+    #[test]
+    fn conv_only_reduction_is_near_4x() {
+        let cb = Codebook {
+            layers: vec![toy_layer(288, 64, 16, 8)],
+            dense_tail_bits: 0,
+        };
+        let r = cb.param_reduction();
+        assert!(r > 3.5 && r < 4.1, "{r}");
+    }
+}

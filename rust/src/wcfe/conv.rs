@@ -1,0 +1,246 @@
+//! Software reference of the WCFE forward pass (conv3x3-relu-maxpool x3,
+//! GAP, FC) — the same graph `python/compile/model.py::wcfe_forward` lowers,
+//! in plain f32. Production inference uses the AOT `wcfe_fwd` artifact; this
+//! twin exists for parity tests, ablations at other codebook sizes, and the
+//! PE-array cost model's layer geometry.
+
+use crate::data::TensorFile;
+use crate::Result;
+use anyhow::bail;
+
+/// One conv layer's weights as a (k_in = 9*c_in) x c_out matrix.
+#[derive(Clone, Debug)]
+pub struct ConvLayer {
+    pub w: Vec<f32>,
+    pub c_in: usize,
+    pub c_out: usize,
+}
+
+/// The WCFE model: conv stack + FC, loaded from wcfe_weights.bin.
+#[derive(Clone, Debug)]
+pub struct WcfeModel {
+    pub convs: Vec<ConvLayer>,
+    /// (c_last, fc_out)
+    pub fc: Vec<f32>,
+    pub fc_out: usize,
+    pub image_hw: usize,
+    pub image_c: usize,
+}
+
+impl WcfeModel {
+    /// Load from the named-tensor artifact; layer channel plan must match.
+    pub fn load(tf: &TensorFile, channels: &[usize], fc_out: usize,
+                image_hw: usize, image_c: usize) -> Result<WcfeModel> {
+        let mut convs = Vec::new();
+        let mut c_in = image_c;
+        for (i, &c_out) in channels.iter().enumerate() {
+            let name = format!("conv{}", i + 1);
+            let w = tf.f32_shaped(&name, &[9 * c_in, c_out])?;
+            convs.push(ConvLayer { w: w.to_vec(), c_in, c_out });
+            c_in = c_out;
+        }
+        let fc = tf.f32_shaped("fc", &[c_in, fc_out])?;
+        Ok(WcfeModel {
+            convs,
+            fc: fc.to_vec(),
+            fc_out,
+            image_hw,
+            image_c,
+        })
+    }
+
+    /// Forward one image (h*w*c row-major, values in [0,1]) to features.
+    pub fn forward(&self, img: &[f32]) -> Result<Vec<f32>> {
+        let hw = self.image_hw;
+        if img.len() != hw * hw * self.image_c {
+            bail!("image len {} != {}", img.len(), hw * hw * self.image_c);
+        }
+        // input normalization matches model.py: x*2 - 1
+        let mut x: Vec<f32> = img.iter().map(|&v| v * 2.0 - 1.0).collect();
+        let mut h = hw;
+        let mut c = self.image_c;
+        for layer in &self.convs {
+            x = conv3x3_same(&x, h, c, &layer.w, layer.c_out);
+            for v in &mut x {
+                *v = v.max(0.0); // relu
+            }
+            x = maxpool2(&x, h, layer.c_out);
+            h /= 2;
+            c = layer.c_out;
+        }
+        // global average pool -> (c,)
+        let mut gap = vec![0.0f32; c];
+        let positions = (h * h) as f32;
+        for p in 0..h * h {
+            for ch in 0..c {
+                gap[ch] += x[p * c + ch];
+            }
+        }
+        for v in &mut gap {
+            *v /= positions;
+        }
+        // fc: (c) @ (c, fc_out)
+        let mut out = vec![0.0f32; self.fc_out];
+        for (i, &g) in gap.iter().enumerate() {
+            let row = &self.fc[i * self.fc_out..(i + 1) * self.fc_out];
+            for (o, &w) in out.iter_mut().zip(row) {
+                *o += g * w;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Layer output geometries (for the PE-array cost model): (h, w) of each
+    /// conv layer's output plane (before pooling).
+    pub fn layer_geometries(&self) -> Vec<(usize, usize)> {
+        let mut h = self.image_hw;
+        let mut out = Vec::new();
+        for _ in &self.convs {
+            out.push((h, h));
+            h /= 2;
+        }
+        out
+    }
+
+    /// Total dense MACs of one forward pass (conv + fc).
+    pub fn dense_macs(&self) -> u64 {
+        let mut h = self.image_hw as u64;
+        let mut total = 0u64;
+        for l in &self.convs {
+            total += h * h * (9 * l.c_in * l.c_out) as u64;
+            h /= 2;
+        }
+        total + (self.convs.last().map(|l| l.c_out).unwrap_or(0) * self.fc_out) as u64
+    }
+}
+
+/// SAME-padded 3x3 convolution over (h, h, c_in) row-major NHWC data.
+/// w is (9*c_in, c_out) with patch order matching model.py's im2col
+/// (dy-major, then dx, then channel).
+pub fn conv3x3_same(x: &[f32], h: usize, c_in: usize, w: &[f32], c_out: usize) -> Vec<f32> {
+    assert_eq!(x.len(), h * h * c_in);
+    assert_eq!(w.len(), 9 * c_in * c_out);
+    let mut out = vec![0.0f32; h * h * c_out];
+    for py in 0..h {
+        for px in 0..h {
+            let obase = (py * h + px) * c_out;
+            for (tap, (dy, dx)) in (0..3)
+                .flat_map(|dy| (0..3).map(move |dx| (dy, dx)))
+                .enumerate()
+            {
+                let iy = py as isize + dy as isize - 1;
+                let ix = px as isize + dx as isize - 1;
+                if iy < 0 || ix < 0 || iy >= h as isize || ix >= h as isize {
+                    continue;
+                }
+                let ibase = (iy as usize * h + ix as usize) * c_in;
+                for ci in 0..c_in {
+                    let xv = x[ibase + ci];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let wrow = &w[(tap * c_in + ci) * c_out..(tap * c_in + ci + 1) * c_out];
+                    let orow = &mut out[obase..obase + c_out];
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += xv * wv;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 2x2 max pooling over (h, h, c) NHWC.
+pub fn maxpool2(x: &[f32], h: usize, c: usize) -> Vec<f32> {
+    let oh = h / 2;
+    let mut out = vec![f32::NEG_INFINITY; oh * oh * c];
+    for py in 0..oh {
+        for px in 0..oh {
+            for dy in 0..2 {
+                for dx in 0..2 {
+                    let ibase = ((2 * py + dy) * h + 2 * px + dx) * c;
+                    let obase = (py * oh + px) * c;
+                    for ch in 0..c {
+                        let v = x[ibase + ch];
+                        if v > out[obase + ch] {
+                            out[obase + ch] = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn conv_identity_kernel_center_tap() {
+        // kernel with 1.0 at the center tap copies the input channel
+        let h = 4;
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..h * h).map(|_| rng.normal_f32()).collect();
+        let mut w = vec![0.0f32; 9];
+        w[4] = 1.0; // tap (dy=1, dx=1), c_in=c_out=1
+        let y = conv3x3_same(&x, h, 1, &w, 1);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn conv_counts_border_taps_correctly() {
+        // all-ones kernel over all-ones image: corner=4, edge=6, interior=9
+        let h = 4;
+        let x = vec![1.0f32; h * h];
+        let w = vec![1.0f32; 9];
+        let y = conv3x3_same(&x, h, 1, &w, 1);
+        assert_eq!(y[0], 4.0);
+        assert_eq!(y[1], 6.0);
+        assert_eq!(y[h + 1], 9.0);
+    }
+
+    #[test]
+    fn maxpool_picks_max() {
+        let x = vec![
+            1.0, 5.0, 2.0, 0.0, //
+            3.0, 4.0, 1.0, 7.0, //
+            0.0, 0.0, 9.0, 1.0, //
+            2.0, 1.0, 0.0, 3.0,
+        ];
+        let y = maxpool2(&x, 4, 1);
+        assert_eq!(y, vec![5.0, 7.0, 2.0, 9.0]);
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let mut rng = Rng::new(2);
+        let channels = [4usize, 8];
+        let mut convs = Vec::new();
+        let mut c_in = 3;
+        for &c_out in &channels {
+            convs.push(ConvLayer {
+                w: (0..9 * c_in * c_out).map(|_| rng.normal_f32() * 0.1).collect(),
+                c_in,
+                c_out,
+            });
+            c_in = c_out;
+        }
+        let model = WcfeModel {
+            convs,
+            fc: (0..8 * 16).map(|_| rng.normal_f32() * 0.1).collect(),
+            fc_out: 16,
+            image_hw: 8,
+            image_c: 3,
+        };
+        let img: Vec<f32> = (0..8 * 8 * 3).map(|_| rng.uniform() as f32).collect();
+        let f = model.forward(&img).unwrap();
+        assert_eq!(f.len(), 16);
+        assert!(f.iter().all(|v| v.is_finite()));
+        assert_eq!(model.layer_geometries(), vec![(8, 8), (4, 4)]);
+        assert!(model.dense_macs() > 0);
+    }
+}

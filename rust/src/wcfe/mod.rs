@@ -1,0 +1,22 @@
+//! WCFE — Weight-Clustering Feature Extractor (Fig.7).
+//!
+//! Numerics of the conv stack run through the AOT `wcfe_fwd` artifact (or
+//! the [`conv`] software reference); what lives here natively is the paper's
+//! *architectural* content:
+//! * post-training weight clustering + codebook ([`clustering`], [`codebook`]),
+//! * the pattern-reuse schedule (accumulate inputs sharing a weight index,
+//!   multiply once — [`schedule`]),
+//! * the 4x16 PE-array cycle/op model behind the 1.9x parameter and 2.1x
+//!   CONV-compute reduction claims ([`pe_array`]).
+
+pub mod clustering;
+pub mod codebook;
+pub mod conv;
+pub mod pe_array;
+pub mod schedule;
+
+pub use clustering::kmeans_1d;
+pub use codebook::{Codebook, LayerCodebook};
+pub use conv::WcfeModel;
+pub use pe_array::{PeArray, PeCost};
+pub use schedule::ReuseSchedule;

@@ -1,0 +1,145 @@
+//! Pattern-reuse schedule (Fig.7b): for each output channel, group the
+//! weight positions by codebook index so inputs sharing a weight are
+//! ACCUMULATED first and MULTIPLIED once. This is the data structure the PE
+//! array walks; its shape determines the add/multiply counts in
+//! [`crate::wcfe::pe_array`].
+
+use crate::wcfe::codebook::LayerCodebook;
+
+/// For one output channel: `groups[c]` = the input-patch positions whose
+/// weight maps to centroid `c`.
+#[derive(Clone, Debug)]
+pub struct ChannelSchedule {
+    pub groups: Vec<Vec<u32>>,
+}
+
+impl ChannelSchedule {
+    /// Non-empty groups = number of multiplies this channel needs.
+    pub fn multiplies(&self) -> usize {
+        self.groups.iter().filter(|g| !g.is_empty()).count()
+    }
+
+    /// Total accumulation adds (= k_in, every input added into some bin).
+    pub fn adds(&self) -> usize {
+        self.groups.iter().map(|g| g.len()).sum()
+    }
+}
+
+/// The whole layer's reuse schedule.
+#[derive(Clone, Debug)]
+pub struct ReuseSchedule {
+    pub channels: Vec<ChannelSchedule>,
+    pub k_in: usize,
+}
+
+impl ReuseSchedule {
+    pub fn build(cb: &LayerCodebook) -> ReuseSchedule {
+        let ncl = cb.centroids.len();
+        let mut channels = Vec::with_capacity(cb.c_out);
+        for co in 0..cb.c_out {
+            let mut groups = vec![Vec::new(); ncl];
+            for k in 0..cb.k_in {
+                let idx = cb.idx[k * cb.c_out + co] as usize;
+                groups[idx].push(k as u32);
+            }
+            channels.push(ChannelSchedule { groups });
+        }
+        ReuseSchedule { channels, k_in: cb.k_in }
+    }
+
+    /// Dense multiply count per output position (one MAC per weight).
+    pub fn dense_mults(&self) -> usize {
+        self.channels.len() * self.k_in
+    }
+
+    /// Clustered multiply count per output position.
+    pub fn clustered_mults(&self) -> usize {
+        self.channels.iter().map(|c| c.multiplies()).sum()
+    }
+
+    /// Accumulation adds per output position (same dense vs clustered).
+    pub fn adds(&self) -> usize {
+        self.channels.iter().map(|c| c.adds()).sum()
+    }
+
+    /// Execute the schedule on one input patch (reference semantics used by
+    /// tests to prove reuse == dense math).
+    pub fn apply(&self, cb: &LayerCodebook, patch: &[f32]) -> Vec<f32> {
+        assert_eq!(patch.len(), self.k_in);
+        self.channels
+            .iter()
+            .map(|ch| {
+                let mut acc = 0.0f32;
+                for (c, group) in ch.groups.iter().enumerate() {
+                    if group.is_empty() {
+                        continue;
+                    }
+                    // accumulate inputs sharing weight c ...
+                    let s: f32 = group.iter().map(|&k| patch[k as usize]).sum();
+                    // ... multiply once
+                    acc += s * cb.centroids[c];
+                }
+                acc
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+    use crate::util::Rng;
+    use crate::wcfe::codebook::LayerCodebook;
+
+    fn toy(k_in: usize, c_out: usize, clusters: usize, seed: u64) -> LayerCodebook {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..k_in * c_out).map(|_| rng.normal_f32()).collect();
+        LayerCodebook::from_weights("l", &w, k_in, c_out, clusters)
+    }
+
+    #[test]
+    fn schedule_covers_every_weight_once() {
+        let cb = toy(27, 8, 4, 1);
+        let s = ReuseSchedule::build(&cb);
+        for ch in &s.channels {
+            let mut seen: Vec<u32> = ch.groups.iter().flatten().copied().collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..27).collect::<Vec<_>>());
+        }
+        assert_eq!(s.adds(), 27 * 8);
+    }
+
+    #[test]
+    fn reuse_math_equals_dense_matmul() {
+        let cb = toy(18, 6, 4, 2);
+        let s = ReuseSchedule::build(&cb);
+        let w = cb.reconstruct();
+        let mut rng = Rng::new(3);
+        let patch: Vec<f32> = (0..18).map(|_| rng.normal_f32()).collect();
+        let got = s.apply(&cb, &patch);
+        for co in 0..6 {
+            let want: f32 = (0..18).map(|k| patch[k] * w[k * 6 + co]).sum();
+            assert!((got[co] - want).abs() < 1e-4, "{} vs {}", got[co], want);
+        }
+    }
+
+    #[test]
+    fn clustered_mults_bounded_by_codebook_size() {
+        let cb = toy(288, 16, 16, 4);
+        let s = ReuseSchedule::build(&cb);
+        assert!(s.clustered_mults() <= 16 * 16);
+        assert!(s.clustered_mults() < s.dense_mults());
+    }
+
+    #[test]
+    fn prop_mult_reduction_grows_with_fan_in() {
+        forall(10, 0xF16, |rng| {
+            let k_in = gen::choice(rng, &[64usize, 256, 512]);
+            let cb = toy(k_in, 4, 16, rng.next_u64());
+            let s = ReuseSchedule::build(&cb);
+            let reduction = s.dense_mults() as f64 / s.clustered_mults() as f64;
+            assert!(reduction >= k_in as f64 / 16.0 * 0.9);
+        });
+    }
+}

@@ -1,0 +1,79 @@
+//! Golden-vector cross-checks: the Rust software implementations must
+//! reproduce the JAX oracle exactly (artifacts/golden.bin, written by
+//! python -m compile.fixtures).
+
+use clo_hdnn::config::HdConfig;
+use clo_hdnn::data::TensorFile;
+use clo_hdnn::hdc::encoder::SoftwareEncoder;
+use clo_hdnn::hdc::{distance, quantize, HdBackend};
+
+fn golden() -> Option<TensorFile> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden.bin");
+    if !path.exists() {
+        eprintln!("skipping golden tests: {} missing (run make artifacts)", path.display());
+        return None;
+    }
+    Some(TensorFile::load(path).expect("load golden.bin"))
+}
+
+#[test]
+fn kron_encode_matches_jax_oracle() {
+    let Some(tf) = golden() else { return };
+    let a = tf.f32("kron_a").unwrap().to_vec();
+    let b = tf.f32("kron_b").unwrap().to_vec();
+    let x = tf.f32("kron_x").unwrap();
+    let scale = tf.f32("kron_scale").unwrap()[0];
+    let mut cfg = HdConfig::synthetic("g", 8, 8, 32, 32, 8, 4);
+    cfg.scale_q = scale;
+    let mut enc = SoftwareEncoder::new(cfg.clone(), a.clone(), b.clone()).unwrap();
+    let got = enc.encode_full(x, 4).unwrap();
+    assert_eq!(got, tf.f32("kron_out").unwrap());
+
+    // INT1 and INT4 modes
+    for (bits, name) in [(1u8, "kron_out_b1"), (4, "kron_out_b4")] {
+        let mut c = cfg.clone();
+        c.qbits = bits;
+        let mut e = SoftwareEncoder::new(c, a.clone(), b.clone()).unwrap();
+        assert_eq!(e.encode_full(x, 4).unwrap(), tf.f32(name).unwrap(), "bits={bits}");
+    }
+}
+
+#[test]
+fn search_matches_jax_oracle() {
+    let Some(tf) = golden() else { return };
+    let q = tf.f32("search_q").unwrap();
+    let chv = tf.f32("search_chv").unwrap();
+    let l1 = distance::l1_batch(q, 3, chv, 12, 256).unwrap();
+    assert_eq!(l1, tf.f32("search_l1").unwrap());
+    let dot = distance::neg_dot_batch(q, 3, chv, 12, 256).unwrap();
+    let want = tf.f32("search_dot").unwrap();
+    for (g, w) in dot.iter().zip(want) {
+        assert!((g - w).abs() < 1e-2, "{g} vs {w}");
+    }
+}
+
+#[test]
+fn train_update_matches_jax_oracle() {
+    let Some(tf) = golden() else { return };
+    let chvs = tf.f32("train_chvs").unwrap();
+    let qhv = tf.f32("train_qhv").unwrap();
+    let coef = tf.f32("train_coef").unwrap();
+    let want = tf.f32("train_out").unwrap();
+    // the raw saturating chip update (== the train_update HLO artifact)
+    let mut got = chvs.to_vec();
+    clo_hdnn::hdc::chv::raw_update(&mut got, qhv, coef);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn quantizer_matches_jax_oracle() {
+    let Some(tf) = golden() else { return };
+    let y = tf.f32("quant_in").unwrap();
+    for bits in [1u8, 2, 4, 8] {
+        let want = tf.f32(&format!("quant_out_b{bits}")).unwrap();
+        for (i, &v) in y.iter().enumerate() {
+            let got = quantize::quantize(v, bits, 2.5);
+            assert_eq!(got, want[i], "bits={bits} idx={i} in={v}");
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Integration tests over the PJRT runtime + AOT artifacts: the lowered
+//! Pallas/JAX executables must agree with the Rust software implementations
+//! bit-for-bit, and the full serving path must work end-to-end.
+//!
+//! These tests are skipped (with a note) if `artifacts/` has not been built.
+
+use clo_hdnn::config::HdConfig;
+use clo_hdnn::data::{Dataset, TensorFile};
+use clo_hdnn::hdc::encoder::SoftwareEncoder;
+use clo_hdnn::hdc::{HdBackend, HdClassifier, ProgressiveSearch, Trainer};
+use clo_hdnn::runtime::{Arg, Engine, PjrtBackend};
+use clo_hdnn::util::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime tests: artifacts/ missing (run make artifacts)");
+        None
+    }
+}
+
+fn software_twin(engine: &Engine, cfg: &HdConfig) -> SoftwareEncoder {
+    let tf = TensorFile::load(engine.manifest.dir.join(format!("hd_factors_{}.bin", cfg.name)))
+        .expect("factors bin");
+    SoftwareEncoder::new(
+        cfg.clone(),
+        tf.f32_shaped("a", &[cfg.d1, cfg.f1]).unwrap().to_vec(),
+        tf.f32_shaped("b", &[cfg.d2, cfg.f2]).unwrap().to_vec(),
+    )
+    .unwrap()
+}
+
+fn int8_features(cfg: &HdConfig, n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * cfg.features())
+        .map(|_| rng.range(-127, 128) as f32)
+        .collect()
+}
+
+#[test]
+fn pjrt_encode_full_matches_software() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(&dir).unwrap();
+    let cfg = engine.manifest.config("tiny").unwrap().clone();
+    let mut pjrt = PjrtBackend::new(&mut engine, "tiny", 1).unwrap();
+    let mut sw = software_twin(&engine, &cfg);
+    let xs = int8_features(&cfg, 1, 1);
+    let got = pjrt.encode_full(&xs, 1).unwrap();
+    let want = sw.encode_full(&xs, 1).unwrap();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn pjrt_encode_segments_match_software_and_concat_to_full() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(&dir).unwrap();
+    let cfg = engine.manifest.config("tiny").unwrap().clone();
+    let mut pjrt = PjrtBackend::new(&mut engine, "tiny", 1).unwrap();
+    let mut sw = software_twin(&engine, &cfg);
+    let xs = int8_features(&cfg, 1, 2);
+    let full = pjrt.encode_full(&xs, 1).unwrap();
+    let mut cat = Vec::new();
+    for s in 0..cfg.segments {
+        let seg_pjrt = pjrt.encode_segment(&xs, 1, s).unwrap();
+        let seg_sw = sw.encode_segment(&xs, 1, s).unwrap();
+        assert_eq!(seg_pjrt, seg_sw, "segment {s}");
+        cat.extend(seg_pjrt);
+    }
+    assert_eq!(cat, full);
+}
+
+#[test]
+fn pjrt_batched_encode_matches_loop() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(&dir).unwrap();
+    let cfg = engine.manifest.config("tiny").unwrap().clone();
+    let mut b8 = PjrtBackend::new(&mut engine, "tiny", 8).unwrap();
+    let xs = int8_features(&cfg, 8, 3);
+    let batched = b8.encode_full(&xs, 8).unwrap();
+    let mut b1 = PjrtBackend::new(&mut engine, "tiny", 1).unwrap();
+    for n in 0..8 {
+        let one = b1
+            .encode_full(&xs[n * cfg.features()..(n + 1) * cfg.features()], 1)
+            .unwrap();
+        assert_eq!(&batched[n * cfg.dim()..(n + 1) * cfg.dim()], &one[..], "row {n}");
+    }
+    // partial batch via padding
+    let part = b8.encode_full(&xs[..3 * cfg.features()], 3).unwrap();
+    assert_eq!(&part[..], &batched[..3 * cfg.dim()]);
+}
+
+#[test]
+fn pjrt_search_matches_software_l1() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(&dir).unwrap();
+    let cfg = engine.manifest.config("tiny").unwrap().clone();
+    let mut pjrt = PjrtBackend::new(&mut engine, "tiny", 1).unwrap();
+    let mut rng = Rng::new(4);
+    let q: Vec<f32> = (0..cfg.seg_len()).map(|_| rng.range(-127, 128) as f32).collect();
+    let chv: Vec<f32> = (0..cfg.classes * cfg.seg_len())
+        .map(|_| rng.range(-127, 128) as f32)
+        .collect();
+    let got = pjrt.search(&q, 1, &chv, cfg.classes, cfg.seg_len()).unwrap();
+    let want =
+        clo_hdnn::hdc::distance::l1_batch(&q, 1, &chv, cfg.classes, cfg.seg_len()).unwrap();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn pjrt_train_update_executable_matches_semantics() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(&dir).unwrap();
+    let cfg = engine.manifest.config("tiny").unwrap().clone();
+    let exe = engine.executable("train_update_tiny").unwrap();
+    let mut rng = Rng::new(5);
+    let chvs: Vec<f32> = (0..cfg.classes * cfg.dim())
+        .map(|_| rng.range(-120, 121) as f32)
+        .collect();
+    let qhv: Vec<f32> = (0..cfg.dim()).map(|_| rng.range(-127, 128) as f32).collect();
+    let mut coef = vec![0.0f32; cfg.classes];
+    coef[2] = 1.0;
+    coef[7] = -1.0;
+    let out = exe
+        .run(&[
+            Arg::F32(&chvs, &[cfg.classes, cfg.dim()]),
+            Arg::F32(&qhv, &[cfg.dim()]),
+            Arg::F32(&coef, &[cfg.classes]),
+        ])
+        .unwrap();
+    for c in 0..cfg.classes {
+        for i in 0..cfg.dim() {
+            let want = (chvs[c * cfg.dim() + i] + coef[c] * qhv[i]).clamp(-127.0, 127.0);
+            assert_eq!(out[c * cfg.dim() + i], want, "class {c} elem {i}");
+        }
+    }
+}
+
+#[test]
+fn end_to_end_train_and_classify_tiny_via_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(&dir).unwrap();
+    let backend = PjrtBackend::new(&mut engine, "tiny", 1).unwrap();
+    let mut cl = HdClassifier::new(
+        Box::new(backend),
+        ProgressiveSearch { tau: 0.5, min_segments: 1 },
+    );
+    let train = Dataset::load(engine.manifest.dataset_path("ds_tiny_train").unwrap()).unwrap();
+    let test = Dataset::load(engine.manifest.dataset_path("ds_tiny_test").unwrap()).unwrap();
+    let idx: Vec<usize> = (0..train.n).collect();
+    Trainer { retrain_epochs: 1 }
+        .train_indices(&mut cl, &train, &idx)
+        .unwrap();
+    let report = cl
+        .evaluate((0..100).map(|i| (test.sample(i).to_vec(), test.label(i))))
+        .unwrap();
+    assert!(
+        report.accuracy > 0.9,
+        "tiny accuracy through PJRT: {}",
+        report.accuracy
+    );
+}
+
+#[test]
+fn wcfe_forward_artifact_runs_and_matches_software_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(&dir).unwrap();
+    let Some(wcfe) = engine.manifest.wcfe.clone() else {
+        eprintln!("skipping: no wcfe in manifest");
+        return;
+    };
+    let exe = engine.executable("wcfe_fwd_b1").unwrap();
+    let tf = TensorFile::load(engine.manifest.dir.join(&wcfe.weights)).unwrap();
+    let model = clo_hdnn::wcfe::WcfeModel::load(
+        &tf,
+        &wcfe.channels,
+        wcfe.fc_out,
+        wcfe.image_hw,
+        wcfe.image_c,
+    )
+    .unwrap();
+    let mut rng = Rng::new(6);
+    let img: Vec<f32> = (0..wcfe.image_hw * wcfe.image_hw * wcfe.image_c)
+        .map(|_| rng.uniform() as f32)
+        .collect();
+    let got = exe
+        .run(&[Arg::F32(&img, &[1, wcfe.image_hw, wcfe.image_hw, wcfe.image_c])])
+        .unwrap();
+    let want = model.forward(&img).unwrap();
+    assert_eq!(got.len(), want.len());
+    // the artifact runs in BF16, the software twin in f32: compare loosely
+    let mut max_rel: f32 = 0.0;
+    let scale = want.iter().map(|v| v.abs()).fold(0.0f32, f32::max).max(1e-3);
+    for (g, w) in got.iter().zip(&want) {
+        max_rel = max_rel.max((g - w).abs() / scale);
+    }
+    assert!(max_rel < 0.05, "bf16-vs-f32 relative deviation {max_rel}");
+}

@@ -1,34 +1,23 @@
 //! §Perf — L3 hot-path microbenchmarks: per-stage latency of the serving
 //! loop (quantize / encode-segment / partial-search / full pipeline)
-//! through both backends, plus the dynamic batcher's b8 amortization.
+//! through the NativeBackend, plus the dynamic batcher's b8 amortization.
+//! With `--features pjrt` and a populated artifacts/ directory the same
+//! stages also run through the AOT/PJRT backend for comparison.
 //! This is the bench the EXPERIMENTS.md §Perf iteration log quotes.
 
 use clo_hdnn::config::HdConfig;
-use clo_hdnn::data::TensorFile;
-use clo_hdnn::hdc::encoder::SoftwareEncoder;
+use clo_hdnn::data::synthetic;
 use clo_hdnn::hdc::quantize::quantize_features;
 use clo_hdnn::hdc::{ChvStore, HdBackend, HdClassifier, ProgressiveSearch, Trainer};
-use clo_hdnn::runtime::{Engine, Manifest, PjrtBackend};
+use clo_hdnn::runtime::NativeBackend;
 use clo_hdnn::util::stats::{fmt_secs, Bench, Table};
 use clo_hdnn::util::Rng;
 
 fn main() {
-    let Ok(mut engine) = Engine::load(Manifest::default_dir()) else {
-        eprintln!("run `make artifacts` first");
-        std::process::exit(1);
-    };
+    let cfg: HdConfig = synthetic::config("isolet").expect("builtin config");
     let cfg_name = "isolet";
-    let cfg = engine.manifest.config(cfg_name).unwrap().clone();
-    let tf = TensorFile::load(engine.manifest.dir.join(format!("hd_factors_{cfg_name}.bin")))
-        .unwrap();
-    let mut sw = SoftwareEncoder::new(
-        cfg.clone(),
-        tf.f32("a").unwrap().to_vec(),
-        tf.f32("b").unwrap().to_vec(),
-    )
-    .unwrap();
-    let mut pjrt = PjrtBackend::new(&mut engine, cfg_name, 1).unwrap();
-    let mut pjrt8 = PjrtBackend::new(&mut engine, cfg_name, 8).unwrap();
+    // one factor set (seed 1) shared by every measured pipeline
+    let mut native = NativeBackend::seeded(cfg.clone(), 1, 8).expect("native backend");
 
     let mut rng = Rng::new(1);
     let x: Vec<f32> = (0..cfg.features()).map(|_| rng.normal_f32()).collect();
@@ -39,7 +28,7 @@ fn main() {
         let q: Vec<f32> = (0..cfg.dim()).map(|_| rng.range(-40, 41) as f32).collect();
         store.update(c, &q, 1.0).unwrap();
     }
-    let qseg = sw.encode_segment(&xq, 1, 0).unwrap();
+    let qseg = native.encode_segment(&xq, 1, 0).unwrap();
 
     let bench = Bench::new(5, 40);
     println!("== L3 hot-path stages (config {cfg_name}: F={} D={} segs={}) ==",
@@ -49,69 +38,62 @@ fn main() {
     let s = bench.run(|| quantize_features(&x, cfg.scale_x));
     t.row(&["quantize features".into(), fmt_secs(s.median), fmt_secs(s.p95), "rust".into()]);
 
-    let s = bench.run(|| sw.encode_segment(&xq, 1, 0).unwrap());
-    t.row(&["encode segment (software)".into(), fmt_secs(s.median), fmt_secs(s.p95), "rust twin".into()]);
-    let s = bench.run(|| pjrt.encode_segment(&xq, 1, 0).unwrap());
-    t.row(&["encode segment (PJRT b1)".into(), fmt_secs(s.median), fmt_secs(s.p95), "AOT Pallas".into()]);
-    let s = bench.run(|| pjrt8.encode_segment(&x8, 8, 0).unwrap());
+    let s = bench.run(|| native.encode_segment(&xq, 1, 0).unwrap());
+    t.row(&["encode segment (native b1)".into(), fmt_secs(s.median), fmt_secs(s.p95), "kron".into()]);
+    let s = bench.run(|| native.encode_segment(&x8, 8, 0).unwrap());
     t.row(&[
-        "encode segment (PJRT b8)".into(),
+        "encode segment (native b8)".into(),
         fmt_secs(s.median),
         fmt_secs(s.p95),
         format!("{} per sample", fmt_secs(s.median / 8.0)),
     ]);
 
-    let s = bench.run(|| pjrt.encode_full(&xq, 1).unwrap());
-    t.row(&["encode full (PJRT b1)".into(), fmt_secs(s.median), fmt_secs(s.p95), "16 segs worth".into()]);
+    let s = bench.run(|| native.encode_full(&xq, 1).unwrap());
+    t.row(&["encode full (native b1)".into(), fmt_secs(s.median), fmt_secs(s.p95),
+            format!("{} segs worth", cfg.segments)]);
 
     let s = bench.run(|| {
-        pjrt.search(&qseg, 1, store.segment(0), cfg.classes, cfg.seg_len())
+        native
+            .search(&qseg, 1, store.segment(0), cfg.classes, cfg.seg_len())
             .unwrap()
     });
-    t.row(&["partial search (PJRT b1)".into(), fmt_secs(s.median), fmt_secs(s.p95), "26 CHVs".into()]);
-    let s = bench.run(|| {
-        clo_hdnn::hdc::distance::l1_batch(&qseg, 1, store.segment(0), cfg.classes, cfg.seg_len())
-            .unwrap()
-    });
-    t.row(&["partial search (software)".into(), fmt_secs(s.median), fmt_secs(s.p95), "rust twin".into()]);
+    t.row(&["partial search (native b1)".into(), fmt_secs(s.median), fmt_secs(s.p95),
+            format!("{} CHVs", cfg.classes)]);
     t.print();
 
-    // end-to-end progressive classify, both backends
+    // end-to-end progressive vs exhaustive classify on the native pipeline
     println!("\n== end-to-end progressive classify ==");
     let mut t2 = Table::new(&["pipeline", "median", "p95", "throughput"]);
-    for (name, backend) in [
-        ("PJRT", Box::new(PjrtBackend::new(&mut engine, cfg_name, 1).unwrap()) as Box<dyn HdBackend>),
-        ("software", Box::new(sw.clone()) as Box<dyn HdBackend>),
-    ] {
-        let mut cl = HdClassifier::new(backend, ProgressiveSearch { tau: 0.5, min_segments: 1 });
-        cl.store = store.clone();
-        let s = bench.run(|| cl.classify(&x).unwrap());
-        t2.row(&[
-            format!("{name} progressive"),
-            fmt_secs(s.median),
-            fmt_secs(s.p95),
-            format!("{:.0}/s", 1.0 / s.median),
-        ]);
-        let mut cl_full =
-            HdClassifier::new(match name {
-                "PJRT" => Box::new(PjrtBackend::new(&mut engine, cfg_name, 1).unwrap()) as Box<dyn HdBackend>,
-                _ => Box::new(sw.clone()) as Box<dyn HdBackend>,
-            }, ProgressiveSearch { tau: f32::INFINITY, min_segments: usize::MAX });
-        cl_full.store = store.clone();
-        let s = bench.run(|| cl_full.classify(&x).unwrap());
-        t2.row(&[
-            format!("{name} exhaustive"),
-            fmt_secs(s.median),
-            fmt_secs(s.p95),
-            format!("{:.0}/s", 1.0 / s.median),
-        ]);
-    }
+    let mut cl = HdClassifier::new(
+        Box::new(NativeBackend::seeded(cfg.clone(), 1, 8).unwrap()),
+        ProgressiveSearch { tau: 0.5, min_segments: 1 },
+    );
+    cl.store = store.clone();
+    let s = bench.run(|| cl.classify(&x).unwrap());
+    t2.row(&[
+        "native progressive".into(),
+        fmt_secs(s.median),
+        fmt_secs(s.p95),
+        format!("{:.0}/s", 1.0 / s.median),
+    ]);
+    let mut cl_full = HdClassifier::new(
+        Box::new(NativeBackend::seeded(cfg.clone(), 1, 8).unwrap()),
+        ProgressiveSearch { tau: f32::INFINITY, min_segments: usize::MAX },
+    );
+    cl_full.store = store.clone();
+    let s = bench.run(|| cl_full.classify(&x).unwrap());
+    t2.row(&[
+        "native exhaustive".into(),
+        fmt_secs(s.median),
+        fmt_secs(s.p95),
+        format!("{:.0}/s", 1.0 / s.median),
+    ]);
     t2.print();
 
     // training path
     let train_bench = Bench::new(2, 10);
-    let mut cl = HdClassifier::new(
-        Box::new(PjrtBackend::new(&mut engine, cfg_name, 1).unwrap()),
+    let mut cl_train = HdClassifier::new(
+        Box::new(NativeBackend::seeded(cfg.clone(), 1, 8).unwrap()),
         ProgressiveSearch { tau: 0.5, min_segments: 1 },
     );
     let trainer = Trainer { retrain_epochs: 0 };
@@ -123,10 +105,54 @@ fn main() {
     )
     .unwrap();
     let idx: Vec<usize> = (0..32).collect();
-    let s = train_bench.run(|| trainer.train_indices(&mut cl, &ds, &idx).unwrap());
+    let s = train_bench.run(|| trainer.train_indices(&mut cl_train, &ds, &idx).unwrap());
     println!(
         "\ntraining single-pass: {} per 32 samples ({} per update)",
         fmt_secs(s.median),
         fmt_secs(s.median / 32.0)
     );
+
+    // PJRT comparison (only with --features pjrt and built artifacts)
+    #[cfg(feature = "pjrt")]
+    pjrt_comparison(&cfg, &xq, &x8, &store);
+}
+
+/// The AOT/PJRT twin of the stage table, when an engine can come up.
+#[cfg(feature = "pjrt")]
+fn pjrt_comparison(cfg: &HdConfig, xq: &[f32], x8: &[f32], store: &ChvStore) {
+    use clo_hdnn::runtime::{Engine, Manifest, PjrtBackend};
+    let Ok(mut engine) = Engine::load(Manifest::default_dir()) else {
+        eprintln!("\n(pjrt comparison skipped: no artifacts; run `make artifacts`)");
+        return;
+    };
+    let cfg_name = &cfg.name;
+    let Ok(mut pjrt) = PjrtBackend::new(&mut engine, cfg_name, 1) else {
+        eprintln!("\n(pjrt comparison skipped: no {cfg_name} executables in manifest)");
+        return;
+    };
+    let bench = Bench::new(5, 40);
+    let mut t = Table::new(&["stage", "median", "p95", "notes"]);
+    println!("\n== PJRT comparison ==");
+    let s = bench.run(|| pjrt.encode_segment(xq, 1, 0).unwrap());
+    t.row(&["encode segment (PJRT b1)".into(), fmt_secs(s.median), fmt_secs(s.p95), "AOT Pallas".into()]);
+    if let Ok(mut pjrt8) = PjrtBackend::new(&mut engine, cfg_name, 8) {
+        let s = bench.run(|| pjrt8.encode_segment(x8, 8, 0).unwrap());
+        t.row(&[
+            "encode segment (PJRT b8)".into(),
+            fmt_secs(s.median),
+            fmt_secs(s.p95),
+            format!("{} per sample", fmt_secs(s.median / 8.0)),
+        ]);
+    }
+    let s = bench.run(|| pjrt.encode_full(xq, 1).unwrap());
+    t.row(&["encode full (PJRT b1)".into(), fmt_secs(s.median), fmt_secs(s.p95),
+            format!("{} segs worth", cfg.segments)]);
+    let qseg = pjrt.encode_segment(xq, 1, 0).unwrap();
+    let s = bench.run(|| {
+        pjrt.search(&qseg, 1, store.segment(0), cfg.classes, cfg.seg_len())
+            .unwrap()
+    });
+    t.row(&["partial search (PJRT b1)".into(), fmt_secs(s.median), fmt_secs(s.p95),
+            format!("{} CHVs", cfg.classes)]);
+    t.print();
 }

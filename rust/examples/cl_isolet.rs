@@ -1,19 +1,25 @@
 //! END-TO-END DRIVER (EXPERIMENTS.md §E2E): continual learning on the
-//! ISOLET-like workload in bypass mode, through the full stack — synthetic
-//! dataset artifact -> task-incremental stream -> AOT Pallas encoder via
-//! PJRT -> progressive search -> gradient-free updates — against the FP32
-//! SGD baseline (with and without replay) and nearest-class-mean.
+//! ISOLET-like workload in bypass mode, through the full stack — dataset ->
+//! task-incremental stream -> Kronecker encoder (NativeBackend) ->
+//! progressive search -> gradient-free updates — against the FP32 SGD
+//! baseline (with and without replay) and nearest-class-mean.
 //!
-//!     make artifacts && cargo run --release --example cl_isolet
+//! Hermetic by default (synthetic config + deterministic blob data):
+//!
+//!     cargo run --release --example cl_isolet
+//!
+//! With AOT artifacts present (`--artifacts <dir>` or ./artifacts), the
+//! manifest config, datasets, and production Kronecker factors are used.
 //!
 //! Flags: --config isolet|ucihar|tiny  --tasks N  --tau F  --eval-cap N
 
 use clo_hdnn::baselines::{LinearSgd, NearestMean};
 use clo_hdnn::cl::learners::{HdLearner, NcmLearner, SgdLearner};
 use clo_hdnn::cl::ClHarness;
-use clo_hdnn::data::{Dataset, TaskStream};
+use clo_hdnn::data::{synthetic, Dataset, TaskStream};
+use clo_hdnn::hdc::quantize::quantize_features;
 use clo_hdnn::hdc::{HdClassifier, ProgressiveSearch, Trainer};
-use clo_hdnn::runtime::{Engine, Manifest, PjrtBackend};
+use clo_hdnn::runtime::{Manifest, NativeBackend};
 use clo_hdnn::sim::{Chip, Mode};
 use clo_hdnn::util::stats::Table;
 use clo_hdnn::util::Args;
@@ -28,10 +34,27 @@ fn main() -> clo_hdnn::Result<()> {
         .get("artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(Manifest::default_dir);
-    let mut engine = Engine::load(&dir)?;
-    let cfg = engine.manifest.config(&cfg_name)?.clone();
-    let train = Dataset::load(engine.manifest.dataset_path(&format!("ds_{cfg_name}_train"))?)?;
-    let test = Dataset::load(engine.manifest.dataset_path(&format!("ds_{cfg_name}_test"))?)?;
+
+    // artifacts when present, hermetic synthetic workload otherwise
+    let (cfg, train, test, backend) = if dir.join("manifest.json").exists() {
+        let m = Manifest::load(&dir)?;
+        let cfg = m.config(&cfg_name)?.clone();
+        let train = Dataset::load(m.dataset_path(&format!("ds_{cfg_name}_train"))?)?;
+        let test = Dataset::load(m.dataset_path(&format!("ds_{cfg_name}_test"))?)?;
+        let backend = NativeBackend::from_manifest(&m, &cfg_name, 8)?;
+        (cfg, train, test, backend)
+    } else {
+        let cfg = synthetic::config(&cfg_name)?;
+        let (train, test) = synthetic::blobs(&cfg, 30, 12, 17);
+        let mut backend = NativeBackend::seeded(cfg.clone(), 7, 8)?;
+        let calib_n = train.n.min(16);
+        let mut calib = Vec::with_capacity(calib_n * cfg.features());
+        for i in 0..calib_n {
+            calib.extend(quantize_features(train.sample(i), cfg.scale_x));
+        }
+        backend.calibrate(&calib, calib_n);
+        (cfg, train, test, backend)
+    };
     println!(
         "== continual learning on {cfg_name}: {} train / {} test samples, \
          {} classes in {n_tasks} tasks, F={} D={} ==",
@@ -45,7 +68,7 @@ fn main() -> clo_hdnn::Result<()> {
     // learners
     let mut hd = HdLearner::new(
         HdClassifier::new(
-            Box::new(PjrtBackend::new(&mut engine, &cfg_name, 1)?),
+            Box::new(backend),
             ProgressiveSearch { tau, min_segments: 1 },
         ),
         Trainer { retrain_epochs: 1 },
@@ -85,7 +108,7 @@ fn main() -> clo_hdnn::Result<()> {
     // throughput + chip-model summary for the HDC path
     let trained_inferences = (0..n_tasks).map(|t| (t + 1) * harness.eval_cap).sum::<usize>();
     println!(
-        "\nHDC stack wall time {:.2}s (~{:.0} train+infer ops/s through PJRT)",
+        "\nHDC stack wall time {:.2}s (~{:.0} train+infer ops/s on the NativeBackend)",
         hd_wall,
         (train.n + trained_inferences) as f64 / hd_wall
     );

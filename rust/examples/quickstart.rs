@@ -1,34 +1,49 @@
-//! Quickstart: load the AOT artifacts, train the HDC classifier on the tiny
-//! synthetic dataset, classify with progressive search, and print the chip
-//! model's latency/energy estimate for what just ran.
+//! Quickstart — fully hermetic: build the pure-Rust NativeBackend on a
+//! built-in synthetic config, train the HDC classifier with gradient-free
+//! bundling, classify with progressive search, and print the chip model's
+//! latency/energy estimate for what just ran. No Python artifacts, no PJRT:
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
+//!
+//! (For the AOT/PJRT path, see `run_hlo` / `serve_cifar` with
+//! `--features pjrt` and a populated artifacts/ directory.)
 
-use clo_hdnn::data::Dataset;
+use clo_hdnn::data::synthetic;
+use clo_hdnn::hdc::quantize::quantize_features;
 use clo_hdnn::hdc::{HdClassifier, ProgressiveSearch, Trainer};
-use clo_hdnn::hdc::HdBackend;
-use clo_hdnn::runtime::{Engine, Manifest, PjrtBackend};
+use clo_hdnn::runtime::NativeBackend;
 use clo_hdnn::sim::{Chip, Mode};
 use clo_hdnn::util::stats::fmt_secs;
 
 fn main() -> clo_hdnn::Result<()> {
-    // 1. open the artifact directory and start the PJRT engine
-    let dir = Manifest::default_dir();
-    let mut engine = Engine::load(&dir)?;
-    println!("engine up on {} ({} executables in manifest)",
-             engine.platform(), engine.manifest.executables.len());
+    // 1. a built-in synthetic operating point + deterministic blob datasets
+    let cfg = synthetic::config("tiny")?;
+    let (train, test) = synthetic::blobs(&cfg, 40, 10, 17);
+    println!(
+        "config tiny: F={} D={} classes={} segments={} | {} train / {} test samples",
+        cfg.features(),
+        cfg.dim(),
+        cfg.classes,
+        cfg.segments,
+        train.n,
+        test.n
+    );
 
-    // 2. build the HD classifier on the AOT backend (Pallas kernels inside)
-    let backend = PjrtBackend::new(&mut engine, "tiny", 1)?;
-    let cfg = backend.cfg().clone();
+    // 2. the NativeBackend (pure Rust; same HdBackend trait the PJRT
+    //    backend implements), calibrated on a few training samples
+    let mut backend = NativeBackend::seeded(cfg.clone(), 7, 8)?;
+    let calib_n = train.n.min(16);
+    let mut calib = Vec::with_capacity(calib_n * cfg.features());
+    for i in 0..calib_n {
+        calib.extend(quantize_features(train.sample(i), cfg.scale_x));
+    }
+    backend.calibrate(&calib, calib_n);
     let mut classifier = HdClassifier::new(
         Box::new(backend),
         ProgressiveSearch { tau: 0.5, min_segments: 1 },
     );
 
     // 3. gradient-free training: single pass + one mistake-driven epoch
-    let train = Dataset::load(engine.manifest.dataset_path("ds_tiny_train")?)?;
-    let test = Dataset::load(engine.manifest.dataset_path("ds_tiny_test")?)?;
     let idx: Vec<usize> = (0..train.n).collect();
     let report = Trainer { retrain_epochs: 1 }.train_indices(&mut classifier, &train, &idx)?;
     println!("trained on {} samples; retrain mistakes per epoch: {:?}",

@@ -1,18 +1,23 @@
 //! The coordinator proper: a dedicated executor thread owns the (non-Send)
-//! PJRT engine + HD backend and serves requests from an MPSC queue —
-//! the leader/worker shape the chip's host driver uses.
+//! backend and serves requests from an MPSC queue — the leader/worker shape
+//! the chip's host driver uses. (The PJRT handles are raw C-API pointers;
+//! the pure-Rust NativeBackend keeps the same threading model so behavior
+//! is identical across backends.)
 //!
-//! Request path (per Fig.4): route (dual-mode) -> [WCFE via AOT artifact]
-//! -> quantize -> progressive encode/search loop -> reply. `Learn` payloads
-//! go through the gradient-free training path instead.
+//! Request path (per Fig.4): route (dual-mode) -> [WCFE] -> quantize ->
+//! progressive encode/search loop -> reply. `Learn` payloads go through the
+//! gradient-free training path instead.
 
 use crate::config::HdConfig;
 use crate::coordinator::request::{Payload, Request, Response};
 use crate::coordinator::router::{ModePolicy, Router};
-use crate::hdc::encoder::SoftwareEncoder;
+use crate::data::TensorFile;
 use crate::hdc::{HdClassifier, ProgressiveSearch};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, PjrtBackend};
+use crate::runtime::{Manifest, NativeBackend};
 use crate::sim::Mode;
+use crate::wcfe::WcfeModel;
 use crate::Result;
 use std::sync::mpsc;
 use std::time::Instant;
@@ -20,9 +25,13 @@ use std::time::Instant;
 /// Which backend the executor thread builds.
 #[derive(Clone, Debug)]
 pub enum BackendSpec {
-    /// pure-Rust encoder (no artifacts needed)
-    Software { cfg: HdConfig, seed: u64 },
-    /// PJRT over the artifact directory
+    /// pure-Rust NativeBackend, seeded ±1 factors (no artifacts needed)
+    Native { cfg: HdConfig, seed: u64 },
+    /// pure-Rust NativeBackend with the production factors (and, for image
+    /// configs, the software WCFE) from an artifact directory
+    NativeArtifacts { artifacts: std::path::PathBuf, config: String },
+    /// PJRT over the artifact directory (requires the `pjrt` feature)
+    #[cfg(feature = "pjrt")]
     Pjrt { artifacts: std::path::PathBuf, config: String },
 }
 
@@ -36,9 +45,10 @@ pub struct CoordinatorOptions {
 }
 
 impl CoordinatorOptions {
+    /// Hermetic default: a seeded NativeBackend for the given config.
     pub fn software(cfg: HdConfig) -> CoordinatorOptions {
         CoordinatorOptions {
-            backend: BackendSpec::Software { cfg, seed: 7 },
+            backend: BackendSpec::Native { cfg, seed: 7 },
             tau: 0.5,
             min_segments: 1,
             mode_policy: ModePolicy::Auto,
@@ -115,8 +125,11 @@ impl Drop for Coordinator {
 struct Executor {
     classifier: HdClassifier,
     router: Router,
-    /// WCFE forward executable (normal mode), if artifacts provide it
-    wcfe: Option<std::rc::Rc<crate::runtime::Executable>>,
+    /// WCFE forward executable (normal mode) through PJRT
+    #[cfg(feature = "pjrt")]
+    wcfe_exe: Option<std::rc::Rc<crate::runtime::Executable>>,
+    /// software WCFE model (normal mode) on the native path
+    wcfe_native: Option<WcfeModel>,
     image_elems: usize,
 }
 
@@ -142,22 +155,58 @@ fn executor_main(
     }
 }
 
+/// Load the software WCFE model if the manifest carries one for an image
+/// config; returns `(model, image_elems)`.
+fn load_native_wcfe(manifest: &Manifest, config: &str) -> Result<(Option<WcfeModel>, usize)> {
+    match &manifest.wcfe {
+        Some(meta) if manifest.config(config)?.image => {
+            let tf = TensorFile::load(manifest.dir.join(&meta.weights))?;
+            let model = WcfeModel::load(
+                &tf,
+                &meta.channels,
+                meta.fc_out,
+                meta.image_hw,
+                meta.image_c,
+            )?;
+            Ok((Some(model), meta.image_hw * meta.image_hw * meta.image_c))
+        }
+        _ => Ok((None, 0)),
+    }
+}
+
 fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
     let policy = ProgressiveSearch { tau: opts.tau, min_segments: opts.min_segments };
+    let router = Router { policy: opts.mode_policy };
     match &opts.backend {
-        BackendSpec::Software { cfg, seed } => Ok(Executor {
+        BackendSpec::Native { cfg, seed } => Ok(Executor {
             classifier: HdClassifier::new(
-                Box::new(SoftwareEncoder::random(cfg.clone(), *seed)),
+                Box::new(NativeBackend::seeded(cfg.clone(), *seed, 8)?),
                 policy,
             ),
-            router: Router { policy: opts.mode_policy },
-            wcfe: None,
+            router,
+            #[cfg(feature = "pjrt")]
+            wcfe_exe: None,
+            wcfe_native: None,
             image_elems: 0,
         }),
+        BackendSpec::NativeArtifacts { artifacts, config } => {
+            let manifest = Manifest::load(artifacts)?;
+            let backend = NativeBackend::from_manifest(&manifest, config, 8)?;
+            let (wcfe_native, image_elems) = load_native_wcfe(&manifest, config)?;
+            Ok(Executor {
+                classifier: HdClassifier::new(Box::new(backend), policy),
+                router,
+                #[cfg(feature = "pjrt")]
+                wcfe_exe: None,
+                wcfe_native,
+                image_elems,
+            })
+        }
+        #[cfg(feature = "pjrt")]
         BackendSpec::Pjrt { artifacts, config } => {
             let mut engine = Engine::load(artifacts)?;
             let backend = PjrtBackend::new(&mut engine, config, 1)?;
-            let (wcfe, image_elems) = match engine.manifest.wcfe.clone() {
+            let (wcfe_exe, image_elems) = match engine.manifest.wcfe.clone() {
                 Some(meta) if engine.manifest.config(config)?.image => {
                     let exe = engine.executable("wcfe_fwd_b1")?;
                     (Some(exe), meta.image_hw * meta.image_hw * meta.image_c)
@@ -166,8 +215,9 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
             };
             Ok(Executor {
                 classifier: HdClassifier::new(Box::new(backend), policy),
-                router: Router { policy: opts.mode_policy },
-                wcfe,
+                router,
+                wcfe_exe,
+                wcfe_native: None,
                 image_elems,
             })
         }
@@ -176,14 +226,20 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
 
 impl Executor {
     fn extract_features(&mut self, img: &[f32]) -> Result<Vec<f32>> {
-        let exe = self
-            .wcfe
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("normal mode needs WCFE artifacts"))?;
+        if self.image_elems == 0 {
+            anyhow::bail!("normal mode needs WCFE artifacts");
+        }
         if img.len() != self.image_elems {
             anyhow::bail!("image has {} elems, expected {}", img.len(), self.image_elems);
         }
-        exe.run(&[crate::runtime::Arg::F32(img, &[1, 32, 32, 3])])
+        #[cfg(feature = "pjrt")]
+        if let Some(exe) = &self.wcfe_exe {
+            return exe.run(&[crate::runtime::Arg::F32(img, &[1, 32, 32, 3])]);
+        }
+        if let Some(model) = &self.wcfe_native {
+            return model.forward(img);
+        }
+        anyhow::bail!("normal mode needs WCFE artifacts")
     }
 
     fn handle(&mut self, req: &Request) -> Result<Response> {
@@ -283,5 +339,20 @@ mod tests {
     fn drop_joins_executor() {
         let (coord, _) = proto_and_coordinator();
         drop(coord); // must not hang
+    }
+
+    #[test]
+    fn native_artifacts_spec_reports_missing_dir() {
+        let opts = CoordinatorOptions {
+            backend: BackendSpec::NativeArtifacts {
+                artifacts: std::path::PathBuf::from("/definitely/not/artifacts"),
+                config: "tiny".into(),
+            },
+            tau: 0.5,
+            min_segments: 1,
+            mode_policy: ModePolicy::Auto,
+            queue_depth: 8,
+        };
+        assert!(Coordinator::start(opts).is_err());
     }
 }

@@ -1,10 +1,12 @@
 //! Dataset + named-tensor containers (shared binary formats with the Python
-//! build pipeline) and continual-learning task streams.
+//! build pipeline), continual-learning task streams, and hermetic synthetic
+//! workloads for artifact-free runs.
 
 pub mod dataset;
 pub mod stream;
+pub mod synthetic;
 pub mod tensors;
 
 pub use dataset::Dataset;
 pub use stream::{Task, TaskStream};
-pub use tensors::TensorFile;
+pub use tensors::{Tensor, TensorFile};

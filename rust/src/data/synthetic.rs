@@ -1,0 +1,112 @@
+//! Hermetic synthetic workloads: built-in HD configs mirroring the paper's
+//! bypass-mode operating points and deterministic Gaussian-blob datasets, so
+//! the CLI, examples, benches, and tests all run with zero Python artifacts.
+//!
+//! Blob geometry matches the regime the unit tests train in (well-separated
+//! class prototypes, σ=30 feature scale, σ=4 sample noise), which the HDC
+//! pipeline classifies reliably after single-pass bundling.
+
+use crate::config::HdConfig;
+use crate::data::Dataset;
+use crate::util::Rng;
+use crate::Result;
+use anyhow::bail;
+
+/// Names of the built-in synthetic configs (all bypass-mode).
+pub fn names() -> &'static [&'static str] {
+    &["tiny", "isolet", "ucihar"]
+}
+
+/// A built-in synthetic config by name. Image (normal-mode) configs like
+/// `cifar100` need the WCFE weights and therefore AOT artifacts.
+pub fn config(name: &str) -> Result<HdConfig> {
+    Ok(match name {
+        // F=64, D=1024: the smoke-test operating point
+        "tiny" => HdConfig::synthetic("tiny", 8, 8, 32, 32, 8, 10),
+        // F=640 (617 padded), D=2048, 26 classes: the paper's ISOLET point
+        "isolet" => HdConfig::synthetic("isolet", 32, 20, 64, 32, 16, 26),
+        // F=576 (561 padded), D=2048, 6 classes: the paper's UCIHAR point
+        "ucihar" => HdConfig::synthetic("ucihar", 24, 24, 64, 32, 16, 6),
+        other => bail!(
+            "no built-in synthetic config '{other}' (have {}); image-mode \
+             configs such as cifar100 need AOT artifacts",
+            names().join("|")
+        ),
+    })
+}
+
+/// Deterministic Gaussian-blob (train, test) pair for a config: one
+/// prototype per class, `train_per_class` / `test_per_class` noisy draws.
+pub fn blobs(
+    cfg: &HdConfig,
+    train_per_class: usize,
+    test_per_class: usize,
+    seed: u64,
+) -> (Dataset, Dataset) {
+    let mut rng = Rng::new(seed);
+    let feat = cfg.features();
+    let protos: Vec<Vec<f32>> = (0..cfg.classes)
+        .map(|_| (0..feat).map(|_| rng.normal_f32() * 30.0).collect())
+        .collect();
+    // Classes are interleaved (round-robin) so that any prefix of the
+    // dataset — callers routinely truncate with --samples / --learn caps —
+    // stays class-balanced instead of silently dropping later classes.
+    let draw = |per_class: usize, rng: &mut Rng| {
+        let mut x = Vec::with_capacity(cfg.classes * per_class * feat);
+        let mut y = Vec::with_capacity(cfg.classes * per_class);
+        for _ in 0..per_class {
+            for (c, p) in protos.iter().enumerate() {
+                x.extend(p.iter().map(|&v| v + rng.normal_f32() * 4.0));
+                y.push(c as u16);
+            }
+        }
+        Dataset::from_parts(x, y, feat, cfg.classes).expect("blob parts are consistent")
+    };
+    let train = draw(train_per_class, &mut rng);
+    let test = draw(test_per_class, &mut rng);
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_configs_validate() {
+        for name in names() {
+            let cfg = config(name).unwrap();
+            assert!(cfg.validate().is_ok(), "{name}");
+            assert!(!cfg.image, "{name} must be bypass-mode");
+        }
+        assert!(config("cifar100").is_err());
+    }
+
+    #[test]
+    fn blobs_are_deterministic_and_shaped() {
+        let cfg = config("tiny").unwrap();
+        let (tr1, te1) = blobs(&cfg, 5, 3, 42);
+        let (tr2, _) = blobs(&cfg, 5, 3, 42);
+        assert_eq!(tr1.x, tr2.x);
+        assert_eq!(tr1.n, 5 * cfg.classes);
+        assert_eq!(te1.n, 3 * cfg.classes);
+        assert_eq!(tr1.dim, cfg.features());
+        assert_eq!(tr1.class_histogram(), vec![5; cfg.classes]);
+    }
+
+    #[test]
+    fn blobs_are_learnable_by_the_hdc_pipeline() {
+        use crate::hdc::encoder::SoftwareEncoder;
+        use crate::hdc::{HdClassifier, ProgressiveSearch, Trainer};
+        let cfg = config("tiny").unwrap();
+        let (train, test) = blobs(&cfg, 8, 4, 7);
+        let mut cl = HdClassifier::new(
+            Box::new(SoftwareEncoder::random(cfg.clone(), 7)),
+            ProgressiveSearch { tau: 0.4, min_segments: 1 },
+        );
+        Trainer { retrain_epochs: 1 }.train_all(&mut cl, &train).unwrap();
+        let report = cl
+            .evaluate((0..test.n).map(|i| (test.sample(i).to_vec(), test.label(i))))
+            .unwrap();
+        assert!(report.accuracy > 0.9, "accuracy {}", report.accuracy);
+    }
+}

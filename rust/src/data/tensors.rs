@@ -132,6 +132,59 @@ impl TensorFile {
         }
         t.as_f32()
     }
+
+    /// Add (or replace) an f32 tensor.
+    pub fn insert_f32(&mut self, name: &str, dims: &[usize], data: Vec<f32>) {
+        self.tensors
+            .insert(name.to_string(), Tensor::F32 { dims: dims.to_vec(), data });
+    }
+
+    /// Write the container in the same CLOW v1 layout [`TensorFile::load`]
+    /// reads (used by the Rust-side golden-fixture generator; byte-compatible
+    /// with `python/compile/weights_io.py`).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        use std::io::Write;
+        let path = path.as_ref();
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("create tensor file {}", path.display()))?,
+        );
+        f.write_all(b"CLOW")?;
+        f.write_all(&1u32.to_le_bytes())?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            let nb = name.as_bytes();
+            if nb.len() > u16::MAX as usize {
+                bail!("tensor name '{name}' too long");
+            }
+            f.write_all(&(nb.len() as u16).to_le_bytes())?;
+            f.write_all(nb)?;
+            let dtype: u8 = match t {
+                Tensor::F32 { .. } => 0,
+                Tensor::I32 { .. } => 1,
+            };
+            f.write_all(&[dtype])?;
+            let dims = t.dims();
+            f.write_all(&(dims.len() as u32).to_le_bytes())?;
+            for &d in dims {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            match t {
+                Tensor::F32 { data, .. } => {
+                    for v in data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                Tensor::I32 { data, .. } => {
+                    for v in data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        f.flush()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -179,5 +232,24 @@ mod tests {
         assert!(tf.get("absent").is_err());
         assert!(tf.f32_shaped("m", &[2, 2]).is_ok());
         assert!(tf.f32_shaped("m", &[4]).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("clo_hdnn_test_tf_save");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rt.bin");
+        let mut tf = TensorFile::default();
+        tf.insert_f32("a", &[2, 3], vec![1.0, -2.5, 3.0, 0.0, 4.5, -6.0]);
+        tf.insert_f32("scale", &[1], vec![24.0]);
+        tf.tensors.insert(
+            "idx".to_string(),
+            Tensor::I32 { dims: vec![3], data: vec![7, -1, 0] },
+        );
+        tf.save(&p).unwrap();
+        let back = TensorFile::load(&p).unwrap();
+        assert_eq!(back.tensors, tf.tensors);
+        assert_eq!(back.f32_shaped("a", &[2, 3]).unwrap()[1], -2.5);
+        assert_eq!(back.i32("idx").unwrap(), &[7, -1, 0]);
     }
 }

@@ -66,6 +66,40 @@ pub fn hamming_pm1(a: &[f32], b: &[f32]) -> usize {
     a.iter().zip(b).filter(|(x, y)| x != y).count()
 }
 
+/// Cosine distances (1 - cosine similarity): qs (batch, len) vs
+/// chvs (classes, len) -> (batch, classes). A zero-norm operand yields the
+/// maximum distance 1.0 (no direction to agree with). For binarized (+-1)
+/// vectors this is exactly `2 * hamming / len` — the XOR-tree metric.
+pub fn cosine_batch(
+    qs: &[f32],
+    batch: usize,
+    chvs: &[f32],
+    classes: usize,
+    len: usize,
+) -> Result<Vec<f32>> {
+    if qs.len() != batch * len || chvs.len() != classes * len {
+        bail!("shape mismatch");
+    }
+    let chv_norms: Vec<f32> = (0..classes)
+        .map(|c| chvs[c * len..(c + 1) * len].iter().map(|v| v * v).sum::<f32>().sqrt())
+        .collect();
+    let mut out = vec![0.0f32; batch * classes];
+    for n in 0..batch {
+        let q = &qs[n * len..(n + 1) * len];
+        let qn = q.iter().map(|v| v * v).sum::<f32>().sqrt();
+        for c in 0..classes {
+            let chv = &chvs[c * len..(c + 1) * len];
+            let dot: f32 = q.iter().zip(chv).map(|(&a, &b)| a * b).sum();
+            out[n * classes + c] = if qn == 0.0 || chv_norms[c] == 0.0 {
+                1.0
+            } else {
+                1.0 - dot / (qn * chv_norms[c])
+            };
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,5 +172,54 @@ mod tests {
     fn shape_errors() {
         assert!(l1_batch(&[0.0; 3], 1, &[0.0; 4], 2, 2).is_err());
         assert!(l1_batch(&[0.0; 2], 1, &[0.0; 3], 2, 2).is_err());
+        assert!(cosine_batch(&[0.0; 3], 1, &[0.0; 4], 2, 2).is_err());
+    }
+
+    #[test]
+    fn prop_cosine_agrees_with_hamming_on_binarized_vectors() {
+        // On +-1 (INT1-quantized) hypervectors the cosine distance is an
+        // affine function of Hamming: 1 - dot/len = 2 * hamming / len.
+        forall(40, 0xC05, |rng| {
+            let len = 64 + rng.below(128);
+            let q = gen::pm1_vec(rng, len);
+            let chvs = gen::pm1_vec(rng, 3 * len);
+            let cos = cosine_batch(&q, 1, &chvs, 3, len).unwrap();
+            for c in 0..3 {
+                let ham = hamming_pm1(&q, &chvs[c * len..(c + 1) * len]) as f32;
+                let want = 2.0 * ham / len as f32;
+                assert!((cos[c] - want).abs() < 1e-4, "{} vs {want}", cos[c]);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_cosine_symmetry_identity_and_range() {
+        forall(40, 0xC06, |rng| {
+            let len = 32;
+            let a = gen::quantized_vec(rng, len, 4);
+            let b = gen::quantized_vec(rng, len, 4);
+            let dab = cosine_batch(&a, 1, &b, 1, len).unwrap()[0];
+            let dba = cosine_batch(&b, 1, &a, 1, len).unwrap()[0];
+            assert!((dab - dba).abs() < 1e-5); // symmetry
+            assert!((-1e-5..=2.0 + 1e-5).contains(&dab), "{dab}");
+            let daa = cosine_batch(&a, 1, &a, 1, len).unwrap()[0];
+            if a.iter().any(|&v| v != 0.0) {
+                assert!(daa.abs() < 1e-5, "self-distance {daa}");
+            } else {
+                assert_eq!(daa, 1.0); // zero-norm convention
+            }
+        });
+    }
+
+    #[test]
+    fn prop_neg_dot_symmetric_under_swap() {
+        forall(40, 0xC07, |rng| {
+            let len = 48;
+            let a = gen::int8_vec(rng, len);
+            let b = gen::int8_vec(rng, len);
+            let dab = neg_dot_batch(&a, 1, &b, 1, len).unwrap()[0];
+            let dba = neg_dot_batch(&b, 1, &a, 1, len).unwrap()[0];
+            assert_eq!(dab, dba);
+        });
     }
 }

@@ -89,4 +89,47 @@ mod tests {
         let q = quantize_features(&[1.0, -0.26, 300.0], 0.5);
         assert_eq!(q, vec![2.0, -1.0, 127.0]);
     }
+
+    #[test]
+    fn prop_int1_int4_dequantize_roundtrip() {
+        // Quantization is a projection: dequantizing (q * scale) and
+        // re-quantizing must be a fixed point for both INT1 and INT4.
+        forall(100, 0x9A1, |rng| {
+            let scale = rng.range_f64(0.5, 50.0) as f32;
+            let y = rng.normal_f32() * 300.0;
+            for bits in [1u8, 4] {
+                let q = quantize(y, bits, scale);
+                let rq = quantize(q * scale, bits, scale);
+                assert_eq!(q, rq, "bits={bits} y={y} scale={scale}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_int1_int4_values_live_on_the_grid() {
+        forall(100, 0x9A2, |rng| {
+            let scale = rng.range_f64(0.5, 20.0) as f32;
+            let y = rng.normal_f32() * 100.0;
+            let q1 = quantize(y, 1, scale);
+            assert!(q1 == 1.0 || q1 == -1.0, "INT1 must be ±1, got {q1}");
+            let q4 = quantize(y, 4, scale);
+            assert!(q4.abs() <= 7.0 && q4.fract() == 0.0, "INT4 grid: {q4}");
+        });
+    }
+
+    #[test]
+    fn prop_quantize_odd_symmetry() {
+        // q(-y) == -q(y) for bits > 1 (round-ties-even and clamp are both
+        // odd); INT1 is sign-based so the symmetry holds for y != 0.
+        forall(100, 0x9A3, |rng| {
+            let scale = rng.range_f64(0.5, 20.0) as f32;
+            let y = rng.normal_f32() * 150.0;
+            for bits in [2u8, 4, 8] {
+                assert_eq!(quantize(-y, bits, scale), -quantize(y, bits, scale), "bits={bits}");
+            }
+            if y != 0.0 {
+                assert_eq!(quantize(-y, 1, scale), -quantize(y, 1, scale));
+            }
+        });
+    }
 }

@@ -10,14 +10,18 @@
 //!   progressive-search control, CHV cache, training, the custom ISA, the
 //!   CDC FIFO, plus the DVFS energy/latency model calibrated to the paper's
 //!   silicon measurements.
-//! * **L2/L1 (python, build-time only)** — JAX graphs + Pallas kernels,
-//!   AOT-lowered to HLO text under `artifacts/`, loaded and executed here via
-//!   the PJRT C API ([`runtime`]).
+//! * **L2/L1** — the compute backends behind [`hdc::HdBackend`]:
+//!   [`runtime::NativeBackend`] (default: pure Rust, hermetic, no artifacts
+//!   needed) and, behind the non-default `pjrt` cargo feature,
+//!   `runtime::PjrtBackend` executing JAX/Pallas graphs AOT-lowered to HLO
+//!   text under `artifacts/` via the PJRT C API. Python only ever runs at
+//!   build time, and only for the PJRT path.
 //!
-//! The public API a downstream user touches: [`runtime::Engine`] to load
-//! artifacts, [`hdc::HdClassifier`] + [`coordinator::Coordinator`] for
-//! serving/learning, [`cl::ClHarness`] for continual-learning experiments,
-//! and [`sim::Chip`] for cycle/energy estimates.
+//! The public API a downstream user touches: [`runtime::NativeBackend`] (or
+//! `runtime::Engine` with `--features pjrt`), [`hdc::HdClassifier`] +
+//! [`coordinator::Coordinator`] for serving/learning, [`cl::ClHarness`] for
+//! continual-learning experiments, [`data::synthetic`] for hermetic
+//! workloads, and [`sim::Chip`] for cycle/energy estimates.
 
 pub mod baselines;
 pub mod cl;

@@ -1,23 +1,32 @@
 //! Clo-HDnn CLI — the leader entrypoint.
 //!
 //! Subcommands:
-//!   info                         inspect the artifact manifest
+//!   info                         inspect artifacts (or list built-in configs)
 //!   infer   --config <name>      progressive inference over the test set
 //!   cl-run  --config <name>      continual-learning experiment (Fig.9 row)
 //!   sim     --config <name>      chip latency/energy report (Fig.10)
 //!   serve   --config <name>      Poisson-traffic serving demo
 //!   asm     <file>               assemble + disassemble an ISA program
 //!
+//! Every data-path command runs hermetically on the pure-Rust
+//! [`NativeBackend`] by default: with no `artifacts/` directory present, a
+//! built-in synthetic config (tiny|isolet|ucihar) and a deterministic blob
+//! dataset are used. `--backend pjrt` selects the AOT/PJRT path (requires
+//! building with `--features pjrt` and a populated artifact directory).
+//!
 //! Global flags: --artifacts <dir> (default ./artifacts or $CLO_ARTIFACTS),
-//! --tau, --min-seg, --samples, --tasks, --voltage.
+//! --backend native|pjrt, --tau, --min-seg, --samples, --tasks, --voltage.
 
 use clo_hdnn::cl::learners::HdLearner;
 use clo_hdnn::cl::ClHarness;
 use clo_hdnn::config::HdConfig;
 use clo_hdnn::coordinator::{BackendSpec, Coordinator, CoordinatorOptions, Payload};
-use clo_hdnn::data::{Dataset, TaskStream};
+use clo_hdnn::data::{synthetic, Dataset, TaskStream};
+use clo_hdnn::hdc::quantize::quantize_features;
 use clo_hdnn::hdc::{HdClassifier, ProgressiveSearch, Trainer};
-use clo_hdnn::runtime::{Engine, Manifest, PjrtBackend};
+#[cfg(feature = "pjrt")]
+use clo_hdnn::runtime::{Engine, PjrtBackend};
+use clo_hdnn::runtime::{Manifest, NativeBackend};
 use clo_hdnn::sim::{Chip, Mode};
 use clo_hdnn::util::stats::fmt_secs;
 use clo_hdnn::util::{Args, Rng};
@@ -49,12 +58,21 @@ fn run() -> Result<()> {
 
 const HELP: &str = "clo-hdnn <info|infer|cl-run|sim|serve|asm> [flags]
   --artifacts <dir>   artifact directory (default ./artifacts)
-  --config <name>     HD config: tiny|isolet|ucihar|cifar100
+  --backend <name>    native (default, pure Rust) or pjrt (needs --features pjrt)
+  --config <name>     HD config: tiny|isolet|ucihar (built-in) or any manifest config
   --tau <f>           progressive-search confidence (default 0.5)
   --min-seg <n>       minimum segments before early exit (default 1)
   --samples <n>       evaluation sample cap
   --tasks <n>         CL tasks (default 5)
-  --voltage <v>       DVFS point for sim (default 0.9)";
+  --voltage <v>       DVFS point for sim (default 0.9)
+
+With no artifacts present, commands fall back to built-in synthetic configs
+and deterministic blob datasets — no Python toolchain required.";
+
+#[cfg(feature = "pjrt")]
+const BACKENDS: &str = "native|pjrt";
+#[cfg(not(feature = "pjrt"))]
+const BACKENDS: &str = "native; rebuild with --features pjrt to enable pjrt";
 
 fn artifacts_dir(args: &Args) -> std::path::PathBuf {
     args.get("artifacts")
@@ -69,8 +87,73 @@ fn load_datasets(m: &Manifest, cfg: &str) -> Result<(Dataset, Dataset)> {
     ))
 }
 
+/// Config + (train, test) datasets from the artifact directory when present,
+/// otherwise from the built-in synthetic workloads.
+fn load_workload(
+    args: &Args,
+    cfg_name: &str,
+) -> Result<(HdConfig, Dataset, Dataset, Option<Manifest>)> {
+    let dir = artifacts_dir(args);
+    if dir.join("manifest.json").exists() {
+        let m = Manifest::load(&dir)?;
+        let cfg = m.config(cfg_name)?.clone();
+        let (train, test) = load_datasets(&m, cfg_name)?;
+        Ok((cfg, train, test, Some(m)))
+    } else {
+        let cfg = synthetic::config(cfg_name)?;
+        let per_class = args.usize_or("per-class", 40);
+        let (train, test) = synthetic::blobs(&cfg, per_class, 10, 17);
+        Ok((cfg, train, test, None))
+    }
+}
+
+/// Build the NativeBackend: production factors when the artifact directory
+/// carries them, otherwise seeded factors recalibrated on training samples.
+fn native_backend(
+    cfg: &HdConfig,
+    manifest: Option<&Manifest>,
+    train: &Dataset,
+) -> Result<NativeBackend> {
+    if let Some(m) = manifest {
+        if m.dir.join(format!("hd_factors_{}.bin", cfg.name)).exists() {
+            return NativeBackend::from_manifest(m, &cfg.name, 8);
+        }
+    }
+    let mut backend = NativeBackend::seeded(cfg.clone(), 7, 8)?;
+    // Seeded factors come with the config's default scale_q; recalibrate on
+    // a few (feature-quantized) training samples so QHVs span INT8 without
+    // saturating.
+    let n = train.n.min(16);
+    if n > 0 && train.dim == cfg.features() {
+        let mut xs = Vec::with_capacity(n * cfg.features());
+        for i in 0..n {
+            xs.extend(quantize_features(train.sample(i), cfg.scale_x));
+        }
+        backend.calibrate(&xs, n);
+    }
+    Ok(backend)
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
-    let m = Manifest::load(artifacts_dir(args))?;
+    let dir = artifacts_dir(args);
+    if !dir.join("manifest.json").exists() {
+        println!(
+            "no artifacts at {} — built-in synthetic configs (NativeBackend):",
+            dir.display()
+        );
+        for name in synthetic::names() {
+            let c = synthetic::config(name)?;
+            println!(
+                "  {name:10} F={:<5} D={:<5} classes={:<4} segments={} (bypass mode)",
+                c.features(),
+                c.dim(),
+                c.classes,
+                c.segments
+            );
+        }
+        return Ok(());
+    }
+    let m = Manifest::load(dir)?;
     m.check_files()?;
     println!("artifact dir: {}", m.dir.display());
     println!("configs:");
@@ -100,6 +183,57 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_infer(args: &Args) -> Result<()> {
+    match args.str_or("backend", "native").as_str() {
+        "native" => cmd_infer_native(args),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => cmd_infer_pjrt(args),
+        other => anyhow::bail!("unknown --backend '{other}' ({BACKENDS})"),
+    }
+}
+
+fn report_eval(report: &clo_hdnn::hdc::classifier::EvalReport, dt: f64) {
+    println!(
+        "accuracy {:.4} over {} samples | mean segments {:.2}/{} (complexity -{:.1}%) | early-exit {:.1}% | {:.1} inf/s",
+        report.accuracy,
+        report.n,
+        report.mean_segments,
+        report.total_segments,
+        report.complexity_reduction() * 100.0,
+        report.early_exit_rate * 100.0,
+        report.n as f64 / dt
+    );
+}
+
+fn cmd_infer_native(args: &Args) -> Result<()> {
+    let cfg_name = args.str_or("config", "tiny");
+    let tau = args.f64_or("tau", 0.5) as f32;
+    let (cfg, train, test, manifest) = load_workload(args, &cfg_name)?;
+    println!(
+        "backend: native (pure Rust, {})",
+        if manifest.is_some() { "artifact data" } else { "synthetic data" }
+    );
+    let backend = native_backend(&cfg, manifest.as_ref(), &train)?;
+    let mut cl = HdClassifier::new(
+        Box::new(backend),
+        ProgressiveSearch { tau, min_segments: args.usize_or("min-seg", 1) },
+    );
+    let cap = args.usize_or("samples", 400);
+
+    let t0 = std::time::Instant::now();
+    let trainer = Trainer { retrain_epochs: args.usize_or("retrain", 1) };
+    let idx: Vec<usize> = (0..train.n.min(cap * 4)).collect();
+    trainer.train_indices(&mut cl, &train, &idx)?;
+    println!("trained on {} samples in {}", idx.len(), fmt_secs(t0.elapsed().as_secs_f64()));
+
+    let t1 = std::time::Instant::now();
+    let n = test.n.min(cap);
+    let report = cl.evaluate((0..n).map(|i| (test.sample(i).to_vec(), test.label(i))))?;
+    report_eval(&report, t1.elapsed().as_secs_f64());
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_infer_pjrt(args: &Args) -> Result<()> {
     let cfg_name = args.str_or("config", "tiny");
     let tau = args.f64_or("tau", 0.5) as f32;
     let dir = artifacts_dir(args);
@@ -123,21 +257,61 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let t1 = std::time::Instant::now();
     let n = test.n.min(cap);
     let report = cl.evaluate((0..n).map(|i| (test.sample(i).to_vec(), test.label(i))))?;
-    let dt = t1.elapsed().as_secs_f64();
-    println!(
-        "accuracy {:.4} over {} samples | mean segments {:.2}/{} (complexity -{:.1}%) | early-exit {:.1}% | {:.1} inf/s",
-        report.accuracy,
-        report.n,
-        report.mean_segments,
-        report.total_segments,
-        report.complexity_reduction() * 100.0,
-        report.early_exit_rate * 100.0,
-        report.n as f64 / dt
-    );
+    report_eval(&report, t1.elapsed().as_secs_f64());
     Ok(())
 }
 
+fn report_cl_run(run: &clo_hdnn::cl::ClRun) {
+    println!("learner: {}", run.learner);
+    println!(
+        "accuracy curve: {:?}",
+        run.matrix
+            .curve()
+            .iter()
+            .map(|a| (a * 1000.0).round() / 1000.0)
+            .collect::<Vec<_>>()
+    );
+    println!(
+        "final avg accuracy {:.4} | mean forgetting {:.4} | mean segments {:?}",
+        run.final_accuracy, run.mean_forgetting, run.mean_segments
+    );
+}
+
 fn cmd_cl_run(args: &Args) -> Result<()> {
+    match args.str_or("backend", "native").as_str() {
+        "native" => cmd_cl_run_native(args),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => cmd_cl_run_pjrt(args),
+        other => anyhow::bail!("unknown --backend '{other}' ({BACKENDS})"),
+    }
+}
+
+fn cmd_cl_run_native(args: &Args) -> Result<()> {
+    let cfg_name = args.str_or("config", "tiny");
+    let (cfg, train, test, manifest) = load_workload(args, &cfg_name)?;
+    let n_tasks = args.usize_or("tasks", 5).min(cfg.classes);
+    let stream = TaskStream::class_incremental(&train, n_tasks, 1);
+    let mut harness = ClHarness::new(&train, &test, &stream);
+    harness.eval_cap = args.usize_or("samples", 200);
+
+    let backend = native_backend(&cfg, manifest.as_ref(), &train)?;
+    let mut hd = HdLearner::new(
+        HdClassifier::new(
+            Box::new(backend),
+            ProgressiveSearch {
+                tau: args.f64_or("tau", 0.5) as f32,
+                min_segments: args.usize_or("min-seg", 1),
+            },
+        ),
+        Trainer { retrain_epochs: args.usize_or("retrain", 1) },
+    );
+    let run = harness.run(&mut hd)?;
+    report_cl_run(&run);
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_cl_run_pjrt(args: &Args) -> Result<()> {
     let cfg_name = args.str_or("config", "tiny");
     let dir = artifacts_dir(args);
     let mut engine = Engine::load(&dir)?;
@@ -160,27 +334,26 @@ fn cmd_cl_run(args: &Args) -> Result<()> {
         Trainer { retrain_epochs: args.usize_or("retrain", 1) },
     );
     let run = harness.run(&mut hd)?;
-    println!("learner: {}", run.learner);
-    println!("accuracy curve: {:?}", run
-        .matrix
-        .curve()
-        .iter()
-        .map(|a| (a * 1000.0).round() / 1000.0)
-        .collect::<Vec<_>>());
-    println!(
-        "final avg accuracy {:.4} | mean forgetting {:.4} | mean segments {:?}",
-        run.final_accuracy, run.mean_forgetting, run.mean_segments
-    );
+    report_cl_run(&run);
     Ok(())
 }
 
 fn cmd_sim(args: &Args) -> Result<()> {
-    let cfg_name = args.str_or("config", "cifar100");
+    let dir = artifacts_dir(args);
+    let has_artifacts = dir.join("manifest.json").exists();
+    let cfg_name = args.str_or("config", if has_artifacts { "cifar100" } else { "tiny" });
     let v = args.f64_or("voltage", 0.9);
-    let m = Manifest::load(artifacts_dir(args))?;
-    let cfg = m.config(&cfg_name)?.clone();
+    let (cfg, manifest) = if has_artifacts {
+        let m = Manifest::load(&dir)?;
+        (m.config(&cfg_name)?.clone(), Some(m))
+    } else {
+        (synthetic::config(&cfg_name)?, None)
+    };
     let chip = Chip::default();
     let report = if cfg.image {
+        let m = manifest
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("image config {cfg_name} needs AOT artifacts"))?;
         let wm = m.wcfe.as_ref().ok_or_else(|| anyhow::anyhow!("no wcfe in manifest"))?;
         let tf = clo_hdnn::data::TensorFile::load(m.dir.join(&wm.weights))?;
         let model = clo_hdnn::wcfe::WcfeModel::load(
@@ -221,11 +394,23 @@ fn cmd_sim(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg_name = args.str_or("config", "tiny");
     let dir = artifacts_dir(args);
-    let m = Manifest::load(&dir)?;
-    let cfg = m.config(&cfg_name)?.clone();
-    let (train, test) = load_datasets(&m, &cfg_name)?;
+    let (cfg, train, test, manifest) = load_workload(args, &cfg_name)?;
+    // Artifact factors only when they actually exist — otherwise fall back
+    // to seeded factors, matching native_backend()'s behavior for infer.
+    let has_factors =
+        manifest.is_some() && dir.join(format!("hd_factors_{cfg_name}.bin")).exists();
+    let backend = match args.str_or("backend", "native").as_str() {
+        "native" if has_factors => {
+            BackendSpec::NativeArtifacts { artifacts: dir, config: cfg_name.clone() }
+        }
+        "native" => BackendSpec::Native { cfg: cfg.clone(), seed: 7 },
+        #[cfg(feature = "pjrt")]
+        "pjrt" => BackendSpec::Pjrt { artifacts: dir, config: cfg_name.clone() },
+        other => anyhow::bail!("unknown --backend '{other}' ({BACKENDS})"),
+    };
+    println!("serving config {cfg_name} on {backend:?}");
     let opts = CoordinatorOptions {
-        backend: BackendSpec::Pjrt { artifacts: dir, config: cfg_name.clone() },
+        backend,
         tau: args.f64_or("tau", 0.5) as f32,
         min_segments: args.usize_or("min-seg", 1),
         mode_policy: Default::default(),

@@ -44,15 +44,20 @@ impl PjrtBackend {
     }
 
     /// Pad a partial batch up to the lowered batch size (replicating the
-    /// last row) and run; callers slice the result back down.
-    fn pad(&self, xs: &[f32], batch: usize, width: usize) -> Vec<f32> {
+    /// last row) and run; callers slice the result back down. An empty batch
+    /// is an error: there is no last row to replicate (and `batch - 1` would
+    /// underflow), and the guard matches `NativeBackend`.
+    fn pad(&self, xs: &[f32], batch: usize, width: usize) -> Result<Vec<f32>> {
+        if batch == 0 {
+            bail!("empty batch (batch must be >= 1)");
+        }
         let mut padded = Vec::with_capacity(self.batch * width);
         padded.extend_from_slice(xs);
         let last = &xs[(batch - 1) * width..batch * width];
         for _ in batch..self.batch {
             padded.extend_from_slice(last);
         }
-        padded
+        Ok(padded)
     }
 }
 
@@ -69,7 +74,7 @@ impl HdBackend for PjrtBackend {
         if seg >= self.cfg.segments {
             bail!("segment {seg} out of range");
         }
-        let padded = self.pad(xs, batch, feat);
+        let padded = self.pad(xs, batch, feat)?;
         let out = self.enc_seg.run(&[
             Arg::F32(&padded, &[self.batch, feat]),
             Arg::I32(seg as i32),
@@ -82,7 +87,7 @@ impl HdBackend for PjrtBackend {
         if batch > self.batch || xs.len() != batch * feat {
             bail!("encode_full: bad batch {batch} / len {}", xs.len());
         }
-        let padded = self.pad(xs, batch, feat);
+        let padded = self.pad(xs, batch, feat)?;
         let out = self
             .enc_full
             .run(&[Arg::F32(&padded, &[self.batch, feat])])?;
@@ -107,7 +112,7 @@ impl HdBackend for PjrtBackend {
         if batch > self.batch || qs.len() != batch * len {
             bail!("search: bad batch {batch} / len {}", qs.len());
         }
-        let padded = self.pad(qs, batch, len);
+        let padded = self.pad(qs, batch, len)?;
         let out = self.search_seg.run(&[
             Arg::F32(&padded, &[self.batch, len]),
             Arg::F32(chvs, &[classes, len]),

@@ -1,11 +1,26 @@
-//! PJRT runtime: load AOT artifacts (HLO text lowered from JAX/Pallas by
-//! `python/compile/aot.py`), compile once per process, execute on the hot
-//! path. Python never runs here.
+//! Execution runtime behind the [`crate::hdc::HdBackend`] trait.
+//!
+//! Two interchangeable backends:
+//! * [`NativeBackend`] (default) — pure Rust, hermetic: no Python, no PJRT,
+//!   no artifacts required. This is what CI builds and tests.
+//! * `PjrtBackend` (`--features pjrt`) — loads AOT artifacts (HLO text
+//!   lowered from JAX/Pallas by `python/compile/aot.py`), compiles once per
+//!   process via the PJRT C API, and executes them on the hot path. Python
+//!   never runs here.
+//!
+//! [`Manifest`] (the artifact catalogue) is plain JSON parsing and is always
+//! available; only the engine/executable layer needs the `xla` bindings.
 
+#[cfg(feature = "pjrt")]
 pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod native;
 
+#[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
+#[cfg(feature = "pjrt")]
 pub use engine::{Arg, Engine, Executable};
 pub use manifest::Manifest;
+pub use native::NativeBackend;

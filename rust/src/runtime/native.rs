@@ -1,0 +1,180 @@
+//! [`NativeBackend`]: the default, hermetic [`HdBackend`] — pure Rust, no
+//! PJRT, no Python artifacts required. It wraps [`SoftwareEncoder`] (the
+//! bit-exact software twin of the AOT Pallas kernels) behind the same
+//! construction/batching surface as `PjrtBackend`, so the coordinator, CLI,
+//! benches, and tests are backend-agnostic:
+//!
+//! * [`NativeBackend::seeded`] — random ±1 Kronecker factors from a seed
+//!   (synthetic configs, tests, artifact-free serving);
+//! * [`NativeBackend::from_manifest`] / [`NativeBackend::from_artifacts`] —
+//!   the production factors from `hd_factors_<config>.bin`, matching what
+//!   the PJRT executables were lowered with.
+//!
+//! Unlike `PjrtBackend`, no executable set is lowered per batch size: any
+//! batch in `1..=max_batch` runs directly. `batch == 0` is rejected (the
+//! same guard `PjrtBackend::pad` applies) rather than silently returning an
+//! empty tensor.
+
+use crate::config::HdConfig;
+use crate::data::TensorFile;
+use crate::hdc::encoder::SoftwareEncoder;
+use crate::hdc::HdBackend;
+use crate::runtime::Manifest;
+use crate::Result;
+use anyhow::bail;
+use std::path::Path;
+
+pub struct NativeBackend {
+    inner: SoftwareEncoder,
+    /// largest accepted batch (API parity with the lowered PJRT handles)
+    max_batch: usize,
+}
+
+impl NativeBackend {
+    /// Wrap an existing encoder; `max_batch` must be >= 1.
+    pub fn new(inner: SoftwareEncoder, max_batch: usize) -> Result<NativeBackend> {
+        if max_batch == 0 {
+            bail!("NativeBackend: max_batch must be >= 1");
+        }
+        Ok(NativeBackend { inner, max_batch })
+    }
+
+    /// Random ±1 Kronecker factors from a seed (no artifacts needed).
+    pub fn seeded(cfg: HdConfig, seed: u64, max_batch: usize) -> Result<NativeBackend> {
+        NativeBackend::new(SoftwareEncoder::random(cfg, seed), max_batch)
+    }
+
+    /// Load the production factors referenced by an already-open manifest.
+    pub fn from_manifest(
+        manifest: &Manifest,
+        config: &str,
+        max_batch: usize,
+    ) -> Result<NativeBackend> {
+        let cfg = manifest.config(config)?.clone();
+        let tf = TensorFile::load(manifest.dir.join(format!("hd_factors_{config}.bin")))?;
+        let enc = SoftwareEncoder::new(
+            cfg.clone(),
+            tf.f32_shaped("a", &[cfg.d1, cfg.f1])?.to_vec(),
+            tf.f32_shaped("b", &[cfg.d2, cfg.f2])?.to_vec(),
+        )?;
+        NativeBackend::new(enc, max_batch)
+    }
+
+    /// Open an artifact directory and load the named config's factors.
+    pub fn from_artifacts(
+        dir: impl AsRef<Path>,
+        config: &str,
+        max_batch: usize,
+    ) -> Result<NativeBackend> {
+        let manifest = Manifest::load(dir)?;
+        NativeBackend::from_manifest(&manifest, config, max_batch)
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Recalibrate `scale_q` from representative (already feature-quantized)
+    /// inputs — the Rust twin of the build-time calibration; synthetic
+    /// configs should call this before training.
+    pub fn calibrate(&mut self, xs: &[f32], batch: usize) {
+        self.inner.calibrate(xs, batch);
+    }
+
+    /// The empty-batch / over-batch guard shared with `PjrtBackend::pad`.
+    fn check_batch(&self, what: &str, batch: usize) -> Result<()> {
+        if batch == 0 {
+            bail!("{what}: empty batch (batch must be >= 1)");
+        }
+        if batch > self.max_batch {
+            bail!("{what}: batch {batch} exceeds max_batch {}", self.max_batch);
+        }
+        Ok(())
+    }
+}
+
+impl HdBackend for NativeBackend {
+    fn cfg(&self) -> &HdConfig {
+        self.inner.cfg()
+    }
+
+    fn encode_segment(&mut self, xs: &[f32], batch: usize, seg: usize) -> Result<Vec<f32>> {
+        self.check_batch("encode_segment", batch)?;
+        self.inner.encode_segment(xs, batch, seg)
+    }
+
+    fn encode_full(&mut self, xs: &[f32], batch: usize) -> Result<Vec<f32>> {
+        self.check_batch("encode_full", batch)?;
+        self.inner.encode_full(xs, batch)
+    }
+
+    fn search(
+        &mut self,
+        qs: &[f32],
+        batch: usize,
+        chvs: &[f32],
+        classes: usize,
+        len: usize,
+    ) -> Result<Vec<f32>> {
+        self.check_batch("search", batch)?;
+        self.inner.search(qs, batch, chvs, classes, len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tiny() -> HdConfig {
+        HdConfig::synthetic("t", 8, 8, 32, 32, 8, 4)
+    }
+
+    #[test]
+    fn matches_software_encoder_exactly() {
+        let cfg = tiny();
+        let mut native = NativeBackend::seeded(cfg.clone(), 11, 4).unwrap();
+        let mut sw = SoftwareEncoder::random(cfg.clone(), 11);
+        let mut rng = Rng::new(12);
+        let xs: Vec<f32> = (0..3 * cfg.features()).map(|_| rng.range(-90, 91) as f32).collect();
+        assert_eq!(
+            native.encode_full(&xs, 3).unwrap(),
+            sw.encode_full(&xs, 3).unwrap()
+        );
+        for s in 0..cfg.segments {
+            assert_eq!(
+                native.encode_segment(&xs, 3, s).unwrap(),
+                sw.encode_segment(&xs, 3, s).unwrap(),
+                "segment {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_empty_and_oversized_batches() {
+        let cfg = tiny();
+        let mut native = NativeBackend::seeded(cfg.clone(), 1, 2).unwrap();
+        assert!(native.encode_full(&[], 0).is_err());
+        assert!(native.encode_segment(&[], 0, 0).is_err());
+        assert!(native.search(&[], 0, &[], cfg.classes, cfg.seg_len()).is_err());
+        let xs = vec![0.0; 3 * cfg.features()];
+        assert!(native.encode_full(&xs, 3).is_err());
+        assert!(NativeBackend::seeded(cfg, 1, 0).is_err());
+    }
+
+    #[test]
+    fn search_is_l1() {
+        let cfg = tiny();
+        let mut native = NativeBackend::seeded(cfg.clone(), 2, 1).unwrap();
+        let mut rng = Rng::new(3);
+        let len = cfg.seg_len();
+        let q: Vec<f32> = (0..len).map(|_| rng.range(-127, 128) as f32).collect();
+        let chv: Vec<f32> = (0..cfg.classes * len)
+            .map(|_| rng.range(-127, 128) as f32)
+            .collect();
+        assert_eq!(
+            native.search(&q, 1, &chv, cfg.classes, len).unwrap(),
+            crate::hdc::distance::l1_batch(&q, 1, &chv, cfg.classes, len).unwrap()
+        );
+    }
+}

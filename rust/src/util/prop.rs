@@ -61,6 +61,18 @@ pub mod gen {
     pub fn choice<T: Copy>(rng: &mut Rng, options: &[T]) -> T {
         options[rng.below(options.len())]
     }
+
+    /// +-1 hypervector (the INT1 / XOR-tree domain).
+    pub fn pm1_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.sign()).collect()
+    }
+
+    /// Vector of INT`bits`-valued f32 on the symmetric signed grid
+    /// [-(2^(bits-1)-1), 2^(bits-1)-1].
+    pub fn quantized_vec(rng: &mut Rng, len: usize, bits: u8) -> Vec<f32> {
+        let m = ((1i64 << (bits - 1)) - 1).max(1);
+        (0..len).map(|_| rng.range(-m, m + 1) as f32).collect()
+    }
 }
 
 #[cfg(test)]
@@ -98,6 +110,20 @@ mod tests {
         for v in gen::int8_vec(&mut rng, 1000) {
             assert!((-127.0..=127.0).contains(&v));
             assert_eq!(v.fract(), 0.0);
+        }
+    }
+
+    #[test]
+    fn new_generators_stay_on_their_grids() {
+        let mut rng = Rng::new(5);
+        for v in gen::pm1_vec(&mut rng, 500) {
+            assert!(v == 1.0 || v == -1.0);
+        }
+        for v in gen::quantized_vec(&mut rng, 500, 4) {
+            assert!((-7.0..=7.0).contains(&v) && v.fract() == 0.0);
+        }
+        for v in gen::quantized_vec(&mut rng, 100, 1) {
+            assert!((-1.0..=1.0).contains(&v) && v.fract() == 0.0);
         }
     }
 }

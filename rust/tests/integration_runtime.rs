@@ -2,7 +2,12 @@
 //! Pallas/JAX executables must agree with the Rust software implementations
 //! bit-for-bit, and the full serving path must work end-to-end.
 //!
-//! These tests are skipped (with a note) if `artifacts/` has not been built.
+//! These tests are skipped (with a note) if `artifacts/` has not been built,
+//! and the whole suite only compiles with `--features pjrt` (the default
+//! build exercises the NativeBackend equivalents in `tests/native_backend.rs`
+//! and `tests/golden.rs` instead).
+
+#![cfg(feature = "pjrt")]
 
 use clo_hdnn::config::HdConfig;
 use clo_hdnn::data::{Dataset, TensorFile};

@@ -1,0 +1,124 @@
+//! NativeBackend contracts: bit-exact equivalence with [`SoftwareEncoder`]
+//! (single samples, batches, and batches assembled by the coordinator's
+//! dynamic [`Batcher`]), the empty-batch guard, and the hermetic classify +
+//! learn round-trip through the [`Coordinator`] with zero Python artifacts.
+
+use clo_hdnn::config::HdConfig;
+use clo_hdnn::coordinator::batcher::{BatchPolicy, Batcher};
+use clo_hdnn::coordinator::{Coordinator, CoordinatorOptions, Payload};
+use clo_hdnn::data::synthetic;
+use clo_hdnn::hdc::encoder::SoftwareEncoder;
+use clo_hdnn::hdc::HdBackend;
+use clo_hdnn::runtime::NativeBackend;
+use clo_hdnn::util::prop::{forall, gen};
+use std::time::Duration;
+
+fn tiny() -> HdConfig {
+    HdConfig::synthetic("t", 8, 8, 32, 32, 8, 5)
+}
+
+#[test]
+fn prop_native_equals_software_across_batches_and_segments() {
+    forall(15, 0x4A7, |rng| {
+        let cfg = tiny();
+        let seed = rng.next_u64();
+        let mut native = NativeBackend::seeded(cfg.clone(), seed, 8).unwrap();
+        let mut sw = SoftwareEncoder::random(cfg.clone(), seed);
+        let batch = 1 + rng.below(8);
+        let xs = gen::int8_vec(rng, batch * cfg.features());
+        assert_eq!(
+            native.encode_full(&xs, batch).unwrap(),
+            sw.encode_full(&xs, batch).unwrap()
+        );
+        let seg = rng.below(cfg.segments);
+        assert_eq!(
+            native.encode_segment(&xs, batch, seg).unwrap(),
+            sw.encode_segment(&xs, batch, seg).unwrap()
+        );
+        let q = gen::int8_vec(rng, batch * cfg.seg_len());
+        let chv = gen::int8_vec(rng, cfg.classes * cfg.seg_len());
+        assert_eq!(
+            native.search(&q, batch, &chv, cfg.classes, cfg.seg_len()).unwrap(),
+            sw.search(&q, batch, &chv, cfg.classes, cfg.seg_len()).unwrap()
+        );
+    });
+}
+
+#[test]
+fn batcher_assembled_batches_match_per_sample_encoding() {
+    // The serving shape: requests queue in the dynamic Batcher, the executor
+    // encodes each taken batch in one NativeBackend call. Row n of every
+    // batched encode must equal the per-sample software encode.
+    let cfg = tiny();
+    let mut native = NativeBackend::seeded(cfg.clone(), 33, 8).unwrap();
+    let mut sw = SoftwareEncoder::random(cfg.clone(), 33);
+    let mut rng = clo_hdnn::util::Rng::new(34);
+    let samples: Vec<Vec<f32>> = (0..13)
+        .map(|_| gen::int8_vec(&mut rng, cfg.features()))
+        .collect();
+
+    let mut batcher: Batcher<Vec<f32>> =
+        Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(60) });
+    for s in &samples {
+        batcher.push(s.clone());
+    }
+
+    let mut seen = 0usize;
+    while !batcher.is_empty() {
+        let batch = batcher.take();
+        let n = batch.len();
+        assert!(n <= 8 && n > 0);
+        let flat: Vec<f32> = batch.iter().flatten().copied().collect();
+        let got = native.encode_full(&flat, n).unwrap();
+        for (row, sample) in batch.iter().enumerate() {
+            let want = sw.encode_full(sample, 1).unwrap();
+            assert_eq!(
+                &got[row * cfg.dim()..(row + 1) * cfg.dim()],
+                &want[..],
+                "batch row {row}"
+            );
+        }
+        seen += n;
+    }
+    assert_eq!(seen, samples.len());
+}
+
+#[test]
+fn empty_batch_is_an_error_not_a_panic() {
+    let cfg = tiny();
+    let mut native = NativeBackend::seeded(cfg.clone(), 1, 8).unwrap();
+    let err = native.encode_full(&[], 0).unwrap_err();
+    assert!(format!("{err:#}").contains("empty batch"), "{err:#}");
+    assert!(native.encode_segment(&[], 0, 0).is_err());
+    assert!(native.search(&[], 0, &[], cfg.classes, cfg.seg_len()).is_err());
+}
+
+#[test]
+fn hermetic_classify_learn_round_trip_through_coordinator() {
+    // The zero-artifact serving path end-to-end: synthetic config + blob
+    // data -> Coordinator on a seeded NativeBackend -> online learn ->
+    // progressive classify. No Python, no PJRT, no files.
+    let cfg = synthetic::config("tiny").unwrap();
+    let (train, test) = synthetic::blobs(&cfg, 6, 4, 99);
+    let coord = Coordinator::start(CoordinatorOptions::software(cfg.clone())).unwrap();
+    for i in 0..train.n {
+        let r = coord
+            .call(Payload::Learn(train.sample(i).to_vec(), train.label(i)))
+            .unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    let mut correct = 0usize;
+    let mut segments = 0usize;
+    for i in 0..test.n {
+        let r = coord
+            .call(Payload::Features(test.sample(i).to_vec()))
+            .unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        correct += usize::from(r.class == Some(test.label(i)));
+        segments += r.segments_used;
+        assert!(r.segments_used >= 1 && r.segments_used <= cfg.segments);
+    }
+    let acc = correct as f64 / test.n as f64;
+    assert!(acc > 0.9, "hermetic round-trip accuracy {acc}");
+    assert!(segments >= test.n, "at least one segment per request");
+}

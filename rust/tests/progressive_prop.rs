@@ -1,0 +1,141 @@
+//! Property tests for the progressive-search controller — the paper's
+//! inference-complexity contribution (up to 61% of encode+search work
+//! skipped with negligible accuracy loss).
+//!
+//! Covered contracts:
+//! * soundness: with the margin bound that exceeds the maximum possible
+//!   remaining contribution, early exit NEVER changes the argmin vs a full
+//!   search — over fully randomized CHV banks, encoders, and queries;
+//! * monotonicity: per query, the number of segments used (and therefore
+//!   the reported dimension-fraction saving) is monotone in the confidence
+//!   threshold `tau`;
+//! * the saving actually materializes on confident inputs, and
+//!   `min_segments` / infinite-`tau` bounds hold.
+
+use clo_hdnn::config::HdConfig;
+use clo_hdnn::hdc::encoder::SoftwareEncoder;
+use clo_hdnn::hdc::quantize::quantize_features;
+use clo_hdnn::hdc::{ChvStore, HdBackend, ProgressiveSearch};
+use clo_hdnn::util::prop::{forall, gen};
+use clo_hdnn::util::Rng;
+
+fn prop_cfg(classes: usize) -> HdConfig {
+    HdConfig::synthetic("p", 8, 8, 32, 32, 8, classes)
+}
+
+/// Blob-trained encoder + store (the regime where early exits happen), plus
+/// the prototypes used as confident queries.
+fn blob_setup(rng: &mut Rng) -> (SoftwareEncoder, ChvStore, Vec<Vec<f32>>) {
+    let cfg = prop_cfg(4);
+    let mut enc = SoftwareEncoder::random(cfg.clone(), rng.next_u64());
+    let mut store = ChvStore::new(cfg.clone());
+    let protos: Vec<Vec<f32>> = (0..cfg.classes)
+        .map(|_| gen::normal_vec(rng, cfg.features(), 50.0))
+        .collect();
+    for (c, p) in protos.iter().enumerate() {
+        for _ in 0..5 {
+            let noisy: Vec<f32> = p.iter().map(|&v| v + rng.normal_f32() * 5.0).collect();
+            let xq = quantize_features(&noisy, 1.0);
+            let q = enc.encode_full(&xq, 1).unwrap();
+            store.update(c, &q, 1.0).unwrap();
+        }
+    }
+    (enc, store, protos)
+}
+
+#[test]
+fn prop_sound_threshold_agrees_with_full_search_on_random_banks() {
+    forall(20, 0xAB1, |rng| {
+        let cfg = prop_cfg(6);
+        let mut enc = SoftwareEncoder::random(cfg.clone(), rng.next_u64());
+        let mut store = ChvStore::new(cfg.clone());
+        for c in 0..cfg.classes {
+            // fully random INT8 CHV bank (not blob structure)
+            store.update(c, &gen::int8_vec(rng, cfg.dim()), 1.0).unwrap();
+        }
+        // tau * mean_absdiff == 254 == the maximum per-element contribution
+        // any remaining segment can add: exit is provably safe.
+        let ps = ProgressiveSearch { tau: 254.0 / cfg.mean_absdiff, min_segments: 1 };
+        for _ in 0..4 {
+            let x = gen::int8_vec(rng, cfg.features());
+            let full = ProgressiveSearch::classify_full(&mut enc, &store, &x).unwrap();
+            let prog = ps.classify(&mut enc, &store, &x).unwrap();
+            assert_eq!(full.class, prog.class, "early exit changed the argmin");
+            assert!(prog.segments_used <= full.segments_used);
+        }
+    });
+}
+
+#[test]
+fn prop_segments_and_savings_monotone_in_tau() {
+    forall(10, 0xAB2, |rng| {
+        let (mut enc, store, protos) = blob_setup(rng);
+        let total = enc.cfg().segments;
+        let taus = [0.01f32, 0.05, 0.2, 0.5, 1.0, 4.0];
+        for p in &protos {
+            let xq = quantize_features(p, 1.0);
+            let mut prev_used = 0usize;
+            let mut prev_saving = 1.0f64;
+            for &tau in &taus {
+                let r = ProgressiveSearch { tau, min_segments: 1 }
+                    .classify(&mut enc, &store, &xq)
+                    .unwrap();
+                assert!(
+                    r.segments_used >= prev_used,
+                    "tau={tau}: segments_used {} < {prev_used} — must be non-decreasing",
+                    r.segments_used
+                );
+                let saving = r.complexity_saving(total);
+                assert!(
+                    saving <= prev_saving + 1e-12,
+                    "tau={tau}: saving {saving} > {prev_saving} — must be non-increasing"
+                );
+                assert!((0.0..=1.0).contains(&saving));
+                prev_used = r.segments_used;
+                prev_saving = saving;
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_confident_inputs_save_work_and_agree_with_full() {
+    forall(10, 0xAB3, |rng| {
+        let (mut enc, store, protos) = blob_setup(rng);
+        let total = enc.cfg().segments;
+        let ps = ProgressiveSearch { tau: 0.3, min_segments: 1 };
+        let mut used_sum = 0usize;
+        for p in &protos {
+            let xq = quantize_features(p, 1.0);
+            let full = ProgressiveSearch::classify_full(&mut enc, &store, &xq).unwrap();
+            let prog = ps.classify(&mut enc, &store, &xq).unwrap();
+            assert_eq!(prog.class, full.class);
+            used_sum += prog.segments_used;
+        }
+        // the whole point of progressive search: on well-separated inputs
+        // the mean complexity must drop below the full search
+        assert!(
+            used_sum < protos.len() * total,
+            "no work saved: {used_sum} / {}",
+            protos.len() * total
+        );
+    });
+}
+
+#[test]
+fn prop_min_segments_and_infinite_tau_bounds() {
+    forall(20, 0xAB4, |rng| {
+        let (mut enc, store, protos) = blob_setup(rng);
+        let total = enc.cfg().segments;
+        let xq = quantize_features(&protos[rng.below(protos.len())], 1.0);
+        let k = 1 + rng.below(total);
+        let r = ProgressiveSearch { tau: 0.0, min_segments: k }
+            .classify(&mut enc, &store, &xq)
+            .unwrap();
+        assert!(r.segments_used >= k, "min_segments={k} violated: {}", r.segments_used);
+        let full = ProgressiveSearch::classify_full(&mut enc, &store, &xq).unwrap();
+        assert!(!full.early_exit);
+        assert_eq!(full.segments_used, total);
+        assert_eq!(full.complexity_saving(total), 0.0);
+    });
+}

@@ -1,0 +1,196 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The workspace builds with no network access, so instead of pulling
+//! `anyhow` from crates.io this path dependency implements exactly the
+//! surface the codebase uses:
+//!
+//! * [`Error`] — an error value carrying a context chain (outermost first);
+//! * [`Result<T>`] — `Result<T, Error>` with a defaulted error parameter;
+//! * [`anyhow!`] / [`bail!`] — format-style construction / early return;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on any `Result`
+//!   whose error converts into [`Error`];
+//! * `From<E>` for every `E: std::error::Error + Send + Sync + 'static`,
+//!   so `?` lifts std errors (io, utf8, parse, channel recv, ...).
+//!
+//! Display semantics match anyhow: `{}` prints the outermost message,
+//! `{:#}` prints the whole chain joined by `": "`, and `{:?}` prints the
+//! message plus a `Caused by:` list.
+
+use std::fmt;
+
+/// `Result<T, Error>` with the error type defaulted, like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error value: a chain of human-readable messages, outermost
+/// context first, root cause last.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msgs: vec![message.to_string()] }
+    }
+
+    /// Prepend a layer of context (the new outermost message).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.msgs.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.msgs.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.msgs.last().expect("error has at least one message")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.msgs.join(": "))
+        } else {
+            f.write_str(&self.msgs[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msgs[0])?;
+        if self.msgs.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for m in &self.msgs[1..] {
+                write!(f, "\n    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The same blanket conversion real anyhow ships: any std error (and its
+// source chain) lifts into `Error` via `?`. Coherence works because `Error`
+// itself intentionally does NOT implement `std::error::Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error { msgs }
+    }
+}
+
+/// Attach context to the error branch of a `Result`, like `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error with an eagerly evaluated context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+// One impl covers both `Result<T, Error>` (via the reflexive `From`) and
+// `Result<T, E>` for std errors (via the blanket `From` above).
+impl<T, E> Context<T> for Result<T, E>
+where
+    Error: From<E>,
+{
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments, like `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_missing() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e = io_missing().unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+    }
+
+    #[test]
+    fn macro_formats_and_bails() {
+        fn f(n: usize) -> Result<()> {
+            if n > 3 {
+                bail!("n too big: {n}");
+            }
+            Err(anyhow!("fixed {}", "msg"))
+        }
+        assert_eq!(format!("{}", f(9).unwrap_err()), "n too big: 9");
+        assert_eq!(format!("{}", f(0).unwrap_err()), "fixed msg");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_chains() {
+        let e: Error = anyhow!("root");
+        let r: Result<()> = Err(e);
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: root");
+        assert_eq!(e.root_cause(), "root");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn question_mark_lifts_std_errors() {
+        fn f() -> Result<i32> {
+            let v: i32 = "not a number".parse()?;
+            Ok(v)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = io_missing().unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+}

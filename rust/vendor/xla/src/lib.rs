@@ -1,0 +1,142 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The `pjrt` cargo feature of `clo_hdnn` compiles against this crate so the
+//! feature-gated code keeps type-checking in environments where the real XLA
+//! toolchain (PJRT C API + bindings) is not vendored. Every entry point that
+//! would touch PJRT returns [`Error`] at runtime with a clear message.
+//!
+//! To run the real thing, point the workspace `xla` dependency at a checkout
+//! of the actual bindings (same API: `PjRtClient`, `PjRtLoadedExecutable`,
+//! `Literal`, `HloModuleProto`, `XlaComputation`).
+
+use std::fmt;
+
+/// Error raised by every stubbed PJRT entry point.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT unavailable — this build links the offline xla stub; \
+         vendor the real xla bindings to use the pjrt feature at runtime"
+    )))
+}
+
+/// Element types the engine lowers with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    I32,
+}
+
+/// Host-side tensor value.
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        unavailable("Literal::create_from_shape_and_untyped_data")
+    }
+
+    pub fn scalar(_v: i32) -> Literal {
+        Literal
+    }
+
+    pub fn vec1(_v: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module (text format).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// A computation handed to the compiler.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer returned by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client (CPU platform in this repo).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("PJRT unavailable"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::scalar(1).to_tuple1().is_err());
+        assert!(Literal::vec1(&[1.0]).reshape(&[1]).is_err());
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0; 4])
+            .is_err());
+    }
+}

@@ -42,7 +42,7 @@ fn run(cfg: &HdConfig, train: &Dataset, test: &Dataset, retrain: usize) -> (f64,
     enc.calibrate(&sample, n);
     let mut cl = HdClassifier::new(
         Box::new(enc),
-        ProgressiveSearch { tau: 0.5, min_segments: 1 },
+        ProgressiveSearch { tau: 0.5, min_segments: 1, ..Default::default() },
     );
     let trainer = Trainer { retrain_epochs: retrain };
     trainer.train_all(&mut cl, train).unwrap();

@@ -28,7 +28,10 @@ fn hd_learner(m: &Manifest, cfg_name: &str, tau: f32) -> HdLearner {
     )
     .unwrap();
     HdLearner::new(
-        HdClassifier::new(Box::new(enc), ProgressiveSearch { tau, min_segments: 1 }),
+        HdClassifier::new(
+            Box::new(enc),
+            ProgressiveSearch { tau, min_segments: 1, ..Default::default() },
+        ),
         Trainer { retrain_epochs: 2 },
     )
 }

@@ -7,6 +7,7 @@
 
 use clo_hdnn::config::HdConfig;
 use clo_hdnn::data::synthetic;
+use clo_hdnn::hdc::packed;
 use clo_hdnn::hdc::quantize::quantize_features;
 use clo_hdnn::hdc::{ChvStore, HdBackend, HdClassifier, ProgressiveSearch, Trainer};
 use clo_hdnn::runtime::NativeBackend;
@@ -59,6 +60,50 @@ fn main() {
     });
     t.row(&["partial search (native b1)".into(), fmt_secs(s.median), fmt_secs(s.p95),
             format!("{} CHVs", cfg.classes)]);
+    let scalar_partial = s.median;
+
+    // the XOR-tree path: same partial search over the bit-packed INT1 AM
+    let qp = packed::pack_signs(&qseg);
+    let s = bench.run(|| {
+        native
+            .search_packed(&qp, 1, store.packed().segment(0), cfg.classes, cfg.seg_len())
+            .unwrap()
+    });
+    t.row(&[
+        "partial search (packed b1)".into(),
+        fmt_secs(s.median),
+        fmt_secs(s.p95),
+        format!("XOR+popcount, {:.1}x", scalar_partial / s.median),
+    ]);
+
+    // full-D associative search, scalar vs packed (the bench `clo_hdnn
+    // bench` sweeps across configs)
+    let qfull = native.encode_full(&xq, 1).unwrap();
+    let mut chvs_full = Vec::with_capacity(cfg.classes * cfg.dim());
+    for c in 0..cfg.classes {
+        chvs_full.extend(store.class_hv(c));
+    }
+    let chvs_packed = packed::pack_rows(&chvs_full, cfg.classes, cfg.dim()).unwrap();
+    let s = bench.run(|| {
+        native
+            .search(&qfull, 1, &chvs_full, cfg.classes, cfg.dim())
+            .unwrap()
+    });
+    t.row(&["full search (scalar L1)".into(), fmt_secs(s.median), fmt_secs(s.p95),
+            format!("{} x {} f32", cfg.classes, cfg.dim())]);
+    let scalar_full = s.median;
+    let qfp = packed::pack_signs(&qfull);
+    let s = bench.run(|| {
+        native
+            .search_packed(&qfp, 1, &chvs_packed, cfg.classes, cfg.dim())
+            .unwrap()
+    });
+    t.row(&[
+        "full search (packed INT1)".into(),
+        fmt_secs(s.median),
+        fmt_secs(s.p95),
+        format!("{} words, {:.1}x", packed::words_for(cfg.dim()), scalar_full / s.median),
+    ]);
     t.print();
 
     // end-to-end progressive vs exhaustive classify on the native pipeline
@@ -66,7 +111,7 @@ fn main() {
     let mut t2 = Table::new(&["pipeline", "median", "p95", "throughput"]);
     let mut cl = HdClassifier::new(
         Box::new(NativeBackend::seeded(cfg.clone(), 1, 8).unwrap()),
-        ProgressiveSearch { tau: 0.5, min_segments: 1 },
+        ProgressiveSearch { tau: 0.5, min_segments: 1, ..Default::default() },
     );
     cl.store = store.clone();
     let s = bench.run(|| cl.classify(&x).unwrap());
@@ -78,7 +123,7 @@ fn main() {
     ]);
     let mut cl_full = HdClassifier::new(
         Box::new(NativeBackend::seeded(cfg.clone(), 1, 8).unwrap()),
-        ProgressiveSearch { tau: f32::INFINITY, min_segments: usize::MAX },
+        ProgressiveSearch { tau: f32::INFINITY, min_segments: usize::MAX, ..Default::default() },
     );
     cl_full.store = store.clone();
     let s = bench.run(|| cl_full.classify(&x).unwrap());
@@ -94,7 +139,7 @@ fn main() {
     let train_bench = Bench::new(2, 10);
     let mut cl_train = HdClassifier::new(
         Box::new(NativeBackend::seeded(cfg.clone(), 1, 8).unwrap()),
-        ProgressiveSearch { tau: 0.5, min_segments: 1 },
+        ProgressiveSearch { tau: 0.5, min_segments: 1, ..Default::default() },
     );
     let trainer = Trainer { retrain_epochs: 0 };
     let ds = clo_hdnn::data::Dataset::from_parts(

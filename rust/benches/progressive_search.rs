@@ -56,7 +56,7 @@ fn main() {
     let cfg = enc0.cfg().clone();
     let mut base = HdClassifier::new(
         Box::new(enc0),
-        ProgressiveSearch { tau: f32::INFINITY, min_segments: usize::MAX },
+        ProgressiveSearch { tau: f32::INFINITY, min_segments: usize::MAX, ..Default::default() },
     );
     Trainer { retrain_epochs: 1 }.train_all(&mut base, &train).unwrap();
     let store = base.store.clone();
@@ -71,7 +71,7 @@ fn main() {
     for &tau in &[f32::INFINITY, 2.0, 1.0, 0.5, 0.25, 0.12, 0.06, 0.03] {
         let mut cl = HdClassifier::new(
             Box::new(calibrated_encoder(&cfg, 3, &train)),
-            ProgressiveSearch { tau, min_segments: 1 },
+            ProgressiveSearch { tau, min_segments: 1, ..Default::default() },
         );
         cl.store = store.clone();
         let t0 = std::time::Instant::now();
@@ -112,7 +112,7 @@ fn main() {
         let mk = |tau: f32, min_seg: usize| {
             let mut cl = HdClassifier::new(
                 Box::new(calibrated_encoder(&cfg, 9, &train)),
-                ProgressiveSearch { tau, min_segments: min_seg },
+                ProgressiveSearch { tau, min_segments: min_seg, ..Default::default() },
             );
             Trainer { retrain_epochs: 1 }.train_all(&mut cl, &train).unwrap();
             cl.evaluate((0..test.n).map(|i| (test.sample(i).to_vec(), test.label(i))))

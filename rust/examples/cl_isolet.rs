@@ -69,7 +69,7 @@ fn main() -> clo_hdnn::Result<()> {
     let mut hd = HdLearner::new(
         HdClassifier::new(
             Box::new(backend),
-            ProgressiveSearch { tau, min_segments: 1 },
+            ProgressiveSearch { tau, min_segments: 1, ..Default::default() },
         ),
         Trainer { retrain_epochs: 1 },
     );

@@ -40,7 +40,7 @@ fn main() -> clo_hdnn::Result<()> {
     backend.calibrate(&calib, calib_n);
     let mut classifier = HdClassifier::new(
         Box::new(backend),
-        ProgressiveSearch { tau: 0.5, min_segments: 1 },
+        ProgressiveSearch { tau: 0.5, min_segments: 1, ..Default::default() },
     );
 
     // 3. gradient-free training: single pass + one mistake-driven epoch

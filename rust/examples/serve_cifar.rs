@@ -32,6 +32,7 @@ fn main() -> clo_hdnn::Result<()> {
         backend: BackendSpec::Pjrt { artifacts: dir, config: "cifar100".into() },
         tau: args.f64_or("tau", 0.5) as f32,
         min_segments: args.usize_or("min-seg", 1),
+        search_mode: Default::default(),
         mode_policy: Default::default(),
         queue_depth: 256,
     })?;

@@ -110,7 +110,7 @@ mod tests {
         let mut hd = HdLearner::new(
             HdClassifier::new(
                 Box::new(SoftwareEncoder::random(cfg, 62)),
-                ProgressiveSearch { tau: 0.4, min_segments: 1 },
+                ProgressiveSearch { tau: 0.4, min_segments: 1, ..Default::default() },
             ),
             Trainer { retrain_epochs: 1 },
         );

@@ -1,5 +1,6 @@
 //! Request/response types crossing the client <-> executor channel.
 
+use crate::hdc::SearchMode;
 use std::time::Instant;
 
 /// What the client submits.
@@ -7,6 +8,10 @@ use std::time::Instant;
 pub enum Payload {
     /// pre-extracted features (bypass mode candidates)
     Features(Vec<f32>),
+    /// pre-extracted features with an explicit per-request search mode
+    /// (overrides the coordinator's default INT8-L1 / packed-Hamming choice
+    /// for this one classification)
+    FeaturesWithMode(Vec<f32>, SearchMode),
     /// raw image (h*w*c in [0,1]) — requires the WCFE (normal mode)
     Image(Vec<f32>),
     /// labeled sample: learn instead of classify

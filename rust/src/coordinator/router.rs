@@ -42,6 +42,9 @@ mod tests {
         assert_eq!(r.route(&Payload::Features(vec![0.0])), Mode::Bypass);
         assert_eq!(r.route(&Payload::Image(vec![0.0])), Mode::Normal);
         assert_eq!(r.route(&Payload::Learn(vec![0.0], 1)), Mode::Bypass);
+        // the search-mode override does not affect WCFE routing
+        let p = Payload::FeaturesWithMode(vec![0.0], crate::hdc::SearchMode::HammingPacked);
+        assert_eq!(r.route(&p), Mode::Bypass);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::config::HdConfig;
 use crate::coordinator::request::{Payload, Request, Response};
 use crate::coordinator::router::{ModePolicy, Router};
 use crate::data::TensorFile;
-use crate::hdc::{HdClassifier, ProgressiveSearch};
+use crate::hdc::{HdClassifier, ProgressiveSearch, SearchMode};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, PjrtBackend};
 use crate::runtime::{Manifest, NativeBackend};
@@ -40,6 +40,10 @@ pub struct CoordinatorOptions {
     pub backend: BackendSpec,
     pub tau: f32,
     pub min_segments: usize,
+    /// default distance kernel (INT8 L1 or bit-packed INT1 Hamming);
+    /// individual requests can override it via
+    /// [`Payload::FeaturesWithMode`].
+    pub search_mode: SearchMode,
     pub mode_policy: ModePolicy,
     pub queue_depth: usize,
 }
@@ -51,6 +55,7 @@ impl CoordinatorOptions {
             backend: BackendSpec::Native { cfg, seed: 7 },
             tau: 0.5,
             min_segments: 1,
+            search_mode: SearchMode::default(),
             mode_policy: ModePolicy::Auto,
             queue_depth: 256,
         }
@@ -175,7 +180,11 @@ fn load_native_wcfe(manifest: &Manifest, config: &str) -> Result<(Option<WcfeMod
 }
 
 fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
-    let policy = ProgressiveSearch { tau: opts.tau, min_segments: opts.min_segments };
+    let policy = ProgressiveSearch {
+        tau: opts.tau,
+        min_segments: opts.min_segments,
+        mode: opts.search_mode,
+    };
     let router = Router { policy: opts.mode_policy };
     match &opts.backend {
         BackendSpec::Native { cfg, seed } => Ok(Executor {
@@ -259,14 +268,24 @@ impl Executor {
             }
             payload => {
                 let mode = self.router.route(payload);
-                let (features, used_wcfe) = match (payload, mode) {
-                    (Payload::Image(img), Mode::Normal) => (self.extract_features(img)?, true),
-                    (Payload::Image(img), Mode::Bypass) => (img.clone(), false),
-                    (Payload::Features(x), Mode::Normal) => (x.clone(), false),
-                    (Payload::Features(x), Mode::Bypass) => (x.clone(), false),
+                let (features, used_wcfe, search_override) = match (payload, mode) {
+                    (Payload::Image(img), Mode::Normal) => {
+                        (self.extract_features(img)?, true, None)
+                    }
+                    (Payload::Image(img), Mode::Bypass) => (img.clone(), false, None),
+                    (Payload::Features(x), _) => (x.clone(), false, None),
+                    (Payload::FeaturesWithMode(x, m), _) => (x.clone(), false, Some(*m)),
                     (Payload::Learn(..), _) => unreachable!(),
                 };
-                let r = self.classifier.classify(&features)?;
+                // per-request search-mode override: swap the policy's kernel
+                // for this one classification, then restore the default
+                let default_mode = self.classifier.policy.mode;
+                if let Some(m) = search_override {
+                    self.classifier.policy.mode = m;
+                }
+                let r = self.classifier.classify(&features);
+                self.classifier.policy.mode = default_mode;
+                let r = r?;
                 Ok(Response {
                     id: req.id,
                     class: Some(r.class),
@@ -350,9 +369,35 @@ mod tests {
             },
             tau: 0.5,
             min_segments: 1,
+            search_mode: SearchMode::default(),
             mode_policy: ModePolicy::Auto,
             queue_depth: 8,
         };
         assert!(Coordinator::start(opts).is_err());
+    }
+
+    #[test]
+    fn per_request_packed_mode_classifies_through_channels() {
+        let (coord, protos) = proto_and_coordinator();
+        for (c, p) in protos.iter().enumerate() {
+            for _ in 0..3 {
+                coord.call(Payload::Learn(p.clone(), c)).unwrap();
+            }
+        }
+        // same requests, one per mode: both kernels must recover the class
+        for (c, p) in protos.iter().enumerate() {
+            let scalar = coord
+                .call(Payload::FeaturesWithMode(p.clone(), SearchMode::L1Int8))
+                .unwrap();
+            let packed = coord
+                .call(Payload::FeaturesWithMode(p.clone(), SearchMode::HammingPacked))
+                .unwrap();
+            assert!(scalar.error.is_none() && packed.error.is_none());
+            assert_eq!(scalar.class, Some(c));
+            assert_eq!(packed.class, Some(c));
+        }
+        // the override is per-request: a plain Features call still works
+        let r = coord.call(Payload::Features(protos[0].clone())).unwrap();
+        assert_eq!(r.class, Some(0));
     }
 }

@@ -101,7 +101,7 @@ mod tests {
         let (train, test) = blobs(&cfg, 8, 4, 7);
         let mut cl = HdClassifier::new(
             Box::new(SoftwareEncoder::random(cfg.clone(), 7)),
-            ProgressiveSearch { tau: 0.4, min_segments: 1 },
+            ProgressiveSearch { tau: 0.4, min_segments: 1, ..Default::default() },
         );
         Trainer { retrain_epochs: 1 }.train_all(&mut cl, &train).unwrap();
         let report = cl

@@ -15,8 +15,14 @@
 //! HLO artifact implements — see [`raw_update`]) pins 80%+ of elements at
 //! +-127 after a few dozen samples and destroys class information; the
 //! normalized view is what search reads.
+//!
+//! Alongside the INT8 view the store maintains its **binarized image** — a
+//! [`PackedChvStore`] refreshed on every write (bundle in INT8, binarize on
+//! write), which is what [`SearchMode::HammingPacked`]
+//! (`crate::hdc::SearchMode`) searches through the XOR+popcount path.
 
 use crate::config::HdConfig;
+use crate::hdc::packed::PackedChvStore;
 use crate::Result;
 use anyhow::bail;
 
@@ -41,6 +47,8 @@ pub struct ChvStore {
     sums: Vec<Vec<f32>>,
     /// the INT8 view search reads: clip(round(sum / count))
     view: Vec<Vec<f32>>,
+    /// the binarized INT1 image of `view` (packed, refreshed on write)
+    packed: PackedChvStore,
     /// per-class bundled-sample count (positive updates)
     counts: Vec<u64>,
 }
@@ -51,6 +59,7 @@ impl ChvStore {
         ChvStore {
             sums: (0..cfg.segments).map(|_| vec![0.0; seg_block]).collect(),
             view: (0..cfg.segments).map(|_| vec![0.0; seg_block]).collect(),
+            packed: PackedChvStore::new(&cfg),
             counts: vec![0; cfg.classes],
             cfg,
         }
@@ -102,8 +111,17 @@ impl ChvStore {
                 *acc += sign * q;
                 *v = (*acc / norm).round_ties_even().clamp(-127.0, 127.0);
             }
+            // binarize-on-write: the packed INT1 image always mirrors the view
+            self.packed
+                .write_row(class, s, &self.view[s][class * sl..(class + 1) * sl])?;
         }
         Ok(())
+    }
+
+    /// The binarized (INT1, bit-packed) image of the AM — the operand the
+    /// XOR+popcount search path reads.
+    pub fn packed(&self) -> &PackedChvStore {
+        &self.packed
     }
 
     pub fn count(&self, class: usize) -> u64 {
@@ -137,6 +155,7 @@ impl ChvStore {
             self.sums[s].fill(0.0);
             self.view[s].fill(0.0);
         }
+        self.packed.reset();
         self.counts.fill(0);
     }
 }
@@ -247,6 +266,31 @@ mod tests {
                     &q[s * sl..(s + 1) * sl]
                 );
             }
+        });
+    }
+
+    #[test]
+    fn prop_packed_image_tracks_view_through_updates_and_reset() {
+        forall(20, 0xC45, |rng| {
+            let cfg = tiny();
+            let mut store = ChvStore::new(cfg.clone());
+            for _ in 0..3 {
+                let q = gen::int8_vec(rng, cfg.dim());
+                let class = rng.below(cfg.classes);
+                let sign = if rng.below(4) == 0 { -1.0 } else { 1.0 };
+                store.update(class, &q, sign).unwrap();
+            }
+            for c in 0..cfg.classes {
+                let bin: Vec<f32> = store
+                    .class_hv(c)
+                    .iter()
+                    .map(|&v| if v >= 0.0 { 1.0 } else { -1.0 })
+                    .collect();
+                assert_eq!(store.packed().class_hv(c), bin, "class {c}");
+            }
+            store.reset();
+            // all-zero view binarizes to all +1
+            assert!(store.packed().class_hv(0).iter().all(|&v| v == 1.0));
         });
     }
 

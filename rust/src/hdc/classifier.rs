@@ -131,7 +131,10 @@ mod tests {
     fn classifier(tau: f32) -> HdClassifier {
         let cfg = HdConfig::synthetic("t", 8, 8, 32, 32, 8, 5);
         let enc = SoftwareEncoder::random(cfg, 21);
-        HdClassifier::new(Box::new(enc), ProgressiveSearch { tau, min_segments: 1 })
+        HdClassifier::new(
+            Box::new(enc),
+            ProgressiveSearch { tau, min_segments: 1, ..Default::default() },
+        )
     }
 
     fn protos(cl: &HdClassifier, n: usize) -> Vec<Vec<f32>> {
@@ -154,6 +157,25 @@ mod tests {
         }
         for (c, p) in ps.iter().enumerate() {
             assert_eq!(cl.classify(p).unwrap().class, c);
+        }
+    }
+
+    #[test]
+    fn packed_mode_learn_then_classify_recovers_classes() {
+        // the paper's precision split: bundle in INT8, search the binarized
+        // AM through the XOR-tree path
+        let mut cl = classifier(0.4);
+        cl.policy.mode = crate::hdc::SearchMode::HammingPacked;
+        let ps = protos(&cl, 5);
+        let mut rng = Rng::new(8);
+        for (c, p) in ps.iter().enumerate() {
+            for _ in 0..4 {
+                let noisy: Vec<f32> = p.iter().map(|&v| v + rng.normal_f32() * 3.0).collect();
+                cl.learn(&noisy, c).unwrap();
+            }
+        }
+        for (c, p) in ps.iter().enumerate() {
+            assert_eq!(cl.classify(p).unwrap().class, c, "packed mode, class {c}");
         }
     }
 

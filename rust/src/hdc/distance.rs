@@ -16,11 +16,14 @@ pub fn l1_batch(
     classes: usize,
     len: usize,
 ) -> Result<Vec<f32>> {
+    if batch == 0 {
+        bail!("l1_batch: batch must be >= 1, got 0");
+    }
     if qs.len() != batch * len {
-        bail!("qs len {} != batch {batch} * len {len}", qs.len());
+        bail!("l1_batch: qs len {} != batch {batch} * len {len}", qs.len());
     }
     if chvs.len() != classes * len {
-        bail!("chvs len {} != classes {classes} * len {len}", chvs.len());
+        bail!("l1_batch: chvs len {} != classes {classes} * len {len}", chvs.len());
     }
     let mut out = vec![0.0f32; batch * classes];
     for n in 0..batch {
@@ -46,8 +49,17 @@ pub fn neg_dot_batch(
     classes: usize,
     len: usize,
 ) -> Result<Vec<f32>> {
-    if qs.len() != batch * len || chvs.len() != classes * len {
-        bail!("shape mismatch");
+    if batch == 0 {
+        bail!("neg_dot_batch: batch must be >= 1, got 0");
+    }
+    if qs.len() != batch * len {
+        bail!("neg_dot_batch: qs len {} != batch {batch} * len {len}", qs.len());
+    }
+    if chvs.len() != classes * len {
+        bail!(
+            "neg_dot_batch: chvs len {} != classes {classes} * len {len}",
+            chvs.len()
+        );
     }
     let mut out = vec![0.0f32; batch * classes];
     for n in 0..batch {
@@ -77,8 +89,17 @@ pub fn cosine_batch(
     classes: usize,
     len: usize,
 ) -> Result<Vec<f32>> {
-    if qs.len() != batch * len || chvs.len() != classes * len {
-        bail!("shape mismatch");
+    if batch == 0 {
+        bail!("cosine_batch: batch must be >= 1, got 0");
+    }
+    if qs.len() != batch * len {
+        bail!("cosine_batch: qs len {} != batch {batch} * len {len}", qs.len());
+    }
+    if chvs.len() != classes * len {
+        bail!(
+            "cosine_batch: chvs len {} != classes {classes} * len {len}",
+            chvs.len()
+        );
     }
     let chv_norms: Vec<f32> = (0..classes)
         .map(|c| chvs[c * len..(c + 1) * len].iter().map(|v| v * v).sum::<f32>().sqrt())
@@ -170,9 +191,51 @@ mod tests {
 
     #[test]
     fn shape_errors() {
+        // all four search kernels (L1, neg-dot, cosine, packed Hamming)
+        // reject qs mismatch, chvs mismatch, and the empty batch — with
+        // messages naming the offending dimension
+        use crate::hdc::packed::hamming_search;
         assert!(l1_batch(&[0.0; 3], 1, &[0.0; 4], 2, 2).is_err());
         assert!(l1_batch(&[0.0; 2], 1, &[0.0; 3], 2, 2).is_err());
+        assert!(l1_batch(&[], 0, &[0.0; 4], 2, 2).is_err());
+        assert!(neg_dot_batch(&[0.0; 3], 1, &[0.0; 4], 2, 2).is_err());
+        assert!(neg_dot_batch(&[0.0; 2], 1, &[0.0; 3], 2, 2).is_err());
+        assert!(neg_dot_batch(&[], 0, &[0.0; 4], 2, 2).is_err());
         assert!(cosine_batch(&[0.0; 3], 1, &[0.0; 4], 2, 2).is_err());
+        assert!(cosine_batch(&[0.0; 2], 1, &[0.0; 3], 2, 2).is_err());
+        assert!(cosine_batch(&[], 0, &[0.0; 4], 2, 2).is_err());
+        assert!(hamming_search(&[0; 3], 1, &[0; 4], 2, 128).is_err());
+        assert!(hamming_search(&[0; 2], 1, &[0; 3], 2, 128).is_err());
+        assert!(hamming_search(&[], 0, &[0; 4], 2, 128).is_err());
+
+        let msg = |e: anyhow::Error| format!("{e:#}");
+        let e = msg(neg_dot_batch(&[0.0; 3], 2, &[0.0; 4], 2, 2).unwrap_err());
+        assert!(e.contains("batch 2") && e.contains("len 2"), "{e}");
+        let e = msg(neg_dot_batch(&[0.0; 4], 2, &[0.0; 3], 2, 2).unwrap_err());
+        assert!(e.contains("classes 2"), "{e}");
+        let e = msg(cosine_batch(&[], 0, &[0.0; 4], 2, 2).unwrap_err());
+        assert!(e.contains("batch"), "{e}");
+    }
+
+    #[test]
+    fn prop_neg_dot_hamming_identity_and_packed_agree_any_length() {
+        // (len + neg_dot) / 2 == hamming on ±1 vectors, for random lengths
+        // including non-multiple-of-64 tails, and the bit-packed Hamming
+        // (whose padding words must contribute zero) agrees exactly.
+        use crate::hdc::packed::PackedHv;
+        forall(40, 0xD17, |rng| {
+            let len = 1 + rng.below(300);
+            let q = gen::pm1_vec(rng, len);
+            let c = gen::pm1_vec(rng, len);
+            let nd = neg_dot_batch(&q, 1, &c, 1, len).unwrap()[0];
+            let ham = hamming_pm1(&q, &c);
+            assert_eq!((len as f32 + nd) / 2.0, ham as f32, "len {len}");
+            let hp = PackedHv::from_pm1(&q)
+                .unwrap()
+                .hamming(&PackedHv::from_pm1(&c).unwrap())
+                .unwrap();
+            assert_eq!(hp, ham, "packed disagrees at len {len}");
+        });
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub mod chv;
 pub mod classifier;
 pub mod distance;
 pub mod encoder;
+pub mod packed;
 pub mod progressive;
 pub mod quantize;
 pub mod train;
@@ -19,7 +20,8 @@ pub mod train;
 pub use chv::ChvStore;
 pub use classifier::HdClassifier;
 pub use encoder::SoftwareEncoder;
-pub use progressive::{ProgressiveResult, ProgressiveSearch};
+pub use packed::{PackedChvStore, PackedHv};
+pub use progressive::{ProgressiveResult, ProgressiveSearch, SearchMode};
 pub use train::{RetrainReport, Trainer};
 
 use crate::config::HdConfig;
@@ -50,6 +52,28 @@ pub trait HdBackend {
         classes: usize,
         len: usize,
     ) -> Result<Vec<f32>>;
+
+    /// Bit-packed associative search (the XOR-tree mode): qs (batch, words)
+    /// vs chvs (classes, words) -> (batch, classes), where each row packs
+    /// `len` ±1 elements into `len.div_ceil(64)` words and distances are
+    /// `2 × Hamming` — the L1 distance between the ±1 vectors, so packed
+    /// and scalar search agree bit for bit on binarized operands.
+    ///
+    /// The default implementation unpacks both operands and reuses
+    /// [`HdBackend::search`]; fast backends override it with an
+    /// XOR+popcount kernel.
+    fn search_packed(
+        &mut self,
+        qs: &[u64],
+        batch: usize,
+        chvs: &[u64],
+        classes: usize,
+        len: usize,
+    ) -> Result<Vec<f32>> {
+        let qf = packed::unpack_pm1_rows(qs, batch, len)?;
+        let cf = packed::unpack_pm1_rows(chvs, classes, len)?;
+        self.search(&qf, batch, &cf, classes, len)
+    }
 }
 
 /// argmin + runner-up over one row of distances; returns

@@ -1,0 +1,527 @@
+//! Bit-packed INT1 associative memory — the chip's XOR-tree search path.
+//!
+//! The classifier reaches its TOPS/W point by comparing **binarized**
+//! hypervectors with an XOR tree + popcount, not element-wise arithmetic.
+//! This module is the software twin: ±1 hypervectors packed 64 elements per
+//! `u64` word (bit set ⇔ element is +1, matching the INT1 quantizer's
+//! `y >= 0 → +1` rule), Hamming distance via `xor` + `count_ones`, and a
+//! [`PackedChvStore`] that shadows the INT8 [`ChvStore`](crate::hdc::ChvStore)
+//! view with its binarized image (train in INT8, search in INT1 — the
+//! paper's precision split).
+//!
+//! Metric convention: batch search distances are **`2 × Hamming`**, which is
+//! exactly the L1 distance between the underlying ±1 vectors
+//! (`|(+1) − (−1)| = 2`). That keeps packed and scalar search directly
+//! comparable — unpacking a packed operand and running the scalar L1 kernel
+//! yields bit-identical distances — and gives the progressive controller a
+//! sound early-exit bound of **2 per remaining element** (vs 254 for INT8).
+//!
+//! Segments are packed **word-granularly**: every progressive-search segment
+//! starts on a fresh word and pads its tail bits with zeros in both
+//! operands, so padding XORs to zero and per-segment Hamming distances stay
+//! exactly additive (the invariant progressive accumulation relies on).
+
+use crate::config::HdConfig;
+use crate::Result;
+use anyhow::bail;
+
+/// Elements per packed word.
+pub const WORD_BITS: usize = 64;
+
+/// Words needed to hold `bits` packed elements.
+pub fn words_for(bits: usize) -> usize {
+    bits.div_ceil(WORD_BITS)
+}
+
+/// Pack by sign (the INT1 quantizer's rule: `v >= 0 → +1`): bit set ⇔ +1.
+/// Tail bits of the last word are zero.
+pub fn pack_signs(values: &[f32]) -> Vec<u64> {
+    let mut words = vec![0u64; words_for(values.len())];
+    for (i, &v) in values.iter().enumerate() {
+        if v >= 0.0 {
+            words[i / WORD_BITS] |= 1u64 << (i % WORD_BITS);
+        }
+    }
+    words
+}
+
+/// Pack a strict ±1 vector; errors on any other value (use [`pack_signs`]
+/// to binarize arbitrary values).
+pub fn pack_pm1(values: &[f32]) -> Result<Vec<u64>> {
+    for (i, &v) in values.iter().enumerate() {
+        if v != 1.0 && v != -1.0 {
+            bail!("pack_pm1: element {i} is {v}, expected +-1");
+        }
+    }
+    Ok(pack_signs(values))
+}
+
+/// Binarize and pack `n` row-major rows of `len` values each into the
+/// contiguous (n × `words_for(len)`) layout [`hamming_search`] takes —
+/// each row starts on a fresh word.
+pub fn pack_rows(values: &[f32], n: usize, len: usize) -> Result<Vec<u64>> {
+    if values.len() != n * len {
+        bail!("pack_rows: {} values != rows {n} * len {len}", values.len());
+    }
+    let mut out = Vec::with_capacity(n * words_for(len));
+    for r in 0..n {
+        out.extend(pack_signs(&values[r * len..(r + 1) * len]));
+    }
+    Ok(out)
+}
+
+/// Unpack `len` elements back to ±1 f32.
+pub fn unpack_pm1(words: &[u64], len: usize) -> Vec<f32> {
+    assert!(
+        words.len() >= words_for(len),
+        "unpack_pm1: {} words cannot hold {len} bits",
+        words.len()
+    );
+    (0..len)
+        .map(|i| {
+            if (words[i / WORD_BITS] >> (i % WORD_BITS)) & 1 == 1 {
+                1.0
+            } else {
+                -1.0
+            }
+        })
+        .collect()
+}
+
+/// Unpack `n` packed rows of `len` elements each (row stride =
+/// `words_for(len)`) into a flat (n, len) ±1 matrix.
+pub fn unpack_pm1_rows(rows: &[u64], n: usize, len: usize) -> Result<Vec<f32>> {
+    let w = words_for(len);
+    if rows.len() != n * w {
+        bail!(
+            "unpack_pm1_rows: {} words != rows {n} * words_per_row {w} (len {len})",
+            rows.len()
+        );
+    }
+    let mut out = Vec::with_capacity(n * len);
+    for r in 0..n {
+        out.extend(unpack_pm1(&rows[r * w..(r + 1) * w], len));
+    }
+    Ok(out)
+}
+
+/// Hamming distance between two equal-length packed rows: XOR + popcount.
+/// Equal-length padding cancels (0 ^ 0 = 0), so tail bits never contribute.
+pub fn hamming_words(a: &[u64], b: &[u64]) -> usize {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x ^ y).count_ones() as usize)
+        .sum()
+}
+
+/// Packed associative search: qs (batch, words) vs chvs (classes, words) ->
+/// (batch, classes), where words = `len.div_ceil(64)` and each distance is
+/// `2 × Hamming` — the L1 distance between the ±1 vectors, so results are
+/// bit-identical to [`l1_batch`](crate::hdc::distance::l1_batch) over the
+/// unpacked operands.
+pub fn hamming_search(
+    qs: &[u64],
+    batch: usize,
+    chvs: &[u64],
+    classes: usize,
+    len: usize,
+) -> Result<Vec<f32>> {
+    if batch == 0 {
+        bail!("hamming_search: batch must be >= 1, got 0");
+    }
+    let w = words_for(len);
+    if qs.len() != batch * w {
+        bail!(
+            "hamming_search: qs has {} words != batch {batch} * words_per_row {w} (len {len})",
+            qs.len()
+        );
+    }
+    if chvs.len() != classes * w {
+        bail!(
+            "hamming_search: chvs has {} words != classes {classes} * words_per_row {w} (len {len})",
+            chvs.len()
+        );
+    }
+    let mut out = vec![0.0f32; batch * classes];
+    for n in 0..batch {
+        let q = &qs[n * w..(n + 1) * w];
+        let row = &mut out[n * classes..(n + 1) * classes];
+        for (c, o) in row.iter_mut().enumerate() {
+            let chv = &chvs[c * w..(c + 1) * w];
+            let mut ham = 0u32;
+            for (&x, &y) in q.iter().zip(chv) {
+                ham += (x ^ y).count_ones();
+            }
+            // 2 * Hamming == L1 over ±1; exact in f32 for D <= 2^22
+            *o = 2.0 * ham as f32;
+        }
+    }
+    Ok(out)
+}
+
+/// One bit-packed ±1 hypervector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedHv {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl PackedHv {
+    /// Pack a strict ±1 vector ([`pack_signs`] is the binarize-anything
+    /// entry point).
+    pub fn from_pm1(values: &[f32]) -> Result<PackedHv> {
+        Ok(PackedHv { words: pack_pm1(values)?, len: values.len() })
+    }
+
+    /// Element count (bits).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The packed words (tail bits beyond `len` are always zero).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Back to ±1 f32.
+    pub fn unpack(&self) -> Vec<f32> {
+        unpack_pm1(&self.words, self.len)
+    }
+
+    /// Raw Hamming distance (count of differing elements) — the quantity
+    /// `hamming_pm1` computes on the unpacked vectors.
+    pub fn hamming(&self, other: &PackedHv) -> Result<usize> {
+        if self.len != other.len {
+            bail!("PackedHv::hamming: len {} != len {}", self.len, other.len);
+        }
+        Ok(hamming_words(&self.words, &other.words))
+    }
+}
+
+/// The binarized associative memory: per progressive-search segment, a
+/// (classes × seg_words) block of packed rows mirroring the INT8
+/// [`ChvStore`](crate::hdc::ChvStore) view. Rows are **binarized on write**
+/// — bundling stays INT8, only the searched image is INT1 — so every row
+/// always equals `pack_signs` of the corresponding INT8 view row (including
+/// the all-zero row of an untrained class, which binarizes to all +1).
+#[derive(Clone, Debug)]
+pub struct PackedChvStore {
+    classes: usize,
+    segments: usize,
+    seg_len: usize,
+    seg_words: usize,
+    /// per segment: (classes × seg_words) row-major packed block
+    segs: Vec<Vec<u64>>,
+}
+
+impl PackedChvStore {
+    pub fn new(cfg: &HdConfig) -> PackedChvStore {
+        let seg_len = cfg.seg_len();
+        let seg_words = words_for(seg_len);
+        let mut store = PackedChvStore {
+            classes: cfg.classes,
+            segments: cfg.segments,
+            seg_len,
+            seg_words,
+            segs: Vec::new(),
+        };
+        store.reset();
+        store
+    }
+
+    /// Words per packed class row (one segment's worth).
+    pub fn seg_words(&self) -> usize {
+        self.seg_words
+    }
+
+    /// Elements per class row (one segment's worth).
+    pub fn seg_len(&self) -> usize {
+        self.seg_len
+    }
+
+    /// The (classes × seg_words) packed block of segment `s` — the operand
+    /// `search_packed` takes.
+    pub fn segment(&self, s: usize) -> &[u64] {
+        &self.segs[s]
+    }
+
+    /// One class's packed row within segment `s`.
+    pub fn class_segment(&self, class: usize, s: usize) -> &[u64] {
+        &self.segs[s][class * self.seg_words..(class + 1) * self.seg_words]
+    }
+
+    /// Reassemble one class's full binarized CHV as ±1 f32.
+    pub fn class_hv(&self, class: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.segments * self.seg_len);
+        for s in 0..self.segments {
+            out.extend(unpack_pm1(self.class_segment(class, s), self.seg_len));
+        }
+        out
+    }
+
+    /// Binarize-on-write: refresh one class row of segment `s` from its
+    /// INT8 view values.
+    pub fn write_row(&mut self, class: usize, s: usize, values: &[f32]) -> Result<()> {
+        if class >= self.classes {
+            bail!("write_row: class {class} out of range (< {})", self.classes);
+        }
+        if s >= self.segments {
+            bail!("write_row: segment {s} out of range (< {})", self.segments);
+        }
+        if values.len() != self.seg_len {
+            bail!(
+                "write_row: row has {} values != seg_len {}",
+                values.len(),
+                self.seg_len
+            );
+        }
+        let packed = pack_signs(values);
+        self.segs[s][class * self.seg_words..(class + 1) * self.seg_words]
+            .copy_from_slice(&packed);
+        Ok(())
+    }
+
+    /// Packed cache bytes touched when a search stops after `segments_used`
+    /// segments (8 bytes per word — the INT1 counterpart of
+    /// [`ChvStore::bytes_resident`](crate::hdc::ChvStore::bytes_resident)).
+    pub fn bytes_resident(&self, segments_used: usize) -> usize {
+        segments_used.min(self.segments) * self.classes * self.seg_words * 8
+    }
+
+    /// Full packed-AM footprint in bytes.
+    pub fn bytes_total(&self) -> usize {
+        self.bytes_resident(self.segments)
+    }
+
+    /// Back to the all-zero-view image (every row = binarize(0…0) = all +1).
+    pub fn reset(&mut self) {
+        let zero_row = pack_signs(&vec![0.0f32; self.seg_len]);
+        let mut block = Vec::with_capacity(self.classes * self.seg_words);
+        for _ in 0..self.classes {
+            block.extend_from_slice(&zero_row);
+        }
+        self.segs = (0..self.segments).map(|_| block.clone()).collect();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdc::distance::{hamming_pm1, l1_batch};
+    use crate::util::prop::{forall, gen};
+
+    #[test]
+    fn pack_padding_bits_are_zero() {
+        let v = vec![1.0f32; 70]; // all +1: 64 set bits + 6 in the tail word
+        let w = pack_signs(&v);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0], u64::MAX);
+        assert_eq!(w[1], (1u64 << 6) - 1);
+        // all -1: every bit (including padding) stays zero
+        let w = pack_signs(&vec![-1.0f32; 70]);
+        assert_eq!(w, vec![0, 0]);
+    }
+
+    #[test]
+    fn pack_follows_int1_quantizer_rule() {
+        // quantize(y, 1, _) maps y >= 0 to +1; pack_signs must agree bit
+        // for bit, zero included.
+        let vals = [-3.0, -0.0, 0.0, 0.5, 127.0, -127.0];
+        let packed = pack_signs(&vals);
+        let unpacked = unpack_pm1(&packed, vals.len());
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(unpacked[i], crate::hdc::quantize::quantize(v, 1, 1.0));
+        }
+    }
+
+    #[test]
+    fn pack_pm1_rejects_non_pm1() {
+        assert!(pack_pm1(&[1.0, -1.0, 1.0]).is_ok());
+        assert!(pack_pm1(&[1.0, 0.0]).is_err());
+        assert!(pack_pm1(&[2.0]).is_err());
+    }
+
+    #[test]
+    fn prop_pack_rows_matches_per_row_packing() {
+        forall(30, 0xB16, |rng| {
+            let (n, len) = (1 + rng.below(5), 1 + rng.below(150));
+            let values = gen::pm1_vec(rng, n * len);
+            let rows = pack_rows(&values, n, len).unwrap();
+            let mut manual = Vec::new();
+            for r in 0..n {
+                manual.extend(pack_signs(&values[r * len..(r + 1) * len]));
+            }
+            assert_eq!(rows, manual);
+            assert_eq!(rows.len(), n * words_for(len));
+            assert!(pack_rows(&values, n + 1, len).is_err());
+        });
+    }
+
+    #[test]
+    fn prop_pack_unpack_roundtrip_any_length() {
+        forall(40, 0xB17, |rng| {
+            let len = 1 + rng.below(300); // exercises non-multiple-of-64 tails
+            let v = gen::pm1_vec(rng, len);
+            let hv = PackedHv::from_pm1(&v).unwrap();
+            assert_eq!(hv.len(), len);
+            assert_eq!(hv.unpack(), v);
+            assert_eq!(hv.words().len(), words_for(len));
+        });
+    }
+
+    #[test]
+    fn prop_packed_hamming_equals_scalar_oracle() {
+        forall(40, 0xB18, |rng| {
+            let len = 1 + rng.below(300);
+            let a = gen::pm1_vec(rng, len);
+            let b = gen::pm1_vec(rng, len);
+            let ha = PackedHv::from_pm1(&a).unwrap();
+            let hb = PackedHv::from_pm1(&b).unwrap();
+            assert_eq!(ha.hamming(&hb).unwrap(), hamming_pm1(&a, &b));
+            assert_eq!(ha.hamming(&ha).unwrap(), 0);
+        });
+    }
+
+    #[test]
+    fn prop_hamming_search_matches_l1_on_pm1() {
+        // The metric convention: packed distances are 2 * Hamming, which is
+        // exactly the scalar L1 over the same ±1 vectors.
+        forall(30, 0xB19, |rng| {
+            let len = 1 + rng.below(200);
+            let (batch, classes) = (1 + rng.below(3), 1 + rng.below(5));
+            let qs = gen::pm1_vec(rng, batch * len);
+            let chvs = gen::pm1_vec(rng, classes * len);
+            let mut qp = Vec::new();
+            for n in 0..batch {
+                qp.extend(pack_signs(&qs[n * len..(n + 1) * len]));
+            }
+            let mut cp = Vec::new();
+            for c in 0..classes {
+                cp.extend(pack_signs(&chvs[c * len..(c + 1) * len]));
+            }
+            let packed = hamming_search(&qp, batch, &cp, classes, len).unwrap();
+            let scalar = l1_batch(&qs, batch, &chvs, classes, len).unwrap();
+            assert_eq!(packed, scalar);
+        });
+    }
+
+    #[test]
+    fn prop_hamming_search_additive_over_word_granular_segments() {
+        // Mirrors prop_l1_additive_over_segments: packing each segment
+        // independently (fresh word, zero tail) must keep partial distances
+        // exactly additive — seg_len deliberately not a multiple of 64.
+        forall(30, 0xB1A, |rng| {
+            let (segs, seg_len, classes) = (4usize, 50usize, 5usize);
+            let len = segs * seg_len;
+            let q = gen::pm1_vec(rng, len);
+            let chvs = gen::pm1_vec(rng, classes * len);
+            let full = l1_batch(&q, 1, &chvs, classes, len).unwrap();
+            let mut acc = vec![0.0f32; classes];
+            for s in 0..segs {
+                let qp = pack_signs(&q[s * seg_len..(s + 1) * seg_len]);
+                let mut cp = Vec::new();
+                for c in 0..classes {
+                    cp.extend(pack_signs(
+                        &chvs[c * len + s * seg_len..c * len + (s + 1) * seg_len],
+                    ));
+                }
+                let d = hamming_search(&qp, 1, &cp, classes, seg_len).unwrap();
+                for (a, v) in acc.iter_mut().zip(d) {
+                    *a += v;
+                }
+            }
+            assert_eq!(acc, full, "segment-wise packed distances must sum exactly");
+        });
+    }
+
+    #[test]
+    fn hamming_search_shape_errors() {
+        let q = vec![0u64; 2];
+        let c = vec![0u64; 4];
+        // batch == 0
+        assert!(hamming_search(&[], 0, &c, 2, 100).is_err());
+        // qs word-count mismatch (100 bits need 2 words per row)
+        assert!(hamming_search(&q, 2, &c, 2, 100).is_err());
+        // chvs word-count mismatch
+        assert!(hamming_search(&q, 1, &c, 3, 100).is_err());
+        assert!(hamming_search(&q, 1, &c, 2, 100).is_ok());
+        // errors name the offending dimension
+        let err = format!("{:#}", hamming_search(&q, 2, &c, 2, 100).unwrap_err());
+        assert!(err.contains("batch 2"), "{err}");
+    }
+
+    #[test]
+    fn packed_hv_len_mismatch_errors() {
+        let a = PackedHv::from_pm1(&[1.0, -1.0]).unwrap();
+        let b = PackedHv::from_pm1(&[1.0, -1.0, 1.0]).unwrap();
+        assert!(a.hamming(&b).is_err());
+    }
+
+    fn tiny() -> HdConfig {
+        // seg_len = (32/8) * 32 = 128 elements = 2 words per row
+        HdConfig::synthetic("t", 8, 8, 32, 32, 8, 10)
+    }
+
+    #[test]
+    fn packed_store_binarizes_on_write() {
+        let cfg = tiny();
+        let mut ps = PackedChvStore::new(&cfg);
+        assert_eq!(ps.seg_len(), cfg.seg_len());
+        assert_eq!(ps.seg_words(), words_for(cfg.seg_len()));
+        let row: Vec<f32> = (0..cfg.seg_len())
+            .map(|i| if i % 3 == 0 { -(i as f32) - 1.0 } else { i as f32 })
+            .collect();
+        ps.write_row(3, 2, &row).unwrap();
+        let got = unpack_pm1(ps.class_segment(3, 2), cfg.seg_len());
+        let want: Vec<f32> = row
+            .iter()
+            .map(|&v| if v >= 0.0 { 1.0 } else { -1.0 })
+            .collect();
+        assert_eq!(got, want);
+        // untouched rows keep the zero-view image: binarize(0) = +1
+        assert!(unpack_pm1(ps.class_segment(0, 0), cfg.seg_len())
+            .iter()
+            .all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn packed_store_reset_restores_zero_view_image() {
+        let cfg = tiny();
+        let mut ps = PackedChvStore::new(&cfg);
+        ps.write_row(1, 1, &vec![-5.0; cfg.seg_len()]).unwrap();
+        ps.reset();
+        for s in 0..cfg.segments {
+            for c in 0..cfg.classes {
+                assert!(unpack_pm1(ps.class_segment(c, s), cfg.seg_len())
+                    .iter()
+                    .all(|&v| v == 1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn packed_store_rejects_bad_writes() {
+        let cfg = tiny();
+        let mut ps = PackedChvStore::new(&cfg);
+        assert!(ps.write_row(99, 0, &vec![0.0; cfg.seg_len()]).is_err());
+        assert!(ps.write_row(0, 99, &vec![0.0; cfg.seg_len()]).is_err());
+        assert!(ps.write_row(0, 0, &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn packed_residency_is_8x_smaller_than_int8() {
+        // the INT1 cache story: 1 bit/element vs 1 byte/element (seg_len is
+        // a multiple of 64 here, so no padding slack)
+        let cfg = tiny();
+        let ps = PackedChvStore::new(&cfg);
+        let int8_resident = 3 * cfg.classes * cfg.seg_len(); // bytes
+        assert_eq!(ps.bytes_resident(3) * 8, int8_resident);
+        assert_eq!(ps.bytes_total(), ps.bytes_resident(cfg.segments));
+        assert_eq!(ps.bytes_resident(99), ps.bytes_total());
+    }
+}

@@ -12,10 +12,69 @@
 //! `mean_absdiff` (from build-time calibration, manifest) estimates the
 //! expected per-element |q - c| contribution of a *wrong* class; `tau` is
 //! the preset confidence knob the Fig.4 bench sweeps.
+//!
+//! Two search modes share the controller (the chip's precision split):
+//! * [`SearchMode::L1Int8`] — scalar L1 over the INT8 CHV view; the sound
+//!   exit needs `tau * mean_absdiff >= 254` (max per-element contribution).
+//! * [`SearchMode::HammingPacked`] — XOR+popcount over the bit-packed INT1
+//!   AM; distances are `2 × Hamming` (the L1 over ±1 vectors), the expected
+//!   per-element contribution of a wrong class is exactly 1, and the max is
+//!   2 — so `tau = 2.0` is already provably sound, independent of the
+//!   build-time calibration.
 
+use crate::config::HdConfig;
 use crate::hdc::chv::ChvStore;
-use crate::hdc::{best_two, HdBackend};
+use crate::hdc::{best_two, packed, HdBackend};
 use crate::Result;
+use anyhow::bail;
+
+/// Which distance kernel the progressive controller drives.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SearchMode {
+    /// Scalar L1 over the INT8 CHV view (the chip's arithmetic mode).
+    #[default]
+    L1Int8,
+    /// XOR+popcount over the bit-packed INT1 AM (the chip's XOR-tree mode);
+    /// distances are `2 × Hamming` == L1 over the ±1 vectors.
+    HammingPacked,
+}
+
+impl SearchMode {
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Result<SearchMode> {
+        match s {
+            "l1" | "l1int8" | "int8" | "scalar" => Ok(SearchMode::L1Int8),
+            "packed" | "hamming" | "int1" => Ok(SearchMode::HammingPacked),
+            other => bail!("unknown search mode '{other}' (l1|packed)"),
+        }
+    }
+
+    /// Expected per-element distance contribution of a *wrong* class — the
+    /// unit `tau` is expressed in. INT8 L1 uses the build-time calibration;
+    /// for the Hamming metric it is exactly 1 (a wrong-class element
+    /// differs with probability 1/2 and contributes 2 when it does).
+    pub fn mean_absdiff(&self, cfg: &HdConfig) -> f32 {
+        match self {
+            SearchMode::L1Int8 => cfg.mean_absdiff,
+            SearchMode::HammingPacked => 1.0,
+        }
+    }
+
+    /// Maximum per-element contribution to the remaining margin change:
+    /// 254 for INT8 L1 (|127 - (-127)|), 2 for the Hamming metric.
+    pub fn max_step(&self) -> f32 {
+        match self {
+            SearchMode::L1Int8 => 254.0,
+            SearchMode::HammingPacked => 2.0,
+        }
+    }
+
+    /// The `tau` at which early exit is provably sound (can never change
+    /// the argmin vs a full search in the same mode).
+    pub fn sound_tau(&self, cfg: &HdConfig) -> f32 {
+        self.max_step() / self.mean_absdiff(cfg)
+    }
+}
 
 /// Confidence policy for early termination.
 #[derive(Clone, Copy, Debug)]
@@ -24,11 +83,13 @@ pub struct ProgressiveSearch {
     pub tau: f32,
     /// Never terminate before this many segments (>= 1).
     pub min_segments: usize,
+    /// Which distance kernel to drive (INT8 L1 or packed INT1 Hamming).
+    pub mode: SearchMode,
 }
 
 impl Default for ProgressiveSearch {
     fn default() -> Self {
-        ProgressiveSearch { tau: 0.5, min_segments: 1 }
+        ProgressiveSearch { tau: 0.5, min_segments: 1, mode: SearchMode::default() }
     }
 }
 
@@ -53,6 +114,16 @@ impl ProgressiveResult {
 }
 
 impl ProgressiveSearch {
+    /// Never-early-exit policy in the given search mode (exhaustive search).
+    pub fn full(mode: SearchMode) -> ProgressiveSearch {
+        ProgressiveSearch { tau: f32::INFINITY, min_segments: usize::MAX, mode }
+    }
+
+    /// Policy at the provably sound early-exit threshold for `cfg`.
+    pub fn sound(cfg: &HdConfig, mode: SearchMode) -> ProgressiveSearch {
+        ProgressiveSearch { tau: mode.sound_tau(cfg), min_segments: 1, mode }
+    }
+
     /// Classify one (already feature-quantized) sample against the CHV store.
     pub fn classify(
         &self,
@@ -62,6 +133,7 @@ impl ProgressiveSearch {
     ) -> Result<ProgressiveResult> {
         let cfg = backend.cfg().clone();
         let (segments, seg_len, classes) = (cfg.segments, cfg.seg_len(), cfg.classes);
+        let per_elem = self.mode.mean_absdiff(&cfg);
         let mut acc = vec![0.0f32; classes];
         let mut used = 0usize;
         let mut early = false;
@@ -78,7 +150,17 @@ impl ProgressiveSearch {
         };
         for s in 0..segments {
             let q = backend.encode_segment(x, 1, s)?;
-            let d = backend.search(&q, 1, store.segment(s), classes, seg_len)?;
+            let d = match self.mode {
+                SearchMode::L1Int8 => {
+                    backend.search(&q, 1, store.segment(s), classes, seg_len)?
+                }
+                SearchMode::HammingPacked => {
+                    // binarize the INT8 QHV segment (sign) and drive the
+                    // XOR-tree path against the packed AM image
+                    let qp = packed::pack_signs(&q);
+                    backend.search_packed(&qp, 1, store.packed().segment(s), classes, seg_len)?
+                }
+            };
             for (a, v) in acc.iter_mut().zip(&d) {
                 *a += v;
             }
@@ -88,7 +170,7 @@ impl ProgressiveSearch {
             margin = b2 - b1;
             if used >= self.min_segments && used < segments {
                 let remaining = ((segments - used) * seg_len) as f32;
-                if margin > self.tau * cfg.mean_absdiff * remaining {
+                if margin > self.tau * per_elem * remaining {
                     early = true;
                     break;
                 }
@@ -104,14 +186,17 @@ impl ProgressiveSearch {
         })
     }
 
-    /// Full (non-progressive) classification: encode everything, one search.
+    /// Full (non-progressive) classification in the scalar INT8 mode:
+    /// encode everything, one exhaustive L1 search. This is the
+    /// high-precision oracle training and the differential tests compare
+    /// against; use [`ProgressiveSearch::full`] for an exhaustive search in
+    /// a specific mode.
     pub fn classify_full(
         backend: &mut dyn HdBackend,
         store: &ChvStore,
         x: &[f32],
     ) -> Result<ProgressiveResult> {
-        ProgressiveSearch { tau: f32::INFINITY, min_segments: usize::MAX }
-            .classify(backend, store, x)
+        ProgressiveSearch::full(SearchMode::L1Int8).classify(backend, store, x)
     }
 }
 
@@ -146,7 +231,7 @@ mod tests {
     #[test]
     fn progressive_matches_full_on_confident_inputs() {
         let (mut enc, store, protos) = setup();
-        let ps = ProgressiveSearch { tau: 0.3, min_segments: 1 };
+        let ps = ProgressiveSearch { tau: 0.3, min_segments: 1, ..Default::default() };
         for (c, p) in protos.iter().enumerate() {
             let xq = quantize_features(p, 1.0);
             let full = ProgressiveSearch::classify_full(&mut enc, &store, &xq).unwrap();
@@ -161,7 +246,7 @@ mod tests {
     fn early_exit_happens_for_confident_inputs() {
         let (mut enc, store, protos) = setup();
         // generous threshold: should exit well before all 8 segments
-        let ps = ProgressiveSearch { tau: 0.05, min_segments: 1 };
+        let ps = ProgressiveSearch { tau: 0.05, min_segments: 1, ..Default::default() };
         let xq = quantize_features(&protos[0], 1.0);
         let r = ps.classify(&mut enc, &store, &xq).unwrap();
         assert!(r.early_exit);
@@ -181,7 +266,7 @@ mod tests {
     #[test]
     fn min_segments_respected() {
         let (mut enc, store, protos) = setup();
-        let ps = ProgressiveSearch { tau: 0.0, min_segments: 3 };
+        let ps = ProgressiveSearch { tau: 0.0, min_segments: 3, ..Default::default() };
         let xq = quantize_features(&protos[2], 1.0);
         let r = ps.classify(&mut enc, &store, &xq).unwrap();
         assert!(r.segments_used >= 3);
@@ -195,7 +280,7 @@ mod tests {
         let (mut enc, store, protos) = setup();
         let cfg = enc.cfg().clone();
         let tau_sound = 254.0 / cfg.mean_absdiff;
-        let ps = ProgressiveSearch { tau: tau_sound, min_segments: 1 };
+        let ps = ProgressiveSearch { tau: tau_sound, min_segments: 1, ..Default::default() };
         let mut rng = Rng::new(33);
         for p in &protos {
             let noisy: Vec<f32> = p.iter().map(|&v| v + rng.normal_f32() * 20.0).collect();
@@ -203,6 +288,52 @@ mod tests {
             let full = ProgressiveSearch::classify_full(&mut enc, &store, &xq).unwrap();
             let prog = ps.classify(&mut enc, &store, &xq).unwrap();
             assert_eq!(full.class, prog.class);
+        }
+    }
+
+    #[test]
+    fn search_mode_parse_and_sound_tau() {
+        let cfg = HdConfig::synthetic("t", 8, 8, 32, 32, 8, 4);
+        assert_eq!(SearchMode::parse("l1").unwrap(), SearchMode::L1Int8);
+        assert_eq!(SearchMode::parse("packed").unwrap(), SearchMode::HammingPacked);
+        assert_eq!(SearchMode::parse("hamming").unwrap(), SearchMode::HammingPacked);
+        assert!(SearchMode::parse("xor-tree").is_err());
+        assert_eq!(SearchMode::L1Int8.sound_tau(&cfg), 254.0 / cfg.mean_absdiff);
+        // the Hamming bound does not depend on calibration: max step 2 over
+        // a mean contribution of exactly 1
+        assert_eq!(SearchMode::HammingPacked.sound_tau(&cfg), 2.0);
+    }
+
+    #[test]
+    fn packed_mode_recovers_classes() {
+        let (mut enc, store, protos) = setup();
+        let ps = ProgressiveSearch {
+            tau: 0.3,
+            min_segments: 1,
+            mode: SearchMode::HammingPacked,
+        };
+        for (c, p) in protos.iter().enumerate() {
+            let xq = quantize_features(p, 1.0);
+            let r = ps.classify(&mut enc, &store, &xq).unwrap();
+            assert_eq!(r.class, c, "packed mode disagreed on class {c}");
+        }
+    }
+
+    #[test]
+    fn packed_sound_tau_matches_packed_full_search() {
+        let (mut enc, store, protos) = setup();
+        let cfg = enc.cfg().clone();
+        let ps = ProgressiveSearch::sound(&cfg, SearchMode::HammingPacked);
+        let full = ProgressiveSearch::full(SearchMode::HammingPacked);
+        let mut rng = Rng::new(44);
+        for p in &protos {
+            let noisy: Vec<f32> = p.iter().map(|&v| v + rng.normal_f32() * 20.0).collect();
+            let xq = quantize_features(&noisy, 1.0);
+            let f = full.classify(&mut enc, &store, &xq).unwrap();
+            let g = ps.classify(&mut enc, &store, &xq).unwrap();
+            assert_eq!(f.class, g.class, "sound Hamming exit changed the argmin");
+            assert!(g.segments_used <= f.segments_used);
+            assert!(!f.early_exit);
         }
     }
 

@@ -103,7 +103,7 @@ mod tests {
         let cfg = HdConfig::synthetic("t", 8, 8, 32, 32, 8, classes);
         HdClassifier::new(
             Box::new(SoftwareEncoder::random(cfg, 31)),
-            ProgressiveSearch { tau: 0.4, min_segments: 1 },
+            ProgressiveSearch { tau: 0.4, min_segments: 1, ..Default::default() },
         )
     }
 

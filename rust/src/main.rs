@@ -6,6 +6,7 @@
 //!   cl-run  --config <name>      continual-learning experiment (Fig.9 row)
 //!   sim     --config <name>      chip latency/energy report (Fig.10)
 //!   serve   --config <name>      Poisson-traffic serving demo
+//!   bench   --config <name>      packed-vs-scalar perf harness -> BENCH_classifier.json
 //!   asm     <file>               assemble + disassemble an ISA program
 //!
 //! Every data-path command runs hermetically on the pure-Rust
@@ -23,7 +24,7 @@ use clo_hdnn::config::HdConfig;
 use clo_hdnn::coordinator::{BackendSpec, Coordinator, CoordinatorOptions, Payload};
 use clo_hdnn::data::{synthetic, Dataset, TaskStream};
 use clo_hdnn::hdc::quantize::quantize_features;
-use clo_hdnn::hdc::{HdClassifier, ProgressiveSearch, Trainer};
+use clo_hdnn::hdc::{HdClassifier, ProgressiveSearch, SearchMode, Trainer};
 #[cfg(feature = "pjrt")]
 use clo_hdnn::runtime::{Engine, PjrtBackend};
 use clo_hdnn::runtime::{Manifest, NativeBackend};
@@ -48,6 +49,7 @@ fn run() -> Result<()> {
         "cl-run" => cmd_cl_run(&args),
         "sim" => cmd_sim(&args),
         "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
         "asm" => cmd_asm(&args),
         _ => {
             println!("{}", HELP);
@@ -56,15 +58,21 @@ fn run() -> Result<()> {
     }
 }
 
-const HELP: &str = "clo-hdnn <info|infer|cl-run|sim|serve|asm> [flags]
+const HELP: &str = "clo-hdnn <info|infer|cl-run|sim|serve|bench|asm> [flags]
   --artifacts <dir>   artifact directory (default ./artifacts)
   --backend <name>    native (default, pure Rust) or pjrt (needs --features pjrt)
   --config <name>     HD config: tiny|isolet|ucihar (built-in) or any manifest config
+  --search <mode>     associative-search kernel: l1 (INT8, default) or packed
+                      (bit-packed INT1 Hamming via XOR+popcount)
   --tau <f>           progressive-search confidence (default 0.5)
   --min-seg <n>       minimum segments before early exit (default 1)
   --samples <n>       evaluation sample cap
   --tasks <n>         CL tasks (default 5)
   --voltage <v>       DVFS point for sim (default 0.9)
+
+bench flags: --config tiny|isolet|ucihar|all, --quick (small sweep),
+  --out <file> (default BENCH_classifier.json), --iters/--warmup,
+  --taus a,b,c (progressive sweep points)
 
 With no artifacts present, commands fall back to built-in synthetic configs
 and deterministic blob datasets — no Python toolchain required.";
@@ -78,6 +86,18 @@ fn artifacts_dir(args: &Args) -> std::path::PathBuf {
     args.get("artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(Manifest::default_dir)
+}
+
+fn search_mode(args: &Args) -> Result<SearchMode> {
+    SearchMode::parse(&args.str_or("search", "l1"))
+}
+
+fn policy(args: &Args) -> Result<ProgressiveSearch> {
+    Ok(ProgressiveSearch {
+        tau: args.f64_or("tau", 0.5) as f32,
+        min_segments: args.usize_or("min-seg", 1),
+        mode: search_mode(args)?,
+    })
 }
 
 fn load_datasets(m: &Manifest, cfg: &str) -> Result<(Dataset, Dataset)> {
@@ -206,17 +226,15 @@ fn report_eval(report: &clo_hdnn::hdc::classifier::EvalReport, dt: f64) {
 
 fn cmd_infer_native(args: &Args) -> Result<()> {
     let cfg_name = args.str_or("config", "tiny");
-    let tau = args.f64_or("tau", 0.5) as f32;
     let (cfg, train, test, manifest) = load_workload(args, &cfg_name)?;
+    let pol = policy(args)?;
     println!(
-        "backend: native (pure Rust, {})",
-        if manifest.is_some() { "artifact data" } else { "synthetic data" }
+        "backend: native (pure Rust, {}) | search {:?}",
+        if manifest.is_some() { "artifact data" } else { "synthetic data" },
+        pol.mode
     );
     let backend = native_backend(&cfg, manifest.as_ref(), &train)?;
-    let mut cl = HdClassifier::new(
-        Box::new(backend),
-        ProgressiveSearch { tau, min_segments: args.usize_or("min-seg", 1) },
-    );
+    let mut cl = HdClassifier::new(Box::new(backend), pol);
     let cap = args.usize_or("samples", 400);
 
     let t0 = std::time::Instant::now();
@@ -235,15 +253,11 @@ fn cmd_infer_native(args: &Args) -> Result<()> {
 #[cfg(feature = "pjrt")]
 fn cmd_infer_pjrt(args: &Args) -> Result<()> {
     let cfg_name = args.str_or("config", "tiny");
-    let tau = args.f64_or("tau", 0.5) as f32;
     let dir = artifacts_dir(args);
     let mut engine = Engine::load(&dir)?;
     println!("PJRT platform: {}", engine.platform());
     let backend = PjrtBackend::new(&mut engine, &cfg_name, 1)?;
-    let mut cl = HdClassifier::new(
-        Box::new(backend),
-        ProgressiveSearch { tau, min_segments: args.usize_or("min-seg", 1) },
-    );
+    let mut cl = HdClassifier::new(Box::new(backend), policy(args)?);
     let m = &engine.manifest;
     let (train, test) = load_datasets(m, &cfg_name)?;
     let cap = args.usize_or("samples", 400);
@@ -296,13 +310,7 @@ fn cmd_cl_run_native(args: &Args) -> Result<()> {
 
     let backend = native_backend(&cfg, manifest.as_ref(), &train)?;
     let mut hd = HdLearner::new(
-        HdClassifier::new(
-            Box::new(backend),
-            ProgressiveSearch {
-                tau: args.f64_or("tau", 0.5) as f32,
-                min_segments: args.usize_or("min-seg", 1),
-            },
-        ),
+        HdClassifier::new(Box::new(backend), policy(args)?),
         Trainer { retrain_epochs: args.usize_or("retrain", 1) },
     );
     let run = harness.run(&mut hd)?;
@@ -324,13 +332,7 @@ fn cmd_cl_run_pjrt(args: &Args) -> Result<()> {
 
     let backend = PjrtBackend::new(&mut engine, &cfg_name, 1)?;
     let mut hd = HdLearner::new(
-        HdClassifier::new(
-            Box::new(backend),
-            ProgressiveSearch {
-                tau: args.f64_or("tau", 0.5) as f32,
-                min_segments: args.usize_or("min-seg", 1),
-            },
-        ),
+        HdClassifier::new(Box::new(backend), policy(args)?),
         Trainer { retrain_epochs: args.usize_or("retrain", 1) },
     );
     let run = harness.run(&mut hd)?;
@@ -408,11 +410,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "pjrt" => BackendSpec::Pjrt { artifacts: dir, config: cfg_name.clone() },
         other => anyhow::bail!("unknown --backend '{other}' ({BACKENDS})"),
     };
-    println!("serving config {cfg_name} on {backend:?}");
+    let mode = search_mode(args)?;
+    println!("serving config {cfg_name} on {backend:?} | search {mode:?}");
     let opts = CoordinatorOptions {
         backend,
         tau: args.f64_or("tau", 0.5) as f32,
         min_segments: args.usize_or("min-seg", 1),
+        search_mode: mode,
         mode_policy: Default::default(),
         queue_depth: 256,
     };
@@ -452,6 +456,206 @@ fn cmd_serve(args: &Args) -> Result<()> {
         metrics.complexity_reduction(cfg.segments) * 100.0
     );
     Ok(())
+}
+
+/// `clo_hdnn bench`: the packed-vs-scalar classifier perf harness. Runs
+/// encode / full-search / progressive sweeps on the synthetic configs
+/// through the NativeBackend, prints the stage tables, and writes a
+/// machine-readable `BENCH_classifier.json` (samples/s, ns/query, packed
+/// speedup, complexity saving per tau) so the repo carries a perf
+/// trajectory. `--quick` shrinks the sweep for CI smoke runs.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use clo_hdnn::util::json::Json;
+    use std::collections::BTreeMap;
+
+    let quick = args.flag("quick");
+    let cfg_arg = args.str_or("config", "isolet");
+    let names: Vec<String> = if cfg_arg == "all" {
+        synthetic::names().iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![cfg_arg]
+    };
+    let out_path = args.str_or("out", "BENCH_classifier.json");
+    let (warmup, iters) = if quick { (1, 5) } else { (3, 25) };
+    let bench = clo_hdnn::util::stats::Bench::new(
+        args.usize_or("warmup", warmup),
+        args.usize_or("iters", iters),
+    );
+    let taus: Vec<f32> = args
+        .str_or("taus", if quick { "0.5" } else { "0.1,0.5,1.0,2.0" })
+        .split(',')
+        .map(|t| t.trim().parse::<f32>().map_err(|_| anyhow::anyhow!("bad tau '{t}'")))
+        .collect::<Result<_>>()?;
+
+    let mut reports: BTreeMap<String, Json> = BTreeMap::new();
+    for name in &names {
+        reports.insert(name.clone(), bench_config(name, &bench, &taus, quick, args)?);
+    }
+    let doc = Json::obj(vec![
+        ("version", Json::Num(1.0)),
+        ("quick", Json::Bool(quick)),
+        ("warmup", Json::Num(bench.warmup as f64)),
+        ("iters", Json::Num(bench.iters as f64)),
+        ("configs", Json::Obj(reports)),
+    ]);
+    std::fs::write(&out_path, doc.dump())?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}
+
+/// One config's worth of bench rows (and the human-readable tables).
+fn bench_config(
+    name: &str,
+    bench: &clo_hdnn::util::stats::Bench,
+    taus: &[f32],
+    quick: bool,
+    args: &Args,
+) -> Result<clo_hdnn::util::json::Json> {
+    use clo_hdnn::hdc::{distance, packed};
+    use clo_hdnn::util::json::Json;
+    use clo_hdnn::util::stats::Table;
+    use std::hint::black_box;
+
+    let cfg = synthetic::config(name)?;
+    let per_class = args.usize_or("per-class", if quick { 6 } else { 20 });
+    let (train, test) = synthetic::blobs(&cfg, per_class, 4, 17);
+    let backend = native_backend(&cfg, None, &train)?;
+    let mut cl = HdClassifier::new(Box::new(backend), ProgressiveSearch::default());
+    Trainer { retrain_epochs: 0 }.train_all(&mut cl, &train)?;
+
+    let n_q = args.usize_or("queries", if quick { 8 } else { 32 }).min(test.n).max(1);
+    let queries: Vec<Vec<f32>> = (0..n_q).map(|i| test.sample(i).to_vec()).collect();
+    let (d, classes) = (cfg.dim(), cfg.classes);
+
+    // pre-encoded operands for the kernel-level full-D search comparison
+    let mut qhvs: Vec<Vec<f32>> = Vec::with_capacity(n_q);
+    for q in &queries {
+        qhvs.push(cl.encode(q)?);
+    }
+    let qhvs_packed: Vec<Vec<u64>> = qhvs.iter().map(|q| packed::pack_signs(q)).collect();
+    let mut chvs_full = Vec::with_capacity(classes * d);
+    for c in 0..classes {
+        chvs_full.extend(cl.store.class_hv(c));
+    }
+    let chvs_packed = packed::pack_rows(&chvs_full, classes, d)?;
+
+    println!(
+        "\n== bench {name}: F={} D={} classes={} segments={} ({} queries) ==",
+        cfg.features(),
+        d,
+        classes,
+        cfg.segments,
+        n_q
+    );
+    let ns_per_q = |median: f64| median * 1e9 / n_q as f64;
+
+    let s_enc = bench.run(|| cl.encode(black_box(&queries[0])).unwrap());
+    let encode = Json::obj(vec![
+        ("ns_per_query", Json::Num(s_enc.median * 1e9)),
+        ("samples_per_s", Json::Num(1.0 / s_enc.median)),
+    ]);
+
+    let s_scalar = bench.run(|| {
+        for q in &qhvs {
+            black_box(distance::l1_batch(q, 1, &chvs_full, classes, d).unwrap());
+        }
+    });
+    let s_packed = bench.run(|| {
+        for q in &qhvs_packed {
+            black_box(packed::hamming_search(q, 1, &chvs_packed, classes, d).unwrap());
+        }
+    });
+    let speedup = ns_per_q(s_scalar.median) / ns_per_q(s_packed.median);
+
+    let mut t = Table::new(&["stage", "ns/query", "queries/s", "notes"]);
+    t.row(&[
+        "encode full (native b1)".into(),
+        format!("{:.0}", s_enc.median * 1e9),
+        format!("{:.0}", 1.0 / s_enc.median),
+        format!("{} segments", cfg.segments),
+    ]);
+    t.row(&[
+        "search full-D (scalar L1)".into(),
+        format!("{:.0}", ns_per_q(s_scalar.median)),
+        format!("{:.0}", n_q as f64 / s_scalar.median),
+        format!("{classes} CHVs x {d} f32"),
+    ]);
+    t.row(&[
+        "search full-D (packed INT1)".into(),
+        format!("{:.0}", ns_per_q(s_packed.median)),
+        format!("{:.0}", n_q as f64 / s_packed.median),
+        format!("XOR+popcount, {} words, {speedup:.1}x", packed::words_for(d)),
+    ]);
+    t.print();
+
+    let search = Json::obj(vec![
+        (
+            "scalar",
+            Json::obj(vec![
+                ("ns_per_query", Json::Num(ns_per_q(s_scalar.median))),
+                ("queries_per_s", Json::Num(n_q as f64 / s_scalar.median)),
+            ]),
+        ),
+        (
+            "packed",
+            Json::obj(vec![
+                ("ns_per_query", Json::Num(ns_per_q(s_packed.median))),
+                ("queries_per_s", Json::Num(n_q as f64 / s_packed.median)),
+            ]),
+        ),
+        ("speedup", Json::Num(speedup)),
+    ]);
+
+    // progressive sweep: end-to-end classify per tau, both kernels
+    let mut t2 = Table::new(&["tau", "mode", "ns/query", "segs", "saving", "acc"]);
+    let mut prog_rows = Vec::new();
+    for &tau in taus {
+        for mode in [SearchMode::L1Int8, SearchMode::HammingPacked] {
+            cl.policy = ProgressiveSearch { tau, min_segments: 1, mode };
+            let s = bench.run(|| {
+                for q in &queries {
+                    black_box(cl.classify(black_box(q)).unwrap());
+                }
+            });
+            let report = cl.evaluate(
+                queries.iter().enumerate().map(|(i, q)| (q.clone(), test.label(i))),
+            )?;
+            let mode_name = match mode {
+                SearchMode::L1Int8 => "l1int8",
+                SearchMode::HammingPacked => "hamming_packed",
+            };
+            t2.row(&[
+                format!("{tau}"),
+                mode_name.into(),
+                format!("{:.0}", ns_per_q(s.median)),
+                format!("{:.2}/{}", report.mean_segments, cfg.segments),
+                format!("{:.1}%", report.complexity_reduction() * 100.0),
+                format!("{:.3}", report.accuracy),
+            ]);
+            prog_rows.push(Json::obj(vec![
+                ("tau", Json::Num(tau as f64)),
+                ("mode", Json::Str(mode_name.into())),
+                ("ns_per_query", Json::Num(ns_per_q(s.median))),
+                ("samples_per_s", Json::Num(n_q as f64 / s.median)),
+                ("mean_segments", Json::Num(report.mean_segments)),
+                ("complexity_saving", Json::Num(report.complexity_reduction())),
+                ("early_exit_rate", Json::Num(report.early_exit_rate)),
+                ("accuracy", Json::Num(report.accuracy)),
+            ]));
+        }
+    }
+    t2.print();
+
+    Ok(Json::obj(vec![
+        ("features", Json::Num(cfg.features() as f64)),
+        ("dim", Json::Num(d as f64)),
+        ("classes", Json::Num(classes as f64)),
+        ("segments", Json::Num(cfg.segments as f64)),
+        ("queries", Json::Num(n_q as f64)),
+        ("encode", encode),
+        ("search", search),
+        ("progressive", Json::Arr(prog_rows)),
+    ]))
 }
 
 fn cmd_asm(args: &Args) -> Result<()> {

@@ -119,6 +119,20 @@ impl HdBackend for NativeBackend {
         self.check_batch("search", batch)?;
         self.inner.search(qs, batch, chvs, classes, len)
     }
+
+    fn search_packed(
+        &mut self,
+        qs: &[u64],
+        batch: usize,
+        chvs: &[u64],
+        classes: usize,
+        len: usize,
+    ) -> Result<Vec<f32>> {
+        // the XOR+popcount fast path (the trait default unpacks and runs
+        // the scalar L1 kernel; both yield identical distances)
+        self.check_batch("search_packed", batch)?;
+        crate::hdc::packed::hamming_search(qs, batch, chvs, classes, len)
+    }
 }
 
 #[cfg(test)]
@@ -160,6 +174,41 @@ mod tests {
         let xs = vec![0.0; 3 * cfg.features()];
         assert!(native.encode_full(&xs, 3).is_err());
         assert!(NativeBackend::seeded(cfg, 1, 0).is_err());
+    }
+
+    #[test]
+    fn packed_search_matches_fallback_and_scalar_l1() {
+        use crate::hdc::packed;
+        let cfg = tiny();
+        let mut native = NativeBackend::seeded(cfg.clone(), 4, 2).unwrap();
+        // the SoftwareEncoder keeps the trait's unpack-fallback default
+        let mut sw = SoftwareEncoder::random(cfg.clone(), 4);
+        let mut rng = Rng::new(5);
+        let len = cfg.seg_len();
+        let q: Vec<f32> = (0..len).map(|_| rng.sign()).collect();
+        let chv: Vec<f32> = (0..cfg.classes * len).map(|_| rng.sign()).collect();
+        let qp = packed::pack_signs(&q);
+        let cp = packed::pack_rows(&chv, cfg.classes, len).unwrap();
+        let fast = native.search_packed(&qp, 1, &cp, cfg.classes, len).unwrap();
+        let fallback = sw.search_packed(&qp, 1, &cp, cfg.classes, len).unwrap();
+        let scalar = crate::hdc::distance::l1_batch(&q, 1, &chv, cfg.classes, len).unwrap();
+        assert_eq!(fast, fallback);
+        assert_eq!(fast, scalar);
+    }
+
+    #[test]
+    fn packed_search_rejects_empty_and_oversized_batches() {
+        let cfg = tiny();
+        let mut native = NativeBackend::seeded(cfg.clone(), 4, 2).unwrap();
+        assert!(native
+            .search_packed(&[], 0, &[], cfg.classes, cfg.seg_len())
+            .is_err());
+        let w = crate::hdc::packed::words_for(cfg.seg_len());
+        let qs = vec![0u64; 3 * w];
+        let cs = vec![0u64; cfg.classes * w];
+        assert!(native
+            .search_packed(&qs, 3, &cs, cfg.classes, cfg.seg_len())
+            .is_err());
     }
 
     #[test]

@@ -1,6 +1,7 @@
-//! Minimal JSON parser for `artifacts/manifest.json` (no serde_json in the
-//! offline vendor set). Supports the full JSON grammar minus exotic number
-//! forms; enough for everything aot.py emits.
+//! Minimal JSON parser + serializer (no serde_json in the offline vendor
+//! set). The parser covers `artifacts/manifest.json` — the full JSON
+//! grammar minus exotic number forms; [`Json::dump`] is the writing side,
+//! used by the `clo_hdnn bench` harness to emit `BENCH_*.json` reports.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -88,6 +89,72 @@ impl Json {
         }
         Some(cur)
     }
+
+    /// Build an object from `(key, value)` pairs (keys sorted by BTreeMap).
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Serialize to compact JSON text. Round-trips through [`Json::parse`];
+    /// non-finite numbers (which JSON cannot represent) serialize as `null`.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -306,5 +373,40 @@ mod tests {
     fn unicode_passthrough() {
         let j = Json::parse("\"héllo ✓\"").unwrap();
         assert_eq!(j.as_str(), Some("héllo ✓"));
+    }
+
+    #[test]
+    fn dump_roundtrips_through_parse() {
+        let j = Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("name", Json::Str("bench \"tiny\"\n".into())),
+            ("ok", Json::Bool(true)),
+            ("none", Json::Null),
+            (
+                "rows",
+                Json::Arr(vec![Json::Num(-2.5), Json::Num(1e-4), Json::Num(1234.0)]),
+            ),
+            ("nested", Json::obj(vec![("speedup", Json::Num(4.75))])),
+        ]);
+        let text = j.dump();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+        // integer-valued floats print without a fractional part
+        assert!(text.contains("\"version\":1"), "{text}");
+        assert!(text.contains("\"speedup\":4.75"), "{text}");
+    }
+
+    #[test]
+    fn dump_non_finite_numbers_as_null() {
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        assert_eq!(Json::Arr(vec![Json::Num(f64::NEG_INFINITY)]).dump(), "[null]");
+    }
+
+    #[test]
+    fn dump_escapes_control_chars() {
+        let j = Json::Str("a\u{1}b".into());
+        let text = j.dump();
+        assert_eq!(text, "\"a\\u0001b\"");
+        assert_eq!(Json::parse(&text).unwrap(), j);
     }
 }

@@ -149,7 +149,7 @@ fn end_to_end_train_and_classify_tiny_via_pjrt() {
     let backend = PjrtBackend::new(&mut engine, "tiny", 1).unwrap();
     let mut cl = HdClassifier::new(
         Box::new(backend),
-        ProgressiveSearch { tau: 0.5, min_segments: 1 },
+        ProgressiveSearch { tau: 0.5, min_segments: 1, ..Default::default() },
     );
     let train = Dataset::load(engine.manifest.dataset_path("ds_tiny_train").unwrap()).unwrap();
     let test = Dataset::load(engine.manifest.dataset_path("ds_tiny_test").unwrap()).unwrap();

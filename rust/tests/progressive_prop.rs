@@ -10,12 +10,18 @@
 //!   the reported dimension-fraction saving) is monotone in the confidence
 //!   threshold `tau`;
 //! * the saving actually materializes on confident inputs, and
-//!   `min_segments` / infinite-`tau` bounds hold.
+//!   `min_segments` / infinite-`tau` bounds hold;
+//! * the packed INT1 (XOR-tree) mode at its sound threshold is
+//!   bit-identical in argmin to a full scalar search over the binarized AM,
+//!   on every sample of a synthetic continual-learning run — and its
+//!   segments-used stays monotone in `tau` under the Hamming bound.
 
 use clo_hdnn::config::HdConfig;
 use clo_hdnn::hdc::encoder::SoftwareEncoder;
 use clo_hdnn::hdc::quantize::quantize_features;
+use clo_hdnn::hdc::{best_two, distance, packed, SearchMode};
 use clo_hdnn::hdc::{ChvStore, HdBackend, ProgressiveSearch};
+use clo_hdnn::runtime::NativeBackend;
 use clo_hdnn::util::prop::{forall, gen};
 use clo_hdnn::util::Rng;
 
@@ -55,7 +61,11 @@ fn prop_sound_threshold_agrees_with_full_search_on_random_banks() {
         }
         // tau * mean_absdiff == 254 == the maximum per-element contribution
         // any remaining segment can add: exit is provably safe.
-        let ps = ProgressiveSearch { tau: 254.0 / cfg.mean_absdiff, min_segments: 1 };
+        let ps = ProgressiveSearch {
+            tau: 254.0 / cfg.mean_absdiff,
+            min_segments: 1,
+            ..Default::default()
+        };
         for _ in 0..4 {
             let x = gen::int8_vec(rng, cfg.features());
             let full = ProgressiveSearch::classify_full(&mut enc, &store, &x).unwrap();
@@ -77,7 +87,7 @@ fn prop_segments_and_savings_monotone_in_tau() {
             let mut prev_used = 0usize;
             let mut prev_saving = 1.0f64;
             for &tau in &taus {
-                let r = ProgressiveSearch { tau, min_segments: 1 }
+                let r = ProgressiveSearch { tau, min_segments: 1, ..Default::default() }
                     .classify(&mut enc, &store, &xq)
                     .unwrap();
                 assert!(
@@ -103,7 +113,7 @@ fn prop_confident_inputs_save_work_and_agree_with_full() {
     forall(10, 0xAB3, |rng| {
         let (mut enc, store, protos) = blob_setup(rng);
         let total = enc.cfg().segments;
-        let ps = ProgressiveSearch { tau: 0.3, min_segments: 1 };
+        let ps = ProgressiveSearch { tau: 0.3, min_segments: 1, ..Default::default() };
         let mut used_sum = 0usize;
         for p in &protos {
             let xq = quantize_features(p, 1.0);
@@ -129,7 +139,7 @@ fn prop_min_segments_and_infinite_tau_bounds() {
         let total = enc.cfg().segments;
         let xq = quantize_features(&protos[rng.below(protos.len())], 1.0);
         let k = 1 + rng.below(total);
-        let r = ProgressiveSearch { tau: 0.0, min_segments: k }
+        let r = ProgressiveSearch { tau: 0.0, min_segments: k, ..Default::default() }
             .classify(&mut enc, &store, &xq)
             .unwrap();
         assert!(r.segments_used >= k, "min_segments={k} violated: {}", r.segments_used);
@@ -137,5 +147,120 @@ fn prop_min_segments_and_infinite_tau_bounds() {
         assert!(!full.early_exit);
         assert_eq!(full.segments_used, total);
         assert_eq!(full.complexity_saving(total), 0.0);
+    });
+}
+
+/// Scalar full-search oracle over the **binarized** AM: encode the full
+/// QHV, binarize it by sign, take L1 against every binarized CHV (which is
+/// exactly `2 × Hamming`, the packed metric), mask untrained classes, and
+/// return (argmin, distances).
+fn binarized_full_search_oracle(
+    backend: &mut dyn HdBackend,
+    store: &ChvStore,
+    x: &[f32],
+) -> (usize, Vec<f32>) {
+    let cfg = backend.cfg().clone();
+    let qhv = backend.encode_full(x, 1).unwrap();
+    let qbin = packed::unpack_pm1(&packed::pack_signs(&qhv), cfg.dim());
+    let mut chvs = Vec::with_capacity(cfg.classes * cfg.dim());
+    for c in 0..cfg.classes {
+        chvs.extend(store.packed().class_hv(c));
+    }
+    let mut dists = distance::l1_batch(&qbin, 1, &chvs, cfg.classes, cfg.dim()).unwrap();
+    for (c, d) in dists.iter_mut().enumerate() {
+        if !store.is_trained(c) {
+            *d = f32::INFINITY;
+        }
+    }
+    let (class, _, _) = best_two(&dists);
+    (class, dists)
+}
+
+#[test]
+fn prop_packed_sound_tau_bit_identical_to_scalar_full_search_over_cl_stream() {
+    // A synthetic continual-learning run: classes arrive two at a time, the
+    // AM is partially trained between evaluations. At the sound Hamming
+    // threshold (tau = 2.0: margin > 2 * remaining elements can never be
+    // overturned), the packed progressive search must agree with the full
+    // scalar search over the binarized AM on EVERY sample — including
+    // mid-stream states with untrained (masked) classes.
+    forall(6, 0xAB5, |rng| {
+        let cfg = prop_cfg(6);
+        let mut backend = NativeBackend::seeded(cfg.clone(), rng.next_u64(), 8).unwrap();
+        let mut store = ChvStore::new(cfg.clone());
+        let ps = ProgressiveSearch::sound(&cfg, SearchMode::HammingPacked);
+        assert_eq!(ps.tau, 2.0);
+        let protos: Vec<Vec<f32>> = (0..cfg.classes)
+            .map(|_| gen::normal_vec(rng, cfg.features(), 50.0))
+            .collect();
+        for task in 0..cfg.classes / 2 {
+            // train this task's two classes (bundle in INT8)
+            for c in [2 * task, 2 * task + 1] {
+                for _ in 0..4 {
+                    let noisy: Vec<f32> =
+                        protos[c].iter().map(|&v| v + rng.normal_f32() * 5.0).collect();
+                    let xq = quantize_features(&noisy, 1.0);
+                    let q = backend.encode_full(&xq, 1).unwrap();
+                    store.update(c, &q, 1.0).unwrap();
+                }
+            }
+            // evaluate the whole synthetic test set seen so far, plus
+            // fully random queries (stress the bound, not just blobs)
+            let mut queries: Vec<Vec<f32>> = Vec::new();
+            for c in 0..2 * (task + 1) {
+                queries.push(quantize_features(
+                    &protos[c]
+                        .iter()
+                        .map(|&v| v + rng.normal_f32() * 10.0)
+                        .collect::<Vec<f32>>(),
+                    1.0,
+                ));
+            }
+            queries.push(gen::int8_vec(rng, cfg.features()));
+            for xq in &queries {
+                let (want, dists) = binarized_full_search_oracle(&mut backend, &store, xq);
+                let prog = ps.classify(&mut backend, &store, xq).unwrap();
+                assert_eq!(
+                    prog.class, want,
+                    "packed progressive diverged from scalar full search \
+                     (task {task}, early_exit {})",
+                    prog.early_exit
+                );
+                if prog.segments_used == cfg.segments {
+                    // no early exit: accumulated distances must be
+                    // bit-identical, not just argmin-identical
+                    assert_eq!(prog.dists, dists);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_packed_segments_monotone_in_tau_under_hamming_bound() {
+    forall(10, 0xAB6, |rng| {
+        let (mut enc, store, protos) = blob_setup(rng);
+        let total = enc.cfg().segments;
+        let taus = [0.01f32, 0.05, 0.2, 0.5, 1.0, 2.0, 4.0];
+        for p in &protos {
+            let xq = quantize_features(p, 1.0);
+            let mut prev_used = 0usize;
+            for &tau in &taus {
+                let r = ProgressiveSearch {
+                    tau,
+                    min_segments: 1,
+                    mode: SearchMode::HammingPacked,
+                }
+                .classify(&mut enc, &store, &xq)
+                .unwrap();
+                assert!(
+                    r.segments_used >= prev_used,
+                    "tau={tau}: packed segments_used {} < {prev_used}",
+                    r.segments_used
+                );
+                assert!((0.0..=1.0).contains(&r.complexity_saving(total)));
+                prev_used = r.segments_used;
+            }
+        }
     });
 }

@@ -35,6 +35,7 @@ fn main() -> clo_hdnn::Result<()> {
         search_mode: Default::default(),
         mode_policy: Default::default(),
         queue_depth: 256,
+        threads: args.usize_or("threads", 0),
     })?;
 
     // online gradient-free learning on WCFE features

@@ -1,7 +1,16 @@
 //! Dynamic batcher: accumulates queued requests up to the lowered batch
 //! size or a deadline, whichever first (the standard serving trade-off —
 //! the b8 executables amortize dispatch overhead across the batch).
+//!
+//! Flush timing is **event-driven**, not polled: [`Batcher::next_batch`]
+//! blocks on the request channel with `recv` / `recv_timeout` (a condvar
+//! wait inside std's mpsc), waking exactly when an item arrives or the
+//! oldest item's deadline fires. The earlier executor shape — sleep a fixed
+//! few milliseconds and re-check `ready()` — quantized flush latency to the
+//! sleep period; with the blocking wait a deadline of `max_wait` flushes at
+//! `max_wait`, not at the next poll tick.
 
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 /// Batching policy.
@@ -60,6 +69,47 @@ impl<T> Batcher<T> {
             .map(|t| self.policy.max_wait.saturating_sub(t.elapsed()))
     }
 
+    /// Blockingly assemble the next batch from `rx`: waits on the channel
+    /// (condvar-backed `recv` / `recv_timeout`, never a sleep poll) until
+    /// either `max_batch` items are pending or the oldest pending item's
+    /// deadline passes, then takes the batch. Items already queued in the
+    /// channel are drained without blocking first, so a backlog comes out
+    /// as one batch even at `max_wait == 0` (greedy dynamic batching).
+    /// Returns `None` only when the channel has disconnected and nothing is
+    /// pending; a disconnect with items pending flushes the final partial
+    /// batch first.
+    pub fn next_batch(&mut self, rx: &mpsc::Receiver<T>) -> Option<Vec<T>> {
+        loop {
+            // opportunistic drain: whatever is already queued joins the
+            // batch with zero waiting
+            while self.pending.len() < self.policy.max_batch {
+                match rx.try_recv() {
+                    Ok(item) => self.push(item),
+                    Err(_) => break,
+                }
+            }
+            if self.ready() {
+                return Some(self.take());
+            }
+            match self.time_to_deadline() {
+                // nothing pending: block until the first item (or EOF)
+                None => match rx.recv() {
+                    Ok(item) => self.push(item),
+                    Err(mpsc::RecvError) => {
+                        return if self.pending.is_empty() { None } else { Some(self.take()) }
+                    }
+                },
+                // batch open: wait at most until its deadline
+                Some(wait) => match rx.recv_timeout(wait) {
+                    Ok(item) => self.push(item),
+                    // deadline fired or sender gone — flush what we have
+                    Err(mpsc::RecvTimeoutError::Timeout)
+                    | Err(mpsc::RecvTimeoutError::Disconnected) => return Some(self.take()),
+                },
+            }
+        }
+    }
+
     /// Take up to max_batch items.
     pub fn take(&mut self) -> Vec<T> {
         let n = self.pending.len().min(self.policy.max_batch);
@@ -90,12 +140,57 @@ mod tests {
     }
 
     #[test]
-    fn deadline_fires() {
+    fn deadline_fires_via_blocking_wait() {
+        // the condvar/recv_timeout path: no sleep-poll anywhere — the wait
+        // returns when the deadline passes, and the partial batch flushes
         let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) });
-        b.push(1);
-        std::thread::sleep(Duration::from_millis(3));
-        assert!(b.ready());
-        assert_eq!(b.take(), vec![1]);
+        let (tx, rx) = mpsc::channel::<u32>();
+        tx.send(1).unwrap();
+        let t0 = Instant::now();
+        assert_eq!(b.next_batch(&rx), Some(vec![1]));
+        assert!(t0.elapsed() >= Duration::from_millis(1), "flushed before the deadline");
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn next_batch_fills_to_max_without_waiting_for_deadline() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(60) });
+        let (tx, rx) = mpsc::channel::<u32>();
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        // full batch is ready long before the 60 s deadline
+        let t0 = Instant::now();
+        assert_eq!(b.next_batch(&rx), Some(vec![0, 1, 2]));
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        drop(tx);
+        // leftovers flush on disconnect; then EOF
+        assert_eq!(b.next_batch(&rx), Some(vec![3, 4]));
+        assert_eq!(b.next_batch(&rx), None);
+    }
+
+    #[test]
+    fn next_batch_returns_none_on_empty_disconnect() {
+        let mut b: Batcher<u32> = Batcher::new(BatchPolicy::default());
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        assert_eq!(b.next_batch(&rx), None);
+    }
+
+    #[test]
+    fn next_batch_wakes_on_late_arrivals_from_another_thread() {
+        // producer thread trickles items in; the consumer's blocking wait
+        // must wake per arrival and flush on the count trigger
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(60) });
+        let (tx, rx) = mpsc::channel::<u32>();
+        let producer = std::thread::spawn(move || {
+            for i in 0..4 {
+                tx.send(i).unwrap();
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+        assert_eq!(b.next_batch(&rx), Some(vec![0, 1, 2, 3]));
+        producer.join().unwrap();
     }
 
     #[test]

@@ -9,10 +9,11 @@
 //! gradient-free training path instead.
 
 use crate::config::HdConfig;
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::request::{Payload, Request, Response};
 use crate::coordinator::router::{ModePolicy, Router};
 use crate::data::TensorFile;
-use crate::hdc::{HdClassifier, ProgressiveSearch, SearchMode};
+use crate::hdc::{HdBackend, HdClassifier, ProgressiveSearch, SearchMode};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, PjrtBackend};
 use crate::runtime::{Manifest, NativeBackend};
@@ -46,10 +47,16 @@ pub struct CoordinatorOptions {
     pub search_mode: SearchMode,
     pub mode_policy: ModePolicy,
     pub queue_depth: usize,
+    /// worker threads the backend may fan out to within one call. `0` (the
+    /// serving default) means auto: `CLO_HDNN_THREADS` when set, else all
+    /// available cores. The executor thread still owns the backend; this
+    /// only shards rows/row-blocks inside a single request.
+    pub threads: usize,
 }
 
 impl CoordinatorOptions {
-    /// Hermetic default: a seeded NativeBackend for the given config.
+    /// Hermetic default: a seeded NativeBackend for the given config, with
+    /// the worker pool sized to the machine.
     pub fn software(cfg: HdConfig) -> CoordinatorOptions {
         CoordinatorOptions {
             backend: BackendSpec::Native { cfg, seed: 7 },
@@ -58,9 +65,15 @@ impl CoordinatorOptions {
             search_mode: SearchMode::default(),
             mode_policy: ModePolicy::Auto,
             queue_depth: 256,
+            threads: 0,
         }
     }
 }
+
+/// The native backend's accepted batch limit — one constant ties it to the
+/// executor's batch assembly and Learn-run cap, so every grouped run is
+/// guaranteed to fit `encode_full(batch)`.
+const NATIVE_MAX_BATCH: usize = 8;
 
 /// Client handle: submit requests, join on drop.
 pub struct Coordinator {
@@ -136,6 +149,9 @@ struct Executor {
     /// software WCFE model (normal mode) on the native path
     wcfe_native: Option<WcfeModel>,
     image_elems: usize,
+    /// largest Learn run the backend can encode in one call (1 disables
+    /// grouped learning — the PJRT path is lowered at batch 1)
+    learn_batch_cap: usize,
 }
 
 fn executor_main(
@@ -154,9 +170,39 @@ fn executor_main(
             return;
         }
     };
-    while let Ok(req) = rx.recv() {
-        let resp = ex.handle(&req);
-        let _ = req.reply.send(resp.unwrap_or_else(|e| Response::error(req.id, format!("{e:#}"))));
+    // Event-driven batch assembly (no sleep polling): the batcher blocks on
+    // the request channel and greedily drains any backlog into one batch —
+    // zero added latency for a lone request (max_wait = 0, so a singleton
+    // flushes immediately), one wakeup per burst under load. Within a
+    // batch, contiguous runs of Learn requests are encoded in ONE backend
+    // call (the b8 dispatch amortization); everything else is handled per
+    // request, in arrival order, with per-request replies either way.
+    let mut batcher: Batcher<Request> = Batcher::new(BatchPolicy {
+        max_batch: NATIVE_MAX_BATCH,
+        max_wait: std::time::Duration::ZERO,
+    });
+    while let Some(batch) = batcher.next_batch(&rx) {
+        let mut i = 0usize;
+        while i < batch.len() {
+            let mut j = i;
+            while j < batch.len()
+                && j - i < ex.learn_batch_cap
+                && matches!(batch[j].payload, Payload::Learn(..))
+            {
+                j += 1;
+            }
+            if j - i >= 2 {
+                ex.handle_learn_run(&batch[i..j]);
+                i = j;
+            } else {
+                let req = &batch[i];
+                let resp = ex.handle(req);
+                let _ = req
+                    .reply
+                    .send(resp.unwrap_or_else(|e| Response::error(req.id, format!("{e:#}"))));
+                i += 1;
+            }
+        }
     }
 }
 
@@ -186,10 +232,10 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
         mode: opts.search_mode,
     };
     let router = Router { policy: opts.mode_policy };
-    match &opts.backend {
-        BackendSpec::Native { cfg, seed } => Ok(Executor {
+    let mut ex = match &opts.backend {
+        BackendSpec::Native { cfg, seed } => Executor {
             classifier: HdClassifier::new(
-                Box::new(NativeBackend::seeded(cfg.clone(), *seed, 8)?),
+                Box::new(NativeBackend::seeded(cfg.clone(), *seed, NATIVE_MAX_BATCH)?),
                 policy,
             ),
             router,
@@ -197,19 +243,21 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
             wcfe_exe: None,
             wcfe_native: None,
             image_elems: 0,
-        }),
+            learn_batch_cap: NATIVE_MAX_BATCH,
+        },
         BackendSpec::NativeArtifacts { artifacts, config } => {
             let manifest = Manifest::load(artifacts)?;
-            let backend = NativeBackend::from_manifest(&manifest, config, 8)?;
+            let backend = NativeBackend::from_manifest(&manifest, config, NATIVE_MAX_BATCH)?;
             let (wcfe_native, image_elems) = load_native_wcfe(&manifest, config)?;
-            Ok(Executor {
+            Executor {
                 classifier: HdClassifier::new(Box::new(backend), policy),
                 router,
                 #[cfg(feature = "pjrt")]
                 wcfe_exe: None,
                 wcfe_native,
                 image_elems,
-            })
+                learn_batch_cap: NATIVE_MAX_BATCH,
+            }
         }
         #[cfg(feature = "pjrt")]
         BackendSpec::Pjrt { artifacts, config } => {
@@ -222,18 +270,78 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
                 }
                 _ => (None, 0),
             };
-            Ok(Executor {
+            Executor {
                 classifier: HdClassifier::new(Box::new(backend), policy),
                 router,
                 wcfe_exe,
                 wcfe_native: None,
                 image_elems,
-            })
+                learn_batch_cap: 1,
+            }
         }
-    }
+    };
+    // size the backend's per-call worker pool (0 = all cores); backends
+    // without an internal pool ignore the hint
+    ex.classifier.backend_mut().set_parallelism(opts.threads);
+    Ok(ex)
 }
 
 impl Executor {
+    /// One batched encode for a contiguous run of Learn requests, then
+    /// per-class bundling in arrival order and per-request replies.
+    /// Bit-identical to handling each Learn individually
+    /// (`HdClassifier::learn_batch`'s contract).
+    ///
+    /// A malformed request (wrong feature length, class out of range) gets
+    /// its own error reply and is dropped from the run **before** the
+    /// batched encode, so it can never poison valid neighbors — and
+    /// because validation rules out every `store.update` failure mode, an
+    /// encode error (the only remaining one) happens before any store
+    /// mutation: error replies and store state always agree.
+    fn handle_learn_run(&mut self, run: &[Request]) {
+        let t0 = Instant::now();
+        let (feat, classes) =
+            (self.classifier.cfg().features(), self.classifier.cfg().classes);
+        let mut samples: Vec<(&[f32], usize)> = Vec::with_capacity(run.len());
+        let mut valid: Vec<&Request> = Vec::with_capacity(run.len());
+        for r in run {
+            let (x, class) = match &r.payload {
+                Payload::Learn(x, class) => (x.as_slice(), *class),
+                _ => unreachable!("executor groups only Learn payloads"),
+            };
+            if x.len() != feat {
+                let msg = format!("learn: features len {} != F {feat}", x.len());
+                let _ = r.reply.send(Response::error(r.id, msg));
+            } else if class >= classes {
+                let msg = format!("learn: class {class} out of range (< {classes})");
+                let _ = r.reply.send(Response::error(r.id, msg));
+            } else {
+                samples.push((x, class));
+                valid.push(r);
+            }
+        }
+        if valid.is_empty() {
+            return;
+        }
+        let result = self.classifier.learn_batch(&samples);
+        let segments = self.classifier.cfg().segments;
+        for (r, (_, class)) in valid.iter().zip(&samples) {
+            let resp = match &result {
+                Ok(()) => Response {
+                    id: r.id,
+                    class: Some(*class),
+                    segments_used: segments,
+                    early_exit: false,
+                    used_wcfe: false,
+                    latency_s: t0.elapsed().as_secs_f64(),
+                    error: None,
+                },
+                Err(e) => Response::error(r.id, format!("{e:#}")),
+            };
+            let _ = r.reply.send(resp);
+        }
+    }
+
     fn extract_features(&mut self, img: &[f32]) -> Result<Vec<f32>> {
         if self.image_elems == 0 {
             anyhow::bail!("normal mode needs WCFE artifacts");
@@ -372,8 +480,81 @@ mod tests {
             search_mode: SearchMode::default(),
             mode_policy: ModePolicy::Auto,
             queue_depth: 8,
+            threads: 1,
         };
         assert!(Coordinator::start(opts).is_err());
+    }
+
+    #[test]
+    fn burst_learns_group_without_changing_results() {
+        // fire every Learn without waiting: they pile up in the queue, so
+        // the executor's greedy batcher hands them to handle_learn_run as
+        // grouped runs (one backend encode per run) — results must be
+        // indistinguishable from sequential learning
+        let (coord, protos) = proto_and_coordinator();
+        let mut rxs = Vec::new();
+        for _ in 0..4 {
+            for (c, p) in protos.iter().enumerate() {
+                rxs.push(coord.submit(Payload::Learn(p.clone(), c)).unwrap());
+            }
+        }
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert!(!r.early_exit);
+        }
+        for (c, p) in protos.iter().enumerate() {
+            let r = coord.call(Payload::Features(p.clone())).unwrap();
+            assert_eq!(r.class, Some(c));
+        }
+    }
+
+    #[test]
+    fn bad_learn_in_a_burst_errors_alone_without_poisoning_the_run() {
+        // a grouped Learn run containing malformed requests: the bad ones
+        // get individual error replies, the valid neighbors still bundle
+        let (coord, protos) = proto_and_coordinator();
+        let mut rxs = Vec::new();
+        for _ in 0..3 {
+            for (c, p) in protos.iter().enumerate() {
+                rxs.push((false, coord.submit(Payload::Learn(p.clone(), c)).unwrap()));
+            }
+            // class out of range + wrong feature length, mid-burst
+            rxs.push((true, coord.submit(Payload::Learn(protos[0].clone(), 99)).unwrap()));
+            rxs.push((true, coord.submit(Payload::Learn(vec![0.0; 3], 0)).unwrap()));
+        }
+        for (expect_err, rx) in rxs {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.error.is_some(), expect_err, "{:?}", r.error);
+        }
+        for (c, p) in protos.iter().enumerate() {
+            let r = coord.call(Payload::Features(p.clone())).unwrap();
+            assert_eq!(r.class, Some(c), "valid learns must have landed");
+        }
+    }
+
+    #[test]
+    fn explicit_thread_budget_serves_identically() {
+        // --threads N end-to-end: a 4-thread executor must classify exactly
+        // like the default one (every sharded kernel is bit-exact)
+        let cfg = HdConfig::synthetic("t", 8, 8, 32, 32, 8, 4);
+        let mut opts = CoordinatorOptions::software(cfg.clone());
+        opts.threads = 4;
+        let coord = Coordinator::start(opts).unwrap();
+        let (base, protos) = proto_and_coordinator();
+        for (c, p) in protos.iter().enumerate() {
+            for _ in 0..3 {
+                coord.call(Payload::Learn(p.clone(), c)).unwrap();
+                base.call(Payload::Learn(p.clone(), c)).unwrap();
+            }
+        }
+        for (c, p) in protos.iter().enumerate() {
+            let threaded = coord.call(Payload::Features(p.clone())).unwrap();
+            let serial = base.call(Payload::Features(p.clone())).unwrap();
+            assert_eq!(threaded.class, Some(c));
+            assert_eq!(threaded.class, serial.class);
+            assert_eq!(threaded.segments_used, serial.segments_used);
+        }
     }
 
     #[test]

@@ -59,6 +59,27 @@ impl HdClassifier {
         self.store.update(class, &q, 1.0)
     }
 
+    /// Batched single-pass learn: ONE backend encode call for all samples
+    /// (the b8 dispatch amortization; on the native backend the rows also
+    /// shard over its worker pool), then per-class bundling in sample
+    /// order. Bit-identical to calling [`HdClassifier::learn`] per sample —
+    /// batched encodes are pinned equal to per-sample encodes.
+    pub fn learn_batch(&mut self, samples: &[(&[f32], usize)]) -> Result<()> {
+        if samples.is_empty() {
+            return Ok(());
+        }
+        let (feat, dim) = (self.cfg.features(), self.cfg.dim());
+        let mut xq = Vec::with_capacity(samples.len() * feat);
+        for (x, _) in samples {
+            xq.extend(quantize_features(x, self.cfg.scale_x));
+        }
+        let qhvs = self.backend.encode_full(&xq, samples.len())?;
+        for (n, (_, class)) in samples.iter().enumerate() {
+            self.store.update(*class, &qhvs[n * dim..(n + 1) * dim], 1.0)?;
+        }
+        Ok(())
+    }
+
     /// Retrain step (mistake-driven): full-classify; on error add to the
     /// true class and subtract from the mispredicted one. Returns whether
     /// the prediction was correct.
@@ -177,6 +198,34 @@ mod tests {
         for (c, p) in ps.iter().enumerate() {
             assert_eq!(cl.classify(p).unwrap().class, c, "packed mode, class {c}");
         }
+    }
+
+    #[test]
+    fn learn_batch_is_bit_identical_to_sequential_learn() {
+        let mut seq = classifier(0.4);
+        let mut bat = classifier(0.4);
+        let ps = protos(&seq, 4);
+        let mut rng = Rng::new(9);
+        let mut samples: Vec<(Vec<f32>, usize)> = Vec::new();
+        for (c, p) in ps.iter().enumerate() {
+            for _ in 0..3 {
+                let noisy: Vec<f32> = p.iter().map(|&v| v + rng.normal_f32() * 3.0).collect();
+                samples.push((noisy, c));
+            }
+        }
+        for (x, c) in &samples {
+            seq.learn(x, *c).unwrap();
+        }
+        let refs: Vec<(&[f32], usize)> =
+            samples.iter().map(|(x, c)| (x.as_slice(), *c)).collect();
+        bat.learn_batch(&refs).unwrap();
+        for c in 0..4 {
+            assert_eq!(seq.store.class_hv(c), bat.store.class_hv(c), "class {c}");
+            assert_eq!(seq.store.count(c), bat.store.count(c));
+        }
+        // empty batch is a no-op
+        bat.learn_batch(&[]).unwrap();
+        assert_eq!(seq.store.class_hv(0), bat.store.class_hv(0));
     }
 
     #[test]

@@ -6,24 +6,72 @@
 //! and +-1 factors A (d1 x f1), B (d2 x f2). Because A and B are +-1, every
 //! "multiply" in stage 1/2 is an add/subtract — the chip's adder trees; we
 //! count ops accordingly in [`kron_cost`].
+//!
+//! Two interchangeable kernels serve the same math ([`EncodeKernel`]):
+//! * `Scalar` — the original branchy triple loop, kept as the reference;
+//! * `SignGemm` (default) — the blocked sign-GEMM over bit-packed
+//!   [`SignMat`] sign planes ([`crate::hdc::signmat`]): mask-selected adds,
+//!   no data-dependent branches, bit-exact to `Scalar` because both preserve
+//!   the same per-element accumulation order.
+//!
+//! Both kernels share one raw-accumulator core (`encode_rows_raw`), which is
+//! what [`SoftwareEncoder::calibrate`] drives too — calibration always
+//! exercises whichever kernel serves traffic instead of re-implementing the
+//! loops. [`SoftwareEncoder::encode_batch`] is the batched engine: it
+//! amortizes the per-sample reshape across rows, optionally shards rows over
+//! a [`WorkerPool`], and emits word-granular bit-packed QHV segments next to
+//! the INT8 values so the progressive-search packed path consumes encoder
+//! output with zero repacking.
 
 use crate::config::HdConfig;
+use crate::hdc::packed;
 use crate::hdc::quantize;
+use crate::hdc::signmat::{self, SignMat};
 use crate::hdc::HdBackend;
+use crate::util::pool::WorkerPool;
 use crate::util::Rng;
 use crate::Result;
 use anyhow::bail;
+
+/// Which encode kernel serves traffic (both are bit-exact to each other).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EncodeKernel {
+    /// The original branchy scalar loops (reference / parity baseline).
+    Scalar,
+    /// Blocked sign-GEMM over bit-packed sign planes (the fast default).
+    #[default]
+    SignGemm,
+}
+
+impl EncodeKernel {
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Result<EncodeKernel> {
+        match s {
+            "scalar" => Ok(EncodeKernel::Scalar),
+            "signgemm" | "sign-gemm" | "gemm" => Ok(EncodeKernel::SignGemm),
+            other => bail!("unknown encode kernel '{other}' (scalar|signgemm)"),
+        }
+    }
+}
 
 /// Pure-Rust Kronecker encoder + L1 search backend.
 #[derive(Clone, Debug)]
 pub struct SoftwareEncoder {
     cfg: HdConfig,
-    /// A: (d1, f1) row-major +-1
-    pub a: Vec<f32>,
-    /// B: (d2, f2) row-major +-1
-    pub b: Vec<f32>,
+    /// A: (d1, f1) row-major +-1 (private: the packed sign planes are built
+    /// from it once at construction and must never desync — read via
+    /// [`SoftwareEncoder::a`])
+    a: Vec<f32>,
+    /// B: (d2, f2) row-major +-1 (private, see `a`; read via
+    /// [`SoftwareEncoder::b`])
+    b: Vec<f32>,
+    /// bit-packed sign plane of A (1 bit per entry)
+    a_signs: SignMat,
+    /// bit-packed sign plane of B
+    b_signs: SignMat,
     /// scratch for stage-1 output (seg_rows x f2 max = d1 x f2)
     scratch: Vec<f32>,
+    kernel: EncodeKernel,
 }
 
 impl SoftwareEncoder {
@@ -35,7 +83,13 @@ impl SoftwareEncoder {
             bail!("B has {} elements, expected {}", b.len(), cfg.d2 * cfg.f2);
         }
         let scratch = vec![0.0; cfg.d1 * cfg.f2];
-        Ok(SoftwareEncoder { cfg, a, b, scratch })
+        // from_signs (not from_pm1): the sign planes binarize with the same
+        // `v >= 0` rule the scalar kernel applies, so both kernels agree
+        // even on degenerate non-±1 factors.
+        let a_signs = SignMat::from_signs(&a, cfg.d1, cfg.f1);
+        let b_signs = SignMat::from_signs(&b, cfg.d2, cfg.f2);
+        let kernel = EncodeKernel::default();
+        Ok(SoftwareEncoder { cfg, a, b, a_signs, b_signs, scratch, kernel })
     }
 
     /// Random +-1 factors (matches the build-time generator's distribution;
@@ -48,74 +102,220 @@ impl SoftwareEncoder {
         SoftwareEncoder::new(cfg, a, b).unwrap()
     }
 
+    /// The A factor, (d1, f1) row-major ±1.
+    pub fn a(&self) -> &[f32] {
+        &self.a
+    }
+
+    /// The B factor, (d2, f2) row-major ±1.
+    pub fn b(&self) -> &[f32] {
+        &self.b
+    }
+
+    /// The kernel currently serving encode traffic.
+    pub fn kernel(&self) -> EncodeKernel {
+        self.kernel
+    }
+
+    /// Switch the encode kernel (bench/ablation hook; results are
+    /// bit-identical either way).
+    pub fn set_kernel(&mut self, kernel: EncodeKernel) {
+        self.kernel = kernel;
+    }
+
     /// Set `scale_q` so the raw accumulator range maps onto INT8 without
     /// saturation — the Rust twin of aot.py's build-time calibration (the
     /// AOT artifacts bake the python-calibrated value; synthetic/bench
     /// configs must call this before training or QHVs clip to +-127 and
-    /// bundling degenerates).
+    /// bundling degenerates). Runs the *serving* encode kernel's raw pass,
+    /// so calibration can never drift from the traffic path.
     pub fn calibrate(&mut self, xs: &[f32], batch: usize) {
-        let (f1, f2, d1, d2) = (self.cfg.f1, self.cfg.f2, self.cfg.d1, self.cfg.d2);
+        let (feat, d1, d2) = (self.cfg.features(), self.cfg.d1, self.cfg.d2);
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let mut raw = vec![0.0f32; d1 * d2];
         let mut max_abs = 0.0f32;
-        let mut t = vec![0.0f32; f2];
         for n in 0..batch {
-            let x = &xs[n * f1 * f2..(n + 1) * f1 * f2];
-            for i1 in 0..d1 {
-                let arow = &self.a[i1 * f1..(i1 + 1) * f1];
-                t.fill(0.0);
-                for (j1, &av) in arow.iter().enumerate() {
-                    for (tv, &xv) in t.iter_mut().zip(&x[j1 * f2..(j1 + 1) * f2]) {
-                        *tv += av * xv;
-                    }
-                }
-                for i2 in 0..d2 {
-                    let brow = &self.b[i2 * f2..(i2 + 1) * f2];
-                    let acc: f32 = t.iter().zip(brow).map(|(&tv, &bv)| tv * bv).sum();
-                    max_abs = max_abs.max(acc.abs());
-                }
+            self.encode_rows_raw(&xs[n * feat..(n + 1) * feat], 0, d1, &mut scratch, &mut raw);
+            for &v in &raw {
+                max_abs = max_abs.max(v.abs());
             }
         }
+        self.scratch = scratch;
         if max_abs > 0.0 {
             self.cfg.scale_q = max_abs / 127.0;
+        }
+    }
+
+    /// Raw (unquantized) accumulators of rows [row0, row0+rows) of A against
+    /// one feature vector: `out[r * d2 + i2] = Σ ±x` — the shared core both
+    /// kernels implement and calibration reuses. `scratch` holds the stage-1
+    /// strip (>= rows * f2).
+    fn encode_rows_raw(
+        &self,
+        x: &[f32],
+        row0: usize,
+        rows: usize,
+        scratch: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let (f1, f2, d2) = (self.cfg.f1, self.cfg.f2, self.cfg.d2);
+        debug_assert_eq!(x.len(), f1 * f2);
+        debug_assert!(out.len() >= rows * d2);
+        match self.kernel {
+            EncodeKernel::SignGemm => {
+                signmat::stage1(&self.a_signs, row0, rows, x, f2, scratch);
+                signmat::stage2(&self.b_signs, scratch, rows, f2, out);
+            }
+            EncodeKernel::Scalar => {
+                // Stage 1: T = A_rows @ X  (rows x f2); A is +-1 -> adds only.
+                for r in 0..rows {
+                    let arow = &self.a[(row0 + r) * f1..(row0 + r + 1) * f1];
+                    let trow = &mut scratch[r * f2..(r + 1) * f2];
+                    trow.fill(0.0);
+                    for (j1, &aval) in arow.iter().enumerate() {
+                        let xrow = &x[j1 * f2..(j1 + 1) * f2];
+                        if aval >= 0.0 {
+                            for (t, &xv) in trow.iter_mut().zip(xrow) {
+                                *t += xv;
+                            }
+                        } else {
+                            for (t, &xv) in trow.iter_mut().zip(xrow) {
+                                *t -= xv;
+                            }
+                        }
+                    }
+                }
+                // Stage 2: Y = T @ B^T (rows x d2), raw.
+                for r in 0..rows {
+                    let trow = &scratch[r * f2..(r + 1) * f2];
+                    for i2 in 0..d2 {
+                        let brow = &self.b[i2 * f2..(i2 + 1) * f2];
+                        let mut acc = 0.0f32;
+                        for (&t, &bv) in trow.iter().zip(brow) {
+                            acc += if bv >= 0.0 { t } else { -t };
+                        }
+                        out[r * d2 + i2] = acc;
+                    }
+                }
+            }
         }
     }
 
     /// Encode rows [row0, row0+rows) of A against one feature vector,
     /// writing `rows * d2` QHV values into `out`.
     fn encode_rows(&mut self, x: &[f32], row0: usize, rows: usize, out: &mut [f32]) {
-        let (f1, f2, d2) = (self.cfg.f1, self.cfg.f2, self.cfg.d2);
-        debug_assert_eq!(x.len(), f1 * f2);
-        debug_assert_eq!(out.len(), rows * d2);
-        // Stage 1: T = A_rows @ X  (rows x f2); A is +-1 -> adds only.
-        for r in 0..rows {
-            let arow = &self.a[(row0 + r) * f1..(row0 + r + 1) * f1];
-            let trow = &mut self.scratch[r * f2..(r + 1) * f2];
-            trow.fill(0.0);
-            for (j1, &aval) in arow.iter().enumerate() {
-                let xrow = &x[j1 * f2..(j1 + 1) * f2];
-                if aval >= 0.0 {
-                    for (t, &xv) in trow.iter_mut().zip(xrow) {
-                        *t += xv;
-                    }
-                } else {
-                    for (t, &xv) in trow.iter_mut().zip(xrow) {
-                        *t -= xv;
-                    }
+        let mut scratch = std::mem::take(&mut self.scratch);
+        self.encode_rows_raw(x, row0, rows, &mut scratch, out);
+        self.scratch = scratch;
+        quantize::quantize_slice(out, self.cfg.qbits, self.cfg.scale_q);
+    }
+
+    /// Batched QHV encode: xs (batch, F) -> (batch, D), optionally sharding
+    /// samples over `pool`. Bit-identical to per-sample `encode_full`.
+    pub fn encode_qhvs(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        pool: Option<&WorkerPool>,
+    ) -> Result<Vec<f32>> {
+        let (feat, dim, d1) = (self.cfg.features(), self.cfg.dim(), self.cfg.d1);
+        if batch == 0 {
+            bail!("encode_qhvs: batch must be >= 1, got 0");
+        }
+        if xs.len() != batch * feat {
+            bail!("xs len {} != batch {batch} * F {feat}", xs.len());
+        }
+        let (qbits, scale, f2) = (self.cfg.qbits, self.cfg.scale_q, self.cfg.f2);
+        let mut qhvs = vec![0.0f32; batch * dim];
+        let encode_block = |first_row: usize, block: &mut [f32]| {
+            let mut scratch = vec![0.0f32; d1 * f2];
+            for (i, orow) in block.chunks_mut(dim).enumerate() {
+                let n = first_row + i;
+                self.encode_rows_raw(&xs[n * feat..(n + 1) * feat], 0, d1, &mut scratch, orow);
+                quantize::quantize_slice(orow, qbits, scale);
+            }
+        };
+        match pool {
+            Some(p) if !p.is_serial() => p.run_rows(&mut qhvs, dim, encode_block),
+            _ => encode_block(0, &mut qhvs),
+        }
+        Ok(qhvs)
+    }
+
+    /// The batched encode engine: INT8 QHVs plus their word-granular
+    /// bit-packed segment image in one pass, sharded over `pool` when given.
+    /// The packed rows use exactly the [`packed`] segment layout (each
+    /// segment starts a fresh word, zero tails), so progressive search and
+    /// `hamming_search` consume them with zero repacking.
+    pub fn encode_batch(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        pool: Option<&WorkerPool>,
+    ) -> Result<EncodedBatch> {
+        let qhvs = self.encode_qhvs(xs, batch, pool)?;
+        let dim = self.cfg.dim();
+        let (segments, seg_len) = (self.cfg.segments, self.cfg.seg_len());
+        let seg_words = packed::words_for(seg_len);
+        let row_words = segments * seg_words;
+        let mut packed_rows = vec![0u64; batch * row_words];
+        let pack_block = |first_row: usize, block: &mut [u64]| {
+            for (i, prow) in block.chunks_mut(row_words).enumerate() {
+                let q = &qhvs[(first_row + i) * dim..(first_row + i + 1) * dim];
+                for s in 0..segments {
+                    let words = packed::pack_signs(&q[s * seg_len..(s + 1) * seg_len]);
+                    prow[s * seg_words..(s + 1) * seg_words].copy_from_slice(&words);
                 }
             }
+        };
+        match pool {
+            Some(p) if !p.is_serial() => p.run_rows(&mut packed_rows, row_words, pack_block),
+            _ => pack_block(0, &mut packed_rows),
         }
-        // Stage 2: Y = T @ B^T (rows x d2), quantize.
-        let (bits, scale) = (self.cfg.qbits, self.cfg.scale_q);
-        for r in 0..rows {
-            let trow = &self.scratch[r * f2..(r + 1) * f2];
-            for i2 in 0..d2 {
-                let brow = &self.b[i2 * f2..(i2 + 1) * f2];
-                let mut acc = 0.0f32;
-                for (&t, &bv) in trow.iter().zip(brow) {
-                    acc += if bv >= 0.0 { t } else { -t };
-                }
-                out[r * d2 + i2] = quantize::quantize(acc, bits, scale);
-            }
-        }
+        Ok(EncodedBatch {
+            batch,
+            dim,
+            segments,
+            seg_len,
+            seg_words,
+            qhvs,
+            packed: packed_rows,
+        })
+    }
+}
+
+/// One batched encode's output: INT8 QHVs plus the bit-packed segment image
+/// in the word-granular layout the packed search kernels take.
+#[derive(Clone, Debug)]
+pub struct EncodedBatch {
+    pub batch: usize,
+    pub dim: usize,
+    pub segments: usize,
+    pub seg_len: usize,
+    /// words per packed segment (`words_for(seg_len)`)
+    pub seg_words: usize,
+    /// (batch, D) INT8 QHV values
+    pub qhvs: Vec<f32>,
+    /// (batch, segments * seg_words) packed rows; sample n's segment s sits
+    /// at `n * segments * seg_words + s * seg_words`
+    pub packed: Vec<u64>,
+}
+
+impl EncodedBatch {
+    /// Sample n's INT8 QHV.
+    pub fn qhv(&self, n: usize) -> &[f32] {
+        &self.qhvs[n * self.dim..(n + 1) * self.dim]
+    }
+
+    /// Packed words per sample row.
+    pub fn row_words(&self) -> usize {
+        self.segments * self.seg_words
+    }
+
+    /// Sample n's bit-packed segment s — a ready `search_packed` operand.
+    pub fn packed_segment(&self, n: usize, s: usize) -> &[u64] {
+        let base = n * self.row_words() + s * self.seg_words;
+        &self.packed[base..base + self.seg_words]
     }
 }
 
@@ -141,6 +341,36 @@ impl HdBackend for SoftwareEncoder {
                 &mut out[n * seg_len..(n + 1) * seg_len],
             );
         }
+        Ok(out)
+    }
+
+    fn encode_segment_packed(&mut self, xs: &[f32], batch: usize, seg: usize) -> Result<Vec<u64>> {
+        // The zero-repack path: quantize and pack by sign in one pass over
+        // the raw accumulators — identical bits to pack_rows(encode_segment)
+        // (the trait's default), which the parity tests pin.
+        let (feat, rows, seg_len) = (self.cfg.features(), self.cfg.seg_rows(), self.cfg.seg_len());
+        if seg >= self.cfg.segments {
+            bail!("segment {seg} out of range (<{})", self.cfg.segments);
+        }
+        if xs.len() != batch * feat {
+            bail!("xs len {} != batch {batch} * F {feat}", xs.len());
+        }
+        let seg_words = packed::words_for(seg_len);
+        let (qbits, scale) = (self.cfg.qbits, self.cfg.scale_q);
+        let mut raw = vec![0.0f32; seg_len];
+        let mut out = vec![0u64; batch * seg_words];
+        let mut scratch = std::mem::take(&mut self.scratch);
+        for n in 0..batch {
+            let x = &xs[n * feat..(n + 1) * feat];
+            self.encode_rows_raw(x, seg * rows, rows, &mut scratch, &mut raw);
+            let words = &mut out[n * seg_words..(n + 1) * seg_words];
+            for (i, &acc) in raw.iter().enumerate() {
+                if quantize::quantize(acc, qbits, scale) >= 0.0 {
+                    words[i / 64] |= 1u64 << (i % 64);
+                }
+            }
+        }
+        self.scratch = scratch;
         Ok(out)
     }
 
@@ -183,7 +413,12 @@ pub struct EncoderCost {
 }
 
 /// Kronecker encoder: stage1 d1*f1*f2 adds + stage2 d1*d2*f2 adds; memory is
-/// the two binary factors only.
+/// the two binary factors only — and that is a *physical* bit count, not an
+/// accounting convention: [`SignMat`] stores A and B as 1-bit sign planes
+/// (64 entries per `u64` word), which is exactly what the sign-GEMM kernels
+/// execute from. Every "op" is an add/subtract realized as a mask-selected
+/// add (`x ^ sign_bit`), mirroring the chip's 256-weight-bits-per-cycle
+/// adder trees.
 pub fn kron_cost(cfg: &HdConfig) -> EncoderCost {
     let (d1, d2, f1, f2) = (cfg.d1 as u64, cfg.d2 as u64, cfg.f1 as u64, cfg.f2 as u64);
     EncoderCost {
@@ -245,9 +480,12 @@ mod tests {
         let mut enc = SoftwareEncoder::random(cfg.clone(), 1);
         let mut rng = Rng::new(2);
         let x: Vec<f32> = (0..cfg.features()).map(|_| rng.range(-100, 101) as f32).collect();
-        let got = enc.encode_full(&x, 1).unwrap();
         let want = dense_oracle(&cfg, &enc.a.clone(), &enc.b.clone(), &x);
-        assert_eq!(got, want);
+        for kernel in [EncodeKernel::Scalar, EncodeKernel::SignGemm] {
+            enc.set_kernel(kernel);
+            let got = enc.encode_full(&x, 1).unwrap();
+            assert_eq!(got, want, "{kernel:?}");
+        }
     }
 
     #[test]
@@ -280,6 +518,102 @@ mod tests {
     }
 
     #[test]
+    fn prop_signgemm_bit_exact_vs_scalar_kernel() {
+        // The tentpole parity property: arbitrary geometries (f1/f2/d2 not
+        // multiples of 64), negative non-integer inputs, segment windows.
+        forall(20, 0xE0D, |rng| {
+            let f1 = 1 + rng.below(70);
+            let f2 = 1 + rng.below(90);
+            let d1 = 2 * (1 + rng.below(4)); // even so segments=2 divides d1
+            let d2 = 1 + rng.below(130);
+            let cfg = HdConfig::synthetic("p", f1, f2, d1, d2, 2, 3);
+            let mut enc = SoftwareEncoder::random(cfg.clone(), rng.next_u64());
+            let x = gen::normal_vec(rng, cfg.features(), 9.0);
+            enc.set_kernel(EncodeKernel::Scalar);
+            let want_full = enc.encode_full(&x, 1).unwrap();
+            let want_seg = enc.encode_segment(&x, 1, 1).unwrap();
+            enc.set_kernel(EncodeKernel::SignGemm);
+            assert_eq!(enc.encode_full(&x, 1).unwrap(), want_full, "f1={f1} f2={f2} d2={d2}");
+            assert_eq!(enc.encode_segment(&x, 1, 1).unwrap(), want_seg);
+        });
+    }
+
+    #[test]
+    fn prop_calibrate_agrees_across_kernels() {
+        // calibrate runs the serving kernel's raw pass; both kernels must
+        // land on the identical scale_q.
+        forall(10, 0xE0E, |rng| {
+            let cfg = tiny();
+            let seed = rng.next_u64();
+            let xs = gen::normal_vec(rng, 2 * cfg.features(), 25.0);
+            let mut scalar = SoftwareEncoder::random(cfg.clone(), seed);
+            scalar.set_kernel(EncodeKernel::Scalar);
+            scalar.calibrate(&xs, 2);
+            let mut gemm = SoftwareEncoder::random(cfg.clone(), seed);
+            gemm.set_kernel(EncodeKernel::SignGemm);
+            gemm.calibrate(&xs, 2);
+            assert_eq!(scalar.cfg().scale_q, gemm.cfg().scale_q);
+        });
+    }
+
+    #[test]
+    fn prop_encode_batch_matches_encode_full_and_segment_packing() {
+        forall(10, 0xE0F, |rng| {
+            let cfg = tiny();
+            let mut enc = SoftwareEncoder::random(cfg.clone(), rng.next_u64());
+            let batch = 1 + rng.below(5);
+            let xs = gen::int8_vec(rng, batch * cfg.features());
+            let eb = enc.encode_batch(&xs, batch, None).unwrap();
+            let full = enc.encode_full(&xs, batch).unwrap();
+            assert_eq!(eb.qhvs, full);
+            assert_eq!(eb.row_words(), cfg.segments * packed::words_for(cfg.seg_len()));
+            for n in 0..batch {
+                assert_eq!(eb.qhv(n), &full[n * cfg.dim()..(n + 1) * cfg.dim()]);
+                for s in 0..cfg.segments {
+                    let want = packed::pack_signs(
+                        &full[n * cfg.dim() + s * cfg.seg_len()
+                            ..n * cfg.dim() + (s + 1) * cfg.seg_len()],
+                    );
+                    assert_eq!(eb.packed_segment(n, s), &want[..], "sample {n} seg {s}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_encode_batch_pooled_is_bit_identical() {
+        let pool = WorkerPool::new(4);
+        forall(8, 0xE10, |rng| {
+            let cfg = tiny();
+            let enc = SoftwareEncoder::random(cfg.clone(), rng.next_u64());
+            let batch = 1 + rng.below(9);
+            let xs = gen::int8_vec(rng, batch * cfg.features());
+            let serial = enc.encode_batch(&xs, batch, None).unwrap();
+            let pooled = enc.encode_batch(&xs, batch, Some(&pool)).unwrap();
+            assert_eq!(serial.qhvs, pooled.qhvs);
+            assert_eq!(serial.packed, pooled.packed);
+        });
+    }
+
+    #[test]
+    fn encode_segment_packed_matches_pack_of_encode_segment() {
+        let cfg = tiny();
+        let mut enc = SoftwareEncoder::random(cfg.clone(), 12);
+        let mut rng = Rng::new(13);
+        let batch = 3;
+        let xs: Vec<f32> =
+            (0..batch * cfg.features()).map(|_| rng.range(-80, 81) as f32).collect();
+        for s in 0..cfg.segments {
+            let q = enc.encode_segment(&xs, batch, s).unwrap();
+            let want = packed::pack_rows(&q, batch, cfg.seg_len()).unwrap();
+            let got = enc.encode_segment_packed(&xs, batch, s).unwrap();
+            assert_eq!(got, want, "segment {s}");
+        }
+        assert!(enc.encode_segment_packed(&xs, batch, 99).is_err());
+        assert!(enc.encode_segment_packed(&xs[..3], 1, 0).is_err());
+    }
+
+    #[test]
     fn prop_output_is_quantized(){
         forall(20, 0xE0C, |rng| {
             let cfg = tiny();
@@ -298,7 +632,12 @@ mod tests {
         let mut enc = SoftwareEncoder::random(cfg.clone(), 1);
         assert!(enc.encode_full(&[0.0; 3], 1).is_err());
         assert!(enc.encode_segment(&vec![0.0; cfg.features()], 1, 99).is_err());
+        assert!(enc.encode_qhvs(&[], 0, None).is_err());
+        assert!(enc.encode_batch(&[0.0; 3], 1, None).is_err());
         assert!(SoftwareEncoder::new(cfg.clone(), vec![1.0; 3], vec![1.0; 3]).is_err());
+        assert!(EncodeKernel::parse("turbo").is_err());
+        assert_eq!(EncodeKernel::parse("scalar").unwrap(), EncodeKernel::Scalar);
+        assert_eq!(EncodeKernel::parse("signgemm").unwrap(), EncodeKernel::SignGemm);
     }
 
     #[test]
@@ -313,5 +652,18 @@ mod tests {
         let memsave = rp.mem_bits as f64 / k.mem_bits as f64;
         assert!(speedup > 15.0, "speedup {speedup}");
         assert!(memsave > 500.0, "memsave {memsave}");
+    }
+
+    #[test]
+    fn sign_planes_store_the_cost_models_bit_count() {
+        // kron_cost's mem_bits is literally what SignMat keeps resident
+        // (up to the per-row word-padding slack).
+        let cfg = tiny();
+        let enc = SoftwareEncoder::random(cfg.clone(), 2);
+        let k = kron_cost(&cfg);
+        let packed_bits = (enc.a_signs.bytes() + enc.b_signs.bytes()) as u64 * 8;
+        assert!(packed_bits >= k.mem_bits);
+        // padding slack is bounded by 63 bits per row
+        assert!(packed_bits <= k.mem_bits + 63 * (cfg.d1 + cfg.d2) as u64);
     }
 }

@@ -15,13 +15,15 @@ pub mod encoder;
 pub mod packed;
 pub mod progressive;
 pub mod quantize;
+pub mod signmat;
 pub mod train;
 
 pub use chv::ChvStore;
 pub use classifier::HdClassifier;
-pub use encoder::SoftwareEncoder;
+pub use encoder::{EncodeKernel, EncodedBatch, SoftwareEncoder};
 pub use packed::{PackedChvStore, PackedHv};
 pub use progressive::{ProgressiveResult, ProgressiveSearch, SearchMode};
+pub use signmat::SignMat;
 pub use train::{RetrainReport, Trainer};
 
 use crate::config::HdConfig;
@@ -74,6 +76,24 @@ pub trait HdBackend {
         let cf = packed::unpack_pm1_rows(chvs, classes, len)?;
         self.search(&qf, batch, &cf, classes, len)
     }
+
+    /// Encode one progressive-search segment straight into its bit-packed
+    /// (sign) image: xs (batch, F) -> (batch, `words_for(seg_len)`) — the
+    /// operand [`HdBackend::search_packed`] takes, with no intermediate
+    /// repacking. The default implementation encodes and packs; fast
+    /// backends override it with a fused quantize-and-pack pass. Bits are
+    /// always identical to `pack_rows(encode_segment(..))`.
+    fn encode_segment_packed(&mut self, xs: &[f32], batch: usize, seg: usize) -> Result<Vec<u64>> {
+        let q = self.encode_segment(xs, batch, seg)?;
+        packed::pack_rows(&q, batch, self.cfg().seg_len())
+    }
+
+    /// Hint how many worker threads the backend may fan out to **within one
+    /// call** (`0` = auto: `CLO_HDNN_THREADS` when set, else all cores).
+    /// The executor thread still owns the backend — parallelism never
+    /// crosses a request boundary. Default: ignored (the PJRT path
+    /// parallelizes inside the runtime already).
+    fn set_parallelism(&mut self, _threads: usize) {}
 }
 
 /// argmin + runner-up over one row of distances; returns

@@ -105,6 +105,34 @@ pub fn unpack_pm1_rows(rows: &[u64], n: usize, len: usize) -> Result<Vec<f32>> {
     Ok(out)
 }
 
+/// The shared shape contract of the packed batch-search kernels: returns
+/// the words-per-row on success so both entry points validate identically.
+fn check_search_shapes(
+    qs: &[u64],
+    batch: usize,
+    chvs: &[u64],
+    classes: usize,
+    len: usize,
+) -> Result<usize> {
+    if batch == 0 {
+        bail!("packed search: batch must be >= 1, got 0");
+    }
+    let w = words_for(len);
+    if qs.len() != batch * w {
+        bail!(
+            "packed search: qs has {} words != batch {batch} * words_per_row {w} (len {len})",
+            qs.len()
+        );
+    }
+    if chvs.len() != classes * w {
+        bail!(
+            "packed search: chvs has {} words != classes {classes} * words_per_row {w} (len {len})",
+            chvs.len()
+        );
+    }
+    Ok(w)
+}
+
 /// Hamming distance between two equal-length packed rows: XOR + popcount.
 /// Equal-length padding cancels (0 ^ 0 = 0), so tail bits never contribute.
 pub fn hamming_words(a: &[u64], b: &[u64]) -> usize {
@@ -127,22 +155,7 @@ pub fn hamming_search(
     classes: usize,
     len: usize,
 ) -> Result<Vec<f32>> {
-    if batch == 0 {
-        bail!("hamming_search: batch must be >= 1, got 0");
-    }
-    let w = words_for(len);
-    if qs.len() != batch * w {
-        bail!(
-            "hamming_search: qs has {} words != batch {batch} * words_per_row {w} (len {len})",
-            qs.len()
-        );
-    }
-    if chvs.len() != classes * w {
-        bail!(
-            "hamming_search: chvs has {} words != classes {classes} * words_per_row {w} (len {len})",
-            chvs.len()
-        );
-    }
+    let w = check_search_shapes(qs, batch, chvs, classes, len)?;
     let mut out = vec![0.0f32; batch * classes];
     for n in 0..batch {
         let q = &qs[n * w..(n + 1) * w];
@@ -155,6 +168,43 @@ pub fn hamming_search(
             }
             // 2 * Hamming == L1 over ±1; exact in f32 for D <= 2^22
             *o = 2.0 * ham as f32;
+        }
+    }
+    Ok(out)
+}
+
+/// Pool-sharded packed search over **AM row-blocks**: the class rows are
+/// split into contiguous blocks, each block runs [`hamming_search`] on a
+/// scoped worker thread, and the per-block `(batch, block_classes)` results
+/// are merged back into the `(batch, classes)` matrix. Distances are
+/// bit-identical to the single-thread kernel (each distance is computed by
+/// exactly the same XOR+popcount loop — sharding only partitions rows).
+/// Serial pools and small AMs short-circuit to the inline kernel.
+pub fn hamming_search_pool(
+    pool: &crate::util::pool::WorkerPool,
+    qs: &[u64],
+    batch: usize,
+    chvs: &[u64],
+    classes: usize,
+    len: usize,
+) -> Result<Vec<f32>> {
+    // Same shape contract as hamming_search, checked up front so every
+    // shard works on verified operands.
+    let w = check_search_shapes(qs, batch, chvs, classes, len)?;
+    // Below ~2 classes per worker the scope/merge overhead dominates.
+    if pool.is_serial() || classes < 2 * pool.threads() {
+        return hamming_search(qs, batch, chvs, classes, len);
+    }
+    let blocks = pool.run_blocks(classes, |c0, n_classes| {
+        let sub = &chvs[c0 * w..(c0 + n_classes) * w];
+        hamming_search(qs, batch, sub, n_classes, len)
+            .expect("hamming_search_pool: block shapes verified up front")
+    });
+    let mut out = vec![0.0f32; batch * classes];
+    for (c0, n_classes, block) in blocks {
+        for n in 0..batch {
+            out[n * classes + c0..n * classes + c0 + n_classes]
+                .copy_from_slice(&block[n * n_classes..(n + 1) * n_classes]);
         }
     }
     Ok(out)
@@ -437,6 +487,41 @@ mod tests {
             }
             assert_eq!(acc, full, "segment-wise packed distances must sum exactly");
         });
+    }
+
+    #[test]
+    fn prop_pool_sharded_search_matches_single_thread() {
+        // The pool parity property: sharding the AM into class row-blocks
+        // must reproduce the single-thread distances bit for bit, for any
+        // thread count, class count (incl. fewer classes than threads), and
+        // non-word-aligned lengths.
+        use crate::util::pool::WorkerPool;
+        forall(20, 0xB1B, |rng| {
+            let len = 1 + rng.below(200);
+            let (batch, classes) = (1 + rng.below(3), 1 + rng.below(24));
+            let qs = gen::pm1_vec(rng, batch * len);
+            let chvs = gen::pm1_vec(rng, classes * len);
+            let qp = pack_rows(&qs, batch, len).unwrap();
+            let cp = pack_rows(&chvs, classes, len).unwrap();
+            let want = hamming_search(&qp, batch, &cp, classes, len).unwrap();
+            for threads in [1usize, 2, 4, 7] {
+                let pool = WorkerPool::new(threads);
+                let got = hamming_search_pool(&pool, &qp, batch, &cp, classes, len).unwrap();
+                assert_eq!(got, want, "threads={threads} classes={classes}");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_sharded_search_shares_the_shape_contract() {
+        use crate::util::pool::WorkerPool;
+        let pool = WorkerPool::new(4);
+        let q = vec![0u64; 2];
+        let c = vec![0u64; 4];
+        assert!(hamming_search_pool(&pool, &[], 0, &c, 2, 100).is_err());
+        assert!(hamming_search_pool(&pool, &q, 2, &c, 2, 100).is_err());
+        assert!(hamming_search_pool(&pool, &q, 1, &c, 3, 100).is_err());
+        assert!(hamming_search_pool(&pool, &q, 1, &c, 2, 100).is_ok());
     }
 
     #[test]

@@ -24,7 +24,7 @@
 
 use crate::config::HdConfig;
 use crate::hdc::chv::ChvStore;
-use crate::hdc::{best_two, packed, HdBackend};
+use crate::hdc::{best_two, HdBackend};
 use crate::Result;
 use anyhow::bail;
 
@@ -149,15 +149,16 @@ impl ProgressiveSearch {
             }
         };
         for s in 0..segments {
-            let q = backend.encode_segment(x, 1, s)?;
             let d = match self.mode {
                 SearchMode::L1Int8 => {
+                    let q = backend.encode_segment(x, 1, s)?;
                     backend.search(&q, 1, store.segment(s), classes, seg_len)?
                 }
                 SearchMode::HammingPacked => {
-                    // binarize the INT8 QHV segment (sign) and drive the
-                    // XOR-tree path against the packed AM image
-                    let qp = packed::pack_signs(&q);
+                    // the encoder emits the binarized (sign) segment image
+                    // directly — zero repacking between encode and the
+                    // XOR-tree search against the packed AM
+                    let qp = backend.encode_segment_packed(x, 1, s)?;
                     backend.search_packed(&qp, 1, store.packed().segment(s), classes, seg_len)?
                 }
             };

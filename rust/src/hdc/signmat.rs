@@ -1,0 +1,327 @@
+//! Bit-packed ±1 factor planes and the blocked sign-GEMM encode kernels —
+//! the software twin of the chip's encoder datapath (Fig.5: 256 weight bits
+//! fetched per cycle feeding 32 adder trees; a ±1 "multiply" is an
+//! add/subtract, never a multiplier).
+//!
+//! Layout: a [`SignMat`] stores one factor matrix as row-major **sign
+//! planes** — `words_for(cols)` `u64` words per row, bit set ⇔ entry is +1
+//! (the same `v >= 0 → +1` rule as [`crate::hdc::packed::pack_signs`]), tail
+//! bits zero. A (d1 × f1) and B (d2 × f2) therefore cost 1 bit per entry
+//! instead of 4 bytes, and a whole row's signs arrive in one or two cache
+//! lines.
+//!
+//! Kernels: [`stage1`] computes `T = A_rows @ X` with mask-selected
+//! adds — per packed sign bit the operand's IEEE sign bit is XORed
+//! (`x ^ sign_mask`), which is exact negation, so `t += (±x)` performs the
+//! same add/subtract the scalar reference performs. [`stage2`] computes the
+//! raw `Y = T @ B^T` accumulators the same way. Both kernels accumulate in
+//! **exactly the scalar reference's order** (stage 1: `j1`-ascending per
+//! output element; stage 2: `j2`-ascending per dot product), so the fast
+//! path is bit-exact against [`SoftwareEncoder`](crate::hdc::SoftwareEncoder)'s
+//! scalar kernel for arbitrary (including negative, non-integer) inputs —
+//! the parity property the tests pin.
+//!
+//! Blocking: stage 1 walks X in [`COL_TILE`]-column tiles (1 KB of f32 — an
+//! L1-resident strip of the stage-1 accumulator row), streaming all f1 rows
+//! of the tile before moving right; stage 2 processes four B rows per pass
+//! (four independent accumulator chains hide the f32 add latency that
+//! bounds the single-chain scalar loop). No branches depend on the (random)
+//! sign data anywhere — the scalar kernel's per-element `if bv >= 0.0`
+//! mispredicts ~50% of the time on ±1 factors, which is the other cost the
+//! sign-GEMM rewrite removes.
+
+use crate::hdc::packed::{pack_signs, unpack_pm1, words_for};
+use crate::Result;
+use anyhow::bail;
+
+/// Stage-1 column tile: 256 f32 = 1 KB of accumulator per strip.
+pub const COL_TILE: usize = 256;
+
+/// A ±1 matrix stored as bit-packed sign planes (bit set ⇔ +1), row-major,
+/// each row starting on a fresh word with zero tail bits.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SignMat {
+    rows: usize,
+    cols: usize,
+    words_per_row: usize,
+    words: Vec<u64>,
+}
+
+impl SignMat {
+    /// Pack by sign (`v >= 0 → +1`) — binarizes arbitrary values with the
+    /// same rule the scalar encode kernel applies to its factors.
+    pub fn from_signs(values: &[f32], rows: usize, cols: usize) -> SignMat {
+        assert_eq!(
+            values.len(),
+            rows * cols,
+            "SignMat::from_signs: {} values != {rows} x {cols}",
+            values.len()
+        );
+        let words_per_row = words_for(cols);
+        let mut words = Vec::with_capacity(rows * words_per_row);
+        for r in 0..rows {
+            words.extend(pack_signs(&values[r * cols..(r + 1) * cols]));
+        }
+        SignMat { rows, cols, words_per_row, words }
+    }
+
+    /// Pack a strict ±1 matrix; errors on any other value.
+    pub fn from_pm1(values: &[f32], rows: usize, cols: usize) -> Result<SignMat> {
+        if values.len() != rows * cols {
+            bail!("SignMat::from_pm1: {} values != {rows} x {cols}", values.len());
+        }
+        for (i, &v) in values.iter().enumerate() {
+            if v != 1.0 && v != -1.0 {
+                bail!("SignMat::from_pm1: element {i} is {v}, expected +-1");
+            }
+        }
+        Ok(SignMat::from_signs(values, rows, cols))
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Words per packed row (`words_for(cols)`).
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// One row's packed sign words.
+    pub fn row(&self, r: usize) -> &[u64] {
+        &self.words[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// Entry sign as a bit: 1 ⇔ +1.
+    pub fn bit(&self, r: usize, c: usize) -> u64 {
+        (self.row(r)[c / 64] >> (c % 64)) & 1
+    }
+
+    /// Unpack back to a row-major ±1 matrix.
+    pub fn to_pm1(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for r in 0..self.rows {
+            out.extend(unpack_pm1(self.row(r), self.cols));
+        }
+        out
+    }
+
+    /// Packed storage bytes (the 32x story vs f32 factors).
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+/// IEEE sign mask for sign bit `i` of a packed row: 0 for +1 (keep the
+/// operand), `1 << 31` for −1 (flip the operand's sign — exact negation).
+#[inline(always)]
+fn sign_mask(row: &[u64], i: usize) -> u32 {
+    ((((row[i / 64] >> (i % 64)) & 1) as u32) ^ 1) << 31
+}
+
+/// Stage 1: `T = A[row0..row0+rows] @ X` over one sample, X row-major
+/// (f1 × f2), T row-major (rows × f2). Mask-selected adds over
+/// [`COL_TILE`]-column tiles; per output element the `j1`-ascending
+/// accumulation order of the scalar reference is preserved exactly.
+pub fn stage1(a: &SignMat, row0: usize, rows: usize, x: &[f32], f2: usize, t: &mut [f32]) {
+    let f1 = a.cols();
+    debug_assert_eq!(x.len(), f1 * f2);
+    debug_assert!(t.len() >= rows * f2);
+    debug_assert!(row0 + rows <= a.rows());
+    for r in 0..rows {
+        let arow = a.row(row0 + r);
+        let trow = &mut t[r * f2..(r + 1) * f2];
+        trow.fill(0.0);
+        let mut col = 0usize;
+        while col < f2 {
+            let tile = COL_TILE.min(f2 - col);
+            let tchunk = &mut trow[col..col + tile];
+            for j1 in 0..f1 {
+                let mask = sign_mask(arow, j1);
+                let xrow = &x[j1 * f2 + col..j1 * f2 + col + tile];
+                for (tv, &xv) in tchunk.iter_mut().zip(xrow) {
+                    *tv += f32::from_bits(xv.to_bits() ^ mask);
+                }
+            }
+            col += tile;
+        }
+    }
+}
+
+/// Stage 2 (raw accumulators): `out[r * d2 + i2] = Σ_j2 ±t[r][j2]` with
+/// signs from B row `i2`. B rows are processed **four at a time**: the four
+/// accumulator chains are independent, so the f32 add latency overlaps
+/// (the single-chain scalar loop is latency-bound on `acc`), while each
+/// row's own `j2`-ascending accumulation order — and therefore bit-exact
+/// agreement with the scalar reference — is untouched. Quantization is the
+/// caller's separate pass (which is what lets calibration reuse this
+/// kernel).
+pub fn stage2(b: &SignMat, t: &[f32], rows: usize, f2: usize, out: &mut [f32]) {
+    let d2 = b.rows();
+    debug_assert_eq!(b.cols(), f2);
+    debug_assert!(t.len() >= rows * f2);
+    debug_assert!(out.len() >= rows * d2);
+    for r in 0..rows {
+        let trow = &t[r * f2..(r + 1) * f2];
+        let orow = &mut out[r * d2..(r + 1) * d2];
+        let mut i2 = 0usize;
+        while i2 + 4 <= d2 {
+            let (b0, b1, b2, b3) =
+                (b.row(i2), b.row(i2 + 1), b.row(i2 + 2), b.row(i2 + 3));
+            let mut acc = [0.0f32; 4];
+            for (j2, &tv) in trow.iter().enumerate() {
+                let bits = tv.to_bits();
+                acc[0] += f32::from_bits(bits ^ sign_mask(b0, j2));
+                acc[1] += f32::from_bits(bits ^ sign_mask(b1, j2));
+                acc[2] += f32::from_bits(bits ^ sign_mask(b2, j2));
+                acc[3] += f32::from_bits(bits ^ sign_mask(b3, j2));
+            }
+            orow[i2..i2 + 4].copy_from_slice(&acc);
+            i2 += 4;
+        }
+        // tail rows (d2 not a multiple of 4): single-chain, same order
+        while i2 < d2 {
+            let brow = b.row(i2);
+            let mut acc = 0.0f32;
+            for (j2, &tv) in trow.iter().enumerate() {
+                acc += f32::from_bits(tv.to_bits() ^ sign_mask(brow, j2));
+            }
+            orow[i2] = acc;
+            i2 += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+
+    #[test]
+    fn signmat_roundtrip_and_layout() {
+        let vals = [1.0f32, -1.0, -1.0, 1.0, 1.0, 1.0];
+        let m = SignMat::from_pm1(&vals, 2, 3).unwrap();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.words_per_row(), 1);
+        assert_eq!(m.to_pm1(), vals);
+        assert_eq!(m.bit(0, 0), 1);
+        assert_eq!(m.bit(0, 1), 0);
+        assert_eq!(m.bit(1, 2), 1);
+        assert_eq!(m.bytes(), 16);
+    }
+
+    #[test]
+    fn from_pm1_rejects_non_pm1_and_bad_shapes() {
+        assert!(SignMat::from_pm1(&[1.0, 0.5], 1, 2).is_err());
+        assert!(SignMat::from_pm1(&[1.0, -1.0], 2, 2).is_err());
+        // from_signs binarizes instead
+        let m = SignMat::from_signs(&[3.0, -0.25, 0.0], 1, 3);
+        assert_eq!(m.to_pm1(), vec![1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn prop_roundtrip_any_geometry() {
+        forall(30, 0x51A, |rng| {
+            let rows = 1 + rng.below(5);
+            let cols = 1 + rng.below(150); // exercises multi-word rows + tails
+            let vals = gen::pm1_vec(rng, rows * cols);
+            let m = SignMat::from_pm1(&vals, rows, cols).unwrap();
+            assert_eq!(m.to_pm1(), vals);
+            assert_eq!(m.words_per_row(), cols.div_ceil(64));
+            for r in 0..rows {
+                for c in 0..cols {
+                    let want = if vals[r * cols + c] > 0.0 { 1 } else { 0 };
+                    assert_eq!(m.bit(r, c), want);
+                }
+            }
+        });
+    }
+
+    /// Scalar references with the exact accumulation orders the kernels
+    /// promise to preserve.
+    fn stage1_scalar(
+        a: &[f32],
+        f1: usize,
+        row0: usize,
+        rows: usize,
+        x: &[f32],
+        f2: usize,
+    ) -> Vec<f32> {
+        let mut t = vec![0.0f32; rows * f2];
+        for r in 0..rows {
+            let arow = &a[(row0 + r) * f1..(row0 + r + 1) * f1];
+            let trow = &mut t[r * f2..(r + 1) * f2];
+            for (j1, &av) in arow.iter().enumerate() {
+                for (tv, &xv) in trow.iter_mut().zip(&x[j1 * f2..(j1 + 1) * f2]) {
+                    if av >= 0.0 {
+                        *tv += xv;
+                    } else {
+                        *tv -= xv;
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    fn stage2_scalar(b: &[f32], d2: usize, t: &[f32], rows: usize, f2: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; rows * d2];
+        for r in 0..rows {
+            let trow = &t[r * f2..(r + 1) * f2];
+            for i2 in 0..d2 {
+                let brow = &b[i2 * f2..(i2 + 1) * f2];
+                let mut acc = 0.0f32;
+                for (&tv, &bv) in trow.iter().zip(brow) {
+                    acc += if bv >= 0.0 { tv } else { -tv };
+                }
+                out[r * d2 + i2] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn prop_stages_bit_exact_vs_scalar_any_dims_and_signs() {
+        // Dims deliberately not multiples of 64 (and crossing word
+        // boundaries), inputs non-integer and negative: bit-exactness must
+        // come from preserved accumulation order, not integer luck.
+        forall(25, 0x51B, |rng| {
+            let f1 = 1 + rng.below(100);
+            let f2 = 1 + rng.below(300);
+            let d1 = 1 + rng.below(8);
+            let d2 = 1 + rng.below(100);
+            let a = gen::pm1_vec(rng, d1 * f1);
+            let b = gen::pm1_vec(rng, d2 * f2);
+            let x = gen::normal_vec(rng, f1 * f2, 7.5);
+            let am = SignMat::from_pm1(&a, d1, f1).unwrap();
+            let bm = SignMat::from_pm1(&b, d2, f2).unwrap();
+            let mut t = vec![0.0f32; d1 * f2];
+            stage1(&am, 0, d1, &x, f2, &mut t);
+            let t_ref = stage1_scalar(&a, f1, 0, d1, &x, f2);
+            assert_eq!(t, t_ref, "stage1 f1={f1} f2={f2} d1={d1}");
+            let mut y = vec![0.0f32; d1 * d2];
+            stage2(&bm, &t, d1, f2, &mut y);
+            let y_ref = stage2_scalar(&b, d2, &t_ref, d1, f2);
+            assert_eq!(y, y_ref, "stage2 f2={f2} d2={d2}");
+        });
+    }
+
+    #[test]
+    fn stage1_respects_row_window() {
+        let mut rng = crate::util::Rng::new(9);
+        let (d1, f1, f2) = (6usize, 10usize, 70usize);
+        let a = gen::pm1_vec(&mut rng, d1 * f1);
+        let x = gen::normal_vec(&mut rng, f1 * f2, 3.0);
+        let am = SignMat::from_pm1(&a, d1, f1).unwrap();
+        let mut full = vec![0.0f32; d1 * f2];
+        stage1(&am, 0, d1, &x, f2, &mut full);
+        let mut window = vec![0.0f32; 2 * f2];
+        stage1(&am, 3, 2, &x, f2, &mut window);
+        assert_eq!(&window[..], &full[3 * f2..5 * f2]);
+    }
+}

@@ -16,7 +16,8 @@
 //! building with `--features pjrt` and a populated artifact directory).
 //!
 //! Global flags: --artifacts <dir> (default ./artifacts or $CLO_ARTIFACTS),
-//! --backend native|pjrt, --tau, --min-seg, --samples, --tasks, --voltage.
+//! --backend native|pjrt, --threads, --tau, --min-seg, --samples, --tasks,
+//! --voltage.
 
 use clo_hdnn::cl::learners::HdLearner;
 use clo_hdnn::cl::ClHarness;
@@ -64,6 +65,10 @@ const HELP: &str = "clo-hdnn <info|infer|cl-run|sim|serve|bench|asm> [flags]
   --config <name>     HD config: tiny|isolet|ucihar (built-in) or any manifest config
   --search <mode>     associative-search kernel: l1 (INT8, default) or packed
                       (bit-packed INT1 Hamming via XOR+popcount)
+  --threads <n>       per-call worker threads for the native backend
+                      (default 0 = auto: CLO_HDNN_THREADS if set, else all cores)
+  --encode <kernel>   encode kernel on infer|cl-run|bench: signgemm (fast
+                      default) or scalar (branchy reference; both bit-exact)
   --tau <f>           progressive-search confidence (default 0.5)
   --min-seg <n>       minimum segments before early exit (default 1)
   --samples <n>       evaluation sample cap
@@ -72,7 +77,9 @@ const HELP: &str = "clo-hdnn <info|infer|cl-run|sim|serve|bench|asm> [flags]
 
 bench flags: --config tiny|isolet|ucihar|all, --quick (small sweep),
   --out <file> (default BENCH_classifier.json), --iters/--warmup,
-  --taus a,b,c (progressive sweep points)
+  --taus a,b,c (progressive sweep points),
+  --encoder-out <file> (default BENCH_encoder.json: scalar vs sign-GEMM vs
+  sign-GEMM+pool encode throughput over growing row counts)
 
 With no artifacts present, commands fall back to built-in synthetic configs
 and deterministic blob datasets — no Python toolchain required.";
@@ -127,19 +134,40 @@ fn load_workload(
     }
 }
 
+/// The `--threads` budget for in-call backend parallelism. `0` (the
+/// default) means auto: `CLO_HDNN_THREADS` when set, else all cores.
+fn threads_arg(args: &Args) -> usize {
+    args.usize_or("threads", 0)
+}
+
+/// The `--encode` kernel selection (default: the sign-GEMM fast path).
+fn encode_kernel_arg(args: &Args) -> Result<clo_hdnn::hdc::EncodeKernel> {
+    clo_hdnn::hdc::EncodeKernel::parse(&args.str_or("encode", "signgemm"))
+}
+
 /// Build the NativeBackend: production factors when the artifact directory
 /// carries them, otherwise seeded factors recalibrated on training samples.
+/// `--threads` sizes the backend's per-call worker pool, `--encode` picks
+/// the (bit-exact) encode kernel.
 fn native_backend(
     cfg: &HdConfig,
     manifest: Option<&Manifest>,
     train: &Dataset,
+    args: &Args,
 ) -> Result<NativeBackend> {
+    let threads = threads_arg(args);
+    let kernel = encode_kernel_arg(args)?;
     if let Some(m) = manifest {
         if m.dir.join(format!("hd_factors_{}.bin", cfg.name)).exists() {
-            return NativeBackend::from_manifest(m, &cfg.name, 8);
+            let mut backend = NativeBackend::from_manifest(m, &cfg.name, 8)?;
+            backend.set_threads(threads);
+            backend.set_encode_kernel(kernel);
+            return Ok(backend);
         }
     }
     let mut backend = NativeBackend::seeded(cfg.clone(), 7, 8)?;
+    backend.set_threads(threads);
+    backend.set_encode_kernel(kernel);
     // Seeded factors come with the config's default scale_q; recalibrate on
     // a few (feature-quantized) training samples so QHVs span INT8 without
     // saturating.
@@ -233,7 +261,7 @@ fn cmd_infer_native(args: &Args) -> Result<()> {
         if manifest.is_some() { "artifact data" } else { "synthetic data" },
         pol.mode
     );
-    let backend = native_backend(&cfg, manifest.as_ref(), &train)?;
+    let backend = native_backend(&cfg, manifest.as_ref(), &train, args)?;
     let mut cl = HdClassifier::new(Box::new(backend), pol);
     let cap = args.usize_or("samples", 400);
 
@@ -308,7 +336,7 @@ fn cmd_cl_run_native(args: &Args) -> Result<()> {
     let mut harness = ClHarness::new(&train, &test, &stream);
     harness.eval_cap = args.usize_or("samples", 200);
 
-    let backend = native_backend(&cfg, manifest.as_ref(), &train)?;
+    let backend = native_backend(&cfg, manifest.as_ref(), &train, args)?;
     let mut hd = HdLearner::new(
         HdClassifier::new(Box::new(backend), policy(args)?),
         Trainer { retrain_epochs: args.usize_or("retrain", 1) },
@@ -419,6 +447,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         search_mode: mode,
         mode_policy: Default::default(),
         queue_depth: 256,
+        threads: threads_arg(args),
     };
     let coord = Coordinator::start(opts)?;
     // online learning phase
@@ -500,7 +529,125 @@ fn cmd_bench(args: &Args) -> Result<()> {
     ]);
     std::fs::write(&out_path, doc.dump())?;
     println!("\nwrote {out_path}");
+
+    // the encoder engine harness: scalar vs sign-GEMM vs sign-GEMM+pool
+    // over growing row counts -> BENCH_encoder.json
+    let enc_out = args.str_or("encoder-out", "BENCH_encoder.json");
+    let mut enc_reports: BTreeMap<String, Json> = BTreeMap::new();
+    for name in &names {
+        enc_reports.insert(name.clone(), bench_encoder(name, &bench, quick, args)?);
+    }
+    let enc_doc = Json::obj(vec![
+        ("version", Json::Num(1.0)),
+        ("quick", Json::Bool(quick)),
+        ("warmup", Json::Num(bench.warmup as f64)),
+        ("iters", Json::Num(bench.iters as f64)),
+        ("configs", Json::Obj(enc_reports)),
+    ]);
+    std::fs::write(&enc_out, enc_doc.dump())?;
+    println!("wrote {enc_out}");
     Ok(())
+}
+
+/// One config's encoder-engine rows: per row count, median ns/encode for
+/// the scalar kernel, the sign-GEMM kernel, and the pooled batch engine
+/// (whose number includes the packed-segment emission).
+fn bench_encoder(
+    name: &str,
+    bench: &clo_hdnn::util::stats::Bench,
+    quick: bool,
+    args: &Args,
+) -> Result<clo_hdnn::util::json::Json> {
+    use clo_hdnn::hdc::{EncodeKernel, HdBackend, SoftwareEncoder};
+    use clo_hdnn::util::json::Json;
+    use clo_hdnn::util::pool::WorkerPool;
+    use clo_hdnn::util::stats::Table;
+    use std::hint::black_box;
+
+    let cfg = synthetic::config(name)?;
+    let feat = cfg.features();
+    let (train, _test) = synthetic::blobs(&cfg, 8, 2, 17);
+    let mut enc = SoftwareEncoder::random(cfg.clone(), 7);
+    let calib_n = train.n.min(8);
+    let mut calib = Vec::with_capacity(calib_n * feat);
+    for i in 0..calib_n {
+        calib.extend(quantize_features(train.sample(i), cfg.scale_x));
+    }
+    enc.calibrate(&calib, calib_n);
+
+    let pool = WorkerPool::new(threads_arg(args));
+    let row_counts: &[usize] = if quick { &[1, 8] } else { &[1, 8, 32] };
+    let max_rows = *row_counts.last().unwrap();
+    let mut input = Vec::with_capacity(max_rows * feat);
+    let mut i = 0usize;
+    while input.len() < max_rows * feat {
+        input.extend(quantize_features(train.sample(i % train.n), cfg.scale_x));
+        i += 1;
+    }
+
+    println!(
+        "\n== bench-encoder {name}: F={feat} D={} ({} worker threads) ==",
+        cfg.dim(),
+        pool.threads()
+    );
+    let mut table = Table::new(&[
+        "rows",
+        "scalar ns/enc",
+        "sign-GEMM ns/enc",
+        "pool ns/enc",
+        "sign-GEMM speedup",
+        "pool speedup",
+    ]);
+    let mut rows_json = Vec::new();
+    let mut speedup_b1 = 0.0f64;
+    for &rows in row_counts {
+        let xs = &input[..rows * feat];
+        enc.set_kernel(EncodeKernel::Scalar);
+        let s_scalar = bench.run(|| black_box(enc.encode_full(black_box(xs), rows).unwrap()));
+        enc.set_kernel(EncodeKernel::SignGemm);
+        let s_gemm = bench.run(|| black_box(enc.encode_full(black_box(xs), rows).unwrap()));
+        let s_pool =
+            bench.run(|| black_box(enc.encode_batch(black_box(xs), rows, Some(&pool)).unwrap()));
+        let per = |median: f64| median * 1e9 / rows as f64;
+        let gemm_speedup = per(s_scalar.median) / per(s_gemm.median);
+        let pool_speedup = per(s_scalar.median) / per(s_pool.median);
+        if rows == 1 {
+            speedup_b1 = gemm_speedup;
+        }
+        table.row(&[
+            format!("{rows}"),
+            format!("{:.0}", per(s_scalar.median)),
+            format!("{:.0}", per(s_gemm.median)),
+            format!("{:.0}", per(s_pool.median)),
+            format!("{gemm_speedup:.2}x"),
+            format!("{pool_speedup:.2}x"),
+        ]);
+        rows_json.push(Json::obj(vec![
+            ("rows", Json::Num(rows as f64)),
+            ("scalar_ns_per_encode", Json::Num(per(s_scalar.median))),
+            ("signgemm_ns_per_encode", Json::Num(per(s_gemm.median))),
+            ("signgemm_pool_ns_per_encode", Json::Num(per(s_pool.median))),
+            ("scalar_samples_per_s", Json::Num(rows as f64 / s_scalar.median)),
+            ("signgemm_samples_per_s", Json::Num(rows as f64 / s_gemm.median)),
+            (
+                "signgemm_pool_samples_per_s",
+                Json::Num(rows as f64 / s_pool.median),
+            ),
+            ("signgemm_speedup", Json::Num(gemm_speedup)),
+            ("signgemm_pool_speedup", Json::Num(pool_speedup)),
+        ]));
+    }
+    table.print();
+    println!("single-row sign-GEMM speedup: {speedup_b1:.2}x");
+
+    Ok(Json::obj(vec![
+        ("features", Json::Num(feat as f64)),
+        ("dim", Json::Num(cfg.dim() as f64)),
+        ("segments", Json::Num(cfg.segments as f64)),
+        ("pool_threads", Json::Num(pool.threads() as f64)),
+        ("signgemm_speedup_b1", Json::Num(speedup_b1)),
+        ("rows", Json::Arr(rows_json)),
+    ]))
 }
 
 /// One config's worth of bench rows (and the human-readable tables).
@@ -519,7 +666,7 @@ fn bench_config(
     let cfg = synthetic::config(name)?;
     let per_class = args.usize_or("per-class", if quick { 6 } else { 20 });
     let (train, test) = synthetic::blobs(&cfg, per_class, 4, 17);
-    let backend = native_backend(&cfg, None, &train)?;
+    let backend = native_backend(&cfg, None, &train, args)?;
     let mut cl = HdClassifier::new(Box::new(backend), ProgressiveSearch::default());
     Trainer { retrain_epochs: 0 }.train_all(&mut cl, &train)?;
 

@@ -18,8 +18,9 @@
 use crate::config::HdConfig;
 use crate::data::TensorFile;
 use crate::hdc::encoder::SoftwareEncoder;
-use crate::hdc::HdBackend;
+use crate::hdc::{packed, HdBackend};
 use crate::runtime::Manifest;
+use crate::util::pool::WorkerPool;
 use crate::Result;
 use anyhow::bail;
 use std::path::Path;
@@ -28,6 +29,11 @@ pub struct NativeBackend {
     inner: SoftwareEncoder,
     /// largest accepted batch (API parity with the lowered PJRT handles)
     max_batch: usize,
+    /// worker-thread budget for one call (rows of a batched encode, class
+    /// row-blocks of a packed search); owned by the backend, which is itself
+    /// owned by the executor thread. Defaults to `CLO_HDNN_THREADS` or 1;
+    /// the coordinator/CLI raise it via `set_parallelism`.
+    pool: WorkerPool,
 }
 
 impl NativeBackend {
@@ -36,7 +42,7 @@ impl NativeBackend {
         if max_batch == 0 {
             bail!("NativeBackend: max_batch must be >= 1");
         }
-        Ok(NativeBackend { inner, max_batch })
+        Ok(NativeBackend { inner, max_batch, pool: WorkerPool::from_env_or(1) })
     }
 
     /// Random ±1 Kronecker factors from a seed (no artifacts needed).
@@ -74,6 +80,39 @@ impl NativeBackend {
         self.max_batch
     }
 
+    /// Set the per-call worker-thread budget (`0` = auto: `CLO_HDNN_THREADS`
+    /// when set, else all cores) — the inherent twin of
+    /// [`HdBackend::set_parallelism`].
+    pub fn set_threads(&mut self, threads: usize) {
+        self.pool = WorkerPool::new(threads);
+    }
+
+    /// The current per-call thread budget.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Select the encode kernel (`--encode scalar|signgemm` — both are
+    /// bit-exact; `scalar` is the ablation/parity baseline).
+    pub fn set_encode_kernel(&mut self, kernel: crate::hdc::EncodeKernel) {
+        self.inner.set_kernel(kernel);
+    }
+
+    /// The encode kernel currently serving traffic.
+    pub fn encode_kernel(&self) -> crate::hdc::EncodeKernel {
+        self.inner.kernel()
+    }
+
+    /// The pool handed to sharded kernels: `None` when serial (so the
+    /// kernels take their inline path with zero scope overhead).
+    fn pool_opt(&self) -> Option<&WorkerPool> {
+        if self.pool.is_serial() {
+            None
+        } else {
+            Some(&self.pool)
+        }
+    }
+
     /// Recalibrate `scale_q` from representative (already feature-quantized)
     /// inputs — the Rust twin of the build-time calibration; synthetic
     /// configs should call this before training.
@@ -105,7 +144,20 @@ impl HdBackend for NativeBackend {
 
     fn encode_full(&mut self, xs: &[f32], batch: usize) -> Result<Vec<f32>> {
         self.check_batch("encode_full", batch)?;
-        self.inner.encode_full(xs, batch)
+        if batch > 1 {
+            // the batched engine: rows sharded over the worker pool (or run
+            // inline when serial); bit-identical to the per-sample loop
+            self.inner.encode_qhvs(xs, batch, self.pool_opt())
+        } else {
+            self.inner.encode_full(xs, batch)
+        }
+    }
+
+    fn encode_segment_packed(&mut self, xs: &[f32], batch: usize, seg: usize) -> Result<Vec<u64>> {
+        // fused quantize-and-pack (zero repacking between encode and the
+        // XOR-tree search); bits identical to the trait's encode+pack default
+        self.check_batch("encode_segment_packed", batch)?;
+        self.inner.encode_segment_packed(xs, batch, seg)
     }
 
     fn search(
@@ -129,9 +181,14 @@ impl HdBackend for NativeBackend {
         len: usize,
     ) -> Result<Vec<f32>> {
         // the XOR+popcount fast path (the trait default unpacks and runs
-        // the scalar L1 kernel; both yield identical distances)
+        // the scalar L1 kernel; both yield identical distances), sharded
+        // over AM class row-blocks when the pool has threads to spend
         self.check_batch("search_packed", batch)?;
-        crate::hdc::packed::hamming_search(qs, batch, chvs, classes, len)
+        packed::hamming_search_pool(&self.pool, qs, batch, chvs, classes, len)
+    }
+
+    fn set_parallelism(&mut self, threads: usize) {
+        self.set_threads(threads);
     }
 }
 
@@ -209,6 +266,51 @@ mod tests {
         assert!(native
             .search_packed(&qs, 3, &cs, cfg.classes, cfg.seg_len())
             .is_err());
+    }
+
+    #[test]
+    fn threaded_backend_is_bit_identical_to_serial() {
+        let cfg = tiny();
+        let mut serial = NativeBackend::seeded(cfg.clone(), 21, 8).unwrap();
+        serial.set_threads(1);
+        let mut pooled = NativeBackend::seeded(cfg.clone(), 21, 8).unwrap();
+        pooled.set_threads(4);
+        assert_eq!(pooled.threads(), 4);
+        let mut rng = Rng::new(22);
+        let xs: Vec<f32> =
+            (0..7 * cfg.features()).map(|_| rng.range(-90, 91) as f32).collect();
+        assert_eq!(
+            serial.encode_full(&xs, 7).unwrap(),
+            pooled.encode_full(&xs, 7).unwrap()
+        );
+        let len = cfg.seg_len();
+        let q_pm1: Vec<f32> = (0..len).map(|_| rng.sign()).collect();
+        let c_pm1: Vec<f32> = (0..cfg.classes * len).map(|_| rng.sign()).collect();
+        let q = crate::hdc::packed::pack_signs(&q_pm1);
+        let chvs = crate::hdc::packed::pack_rows(&c_pm1, cfg.classes, len).unwrap();
+        assert_eq!(
+            serial.search_packed(&q, 1, &chvs, cfg.classes, len).unwrap(),
+            pooled.search_packed(&q, 1, &chvs, cfg.classes, len).unwrap()
+        );
+    }
+
+    #[test]
+    fn encode_segment_packed_matches_trait_default_and_guards_batch() {
+        let cfg = tiny();
+        let mut native = NativeBackend::seeded(cfg.clone(), 14, 4).unwrap();
+        let mut sw = SoftwareEncoder::random(cfg.clone(), 14);
+        let mut rng = Rng::new(15);
+        let xs: Vec<f32> =
+            (0..2 * cfg.features()).map(|_| rng.range(-90, 91) as f32).collect();
+        for s in 0..cfg.segments {
+            let fast = native.encode_segment_packed(&xs, 2, s).unwrap();
+            // SoftwareEncoder overrides too; rebuild the default from parts
+            let q = sw.encode_segment(&xs, 2, s).unwrap();
+            let want = crate::hdc::packed::pack_rows(&q, 2, cfg.seg_len()).unwrap();
+            assert_eq!(fast, want, "segment {s}");
+        }
+        assert!(native.encode_segment_packed(&xs, 0, 0).is_err());
+        assert!(native.encode_segment_packed(&xs, 9, 0).is_err());
     }
 
     #[test]

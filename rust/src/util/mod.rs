@@ -1,16 +1,19 @@
 //! Small self-contained utilities: seeded PRNG, timing/statistics for the
-//! hand-rolled bench harness, a mini property-testing framework, and a
-//! dependency-free CLI argument parser.
+//! hand-rolled bench harness, a mini property-testing framework, a
+//! dependency-free CLI argument parser, and a zero-dependency scoped worker
+//! pool.
 //!
 //! (The offline vendor set has no rand/criterion/proptest/clap, so these are
 //! first-class citizens of the repo rather than stop-gaps.)
 
 pub mod args;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 
 pub use args::Args;
+pub use pool::WorkerPool;
 pub use rng::Rng;
 pub use stats::{Bench, Summary};

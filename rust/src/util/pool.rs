@@ -1,0 +1,256 @@
+//! Zero-dependency scoped worker pool (no rayon — the workspace builds
+//! offline): `std::thread::scope` for borrow-friendly fork/join plus an
+//! `mpsc` channel to merge per-block results.
+//!
+//! The pool is deliberately stateless — a thread *budget*, not a set of
+//! long-lived threads. Scoped threads are spawned per call and joined before
+//! the call returns, so shards can borrow the caller's slices directly (no
+//! `'static` bound, no `Arc`), and a `threads == 1` pool degrades to a plain
+//! inline call with zero overhead. Threading model: the coordinator's
+//! executor thread *owns* the backend (backends are not `Send`); the pool is
+//! owned *by* the backend and only fans out within one backend call, so no
+//! shared mutable state ever crosses a request boundary.
+//!
+//! Two primitives cover the repo's data-parallel shapes:
+//! * [`WorkerPool::run_rows`] — shard a row-major output buffer into
+//!   contiguous row blocks, one scoped thread per block (batched encode);
+//! * [`WorkerPool::run_blocks`] — block-map an index range and collect each
+//!   block's result over a channel (associative-memory search over class
+//!   row-blocks, merged by the caller).
+
+use std::sync::mpsc;
+
+/// Environment variable overriding every **auto** (`0`) thread budget —
+/// the hook the CI matrix uses to run the whole suite serial and 4-wide.
+pub const THREADS_ENV: &str = "CLO_HDNN_THREADS";
+
+/// A thread budget for scoped fork/join parallelism.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl Default for WorkerPool {
+    /// The serial pool (1 thread) — every `run_*` call runs inline.
+    fn default() -> Self {
+        WorkerPool::new(1)
+    }
+}
+
+/// Resolve a thread-count spelling. A non-zero count is taken literally
+/// (explicit `--threads N` beats everything). `0` means **auto**:
+/// `CLO_HDNN_THREADS` when set (itself `0`/unset ⇒ all available cores) —
+/// so the env var reaches every pool sized with the auto default, CLI and
+/// coordinator paths included.
+fn resolve(threads: usize) -> usize {
+    if threads != 0 {
+        return threads;
+    }
+    let env = std::env::var(THREADS_ENV).ok();
+    match env.and_then(|v| v.trim().parse::<usize>().ok()) {
+        Some(n) if n != 0 => n,
+        _ => WorkerPool::available(),
+    }
+}
+
+/// Parse an explicit `CLO_HDNN_THREADS`-style value (pure, testable):
+/// empty/invalid strings fall back to `default`; `0` resolves like
+/// [`WorkerPool::new`]'s auto spelling.
+pub fn parse_threads(value: Option<&str>, default: usize) -> usize {
+    match value.and_then(|v| v.trim().parse::<usize>().ok()) {
+        Some(n) => resolve(n),
+        None => resolve(default),
+    }
+}
+
+impl WorkerPool {
+    /// A pool with the given thread budget; `0` means all available cores.
+    pub fn new(threads: usize) -> WorkerPool {
+        WorkerPool { threads: resolve(threads).max(1) }
+    }
+
+    /// Core count reported by the OS (>= 1).
+    pub fn available() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// Pool sized by `CLO_HDNN_THREADS` when set (0 = all cores), otherwise
+    /// `default` threads — the hook the CI matrix uses to run the whole test
+    /// suite single- and multi-threaded.
+    pub fn from_env_or(default: usize) -> WorkerPool {
+        let env = std::env::var(THREADS_ENV).ok();
+        WorkerPool::new(parse_threads(env.as_deref(), default))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// True when every `run_*` call executes inline on the caller thread.
+    pub fn is_serial(&self) -> bool {
+        self.threads == 1
+    }
+
+    /// Shard `data` (row-major, `row_len` items per row) into contiguous
+    /// row blocks and run `f(first_row, block)` on each block, one scoped
+    /// thread per block. Blocks are disjoint `&mut` slices, so `f` writes
+    /// its rows without any synchronization. Returns after every block
+    /// finished (scoped join).
+    pub fn run_rows<T, F>(&self, data: &mut [T], row_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(row_len > 0, "run_rows: row_len must be >= 1");
+        assert_eq!(data.len() % row_len, 0, "run_rows: data is not whole rows");
+        let rows = data.len() / row_len;
+        if rows == 0 {
+            return;
+        }
+        let shards = self.threads.min(rows);
+        if shards <= 1 {
+            f(0, data);
+            return;
+        }
+        let rows_per = rows.div_ceil(shards);
+        std::thread::scope(|s| {
+            for (i, block) in data.chunks_mut(rows_per * row_len).enumerate() {
+                let f = &f;
+                s.spawn(move || f(i * rows_per, block));
+            }
+        });
+    }
+
+    /// Split `0..n` into contiguous blocks, evaluate `f(start, len)` on each
+    /// block in parallel, and return `(start, len, result)` triples sorted
+    /// by `start`. Results travel back over an `mpsc` channel; the caller
+    /// merges them (the associative-search sharding shape, where per-block
+    /// outputs interleave in the final `(batch, classes)` matrix).
+    pub fn run_blocks<R, F>(&self, n: usize, f: F) -> Vec<(usize, usize, R)>
+    where
+        R: Send,
+        F: Fn(usize, usize) -> R + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let shards = self.threads.min(n);
+        if shards <= 1 {
+            return vec![(0, n, f(0, n))];
+        }
+        let per = n.div_ceil(shards);
+        let (tx, rx) = mpsc::channel::<(usize, usize, R)>();
+        std::thread::scope(|s| {
+            let mut start = 0;
+            while start < n {
+                let len = per.min(n - start);
+                let tx = tx.clone();
+                let f = &f;
+                s.spawn(move || {
+                    let r = f(start, len);
+                    let _ = tx.send((start, len, r));
+                });
+                start += len;
+            }
+        });
+        drop(tx);
+        let mut out: Vec<(usize, usize, R)> = rx.into_iter().collect();
+        out.sort_by_key(|&(start, _, _)| start);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn new_clamps_and_resolves_zero() {
+        assert_eq!(WorkerPool::new(3).threads(), 3);
+        assert!(WorkerPool::new(0).threads() >= 1);
+        assert!(WorkerPool::default().is_serial());
+        assert!(WorkerPool::available() >= 1);
+    }
+
+    #[test]
+    fn parse_threads_spellings() {
+        assert_eq!(parse_threads(Some("4"), 1), 4);
+        assert_eq!(parse_threads(Some(" 2 "), 1), 2);
+        assert_eq!(parse_threads(None, 3), 3);
+        assert_eq!(parse_threads(Some("nope"), 3), 3);
+        // "0" and a default of 0 both mean all cores
+        assert!(parse_threads(Some("0"), 1) >= 1);
+        assert!(parse_threads(None, 0) >= 1);
+    }
+
+    #[test]
+    fn run_rows_touches_every_row_exactly_once() {
+        for threads in [1usize, 2, 4, 7] {
+            let pool = WorkerPool::new(threads);
+            let row_len = 3;
+            let mut data = vec![0u32; 10 * row_len];
+            pool.run_rows(&mut data, row_len, |first_row, block| {
+                for (i, row) in block.chunks_mut(row_len).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (first_row + i) as u32 + 1;
+                    }
+                }
+            });
+            let want: Vec<u32> = (0..10u32).flat_map(|r| vec![r + 1; row_len]).collect();
+            assert_eq!(data, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_rows_empty_and_fewer_rows_than_threads() {
+        let pool = WorkerPool::new(8);
+        let mut empty: Vec<f32> = Vec::new();
+        pool.run_rows(&mut empty, 4, |_, _| panic!("no rows, no calls"));
+        let mut one = vec![0.0f32; 5];
+        pool.run_rows(&mut one, 5, |first, block| {
+            assert_eq!(first, 0);
+            block.fill(1.0);
+        });
+        assert!(one.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn run_rows_actually_runs_parallel_shards() {
+        let pool = WorkerPool::new(4);
+        let calls = AtomicUsize::new(0);
+        let mut data = vec![0u8; 16];
+        pool.run_rows(&mut data, 1, |_, _| {
+            calls.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 4, "one call per shard");
+    }
+
+    #[test]
+    fn run_blocks_covers_range_in_order() {
+        for threads in [1usize, 3, 5] {
+            let pool = WorkerPool::new(threads);
+            let blocks = pool.run_blocks(11, |start, len| {
+                (start..start + len).map(|i| i * i).collect::<Vec<_>>()
+            });
+            let mut covered = Vec::new();
+            let mut next = 0usize;
+            for (start, len, squares) in blocks {
+                assert_eq!(start, next, "blocks sorted and contiguous");
+                assert_eq!(squares.len(), len);
+                covered.extend(squares);
+                next = start + len;
+            }
+            assert_eq!(next, 11);
+            let want: Vec<usize> = (0..11).map(|i| i * i).collect();
+            assert_eq!(covered, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_blocks_empty_range() {
+        let pool = WorkerPool::new(4);
+        let blocks = pool.run_blocks(0, |_, _| 1u8);
+        assert!(blocks.is_empty());
+    }
+}

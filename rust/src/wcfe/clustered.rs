@@ -1,0 +1,254 @@
+//! Cluster-factored WCFE forward (Fig.7b executed, not just modeled) — the
+//! pattern-reuse trick that gives the silicon its 4.66 TFLOPS/W, behind the
+//! same forward API as the naive [`WcfeModel`].
+//!
+//! The naive conv multiplies every input scalar by `c_out` distinct weights.
+//! With clustered weights those `c_out` values are draws from a K-entry
+//! codebook, so the kernel computes the K products `x * centroid[k]` **once
+//! per input scalar** and then gathers them by codebook index across the
+//! output channels — `c_out` multiplies collapse to `K` multiplies plus
+//! `c_out` indexed adds (the [`ReuseSchedule`](crate::wcfe::ReuseSchedule)
+//! counts exactly this). Because each gathered value is bitwise the same
+//! product the naive loop computes (`x * centroid[idx] == x * w`) and the
+//! accumulation order is unchanged, [`conv3x3_clustered`] is **bit-exact**
+//! against [`conv3x3_same`](crate::wcfe::conv::conv3x3_same) over the
+//! codebook-reconstructed weights — the
+//! parity property the tests pin, not an approximate claim.
+
+use crate::wcfe::codebook::{Codebook, LayerCodebook};
+use crate::wcfe::conv::WcfeModel;
+use crate::Result;
+use anyhow::bail;
+
+/// SAME-padded 3x3 convolution over (h, h, c_in) NHWC data with
+/// cluster-factored weights: per input scalar, K centroid products computed
+/// once and index-gathered across output channels. Bit-exact vs
+/// [`conv3x3_same`](crate::wcfe::conv::conv3x3_same) over `cb.reconstruct()` (same products, same order,
+/// same zero-input skip).
+pub fn conv3x3_clustered(x: &[f32], h: usize, c_in: usize, cb: &LayerCodebook) -> Vec<f32> {
+    let c_out = cb.c_out;
+    assert_eq!(cb.k_in, 9 * c_in, "codebook k_in {} != 9 * c_in {}", cb.k_in, 9 * c_in);
+    assert_eq!(x.len(), h * h * c_in);
+    assert_eq!(cb.idx.len(), cb.k_in * c_out);
+    let k = cb.centroids.len();
+    let mut prod = vec![0.0f32; k];
+    let mut out = vec![0.0f32; h * h * c_out];
+    for py in 0..h {
+        for px in 0..h {
+            let obase = (py * h + px) * c_out;
+            for (tap, (dy, dx)) in (0..3)
+                .flat_map(|dy| (0..3).map(move |dx| (dy, dx)))
+                .enumerate()
+            {
+                let iy = py as isize + dy as isize - 1;
+                let ix = px as isize + dx as isize - 1;
+                if iy < 0 || ix < 0 || iy >= h as isize || ix >= h as isize {
+                    continue;
+                }
+                let ibase = (iy as usize * h + ix as usize) * c_in;
+                for ci in 0..c_in {
+                    let xv = x[ibase + ci];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    // K multiplies, reused across all c_out channels
+                    for (p, &c) in prod.iter_mut().zip(&cb.centroids) {
+                        *p = xv * c;
+                    }
+                    let row = tap * c_in + ci;
+                    let irow = &cb.idx[row * c_out..(row + 1) * c_out];
+                    let orow = &mut out[obase..obase + c_out];
+                    for (o, &ki) in orow.iter_mut().zip(irow) {
+                        *o += prod[ki as usize];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A WCFE whose conv layers run the cluster-factored kernel — same
+/// `forward(img)` surface and bit-identical features to the wrapped
+/// [`WcfeModel`] (whose dense weights are the codebook reconstruction).
+#[derive(Clone, Debug)]
+pub struct ClusteredWcfe {
+    pub model: WcfeModel,
+    /// one codebook per conv layer, in layer order
+    pub layers: Vec<LayerCodebook>,
+}
+
+impl ClusteredWcfe {
+    /// Cluster a model's conv weights at `clusters` centroids (per-layer
+    /// 1-D k-means) and replace its dense weights with their codebook
+    /// reconstruction, so the naive and clustered forwards compute over the
+    /// same effective weights and stay bit-comparable.
+    pub fn cluster(mut model: WcfeModel, clusters: usize) -> ClusteredWcfe {
+        let mut layers = Vec::with_capacity(model.convs.len());
+        for (i, conv) in model.convs.iter_mut().enumerate() {
+            let cb = LayerCodebook::from_weights(
+                &format!("conv{}", i + 1),
+                &conv.w,
+                9 * conv.c_in,
+                conv.c_out,
+                clusters,
+            );
+            conv.w = cb.reconstruct();
+            layers.push(cb);
+        }
+        ClusteredWcfe { model, layers }
+    }
+
+    /// Pair a model with a build-time codebook artifact; the model's dense
+    /// weights are replaced by the codebook reconstruction (shape-checked
+    /// per layer).
+    pub fn from_codebook(mut model: WcfeModel, cb: &Codebook) -> Result<ClusteredWcfe> {
+        if cb.layers.len() != model.convs.len() {
+            bail!(
+                "codebook has {} layers, model has {} conv layers",
+                cb.layers.len(),
+                model.convs.len()
+            );
+        }
+        for (l, conv) in cb.layers.iter().zip(model.convs.iter_mut()) {
+            if l.k_in != 9 * conv.c_in || l.c_out != conv.c_out {
+                bail!(
+                    "codebook layer {} is {}x{}, conv expects {}x{}",
+                    l.name,
+                    l.k_in,
+                    l.c_out,
+                    9 * conv.c_in,
+                    conv.c_out
+                );
+            }
+            conv.w = l.reconstruct();
+        }
+        Ok(ClusteredWcfe { model, layers: cb.layers.clone() })
+    }
+
+    /// Forward one image through the cluster-factored conv stack — same
+    /// contract as [`WcfeModel::forward`].
+    pub fn forward(&self, img: &[f32]) -> Result<Vec<f32>> {
+        self.model
+            .forward_with(img, |layer, x, h, c_in| {
+                conv3x3_clustered(x, h, c_in, &self.layers[layer])
+            })
+    }
+
+    /// Dense-vs-clustered multiply reduction of one forward pass over the
+    /// conv stack (the Fig.7 2.1x CONV-compute story): the naive kernel
+    /// multiplies each input scalar `c_out` times, the factored kernel only
+    /// `K` times (the gathered adds exist in both).
+    pub fn mult_reduction(&self) -> f64 {
+        let mut dense = 0u64;
+        let mut clustered = 0u64;
+        let mut h = self.model.image_hw as u64;
+        for (conv, cb) in self.model.convs.iter().zip(&self.layers) {
+            let inputs = h * h * 9 * conv.c_in as u64;
+            dense += inputs * conv.c_out as u64;
+            clustered += inputs * cb.centroids.len() as u64;
+            h /= 2;
+        }
+        dense as f64 / clustered.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::Rng;
+    use crate::wcfe::conv::{conv3x3_same, ConvLayer};
+
+    fn toy_model(rng: &mut Rng, channels: &[usize], image_hw: usize, image_c: usize) -> WcfeModel {
+        let mut convs = Vec::new();
+        let mut c_in = image_c;
+        for &c_out in channels {
+            convs.push(ConvLayer {
+                w: (0..9 * c_in * c_out).map(|_| rng.normal_f32() * 0.2).collect(),
+                c_in,
+                c_out,
+            });
+            c_in = c_out;
+        }
+        let fc_out = 16;
+        WcfeModel {
+            convs,
+            fc: (0..c_in * fc_out).map(|_| rng.normal_f32() * 0.2).collect(),
+            fc_out,
+            image_hw,
+            image_c,
+        }
+    }
+
+    #[test]
+    fn clustered_conv_bit_exact_vs_naive_on_reconstructed_weights() {
+        let mut rng = Rng::new(1);
+        let (h, c_in, c_out) = (6usize, 3usize, 8usize);
+        let w: Vec<f32> = (0..9 * c_in * c_out).map(|_| rng.normal_f32()).collect();
+        let cb = LayerCodebook::from_weights("l", &w, 9 * c_in, c_out, 4);
+        let wr = cb.reconstruct();
+        let x: Vec<f32> = (0..h * h * c_in).map(|_| rng.normal_f32()).collect();
+        let naive = conv3x3_same(&x, h, c_in, &wr, c_out);
+        let clustered = conv3x3_clustered(&x, h, c_in, &cb);
+        assert_eq!(naive, clustered, "must agree bit for bit");
+    }
+
+    #[test]
+    fn prop_clustered_forward_bit_exact_vs_naive() {
+        // the tentpole parity: whole-model forward, arbitrary images
+        // (incl. exact zeros exercising the skip path), several cluster
+        // counts — naive forward over reconstructed weights == clustered
+        forall(8, 0xC1F, |rng| {
+            let model = toy_model(rng, &[4, 6], 8, 3);
+            let clusters = 2 + rng.below(7);
+            let cw = ClusteredWcfe::cluster(model, clusters);
+            let img: Vec<f32> = (0..8 * 8 * 3)
+                .map(|_| if rng.below(8) == 0 { 0.0 } else { rng.uniform() as f32 })
+                .collect();
+            let naive = cw.model.forward(&img).unwrap();
+            let fast = cw.forward(&img).unwrap();
+            assert_eq!(naive, fast, "clusters={clusters}");
+        });
+    }
+
+    #[test]
+    fn from_codebook_checks_shapes_and_reconstructs() {
+        let mut rng = Rng::new(3);
+        let model = toy_model(&mut rng, &[4], 4, 3);
+        let good = Codebook {
+            layers: vec![LayerCodebook::from_weights(
+                "conv1",
+                &model.convs[0].w,
+                9 * 3,
+                4,
+                4,
+            )],
+            dense_tail_bits: 0,
+        };
+        let cw = ClusteredWcfe::from_codebook(model.clone(), &good).unwrap();
+        assert_eq!(cw.model.convs[0].w, good.layers[0].reconstruct());
+        let img = vec![0.5f32; 4 * 4 * 3];
+        assert_eq!(cw.model.forward(&img).unwrap(), cw.forward(&img).unwrap());
+
+        let bad = Codebook { layers: vec![], dense_tail_bits: 0 };
+        assert!(ClusteredWcfe::from_codebook(model.clone(), &bad).is_err());
+        let small_w = vec![0.1f32; 18 * 4];
+        let wrong_shape = Codebook {
+            layers: vec![LayerCodebook::from_weights("conv1", &small_w, 18, 4, 4)],
+            dense_tail_bits: 0,
+        };
+        assert!(ClusteredWcfe::from_codebook(model, &wrong_shape).is_err());
+    }
+
+    #[test]
+    fn mult_reduction_tracks_codebook_size() {
+        let mut rng = Rng::new(4);
+        let model = toy_model(&mut rng, &[32, 64], 16, 3);
+        let cw = ClusteredWcfe::cluster(model, 16);
+        let r = cw.mult_reduction();
+        // per layer the reduction is c_out / K (32/16 = 2x, 64/16 = 4x);
+        // the whole-stack number lands between the two
+        assert!(r > 2.0 && r < 4.0, "reduction {r}");
+    }
+}

@@ -51,6 +51,20 @@ impl WcfeModel {
 
     /// Forward one image (h*w*c row-major, values in [0,1]) to features.
     pub fn forward(&self, img: &[f32]) -> Result<Vec<f32>> {
+        self.forward_with(img, |layer, x, h, c_in| {
+            conv3x3_same(x, h, c_in, &self.convs[layer].w, self.convs[layer].c_out)
+        })
+    }
+
+    /// The forward pass with a pluggable conv kernel: `conv(layer, x, h,
+    /// c_in)` must return the layer's (h, h, c_out) pre-activation plane.
+    /// Everything around it (input normalization, relu, maxpool, GAP, FC)
+    /// is shared, which is what keeps the naive and cluster-factored paths
+    /// bit-comparable ([`crate::wcfe::clustered`]).
+    pub fn forward_with<F>(&self, img: &[f32], mut conv: F) -> Result<Vec<f32>>
+    where
+        F: FnMut(usize, &[f32], usize, usize) -> Vec<f32>,
+    {
         let hw = self.image_hw;
         if img.len() != hw * hw * self.image_c {
             bail!("image len {} != {}", img.len(), hw * hw * self.image_c);
@@ -59,8 +73,9 @@ impl WcfeModel {
         let mut x: Vec<f32> = img.iter().map(|&v| v * 2.0 - 1.0).collect();
         let mut h = hw;
         let mut c = self.image_c;
-        for layer in &self.convs {
-            x = conv3x3_same(&x, h, c, &layer.w, layer.c_out);
+        for (li, layer) in self.convs.iter().enumerate() {
+            x = conv(li, &x, h, c);
+            debug_assert_eq!(x.len(), h * h * layer.c_out);
             for v in &mut x {
                 *v = v.max(0.0); // relu
             }

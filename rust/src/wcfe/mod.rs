@@ -5,16 +5,20 @@
 //! *architectural* content:
 //! * post-training weight clustering + codebook ([`clustering`], [`codebook`]),
 //! * the pattern-reuse schedule (accumulate inputs sharing a weight index,
-//!   multiply once — [`schedule`]),
+//!   multiply once — [`schedule`]) and the cluster-factored conv forward
+//!   that *executes* it bit-exactly against the naive reference
+//!   ([`clustered`]),
 //! * the 4x16 PE-array cycle/op model behind the 1.9x parameter and 2.1x
 //!   CONV-compute reduction claims ([`pe_array`]).
 
+pub mod clustered;
 pub mod clustering;
 pub mod codebook;
 pub mod conv;
 pub mod pe_array;
 pub mod schedule;
 
+pub use clustered::{conv3x3_clustered, ClusteredWcfe};
 pub use clustering::kmeans_1d;
 pub use codebook::{Codebook, LayerCodebook};
 pub use conv::WcfeModel;

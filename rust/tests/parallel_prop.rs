@@ -1,0 +1,159 @@
+//! Parallel-runtime contracts: the worker pool must never change a result —
+//! pool-sharded kernels are bit-identical to their single-thread twins, the
+//! sharded associative search preserves the argmin on tie-free inputs, and
+//! a multi-threaded backend classifies exactly like a serial one through
+//! the full progressive pipeline (both search modes).
+
+use clo_hdnn::config::HdConfig;
+use clo_hdnn::hdc::encoder::SoftwareEncoder;
+use clo_hdnn::hdc::quantize::quantize_features;
+use clo_hdnn::hdc::{best_two, packed, ChvStore, HdBackend, ProgressiveSearch, SearchMode};
+use clo_hdnn::runtime::NativeBackend;
+use clo_hdnn::util::pool::WorkerPool;
+use clo_hdnn::util::prop::{forall, gen};
+use clo_hdnn::util::Rng;
+
+fn cfg_with_classes(classes: usize) -> HdConfig {
+    HdConfig::synthetic("par", 8, 8, 32, 32, 8, classes)
+}
+
+#[test]
+fn prop_pool_sharded_search_preserves_argmin_on_tie_free_inputs() {
+    // The satellite contract spelled as argmin: shard the AM over row-blocks
+    // and the winning class must be the single-thread one whenever the
+    // distance vector is tie-free (ties have no canonical winner across
+    // partitions in general; the kernels are bit-identical anyway, but the
+    // argmin statement is the serving-level guarantee).
+    forall(15, 0x9A1, |rng| {
+        let classes = 8 + rng.below(40);
+        let len = classes + rng.below(300);
+        let q = gen::pm1_vec(rng, len);
+        let qp = packed::pack_signs(&q);
+        // tie-free by construction: class c is the query with `counts[c]`
+        // elements sign-flipped, and the flip counts are a permutation of
+        // 0..classes — so distances (2 * flips) are pairwise distinct
+        let counts = rng.permutation(classes);
+        let mut chvs = Vec::with_capacity(classes * len);
+        for &k in &counts {
+            let mut row = q.clone();
+            for v in row.iter_mut().take(k) {
+                *v = -*v;
+            }
+            chvs.extend(row);
+        }
+        let cp = packed::pack_rows(&chvs, classes, len).unwrap();
+        let want = counts.iter().position(|&k| k == 0).unwrap();
+        let d = packed::hamming_search(&qp, 1, &cp, classes, len).unwrap();
+        assert_eq!(best_two(&d).0, want, "single-thread argmin");
+        let mut sorted = d.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(sorted.windows(2).all(|w| w[0] != w[1]), "bank must be tie-free");
+        for threads in [2usize, 3, 8] {
+            let pool = WorkerPool::new(threads);
+            let dp = packed::hamming_search_pool(&pool, &qp, 1, &cp, classes, len).unwrap();
+            assert_eq!(best_two(&dp).0, want, "threads={threads} classes={classes}");
+        }
+    });
+}
+
+#[test]
+fn prop_threaded_backend_classifies_identically_in_both_modes() {
+    // Full pipeline (quantize -> progressive encode/search -> argmin) on a
+    // 32-class AM: a 4-thread NativeBackend must reproduce the serial
+    // backend's class, segment count, and accumulated distances exactly,
+    // in the scalar L1 mode and the packed XOR-tree mode.
+    forall(5, 0x9A2, |rng| {
+        let cfg = cfg_with_classes(32);
+        let seed = rng.next_u64();
+        let mut serial = NativeBackend::seeded(cfg.clone(), seed, 8).unwrap();
+        serial.set_threads(1);
+        let mut pooled = NativeBackend::seeded(cfg.clone(), seed, 8).unwrap();
+        pooled.set_threads(4);
+        let mut store = ChvStore::new(cfg.clone());
+        for c in 0..cfg.classes {
+            store.update(c, &gen::int8_vec(rng, cfg.dim()), 1.0).unwrap();
+        }
+        for mode in [SearchMode::L1Int8, SearchMode::HammingPacked] {
+            let ps = ProgressiveSearch { tau: 0.5, min_segments: 1, mode };
+            for _ in 0..3 {
+                let xq = gen::int8_vec(rng, cfg.features());
+                let a = ps.classify(&mut serial, &store, &xq).unwrap();
+                let b = ps.classify(&mut pooled, &store, &xq).unwrap();
+                assert_eq!(a.class, b.class, "{mode:?}");
+                assert_eq!(a.segments_used, b.segments_used, "{mode:?}");
+                assert_eq!(a.dists, b.dists, "{mode:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_zero_repack_encode_matches_manual_pack_through_the_pipeline() {
+    // encode_segment_packed (the fused quantize-and-pack path the packed
+    // progressive mode consumes) vs pack_rows(encode_segment) — through
+    // both the SoftwareEncoder override and the NativeBackend delegation.
+    forall(10, 0x9A3, |rng| {
+        let cfg = cfg_with_classes(5);
+        let seed = rng.next_u64();
+        let mut sw = SoftwareEncoder::random(cfg.clone(), seed);
+        let mut native = NativeBackend::seeded(cfg.clone(), seed, 8).unwrap();
+        let batch = 1 + rng.below(4);
+        let xs = gen::int8_vec(rng, batch * cfg.features());
+        for s in 0..cfg.segments {
+            let q = sw.encode_segment(&xs, batch, s).unwrap();
+            let want = packed::pack_rows(&q, batch, cfg.seg_len()).unwrap();
+            assert_eq!(sw.encode_segment_packed(&xs, batch, s).unwrap(), want);
+            assert_eq!(native.encode_segment_packed(&xs, batch, s).unwrap(), want);
+        }
+    });
+}
+
+#[test]
+fn threaded_batch_encode_through_backend_matches_per_sample_software_encode() {
+    // the serving shape at batch depth: a pooled backend's batched encode
+    // row n must equal the per-sample software encode, like the Batcher test
+    // pins for the serial path
+    let cfg = cfg_with_classes(5);
+    let mut pooled = NativeBackend::seeded(cfg.clone(), 77, 16).unwrap();
+    pooled.set_threads(4);
+    let mut sw = SoftwareEncoder::random(cfg.clone(), 77);
+    let mut rng = Rng::new(78);
+    let batch = 11;
+    let xs: Vec<f32> =
+        (0..batch * cfg.features()).map(|_| rng.range(-90, 91) as f32).collect();
+    let got = pooled.encode_full(&xs, batch).unwrap();
+    for n in 0..batch {
+        let want = sw
+            .encode_full(&xs[n * cfg.features()..(n + 1) * cfg.features()], 1)
+            .unwrap();
+        assert_eq!(&got[n * cfg.dim()..(n + 1) * cfg.dim()], &want[..], "row {n}");
+    }
+}
+
+#[test]
+fn blob_trained_threaded_classifier_recovers_classes_in_packed_mode() {
+    // end-to-end sanity on structured data: learn blobs through a threaded
+    // backend, classify through the packed zero-repack path
+    let cfg = cfg_with_classes(6);
+    let mut backend = NativeBackend::seeded(cfg.clone(), 5, 8).unwrap();
+    backend.set_threads(4);
+    let mut store = ChvStore::new(cfg.clone());
+    let mut rng = Rng::new(6);
+    let protos: Vec<Vec<f32>> = (0..cfg.classes)
+        .map(|_| (0..cfg.features()).map(|_| rng.normal_f32() * 50.0).collect())
+        .collect();
+    for (c, p) in protos.iter().enumerate() {
+        for _ in 0..5 {
+            let noisy: Vec<f32> = p.iter().map(|&v| v + rng.normal_f32() * 5.0).collect();
+            let xq = quantize_features(&noisy, 1.0);
+            let q = backend.encode_full(&xq, 1).unwrap();
+            store.update(c, &q, 1.0).unwrap();
+        }
+    }
+    let ps = ProgressiveSearch { tau: 0.4, min_segments: 1, mode: SearchMode::HammingPacked };
+    for (c, p) in protos.iter().enumerate() {
+        let xq = quantize_features(p, 1.0);
+        let r = ps.classify(&mut backend, &store, &xq).unwrap();
+        assert_eq!(r.class, c, "packed threaded classify missed class {c}");
+    }
+}

@@ -27,8 +27,8 @@ use clo_hdnn::util::Args;
 fn main() -> clo_hdnn::Result<()> {
     let args = Args::from_env();
     let cfg_name = args.str_or("config", "isolet");
-    let n_tasks = args.usize_or("tasks", 5);
-    let tau = args.f64_or("tau", 0.5) as f32;
+    let n_tasks = args.usize_or("tasks", 5)?;
+    let tau = args.f64_or("tau", 0.5)? as f32;
 
     let dir = args
         .get("artifacts")
@@ -63,7 +63,7 @@ fn main() -> clo_hdnn::Result<()> {
 
     let stream = TaskStream::class_incremental(&train, n_tasks, 1);
     let mut harness = ClHarness::new(&train, &test, &stream);
-    harness.eval_cap = args.usize_or("eval-cap", 150);
+    harness.eval_cap = args.usize_or("eval-cap", 150)?;
 
     // learners
     let mut hd = HdLearner::new(

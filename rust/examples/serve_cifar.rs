@@ -30,16 +30,19 @@ fn main() -> clo_hdnn::Result<()> {
 
     let coord = Coordinator::start(CoordinatorOptions {
         backend: BackendSpec::Pjrt { artifacts: dir, config: "cifar100".into() },
-        tau: args.f64_or("tau", 0.5) as f32,
-        min_segments: args.usize_or("min-seg", 1),
+        tau: args.f64_or("tau", 0.5)? as f32,
+        min_segments: args.usize_or("min-seg", 1)?,
         search_mode: Default::default(),
         mode_policy: Default::default(),
         queue_depth: 256,
-        threads: args.usize_or("threads", 0),
+        threads: args.usize_or("threads", 0)?,
+        snapshot_path: None,
+        snapshot_every: 0,
+        restore_path: None,
     })?;
 
     // online gradient-free learning on WCFE features
-    let learn_n = args.usize_or("learn", 2000).min(feat_train.n);
+    let learn_n = args.usize_or("learn", 2000)?.min(feat_train.n);
     let t0 = std::time::Instant::now();
     for i in 0..learn_n {
         coord.call(Payload::Learn(feat_train.sample(i).to_vec(), feat_train.label(i)))?;
@@ -51,8 +54,8 @@ fn main() -> clo_hdnn::Result<()> {
     );
 
     // serve raw images (normal mode: WCFE artifact runs per request)
-    let n = args.usize_or("samples", 300).min(img_test.n);
-    let rate = args.f64_or("rate", 300.0);
+    let n = args.usize_or("samples", 300)?.min(img_test.n);
+    let rate = args.f64_or("rate", 300.0)?;
     let mut rng = Rng::new(11);
     let mut metrics = ServeMetrics::default();
     let mut correct = 0usize;

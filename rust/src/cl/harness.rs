@@ -31,17 +31,24 @@ impl<'a> ClHarness<'a> {
     }
 
     /// Accuracy of `learner` on the test samples of one task's classes.
+    /// A task with zero test samples is unmeasurable and reports NaN — the
+    /// [`AccuracyMatrix`] convention for "not measured" — instead of a
+    /// phantom 0.0 that would drag down `final_average` and inflate
+    /// `mean_forgetting`.
     fn eval_task(&self, learner: &mut dyn ContinualLearner, task_id: usize) -> Result<f64> {
         let classes = &self.stream.tasks[task_id].classes;
         let idx = self.test.indices_of_classes(classes);
         let take = idx.len().min(self.eval_cap);
+        if take == 0 {
+            return Ok(f64::NAN);
+        }
         let mut correct = 0usize;
         for &i in idx.iter().take(take) {
             if learner.predict(self.test.sample(i))? == self.test.label(i) {
                 correct += 1;
             }
         }
-        Ok(correct as f64 / take.max(1) as f64)
+        Ok(correct as f64 / take as f64)
     }
 
     /// Run the full stream for one learner.
@@ -143,6 +150,36 @@ mod tests {
         let run = h.run(&mut ncm).unwrap();
         assert!(run.final_accuracy > 0.9);
         assert!(run.mean_forgetting < 0.05);
+    }
+
+    #[test]
+    fn zero_sample_task_reports_nan_not_zero() {
+        // train covers 4 classes, but the test set is restricted to task
+        // 0's classes — task 1 then has ZERO test samples
+        let (train, test_full) = blob_pair(4, 32, 91);
+        let stream = TaskStream::class_incremental(&train, 2, 2);
+        let task0 = stream.tasks[0].classes.clone();
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..test_full.n {
+            if task0.contains(&test_full.label(i)) {
+                x.extend_from_slice(test_full.sample(i));
+                y.push(test_full.label(i) as u16);
+            }
+        }
+        let test = Dataset::from_parts(x, y, 32, 4).unwrap();
+        let h = ClHarness::new(&train, &test, &stream);
+        let mut ncm = NcmLearner(NearestMean::new(32, 4));
+        let run = h.run(&mut ncm).unwrap();
+        // task 1 is unmeasurable: NaN in the matrix, skipped in aggregates
+        assert!(run.matrix.get(1, 1).is_nan());
+        assert!(!run.final_accuracy.is_nan());
+        assert!(
+            run.final_accuracy > 0.8,
+            "empty task dragged the average down: {}",
+            run.final_accuracy
+        );
+        assert!(run.mean_forgetting < 0.1, "{}", run.mean_forgetting);
     }
 
     #[test]

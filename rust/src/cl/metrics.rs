@@ -25,35 +25,66 @@ impl AccuracyMatrix {
     }
 
     /// Mean accuracy over all seen tasks after the final task — the Fig.9
-    /// end-of-stream number.
+    /// end-of-stream number. NaN entries (the matrix convention for "not
+    /// measured", which also covers tasks with zero test samples) are
+    /// skipped rather than poisoning the mean; an all-NaN row yields NaN.
     pub fn final_average(&self) -> f64 {
         let t = self.n_tasks - 1;
-        (0..self.n_tasks).map(|tau| self.get(t, tau)).sum::<f64>() / self.n_tasks as f64
+        nan_mean((0..self.n_tasks).map(|tau| self.get(t, tau)))
     }
 
-    /// Average accuracy on seen tasks after each checkpoint (learning curve).
+    /// Average accuracy on seen tasks after each checkpoint (learning
+    /// curve), NaN entries skipped per checkpoint.
     pub fn curve(&self) -> Vec<f64> {
         (0..self.n_tasks)
-            .map(|t| (0..=t).map(|tau| self.get(t, tau)).sum::<f64>() / (t + 1) as f64)
+            .map(|t| nan_mean((0..=t).map(|tau| self.get(t, tau))))
             .collect()
     }
 
     /// Mean forgetting: max historical accuracy minus final accuracy, over
     /// tasks 0..n-1 (classic CL metric; ~0 for HDC, large for naive SGD).
+    /// A task with no measured accuracy (all-NaN column — e.g. no test
+    /// samples for its classes) is excluded from the mean instead of
+    /// inflating it.
     pub fn mean_forgetting(&self) -> f64 {
         if self.n_tasks < 2 {
             return 0.0;
         }
         let last = self.n_tasks - 1;
         let mut total = 0.0;
+        let mut counted = 0usize;
         for tau in 0..last {
+            let final_acc = self.get(last, tau);
             let peak = (tau..self.n_tasks)
                 .map(|t| self.get(t, tau))
+                .filter(|a| !a.is_nan())
                 .fold(f64::NEG_INFINITY, f64::max);
-            total += (peak - self.get(last, tau)).max(0.0);
+            if final_acc.is_nan() || peak == f64::NEG_INFINITY {
+                continue;
+            }
+            total += (peak - final_acc).max(0.0);
+            counted += 1;
         }
-        total / last as f64
+        if counted == 0 {
+            return 0.0;
+        }
+        total / counted as f64
     }
+}
+
+/// Mean over the non-NaN values; NaN when nothing was measured.
+fn nan_mean(vals: impl Iterator<Item = f64>) -> f64 {
+    let (mut sum, mut n) = (0.0f64, 0usize);
+    for v in vals {
+        if !v.is_nan() {
+            sum += v;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        return f64::NAN;
+    }
+    sum / n as f64
 }
 
 #[cfg(test)]
@@ -85,6 +116,33 @@ mod tests {
         assert_eq!(c.len(), 2);
         assert!((c[0] - 0.9).abs() < 1e-12);
         assert!((c[1] - 0.65).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_tasks_do_not_poison_aggregates() {
+        // 3 tasks; task 1 was never measurable (zero-sample task): its
+        // column stays NaN through every checkpoint
+        let mut m = AccuracyMatrix::new(3);
+        m.set(0, 0, 0.9);
+        m.set(1, 0, 0.8);
+        m.set(2, 0, 0.7);
+        m.set(2, 2, 0.6);
+        // final row: [0.7, NaN, 0.6] -> mean over measured = 0.65
+        assert!((m.final_average() - 0.65).abs() < 1e-12);
+        // curve checkpoint 1 averages only task 0 (task 1 is NaN)
+        let c = m.curve();
+        assert!((c[1] - 0.8).abs() < 1e-12);
+        // forgetting counts only task 0 (peak 0.9, final 0.7); the NaN
+        // column is excluded instead of being treated as total forgetting
+        assert!((m.mean_forgetting() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_nan_final_row_is_nan_not_zero() {
+        let m = AccuracyMatrix::new(2);
+        assert!(m.final_average().is_nan());
+        assert!(m.curve().iter().all(|v| v.is_nan()));
+        assert_eq!(m.mean_forgetting(), 0.0);
     }
 
     #[test]

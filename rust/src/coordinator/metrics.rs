@@ -9,6 +9,7 @@ pub struct ServeMetrics {
     pub segments_used: Vec<usize>,
     pub early_exits: u64,
     pub wcfe_runs: u64,
+    pub learns: u64,
     pub errors: u64,
     pub total: u64,
     pub wall_s: f64,
@@ -23,9 +24,29 @@ impl ServeMetrics {
         self.total += 1;
     }
 
+    /// A served learn request (latency tracked, no segments — learning
+    /// always encodes the full QHV).
+    pub fn record_learn(&mut self, latency_s: f64) {
+        self.latencies_s.push(latency_s);
+        self.learns += 1;
+        self.total += 1;
+    }
+
     pub fn record_error(&mut self) {
         self.errors += 1;
         self.total += 1;
+    }
+
+    /// Merge another collector (per-client loadgen metrics folded into the
+    /// run total; `wall_s` is the caller's to set — thread walls overlap).
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        self.latencies_s.extend_from_slice(&other.latencies_s);
+        self.segments_used.extend_from_slice(&other.segments_used);
+        self.early_exits += other.early_exits;
+        self.wcfe_runs += other.wcfe_runs;
+        self.learns += other.learns;
+        self.errors += other.errors;
+        self.total += other.total;
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -83,5 +104,22 @@ mod tests {
         assert!((m.complexity_reduction(8) - 0.25).abs() < 1e-12);
         assert_eq!(m.throughput_rps(), 3.0);
         assert!(m.latency_percentile(95.0) >= m.latency_percentile(50.0));
+    }
+
+    #[test]
+    fn learns_and_merge() {
+        let mut a = ServeMetrics::default();
+        a.record(0.010, 4, true, false);
+        a.record_learn(0.002);
+        let mut b = ServeMetrics::default();
+        b.record_learn(0.004);
+        b.record_error();
+        a.merge(&b);
+        assert_eq!(a.total, 4);
+        assert_eq!(a.learns, 2);
+        assert_eq!(a.errors, 1);
+        assert_eq!(a.latencies_s.len(), 3);
+        // learn latencies count toward percentiles, not toward segments
+        assert_eq!(a.segments_used.len(), 1);
     }
 }

@@ -11,6 +11,6 @@ pub mod router;
 pub mod server;
 
 pub use metrics::ServeMetrics;
-pub use request::{Payload, Request, Response};
+pub use request::{CoordStats, Payload, Request, Response};
 pub use router::Router;
 pub use server::{BackendSpec, Coordinator, CoordinatorOptions};

@@ -1,6 +1,7 @@
 //! Request/response types crossing the client <-> executor channel.
 
 use crate::hdc::SearchMode;
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// What the client submits.
@@ -16,6 +17,15 @@ pub enum Payload {
     Image(Vec<f32>),
     /// labeled sample: learn instead of classify
     Learn(Vec<f32>, usize),
+    /// persist the learned knowledge (class hypervectors) to the given
+    /// path, or to the coordinator's configured default when `None`;
+    /// atomic write-rename, see `crate::hdc::knowledge`
+    Snapshot(Option<PathBuf>),
+    /// replace the live knowledge store with the checkpoint at the path
+    /// (geometry must match the serving backend's config)
+    Restore(PathBuf),
+    /// report knowledge/serving counters (no classification)
+    Stats,
 }
 
 #[derive(Debug)]
@@ -25,6 +35,17 @@ pub struct Request {
     pub submitted: Instant,
     /// reply channel (one-shot)
     pub reply: std::sync::mpsc::SyncSender<Response>,
+}
+
+/// Knowledge counters a [`Payload::Stats`] request reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CoordStats {
+    /// total bundled (positive) learns in the live store
+    pub learns: u64,
+    /// classes with at least one bundled sample
+    pub trained_classes: usize,
+    /// snapshots taken this process (explicit + auto)
+    pub snapshots: u64,
 }
 
 /// What the executor returns.
@@ -37,11 +58,16 @@ pub struct Response {
     /// whether the WCFE ran (normal mode)
     pub used_wcfe: bool,
     pub latency_s: f64,
+    /// free-form success detail (e.g. the snapshot path written)
+    pub detail: Option<String>,
+    /// knowledge counters (set for [`Payload::Stats`] replies)
+    pub stats: Option<CoordStats>,
     pub error: Option<String>,
 }
 
 impl Response {
-    pub fn error(id: u64, msg: String) -> Response {
+    /// A non-classification success (snapshot/restore/stats replies).
+    pub fn ok(id: u64) -> Response {
         Response {
             id,
             class: None,
@@ -49,7 +75,16 @@ impl Response {
             early_exit: false,
             used_wcfe: false,
             latency_s: 0.0,
+            detail: None,
+            stats: None,
+            error: None,
+        }
+    }
+
+    pub fn error(id: u64, msg: String) -> Response {
+        Response {
             error: Some(msg),
+            ..Response::ok(id)
         }
     }
 }

@@ -10,10 +10,10 @@
 
 use crate::config::HdConfig;
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
-use crate::coordinator::request::{Payload, Request, Response};
+use crate::coordinator::request::{CoordStats, Payload, Request, Response};
 use crate::coordinator::router::{ModePolicy, Router};
 use crate::data::TensorFile;
-use crate::hdc::{HdBackend, HdClassifier, ProgressiveSearch, SearchMode};
+use crate::hdc::{knowledge, HdBackend, HdClassifier, ProgressiveSearch, SearchMode};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, PjrtBackend};
 use crate::runtime::{Manifest, NativeBackend};
@@ -52,6 +52,15 @@ pub struct CoordinatorOptions {
     /// available cores. The executor thread still owns the backend; this
     /// only shards rows/row-blocks inside a single request.
     pub threads: usize,
+    /// default knowledge checkpoint: the target of `Payload::Snapshot(None)`
+    /// and of the auto-snapshot cadence below
+    pub snapshot_path: Option<std::path::PathBuf>,
+    /// auto-snapshot after every N successful learns (0 = explicit
+    /// snapshots only; needs `snapshot_path`)
+    pub snapshot_every: usize,
+    /// warm restart: load this checkpoint into the store before serving
+    /// (the file's geometry must match the backend config)
+    pub restore_path: Option<std::path::PathBuf>,
 }
 
 impl CoordinatorOptions {
@@ -66,6 +75,9 @@ impl CoordinatorOptions {
             mode_policy: ModePolicy::Auto,
             queue_depth: 256,
             threads: 0,
+            snapshot_path: None,
+            snapshot_every: 0,
+            restore_path: None,
         }
     }
 }
@@ -139,6 +151,19 @@ impl Drop for Coordinator {
     }
 }
 
+/// Knowledge-persistence bookkeeping on the executor thread.
+#[derive(Clone, Debug, Default)]
+struct KnowledgeState {
+    /// default checkpoint target (Snapshot(None) + auto-snapshot)
+    snapshot_path: Option<std::path::PathBuf>,
+    /// auto-snapshot cadence in learns (0 = off)
+    snapshot_every: usize,
+    /// learns since the last snapshot (drives the cadence)
+    since_snapshot: usize,
+    /// snapshots written this process (explicit + auto)
+    snapshots: u64,
+}
+
 /// Executor state living on the worker thread.
 struct Executor {
     classifier: HdClassifier,
@@ -152,6 +177,7 @@ struct Executor {
     /// largest Learn run the backend can encode in one call (1 disables
     /// grouped learning — the PJRT path is lowered at batch 1)
     learn_batch_cap: usize,
+    knowledge: KnowledgeState,
 }
 
 fn executor_main(
@@ -204,6 +230,9 @@ fn executor_main(
             }
         }
     }
+    // graceful shutdown: if an auto-snapshot cadence is configured and
+    // learns landed since the last checkpoint, persist them on the way out
+    ex.final_snapshot();
 }
 
 /// Load the software WCFE model if the manifest carries one for an image
@@ -244,6 +273,7 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
             wcfe_native: None,
             image_elems: 0,
             learn_batch_cap: NATIVE_MAX_BATCH,
+            knowledge: KnowledgeState::default(),
         },
         BackendSpec::NativeArtifacts { artifacts, config } => {
             let manifest = Manifest::load(artifacts)?;
@@ -257,6 +287,7 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
                 wcfe_native,
                 image_elems,
                 learn_batch_cap: NATIVE_MAX_BATCH,
+                knowledge: KnowledgeState::default(),
             }
         }
         #[cfg(feature = "pjrt")]
@@ -277,16 +308,110 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
                 wcfe_native: None,
                 image_elems,
                 learn_batch_cap: 1,
+                knowledge: KnowledgeState::default(),
             }
         }
     };
     // size the backend's per-call worker pool (0 = all cores); backends
     // without an internal pool ignore the hint
     ex.classifier.backend_mut().set_parallelism(opts.threads);
+    ex.knowledge = KnowledgeState {
+        snapshot_path: opts.snapshot_path.clone(),
+        snapshot_every: opts.snapshot_every,
+        since_snapshot: 0,
+        snapshots: 0,
+    };
+    // warm restart: swap in the checkpointed store before any request runs
+    if let Some(path) = &opts.restore_path {
+        ex.restore_store(path)?;
+    }
     Ok(ex)
 }
 
 impl Executor {
+    /// Replace the live store with a checkpoint, refusing geometry or
+    /// calibration drift (either would serve silently wrong answers).
+    fn restore_store(&mut self, path: &std::path::Path) -> Result<()> {
+        let store = knowledge::load(path)?;
+        if !knowledge::compatible(store.cfg(), self.classifier.cfg()) {
+            anyhow::bail!(
+                "knowledge checkpoint {} was trained for config '{}' \
+                 (geometry differs from serving config '{}')",
+                path.display(),
+                store.cfg().name,
+                self.classifier.cfg().name
+            );
+        }
+        if !knowledge::calibration_matches(store.cfg(), self.classifier.cfg()) {
+            let (a, b) = (store.cfg(), self.classifier.cfg());
+            anyhow::bail!(
+                "knowledge checkpoint {} was calibrated differently \
+                 (qbits/scale_x/scale_q {}/{}/{} vs serving {}/{}/{}): \
+                 its class hypervectors are incommensurable with queries \
+                 quantized under the serving config — re-train or restore \
+                 into a matching config",
+                path.display(),
+                a.qbits,
+                a.scale_x,
+                a.scale_q,
+                b.qbits,
+                b.scale_x,
+                b.scale_q
+            );
+        }
+        self.classifier.store = store;
+        // the live store now equals a checkpoint: nothing is unsaved
+        self.knowledge.since_snapshot = 0;
+        Ok(())
+    }
+
+    /// Persist the store to `path` (or the configured default) atomically.
+    fn snapshot_store(&mut self, path: Option<&std::path::Path>) -> Result<std::path::PathBuf> {
+        let target: std::path::PathBuf = match path {
+            Some(p) => p.to_path_buf(),
+            None => self
+                .knowledge
+                .snapshot_path
+                .clone()
+                .ok_or_else(|| {
+                    anyhow::anyhow!("snapshot: no path given and no default configured")
+                })?,
+        };
+        knowledge::save(&self.classifier.store, &target)?;
+        self.knowledge.snapshots += 1;
+        self.knowledge.since_snapshot = 0;
+        Ok(target)
+    }
+
+    /// Record `n` successful learns and run the auto-snapshot cadence. A
+    /// failed auto-snapshot must not take down serving: it is reported on
+    /// stderr and retried after the next learn.
+    fn note_learns(&mut self, n: usize) {
+        self.knowledge.since_snapshot += n;
+        if self.knowledge.snapshot_every == 0
+            || self.knowledge.since_snapshot < self.knowledge.snapshot_every
+            || self.knowledge.snapshot_path.is_none()
+        {
+            return;
+        }
+        if let Err(e) = self.snapshot_store(None) {
+            eprintln!("auto-snapshot failed (serving continues): {e:#}");
+        }
+    }
+
+    /// Shutdown flush: a configured snapshot path means learned knowledge
+    /// is meant to be durable, so any learns not yet checkpointed are
+    /// persisted on graceful shutdown — with or without an auto-snapshot
+    /// cadence.
+    fn final_snapshot(&mut self) {
+        if self.knowledge.since_snapshot == 0 || self.knowledge.snapshot_path.is_none() {
+            return;
+        }
+        if let Err(e) = self.snapshot_store(None) {
+            eprintln!("shutdown snapshot failed: {e:#}");
+        }
+    }
+
     /// One batched encode for a contiguous run of Learn requests, then
     /// per-class bundling in arrival order and per-request replies.
     /// Bit-identical to handling each Learn individually
@@ -328,17 +453,17 @@ impl Executor {
         for (r, (_, class)) in valid.iter().zip(&samples) {
             let resp = match &result {
                 Ok(()) => Response {
-                    id: r.id,
                     class: Some(*class),
                     segments_used: segments,
-                    early_exit: false,
-                    used_wcfe: false,
                     latency_s: t0.elapsed().as_secs_f64(),
-                    error: None,
+                    ..Response::ok(r.id)
                 },
                 Err(e) => Response::error(r.id, format!("{e:#}")),
             };
             let _ = r.reply.send(resp);
+        }
+        if result.is_ok() {
+            self.note_learns(valid.len());
         }
     }
 
@@ -364,16 +489,39 @@ impl Executor {
         match &req.payload {
             Payload::Learn(x, class) => {
                 self.classifier.learn(x, *class)?;
+                self.note_learns(1);
                 Ok(Response {
-                    id: req.id,
                     class: Some(*class),
                     segments_used: self.classifier.cfg().segments,
-                    early_exit: false,
-                    used_wcfe: false,
                     latency_s: t0.elapsed().as_secs_f64(),
-                    error: None,
+                    ..Response::ok(req.id)
                 })
             }
+            Payload::Snapshot(path) => {
+                let target = self.snapshot_store(path.as_deref())?;
+                Ok(Response {
+                    detail: Some(target.display().to_string()),
+                    latency_s: t0.elapsed().as_secs_f64(),
+                    ..Response::ok(req.id)
+                })
+            }
+            Payload::Restore(path) => {
+                self.restore_store(path)?;
+                Ok(Response {
+                    detail: Some(path.display().to_string()),
+                    latency_s: t0.elapsed().as_secs_f64(),
+                    ..Response::ok(req.id)
+                })
+            }
+            Payload::Stats => Ok(Response {
+                stats: Some(CoordStats {
+                    learns: self.classifier.store.total_learns(),
+                    trained_classes: self.classifier.store.trained_classes(),
+                    snapshots: self.knowledge.snapshots,
+                }),
+                latency_s: t0.elapsed().as_secs_f64(),
+                ..Response::ok(req.id)
+            }),
             payload => {
                 let mode = self.router.route(payload);
                 let (features, used_wcfe, search_override) = match (payload, mode) {
@@ -383,7 +531,7 @@ impl Executor {
                     (Payload::Image(img), Mode::Bypass) => (img.clone(), false, None),
                     (Payload::Features(x), _) => (x.clone(), false, None),
                     (Payload::FeaturesWithMode(x, m), _) => (x.clone(), false, Some(*m)),
-                    (Payload::Learn(..), _) => unreachable!(),
+                    _ => unreachable!("learn/snapshot/restore/stats handled above"),
                 };
                 // per-request search-mode override: swap the policy's kernel
                 // for this one classification, then restore the default
@@ -395,13 +543,12 @@ impl Executor {
                 self.classifier.policy.mode = default_mode;
                 let r = r?;
                 Ok(Response {
-                    id: req.id,
                     class: Some(r.class),
                     segments_used: r.segments_used,
                     early_exit: r.early_exit,
                     used_wcfe,
                     latency_s: t0.elapsed().as_secs_f64(),
-                    error: None,
+                    ..Response::ok(req.id)
                 })
             }
         }
@@ -481,6 +628,9 @@ mod tests {
             mode_policy: ModePolicy::Auto,
             queue_depth: 8,
             threads: 1,
+            snapshot_path: None,
+            snapshot_every: 0,
+            restore_path: None,
         };
         assert!(Coordinator::start(opts).is_err());
     }
@@ -555,6 +705,124 @@ mod tests {
             assert_eq!(threaded.class, serial.class);
             assert_eq!(threaded.segments_used, serial.segments_used);
         }
+    }
+
+    fn snap_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("clo_hdnn_coord_snap_{name}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn snapshot_restore_round_trips_through_channels() {
+        let path = snap_dir("rt").join("k.clok");
+        let _ = std::fs::remove_file(&path);
+        let (coord, protos) = proto_and_coordinator();
+        for (c, p) in protos.iter().enumerate() {
+            for _ in 0..3 {
+                coord.call(Payload::Learn(p.clone(), c)).unwrap();
+            }
+        }
+        let r = coord.call(Payload::Snapshot(Some(path.clone()))).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.detail.as_deref(), Some(path.display().to_string().as_str()));
+        assert!(path.exists());
+
+        // a FRESH coordinator restored over the channel serves identically
+        let (fresh, _) = proto_and_coordinator();
+        let r = fresh.call(Payload::Restore(path.clone())).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        for (c, p) in protos.iter().enumerate() {
+            for mode in [SearchMode::L1Int8, SearchMode::HammingPacked] {
+                let orig = coord.call(Payload::FeaturesWithMode(p.clone(), mode)).unwrap();
+                let rest = fresh.call(Payload::FeaturesWithMode(p.clone(), mode)).unwrap();
+                assert_eq!(orig.class, Some(c));
+                assert_eq!(orig.class, rest.class, "mode {mode:?} class {c}");
+                assert_eq!(orig.segments_used, rest.segments_used);
+                assert_eq!(orig.early_exit, rest.early_exit);
+            }
+        }
+        // stats reflect the restored knowledge
+        let s = fresh.call(Payload::Stats).unwrap().stats.unwrap();
+        assert_eq!(s.learns, 12);
+        assert_eq!(s.trained_classes, 4);
+    }
+
+    #[test]
+    fn restore_path_option_warm_starts_the_executor() {
+        let path = snap_dir("warm").join("k.clok");
+        let _ = std::fs::remove_file(&path);
+        let (coord, protos) = proto_and_coordinator();
+        for (c, p) in protos.iter().enumerate() {
+            coord.call(Payload::Learn(p.clone(), c)).unwrap();
+        }
+        coord.call(Payload::Snapshot(Some(path.clone()))).unwrap();
+        drop(coord); // the original process is gone
+
+        let cfg = HdConfig::synthetic("t", 8, 8, 32, 32, 8, 4);
+        let mut opts = CoordinatorOptions::software(cfg);
+        opts.restore_path = Some(path);
+        let coord = Coordinator::start(opts).unwrap();
+        for (c, p) in protos.iter().enumerate() {
+            let r = coord.call(Payload::Features(p.clone())).unwrap();
+            assert_eq!(r.class, Some(c), "restored knowledge must classify");
+        }
+    }
+
+    #[test]
+    fn restore_refuses_geometry_mismatch() {
+        let path = snap_dir("geom").join("k.clok");
+        let _ = std::fs::remove_file(&path);
+        let (coord, _) = proto_and_coordinator();
+        coord.call(Payload::Snapshot(Some(path.clone()))).unwrap();
+        // 10-class config vs the checkpoint's 4-class geometry
+        let cfg = HdConfig::synthetic("t", 8, 8, 32, 32, 8, 10);
+        let coord10 = Coordinator::start(CoordinatorOptions::software(cfg.clone())).unwrap();
+        let r = coord10.call(Payload::Restore(path.clone())).unwrap();
+        assert!(r.error.is_some(), "geometry mismatch must be refused");
+        // and a warm start over the same mismatch fails to boot
+        let mut opts = CoordinatorOptions::software(cfg);
+        opts.restore_path = Some(path);
+        assert!(Coordinator::start(opts).is_err());
+    }
+
+    #[test]
+    fn snapshot_without_target_errors_cleanly() {
+        let (coord, _) = proto_and_coordinator();
+        let r = coord.call(Payload::Snapshot(None)).unwrap();
+        assert!(r.error.is_some());
+        assert!(r.error.unwrap().contains("no path"));
+    }
+
+    #[test]
+    fn auto_snapshot_every_n_learns() {
+        let path = snap_dir("auto").join("k.clok");
+        let _ = std::fs::remove_file(&path);
+        let cfg = HdConfig::synthetic("t", 8, 8, 32, 32, 8, 4);
+        let mut opts = CoordinatorOptions::software(cfg.clone());
+        opts.snapshot_path = Some(path.clone());
+        opts.snapshot_every = 4;
+        let coord = Coordinator::start(opts).unwrap();
+        let mut rng = Rng::new(77);
+        let x: Vec<f32> = (0..cfg.features()).map(|_| rng.normal_f32() * 40.0).collect();
+        for _ in 0..3 {
+            coord.call(Payload::Learn(x.clone(), 0)).unwrap();
+        }
+        assert!(!path.exists(), "cadence is 4: no snapshot after 3 learns");
+        coord.call(Payload::Learn(x.clone(), 0)).unwrap();
+        // the 4th learn triggered the auto-snapshot on the executor thread
+        // before it pulled the next request, so a follow-up call syncs us
+        let s = coord.call(Payload::Stats).unwrap().stats.unwrap();
+        assert_eq!(s.snapshots, 1);
+        assert!(path.exists());
+        let snap = crate::hdc::knowledge::load(&path).unwrap();
+        assert_eq!(snap.total_learns(), 4);
+        // shutdown flush: 2 more learns then drop -> final snapshot carries 6
+        coord.call(Payload::Learn(x.clone(), 1)).unwrap();
+        coord.call(Payload::Learn(x.clone(), 1)).unwrap();
+        drop(coord);
+        let snap = crate::hdc::knowledge::load(&path).unwrap();
+        assert_eq!(snap.total_learns(), 6);
     }
 
     #[test]

@@ -74,6 +74,77 @@ impl ChvStore {
         &self.view[s]
     }
 
+    /// The (classes x seg_len) raw training-accumulator block of segment
+    /// `s` — the state the durable knowledge store
+    /// ([`crate::hdc::knowledge`]) persists so learning can continue after
+    /// a restart.
+    pub fn sums_segment(&self, s: usize) -> &[f32] {
+        &self.sums[s]
+    }
+
+    /// Total positive (bundling) updates across all classes — the
+    /// "learns" counter snapshot/auto-snapshot bookkeeping reads.
+    pub fn total_learns(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Rebuild a store from persisted parts: per-segment raw accumulator
+    /// blocks plus per-class counts. The INT8 view and the packed INT1
+    /// mirror are *recomputed* (not trusted from disk), so both always
+    /// equal what the same update stream would have produced in process.
+    pub fn from_parts(
+        cfg: HdConfig,
+        sums: Vec<Vec<f32>>,
+        counts: Vec<u64>,
+    ) -> Result<ChvStore> {
+        let seg_block = cfg.classes * cfg.seg_len();
+        if sums.len() != cfg.segments {
+            bail!("from_parts: {} segment blocks != segments {}", sums.len(), cfg.segments);
+        }
+        for (s, block) in sums.iter().enumerate() {
+            if block.len() != seg_block {
+                bail!(
+                    "from_parts: segment {s} has {} values != classes*seg_len {}",
+                    block.len(),
+                    seg_block
+                );
+            }
+        }
+        if counts.len() != cfg.classes {
+            bail!("from_parts: {} counts != classes {}", counts.len(), cfg.classes);
+        }
+        let mut store = ChvStore {
+            view: (0..cfg.segments).map(|_| vec![0.0; seg_block]).collect(),
+            packed: PackedChvStore::new(&cfg),
+            sums,
+            counts,
+            cfg,
+        };
+        store.refresh_all()?;
+        Ok(store)
+    }
+
+    /// Recompute the INT8 view (and its packed mirror) of every class row
+    /// from the raw accumulators — the exact normalization `update`
+    /// applies per write.
+    fn refresh_all(&mut self) -> Result<()> {
+        let sl = self.cfg.seg_len();
+        for class in 0..self.cfg.classes {
+            let norm = self.counts[class].max(1) as f32;
+            for s in 0..self.cfg.segments {
+                let range = class * sl..(class + 1) * sl;
+                for (v, &acc) in self.view[s][range.clone()]
+                    .iter_mut()
+                    .zip(&self.sums[s][range.clone()])
+                {
+                    *v = (acc / norm).round_ties_even().clamp(-127.0, 127.0);
+                }
+                self.packed.write_row(class, s, &self.view[s][range])?;
+            }
+        }
+        Ok(())
+    }
+
     /// One class's row within segment `s` (INT8 view).
     pub fn class_segment(&self, class: usize, s: usize) -> &[f32] {
         let sl = self.cfg.seg_len();

@@ -1,0 +1,476 @@
+//! Durable knowledge store — the on-disk form of the learned class
+//! hypervectors.
+//!
+//! The paper's ODL story is that Clo-HDnn "updates **and stores** the
+//! learned knowledge in the form of class hypervectors"; this module makes
+//! that knowledge survive a process restart. The serialized state is the
+//! *training-true* form of [`ChvStore`]: the raw f32 accumulators (so
+//! learning continues exactly where it left off) plus the per-class bundle
+//! counts. The INT8 search view and the bit-packed INT1 mirror are
+//! **recomputed on load** and verified against a stored INT8 image, so a
+//! restored classifier is bit-identical to the one that was snapshotted —
+//! in both the scalar-L1 and packed-Hamming search modes.
+//!
+//! ## CLOK v1 layout (little-endian)
+//!
+//! ```text
+//! offset 0   magic      b"CLOK"
+//!        4   version    u32 (= 1)
+//!        8   checksum   u64 FNV-1a over every byte after this field
+//!       16   payload:
+//!            name_len   u16, then name bytes (config identity)
+//!            f1 f2 d1 d2 segments classes   u32 each
+//!            qbits      u8
+//!            scale_x scale_q mean_absdiff   f32 each
+//!            counts     classes × u64
+//!            view       segments × classes × seg_len × i8   (verification image)
+//!            sums       segments × classes × seg_len × f32  (training state)
+//! ```
+//!
+//! ## Atomic write-rename
+//!
+//! [`save`] writes the whole image to a sibling `<file>.tmp`, fsyncs, then
+//! `rename`s over the target and (on unix) fsyncs the directory entry — so
+//! a crash mid-save can never corrupt the last good checkpoint, and a save
+//! that returned success survives power loss: the loader only ever reads
+//! the target path, and a leftover partial `.tmp` is simply overwritten by
+//! the next save.
+
+use crate::config::HdConfig;
+use crate::hdc::chv::ChvStore;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// File magic of a knowledge checkpoint.
+pub const MAGIC: &[u8; 4] = b"CLOK";
+/// Current format version.
+pub const VERSION: u32 = 1;
+
+/// FNV-1a 64-bit — the integrity checksum over the payload bytes.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Do two configs quantize identically? Geometry alone is not enough to
+/// serve a checkpoint: CHVs bundled under one `(qbits, scale_x, scale_q)`
+/// triple are incommensurable with queries quantized/encoded under
+/// another — restore would succeed and then silently misclassify.
+pub fn calibration_matches(a: &HdConfig, b: &HdConfig) -> bool {
+    a.qbits == b.qbits && a.scale_x == b.scale_x && a.scale_q == b.scale_q
+}
+
+/// Do two configs describe the same knowledge geometry? (Restore refuses a
+/// checkpoint whose encoder/AM shape differs from the serving backend's.)
+pub fn compatible(a: &HdConfig, b: &HdConfig) -> bool {
+    a.f1 == b.f1
+        && a.f2 == b.f2
+        && a.d1 == b.d1
+        && a.d2 == b.d2
+        && a.segments == b.segments
+        && a.classes == b.classes
+}
+
+/// Serialize a store to the CLOK v1 byte image.
+pub fn to_bytes(store: &ChvStore) -> Vec<u8> {
+    let cfg = store.cfg();
+    let seg_block = cfg.classes * cfg.seg_len();
+    let mut payload = Vec::with_capacity(64 + cfg.classes * 8 + cfg.segments * seg_block * 5);
+    let name = cfg.name.as_bytes();
+    payload.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    payload.extend_from_slice(name);
+    for v in [cfg.f1, cfg.f2, cfg.d1, cfg.d2, cfg.segments, cfg.classes] {
+        payload.extend_from_slice(&(v as u32).to_le_bytes());
+    }
+    payload.push(cfg.qbits);
+    for v in [cfg.scale_x, cfg.scale_q, cfg.mean_absdiff] {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    for c in 0..cfg.classes {
+        payload.extend_from_slice(&store.count(c).to_le_bytes());
+    }
+    // the INT8 view (integral f32 in [-127, 127] by construction) — stored
+    // so the loader can verify its recomputed normalization bit for bit
+    for s in 0..cfg.segments {
+        for &v in store.segment(s) {
+            payload.push(v as i8 as u8);
+        }
+    }
+    for s in 0..cfg.segments {
+        for &v in store.sums_segment(s) {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let mut out = Vec::with_capacity(16 + payload.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Deserialize and verify a CLOK v1 image: checksum, shape, and the
+/// recomputed-view-equals-stored-view bit-identity check. The packed INT1
+/// mirror is rebuilt from the recomputed view (never trusted from disk).
+pub fn from_bytes(bytes: &[u8]) -> Result<ChvStore> {
+    if bytes.len() < 16 {
+        bail!("knowledge file too short ({} bytes)", bytes.len());
+    }
+    if &bytes[0..4] != MAGIC {
+        bail!("bad knowledge magic (not a CLOK file)");
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != VERSION {
+        bail!("unsupported knowledge version {version} (expected {VERSION})");
+    }
+    let checksum = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let payload = &bytes[16..];
+    let actual = fnv1a64(payload);
+    if actual != checksum {
+        bail!(
+            "knowledge checksum mismatch: stored {checksum:#018x}, computed {actual:#018x} \
+             (file corrupt or partially written)"
+        );
+    }
+    let mut cur = crate::util::Cursor::new(payload);
+    let name_len = cur.u16()? as usize;
+    let name = String::from_utf8(cur.take(name_len)?.to_vec())
+        .context("knowledge config name is not utf-8")?;
+    let f1 = cur.u32()? as usize;
+    let f2 = cur.u32()? as usize;
+    let d1 = cur.u32()? as usize;
+    let d2 = cur.u32()? as usize;
+    let segments = cur.u32()? as usize;
+    let classes = cur.u32()? as usize;
+    let qbits = cur.u8()?;
+    let scale_x = cur.f32()?;
+    let scale_q = cur.f32()?;
+    let mean_absdiff = cur.f32()?;
+    let cfg = HdConfig {
+        name,
+        f1,
+        f2,
+        d1,
+        d2,
+        segments,
+        classes,
+        qbits,
+        scale_x,
+        scale_q,
+        mean_absdiff,
+        batches: vec![1],
+        image: false,
+    };
+    cfg.validate()
+        .context("knowledge header carries an out-of-envelope config")?;
+    let seg_block = cfg.classes * cfg.seg_len();
+    let mut counts = Vec::with_capacity(classes);
+    for _ in 0..classes {
+        counts.push(cur.u64()?);
+    }
+    let mut view_i8 = Vec::with_capacity(segments);
+    for _ in 0..segments {
+        view_i8.push(cur.take(seg_block)?.to_vec());
+    }
+    let mut sums = Vec::with_capacity(segments);
+    for _ in 0..segments {
+        let mut block = Vec::with_capacity(seg_block);
+        for _ in 0..seg_block {
+            block.push(cur.f32()?);
+        }
+        sums.push(block);
+    }
+    cur.finish()?;
+    let store = ChvStore::from_parts(cfg, sums, counts)?;
+    // bit-identity gate: the view recomputed from (sums, counts) must equal
+    // the stored INT8 image element for element — catches normalization
+    // drift between writer and reader versions, not just bit rot
+    for (s, stored) in view_i8.iter().enumerate() {
+        for (i, (&rebuilt, &disk)) in store.segment(s).iter().zip(stored).enumerate() {
+            if rebuilt as i8 != disk as i8 {
+                bail!(
+                    "knowledge view mismatch at segment {s} element {i}: \
+                     recomputed {} != stored {} (incompatible normalization)",
+                    rebuilt as i8,
+                    disk as i8
+                );
+            }
+        }
+    }
+    Ok(store)
+}
+
+/// The sibling temp path `save` stages into before the atomic rename.
+pub fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Atomically persist a store: write `<path>.tmp`, fsync, rename over
+/// `path`. The last good checkpoint is never in a torn state.
+pub fn save(store: &ChvStore, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create snapshot dir {}", parent.display()))?;
+        }
+    }
+    let bytes = to_bytes(store);
+    let tmp = tmp_path(path);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(&bytes)?;
+        f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+    // the rename itself must be durable before success is reported: fsync
+    // the directory entry, or a crash right after "snapshot ok" could roll
+    // the file back to the previous checkpoint
+    #[cfg(unix)]
+    {
+        let dir = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p,
+            _ => Path::new("."),
+        };
+        std::fs::File::open(dir)
+            .and_then(|d| d.sync_all())
+            .with_context(|| format!("fsync snapshot dir {}", dir.display()))?;
+    }
+    Ok(())
+}
+
+/// Load and verify a knowledge checkpoint. Only ever reads `path` itself —
+/// a leftover partial `.tmp` from a crashed save is ignored.
+pub fn load(path: impl AsRef<Path>) -> Result<ChvStore> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("read knowledge file {}", path.display()))?;
+    from_bytes(&bytes).with_context(|| format!("parse knowledge file {}", path.display()))
+}
+
+/// Summary of a checkpoint on disk (the `clo_hdnn info --knowledge` view).
+#[derive(Clone, Debug)]
+pub struct KnowledgeInfo {
+    pub config: HdConfig,
+    pub trained_classes: usize,
+    pub total_learns: u64,
+    pub file_bytes: usize,
+}
+
+/// Load a checkpoint and summarize it (also fully verifies it: checksum,
+/// shapes, view bit-identity).
+pub fn inspect(path: impl AsRef<Path>) -> Result<KnowledgeInfo> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("read knowledge file {}", path.display()))?;
+    let store = from_bytes(&bytes)
+        .with_context(|| format!("parse knowledge file {}", path.display()))?;
+    Ok(KnowledgeInfo {
+        trained_classes: store.trained_classes(),
+        total_learns: store.total_learns(),
+        config: store.cfg().clone(),
+        file_bytes: bytes.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+
+    fn tiny() -> HdConfig {
+        HdConfig::synthetic("t", 8, 8, 32, 32, 8, 10)
+    }
+
+    fn trained_store(rng: &mut crate::util::Rng, updates: usize) -> ChvStore {
+        let cfg = tiny();
+        let mut store = ChvStore::new(cfg.clone());
+        for _ in 0..updates {
+            let q = gen::int8_vec(rng, cfg.dim());
+            let class = rng.below(cfg.classes);
+            let sign = if rng.below(5) == 0 { -1.0 } else { 1.0 };
+            store.update(class, &q, sign).unwrap();
+        }
+        store
+    }
+
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("clo_hdnn_knowledge_{name}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn prop_roundtrip_is_bit_identical() {
+        forall(15, 0xD01, |rng| {
+            let store = trained_store(rng, 1 + rng.below(12));
+            let bytes = to_bytes(&store);
+            let back = from_bytes(&bytes).unwrap();
+            let cfg = store.cfg();
+            assert_eq!(back.cfg().name, cfg.name);
+            for c in 0..cfg.classes {
+                assert_eq!(back.count(c), store.count(c), "count class {c}");
+                assert_eq!(back.class_hv(c), store.class_hv(c), "view class {c}");
+            }
+            for s in 0..cfg.segments {
+                assert_eq!(
+                    back.sums_segment(s),
+                    store.sums_segment(s),
+                    "raw sums segment {s}"
+                );
+            }
+            // the packed INT1 mirror is rebuilt on load, bit-identical
+            assert_eq!(back.packed(), store.packed());
+            assert_eq!(back.total_learns(), store.total_learns());
+        });
+    }
+
+    #[test]
+    fn learning_continues_identically_after_roundtrip() {
+        // the warm-restart property at the store level: one more update on
+        // the original and on the restored copy lands bit-identically
+        let mut rng = crate::util::Rng::new(0xD02);
+        let mut store = trained_store(&mut rng, 6);
+        let mut back = from_bytes(&to_bytes(&store)).unwrap();
+        let q = gen::int8_vec(&mut rng, store.cfg().dim());
+        store.update(3, &q, 1.0).unwrap();
+        back.update(3, &q, 1.0).unwrap();
+        assert_eq!(store.class_hv(3), back.class_hv(3));
+        assert_eq!(store.packed(), back.packed());
+    }
+
+    #[test]
+    fn checksum_catches_any_flipped_byte() {
+        let mut rng = crate::util::Rng::new(0xD03);
+        let store = trained_store(&mut rng, 4);
+        let bytes = to_bytes(&store);
+        // flip a few sampled positions across header and payload
+        for &pos in &[16usize, 40, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x40;
+            assert!(from_bytes(&bad).is_err(), "flip at {pos} went undetected");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_truncation_and_trailing() {
+        let mut rng = crate::util::Rng::new(0xD04);
+        let store = trained_store(&mut rng, 3);
+        let bytes = to_bytes(&store);
+
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(from_bytes(&bad).unwrap_err().to_string().contains("magic"));
+
+        let mut bad = bytes.clone();
+        bad[4] = 99;
+        assert!(from_bytes(&bad).unwrap_err().to_string().contains("version"));
+
+        assert!(from_bytes(&bytes[..bytes.len() / 2]).is_err());
+        assert!(from_bytes(&bytes[..10]).is_err());
+
+        let mut bad = bytes.clone();
+        bad.extend_from_slice(&[0, 0, 0, 0]);
+        assert!(from_bytes(&bad).is_err(), "trailing bytes must be rejected");
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let dir = tmp_dir("roundtrip");
+        let path = dir.join("k.bin");
+        let mut rng = crate::util::Rng::new(0xD05);
+        let store = trained_store(&mut rng, 8);
+        save(&store, &path).unwrap();
+        assert!(!tmp_path(&path).exists(), "tmp must be renamed away");
+        let back = load(&path).unwrap();
+        assert_eq!(back.packed(), store.packed());
+        let info = inspect(&path).unwrap();
+        assert_eq!(info.trained_classes, store.trained_classes());
+        assert_eq!(info.total_learns, store.total_learns());
+        assert!(info.file_bytes > 0);
+    }
+
+    #[test]
+    fn partial_tmp_file_never_shadows_last_good_checkpoint() {
+        // crash-safety: a torn .tmp from a crashed save sits next to the
+        // checkpoint; the loader ignores it and the next save replaces it
+        let dir = tmp_dir("crash");
+        let path = dir.join("k.bin");
+        let mut rng = crate::util::Rng::new(0xD06);
+        let store = trained_store(&mut rng, 5);
+        save(&store, &path).unwrap();
+        std::fs::write(tmp_path(&path), b"CLOK\x01\x00\x00\x00partial-garbage").unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.packed(), store.packed(), "good checkpoint survived");
+        // the next save just overwrites the torn tmp
+        save(&back, &path).unwrap();
+        assert!(!tmp_path(&path).exists());
+        assert!(load(&path).is_ok());
+    }
+
+    #[test]
+    fn from_parts_rejects_bad_shapes() {
+        let cfg = tiny();
+        let seg_block = cfg.classes * cfg.seg_len();
+        let good_sums: Vec<Vec<f32>> =
+            (0..cfg.segments).map(|_| vec![0.0; seg_block]).collect();
+        assert!(ChvStore::from_parts(cfg.clone(), good_sums[1..].to_vec(), vec![
+            0;
+            cfg.classes
+        ])
+        .is_err());
+        let mut short = good_sums.clone();
+        short[0].pop();
+        assert!(ChvStore::from_parts(cfg.clone(), short, vec![0; cfg.classes]).is_err());
+        assert!(
+            ChvStore::from_parts(cfg.clone(), good_sums.clone(), vec![0; 3]).is_err()
+        );
+        assert!(ChvStore::from_parts(cfg, good_sums, vec![0; 10]).is_ok());
+    }
+
+    #[test]
+    fn compatible_checks_geometry_only() {
+        let a = tiny();
+        let mut b = tiny();
+        b.name = "other-name".into();
+        b.scale_x = 0.25; // quantization knobs are not geometry
+        assert!(compatible(&a, &b));
+        b.classes = 5;
+        assert!(!compatible(&a, &b));
+    }
+
+    #[test]
+    fn calibration_matches_checks_quantization_knobs() {
+        let a = tiny();
+        let mut b = tiny();
+        b.name = "other-name".into();
+        b.mean_absdiff = 99.0; // early-exit tuning, not quantization
+        assert!(calibration_matches(&a, &b));
+        for mutate in [
+            (|c: &mut HdConfig| c.scale_x = 0.25) as fn(&mut HdConfig),
+            |c: &mut HdConfig| c.scale_q = 2.0,
+            |c: &mut HdConfig| c.qbits = 4,
+        ] {
+            let mut c = tiny();
+            mutate(&mut c);
+            assert!(!calibration_matches(&a, &c));
+        }
+    }
+
+    #[test]
+    fn fnv_vector() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

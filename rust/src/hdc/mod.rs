@@ -12,6 +12,7 @@ pub mod chv;
 pub mod classifier;
 pub mod distance;
 pub mod encoder;
+pub mod knowledge;
 pub mod packed;
 pub mod progressive;
 pub mod quantize;

@@ -259,7 +259,11 @@ impl PackedHv {
 /// — bundling stays INT8, only the searched image is INT1 — so every row
 /// always equals `pack_signs` of the corresponding INT8 view row (including
 /// the all-zero row of an untrained class, which binarizes to all +1).
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` compares the full packed image word for word — the check the
+/// durable knowledge store's warm-restart tests use to pin "mirror rebuilt
+/// on load, bit-identical".
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PackedChvStore {
     classes: usize,
     segments: usize,

@@ -19,7 +19,9 @@
 //!
 //! The public API a downstream user touches: [`runtime::NativeBackend`] (or
 //! `runtime::Engine` with `--features pjrt`), [`hdc::HdClassifier`] +
-//! [`coordinator::Coordinator`] for serving/learning, [`cl::ClHarness`] for
+//! [`coordinator::Coordinator`] for serving/learning, [`serve::Server`] +
+//! [`serve::Client`] for the TCP wire protocol, [`hdc::knowledge`] for
+//! durable class-hypervector checkpoints, [`cl::ClHarness`] for
 //! continual-learning experiments, [`data::synthetic`] for hermetic
 //! workloads, and [`sim::Chip`] for cycle/energy estimates.
 
@@ -33,6 +35,7 @@ pub mod fifo;
 pub mod hdc;
 pub mod isa;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod wcfe;

@@ -5,7 +5,11 @@
 //!   infer   --config <name>      progressive inference over the test set
 //!   cl-run  --config <name>      continual-learning experiment (Fig.9 row)
 //!   sim     --config <name>      chip latency/energy report (Fig.10)
-//!   serve   --config <name>      Poisson-traffic serving demo
+//!   serve   --config <name>      Poisson-traffic serving demo, or with
+//!                                --listen <addr> a TCP server speaking the
+//!                                length-prefixed wire protocol
+//!   loadgen --connect <addr>     concurrent-client load generator against a
+//!                                live server -> BENCH_serve.json
 //!   bench   --config <name>      packed-vs-scalar perf harness -> BENCH_classifier.json
 //!   asm     <file>               assemble + disassemble an ISA program
 //!
@@ -41,8 +45,17 @@ fn main() {
     }
 }
 
+/// Boolean flags the CLI understands: registered so the parser never
+/// swallows a following positional/value token as their "value".
+const BOOL_FLAGS: &[&str] = &[
+    "quick",
+    "no-restore",
+    "allow-remote-snapshot-paths",
+    "snapshot-default",
+];
+
 fn run() -> Result<()> {
-    let args = Args::from_env();
+    let args = Args::from_env_with_bools(BOOL_FLAGS);
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "info" => cmd_info(&args),
@@ -50,6 +63,7 @@ fn run() -> Result<()> {
         "cl-run" => cmd_cl_run(&args),
         "sim" => cmd_sim(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "bench" => cmd_bench(&args),
         "asm" => cmd_asm(&args),
         _ => {
@@ -59,7 +73,7 @@ fn run() -> Result<()> {
     }
 }
 
-const HELP: &str = "clo-hdnn <info|infer|cl-run|sim|serve|bench|asm> [flags]
+const HELP: &str = "clo-hdnn <info|infer|cl-run|sim|serve|loadgen|bench|asm> [flags]
   --artifacts <dir>   artifact directory (default ./artifacts)
   --backend <name>    native (default, pure Rust) or pjrt (needs --features pjrt)
   --config <name>     HD config: tiny|isolet|ucihar (built-in) or any manifest config
@@ -74,6 +88,27 @@ const HELP: &str = "clo-hdnn <info|infer|cl-run|sim|serve|bench|asm> [flags]
   --samples <n>       evaluation sample cap
   --tasks <n>         CL tasks (default 5)
   --voltage <v>       DVFS point for sim (default 0.9)
+
+serve flags: --listen <host:port> switches from the Poisson demo to the TCP
+  wire-protocol server; --snapshot <file> (default knowledge checkpoint,
+  auto-restored on startup when it exists — suppress with --no-restore),
+  --snapshot-every <n> (auto-snapshot cadence in learns; default 0 = off),
+  --restore <file> (explicit warm-start checkpoint), --learn <n> (pre-learn
+  n synthetic samples; default 0 in listen mode), --duration <secs> (serve
+  for a bounded time with a graceful shutdown flush; default 0 = forever —
+  a killed process keeps at most --snapshot-every learns unsaved),
+  --allow-remote-snapshot-paths (honor client-supplied Snapshot paths; off
+  by default — the socket is unauthenticated)
+
+loadgen flags: --connect <host:port> (required), --clients <n> (default 4),
+  --requests <n> per client (default 200), --learn-frac <f> (default 0.25),
+  --search default|l1|packed, --out <file> (default BENCH_serve.json),
+  --snapshot-default (ask the server to checkpoint to its configured
+  default at the end), --snapshot-out <file> (checkpoint to an explicit
+  server-side path; needs --allow-remote-snapshot-paths on the server),
+  --per-class <n> (synthetic workload size, must match the server's)
+
+info flags: --knowledge <file> verifies + summarizes a knowledge checkpoint
 
 bench flags: --config tiny|isolet|ucihar|all, --quick (small sweep),
   --out <file> (default BENCH_classifier.json), --iters/--warmup,
@@ -101,8 +136,8 @@ fn search_mode(args: &Args) -> Result<SearchMode> {
 
 fn policy(args: &Args) -> Result<ProgressiveSearch> {
     Ok(ProgressiveSearch {
-        tau: args.f64_or("tau", 0.5) as f32,
-        min_segments: args.usize_or("min-seg", 1),
+        tau: args.f64_or("tau", 0.5)? as f32,
+        min_segments: args.usize_or("min-seg", 1)?,
         mode: search_mode(args)?,
     })
 }
@@ -128,7 +163,7 @@ fn load_workload(
         Ok((cfg, train, test, Some(m)))
     } else {
         let cfg = synthetic::config(cfg_name)?;
-        let per_class = args.usize_or("per-class", 40);
+        let per_class = args.usize_or("per-class", 40)?;
         let (train, test) = synthetic::blobs(&cfg, per_class, 10, 17);
         Ok((cfg, train, test, None))
     }
@@ -136,7 +171,7 @@ fn load_workload(
 
 /// The `--threads` budget for in-call backend parallelism. `0` (the
 /// default) means auto: `CLO_HDNN_THREADS` when set, else all cores.
-fn threads_arg(args: &Args) -> usize {
+fn threads_arg(args: &Args) -> Result<usize> {
     args.usize_or("threads", 0)
 }
 
@@ -155,7 +190,7 @@ fn native_backend(
     train: &Dataset,
     args: &Args,
 ) -> Result<NativeBackend> {
-    let threads = threads_arg(args);
+    let threads = threads_arg(args)?;
     let kernel = encode_kernel_arg(args)?;
     if let Some(m) = manifest {
         if m.dir.join(format!("hd_factors_{}.bin", cfg.name)).exists() {
@@ -183,6 +218,26 @@ fn native_backend(
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
+    // knowledge-checkpoint inspection: verify (magic, checksum, shapes,
+    // view bit-identity) and summarize, exiting nonzero on corruption
+    if let Some(path) = args.get("knowledge") {
+        let info = clo_hdnn::hdc::knowledge::inspect(path)?;
+        let c = &info.config;
+        println!("knowledge checkpoint {path} ({} bytes): OK", info.file_bytes);
+        println!(
+            "  config {:10} F={:<5} D={:<5} classes={:<4} segments={}",
+            c.name,
+            c.features(),
+            c.dim(),
+            c.classes,
+            c.segments
+        );
+        println!(
+            "  trained classes {}/{} | total learns {}",
+            info.trained_classes, c.classes, info.total_learns
+        );
+        return Ok(());
+    }
     let dir = artifacts_dir(args);
     if !dir.join("manifest.json").exists() {
         println!(
@@ -221,6 +276,15 @@ fn cmd_info(args: &Args) -> Result<()> {
         println!("  {:34} {:14} batch={}", e.name, e.kind, e.batch);
     }
     println!("datasets: {}", m.datasets.len());
+    if let Some(k) = &m.knowledge {
+        println!(
+            "knowledge: {} (config {}, auto-snapshot every {} learns){}",
+            k.file,
+            k.config,
+            k.every_learns,
+            if m.dir.join(&k.file).exists() { "" } else { " [not yet written]" }
+        );
+    }
     if let Some(w) = &m.wcfe {
         println!(
             "wcfe: channels={:?} fc_out={} clusters={} pretrain_acc={:.3} clustered_acc={:.3}",
@@ -263,10 +327,10 @@ fn cmd_infer_native(args: &Args) -> Result<()> {
     );
     let backend = native_backend(&cfg, manifest.as_ref(), &train, args)?;
     let mut cl = HdClassifier::new(Box::new(backend), pol);
-    let cap = args.usize_or("samples", 400);
+    let cap = args.usize_or("samples", 400)?;
 
     let t0 = std::time::Instant::now();
-    let trainer = Trainer { retrain_epochs: args.usize_or("retrain", 1) };
+    let trainer = Trainer { retrain_epochs: args.usize_or("retrain", 1)? };
     let idx: Vec<usize> = (0..train.n.min(cap * 4)).collect();
     trainer.train_indices(&mut cl, &train, &idx)?;
     println!("trained on {} samples in {}", idx.len(), fmt_secs(t0.elapsed().as_secs_f64()));
@@ -288,10 +352,10 @@ fn cmd_infer_pjrt(args: &Args) -> Result<()> {
     let mut cl = HdClassifier::new(Box::new(backend), policy(args)?);
     let m = &engine.manifest;
     let (train, test) = load_datasets(m, &cfg_name)?;
-    let cap = args.usize_or("samples", 400);
+    let cap = args.usize_or("samples", 400)?;
 
     let t0 = std::time::Instant::now();
-    let trainer = Trainer { retrain_epochs: args.usize_or("retrain", 1) };
+    let trainer = Trainer { retrain_epochs: args.usize_or("retrain", 1)? };
     let idx: Vec<usize> = (0..train.n.min(cap * 4)).collect();
     trainer.train_indices(&mut cl, &train, &idx)?;
     println!("trained on {} samples in {}", idx.len(), fmt_secs(t0.elapsed().as_secs_f64()));
@@ -331,15 +395,15 @@ fn cmd_cl_run(args: &Args) -> Result<()> {
 fn cmd_cl_run_native(args: &Args) -> Result<()> {
     let cfg_name = args.str_or("config", "tiny");
     let (cfg, train, test, manifest) = load_workload(args, &cfg_name)?;
-    let n_tasks = args.usize_or("tasks", 5).min(cfg.classes);
+    let n_tasks = args.usize_or("tasks", 5)?.min(cfg.classes);
     let stream = TaskStream::class_incremental(&train, n_tasks, 1);
     let mut harness = ClHarness::new(&train, &test, &stream);
-    harness.eval_cap = args.usize_or("samples", 200);
+    harness.eval_cap = args.usize_or("samples", 200)?;
 
     let backend = native_backend(&cfg, manifest.as_ref(), &train, args)?;
     let mut hd = HdLearner::new(
         HdClassifier::new(Box::new(backend), policy(args)?),
-        Trainer { retrain_epochs: args.usize_or("retrain", 1) },
+        Trainer { retrain_epochs: args.usize_or("retrain", 1)? },
     );
     let run = harness.run(&mut hd)?;
     report_cl_run(&run);
@@ -353,15 +417,15 @@ fn cmd_cl_run_pjrt(args: &Args) -> Result<()> {
     let mut engine = Engine::load(&dir)?;
     let cfg = engine.manifest.config(&cfg_name)?.clone();
     let (train, test) = load_datasets(&engine.manifest, &cfg_name)?;
-    let n_tasks = args.usize_or("tasks", 5).min(cfg.classes);
+    let n_tasks = args.usize_or("tasks", 5)?.min(cfg.classes);
     let stream = TaskStream::class_incremental(&train, n_tasks, 1);
     let mut harness = ClHarness::new(&train, &test, &stream);
-    harness.eval_cap = args.usize_or("samples", 200);
+    harness.eval_cap = args.usize_or("samples", 200)?;
 
     let backend = PjrtBackend::new(&mut engine, &cfg_name, 1)?;
     let mut hd = HdLearner::new(
         HdClassifier::new(Box::new(backend), policy(args)?),
-        Trainer { retrain_epochs: args.usize_or("retrain", 1) },
+        Trainer { retrain_epochs: args.usize_or("retrain", 1)? },
     );
     let run = harness.run(&mut hd)?;
     report_cl_run(&run);
@@ -372,7 +436,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let has_artifacts = dir.join("manifest.json").exists();
     let cfg_name = args.str_or("config", if has_artifacts { "cifar100" } else { "tiny" });
-    let v = args.f64_or("voltage", 0.9);
+    let v = args.f64_or("voltage", 0.9)?;
     let (cfg, manifest) = if has_artifacts {
         let m = Manifest::load(&dir)?;
         (m.config(&cfg_name)?.clone(), Some(m))
@@ -421,43 +485,96 @@ fn cmd_sim(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let cfg_name = args.str_or("config", "tiny");
+/// The knowledge wiring for serving: explicit flags win; the manifest's
+/// `knowledge` section supplies defaults only when `manifest_defaults` is
+/// set (the long-lived `--listen` server — the throwaway Poisson demo
+/// must never silently restore/overwrite a production checkpoint); an
+/// existing default checkpoint warm-restarts automatically unless
+/// `--no-restore`.
+fn knowledge_opts(
+    args: &Args,
+    manifest: Option<&Manifest>,
+    cfg_name: &str,
+    manifest_defaults: bool,
+) -> Result<(Option<std::path::PathBuf>, usize, Option<std::path::PathBuf>)> {
+    let manifest = manifest.filter(|_| manifest_defaults);
+    let manifest_k = manifest.and_then(|m| m.knowledge_path(cfg_name));
+    let snapshot_path = args
+        .get("snapshot")
+        .map(std::path::PathBuf::from)
+        .or(manifest_k);
+    let manifest_every = manifest
+        .and_then(|m| m.knowledge.as_ref())
+        .filter(|k| k.config == cfg_name)
+        .map(|k| k.every_learns)
+        .unwrap_or(0);
+    let snapshot_every = args.usize_or("snapshot-every", manifest_every)?;
+    let restore_path = match args.get("restore") {
+        Some(p) => Some(std::path::PathBuf::from(p)),
+        None if args.flag("no-restore") => None,
+        None => snapshot_path.clone().filter(|p| p.exists()),
+    };
+    Ok((snapshot_path, snapshot_every, restore_path))
+}
+
+/// Build the serving [`CoordinatorOptions`] (shared by the Poisson demo
+/// and the TCP listen mode; only the latter takes the manifest's
+/// knowledge defaults).
+fn serve_coordinator_opts(
+    args: &Args,
+    cfg: &HdConfig,
+    cfg_name: &str,
+    manifest: Option<&Manifest>,
+    manifest_knowledge_defaults: bool,
+) -> Result<CoordinatorOptions> {
     let dir = artifacts_dir(args);
-    let (cfg, train, test, manifest) = load_workload(args, &cfg_name)?;
     // Artifact factors only when they actually exist — otherwise fall back
     // to seeded factors, matching native_backend()'s behavior for infer.
     let has_factors =
         manifest.is_some() && dir.join(format!("hd_factors_{cfg_name}.bin")).exists();
     let backend = match args.str_or("backend", "native").as_str() {
         "native" if has_factors => {
-            BackendSpec::NativeArtifacts { artifacts: dir, config: cfg_name.clone() }
+            BackendSpec::NativeArtifacts { artifacts: dir, config: cfg_name.to_string() }
         }
         "native" => BackendSpec::Native { cfg: cfg.clone(), seed: 7 },
         #[cfg(feature = "pjrt")]
-        "pjrt" => BackendSpec::Pjrt { artifacts: dir, config: cfg_name.clone() },
+        "pjrt" => BackendSpec::Pjrt { artifacts: dir, config: cfg_name.to_string() },
         other => anyhow::bail!("unknown --backend '{other}' ({BACKENDS})"),
     };
-    let mode = search_mode(args)?;
-    println!("serving config {cfg_name} on {backend:?} | search {mode:?}");
-    let opts = CoordinatorOptions {
+    let (snapshot_path, snapshot_every, restore_path) =
+        knowledge_opts(args, manifest, cfg_name, manifest_knowledge_defaults)?;
+    Ok(CoordinatorOptions {
         backend,
-        tau: args.f64_or("tau", 0.5) as f32,
-        min_segments: args.usize_or("min-seg", 1),
-        search_mode: mode,
+        tau: args.f64_or("tau", 0.5)? as f32,
+        min_segments: args.usize_or("min-seg", 1)?,
+        search_mode: search_mode(args)?,
         mode_policy: Default::default(),
         queue_depth: 256,
-        threads: threads_arg(args),
-    };
+        threads: threads_arg(args)?,
+        snapshot_path,
+        snapshot_every,
+        restore_path,
+    })
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    if args.get("listen").is_some() {
+        return cmd_serve_listen(args);
+    }
+    let cfg_name = args.str_or("config", "tiny");
+    let (cfg, train, test, manifest) = load_workload(args, &cfg_name)?;
+    let opts = serve_coordinator_opts(args, &cfg, &cfg_name, manifest.as_ref(), false)?;
+    let mode = opts.search_mode;
+    println!("serving config {cfg_name} on {:?} | search {mode:?}", opts.backend);
     let coord = Coordinator::start(opts)?;
     // online learning phase
-    let learn_n = args.usize_or("learn", 400).min(train.n);
+    let learn_n = args.usize_or("learn", 400)?.min(train.n);
     for i in 0..learn_n {
         coord.call(Payload::Learn(train.sample(i).to_vec(), train.label(i)))?;
     }
     // serving phase with Poisson arrivals
-    let n = args.usize_or("samples", 200).min(test.n);
-    let rate = args.f64_or("rate", 200.0);
+    let n = args.usize_or("samples", 200)?.min(test.n);
+    let rate = args.f64_or("rate", 200.0)?;
     let mut rng = Rng::new(9);
     let mut metrics = clo_hdnn::coordinator::ServeMetrics::default();
     let mut correct = 0usize;
@@ -487,6 +604,248 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `clo_hdnn serve --listen <addr>`: the TCP wire-protocol server.
+/// Learned knowledge survives restarts: an existing `--snapshot` file (or
+/// the manifest's `knowledge` checkpoint) is restored on startup, learns
+/// auto-checkpoint every `--snapshot-every` bundles, and shutdown flushes
+/// whatever is unsaved.
+fn cmd_serve_listen(args: &Args) -> Result<()> {
+    use clo_hdnn::serve::{ServeOptions, Server};
+
+    let listen = args.str_or("listen", "127.0.0.1:7311");
+    let cfg_name = args.str_or("config", "tiny");
+    // the long-lived server only needs datasets for the optional pre-learn
+    // phase (default 0) — don't load/generate the whole workload otherwise
+    let learn_arg = args.usize_or("learn", 0)?;
+    let (cfg, manifest, train) = if learn_arg > 0 {
+        let (cfg, train, _test, manifest) = load_workload(args, &cfg_name)?;
+        (cfg, manifest, Some(train))
+    } else {
+        let dir = artifacts_dir(args);
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir)?;
+            (m.config(&cfg_name)?.clone(), Some(m), None)
+        } else {
+            (synthetic::config(&cfg_name)?, None, None)
+        }
+    };
+    let opts = serve_coordinator_opts(args, &cfg, &cfg_name, manifest.as_ref(), true)?;
+    println!(
+        "serving config {cfg_name} on {:?} | search {:?} | snapshot {:?} (every {} learns) | restore {:?}",
+        opts.backend, opts.search_mode, opts.snapshot_path, opts.snapshot_every, opts.restore_path
+    );
+    let coord = Coordinator::start(opts)?;
+    // optional pre-learn phase (default 0: knowledge comes from the
+    // checkpoint and from Learn traffic)
+    if let Some(train) = &train {
+        let learn_n = learn_arg.min(train.n);
+        for i in 0..learn_n {
+            let r = coord.call(Payload::Learn(train.sample(i).to_vec(), train.label(i)))?;
+            if let Some(e) = r.error {
+                anyhow::bail!("pre-learn failed: {e}");
+            }
+        }
+        println!("pre-learned {learn_n} samples");
+    }
+    let serve_opts = ServeOptions {
+        allow_snapshot_paths: args.flag("allow-remote-snapshot-paths"),
+        ..ServeOptions::default()
+    };
+    let server = Server::start(&listen, coord, serve_opts)?;
+    println!("listening on {}", server.local_addr());
+    let duration = args.f64_or("duration", 0.0)?;
+    if duration > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(duration));
+        let (served, wire_errors, learns) = server.counters();
+        println!(
+            "shutting down after {duration}s: served {served} frames | {learns} learns | {wire_errors} wire errors"
+        );
+        server.stop(); // joins connections, flushes the shutdown snapshot
+    } else {
+        // serve until killed
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    Ok(())
+}
+
+/// `clo_hdnn loadgen`: drive a live TCP server with N concurrent client
+/// threads mixing Infer and Learn traffic over the deterministic synthetic
+/// workload, then report throughput + latency percentiles and write
+/// `BENCH_serve.json`. With `--learn-frac 0` the request stream is fully
+/// deterministic, so accuracy comparisons across a server restart are
+/// exact — the warm-restart CI gate relies on that.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use clo_hdnn::coordinator::ServeMetrics;
+    use clo_hdnn::serve::Client;
+    use clo_hdnn::util::json::Json;
+    use clo_hdnn::util::stats::Table;
+
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("loadgen needs --connect <host:port>"))?
+        .to_string();
+    let cfg_name = args.str_or("config", "tiny");
+    let cfg = synthetic::config(&cfg_name)?;
+    let per_class = args.usize_or("per-class", 40)?;
+    let (train, test) = synthetic::blobs(&cfg, per_class, 10, 17);
+    let clients = args.usize_or("clients", 4)?.max(1);
+    let requests = args.usize_or("requests", 200)?;
+    let learn_frac = args.f64_or("learn-frac", 0.25)?.clamp(0.0, 1.0);
+    let mode = match args.str_or("search", "default").as_str() {
+        "default" => None,
+        other => Some(SearchMode::parse(other)?),
+    };
+
+    println!(
+        "loadgen -> {addr}: {clients} clients x {requests} requests, learn-frac {learn_frac}, search {:?}",
+        mode
+    );
+    let t0 = std::time::Instant::now();
+    let results: Vec<Result<(ServeMetrics, usize, usize)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|t| {
+                let (addr, train, test) = (&addr, &train, &test);
+                s.spawn(move || -> Result<(ServeMetrics, usize, usize)> {
+                    let mut client = Client::connect(addr)?;
+                    let mut rng = Rng::new(0xC0FF_EE00 + t as u64);
+                    let mut m = ServeMetrics::default();
+                    let (mut correct, mut infers) = (0usize, 0usize);
+                    for i in 0..requests {
+                        // deterministic sample schedule: client t covers a
+                        // strided slice of the dataset
+                        let idx = (t + i * clients) % test.n;
+                        let q0 = std::time::Instant::now();
+                        if rng.uniform() < learn_frac {
+                            let j = (t + i * clients) % train.n;
+                            match client.learn(train.sample(j), train.label(j)) {
+                                Ok(()) => m.record_learn(q0.elapsed().as_secs_f64()),
+                                Err(_) => m.record_error(),
+                            }
+                        } else {
+                            match client.infer_mode(test.sample(idx), mode) {
+                                Ok(r) => {
+                                    m.record(
+                                        q0.elapsed().as_secs_f64(),
+                                        r.segments_used,
+                                        r.early_exit,
+                                        false,
+                                    );
+                                    infers += 1;
+                                    correct += usize::from(r.class == test.label(idx));
+                                }
+                                Err(_) => m.record_error(),
+                            }
+                        }
+                    }
+                    Ok((m, correct, infers))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("loadgen client thread panicked"))
+            .collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut metrics = ServeMetrics::default();
+    let (mut correct, mut infers) = (0usize, 0usize);
+    for r in results {
+        let (m, c, n) = r?;
+        metrics.merge(&m);
+        correct += c;
+        infers += n;
+    }
+    metrics.wall_s = wall_s;
+    let accuracy = if infers > 0 { correct as f64 / infers as f64 } else { f64::NAN };
+
+    let p = |q: f64| metrics.latency_percentile(q);
+    let mut table = Table::new(&["metric", "value"]);
+    table.row(&["requests".into(), format!("{}", metrics.total)]);
+    table.row(&["learns".into(), format!("{}", metrics.learns)]);
+    table.row(&["errors".into(), format!("{}", metrics.errors)]);
+    table.row(&["accuracy".into(), format!("{accuracy:.4}")]);
+    table.row(&["throughput".into(), format!("{:.1} req/s", metrics.throughput_rps())]);
+    table.row(&["p50".into(), fmt_secs(p(50.0))]);
+    table.row(&["p95".into(), fmt_secs(p(95.0))]);
+    table.row(&["p99".into(), fmt_secs(p(99.0))]);
+    table.print();
+
+    // end-of-run server-side actions: optional snapshot + stats
+    let mut control = Client::connect(&addr)?;
+    let snapshot_path = if args.flag("snapshot-default") {
+        // empty wire path = the server's configured default checkpoint
+        let written = control.snapshot(None)?;
+        println!("server checkpointed knowledge to {written}");
+        Some(written)
+    } else {
+        match args.get("snapshot-out") {
+            Some(path) => {
+                let written = control.snapshot(Some(path))?;
+                println!("server checkpointed knowledge to {written}");
+                Some(written)
+            }
+            None => None,
+        }
+    };
+    let server_stats = control.stats()?;
+    println!(
+        "server: served {} | learns {} | trained classes {} | snapshots {} | wire errors {}",
+        server_stats.served,
+        server_stats.learns,
+        server_stats.trained_classes,
+        server_stats.snapshots,
+        server_stats.wire_errors
+    );
+
+    let doc = Json::obj(vec![
+        ("version", Json::Num(1.0)),
+        ("config", Json::Str(cfg_name.clone())),
+        ("clients", Json::Num(clients as f64)),
+        ("requests_per_client", Json::Num(requests as f64)),
+        ("learn_frac", Json::Num(learn_frac)),
+        ("requests", Json::Num(metrics.total as f64)),
+        ("learns", Json::Num(metrics.learns as f64)),
+        ("infers", Json::Num(infers as f64)),
+        ("errors", Json::Num(metrics.errors as f64)),
+        ("accuracy", Json::Num(accuracy)),
+        ("wall_s", Json::Num(wall_s)),
+        ("throughput_rps", Json::Num(metrics.throughput_rps())),
+        (
+            "latency",
+            Json::obj(vec![
+                ("mean_s", Json::Num(metrics.mean_latency())),
+                ("p50_s", Json::Num(p(50.0))),
+                ("p95_s", Json::Num(p(95.0))),
+                ("p99_s", Json::Num(p(99.0))),
+            ]),
+        ),
+        (
+            "server",
+            Json::obj(vec![
+                ("served", Json::Num(server_stats.served as f64)),
+                ("wire_errors", Json::Num(server_stats.wire_errors as f64)),
+                ("learns", Json::Num(server_stats.learns as f64)),
+                (
+                    "trained_classes",
+                    Json::Num(server_stats.trained_classes as f64),
+                ),
+                ("snapshots", Json::Num(server_stats.snapshots as f64)),
+            ]),
+        ),
+        (
+            "snapshot_out",
+            snapshot_path.map(Json::Str).unwrap_or(Json::Null),
+        ),
+    ]);
+    let out_path = args.str_or("out", "BENCH_serve.json");
+    std::fs::write(&out_path, doc.dump())?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
 /// `clo_hdnn bench`: the packed-vs-scalar classifier perf harness. Runs
 /// encode / full-search / progressive sweeps on the synthetic configs
 /// through the NativeBackend, prints the stage tables, and writes a
@@ -507,8 +866,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let out_path = args.str_or("out", "BENCH_classifier.json");
     let (warmup, iters) = if quick { (1, 5) } else { (3, 25) };
     let bench = clo_hdnn::util::stats::Bench::new(
-        args.usize_or("warmup", warmup),
-        args.usize_or("iters", iters),
+        args.usize_or("warmup", warmup)?,
+        args.usize_or("iters", iters)?,
     );
     let taus: Vec<f32> = args
         .str_or("taus", if quick { "0.5" } else { "0.1,0.5,1.0,2.0" })
@@ -575,7 +934,7 @@ fn bench_encoder(
     }
     enc.calibrate(&calib, calib_n);
 
-    let pool = WorkerPool::new(threads_arg(args));
+    let pool = WorkerPool::new(threads_arg(args)?);
     let row_counts: &[usize] = if quick { &[1, 8] } else { &[1, 8, 32] };
     let max_rows = *row_counts.last().unwrap();
     let mut input = Vec::with_capacity(max_rows * feat);
@@ -664,13 +1023,13 @@ fn bench_config(
     use std::hint::black_box;
 
     let cfg = synthetic::config(name)?;
-    let per_class = args.usize_or("per-class", if quick { 6 } else { 20 });
+    let per_class = args.usize_or("per-class", if quick { 6 } else { 20 })?;
     let (train, test) = synthetic::blobs(&cfg, per_class, 4, 17);
     let backend = native_backend(&cfg, None, &train, args)?;
     let mut cl = HdClassifier::new(Box::new(backend), ProgressiveSearch::default());
     Trainer { retrain_epochs: 0 }.train_all(&mut cl, &train)?;
 
-    let n_q = args.usize_or("queries", if quick { 8 } else { 32 }).min(test.n).max(1);
+    let n_q = args.usize_or("queries", if quick { 8 } else { 32 })?.min(test.n).max(1);
     let queries: Vec<Vec<f32>> = (0..n_q).map(|i| test.sample(i).to_vec()).collect();
     let (d, classes) = (cfg.dim(), cfg.classes);
 

@@ -47,6 +47,19 @@ pub struct WcfeMeta {
     pub codebook: String,
 }
 
+/// Durable knowledge-store wiring: where the serving layer checkpoints the
+/// learned class hypervectors for a config (see `crate::hdc::knowledge`
+/// for the CLOK file format).
+#[derive(Clone, Debug)]
+pub struct KnowledgeMeta {
+    /// checkpoint file, relative to the artifact dir
+    pub file: String,
+    /// which manifest config the checkpoint belongs to
+    pub config: String,
+    /// auto-snapshot cadence (every N learns; 0 = explicit snapshots only)
+    pub every_learns: usize,
+}
+
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
@@ -54,6 +67,7 @@ pub struct Manifest {
     pub executables: BTreeMap<String, ExeMeta>,
     pub datasets: BTreeMap<String, DatasetMeta>,
     pub wcfe: Option<WcfeMeta>,
+    pub knowledge: Option<KnowledgeMeta>,
 }
 
 fn usize_arr(j: &Json) -> Vec<usize> {
@@ -161,7 +175,26 @@ impl Manifest {
             codebook: w.get("codebook").and_then(Json::as_str).unwrap_or("").to_string(),
         });
 
-        Ok(Manifest { dir, configs, executables, datasets, wcfe })
+        let knowledge = j.get("knowledge").map(|k| KnowledgeMeta {
+            file: k
+                .get("file")
+                .and_then(Json::as_str)
+                .unwrap_or("knowledge.clok")
+                .to_string(),
+            config: k.get("config").and_then(Json::as_str).unwrap_or("").to_string(),
+            every_learns: k.get("every_learns").and_then(Json::as_usize).unwrap_or(0),
+        });
+
+        Ok(Manifest { dir, configs, executables, datasets, wcfe, knowledge })
+    }
+
+    /// Absolute path of the knowledge checkpoint for `config`, when the
+    /// manifest wires one up for it.
+    pub fn knowledge_path(&self, config: &str) -> Option<PathBuf> {
+        self.knowledge
+            .as_ref()
+            .filter(|k| k.config == config)
+            .map(|k| self.dir.join(&k.file))
     }
 
     pub fn config(&self, name: &str) -> Result<&HdConfig> {
@@ -230,7 +263,9 @@ mod tests {
          "kind":"encode_full","batch":1,
          "inputs":[{"shape":[1,64],"dtype":"float32"}],"out":[1,1024]}],
       "datasets": [{"name":"ds_tiny_train","file":"d.bin","n":400,
-                    "dim":64,"classes":10}]
+                    "dim":64,"classes":10}],
+      "knowledge": {"file":"knowledge_tiny.clok","config":"tiny",
+                    "every_learns":256}
     }"#;
 
     #[test]
@@ -247,6 +282,14 @@ mod tests {
         assert_eq!(e.out, vec![1, 1024]);
         assert_eq!(m.dataset("ds_tiny_train").unwrap().n, 400);
         assert!(m.config("absent").is_err());
+        // knowledge section: checkpoint path resolves per config
+        let k = m.knowledge.as_ref().unwrap();
+        assert_eq!(k.every_learns, 256);
+        assert_eq!(
+            m.knowledge_path("tiny").unwrap(),
+            m.dir.join("knowledge_tiny.clok")
+        );
+        assert!(m.knowledge_path("other").is_none());
         // files don't exist -> check_files errors
         assert!(m.check_files().is_err());
     }

@@ -22,5 +22,5 @@ pub mod native;
 pub use backend::PjrtBackend;
 #[cfg(feature = "pjrt")]
 pub use engine::{Arg, Engine, Executable};
-pub use manifest::Manifest;
+pub use manifest::{KnowledgeMeta, Manifest};
 pub use native::NativeBackend;

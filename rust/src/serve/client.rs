@@ -1,0 +1,124 @@
+//! Blocking TCP client for the [`wire`](crate::serve::wire) protocol —
+//! what `clo_hdnn loadgen` drives and the integration tests talk through.
+
+use crate::hdc::SearchMode;
+use crate::serve::wire::{self, WireRequest, WireResponse, WireStats};
+use crate::Result;
+use anyhow::{bail, Context};
+use std::io::BufReader;
+use std::net::TcpStream;
+
+/// One classification reply over the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InferReply {
+    pub class: usize,
+    pub segments_used: usize,
+    pub early_exit: bool,
+}
+
+/// A synchronous connection: one in-flight request at a time, matched by id.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+            next_id: 1,
+        })
+    }
+
+    fn call(&mut self, req: WireRequest) -> Result<WireResponse> {
+        let id = req.id();
+        wire::write_frame(&mut self.writer, &req.encode())?;
+        loop {
+            match wire::read_frame(&mut self.reader, wire::MAX_FRAME)? {
+                wire::Frame::Idle => continue, // no read timeout set; defensive
+                wire::Frame::Eof => bail!("server closed the connection"),
+                wire::Frame::Payload(p) => {
+                    let resp = WireResponse::decode(&p)?;
+                    if resp.id() != id {
+                        bail!("response id {} != request id {id}", resp.id());
+                    }
+                    if let WireResponse::Error { msg, .. } = &resp {
+                        bail!("server error: {msg}");
+                    }
+                    return Ok(resp);
+                }
+            }
+        }
+    }
+
+    fn id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Classify with the server's default search mode (`mode: None`) or an
+    /// explicit per-request kernel.
+    pub fn infer_mode(
+        &mut self,
+        features: &[f32],
+        mode: Option<SearchMode>,
+    ) -> Result<InferReply> {
+        let id = self.id();
+        let mode = match mode {
+            None => wire::MODE_DEFAULT,
+            Some(SearchMode::L1Int8) => wire::MODE_L1,
+            Some(SearchMode::HammingPacked) => wire::MODE_PACKED,
+        };
+        match self.call(WireRequest::Infer { id, mode, features: features.to_vec() })? {
+            WireResponse::Infer { class, segments, early, .. } => Ok(InferReply {
+                class: class as usize,
+                segments_used: segments as usize,
+                early_exit: early,
+            }),
+            other => bail!("unexpected reply to infer: {other:?}"),
+        }
+    }
+
+    pub fn infer(&mut self, features: &[f32]) -> Result<InferReply> {
+        self.infer_mode(features, None)
+    }
+
+    /// Bundle a labeled sample into the server's knowledge store.
+    pub fn learn(&mut self, features: &[f32], class: usize) -> Result<()> {
+        let id = self.id();
+        match self.call(WireRequest::Learn {
+            id,
+            class: class as u32,
+            features: features.to_vec(),
+        })? {
+            WireResponse::Learn { .. } => Ok(()),
+            other => bail!("unexpected reply to learn: {other:?}"),
+        }
+    }
+
+    /// Ask the server to checkpoint its knowledge store; `None` uses the
+    /// server's configured default path. Returns the path written.
+    pub fn snapshot(&mut self, path: Option<&str>) -> Result<String> {
+        let id = self.id();
+        match self.call(WireRequest::Snapshot {
+            id,
+            path: path.unwrap_or("").to_string(),
+        })? {
+            WireResponse::Snapshot { path, .. } => Ok(path),
+            other => bail!("unexpected reply to snapshot: {other:?}"),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<WireStats> {
+        let id = self.id();
+        match self.call(WireRequest::Stats { id })? {
+            WireResponse::Stats { stats, .. } => Ok(stats),
+            other => bail!("unexpected reply to stats: {other:?}"),
+        }
+    }
+}

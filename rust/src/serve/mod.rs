@@ -1,0 +1,308 @@
+//! Zero-dependency TCP serving layer — the first over-the-wire workload.
+//!
+//! A [`Server`] binds a std `TcpListener`, accepts connections on a
+//! dedicated accept thread, and runs one lightweight thread per
+//! connection. Every connection decodes length-prefixed
+//! [`wire`] frames and forwards them as [`Payload`]s to the shared
+//! [`Coordinator`] — so concurrent clients multiplex onto the executor's
+//! existing MPSC queue and their bursts batch through the same greedy
+//! batcher in-process callers use (contiguous Learn runs still encode in
+//! one backend call). The coordinator keeps its leader/worker shape: the
+//! backend never leaves the executor thread; the serving layer only adds
+//! transport.
+//!
+//! Error containment mirrors the wire contract: a request that frames
+//! correctly but decodes badly gets an error *reply* and the connection
+//! lives on; only a torn frame header or an oversized length closes the
+//! connection (after a best-effort error frame). Server counters
+//! (`served`, `wire_errors`, `learns`) are process-wide atomics reported
+//! through the Stats opcode together with the coordinator's knowledge
+//! counters.
+
+pub mod client;
+pub mod wire;
+
+pub use client::{Client, InferReply};
+pub use wire::{WireRequest, WireResponse, WireStats};
+
+use crate::coordinator::{Coordinator, Payload};
+use crate::hdc::SearchMode;
+use crate::Result;
+use anyhow::Context;
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Serving knobs.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// per-frame payload cap (default [`wire::MAX_FRAME`])
+    pub max_frame: usize,
+    /// honor client-supplied Snapshot *paths*. Off by default: the wire
+    /// protocol is unauthenticated, and a remote path would be an
+    /// arbitrary-file-write primitive. When off, clients may still send an
+    /// empty path to checkpoint to the server's configured default.
+    pub allow_snapshot_paths: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { max_frame: wire::MAX_FRAME, allow_snapshot_paths: false }
+    }
+}
+
+/// Process-wide serving counters (lock-free; read by the Stats opcode).
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub served: AtomicU64,
+    pub wire_errors: AtomicU64,
+    pub learns: AtomicU64,
+}
+
+/// A running TCP server. Dropping (or calling [`Server::stop`]) shuts the
+/// accept loop down, joins every connection thread, and finally drops the
+/// coordinator — which drains its queue and runs the executor's shutdown
+/// snapshot flush.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<ServerStats>,
+}
+
+impl Server {
+    /// Bind `listen` (e.g. `127.0.0.1:0` for an ephemeral test port) and
+    /// start serving the coordinator over it.
+    pub fn start(listen: &str, coord: Coordinator, opts: ServeOptions) -> Result<Server> {
+        let listener = TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
+        // non-blocking accept: shutdown must never depend on the wakeup
+        // poke reaching the socket (it can't on e.g. a firewalled bind)
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(ServerStats::default());
+        let coord = Arc::new(coord);
+        let accept = {
+            let (stop, stats) = (stop.clone(), stats.clone());
+            std::thread::Builder::new()
+                .name("clo-hdnn-accept".into())
+                .spawn(move || accept_loop(listener, coord, stats, stop, opts))?
+        };
+        Ok(Server { addr, stop, accept: Some(accept), stats })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Counter snapshot: (served, wire_errors, learns).
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (
+            self.stats.served.load(Ordering::Relaxed),
+            self.stats.wire_errors.load(Ordering::Relaxed),
+            self.stats.learns.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Graceful shutdown: stop accepting, join connections, drop the
+    /// coordinator (which flushes the shutdown snapshot if configured).
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // the accept loop polls the stop flag (non-blocking accept), so
+        // this join is bounded even when no wakeup connection can land
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    coord: Arc<Coordinator>,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+    opts: ServeOptions,
+) {
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // nothing pending: nap briefly, then re-check the stop flag
+                std::thread::sleep(Duration::from_millis(25));
+                continue;
+            }
+            Err(_) => {
+                // transient accept error (e.g. ECONNABORTED): don't spin
+                std::thread::sleep(Duration::from_millis(25));
+                continue;
+            }
+        };
+        // accepted sockets may inherit the listener's non-blocking mode on
+        // some platforms; connections use blocking reads with a timeout
+        if stream.set_nonblocking(false).is_err() {
+            continue;
+        }
+        let (coord, stats, stop, opts) =
+            (coord.clone(), stats.clone(), stop.clone(), opts.clone());
+        match std::thread::Builder::new()
+            .name("clo-hdnn-conn".into())
+            .spawn(move || {
+                let _ = handle_conn(stream, &coord, &stats, &stop, &opts);
+            }) {
+            Ok(h) => conns.push(h),
+            Err(_) => continue,
+        }
+        conns.retain(|h| !h.is_finished());
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+    // `coord` (the last Arc once clients are gone) drops here: the
+    // executor drains, flushes its shutdown snapshot, and exits
+}
+
+/// One connection: read frame -> decode -> coordinator -> reply, until the
+/// client closes, the stream tears, or the server stops.
+fn handle_conn(
+    stream: TcpStream,
+    coord: &Coordinator,
+    stats: &ServerStats,
+    stop: &AtomicBool,
+    opts: &ServeOptions,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    // short read timeout so idle connections observe the stop flag
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let payload = match wire::read_frame(&mut reader, opts.max_frame) {
+            Ok(wire::Frame::Payload(p)) => p,
+            Ok(wire::Frame::Eof) => return Ok(()),
+            Ok(wire::Frame::Idle) => continue,
+            Err(e) => {
+                // framing is broken (torn header/body or oversized length):
+                // best-effort error reply, then close — there is no way to
+                // resynchronize the stream
+                stats.wire_errors.fetch_add(1, Ordering::Relaxed);
+                let reply = WireResponse::Error { id: 0, msg: format!("{e:#}") };
+                let _ = wire::write_frame(&mut writer, &reply.encode());
+                return Err(e);
+            }
+        };
+        stats.served.fetch_add(1, Ordering::Relaxed);
+        let reply = match WireRequest::decode(&payload) {
+            Err(e) => {
+                // framed but garbled: reply with an error, keep serving —
+                // the length prefix kept the stream in sync
+                stats.wire_errors.fetch_add(1, Ordering::Relaxed);
+                WireResponse::Error { id: wire::peek_id(&payload), msg: format!("{e:#}") }
+            }
+            Ok(req) => dispatch(req, coord, stats, opts),
+        };
+        wire::write_frame(&mut writer, &reply.encode())?;
+    }
+}
+
+/// Map a decoded wire request onto the coordinator and its reply back onto
+/// the wire.
+fn dispatch(
+    req: WireRequest,
+    coord: &Coordinator,
+    stats: &ServerStats,
+    opts: &ServeOptions,
+) -> WireResponse {
+    match req {
+        WireRequest::Infer { id, mode, features } => {
+            let payload = match mode {
+                wire::MODE_L1 => Payload::FeaturesWithMode(features, SearchMode::L1Int8),
+                wire::MODE_PACKED => {
+                    Payload::FeaturesWithMode(features, SearchMode::HammingPacked)
+                }
+                _ => Payload::Features(features),
+            };
+            match coord.call(payload) {
+                Err(e) => WireResponse::Error { id, msg: format!("{e:#}") },
+                Ok(r) => match r.error {
+                    Some(msg) => WireResponse::Error { id, msg },
+                    None => WireResponse::Infer {
+                        id,
+                        class: r.class.unwrap_or(0) as u32,
+                        segments: r.segments_used as u32,
+                        early: r.early_exit,
+                    },
+                },
+            }
+        }
+        WireRequest::Learn { id, class, features } => {
+            match coord.call(Payload::Learn(features, class as usize)) {
+                Err(e) => WireResponse::Error { id, msg: format!("{e:#}") },
+                Ok(r) => match r.error {
+                    Some(msg) => WireResponse::Error { id, msg },
+                    None => {
+                        stats.learns.fetch_add(1, Ordering::Relaxed);
+                        WireResponse::Learn { id, class }
+                    }
+                },
+            }
+        }
+        WireRequest::Snapshot { id, path } => {
+            if !path.is_empty() && !opts.allow_snapshot_paths {
+                return WireResponse::Error {
+                    id,
+                    msg: "client-supplied snapshot paths are disabled on this server; \
+                          send an empty path to checkpoint to the configured default"
+                        .into(),
+                };
+            }
+            let target = if path.is_empty() { None } else { Some(PathBuf::from(path)) };
+            match coord.call(Payload::Snapshot(target)) {
+                Err(e) => WireResponse::Error { id, msg: format!("{e:#}") },
+                Ok(r) => match r.error {
+                    Some(msg) => WireResponse::Error { id, msg },
+                    None => WireResponse::Snapshot { id, path: r.detail.unwrap_or_default() },
+                },
+            }
+        }
+        WireRequest::Stats { id } => match coord.call(Payload::Stats) {
+            Err(e) => WireResponse::Error { id, msg: format!("{e:#}") },
+            Ok(r) => match r.error {
+                Some(msg) => WireResponse::Error { id, msg },
+                None => {
+                    let k = r.stats.unwrap_or_default();
+                    WireResponse::Stats {
+                        id,
+                        stats: WireStats {
+                            served: stats.served.load(Ordering::Relaxed),
+                            wire_errors: stats.wire_errors.load(Ordering::Relaxed),
+                            learns: k.learns,
+                            trained_classes: k.trained_classes as u32,
+                            snapshots: k.snapshots,
+                        },
+                    }
+                }
+            },
+        },
+    }
+}

@@ -1,0 +1,479 @@
+//! Length-prefixed binary wire protocol for the TCP serving layer.
+//!
+//! Zero-dependency framing: every message is `[len: u32 LE][payload]`,
+//! where `len` counts the payload bytes only and is capped at
+//! [`MAX_FRAME`] (an oversized length cannot desynchronize the stream into
+//! unbounded allocation). Payloads are little-endian throughout.
+//!
+//! ## Request payloads
+//!
+//! ```text
+//! id: u64, op: u8, then per op:
+//!   OP_INFER     mode u8 (0 default | 1 l1 | 2 packed), n u32, n × f32
+//!   OP_LEARN     class u32, n u32, n × f32
+//!   OP_SNAPSHOT  path_len u16, path utf-8 (empty = server default)
+//!   OP_STATS     (empty)
+//! ```
+//!
+//! ## Response payloads
+//!
+//! ```text
+//! id: u64, kind: u8, then per kind:
+//!   OP_INFER     class u32, segments u32, early u8
+//!   OP_LEARN     class u32
+//!   OP_SNAPSHOT  path_len u16, path utf-8
+//!   OP_STATS     served u64, wire_errors u64, learns u64,
+//!                trained_classes u32, snapshots u64
+//!   KIND_ERROR   msg_len u16, msg utf-8
+//! ```
+//!
+//! Error recovery contract: a payload that *frames* correctly but decodes
+//! badly (garbage opcode, truncated body, trailing bytes) gets a
+//! [`WireResponse::Error`] reply and the connection survives — framing
+//! keeps the stream in sync. Only a broken frame header or an oversized
+//! length tears the connection down (after a best-effort error reply).
+
+use crate::Result;
+use anyhow::bail;
+use std::io::{Read, Write};
+
+/// Hard cap on a frame payload (16 MiB — far above any request the HD
+/// configs can produce, small enough to bound a malicious allocation).
+pub const MAX_FRAME: usize = 16 * 1024 * 1024;
+
+pub const OP_INFER: u8 = 1;
+pub const OP_LEARN: u8 = 2;
+pub const OP_SNAPSHOT: u8 = 3;
+pub const OP_STATS: u8 = 4;
+/// Response-only kind tag for error replies.
+pub const KIND_ERROR: u8 = 0xEE;
+
+/// Per-request search-mode selector on [`WireRequest::Infer`].
+pub const MODE_DEFAULT: u8 = 0;
+pub const MODE_L1: u8 = 1;
+pub const MODE_PACKED: u8 = 2;
+
+/// One frame-read outcome.
+#[derive(Debug)]
+pub enum Frame {
+    /// a complete payload
+    Payload(Vec<u8>),
+    /// clean EOF at a frame boundary (peer closed)
+    Eof,
+    /// read timeout with zero bytes consumed (still at a frame boundary;
+    /// safe to retry)
+    Idle,
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Fill `buf` completely. Read timeouts *inside* a frame keep waiting (the
+/// peer has committed to the frame; the bound of ~150 retries ≈ 30 s at
+/// the server's 200 ms read timeout stops a stalled peer from pinning a
+/// thread forever); EOF mid-buffer is a hard error — bytes were consumed,
+/// the stream is no longer at a frame boundary.
+fn read_full(r: &mut impl Read, buf: &mut [u8], what: &str) -> Result<()> {
+    let mut got = 0usize;
+    let mut idle = 0u32;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => bail!("connection closed mid-{what} ({got}/{} bytes)", buf.len()),
+            Ok(n) => {
+                got += n;
+                idle = 0;
+            }
+            Err(e) if is_timeout(&e) => {
+                idle += 1;
+                if idle > 150 {
+                    bail!("peer stalled mid-{what} ({got}/{} bytes)", buf.len());
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame. `Idle` is only returned when the read timed out with
+/// zero bytes consumed; `Eof` only on a clean close at a frame boundary.
+pub fn read_frame(r: &mut impl Read, max: usize) -> Result<Frame> {
+    let mut hdr = [0u8; 4];
+    // distinguish idle-timeout from clean EOF: peek at the first byte
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(Frame::Eof),
+            Ok(1) => break,
+            Ok(_) => unreachable!("read > buf"),
+            Err(e) if is_timeout(&e) => return Ok(Frame::Idle),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    hdr[0] = first[0];
+    read_full(r, &mut hdr[1..], "frame header")?;
+    let len = u32::from_le_bytes(hdr) as usize;
+    if len > max {
+        bail!("frame length {len} exceeds the {max}-byte cap");
+    }
+    let mut buf = vec![0u8; len];
+    read_full(r, &mut buf, "frame body")?;
+    Ok(Frame::Payload(buf))
+}
+
+/// Write one `[len][payload]` frame and flush it.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        bail!("refusing to send a {}-byte frame (cap {MAX_FRAME})", payload.len());
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Best-effort request id of a framed-but-garbled payload (for addressing
+/// the error reply); 0 when even the id is missing.
+pub fn peek_id(payload: &[u8]) -> u64 {
+    if payload.len() >= 8 {
+        u64::from_le_bytes(payload[0..8].try_into().unwrap())
+    } else {
+        0
+    }
+}
+
+fn put_str16(out: &mut Vec<u8>, s: &str) {
+    let b = s.as_bytes();
+    let n = b.len().min(u16::MAX as usize);
+    out.extend_from_slice(&(n as u16).to_le_bytes());
+    out.extend_from_slice(&b[..n]);
+}
+
+/// A decoded client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireRequest {
+    Infer { id: u64, mode: u8, features: Vec<f32> },
+    Learn { id: u64, class: u32, features: Vec<f32> },
+    Snapshot { id: u64, path: String },
+    Stats { id: u64 },
+}
+
+impl WireRequest {
+    pub fn id(&self) -> u64 {
+        match self {
+            WireRequest::Infer { id, .. }
+            | WireRequest::Learn { id, .. }
+            | WireRequest::Snapshot { id, .. }
+            | WireRequest::Stats { id } => *id,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            WireRequest::Infer { id, mode, features } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(OP_INFER);
+                out.push(*mode);
+                out.extend_from_slice(&(features.len() as u32).to_le_bytes());
+                for v in features {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            WireRequest::Learn { id, class, features } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(OP_LEARN);
+                out.extend_from_slice(&class.to_le_bytes());
+                out.extend_from_slice(&(features.len() as u32).to_le_bytes());
+                for v in features {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            WireRequest::Snapshot { id, path } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(OP_SNAPSHOT);
+                put_str16(&mut out, path);
+            }
+            WireRequest::Stats { id } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(OP_STATS);
+            }
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<WireRequest> {
+        let mut c = crate::util::Cursor::new(payload);
+        let id = c.u64()?;
+        let op = c.u8()?;
+        let req = match op {
+            OP_INFER => {
+                let mode = c.u8()?;
+                if mode > MODE_PACKED {
+                    bail!("unknown infer mode {mode} (0=default 1=l1 2=packed)");
+                }
+                let n = c.u32()? as usize;
+                WireRequest::Infer { id, mode, features: c.f32s(n)? }
+            }
+            OP_LEARN => {
+                let class = c.u32()?;
+                let n = c.u32()? as usize;
+                WireRequest::Learn { id, class, features: c.f32s(n)? }
+            }
+            OP_SNAPSHOT => WireRequest::Snapshot { id, path: c.str16()? },
+            OP_STATS => WireRequest::Stats { id },
+            other => bail!("unknown opcode {other:#04x}"),
+        };
+        c.finish()?;
+        Ok(req)
+    }
+}
+
+/// Server-side counters a Stats reply carries.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// frames served (all opcodes, error replies included)
+    pub served: u64,
+    /// frames that decoded badly (the error-reply count)
+    pub wire_errors: u64,
+    /// total bundled learns in the live knowledge store
+    pub learns: u64,
+    /// classes with at least one bundled sample
+    pub trained_classes: u32,
+    /// snapshots written this process
+    pub snapshots: u64,
+}
+
+/// A decoded server reply.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireResponse {
+    Infer { id: u64, class: u32, segments: u32, early: bool },
+    Learn { id: u64, class: u32 },
+    Snapshot { id: u64, path: String },
+    Stats { id: u64, stats: WireStats },
+    Error { id: u64, msg: String },
+}
+
+impl WireResponse {
+    pub fn id(&self) -> u64 {
+        match self {
+            WireResponse::Infer { id, .. }
+            | WireResponse::Learn { id, .. }
+            | WireResponse::Snapshot { id, .. }
+            | WireResponse::Stats { id, .. }
+            | WireResponse::Error { id, .. } => *id,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            WireResponse::Infer { id, class, segments, early } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(OP_INFER);
+                out.extend_from_slice(&class.to_le_bytes());
+                out.extend_from_slice(&segments.to_le_bytes());
+                out.push(u8::from(*early));
+            }
+            WireResponse::Learn { id, class } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(OP_LEARN);
+                out.extend_from_slice(&class.to_le_bytes());
+            }
+            WireResponse::Snapshot { id, path } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(OP_SNAPSHOT);
+                put_str16(&mut out, path);
+            }
+            WireResponse::Stats { id, stats } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(OP_STATS);
+                out.extend_from_slice(&stats.served.to_le_bytes());
+                out.extend_from_slice(&stats.wire_errors.to_le_bytes());
+                out.extend_from_slice(&stats.learns.to_le_bytes());
+                out.extend_from_slice(&stats.trained_classes.to_le_bytes());
+                out.extend_from_slice(&stats.snapshots.to_le_bytes());
+            }
+            WireResponse::Error { id, msg } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(KIND_ERROR);
+                put_str16(&mut out, msg);
+            }
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<WireResponse> {
+        let mut c = crate::util::Cursor::new(payload);
+        let id = c.u64()?;
+        let kind = c.u8()?;
+        let resp = match kind {
+            OP_INFER => WireResponse::Infer {
+                id,
+                class: c.u32()?,
+                segments: c.u32()?,
+                early: c.u8()? != 0,
+            },
+            OP_LEARN => WireResponse::Learn { id, class: c.u32()? },
+            OP_SNAPSHOT => WireResponse::Snapshot { id, path: c.str16()? },
+            OP_STATS => WireResponse::Stats {
+                id,
+                stats: WireStats {
+                    served: c.u64()?,
+                    wire_errors: c.u64()?,
+                    learns: c.u64()?,
+                    trained_classes: c.u32()?,
+                    snapshots: c.u64()?,
+                },
+            },
+            KIND_ERROR => WireResponse::Error { id, msg: c.str16()? },
+            other => bail!("unknown response kind {other:#04x}"),
+        };
+        c.finish()?;
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(r: WireRequest) {
+        let bytes = r.encode();
+        assert_eq!(WireRequest::decode(&bytes).unwrap(), r);
+    }
+
+    fn roundtrip_resp(r: WireResponse) {
+        let bytes = r.encode();
+        assert_eq!(WireResponse::decode(&bytes).unwrap(), r);
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_req(WireRequest::Infer {
+            id: 7,
+            mode: MODE_PACKED,
+            features: vec![1.5, -2.25, 0.0],
+        });
+        roundtrip_req(WireRequest::Infer { id: 8, mode: MODE_DEFAULT, features: vec![] });
+        roundtrip_req(WireRequest::Learn { id: 9, class: 3, features: vec![42.0; 64] });
+        roundtrip_req(WireRequest::Snapshot { id: 10, path: "k.clok".into() });
+        roundtrip_req(WireRequest::Snapshot { id: 11, path: String::new() });
+        roundtrip_req(WireRequest::Stats { id: 12 });
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        roundtrip_resp(WireResponse::Infer { id: 1, class: 4, segments: 3, early: true });
+        roundtrip_resp(WireResponse::Learn { id: 2, class: 0 });
+        roundtrip_resp(WireResponse::Snapshot { id: 3, path: "a/b.clok".into() });
+        roundtrip_resp(WireResponse::Stats {
+            id: 4,
+            stats: WireStats {
+                served: 100,
+                wire_errors: 2,
+                learns: 40,
+                trained_classes: 9,
+                snapshots: 1,
+            },
+        });
+        roundtrip_resp(WireResponse::Error { id: 5, msg: "class 99 out of range".into() });
+    }
+
+    #[test]
+    fn decode_rejects_garbage_opcode_truncation_and_trailing() {
+        let good = WireRequest::Infer { id: 1, mode: 0, features: vec![1.0] }.encode();
+        // garbage opcode
+        let mut bad = good.clone();
+        bad[8] = 0x77;
+        assert!(WireRequest::decode(&bad).unwrap_err().to_string().contains("opcode"));
+        // truncated feature block
+        assert!(WireRequest::decode(&good[..good.len() - 2]).is_err());
+        // short header
+        assert!(WireRequest::decode(&good[..5]).is_err());
+        // trailing bytes
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(WireRequest::decode(&bad).unwrap_err().to_string().contains("trailing"));
+        // bad infer mode
+        let mut bad = good;
+        bad[9] = 9;
+        assert!(WireRequest::decode(&bad).unwrap_err().to_string().contains("mode"));
+    }
+
+    #[test]
+    fn decode_rejects_absurd_feature_count() {
+        // n claims 2^31 floats but the payload carries none
+        let mut b = Vec::new();
+        b.extend_from_slice(&1u64.to_le_bytes());
+        b.push(OP_INFER);
+        b.push(MODE_DEFAULT);
+        b.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(WireRequest::decode(&b).is_err());
+    }
+
+    #[test]
+    fn frame_io_roundtrip_and_caps() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        match read_frame(&mut r, MAX_FRAME).unwrap() {
+            Frame::Payload(p) => assert_eq!(p, b"hello"),
+            other => panic!("{other:?}"),
+        }
+        match read_frame(&mut r, MAX_FRAME).unwrap() {
+            Frame::Payload(p) => assert!(p.is_empty()),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(read_frame(&mut r, MAX_FRAME).unwrap(), Frame::Eof));
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        buf.extend_from_slice(b"whatever");
+        let mut r = std::io::Cursor::new(buf);
+        let e = read_frame(&mut r, MAX_FRAME).unwrap_err().to_string();
+        assert!(e.contains("exceeds"), "{e}");
+        // caller-tightened cap too
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &[0u8; 100]).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut r, 10).is_err());
+    }
+
+    #[test]
+    fn truncated_header_and_body_error() {
+        let mut r = std::io::Cursor::new(vec![5u8, 0]);
+        assert!(read_frame(&mut r, MAX_FRAME).is_err(), "2-byte header");
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&10u32.to_le_bytes());
+        buf.extend_from_slice(b"only4");
+        let mut r = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut r, MAX_FRAME).is_err(), "truncated body");
+    }
+
+    #[test]
+    fn peek_id_best_effort() {
+        let req = WireRequest::Stats { id: 0xDEAD_BEEF };
+        assert_eq!(peek_id(&req.encode()), 0xDEAD_BEEF);
+        assert_eq!(peek_id(&[1, 2, 3]), 0);
+    }
+
+    #[test]
+    fn write_frame_emits_len_prefix() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &[0xAB; 8]).unwrap();
+        assert_eq!(&buf[..4], &8u32.to_le_bytes());
+        assert_eq!(buf.len(), 12);
+        assert!(MAX_FRAME >= 1 << 20);
+    }
+}

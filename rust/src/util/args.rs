@@ -2,7 +2,19 @@
 //!
 //! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
 //! arguments; typed getters with defaults.
+//!
+//! Boolean flags need registration: a bare `--flag` followed by a
+//! non-`--` token is ambiguous (is the token the flag's value or a
+//! positional?), and the parser used to guess "value" — so
+//! `clo_hdnn infer --packed model_dir` stored `packed="model_dir"`, lost
+//! the positional, *and* made `flag("packed")` return false. Callers now
+//! pass their boolean set to [`Args::parse_with_bools`] (registered
+//! booleans never consume the next token), and [`Args::flag`] treats any
+//! present key as true unless its value is explicitly falsy, so even an
+//! unregistered boolean that swallowed a token still reads as set.
 
+use crate::Result;
+use anyhow::bail;
 use std::collections::HashMap;
 
 #[derive(Debug, Default, Clone)]
@@ -12,7 +24,15 @@ pub struct Args {
 }
 
 impl Args {
+    /// Parse with no registered boolean flags (greedy `--key value`).
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        Args::parse_with_bools(argv, &[])
+    }
+
+    /// Parse with a known-boolean set: a registered `--flag` never consumes
+    /// the following token (it can still be given an explicit value via
+    /// `--flag=false`).
+    pub fn parse_with_bools(argv: impl IntoIterator<Item = String>, bools: &[&str]) -> Args {
         let mut flags = HashMap::new();
         let mut positional = Vec::new();
         let mut iter = argv.into_iter().peekable();
@@ -20,10 +40,8 @@ impl Args {
             if let Some(stripped) = arg.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
                     flags.insert(k.to_string(), v.to_string());
-                } else if iter
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
+                } else if !bools.contains(&stripped)
+                    && iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
                 {
                     let v = iter.next().unwrap();
                     flags.insert(stripped.to_string(), v);
@@ -41,6 +59,11 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// [`Args::from_env`] with the caller's boolean-flag set registered.
+    pub fn from_env_with_bools(bools: &[&str]) -> Args {
+        Args::parse_with_bools(std::env::args().skip(1), bools)
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -53,20 +76,38 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
-    pub fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer")))
-            .unwrap_or(default)
+    /// Integer flag with default. A malformed value is a proper error
+    /// naming the flag and the offending token — never a panic, so a bad
+    /// `--threads x` can't take down a served process with a backtrace.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(n) => Ok(n),
+                Err(_) => bail!("--{key} expects an integer, got '{v}'"),
+            },
+        }
     }
 
-    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number")))
-            .unwrap_or(default)
+    /// Float flag with default; malformed values error like [`Args::usize_or`].
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(n) => Ok(n),
+                Err(_) => bail!("--{key} expects a number, got '{v}'"),
+            },
+        }
     }
 
+    /// True when the key is present and not explicitly falsy. Presence wins:
+    /// a boolean that (unregistered) swallowed the next token still counts
+    /// as set.
     pub fn flag(&self, key: &str) -> bool {
-        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+        match self.get(key) {
+            Some("false") | Some("0") | Some("no") | None => false,
+            Some(_) => true,
+        }
     }
 }
 
@@ -78,11 +119,15 @@ mod tests {
         Args::parse(v.iter().map(|s| s.to_string()))
     }
 
+    fn parse_bools(v: &[&str], bools: &[&str]) -> Args {
+        Args::parse_with_bools(v.iter().map(|s| s.to_string()), bools)
+    }
+
     #[test]
     fn key_value_styles() {
         let a = parse(&["--mode", "serve", "--batch=8", "--fast"]);
         assert_eq!(a.str_or("mode", ""), "serve");
-        assert_eq!(a.usize_or("batch", 0), 8);
+        assert_eq!(a.usize_or("batch", 0).unwrap(), 8);
         assert!(a.flag("fast"));
         assert!(!a.flag("slow"));
     }
@@ -96,8 +141,8 @@ mod tests {
     #[test]
     fn defaults_apply() {
         let a = parse(&[]);
-        assert_eq!(a.usize_or("n", 42), 42);
-        assert_eq!(a.f64_or("tau", 1.5), 1.5);
+        assert_eq!(a.usize_or("n", 42).unwrap(), 42);
+        assert_eq!(a.f64_or("tau", 1.5).unwrap(), 1.5);
         assert_eq!(a.str_or("name", "tiny"), "tiny");
     }
 
@@ -105,6 +150,55 @@ mod tests {
     fn flag_followed_by_flag() {
         let a = parse(&["--a", "--b", "2"]);
         assert!(a.flag("a"));
-        assert_eq!(a.usize_or("b", 0), 2);
+        assert_eq!(a.usize_or("b", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn registered_bool_does_not_swallow_positionals() {
+        // the regression: `infer --packed model_dir` must keep the
+        // positional AND report the flag as set
+        let a = parse_bools(&["infer", "--packed", "model_dir"], &["packed"]);
+        assert_eq!(
+            a.positional(),
+            &["infer".to_string(), "model_dir".to_string()]
+        );
+        assert!(a.flag("packed"));
+        assert_eq!(a.get("packed"), Some("true"));
+    }
+
+    #[test]
+    fn registered_bool_accepts_explicit_value() {
+        let a = parse_bools(&["--quick=false", "--deep=yes"], &["quick", "deep"]);
+        assert!(!a.flag("quick"));
+        assert!(a.flag("deep"));
+    }
+
+    #[test]
+    fn unregistered_bool_that_swallowed_a_token_still_reads_set() {
+        // defense in depth: even without registration, presence wins
+        let a = parse(&["--packed", "model_dir"]);
+        assert!(a.flag("packed"));
+        assert!(!a.flag("packed-off"));
+    }
+
+    #[test]
+    fn falsy_spellings_read_unset() {
+        let a = parse(&["--a=false", "--b=0", "--c=no", "--d=1"]);
+        assert!(!a.flag("a"));
+        assert!(!a.flag("b"));
+        assert!(!a.flag("c"));
+        assert!(a.flag("d"));
+    }
+
+    #[test]
+    fn malformed_numbers_error_with_flag_and_value() {
+        let a = parse(&["--threads", "x", "--tau", "fast"]);
+        let e = a.usize_or("threads", 1).unwrap_err().to_string();
+        assert!(e.contains("--threads") && e.contains("'x'"), "{e}");
+        let e = a.f64_or("tau", 0.5).unwrap_err().to_string();
+        assert!(e.contains("--tau") && e.contains("'fast'"), "{e}");
+        // well-formed values still parse
+        let a = parse(&["--threads", "4"]);
+        assert_eq!(a.usize_or("threads", 1).unwrap(), 4);
     }
 }

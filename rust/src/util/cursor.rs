@@ -1,0 +1,143 @@
+//! Shared little-endian byte cursor for the repo's binary formats — the
+//! CLOK knowledge checkpoints (`crate::hdc::knowledge`) and the serve wire
+//! protocol (`crate::serve::wire`). One bounds-checked reader keeps their
+//! truncation/trailing-byte behavior identical.
+
+use crate::Result;
+use anyhow::bail;
+
+/// A forward-only reader over a byte payload; every getter is
+/// bounds-checked and little-endian.
+pub struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(b: &'a [u8]) -> Cursor<'a> {
+        Cursor { b, i: 0 }
+    }
+
+    /// Bytes consumed so far.
+    pub fn offset(&self) -> usize {
+        self.i
+    }
+
+    /// Consume exactly `n` bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        // self.i <= b.len() always, so the subtraction cannot underflow —
+        // and this form cannot overflow for any attacker/on-disk n
+        if n > self.b.len() - self.i {
+            bail!(
+                "payload truncated: need {n} bytes at offset {}, have {}",
+                self.i,
+                self.b.len() - self.i
+            );
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// `n` consecutive f32 values (the wire protocol's feature blocks).
+    pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let total = n
+            .checked_mul(4)
+            .ok_or_else(|| anyhow::anyhow!("element count {n} overflows the payload"))?;
+        let bytes = self.take(total)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect())
+    }
+
+    /// A `u16`-length-prefixed utf-8 string.
+    pub fn str16(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
+
+    /// Assert every payload byte was consumed (rejects trailing garbage).
+    pub fn finish(&self) -> Result<()> {
+        if self.i != self.b.len() {
+            bail!("payload has {} trailing bytes", self.b.len() - self.i);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_every_width_in_order() {
+        let mut b = Vec::new();
+        b.push(7u8);
+        b.extend_from_slice(&513u16.to_le_bytes());
+        b.extend_from_slice(&70000u32.to_le_bytes());
+        b.extend_from_slice(&u64::MAX.to_le_bytes());
+        b.extend_from_slice(&(-2.5f32).to_le_bytes());
+        b.extend_from_slice(&2u16.to_le_bytes());
+        b.extend_from_slice(b"hi");
+        let mut c = Cursor::new(&b);
+        assert_eq!(c.u8().unwrap(), 7);
+        assert_eq!(c.u16().unwrap(), 513);
+        assert_eq!(c.u32().unwrap(), 70000);
+        assert_eq!(c.u64().unwrap(), u64::MAX);
+        assert_eq!(c.f32().unwrap(), -2.5);
+        assert_eq!(c.str16().unwrap(), "hi");
+        assert!(c.finish().is_ok());
+        assert_eq!(c.offset(), b.len());
+    }
+
+    #[test]
+    fn truncation_trailing_and_overflow_are_rejected() {
+        let mut c = Cursor::new(&[1, 2, 3]);
+        assert!(c.u32().is_err(), "3 bytes cannot yield a u32");
+        let mut c = Cursor::new(&[1, 2, 3, 4]);
+        c.u16().unwrap();
+        assert!(c.finish().unwrap_err().to_string().contains("trailing"));
+        // an absurd element count must fail before any allocation
+        let mut c = Cursor::new(&[0u8; 8]);
+        assert!(c.f32s(usize::MAX).is_err());
+        assert!(c.f32s(usize::MAX / 2).is_err());
+    }
+
+    #[test]
+    fn f32s_and_str16_roundtrip() {
+        let vals = [1.0f32, -0.5, 3.25];
+        let mut b = Vec::new();
+        for v in vals {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut c = Cursor::new(&b);
+        assert_eq!(c.f32s(3).unwrap(), vals);
+        assert!(c.finish().is_ok());
+        // non-utf8 string payloads error instead of panicking
+        let mut b = Vec::new();
+        b.extend_from_slice(&2u16.to_le_bytes());
+        b.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(Cursor::new(&b).str16().is_err());
+    }
+}

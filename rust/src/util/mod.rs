@@ -7,6 +7,7 @@
 //! first-class citizens of the repo rather than stop-gaps.)
 
 pub mod args;
+pub mod cursor;
 pub mod json;
 pub mod pool;
 pub mod prop;
@@ -14,6 +15,7 @@ pub mod rng;
 pub mod stats;
 
 pub use args::Args;
+pub use cursor::Cursor;
 pub use pool::WorkerPool;
 pub use rng::Rng;
 pub use stats::{Bench, Summary};

@@ -1,0 +1,355 @@
+//! End-to-end tests for the TCP serving layer and the durable knowledge
+//! store: live learn/infer/snapshot/stats over a loopback socket,
+//! malformed-frame fuzzing against the wire contract, concurrent-client
+//! multiplexing, and the warm-restart invariant (learn -> snapshot ->
+//! restart -> bit-identical predictions in both search modes).
+
+use clo_hdnn::config::HdConfig;
+use clo_hdnn::coordinator::{Coordinator, CoordinatorOptions};
+use clo_hdnn::hdc::{knowledge, SearchMode};
+use clo_hdnn::serve::{wire, Client, ServeOptions, Server};
+use clo_hdnn::util::Rng;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+fn cfg4() -> HdConfig {
+    HdConfig::synthetic("t", 8, 8, 32, 32, 8, 4)
+}
+
+fn protos(cfg: &HdConfig, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..cfg.classes)
+        .map(|_| (0..cfg.features()).map(|_| rng.normal_f32() * 40.0).collect())
+        .collect()
+}
+
+fn start_server(opts: CoordinatorOptions) -> Server {
+    let coord = Coordinator::start(opts).unwrap();
+    // tests exercise explicit snapshot paths over the wire, which the
+    // default (hardened) options refuse — opt in here
+    let serve_opts = ServeOptions { allow_snapshot_paths: true, ..ServeOptions::default() };
+    Server::start("127.0.0.1:0", coord, serve_opts).unwrap()
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("clo_hdnn_serve_tcp");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn learn_infer_stats_snapshot_over_the_wire() {
+    let cfg = cfg4();
+    let server = start_server(CoordinatorOptions::software(cfg.clone()));
+    let addr = server.local_addr().to_string();
+    let ps = protos(&cfg, 91);
+
+    let mut client = Client::connect(&addr).unwrap();
+    for (c, p) in ps.iter().enumerate() {
+        for _ in 0..3 {
+            client.learn(p, c).unwrap();
+        }
+    }
+    for (c, p) in ps.iter().enumerate() {
+        let r = client.infer(p).unwrap();
+        assert_eq!(r.class, c, "served inference must recover class {c}");
+        // both explicit kernels agree over the wire
+        let l1 = client.infer_mode(p, Some(SearchMode::L1Int8)).unwrap();
+        let packed = client.infer_mode(p, Some(SearchMode::HammingPacked)).unwrap();
+        assert_eq!(l1.class, c);
+        assert_eq!(packed.class, c);
+    }
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.learns, 12);
+    assert_eq!(stats.trained_classes, 4);
+    assert_eq!(stats.wire_errors, 0);
+    assert!(stats.served >= 12 + 12 + 1);
+
+    // snapshot over the wire, then verify the file is a valid checkpoint
+    let snap = tmp("wire_snapshot.clok");
+    let _ = std::fs::remove_file(&snap);
+    let written = client.snapshot(Some(snap.to_str().unwrap())).unwrap();
+    assert_eq!(written, snap.display().to_string());
+    let store = knowledge::load(&snap).unwrap();
+    assert_eq!(store.total_learns(), 12);
+    assert_eq!(store.trained_classes(), 4);
+
+    drop(client);
+    server.stop();
+}
+
+#[test]
+fn concurrent_clients_multiplex_with_zero_errors() {
+    let cfg = cfg4();
+    let server = start_server(CoordinatorOptions::software(cfg.clone()));
+    let addr = server.local_addr().to_string();
+    let ps = protos(&cfg, 92);
+
+    // seed the store so inferences have something to hit
+    let mut seeder = Client::connect(&addr).unwrap();
+    for (c, p) in ps.iter().enumerate() {
+        seeder.learn(p, c).unwrap();
+    }
+
+    let n_clients = 6usize;
+    let per_client = 25usize;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_clients)
+            .map(|t| {
+                let addr = addr.clone();
+                let ps = &ps;
+                s.spawn(move || {
+                    let mut client = Client::connect(&addr).unwrap();
+                    let mut rng = Rng::new(0xC11E + t as u64);
+                    for i in 0..per_client {
+                        let c = (t + i) % ps.len();
+                        if rng.below(4) == 0 {
+                            client.learn(&ps[c], c).unwrap();
+                        } else {
+                            let r = client.infer(&ps[c]).unwrap();
+                            assert_eq!(r.class, c, "client {t} request {i}");
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    let stats = seeder.stats().unwrap();
+    assert_eq!(stats.wire_errors, 0, "concurrent traffic must stay clean");
+    assert!(stats.served as usize >= n_clients * per_client);
+    drop(seeder);
+    server.stop();
+}
+
+#[test]
+fn malformed_frames_get_error_replies_and_framing_survives() {
+    let cfg = cfg4();
+    let server = start_server(CoordinatorOptions::software(cfg.clone()));
+    let addr = server.local_addr().to_string();
+    let ps = protos(&cfg, 93);
+    let mut seeder = Client::connect(&addr).unwrap();
+    for (c, p) in ps.iter().enumerate() {
+        seeder.learn(p, c).unwrap();
+    }
+
+    // 1) garbage opcode in a well-framed payload -> error reply carrying
+    //    the request id, and the SAME connection keeps serving
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    let mut bad = Vec::new();
+    bad.extend_from_slice(&42u64.to_le_bytes());
+    bad.push(0x77); // no such opcode
+    wire::write_frame(&mut raw, &bad).unwrap();
+    let mut reader = std::io::BufReader::new(raw.try_clone().unwrap());
+    match wire::read_frame(&mut reader, wire::MAX_FRAME).unwrap() {
+        wire::Frame::Payload(p) => match wire::WireResponse::decode(&p).unwrap() {
+            wire::WireResponse::Error { id, msg } => {
+                assert_eq!(id, 42);
+                assert!(msg.contains("opcode"), "{msg}");
+            }
+            other => panic!("expected error reply, got {other:?}"),
+        },
+        other => panic!("{other:?}"),
+    }
+    // the connection survives: a valid infer on the same socket works
+    let good = wire::WireRequest::Infer {
+        id: 43,
+        mode: wire::MODE_DEFAULT,
+        features: ps[0].clone(),
+    };
+    wire::write_frame(&mut raw, &good.encode()).unwrap();
+    match wire::read_frame(&mut reader, wire::MAX_FRAME).unwrap() {
+        wire::Frame::Payload(p) => match wire::WireResponse::decode(&p).unwrap() {
+            wire::WireResponse::Infer { id, class, .. } => {
+                assert_eq!(id, 43);
+                assert_eq!(class, 0);
+            }
+            other => panic!("expected infer reply, got {other:?}"),
+        },
+        other => panic!("{other:?}"),
+    }
+
+    // 2) truncated body (id only, op missing) -> error reply, connection
+    //    still in sync
+    let mut short = Vec::new();
+    short.extend_from_slice(&44u64.to_le_bytes());
+    wire::write_frame(&mut raw, &short).unwrap();
+    match wire::read_frame(&mut reader, wire::MAX_FRAME).unwrap() {
+        wire::Frame::Payload(p) => match wire::WireResponse::decode(&p).unwrap() {
+            wire::WireResponse::Error { id, .. } => assert_eq!(id, 44),
+            other => panic!("{other:?}"),
+        },
+        other => panic!("{other:?}"),
+    }
+    drop(reader);
+    drop(raw);
+
+    // 3) oversized length header -> best-effort error frame, then close
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    raw.write_all(&(u32::MAX).to_le_bytes()).unwrap();
+    raw.flush().unwrap();
+    let mut reader = std::io::BufReader::new(raw.try_clone().unwrap());
+    match wire::read_frame(&mut reader, wire::MAX_FRAME).unwrap() {
+        wire::Frame::Payload(p) => match wire::WireResponse::decode(&p).unwrap() {
+            wire::WireResponse::Error { msg, .. } => {
+                assert!(msg.contains("exceeds"), "{msg}")
+            }
+            other => panic!("{other:?}"),
+        },
+        other => panic!("{other:?}"),
+    }
+    // ... followed by EOF: the stream cannot be resynchronized
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+    drop(reader);
+    drop(raw);
+
+    // 4) truncated header then disconnect: server must simply survive
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    raw.write_all(&[9u8, 0]).unwrap();
+    drop(raw);
+
+    // server is alive and healthy after all of the above
+    let stats = seeder.stats().unwrap();
+    assert!(stats.wire_errors >= 3);
+    let r = seeder.infer(&ps[1]).unwrap();
+    assert_eq!(r.class, 1);
+    drop(seeder);
+    server.stop();
+}
+
+#[test]
+fn warm_restart_over_the_wire_is_bit_identical() {
+    let cfg = cfg4();
+    let snap = tmp("warm_restart.clok");
+    let _ = std::fs::remove_file(&snap);
+    let ps = protos(&cfg, 94);
+    let mut rng = Rng::new(95);
+    // a noisy synthetic CL stream: 5 draws per class
+    let stream: Vec<(Vec<f32>, usize)> = (0..5)
+        .flat_map(|_| {
+            ps.iter()
+                .enumerate()
+                .map(|(c, p)| {
+                    (
+                        p.iter().map(|&v| v + rng.normal_f32() * 4.0).collect::<Vec<f32>>(),
+                        c,
+                    )
+                })
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let queries: Vec<Vec<f32>> = (0..20)
+        .map(|i| {
+            let p = &ps[i % ps.len()];
+            p.iter().map(|&v| v + rng.normal_f32() * 8.0).collect()
+        })
+        .collect();
+
+    // phase 1: learn the stream over the wire, snapshot, record predictions
+    let server = start_server(CoordinatorOptions::software(cfg.clone()));
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    for (x, c) in &stream {
+        client.learn(x, *c).unwrap();
+    }
+    client.snapshot(Some(snap.to_str().unwrap())).unwrap();
+    let mut before = Vec::new();
+    for q in &queries {
+        for mode in [SearchMode::L1Int8, SearchMode::HammingPacked] {
+            before.push(client.infer_mode(q, Some(mode)).unwrap());
+        }
+    }
+    drop(client);
+    server.stop(); // the first process dies
+
+    // phase 2: a fresh server warm-starts from the checkpoint
+    let mut opts = CoordinatorOptions::software(cfg.clone());
+    opts.restore_path = Some(snap.clone());
+    let server = start_server(opts);
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    let mut after = Vec::new();
+    for q in &queries {
+        for mode in [SearchMode::L1Int8, SearchMode::HammingPacked] {
+            after.push(client.infer_mode(q, Some(mode)).unwrap());
+        }
+    }
+    assert_eq!(
+        before, after,
+        "every prediction (class, segments, early-exit) must be bit-identical \
+         across the restart, in both search modes"
+    );
+
+    // and the restored store itself equals the checkpoint bit for bit
+    let restored = knowledge::load(&snap).unwrap();
+    assert_eq!(restored.total_learns(), stream.len() as u64);
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.learns, stream.len() as u64);
+    assert_eq!(stats.wire_errors, 0);
+    drop(client);
+    server.stop();
+}
+
+#[test]
+fn remote_snapshot_paths_are_refused_by_default() {
+    // hardened default: an unauthenticated client must not get a
+    // write-file-anywhere primitive; only the server's configured default
+    // checkpoint is reachable over the wire
+    let cfg = cfg4();
+    let snap = tmp("default_only.clok");
+    let _ = std::fs::remove_file(&snap);
+    let mut opts = CoordinatorOptions::software(cfg.clone());
+    opts.snapshot_path = Some(snap.clone());
+    let coord = Coordinator::start(opts).unwrap();
+    let server = Server::start("127.0.0.1:0", coord, ServeOptions::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let ps = protos(&cfg, 97);
+
+    let mut client = Client::connect(&addr).unwrap();
+    client.learn(&ps[0], 0).unwrap();
+    let evil = tmp("evil_target.clok");
+    let err = client.snapshot(Some(evil.to_str().unwrap())).unwrap_err();
+    assert!(err.to_string().contains("disabled"), "{err}");
+    assert!(!evil.exists(), "refused snapshot must not touch the path");
+    // the connection survives the refusal, and the default path still works
+    let written = client.snapshot(None).unwrap();
+    assert_eq!(written, snap.display().to_string());
+    assert!(snap.exists());
+    drop(client);
+    server.stop();
+}
+
+#[test]
+fn server_default_snapshot_path_and_auto_cadence_work_over_tcp() {
+    let cfg = cfg4();
+    let snap = tmp("auto_cadence.clok");
+    let _ = std::fs::remove_file(&snap);
+    let mut opts = CoordinatorOptions::software(cfg.clone());
+    opts.snapshot_path = Some(snap.clone());
+    opts.snapshot_every = 4;
+    let server = start_server(opts);
+    let addr = server.local_addr().to_string();
+    let ps = protos(&cfg, 96);
+
+    let mut client = Client::connect(&addr).unwrap();
+    for (c, p) in ps.iter().enumerate() {
+        client.learn(p, c).unwrap();
+    }
+    // 4 learns -> the cadence fired; the default-path snapshot exists
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.snapshots, 1);
+    assert!(snap.exists());
+    // empty path on the wire = "use the server default"
+    let written = client.snapshot(None).unwrap();
+    assert_eq!(written, snap.display().to_string());
+    assert_eq!(client.stats().unwrap().snapshots, 2);
+    drop(client);
+    server.stop();
+    // shutdown flush appended nothing new (no learns since), file loads
+    assert_eq!(knowledge::load(&snap).unwrap().total_learns(), 4);
+}

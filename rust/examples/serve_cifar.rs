@@ -30,6 +30,7 @@ fn main() -> clo_hdnn::Result<()> {
 
     let coord = Coordinator::start(CoordinatorOptions {
         backend: BackendSpec::Pjrt { artifacts: dir, config: "cifar100".into() },
+        model: String::new(),
         tau: args.f64_or("tau", 0.5)? as f32,
         min_segments: args.usize_or("min-seg", 1)?,
         search_mode: Default::default(),

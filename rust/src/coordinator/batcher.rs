@@ -16,7 +16,9 @@ use std::time::{Duration, Instant};
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
+    /// flush when this many items are pending
     pub max_batch: usize,
+    /// flush when the oldest pending item has waited this long
     pub max_wait: Duration,
 }
 
@@ -29,16 +31,19 @@ impl Default for BatchPolicy {
 /// Generic deadline batcher over any item type.
 #[derive(Debug)]
 pub struct Batcher<T> {
+    /// the flush policy (size + deadline)
     pub policy: BatchPolicy,
     pending: Vec<T>,
     oldest: Option<Instant>,
 }
 
 impl<T> Batcher<T> {
+    /// An empty batcher under the given policy.
     pub fn new(policy: BatchPolicy) -> Batcher<T> {
         Batcher { policy, pending: Vec::new(), oldest: None }
     }
 
+    /// Queue one item (starts the deadline clock when the batch was empty).
     pub fn push(&mut self, item: T) {
         if self.pending.is_empty() {
             self.oldest = Some(Instant::now());
@@ -46,10 +51,12 @@ impl<T> Batcher<T> {
         self.pending.push(item);
     }
 
+    /// Items currently pending.
     pub fn len(&self) -> usize {
         self.pending.len()
     }
 
+    /// Whether nothing is pending.
     pub fn is_empty(&self) -> bool {
         self.pending.is_empty()
     }

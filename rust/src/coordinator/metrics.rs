@@ -3,15 +3,39 @@
 
 use crate::util::stats::percentile_sorted;
 
+/// The latency digest loadgen reports per run and per model.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    /// arithmetic mean (seconds)
+    pub mean_s: f64,
+    /// median (seconds)
+    pub p50_s: f64,
+    /// 95th percentile (seconds)
+    pub p95_s: f64,
+    /// 99th percentile (seconds)
+    pub p99_s: f64,
+}
+
+/// Per-request serving counters and latency samples (one collector per
+/// client thread or per model; [`ServeMetrics::merge`] folds them).
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
+    /// per-request latency samples (seconds)
     pub latencies_s: Vec<f64>,
+    /// per-inference progressive-search segment counts
     pub segments_used: Vec<usize>,
+    /// inferences that exited before the last segment
     pub early_exits: u64,
+    /// inferences that ran the WCFE (normal mode)
     pub wcfe_runs: u64,
+    /// learn requests served
     pub learns: u64,
+    /// failed requests
     pub errors: u64,
+    /// all requests (infer + learn + error)
     pub total: u64,
+    /// wall-clock of the whole run (the caller sets it; thread walls
+    /// overlap)
     pub wall_s: f64,
 }
 
@@ -65,11 +89,28 @@ impl ServeMetrics {
         percentile_sorted(&v, p)
     }
 
+    /// Mean request latency in seconds (0 with no samples).
     pub fn mean_latency(&self) -> f64 {
         if self.latencies_s.is_empty() {
             return 0.0;
         }
         self.latencies_s.iter().sum::<f64>() / self.latencies_s.len() as f64
+    }
+
+    /// The mean/p50/p95/p99 digest in one pass (sorts the samples once,
+    /// where per-percentile calls re-sort each time).
+    pub fn latency_summary(&self) -> LatencySummary {
+        if self.latencies_s.is_empty() {
+            return LatencySummary::default();
+        }
+        let mut v = self.latencies_s.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencySummary {
+            mean_s: self.mean_latency(),
+            p50_s: percentile_sorted(&v, 50.0),
+            p95_s: percentile_sorted(&v, 95.0),
+            p99_s: percentile_sorted(&v, 99.0),
+        }
     }
 
     pub fn mean_segments(&self) -> f64 {
@@ -121,5 +162,20 @@ mod tests {
         assert_eq!(a.latencies_s.len(), 3);
         // learn latencies count toward percentiles, not toward segments
         assert_eq!(a.segments_used.len(), 1);
+    }
+
+    #[test]
+    fn latency_summary_matches_percentile_calls() {
+        let mut m = ServeMetrics::default();
+        assert_eq!(m.latency_summary(), LatencySummary::default());
+        for i in 1..=100 {
+            m.record(i as f64 / 1000.0, 4, false, false);
+        }
+        let s = m.latency_summary();
+        assert!((s.mean_s - m.mean_latency()).abs() < 1e-12);
+        assert!((s.p50_s - m.latency_percentile(50.0)).abs() < 1e-12);
+        assert!((s.p95_s - m.latency_percentile(95.0)).abs() < 1e-12);
+        assert!((s.p99_s - m.latency_percentile(99.0)).abs() < 1e-12);
+        assert!(s.p50_s <= s.p95_s && s.p95_s <= s.p99_s);
     }
 }

@@ -10,7 +10,7 @@ pub mod request;
 pub mod router;
 pub mod server;
 
-pub use metrics::ServeMetrics;
-pub use request::{CoordStats, Payload, Request, Response};
+pub use metrics::{LatencySummary, ServeMetrics};
+pub use request::{CoordStats, Payload, ReplyKind, Request, Response};
 pub use router::Router;
 pub use server::{BackendSpec, Coordinator, CoordinatorOptions};

@@ -28,13 +28,39 @@ pub enum Payload {
     Stats,
 }
 
+/// One queued unit of work: a payload plus the reply channel the executor
+/// answers on.
 #[derive(Debug)]
 pub struct Request {
+    /// caller-assigned id, echoed on the [`Response`] (the serving layer
+    /// passes the client's wire id through here)
     pub id: u64,
+    /// the operation
     pub payload: Payload,
+    /// submission timestamp (queueing-latency accounting)
     pub submitted: Instant,
     /// reply channel (one-shot)
     pub reply: std::sync::mpsc::SyncSender<Response>,
+}
+
+/// Which operation a [`Response`] answers. The serving layer translates
+/// executor replies back onto the wire with this tag instead of tracking
+/// per-request state — which is what lets replies complete out of order on
+/// a pipelined connection.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReplyKind {
+    /// a classification ([`Payload::Features`]/[`Payload::FeaturesWithMode`]/
+    /// [`Payload::Image`])
+    #[default]
+    Classify,
+    /// a [`Payload::Learn`] acknowledgement
+    Learn,
+    /// a [`Payload::Snapshot`] acknowledgement (`detail` carries the path)
+    Snapshot,
+    /// a [`Payload::Restore`] acknowledgement (`detail` carries the path)
+    Restore,
+    /// a [`Payload::Stats`] reply (`stats` carries the counters)
+    Stats,
 }
 
 /// Knowledge counters a [`Payload::Stats`] request reports.
@@ -51,17 +77,25 @@ pub struct CoordStats {
 /// What the executor returns.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// echo of [`Request::id`]
     pub id: u64,
+    /// which operation this answers (see [`ReplyKind`])
+    pub kind: ReplyKind,
+    /// predicted class (classification) or the class learned (learn ack)
     pub class: Option<usize>,
+    /// progressive-search segments evaluated
     pub segments_used: usize,
+    /// whether the search exited before the last segment
     pub early_exit: bool,
     /// whether the WCFE ran (normal mode)
     pub used_wcfe: bool,
+    /// executor-side latency in seconds
     pub latency_s: f64,
     /// free-form success detail (e.g. the snapshot path written)
     pub detail: Option<String>,
     /// knowledge counters (set for [`Payload::Stats`] replies)
     pub stats: Option<CoordStats>,
+    /// failure detail; when set, every other result field is meaningless
     pub error: Option<String>,
 }
 
@@ -70,6 +104,7 @@ impl Response {
     pub fn ok(id: u64) -> Response {
         Response {
             id,
+            kind: ReplyKind::Classify,
             class: None,
             segments_used: 0,
             early_exit: false,
@@ -81,6 +116,7 @@ impl Response {
         }
     }
 
+    /// A failure reply carrying the error detail.
     pub fn error(id: u64, msg: String) -> Response {
         Response {
             error: Some(msg),

@@ -7,21 +7,27 @@
 use crate::coordinator::request::Payload;
 use crate::sim::Mode;
 
+/// How the router picks between WCFE (normal) and bypass mode.
 #[derive(Clone, Copy, Debug, Default)]
 pub enum ModePolicy {
     /// payload-driven (images -> normal, features -> bypass)
     #[default]
     Auto,
+    /// always bypass the WCFE
     ForceBypass,
+    /// always run the WCFE
     ForceNormal,
 }
 
+/// The per-request dual-mode router.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Router {
+    /// the active routing policy
     pub policy: ModePolicy,
 }
 
 impl Router {
+    /// Pick the execution mode for one payload.
     pub fn route(&self, payload: &Payload) -> Mode {
         match (self.policy, payload) {
             (ModePolicy::ForceBypass, _) => Mode::Bypass,

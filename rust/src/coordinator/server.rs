@@ -36,16 +36,27 @@ pub enum BackendSpec {
     Pjrt { artifacts: std::path::PathBuf, config: String },
 }
 
+/// Everything the executor thread needs to build and run one serving model.
 #[derive(Clone, Debug)]
 pub struct CoordinatorOptions {
+    /// which backend the executor thread builds
     pub backend: BackendSpec,
+    /// registry identity of this model (empty outside a multi-model
+    /// registry). Stamped into knowledge checkpoints and verified on
+    /// restore, so model A's checkpoint can never be served as model B's
+    /// — even when both share a config geometry.
+    pub model: String,
+    /// progressive-search confidence threshold
     pub tau: f32,
+    /// minimum segments before early exit
     pub min_segments: usize,
     /// default distance kernel (INT8 L1 or bit-packed INT1 Hamming);
     /// individual requests can override it via
     /// [`Payload::FeaturesWithMode`].
     pub search_mode: SearchMode,
+    /// dual-mode routing policy (normal/bypass)
     pub mode_policy: ModePolicy,
+    /// bound on the executor's MPSC request queue
     pub queue_depth: usize,
     /// worker threads the backend may fan out to within one call. `0` (the
     /// serving default) means auto: `CLO_HDNN_THREADS` when set, else all
@@ -69,6 +80,7 @@ impl CoordinatorOptions {
     pub fn software(cfg: HdConfig) -> CoordinatorOptions {
         CoordinatorOptions {
             backend: BackendSpec::Native { cfg, seed: 7 },
+            model: String::new(),
             tau: 0.5,
             min_segments: 1,
             search_mode: SearchMode::default(),
@@ -140,6 +152,27 @@ impl Coordinator {
             .map_err(|_| anyhow::anyhow!("executor gone"))?;
         Ok(reply_rx)
     }
+
+    /// Submit with a caller-assigned id and a caller-owned reply channel —
+    /// the pipelined serving path. Many requests can share one channel;
+    /// the executor answers each as it completes (tagged with `id` and a
+    /// [`crate::coordinator::ReplyKind`]), so a connection can keep many
+    /// frames in flight and collect replies out of order across models.
+    ///
+    /// The caller must size `reply` so that every outstanding reply fits:
+    /// the executor's send blocks when the channel is full.
+    pub fn submit_with(
+        &self,
+        id: u64,
+        payload: Payload,
+        reply: mpsc::SyncSender<Response>,
+    ) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("coordinator stopped")
+            .send(Request { id, payload, submitted: Instant::now(), reply })
+            .map_err(|_| anyhow::anyhow!("executor gone"))
+    }
 }
 
 impl Drop for Coordinator {
@@ -154,6 +187,8 @@ impl Drop for Coordinator {
 /// Knowledge-persistence bookkeeping on the executor thread.
 #[derive(Clone, Debug, Default)]
 struct KnowledgeState {
+    /// registry identity stamped into checkpoints / verified on restore
+    model: String,
     /// default checkpoint target (Snapshot(None) + auto-snapshot)
     snapshot_path: Option<std::path::PathBuf>,
     /// auto-snapshot cadence in learns (0 = off)
@@ -316,6 +351,7 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
     // without an internal pool ignore the hint
     ex.classifier.backend_mut().set_parallelism(opts.threads);
     ex.knowledge = KnowledgeState {
+        model: opts.model.clone(),
         snapshot_path: opts.snapshot_path.clone(),
         snapshot_every: opts.snapshot_every,
         since_snapshot: 0,
@@ -329,10 +365,22 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
 }
 
 impl Executor {
-    /// Replace the live store with a checkpoint, refusing geometry or
-    /// calibration drift (either would serve silently wrong answers).
+    /// Replace the live store with a checkpoint, refusing model-identity,
+    /// geometry, or calibration drift (any of which would serve silently
+    /// wrong answers).
     fn restore_store(&mut self, path: &std::path::Path) -> Result<()> {
-        let store = knowledge::load(path)?;
+        let (store, model) = knowledge::load_named(path)?;
+        if !model.is_empty()
+            && !self.knowledge.model.is_empty()
+            && model != self.knowledge.model
+        {
+            anyhow::bail!(
+                "knowledge checkpoint {} belongs to model '{model}' \
+                 (this executor serves model '{}')",
+                path.display(),
+                self.knowledge.model
+            );
+        }
         if !knowledge::compatible(store.cfg(), self.classifier.cfg()) {
             anyhow::bail!(
                 "knowledge checkpoint {} was trained for config '{}' \
@@ -377,7 +425,7 @@ impl Executor {
                     anyhow::anyhow!("snapshot: no path given and no default configured")
                 })?,
         };
-        knowledge::save(&self.classifier.store, &target)?;
+        knowledge::save_named(&self.classifier.store, &target, &self.knowledge.model)?;
         self.knowledge.snapshots += 1;
         self.knowledge.since_snapshot = 0;
         Ok(target)
@@ -453,6 +501,7 @@ impl Executor {
         for (r, (_, class)) in valid.iter().zip(&samples) {
             let resp = match &result {
                 Ok(()) => Response {
+                    kind: crate::coordinator::ReplyKind::Learn,
                     class: Some(*class),
                     segments_used: segments,
                     latency_s: t0.elapsed().as_secs_f64(),
@@ -491,6 +540,7 @@ impl Executor {
                 self.classifier.learn(x, *class)?;
                 self.note_learns(1);
                 Ok(Response {
+                    kind: crate::coordinator::ReplyKind::Learn,
                     class: Some(*class),
                     segments_used: self.classifier.cfg().segments,
                     latency_s: t0.elapsed().as_secs_f64(),
@@ -500,6 +550,7 @@ impl Executor {
             Payload::Snapshot(path) => {
                 let target = self.snapshot_store(path.as_deref())?;
                 Ok(Response {
+                    kind: crate::coordinator::ReplyKind::Snapshot,
                     detail: Some(target.display().to_string()),
                     latency_s: t0.elapsed().as_secs_f64(),
                     ..Response::ok(req.id)
@@ -508,12 +559,14 @@ impl Executor {
             Payload::Restore(path) => {
                 self.restore_store(path)?;
                 Ok(Response {
+                    kind: crate::coordinator::ReplyKind::Restore,
                     detail: Some(path.display().to_string()),
                     latency_s: t0.elapsed().as_secs_f64(),
                     ..Response::ok(req.id)
                 })
             }
             Payload::Stats => Ok(Response {
+                kind: crate::coordinator::ReplyKind::Stats,
                 stats: Some(CoordStats {
                     learns: self.classifier.store.total_learns(),
                     trained_classes: self.classifier.store.trained_classes(),
@@ -622,6 +675,7 @@ mod tests {
                 artifacts: std::path::PathBuf::from("/definitely/not/artifacts"),
                 config: "tiny".into(),
             },
+            model: String::new(),
             tau: 0.5,
             min_segments: 1,
             search_mode: SearchMode::default(),
@@ -633,6 +687,78 @@ mod tests {
             restore_path: None,
         };
         assert!(Coordinator::start(opts).is_err());
+    }
+
+    #[test]
+    fn submit_with_routes_many_replies_through_one_channel() {
+        // the pipelined serving path: N requests share one reply channel
+        // with caller-assigned ids; every reply comes back tagged with its
+        // id and kind
+        use crate::coordinator::ReplyKind;
+        let (coord, protos) = proto_and_coordinator();
+        let (tx, rx) = mpsc::sync_channel::<Response>(64);
+        for (c, p) in protos.iter().enumerate() {
+            coord
+                .submit_with(1000 + c as u64, Payload::Learn(p.clone(), c), tx.clone())
+                .unwrap();
+        }
+        for (c, p) in protos.iter().enumerate() {
+            coord
+                .submit_with(2000 + c as u64, Payload::Features(p.clone()), tx.clone())
+                .unwrap();
+        }
+        coord.submit_with(3000, Payload::Stats, tx.clone()).unwrap();
+        let mut got = std::collections::HashMap::new();
+        for _ in 0..(2 * protos.len() + 1) {
+            let r = rx.recv().unwrap();
+            got.insert(r.id, r);
+        }
+        for c in 0..protos.len() {
+            let learn = &got[&(1000 + c as u64)];
+            assert_eq!(learn.kind, ReplyKind::Learn);
+            assert!(learn.error.is_none(), "{:?}", learn.error);
+            assert_eq!(learn.class, Some(c));
+            let infer = &got[&(2000 + c as u64)];
+            assert_eq!(infer.kind, ReplyKind::Classify);
+            assert_eq!(infer.class, Some(c));
+        }
+        let stats = &got[&3000];
+        assert_eq!(stats.kind, ReplyKind::Stats);
+        assert_eq!(stats.stats.unwrap().learns, protos.len() as u64);
+    }
+
+    #[test]
+    fn restore_refuses_a_checkpoint_from_another_model() {
+        // same geometry, different registry identity: model A's knowledge
+        // must never silently serve as model B's
+        let path = snap_dir("model_identity").join("k.clok");
+        let _ = std::fs::remove_file(&path);
+        let cfg = HdConfig::synthetic("t", 8, 8, 32, 32, 8, 4);
+        let mut opts_a = CoordinatorOptions::software(cfg.clone());
+        opts_a.model = "alpha".into();
+        let coord_a = Coordinator::start(opts_a).unwrap();
+        let mut rng = Rng::new(404);
+        let x: Vec<f32> = (0..cfg.features()).map(|_| rng.normal_f32() * 40.0).collect();
+        coord_a.call(Payload::Learn(x, 0)).unwrap();
+        let r = coord_a.call(Payload::Snapshot(Some(path.clone()))).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+
+        let mut opts_b = CoordinatorOptions::software(cfg.clone());
+        opts_b.model = "beta".into();
+        let coord_b = Coordinator::start(opts_b).unwrap();
+        let r = coord_b.call(Payload::Restore(path.clone())).unwrap();
+        let msg = r.error.expect("cross-model restore must be refused");
+        assert!(msg.contains("alpha") && msg.contains("beta"), "{msg}");
+
+        // the same checkpoint restores fine into a model named alpha —
+        // and into an unnamed (registry-free) coordinator, which keeps
+        // pre-registry checkpoints and workflows working
+        let mut opts_a2 = CoordinatorOptions::software(cfg.clone());
+        opts_a2.model = "alpha".into();
+        let coord_a2 = Coordinator::start(opts_a2).unwrap();
+        assert!(coord_a2.call(Payload::Restore(path.clone())).unwrap().error.is_none());
+        let coord_free = Coordinator::start(CoordinatorOptions::software(cfg)).unwrap();
+        assert!(coord_free.call(Payload::Restore(path)).unwrap().error.is_none());
     }
 
     #[test]

@@ -11,14 +11,15 @@
 //! restored classifier is bit-identical to the one that was snapshotted —
 //! in both the scalar-L1 and packed-Hamming search modes.
 //!
-//! ## CLOK v1 layout (little-endian)
+//! ## CLOK layout (little-endian; full spec in `docs/PROTOCOL.md`)
 //!
 //! ```text
 //! offset 0   magic      b"CLOK"
-//!        4   version    u32 (= 1)
+//!        4   version    u32 (writes 2; reads 1 and 2)
 //!        8   checksum   u64 FNV-1a over every byte after this field
 //!       16   payload:
 //!            name_len   u16, then name bytes (config identity)
+//!            model_len  u16, then model bytes (registry identity; v2 only)
 //!            f1 f2 d1 d2 segments classes   u32 each
 //!            qbits      u8
 //!            scale_x scale_q mean_absdiff   f32 each
@@ -26,6 +27,11 @@
 //!            view       segments × classes × seg_len × i8   (verification image)
 //!            sums       segments × classes × seg_len × f32  (training state)
 //! ```
+//!
+//! v2 adds only the `model` field — the multi-model registry's identity
+//! check, so a checkpoint learned as model A is never restored into model
+//! B even when both share a config geometry. v1 files (no model field)
+//! still load, reporting an empty model name that matches any model.
 //!
 //! ## Atomic write-rename
 //!
@@ -45,8 +51,11 @@ use std::path::{Path, PathBuf};
 
 /// File magic of a knowledge checkpoint.
 pub const MAGIC: &[u8; 4] = b"CLOK";
-/// Current format version.
-pub const VERSION: u32 = 1;
+/// Current format version (what [`save`]/[`save_named`] write).
+pub const VERSION: u32 = 2;
+/// Oldest format version the loader accepts (v1 files carry no model
+/// identity and load with an empty model name).
+pub const VERSION_MIN: u32 = 1;
 
 /// FNV-1a 64-bit — the integrity checksum over the payload bytes.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
@@ -77,14 +86,25 @@ pub fn compatible(a: &HdConfig, b: &HdConfig) -> bool {
         && a.classes == b.classes
 }
 
-/// Serialize a store to the CLOK v1 byte image.
+/// Serialize a store to the current CLOK byte image with no model
+/// identity (equivalent to [`to_bytes_named`] with an empty model).
 pub fn to_bytes(store: &ChvStore) -> Vec<u8> {
+    to_bytes_named(store, "")
+}
+
+/// Serialize a store to the current CLOK byte image, stamping the owning
+/// model's registry name into the identity header (empty = unowned; loads
+/// into any model).
+pub fn to_bytes_named(store: &ChvStore, model: &str) -> Vec<u8> {
     let cfg = store.cfg();
     let seg_block = cfg.classes * cfg.seg_len();
     let mut payload = Vec::with_capacity(64 + cfg.classes * 8 + cfg.segments * seg_block * 5);
     let name = cfg.name.as_bytes();
     payload.extend_from_slice(&(name.len() as u16).to_le_bytes());
     payload.extend_from_slice(name);
+    let model_b = model.as_bytes();
+    payload.extend_from_slice(&(model_b.len() as u16).to_le_bytes());
+    payload.extend_from_slice(model_b);
     for v in [cfg.f1, cfg.f2, cfg.d1, cfg.d2, cfg.segments, cfg.classes] {
         payload.extend_from_slice(&(v as u32).to_le_bytes());
     }
@@ -115,10 +135,18 @@ pub fn to_bytes(store: &ChvStore) -> Vec<u8> {
     out
 }
 
-/// Deserialize and verify a CLOK v1 image: checksum, shape, and the
+/// Deserialize and verify a CLOK image, discarding the model identity
+/// (see [`from_bytes_named`]).
+pub fn from_bytes(bytes: &[u8]) -> Result<ChvStore> {
+    Ok(from_bytes_named(bytes)?.0)
+}
+
+/// Deserialize and verify a CLOK image: checksum, shape, and the
 /// recomputed-view-equals-stored-view bit-identity check. The packed INT1
 /// mirror is rebuilt from the recomputed view (never trusted from disk).
-pub fn from_bytes(bytes: &[u8]) -> Result<ChvStore> {
+/// Returns the store plus the model name stamped at save time (empty for
+/// v1 files and unowned checkpoints).
+pub fn from_bytes_named(bytes: &[u8]) -> Result<(ChvStore, String)> {
     if bytes.len() < 16 {
         bail!("knowledge file too short ({} bytes)", bytes.len());
     }
@@ -126,8 +154,8 @@ pub fn from_bytes(bytes: &[u8]) -> Result<ChvStore> {
         bail!("bad knowledge magic (not a CLOK file)");
     }
     let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
-    if version != VERSION {
-        bail!("unsupported knowledge version {version} (expected {VERSION})");
+    if !(VERSION_MIN..=VERSION).contains(&version) {
+        bail!("unsupported knowledge version {version} (expected {VERSION_MIN}..={VERSION})");
     }
     let checksum = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
     let payload = &bytes[16..];
@@ -142,6 +170,14 @@ pub fn from_bytes(bytes: &[u8]) -> Result<ChvStore> {
     let name_len = cur.u16()? as usize;
     let name = String::from_utf8(cur.take(name_len)?.to_vec())
         .context("knowledge config name is not utf-8")?;
+    // v2 identity header: the owning model's registry name
+    let model = if version >= 2 {
+        let model_len = cur.u16()? as usize;
+        String::from_utf8(cur.take(model_len)?.to_vec())
+            .context("knowledge model name is not utf-8")?
+    } else {
+        String::new()
+    };
     let f1 = cur.u32()? as usize;
     let f2 = cur.u32()? as usize;
     let d1 = cur.u32()? as usize;
@@ -203,7 +239,7 @@ pub fn from_bytes(bytes: &[u8]) -> Result<ChvStore> {
             }
         }
     }
-    Ok(store)
+    Ok((store, model))
 }
 
 /// The sibling temp path `save` stages into before the atomic rename.
@@ -213,9 +249,16 @@ pub fn tmp_path(path: &Path) -> PathBuf {
     PathBuf::from(os)
 }
 
-/// Atomically persist a store: write `<path>.tmp`, fsync, rename over
-/// `path`. The last good checkpoint is never in a torn state.
+/// Atomically persist a store with no model identity (equivalent to
+/// [`save_named`] with an empty model).
 pub fn save(store: &ChvStore, path: impl AsRef<Path>) -> Result<()> {
+    save_named(store, path, "")
+}
+
+/// Atomically persist a store stamped with its owning model's registry
+/// name: write `<path>.tmp`, fsync, rename over `path`. The last good
+/// checkpoint is never in a torn state.
+pub fn save_named(store: &ChvStore, path: impl AsRef<Path>, model: &str) -> Result<()> {
     let path = path.as_ref();
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
@@ -223,7 +266,7 @@ pub fn save(store: &ChvStore, path: impl AsRef<Path>) -> Result<()> {
                 .with_context(|| format!("create snapshot dir {}", parent.display()))?;
         }
     }
-    let bytes = to_bytes(store);
+    let bytes = to_bytes_named(store, model);
     let tmp = tmp_path(path);
     {
         let mut f = std::fs::File::create(&tmp)
@@ -252,18 +295,31 @@ pub fn save(store: &ChvStore, path: impl AsRef<Path>) -> Result<()> {
 /// Load and verify a knowledge checkpoint. Only ever reads `path` itself —
 /// a leftover partial `.tmp` from a crashed save is ignored.
 pub fn load(path: impl AsRef<Path>) -> Result<ChvStore> {
+    Ok(load_named(path)?.0)
+}
+
+/// [`load`], also returning the model name stamped at save time (empty for
+/// v1 files and unowned checkpoints) for the registry's identity check.
+pub fn load_named(path: impl AsRef<Path>) -> Result<(ChvStore, String)> {
     let path = path.as_ref();
     let bytes = std::fs::read(path)
         .with_context(|| format!("read knowledge file {}", path.display()))?;
-    from_bytes(&bytes).with_context(|| format!("parse knowledge file {}", path.display()))
+    from_bytes_named(&bytes)
+        .with_context(|| format!("parse knowledge file {}", path.display()))
 }
 
 /// Summary of a checkpoint on disk (the `clo_hdnn info --knowledge` view).
 #[derive(Clone, Debug)]
 pub struct KnowledgeInfo {
+    /// the config the checkpoint was trained under
     pub config: HdConfig,
+    /// registry model identity ("" for v1 files and unowned checkpoints)
+    pub model: String,
+    /// classes with at least one bundled sample
     pub trained_classes: usize,
+    /// total bundled (positive) learns
     pub total_learns: u64,
+    /// on-disk size
     pub file_bytes: usize,
 }
 
@@ -273,12 +329,13 @@ pub fn inspect(path: impl AsRef<Path>) -> Result<KnowledgeInfo> {
     let path = path.as_ref();
     let bytes = std::fs::read(path)
         .with_context(|| format!("read knowledge file {}", path.display()))?;
-    let store = from_bytes(&bytes)
+    let (store, model) = from_bytes_named(&bytes)
         .with_context(|| format!("parse knowledge file {}", path.display()))?;
     Ok(KnowledgeInfo {
         trained_classes: store.trained_classes(),
         total_learns: store.total_learns(),
         config: store.cfg().clone(),
+        model,
         file_bytes: bytes.len(),
     })
 }
@@ -465,6 +522,86 @@ mod tests {
             mutate(&mut c);
             assert!(!calibration_matches(&a, &c));
         }
+    }
+
+    #[test]
+    fn model_identity_roundtrips_and_defaults_empty() {
+        let mut rng = crate::util::Rng::new(0xD07);
+        let store = trained_store(&mut rng, 5);
+        // unnamed save -> empty model
+        let (back, model) = from_bytes_named(&to_bytes(&store)).unwrap();
+        assert_eq!(model, "");
+        assert_eq!(back.packed(), store.packed());
+        // named save -> the name comes back, store bit-identical
+        let (back, model) = from_bytes_named(&to_bytes_named(&store, "isolet-prod")).unwrap();
+        assert_eq!(model, "isolet-prod");
+        assert_eq!(back.packed(), store.packed());
+        // and through the disk path + inspect
+        let dir = tmp_dir("model_identity");
+        let path = dir.join("k.clok");
+        save_named(&store, &path, "isolet-prod").unwrap();
+        let (_, model) = load_named(&path).unwrap();
+        assert_eq!(model, "isolet-prod");
+        assert_eq!(inspect(&path).unwrap().model, "isolet-prod");
+    }
+
+    /// Serialize the CLOK **v1** image (no model field) exactly as PR 4's
+    /// writer did — the back-compat fixture generator.
+    fn to_bytes_v1(store: &ChvStore) -> Vec<u8> {
+        let cfg = store.cfg();
+        let mut payload = Vec::new();
+        let name = cfg.name.as_bytes();
+        payload.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        payload.extend_from_slice(name);
+        for v in [cfg.f1, cfg.f2, cfg.d1, cfg.d2, cfg.segments, cfg.classes] {
+            payload.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        payload.push(cfg.qbits);
+        for v in [cfg.scale_x, cfg.scale_q, cfg.mean_absdiff] {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        for c in 0..cfg.classes {
+            payload.extend_from_slice(&store.count(c).to_le_bytes());
+        }
+        for s in 0..cfg.segments {
+            for &v in store.segment(s) {
+                payload.push(v as i8 as u8);
+            }
+        }
+        for s in 0..cfg.segments {
+            for &v in store.sums_segment(s) {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let mut out = Vec::with_capacity(16 + payload.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    #[test]
+    fn v1_checkpoints_still_load_bit_identically() {
+        // back-compat read: a pre-registry (v1) checkpoint loads, reports
+        // an empty model, and reconstructs the exact same store
+        let mut rng = crate::util::Rng::new(0xD08);
+        let store = trained_store(&mut rng, 7);
+        let v1 = to_bytes_v1(&store);
+        assert_eq!(u32::from_le_bytes(v1[4..8].try_into().unwrap()), 1);
+        let (back, model) = from_bytes_named(&v1).unwrap();
+        assert_eq!(model, "");
+        let cfg = store.cfg();
+        for c in 0..cfg.classes {
+            assert_eq!(back.count(c), store.count(c));
+            assert_eq!(back.class_hv(c), store.class_hv(c));
+        }
+        assert_eq!(back.packed(), store.packed());
+        // v1 truncation/trailing still rejected
+        assert!(from_bytes(&v1[..v1.len() - 3]).is_err());
+        let mut bad = v1;
+        bad.extend_from_slice(&[0, 0]);
+        assert!(from_bytes(&bad).is_err());
     }
 
     #[test]

@@ -20,10 +20,12 @@
 //! The public API a downstream user touches: [`runtime::NativeBackend`] (or
 //! `runtime::Engine` with `--features pjrt`), [`hdc::HdClassifier`] +
 //! [`coordinator::Coordinator`] for serving/learning, [`serve::Server`] +
-//! [`serve::Client`] for the TCP wire protocol, [`hdc::knowledge`] for
-//! durable class-hypervector checkpoints, [`cl::ClHarness`] for
-//! continual-learning experiments, [`data::synthetic`] for hermetic
-//! workloads, and [`sim::Chip`] for cycle/energy estimates.
+//! [`serve::Registry`] + [`serve::Client`] for the multi-model TCP wire
+//! protocol (v1 single-model, v2 model-addressed + pipelined — byte-level
+//! spec in `docs/PROTOCOL.md`), [`hdc::knowledge`] for durable
+//! class-hypervector checkpoints, [`cl::ClHarness`] for continual-learning
+//! experiments, [`data::synthetic`] for hermetic workloads, and
+//! [`sim::Chip`] for cycle/energy estimates.
 
 pub mod baselines;
 pub mod cl;

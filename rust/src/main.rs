@@ -90,25 +90,36 @@ const HELP: &str = "clo-hdnn <info|infer|cl-run|sim|serve|loadgen|bench|asm> [fl
   --voltage <v>       DVFS point for sim (default 0.9)
 
 serve flags: --listen <host:port> switches from the Poisson demo to the TCP
-  wire-protocol server; --snapshot <file> (default knowledge checkpoint,
-  auto-restored on startup when it exists — suppress with --no-restore),
+  wire-protocol server; --models <a,b,c> hosts several models side by side
+  (one executor each; model names double as config names unless the
+  manifest's models section maps them), --model <name> = single model
+  (alias of --config); --snapshot <file> (default knowledge checkpoint,
+  auto-restored on startup when it exists — suppress with --no-restore;
+  with --models the file is per-model-ized: k.clok -> k_<model>.clok),
   --snapshot-every <n> (auto-snapshot cadence in learns; default 0 = off),
-  --restore <file> (explicit warm-start checkpoint), --learn <n> (pre-learn
-  n synthetic samples; default 0 in listen mode), --duration <secs> (serve
-  for a bounded time with a graceful shutdown flush; default 0 = forever —
-  a killed process keeps at most --snapshot-every learns unsaved),
+  --restore <file> (explicit warm-start checkpoint; single-model only),
+  --learn <n> (pre-learn n synthetic samples into the default model;
+  default 0 in listen mode), --duration <secs> (serve for a bounded time
+  with a graceful shutdown flush; default 0 = forever — a killed process
+  keeps at most --snapshot-every learns unsaved per model),
   --allow-remote-snapshot-paths (honor client-supplied Snapshot paths; off
   by default — the socket is unauthenticated)
 
 loadgen flags: --connect <host:port> (required), --clients <n> (default 4),
   --requests <n> per client (default 200), --learn-frac <f> (default 0.25),
+  --model <name> / --models <a,b> (wire-v2 model targeting; mixes the
+  request stream across models and reports per-model latency percentiles;
+  model names must be synthetic config names), --pipeline <k> (keep k
+  requests in flight per connection over wire v2; default 1),
   --search default|l1|packed, --out <file> (default BENCH_serve.json),
-  --snapshot-default (ask the server to checkpoint to its configured
-  default at the end), --snapshot-out <file> (checkpoint to an explicit
-  server-side path; needs --allow-remote-snapshot-paths on the server),
+  --snapshot-default (ask the server to checkpoint every driven model to
+  its configured default at the end), --snapshot-out <file> (checkpoint to
+  an explicit server-side path; single-model; needs
+  --allow-remote-snapshot-paths on the server),
   --per-class <n> (synthetic workload size, must match the server's)
 
-info flags: --knowledge <file> verifies + summarizes a knowledge checkpoint
+info flags: --knowledge <file> verifies + summarizes a knowledge
+  checkpoint; --model <name> shows one serving model's registry entry
 
 bench flags: --config tiny|isolet|ucihar|all, --quick (small sweep),
   --out <file> (default BENCH_classifier.json), --iters/--warmup,
@@ -236,7 +247,16 @@ fn cmd_info(args: &Args) -> Result<()> {
             "  trained classes {}/{} | total learns {}",
             info.trained_classes, c.classes, info.total_learns
         );
+        println!(
+            "  model identity: {}",
+            if info.model.is_empty() { "(none — loads into any model)" } else { info.model.as_str() }
+        );
         return Ok(());
+    }
+    // one serving model's registry entry (manifest models section, or a
+    // built-in synthetic config when serving hermetically)
+    if let Some(model) = args.get("model") {
+        return cmd_info_model(args, model);
     }
     let dir = artifacts_dir(args);
     if !dir.join("manifest.json").exists() {
@@ -276,6 +296,19 @@ fn cmd_info(args: &Args) -> Result<()> {
         println!("  {:34} {:14} batch={}", e.name, e.kind, e.batch);
     }
     println!("datasets: {}", m.datasets.len());
+    if !m.models.is_empty() {
+        println!("serving models: {}", m.models.len());
+        for e in &m.models {
+            println!(
+                "  {:12} config={:10} search={:8} threads={} knowledge={}",
+                e.name,
+                e.config,
+                e.search.as_deref().unwrap_or("default"),
+                e.threads,
+                e.knowledge_file.as_deref().unwrap_or("-")
+            );
+        }
+    }
     if let Some(k) = &m.knowledge {
         println!(
             "knowledge: {} (config {}, auto-snapshot every {} learns){}",
@@ -290,6 +323,62 @@ fn cmd_info(args: &Args) -> Result<()> {
             "wcfe: channels={:?} fc_out={} clusters={} pretrain_acc={:.3} clustered_acc={:.3}",
             w.channels, w.fc_out, w.clusters, w.pretrain_acc, w.clustered_acc
         );
+    }
+    Ok(())
+}
+
+/// `clo_hdnn info --model <name>`: one serving model's registry view.
+fn cmd_info_model(args: &Args, model: &str) -> Result<()> {
+    let dir = artifacts_dir(args);
+    if !dir.join("manifest.json").exists() {
+        let c = synthetic::config(model)?;
+        println!(
+            "model {model} (built-in synthetic, no registry entry): \
+             F={} D={} classes={} segments={}",
+            c.features(),
+            c.dim(),
+            c.classes,
+            c.segments
+        );
+        return Ok(());
+    }
+    let m = Manifest::load(&dir)?;
+    if let Some(entry) = m.model(model) {
+        let c = m.config(&entry.config)?;
+        println!(
+            "model {model}: config {} F={} D={} classes={} segments={}",
+            entry.config,
+            c.features(),
+            c.dim(),
+            c.classes,
+            c.segments
+        );
+        println!(
+            "  search {} | threads {} | tau {}",
+            entry.search.as_deref().unwrap_or("default"),
+            entry.threads,
+            entry.tau.map(|t| t.to_string()).unwrap_or_else(|| "default".into())
+        );
+        match m.model_knowledge_path(model) {
+            Some(p) => println!(
+                "  knowledge {} (auto-snapshot every {} learns){}",
+                p.display(),
+                entry.every_learns,
+                if p.exists() { "" } else { " [not yet written]" }
+            ),
+            None => println!("  knowledge: none configured"),
+        }
+    } else if let Ok(c) = m.config(model) {
+        println!(
+            "model {model}: no registry entry; config exists (F={} D={} classes={} \
+             segments={}) and can be served as a model of the same name",
+            c.features(),
+            c.dim(),
+            c.classes,
+            c.segments
+        );
+    } else {
+        anyhow::bail!("no model or config '{model}' in the manifest");
     }
     Ok(())
 }
@@ -545,6 +634,7 @@ fn serve_coordinator_opts(
         knowledge_opts(args, manifest, cfg_name, manifest_knowledge_defaults)?;
     Ok(CoordinatorOptions {
         backend,
+        model: String::new(),
         tau: args.f64_or("tau", 0.5)? as f32,
         min_segments: args.usize_or("min-seg", 1)?,
         search_mode: search_mode(args)?,
@@ -555,6 +645,127 @@ fn serve_coordinator_opts(
         snapshot_every,
         restore_path,
     })
+}
+
+/// Parse a `--models a,b,c` comma list (trimmed, empties dropped) — shared
+/// by serve and loadgen so the accepted syntax cannot drift between them.
+fn parse_model_list(list: &str) -> Vec<String> {
+    list.split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+/// Per-model-ize a shared `--snapshot` path when hosting several models:
+/// `k.clok` + model `isolet` -> `k_isolet.clok` (single-model serving
+/// keeps the path untouched).
+fn per_model_path(base: &std::path::Path, model: &str, multi: bool) -> std::path::PathBuf {
+    if !multi {
+        return base.to_path_buf();
+    }
+    let stem = base.file_stem().and_then(|s| s.to_str()).unwrap_or("knowledge");
+    let file = match base.extension().and_then(|e| e.to_str()) {
+        Some(ext) if !ext.is_empty() => format!("{stem}_{model}.{ext}"),
+        _ => format!("{stem}_{model}"),
+    };
+    base.with_file_name(file)
+}
+
+/// Build one registry [`ModelSpec`](clo_hdnn::serve::ModelSpec) for the
+/// listen server. Precedence per knob: explicit CLI flag > the manifest's
+/// `models` entry > (single-model only) the legacy `knowledge` section >
+/// library default.
+fn listen_model_spec(
+    args: &Args,
+    name: &str,
+    manifest: Option<&Manifest>,
+    multi: bool,
+) -> Result<clo_hdnn::serve::ModelSpec> {
+    let dir = artifacts_dir(args);
+    let meta = manifest.and_then(|m| m.model(name)).cloned();
+    let cfg_name = meta
+        .as_ref()
+        .map(|m| m.config.clone())
+        .unwrap_or_else(|| name.to_string());
+    let cfg = match manifest {
+        Some(m) => m.config(&cfg_name)?.clone(),
+        None => synthetic::config(&cfg_name)?,
+    };
+    let has_factors =
+        manifest.is_some() && dir.join(format!("hd_factors_{cfg_name}.bin")).exists();
+    let backend = match args.str_or("backend", "native").as_str() {
+        "native" if has_factors => BackendSpec::NativeArtifacts {
+            artifacts: dir.clone(),
+            config: cfg_name.clone(),
+        },
+        "native" => BackendSpec::Native { cfg: cfg.clone(), seed: 7 },
+        #[cfg(feature = "pjrt")]
+        "pjrt" => BackendSpec::Pjrt { artifacts: dir.clone(), config: cfg_name.clone() },
+        other => anyhow::bail!("unknown --backend '{other}' ({BACKENDS})"),
+    };
+    let search_mode = match args.get("search") {
+        Some(s) => SearchMode::parse(s)?,
+        None => match meta.as_ref().and_then(|m| m.search.as_deref()) {
+            Some(s) => SearchMode::parse(s)?,
+            None => SearchMode::default(),
+        },
+    };
+    let tau = match args.get("tau") {
+        Some(_) => args.f64_or("tau", 0.5)? as f32,
+        None => meta.as_ref().and_then(|m| m.tau).unwrap_or(0.5) as f32,
+    };
+    let threads = match args.get("threads") {
+        Some(_) => threads_arg(args)?,
+        None => meta.as_ref().map(|m| m.threads).unwrap_or(0),
+    };
+    // knowledge wiring: the model's manifest entry first; the legacy
+    // single-model `knowledge` section only when serving a single model
+    let model_k = manifest.and_then(|m| m.model_knowledge_path(name));
+    let legacy_k = if multi {
+        None
+    } else {
+        manifest.and_then(|m| m.knowledge_path(&cfg_name))
+    };
+    let snapshot_path = args
+        .get("snapshot")
+        .map(|p| per_model_path(std::path::Path::new(p), name, multi))
+        .or(model_k)
+        .or(legacy_k);
+    let meta_every = meta.as_ref().map(|m| m.every_learns).unwrap_or(0);
+    let legacy_every = if multi || meta_every > 0 {
+        0
+    } else {
+        manifest
+            .and_then(|m| m.knowledge.as_ref())
+            .filter(|k| k.config == cfg_name)
+            .map(|k| k.every_learns)
+            .unwrap_or(0)
+    };
+    let snapshot_every =
+        args.usize_or("snapshot-every", meta_every.max(legacy_every))?;
+    let restore_path = match args.get("restore") {
+        Some(_) if multi => anyhow::bail!(
+            "--restore targets a single model; with --models, per-model \
+             --snapshot checkpoints auto-restore instead"
+        ),
+        Some(p) => Some(std::path::PathBuf::from(p)),
+        None if args.flag("no-restore") => None,
+        None => snapshot_path.clone().filter(|p| p.exists()),
+    };
+    let opts = CoordinatorOptions {
+        backend,
+        model: name.to_string(),
+        tau,
+        min_segments: args.usize_or("min-seg", 1)?,
+        search_mode,
+        mode_policy: Default::default(),
+        queue_depth: 256,
+        threads,
+        snapshot_path,
+        snapshot_every,
+        restore_path,
+    };
+    Ok(clo_hdnn::serve::ModelSpec::new(name, opts))
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -604,40 +815,76 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `clo_hdnn serve --listen <addr>`: the TCP wire-protocol server.
+/// `clo_hdnn serve --listen <addr>`: the TCP wire-protocol server — a
+/// multi-model registry behind one socket. `--models a,b,c` (or the
+/// manifest's `models` section) hosts several models side by side, each
+/// with its own executor, search mode, and durable knowledge checkpoint;
+/// a single `--model`/`--config` keeps the original one-model behavior.
 /// Learned knowledge survives restarts: an existing `--snapshot` file (or
-/// the manifest's `knowledge` checkpoint) is restored on startup, learns
-/// auto-checkpoint every `--snapshot-every` bundles, and shutdown flushes
-/// whatever is unsaved.
+/// the manifest's knowledge wiring) is restored on startup per model,
+/// learns auto-checkpoint every `--snapshot-every` bundles, and shutdown
+/// flushes whatever is unsaved.
 fn cmd_serve_listen(args: &Args) -> Result<()> {
-    use clo_hdnn::serve::{ServeOptions, Server};
+    use clo_hdnn::serve::{Registry, ServeOptions, Server};
 
     let listen = args.str_or("listen", "127.0.0.1:7311");
-    let cfg_name = args.str_or("config", "tiny");
-    // the long-lived server only needs datasets for the optional pre-learn
-    // phase (default 0) — don't load/generate the whole workload otherwise
-    let learn_arg = args.usize_or("learn", 0)?;
-    let (cfg, manifest, train) = if learn_arg > 0 {
-        let (cfg, train, _test, manifest) = load_workload(args, &cfg_name)?;
-        (cfg, manifest, Some(train))
+    let dir = artifacts_dir(args);
+    let manifest = if dir.join("manifest.json").exists() {
+        Some(Manifest::load(&dir)?)
     } else {
-        let dir = artifacts_dir(args);
-        if dir.join("manifest.json").exists() {
-            let m = Manifest::load(&dir)?;
-            (m.config(&cfg_name)?.clone(), Some(m), None)
-        } else {
-            (synthetic::config(&cfg_name)?, None, None)
-        }
+        None
     };
-    let opts = serve_coordinator_opts(args, &cfg, &cfg_name, manifest.as_ref(), true)?;
-    println!(
-        "serving config {cfg_name} on {:?} | search {:?} | snapshot {:?} (every {} learns) | restore {:?}",
-        opts.backend, opts.search_mode, opts.snapshot_path, opts.snapshot_every, opts.restore_path
-    );
-    let coord = Coordinator::start(opts)?;
-    // optional pre-learn phase (default 0: knowledge comes from the
-    // checkpoint and from Learn traffic)
-    if let Some(train) = &train {
+    // model list: --models a,b | --model a (alias --config a) | every
+    // manifest models entry | the tiny default
+    let names: Vec<String> = match args.get("models") {
+        Some(list) => parse_model_list(list),
+        None => match args.get("model").or_else(|| args.get("config")) {
+            Some(one) => vec![one.to_string()],
+            None => {
+                let from_manifest: Vec<String> = manifest
+                    .as_ref()
+                    .map(|m| m.models.iter().map(|e| e.name.clone()).collect())
+                    .unwrap_or_default();
+                if from_manifest.is_empty() {
+                    vec!["tiny".to_string()]
+                } else {
+                    from_manifest
+                }
+            }
+        },
+    };
+    if names.is_empty() {
+        anyhow::bail!("serve --listen needs at least one model (--models a,b)");
+    }
+    let multi = names.len() > 1;
+    let mut specs = Vec::with_capacity(names.len());
+    for name in &names {
+        specs.push(listen_model_spec(args, name, manifest.as_ref(), multi)?);
+    }
+    for spec in &specs {
+        println!(
+            "model {:12} on {:?} | search {:?} | snapshot {:?} (every {} learns) | restore {:?}",
+            spec.name,
+            spec.opts.backend,
+            spec.opts.search_mode,
+            spec.opts.snapshot_path,
+            spec.opts.snapshot_every,
+            spec.opts.restore_path
+        );
+    }
+    let registry = Registry::start(specs)?;
+    // optional pre-learn phase into the default model (default 0:
+    // knowledge comes from the checkpoints and from Learn traffic)
+    let learn_arg = args.usize_or("learn", 0)?;
+    if learn_arg > 0 {
+        let default = registry.default_name().to_string();
+        let default_cfg = manifest
+            .as_ref()
+            .and_then(|m| m.model(&default))
+            .map(|e| e.config.clone())
+            .unwrap_or_else(|| default.clone());
+        let (_, train, _test, _) = load_workload(args, &default_cfg)?;
+        let coord = registry.get("")?;
         let learn_n = learn_arg.min(train.n);
         for i in 0..learn_n {
             let r = coord.call(Payload::Learn(train.sample(i).to_vec(), train.label(i)))?;
@@ -645,14 +892,19 @@ fn cmd_serve_listen(args: &Args) -> Result<()> {
                 anyhow::bail!("pre-learn failed: {e}");
             }
         }
-        println!("pre-learned {learn_n} samples");
+        println!("pre-learned {learn_n} samples into model {default}");
     }
     let serve_opts = ServeOptions {
         allow_snapshot_paths: args.flag("allow-remote-snapshot-paths"),
         ..ServeOptions::default()
     };
-    let server = Server::start(&listen, coord, serve_opts)?;
-    println!("listening on {}", server.local_addr());
+    let server = Server::start(&listen, registry, serve_opts)?;
+    println!(
+        "listening on {} | {} model(s): {} | wire v1+v2 (pipelined)",
+        server.local_addr(),
+        names.len(),
+        names.join(", ")
+    );
     let duration = args.f64_or("duration", 0.0)?;
     if duration > 0.0 {
         std::thread::sleep(std::time::Duration::from_secs_f64(duration));
@@ -660,7 +912,7 @@ fn cmd_serve_listen(args: &Args) -> Result<()> {
         println!(
             "shutting down after {duration}s: served {served} frames | {learns} learns | {wire_errors} wire errors"
         );
-        server.stop(); // joins connections, flushes the shutdown snapshot
+        server.stop(); // joins connections, flushes the shutdown snapshots
     } else {
         // serve until killed
         loop {
@@ -670,26 +922,103 @@ fn cmd_serve_listen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One loadgen target: a wire model name ("" = server default) plus its
+/// deterministic synthetic workload.
+struct LoadgenWork {
+    wire_model: String,
+    label: String,
+    train: Dataset,
+    test: Dataset,
+}
+
+/// A request in flight on a pipelined loadgen connection.
+struct LoadgenPending {
+    model: usize,
+    /// expected label for infers; `None` marks a learn
+    expect: Option<usize>,
+    t0: std::time::Instant,
+}
+
+/// Collect one reply off a pipelined connection and fold it into the
+/// per-model accumulators `(metrics, correct, infers)`.
+fn loadgen_drain_one(
+    client: &mut clo_hdnn::serve::Client,
+    pending: &mut std::collections::HashMap<u64, LoadgenPending>,
+    per: &mut [(clo_hdnn::coordinator::ServeMetrics, usize, usize)],
+) -> Result<()> {
+    use clo_hdnn::serve::WireResponse;
+    let resp = client.recv()?;
+    let p = pending
+        .remove(&resp.id())
+        .ok_or_else(|| anyhow::anyhow!("reply id {} matches no in-flight request", resp.id()))?;
+    let dt = p.t0.elapsed().as_secs_f64();
+    let (m, correct, infers) = &mut per[p.model];
+    match (&resp, p.expect) {
+        (WireResponse::Error { .. }, _) => m.record_error(),
+        (WireResponse::Infer { class, segments, early, .. }, Some(label)) => {
+            m.record(dt, *segments as usize, *early, false);
+            *infers += 1;
+            *correct += usize::from(*class as usize == label);
+        }
+        (WireResponse::Learn { .. }, None) => m.record_learn(dt),
+        (other, _) => anyhow::bail!("reply type does not match its request: {other:?}"),
+    }
+    Ok(())
+}
+
 /// `clo_hdnn loadgen`: drive a live TCP server with N concurrent client
-/// threads mixing Infer and Learn traffic over the deterministic synthetic
-/// workload, then report throughput + latency percentiles and write
-/// `BENCH_serve.json`. With `--learn-frac 0` the request stream is fully
-/// deterministic, so accuracy comparisons across a server restart are
-/// exact — the warm-restart CI gate relies on that.
+/// threads mixing Infer and Learn traffic over deterministic synthetic
+/// workloads, then report throughput + latency percentiles (per model when
+/// driving several) and write `BENCH_serve.json`. `--models a,b` targets a
+/// model mix over wire v2, `--pipeline k` keeps k requests in flight per
+/// connection. With `--learn-frac 0` the per-model request streams are
+/// fully deterministic, so accuracy comparisons across a server restart
+/// are exact — the warm-restart CI gate relies on that.
 fn cmd_loadgen(args: &Args) -> Result<()> {
     use clo_hdnn::coordinator::ServeMetrics;
-    use clo_hdnn::serve::Client;
+    use clo_hdnn::serve::{Client, ReqBody};
     use clo_hdnn::util::json::Json;
     use clo_hdnn::util::stats::Table;
+    use std::collections::{BTreeMap, HashMap};
 
     let addr = args
         .get("connect")
         .ok_or_else(|| anyhow::anyhow!("loadgen needs --connect <host:port>"))?
         .to_string();
-    let cfg_name = args.str_or("config", "tiny");
-    let cfg = synthetic::config(&cfg_name)?;
+    let model_names: Vec<String> = match args.get("models") {
+        Some(list) => parse_model_list(list),
+        None => args.get("model").map(|m| vec![m.to_string()]).unwrap_or_default(),
+    };
+    let pipeline = args.usize_or("pipeline", 1)?.clamp(1, 64);
+    // model targeting and pipelining both need wire v2; a plain run stays
+    // on v1 so the launch protocol keeps getting exercised end to end
+    let v2 = !model_names.is_empty() || pipeline > 1;
     let per_class = args.usize_or("per-class", 40)?;
-    let (train, test) = synthetic::blobs(&cfg, per_class, 10, 17);
+    let works: Vec<LoadgenWork> = if model_names.is_empty() {
+        let cfg_name = args.str_or("config", "tiny");
+        let cfg = synthetic::config(&cfg_name)?;
+        let (train, test) = synthetic::blobs(&cfg, per_class, 10, 17);
+        vec![LoadgenWork { wire_model: String::new(), label: cfg_name, train, test }]
+    } else {
+        model_names
+            .iter()
+            .map(|name| {
+                let cfg = synthetic::config(name).map_err(|e| {
+                    anyhow::anyhow!(
+                        "loadgen workloads are synthetic, so --models entries must \
+                         be synthetic config names: {e}"
+                    )
+                })?;
+                let (train, test) = synthetic::blobs(&cfg, per_class, 10, 17);
+                Ok(LoadgenWork {
+                    wire_model: name.clone(),
+                    label: name.clone(),
+                    train,
+                    test,
+                })
+            })
+            .collect::<Result<_>>()?
+    };
     let clients = args.usize_or("clients", 4)?.max(1);
     let requests = args.usize_or("requests", 200)?;
     let learn_frac = args.f64_or("learn-frac", 0.25)?.clamp(0.0, 1.0);
@@ -699,47 +1028,58 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     };
 
     println!(
-        "loadgen -> {addr}: {clients} clients x {requests} requests, learn-frac {learn_frac}, search {:?}",
+        "loadgen -> {addr}: {clients} clients x {requests} requests, learn-frac {learn_frac}, \
+         pipeline {pipeline}, models [{}], search {:?}",
+        works.iter().map(|w| w.label.as_str()).collect::<Vec<_>>().join(","),
         mode
     );
+    type PerModel = Vec<(ServeMetrics, usize, usize)>;
     let t0 = std::time::Instant::now();
-    let results: Vec<Result<(ServeMetrics, usize, usize)>> = std::thread::scope(|s| {
+    let results: Vec<Result<PerModel>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..clients)
             .map(|t| {
-                let (addr, train, test) = (&addr, &train, &test);
-                s.spawn(move || -> Result<(ServeMetrics, usize, usize)> {
-                    let mut client = Client::connect(addr)?;
+                let (addr, works) = (&addr, &works);
+                s.spawn(move || -> Result<PerModel> {
+                    let mut client =
+                        if v2 { Client::connect_v2(addr)? } else { Client::connect(addr)? };
                     let mut rng = Rng::new(0xC0FF_EE00 + t as u64);
-                    let mut m = ServeMetrics::default();
-                    let (mut correct, mut infers) = (0usize, 0usize);
+                    let mut per: PerModel =
+                        works.iter().map(|_| (ServeMetrics::default(), 0, 0)).collect();
+                    // per-model deterministic sample schedule: client t
+                    // covers a strided slice of each model's dataset
+                    let mut sent = vec![0usize; works.len()];
+                    let mut pending: HashMap<u64, LoadgenPending> = HashMap::new();
                     for i in 0..requests {
-                        // deterministic sample schedule: client t covers a
-                        // strided slice of the dataset
-                        let idx = (t + i * clients) % test.n;
-                        let q0 = std::time::Instant::now();
-                        if rng.uniform() < learn_frac {
-                            let j = (t + i * clients) % train.n;
-                            match client.learn(train.sample(j), train.label(j)) {
-                                Ok(()) => m.record_learn(q0.elapsed().as_secs_f64()),
-                                Err(_) => m.record_error(),
-                            }
+                        let mi = (t + i) % works.len();
+                        let w = &works[mi];
+                        let k = sent[mi];
+                        sent[mi] += 1;
+                        let (body, expect) = if rng.uniform() < learn_frac {
+                            let j = (t + k * clients) % w.train.n;
+                            let body = ReqBody::Learn {
+                                class: w.train.label(j) as u32,
+                                features: w.train.sample(j).to_vec(),
+                            };
+                            (body, None)
                         } else {
-                            match client.infer_mode(test.sample(idx), mode) {
-                                Ok(r) => {
-                                    m.record(
-                                        q0.elapsed().as_secs_f64(),
-                                        r.segments_used,
-                                        r.early_exit,
-                                        false,
-                                    );
-                                    infers += 1;
-                                    correct += usize::from(r.class == test.label(idx));
-                                }
-                                Err(_) => m.record_error(),
-                            }
+                            let idx = (t + k * clients) % w.test.n;
+                            let body = ReqBody::Infer {
+                                mode: Client::mode_byte(mode),
+                                features: w.test.sample(idx).to_vec(),
+                            };
+                            (body, Some(w.test.label(idx)))
+                        };
+                        let q0 = std::time::Instant::now();
+                        let id = client.send_for(&w.wire_model, body)?;
+                        pending.insert(id, LoadgenPending { model: mi, expect, t0: q0 });
+                        while pending.len() >= pipeline {
+                            loadgen_drain_one(&mut client, &mut pending, &mut per)?;
                         }
                     }
-                    Ok((m, correct, infers))
+                    while !pending.is_empty() {
+                        loadgen_drain_one(&mut client, &mut pending, &mut per)?;
+                    }
+                    Ok(per)
                 })
             })
             .collect();
@@ -750,62 +1090,138 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     });
     let wall_s = t0.elapsed().as_secs_f64();
 
+    let mut by_model: PerModel = works.iter().map(|_| (ServeMetrics::default(), 0, 0)).collect();
+    for r in results {
+        for (i, (m, c, n)) in r?.into_iter().enumerate() {
+            by_model[i].0.merge(&m);
+            by_model[i].1 += c;
+            by_model[i].2 += n;
+        }
+    }
     let mut metrics = ServeMetrics::default();
     let (mut correct, mut infers) = (0usize, 0usize);
-    for r in results {
-        let (m, c, n) = r?;
-        metrics.merge(&m);
-        correct += c;
-        infers += n;
+    for (m, c, n) in &mut by_model {
+        m.wall_s = wall_s;
+        metrics.merge(m);
+        correct += *c;
+        infers += *n;
     }
     metrics.wall_s = wall_s;
     let accuracy = if infers > 0 { correct as f64 / infers as f64 } else { f64::NAN };
 
-    let p = |q: f64| metrics.latency_percentile(q);
+    let lat = metrics.latency_summary();
     let mut table = Table::new(&["metric", "value"]);
     table.row(&["requests".into(), format!("{}", metrics.total)]);
     table.row(&["learns".into(), format!("{}", metrics.learns)]);
     table.row(&["errors".into(), format!("{}", metrics.errors)]);
     table.row(&["accuracy".into(), format!("{accuracy:.4}")]);
     table.row(&["throughput".into(), format!("{:.1} req/s", metrics.throughput_rps())]);
-    table.row(&["p50".into(), fmt_secs(p(50.0))]);
-    table.row(&["p95".into(), fmt_secs(p(95.0))]);
-    table.row(&["p99".into(), fmt_secs(p(99.0))]);
+    table.row(&["p50".into(), fmt_secs(lat.p50_s)]);
+    table.row(&["p95".into(), fmt_secs(lat.p95_s)]);
+    table.row(&["p99".into(), fmt_secs(lat.p99_s)]);
     table.print();
-
-    // end-of-run server-side actions: optional snapshot + stats
-    let mut control = Client::connect(&addr)?;
-    let snapshot_path = if args.flag("snapshot-default") {
-        // empty wire path = the server's configured default checkpoint
-        let written = control.snapshot(None)?;
-        println!("server checkpointed knowledge to {written}");
-        Some(written)
-    } else {
-        match args.get("snapshot-out") {
-            Some(path) => {
-                let written = control.snapshot(Some(path))?;
-                println!("server checkpointed knowledge to {written}");
-                Some(written)
-            }
-            None => None,
+    if works.len() > 1 {
+        let mut mt = Table::new(&["model", "requests", "learns", "errors", "acc", "p50", "p95", "p99"]);
+        for (w, (m, c, n)) in works.iter().zip(&by_model) {
+            let s = m.latency_summary();
+            let acc = if *n > 0 { *c as f64 / *n as f64 } else { f64::NAN };
+            mt.row(&[
+                w.label.clone(),
+                format!("{}", m.total),
+                format!("{}", m.learns),
+                format!("{}", m.errors),
+                format!("{acc:.4}"),
+                fmt_secs(s.p50_s),
+                fmt_secs(s.p95_s),
+                fmt_secs(s.p99_s),
+            ]);
         }
-    };
-    let server_stats = control.stats()?;
+        mt.print();
+    }
+
+    // end-of-run server-side actions: optional snapshots + per-model stats
+    let mut control = if v2 { Client::connect_v2(&addr)? } else { Client::connect(&addr)? };
+    let mut snapshot_paths: Vec<String> = Vec::new();
+    if args.flag("snapshot-default") {
+        // empty wire path = the server's configured default checkpoint,
+        // one per driven model
+        for w in &works {
+            control.set_model(&w.wire_model)?;
+            let written = control.snapshot(None)?;
+            println!("server checkpointed model [{}] to {written}", w.label);
+            snapshot_paths.push(written);
+        }
+    } else if let Some(path) = args.get("snapshot-out") {
+        if works.len() > 1 {
+            anyhow::bail!("--snapshot-out targets one model; use --snapshot-default");
+        }
+        control.set_model(&works[0].wire_model)?;
+        let written = control.snapshot(Some(path))?;
+        println!("server checkpointed knowledge to {written}");
+        snapshot_paths.push(written);
+    }
+    let mut models_json: BTreeMap<String, Json> = BTreeMap::new();
+    let mut last_stats = None;
+    // knowledge counters summed across driven models (the process-wide
+    // served/wire_errors counters are identical in every reply)
+    let (mut total_learns, mut total_classes, mut total_snapshots) = (0u64, 0u64, 0u64);
+    for (w, (m, c, n)) in works.iter().zip(&by_model) {
+        control.set_model(&w.wire_model)?;
+        let st = control.stats()?;
+        total_learns += st.learns;
+        total_classes += st.trained_classes as u64;
+        total_snapshots += st.snapshots;
+        let s = m.latency_summary();
+        let acc = if *n > 0 { *c as f64 / *n as f64 } else { f64::NAN };
+        models_json.insert(
+            w.label.clone(),
+            Json::obj(vec![
+                ("requests", Json::Num(m.total as f64)),
+                ("learns", Json::Num(m.learns as f64)),
+                ("infers", Json::Num(*n as f64)),
+                ("errors", Json::Num(m.errors as f64)),
+                ("accuracy", Json::Num(acc)),
+                (
+                    "latency",
+                    Json::obj(vec![
+                        ("mean_s", Json::Num(s.mean_s)),
+                        ("p50_s", Json::Num(s.p50_s)),
+                        ("p95_s", Json::Num(s.p95_s)),
+                        ("p99_s", Json::Num(s.p99_s)),
+                    ]),
+                ),
+                (
+                    "server",
+                    Json::obj(vec![
+                        ("learns", Json::Num(st.learns as f64)),
+                        ("trained_classes", Json::Num(st.trained_classes as f64)),
+                        ("snapshots", Json::Num(st.snapshots as f64)),
+                    ]),
+                ),
+            ]),
+        );
+        last_stats = Some(st);
+    }
+    let server_stats = last_stats.expect("at least one model is always driven");
     println!(
-        "server: served {} | learns {} | trained classes {} | snapshots {} | wire errors {}",
+        "server: served {} | learns {} (across {} driven model(s)) | wire errors {}",
         server_stats.served,
-        server_stats.learns,
-        server_stats.trained_classes,
-        server_stats.snapshots,
+        total_learns,
+        works.len(),
         server_stats.wire_errors
     );
 
     let doc = Json::obj(vec![
-        ("version", Json::Num(1.0)),
-        ("config", Json::Str(cfg_name.clone())),
+        ("version", Json::Num(2.0)),
+        (
+            "config",
+            Json::Str(works.iter().map(|w| w.label.clone()).collect::<Vec<_>>().join(",")),
+        ),
         ("clients", Json::Num(clients as f64)),
         ("requests_per_client", Json::Num(requests as f64)),
         ("learn_frac", Json::Num(learn_frac)),
+        ("pipeline", Json::Num(pipeline as f64)),
+        ("wire_version", Json::Num(if v2 { 2.0 } else { 1.0 })),
         ("requests", Json::Num(metrics.total as f64)),
         ("learns", Json::Num(metrics.learns as f64)),
         ("infers", Json::Num(infers as f64)),
@@ -816,28 +1232,33 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         (
             "latency",
             Json::obj(vec![
-                ("mean_s", Json::Num(metrics.mean_latency())),
-                ("p50_s", Json::Num(p(50.0))),
-                ("p95_s", Json::Num(p(95.0))),
-                ("p99_s", Json::Num(p(99.0))),
+                ("mean_s", Json::Num(lat.mean_s)),
+                ("p50_s", Json::Num(lat.p50_s)),
+                ("p95_s", Json::Num(lat.p95_s)),
+                ("p99_s", Json::Num(lat.p99_s)),
             ]),
         ),
+        ("models", Json::Obj(models_json)),
         (
             "server",
+            // served/wire_errors are process-wide; the knowledge counters
+            // are summed over the driven models (per-model values live
+            // under "models")
             Json::obj(vec![
                 ("served", Json::Num(server_stats.served as f64)),
                 ("wire_errors", Json::Num(server_stats.wire_errors as f64)),
-                ("learns", Json::Num(server_stats.learns as f64)),
-                (
-                    "trained_classes",
-                    Json::Num(server_stats.trained_classes as f64),
-                ),
-                ("snapshots", Json::Num(server_stats.snapshots as f64)),
+                ("learns", Json::Num(total_learns as f64)),
+                ("trained_classes", Json::Num(total_classes as f64)),
+                ("snapshots", Json::Num(total_snapshots as f64)),
             ]),
         ),
         (
             "snapshot_out",
-            snapshot_path.map(Json::Str).unwrap_or(Json::Null),
+            if snapshot_paths.is_empty() {
+                Json::Null
+            } else {
+                Json::Arr(snapshot_paths.into_iter().map(Json::Str).collect())
+            },
         ),
     ]);
     let out_path = args.str_or("out", "BENCH_serve.json");

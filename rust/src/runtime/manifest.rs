@@ -60,14 +60,52 @@ pub struct KnowledgeMeta {
     pub every_learns: usize,
 }
 
+/// One `models` entry: a named serving model for the multi-model registry
+/// (`clo_hdnn serve --listen` hosts every entry side by side).
+///
+/// ```json
+/// "models": [
+///   {"name": "tiny", "config": "tiny",
+///    "knowledge": "knowledge_tiny.clok", "every_learns": 256,
+///    "search": "packed", "threads": 0, "tau": 0.5}
+/// ]
+/// ```
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    /// registry name — what wire-v2 frames address (defaults to `config`)
+    pub name: String,
+    /// the manifest config this model serves (defaults to `name`)
+    pub config: String,
+    /// default search kernel ("l1"|"packed"; absent = library default)
+    pub search: Option<String>,
+    /// per-model worker-thread budget (0 = auto)
+    pub threads: usize,
+    /// progressive-search confidence override
+    pub tau: Option<f64>,
+    /// knowledge checkpoint file, relative to the artifact dir
+    pub knowledge_file: Option<String>,
+    /// auto-snapshot cadence (every N learns; 0 = explicit snapshots only)
+    pub every_learns: usize,
+}
+
+/// Parsed form of `artifacts/manifest.json`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// the artifact directory the manifest lives in
     pub dir: PathBuf,
+    /// per-config HD geometry + calibration
     pub configs: BTreeMap<String, HdConfig>,
+    /// AOT-lowered executables by name
     pub executables: BTreeMap<String, ExeMeta>,
+    /// dataset artifacts by name
     pub datasets: BTreeMap<String, DatasetMeta>,
+    /// WCFE build info (normal mode only)
     pub wcfe: Option<WcfeMeta>,
+    /// single-model knowledge wiring (predates `models`; still honored by
+    /// the single-model serve path)
     pub knowledge: Option<KnowledgeMeta>,
+    /// multi-model registry entries (empty when absent)
+    pub models: Vec<ModelMeta>,
 }
 
 fn usize_arr(j: &Json) -> Vec<usize> {
@@ -185,7 +223,52 @@ impl Manifest {
             every_learns: k.get("every_learns").and_then(Json::as_usize).unwrap_or(0),
         });
 
-        Ok(Manifest { dir, configs, executables, datasets, wcfe, knowledge })
+        let mut models = Vec::new();
+        for m in j.get("models").and_then(Json::as_arr).unwrap_or(&[]) {
+            let config = m.get("config").and_then(Json::as_str).unwrap_or("").to_string();
+            let name = m
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or(config.as_str())
+                .to_string();
+            if name.is_empty() {
+                bail!("manifest models entry needs a name or a config");
+            }
+            let config = if config.is_empty() { name.clone() } else { config };
+            if !configs.contains_key(&config) {
+                bail!("manifest model '{name}' references unknown config '{config}'");
+            }
+            if models.iter().any(|e: &ModelMeta| e.name == name) {
+                bail!("manifest models entry '{name}' is duplicated");
+            }
+            models.push(ModelMeta {
+                search: m.get("search").and_then(Json::as_str).map(str::to_string),
+                threads: m.get("threads").and_then(Json::as_usize).unwrap_or(0),
+                tau: m.get("tau").and_then(Json::as_f64),
+                knowledge_file: m
+                    .get("knowledge")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+                every_learns: m.get("every_learns").and_then(Json::as_usize).unwrap_or(0),
+                name,
+                config,
+            });
+        }
+
+        Ok(Manifest { dir, configs, executables, datasets, wcfe, knowledge, models })
+    }
+
+    /// The registry entry for `name`, when the manifest declares one.
+    pub fn model(&self, name: &str) -> Option<&ModelMeta> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    /// Absolute path of a registry model's knowledge checkpoint, when its
+    /// manifest entry wires one up.
+    pub fn model_knowledge_path(&self, name: &str) -> Option<PathBuf> {
+        self.model(name)
+            .and_then(|m| m.knowledge_file.as_ref())
+            .map(|f| self.dir.join(f))
     }
 
     /// Absolute path of the knowledge checkpoint for `config`, when the
@@ -265,7 +348,12 @@ mod tests {
       "datasets": [{"name":"ds_tiny_train","file":"d.bin","n":400,
                     "dim":64,"classes":10}],
       "knowledge": {"file":"knowledge_tiny.clok","config":"tiny",
-                    "every_learns":256}
+                    "every_learns":256},
+      "models": [
+        {"name":"tiny","knowledge":"knowledge_tiny.clok","every_learns":128,
+         "search":"packed","threads":2,"tau":0.25},
+        {"name":"tiny-l1","config":"tiny"}
+      ]
     }"#;
 
     #[test]
@@ -290,7 +378,43 @@ mod tests {
             m.dir.join("knowledge_tiny.clok")
         );
         assert!(m.knowledge_path("other").is_none());
+        // models section: registry entries with defaults and overrides
+        assert_eq!(m.models.len(), 2);
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.config, "tiny");
+        assert_eq!(tiny.search.as_deref(), Some("packed"));
+        assert_eq!(tiny.threads, 2);
+        assert_eq!(tiny.tau, Some(0.25));
+        assert_eq!(tiny.every_learns, 128);
+        assert_eq!(
+            m.model_knowledge_path("tiny").unwrap(),
+            m.dir.join("knowledge_tiny.clok")
+        );
+        let l1 = m.model("tiny-l1").unwrap();
+        assert_eq!(l1.config, "tiny", "two registry names may share one config");
+        assert!(l1.search.is_none());
+        assert_eq!(l1.threads, 0);
+        assert!(m.model_knowledge_path("tiny-l1").is_none());
+        assert!(m.model("absent").is_none());
         // files don't exist -> check_files errors
         assert!(m.check_files().is_err());
+    }
+
+    #[test]
+    fn models_entries_are_validated() {
+        let dir = std::env::temp_dir().join("clo_hdnn_manifest_models_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        // a model naming an unknown config must fail the load
+        let bad = SAMPLE.replace(r#"{"name":"tiny-l1","config":"tiny"}"#,
+                                 r#"{"name":"tiny-l1","config":"missing"}"#);
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        let e = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(e.contains("missing"), "{e}");
+        // duplicate names must fail the load
+        let dup = SAMPLE.replace(r#"{"name":"tiny-l1","config":"tiny"}"#,
+                                 r#"{"name":"tiny","config":"tiny"}"#);
+        std::fs::write(dir.join("manifest.json"), dup).unwrap();
+        let e = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(e.contains("duplicated"), "{e}");
     }
 }

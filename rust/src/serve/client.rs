@@ -1,29 +1,89 @@
 //! Blocking TCP client for the [`wire`](crate::serve::wire) protocol —
 //! what `clo_hdnn loadgen` drives and the integration tests talk through.
+//!
+//! A fresh [`Client`] speaks wire v1 (single implicit model, one request
+//! in flight per call). Calling [`Client::hello`] (or connecting with
+//! [`Client::connect_v2`]) negotiates wire v2, which unlocks model
+//! targeting ([`Client::set_model`]) and pipelining: the low-level
+//! [`Client::send_for`] / [`Client::recv`] pair lets a caller keep many
+//! client-id'd requests in flight on one connection and collect replies in
+//! whatever order the server's model executors complete them.
+//!
+//! ```no_run
+//! use clo_hdnn::serve::{Client, ReqBody};
+//!
+//! # fn main() -> clo_hdnn::Result<()> {
+//! // blocking, one model
+//! let mut c = Client::connect("127.0.0.1:7311")?;
+//! c.learn(&[0.0; 64], 3)?;
+//! let reply = c.infer(&[0.0; 64])?;
+//! println!("class {} in {} segments", reply.class, reply.segments_used);
+//!
+//! // pipelined, two models on one connection
+//! let mut c = Client::connect_v2("127.0.0.1:7311")?;
+//! let a = c.send_for("tiny", ReqBody::Infer { mode: 0, features: vec![0.0; 64] })?;
+//! let b = c.send_for("isolet", ReqBody::Infer { mode: 0, features: vec![0.0; 640] })?;
+//! for _ in 0..2 {
+//!     let resp = c.recv()?; // match resp.id() against a and b
+//!     assert!(resp.id() == a || resp.id() == b);
+//! }
+//! # Ok(())
+//! # }
+//! ```
 
 use crate::hdc::SearchMode;
-use crate::serve::wire::{self, WireRequest, WireResponse, WireStats};
+use crate::serve::wire::{self, ReqBody, WireRequest, WireResponse, WireStats};
 use crate::Result;
 use anyhow::{bail, Context};
 use std::io::BufReader;
 use std::net::TcpStream;
 
+/// A server-reported request failure: the echoed request id plus the
+/// server-side detail string. Carried inside the `anyhow` error chain so
+/// callers can `downcast_ref::<ServerError>()` to tell a server-side
+/// refusal apart from transport failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServerError {
+    /// the id of the request that failed (0 when the server could not
+    /// recover one from the frame)
+    pub id: u64,
+    /// server-side error detail
+    pub msg: String,
+}
+
+impl std::fmt::Display for ServerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server error (request {}): {}", self.id, self.msg)
+    }
+}
+
+impl std::error::Error for ServerError {}
+
 /// One classification reply over the wire.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct InferReply {
+    /// predicted class
     pub class: usize,
+    /// progressive-search segments evaluated
     pub segments_used: usize,
+    /// whether the search exited before the last segment
     pub early_exit: bool,
 }
 
-/// A synchronous connection: one in-flight request at a time, matched by id.
+/// A synchronous connection. The high-level calls (`infer`/`learn`/…)
+/// keep one request in flight and match the reply by id; the low-level
+/// `send_for`/`recv` pair exposes wire-v2 pipelining.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
     next_id: u64,
+    version: u32,
+    model: String,
 }
 
 impl Client {
+    /// Connect speaking wire v1 (served by the default model; call
+    /// [`Client::hello`] to upgrade).
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
         stream.set_nodelay(true).ok();
@@ -31,27 +91,65 @@ impl Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
             next_id: 1,
+            version: wire::WIRE_V1,
+            model: String::new(),
         })
     }
 
-    fn call(&mut self, req: WireRequest) -> Result<WireResponse> {
-        let id = req.id();
-        wire::write_frame(&mut self.writer, &req.encode())?;
-        loop {
-            match wire::read_frame(&mut self.reader, wire::MAX_FRAME)? {
-                wire::Frame::Idle => continue, // no read timeout set; defensive
-                wire::Frame::Eof => bail!("server closed the connection"),
-                wire::Frame::Payload(p) => {
-                    let resp = WireResponse::decode(&p)?;
-                    if resp.id() != id {
-                        bail!("response id {} != request id {id}", resp.id());
-                    }
-                    if let WireResponse::Error { msg, .. } = &resp {
-                        bail!("server error: {msg}");
-                    }
-                    return Ok(resp);
-                }
+    /// Connect and negotiate wire v2, failing if the server won't speak it.
+    pub fn connect_v2(addr: &str) -> Result<Client> {
+        let mut client = Client::connect(addr)?;
+        let (version, _, _) = client.hello()?;
+        if version < wire::WIRE_V2 {
+            bail!("server at {addr} only speaks wire v{version}");
+        }
+        Ok(client)
+    }
+
+    /// Negotiate the wire version. Returns `(negotiated_version,
+    /// default_model, models)`; all subsequent requests on this connection
+    /// use the negotiated encoding.
+    pub fn hello(&mut self) -> Result<(u32, String, Vec<String>)> {
+        let id = self.id();
+        let req = WireRequest::new(id, ReqBody::Hello { version: wire::WIRE_V2 });
+        // hello is always v1-shaped: it is what negotiates v2
+        wire::write_frame(&mut self.writer, &req.encode(wire::WIRE_V1)?)?;
+        match self.recv_matching(id)? {
+            WireResponse::Hello { version, default_model, models, .. } => {
+                self.version = version;
+                Ok((version, default_model, models))
             }
+            other => bail!("unexpected reply to hello: {other:?}"),
+        }
+    }
+
+    /// The connection's negotiated wire version.
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// Target a named model for subsequent requests (`""` = the server's
+    /// default). Non-empty names need a negotiated wire v2 connection.
+    pub fn set_model(&mut self, model: &str) -> Result<()> {
+        if !model.is_empty() && self.version < wire::WIRE_V2 {
+            bail!("model targeting needs wire v2: call hello() first");
+        }
+        self.model = model.to_string();
+        Ok(())
+    }
+
+    /// The currently targeted model (`""` = server default).
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// The wire mode byte for an optional per-request search-kernel
+    /// override.
+    pub fn mode_byte(mode: Option<SearchMode>) -> u8 {
+        match mode {
+            None => wire::MODE_DEFAULT,
+            Some(SearchMode::L1Int8) => wire::MODE_L1,
+            Some(SearchMode::HammingPacked) => wire::MODE_PACKED,
         }
     }
 
@@ -61,6 +159,69 @@ impl Client {
         id
     }
 
+    /// Low-level pipelined send targeting the client's current model;
+    /// returns the assigned request id. Does not wait for the reply —
+    /// collect it (and any other in-flight replies) with [`Client::recv`].
+    pub fn send(&mut self, body: ReqBody) -> Result<u64> {
+        let model = std::mem::take(&mut self.model);
+        let result = self.send_for(&model, body);
+        self.model = model;
+        result
+    }
+
+    /// Low-level pipelined send targeting an explicit model (`""` = server
+    /// default); returns the assigned request id.
+    pub fn send_for(&mut self, model: &str, body: ReqBody) -> Result<u64> {
+        if !model.is_empty() && self.version < wire::WIRE_V2 {
+            bail!("model targeting needs wire v2: call hello() first");
+        }
+        let id = self.id();
+        let req = if model.is_empty() {
+            WireRequest::new(id, body)
+        } else {
+            WireRequest::for_model(id, model, body)
+        };
+        wire::write_frame(&mut self.writer, &req.encode(self.version)?)?;
+        Ok(id)
+    }
+
+    /// Low-level pipelined receive: the next reply frame, whatever request
+    /// it answers (replies may arrive out of order across models — match
+    /// [`WireResponse::id`] against your in-flight ids). Server-side error
+    /// replies are returned as [`WireResponse::Error`] *values* so a
+    /// pipelined caller can attribute each failure to its request.
+    pub fn recv(&mut self) -> Result<WireResponse> {
+        loop {
+            match wire::read_frame(&mut self.reader, wire::MAX_FRAME)? {
+                wire::Frame::Idle => continue, // no read timeout set; defensive
+                wire::Frame::Eof => bail!("server closed the connection"),
+                wire::Frame::Payload(p) => return WireResponse::decode(&p),
+            }
+        }
+    }
+
+    /// One-in-flight receive: the reply must answer `id`, and server-side
+    /// errors become a typed [`ServerError`].
+    fn recv_matching(&mut self, id: u64) -> Result<WireResponse> {
+        let resp = self.recv()?;
+        if resp.id() != id {
+            bail!(
+                "response id {} != request id {id} (pipelined replies must be \
+                 collected with recv())",
+                resp.id()
+            );
+        }
+        match resp {
+            WireResponse::Error { id, msg } => Err(ServerError { id, msg }.into()),
+            other => Ok(other),
+        }
+    }
+
+    fn call(&mut self, body: ReqBody) -> Result<WireResponse> {
+        let id = self.send(body)?;
+        self.recv_matching(id)
+    }
+
     /// Classify with the server's default search mode (`mode: None`) or an
     /// explicit per-request kernel.
     pub fn infer_mode(
@@ -68,13 +229,11 @@ impl Client {
         features: &[f32],
         mode: Option<SearchMode>,
     ) -> Result<InferReply> {
-        let id = self.id();
-        let mode = match mode {
-            None => wire::MODE_DEFAULT,
-            Some(SearchMode::L1Int8) => wire::MODE_L1,
-            Some(SearchMode::HammingPacked) => wire::MODE_PACKED,
+        let body = ReqBody::Infer {
+            mode: Client::mode_byte(mode),
+            features: features.to_vec(),
         };
-        match self.call(WireRequest::Infer { id, mode, features: features.to_vec() })? {
+        match self.call(body)? {
             WireResponse::Infer { class, segments, early, .. } => Ok(InferReply {
                 class: class as usize,
                 segments_used: segments as usize,
@@ -84,39 +243,34 @@ impl Client {
         }
     }
 
+    /// Classify with the server's default search mode.
     pub fn infer(&mut self, features: &[f32]) -> Result<InferReply> {
         self.infer_mode(features, None)
     }
 
-    /// Bundle a labeled sample into the server's knowledge store.
+    /// Bundle a labeled sample into the targeted model's knowledge store.
     pub fn learn(&mut self, features: &[f32], class: usize) -> Result<()> {
-        let id = self.id();
-        match self.call(WireRequest::Learn {
-            id,
-            class: class as u32,
-            features: features.to_vec(),
-        })? {
+        let body = ReqBody::Learn { class: class as u32, features: features.to_vec() };
+        match self.call(body)? {
             WireResponse::Learn { .. } => Ok(()),
             other => bail!("unexpected reply to learn: {other:?}"),
         }
     }
 
-    /// Ask the server to checkpoint its knowledge store; `None` uses the
-    /// server's configured default path. Returns the path written.
+    /// Ask the server to checkpoint the targeted model's knowledge;
+    /// `None` uses the server's configured default path for that model.
+    /// Returns the path written.
     pub fn snapshot(&mut self, path: Option<&str>) -> Result<String> {
-        let id = self.id();
-        match self.call(WireRequest::Snapshot {
-            id,
-            path: path.unwrap_or("").to_string(),
-        })? {
+        let body = ReqBody::Snapshot { path: path.unwrap_or("").to_string() };
+        match self.call(body)? {
             WireResponse::Snapshot { path, .. } => Ok(path),
             other => bail!("unexpected reply to snapshot: {other:?}"),
         }
     }
 
+    /// Server + targeted-model counters.
     pub fn stats(&mut self) -> Result<WireStats> {
-        let id = self.id();
-        match self.call(WireRequest::Stats { id })? {
+        match self.call(ReqBody::Stats)? {
             WireResponse::Stats { stats, .. } => Ok(stats),
             other => bail!("unexpected reply to stats: {other:?}"),
         }

@@ -1,39 +1,53 @@
-//! Zero-dependency TCP serving layer — the first over-the-wire workload.
+//! Zero-dependency TCP serving layer: a multi-model [`Registry`] behind a
+//! pipelined wire protocol.
 //!
 //! A [`Server`] binds a std `TcpListener`, accepts connections on a
-//! dedicated accept thread, and runs one lightweight thread per
-//! connection. Every connection decodes length-prefixed
-//! [`wire`] frames and forwards them as [`Payload`]s to the shared
-//! [`Coordinator`] — so concurrent clients multiplex onto the executor's
-//! existing MPSC queue and their bursts batch through the same greedy
-//! batcher in-process callers use (contiguous Learn runs still encode in
-//! one backend call). The coordinator keeps its leader/worker shape: the
-//! backend never leaves the executor thread; the serving layer only adds
-//! transport.
+//! dedicated accept thread, and runs one lightweight reader thread plus
+//! one reply-writer thread per connection. Every connection decodes
+//! length-prefixed [`wire`] frames, routes each to the named model's
+//! [`Coordinator`](crate::coordinator::Coordinator) in the shared
+//! [`Registry`], and forwards it with the *client's* request id and a
+//! per-connection reply channel
+//! ([`Coordinator::submit_with`](crate::coordinator::Coordinator::submit_with)).
+//! Replies flow back through the writer thread as each model's executor
+//! completes them — so one connection can keep up to
+//! [`wire::MAX_INFLIGHT`] frames in flight, replies are matched by id, and
+//! a fast model's replies overtake a slow model's. Each model keeps the
+//! coordinator's leader/worker shape: the backend never leaves its
+//! executor thread; the serving layer only adds transport and routing.
+//!
+//! Wire v1 clients are served unchanged (no hello frame → v1 decoding →
+//! the default model), and the blocking [`Client`] still sees strictly
+//! ordered replies because it keeps one request in flight.
 //!
 //! Error containment mirrors the wire contract: a request that frames
-//! correctly but decodes badly gets an error *reply* and the connection
-//! lives on; only a torn frame header or an oversized length closes the
-//! connection (after a best-effort error frame). Server counters
-//! (`served`, `wire_errors`, `learns`) are process-wide atomics reported
-//! through the Stats opcode together with the coordinator's knowledge
-//! counters.
+//! correctly but decodes badly gets an error *reply* echoing its id and
+//! the connection lives on; only a torn frame header or an oversized
+//! length closes the connection (after a best-effort error reply). A
+//! stalled client trips the write timeout, after which its replies are
+//! drained and discarded — a dead connection can never block a model's
+//! executor. Server counters (`served`, `wire_errors`, `learns`) are
+//! process-wide atomics reported through the Stats opcode together with
+//! the target model's knowledge counters.
 
 pub mod client;
+pub mod registry;
 pub mod wire;
 
-pub use client::{Client, InferReply};
-pub use wire::{WireRequest, WireResponse, WireStats};
+pub use client::{Client, InferReply, ServerError};
+pub use registry::{ModelSpec, Registry};
+pub use wire::{ReqBody, WireRequest, WireResponse, WireStats};
 
-use crate::coordinator::{Coordinator, Payload};
+use crate::coordinator::{Payload, ReplyKind, Response};
 use crate::hdc::SearchMode;
 use crate::Result;
 use anyhow::Context;
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Serving knobs.
@@ -46,26 +60,37 @@ pub struct ServeOptions {
     /// arbitrary-file-write primitive. When off, clients may still send an
     /// empty path to checkpoint to the server's configured default.
     pub allow_snapshot_paths: bool,
+    /// per-connection in-flight frame cap, clamped to
+    /// `1..=`[`wire::MAX_INFLIGHT`] (further frames are simply not read
+    /// until replies drain — TCP backpressure)
+    pub max_inflight: usize,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { max_frame: wire::MAX_FRAME, allow_snapshot_paths: false }
+        ServeOptions {
+            max_frame: wire::MAX_FRAME,
+            allow_snapshot_paths: false,
+            max_inflight: wire::MAX_INFLIGHT,
+        }
     }
 }
 
 /// Process-wide serving counters (lock-free; read by the Stats opcode).
 #[derive(Debug, Default)]
 pub struct ServerStats {
+    /// frames served (all opcodes, error replies included)
     pub served: AtomicU64,
+    /// frames that decoded badly (the error-reply count)
     pub wire_errors: AtomicU64,
+    /// successful Learn replies across all models
     pub learns: AtomicU64,
 }
 
 /// A running TCP server. Dropping (or calling [`Server::stop`]) shuts the
 /// accept loop down, joins every connection thread, and finally drops the
-/// coordinator — which drains its queue and runs the executor's shutdown
-/// snapshot flush.
+/// registry — each model's coordinator drains its queue and runs its
+/// executor's shutdown snapshot flush.
 pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
@@ -75,8 +100,8 @@ pub struct Server {
 
 impl Server {
     /// Bind `listen` (e.g. `127.0.0.1:0` for an ephemeral test port) and
-    /// start serving the coordinator over it.
-    pub fn start(listen: &str, coord: Coordinator, opts: ServeOptions) -> Result<Server> {
+    /// start serving the registry over it.
+    pub fn start(listen: &str, registry: Registry, opts: ServeOptions) -> Result<Server> {
         let listener = TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
         // non-blocking accept: shutdown must never depend on the wakeup
         // poke reaching the socket (it can't on e.g. a firewalled bind)
@@ -84,12 +109,12 @@ impl Server {
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(ServerStats::default());
-        let coord = Arc::new(coord);
+        let registry = Arc::new(registry);
         let accept = {
             let (stop, stats) = (stop.clone(), stats.clone());
             std::thread::Builder::new()
                 .name("clo-hdnn-accept".into())
-                .spawn(move || accept_loop(listener, coord, stats, stop, opts))?
+                .spawn(move || accept_loop(listener, registry, stats, stop, opts))?
         };
         Ok(Server { addr, stop, accept: Some(accept), stats })
     }
@@ -109,7 +134,7 @@ impl Server {
     }
 
     /// Graceful shutdown: stop accepting, join connections, drop the
-    /// coordinator (which flushes the shutdown snapshot if configured).
+    /// registry (each model flushes its shutdown snapshot if configured).
     pub fn stop(mut self) {
         self.shutdown();
     }
@@ -132,7 +157,7 @@ impl Drop for Server {
 
 fn accept_loop(
     listener: TcpListener,
-    coord: Arc<Coordinator>,
+    registry: Arc<Registry>,
     stats: Arc<ServerStats>,
     stop: Arc<AtomicBool>,
     opts: ServeOptions,
@@ -160,12 +185,12 @@ fn accept_loop(
         if stream.set_nonblocking(false).is_err() {
             continue;
         }
-        let (coord, stats, stop, opts) =
-            (coord.clone(), stats.clone(), stop.clone(), opts.clone());
+        let (registry, stats, stop, opts) =
+            (registry.clone(), stats.clone(), stop.clone(), opts.clone());
         match std::thread::Builder::new()
             .name("clo-hdnn-conn".into())
             .spawn(move || {
-                let _ = handle_conn(stream, &coord, &stats, &stop, &opts);
+                let _ = handle_conn(stream, &registry, &stats, &stop, &opts);
             }) {
             Ok(h) => conns.push(h),
             Err(_) => continue,
@@ -175,29 +200,147 @@ fn accept_loop(
     for h in conns {
         let _ = h.join();
     }
-    // `coord` (the last Arc once clients are gone) drops here: the
-    // executor drains, flushes its shutdown snapshot, and exits
+    // `registry` (the last Arc once clients are gone) drops here: every
+    // model's executor drains, flushes its shutdown snapshot, and exits
 }
 
-/// One connection: read frame -> decode -> coordinator -> reply, until the
-/// client closes, the stream tears, or the server stops.
+/// Shared write half of a connection. The reply-writer thread and the
+/// reader (hello acks, pre-dispatch error replies) both write whole frames
+/// under the lock, so frames never interleave.
+type SharedWriter = Arc<Mutex<BufWriter<TcpStream>>>;
+
+/// Write one reply frame directly (reader-side control path). Any failure
+/// marks the connection dead — there is no way to retry a partial frame.
+fn write_direct(writer: &SharedWriter, resp: &WireResponse, dead: &AtomicBool) {
+    if dead.load(Ordering::Relaxed) {
+        return;
+    }
+    let ok = match writer.lock() {
+        Ok(mut w) => wire::write_frame(&mut *w, &resp.encode()).is_ok(),
+        Err(_) => false,
+    };
+    if !ok {
+        dead.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Translate an executor reply onto the wire using its [`ReplyKind`] tag —
+/// the stateless mapping that lets replies complete out of order.
+fn translate(resp: &Response, stats: &ServerStats) -> WireResponse {
+    let id = resp.id;
+    if let Some(msg) = &resp.error {
+        return WireResponse::Error { id, msg: msg.clone() };
+    }
+    match resp.kind {
+        ReplyKind::Classify => WireResponse::Infer {
+            id,
+            class: resp.class.unwrap_or(0) as u32,
+            segments: resp.segments_used as u32,
+            early: resp.early_exit,
+        },
+        ReplyKind::Learn => WireResponse::Learn { id, class: resp.class.unwrap_or(0) as u32 },
+        ReplyKind::Snapshot | ReplyKind::Restore => WireResponse::Snapshot {
+            id,
+            path: resp.detail.clone().unwrap_or_default(),
+        },
+        ReplyKind::Stats => {
+            let k = resp.stats.unwrap_or_default();
+            WireResponse::Stats {
+                id,
+                stats: WireStats {
+                    served: stats.served.load(Ordering::Relaxed),
+                    wire_errors: stats.wire_errors.load(Ordering::Relaxed),
+                    learns: k.learns,
+                    trained_classes: k.trained_classes as u32,
+                    snapshots: k.snapshots,
+                },
+            }
+        }
+    }
+}
+
+/// The reply-writer loop: drain executor replies off the connection's
+/// channel, translate, write. When the connection dies (stalled client,
+/// torn socket) it keeps draining and discarding so a model's executor can
+/// never block on a dead connection's reply channel. Exits when every
+/// sender (the reader plus all in-flight requests) is gone.
+fn reply_loop(
+    rx: mpsc::Receiver<Response>,
+    writer: SharedWriter,
+    inflight: Arc<AtomicUsize>,
+    dead: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+) {
+    while let Ok(resp) = rx.recv() {
+        let frame = translate(&resp, &stats);
+        if matches!(frame, WireResponse::Learn { .. }) {
+            stats.learns.fetch_add(1, Ordering::Relaxed);
+        }
+        write_direct(&writer, &frame, &dead);
+        inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// One connection: a reader loop (this thread) decoding and dispatching
+/// frames, plus a reply-writer thread streaming executor replies back.
 fn handle_conn(
     stream: TcpStream,
-    coord: &Coordinator,
-    stats: &ServerStats,
+    registry: &Arc<Registry>,
+    stats: &Arc<ServerStats>,
     stop: &AtomicBool,
     opts: &ServeOptions,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
-    // short read timeout so idle connections observe the stop flag
+    // short read timeout so idle connections observe the stop flag; a
+    // write timeout so a client that stops reading can't pin the writer
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
+    let writer: SharedWriter = Arc::new(Mutex::new(BufWriter::new(stream)));
+    let cap = opts.max_inflight.clamp(1, wire::MAX_INFLIGHT);
+    // sized to the in-flight cap: with the reader gating submissions on
+    // `inflight < cap`, an executor's reply send can never block
+    let (reply_tx, reply_rx) = mpsc::sync_channel::<Response>(cap);
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let dead = Arc::new(AtomicBool::new(false));
+    let writer_thread = {
+        let (writer, inflight, dead, stats) =
+            (writer.clone(), inflight.clone(), dead.clone(), stats.clone());
+        std::thread::Builder::new()
+            .name("clo-hdnn-reply".into())
+            .spawn(move || reply_loop(reply_rx, writer, inflight, dead, stats))?
+    };
+    let result = conn_reader(
+        &mut reader, &writer, registry, stats, stop, opts, &reply_tx, &inflight, &dead, cap,
+    );
+    // close the reader's sender: once the in-flight requests complete, the
+    // writer drains their replies and exits
+    drop(reply_tx);
+    let _ = writer_thread.join();
+    result
+}
+
+/// The per-connection reader loop: frame → decode (at the negotiated
+/// version) → route to the target model → submit with the client's id.
+#[allow(clippy::too_many_arguments)]
+fn conn_reader(
+    reader: &mut BufReader<TcpStream>,
+    writer: &SharedWriter,
+    registry: &Registry,
+    stats: &ServerStats,
+    stop: &AtomicBool,
+    opts: &ServeOptions,
+    reply_tx: &mpsc::SyncSender<Response>,
+    inflight: &AtomicUsize,
+    dead: &AtomicBool,
+    cap: usize,
+) -> Result<()> {
+    let mut version = wire::WIRE_V1;
     loop {
-        if stop.load(Ordering::Relaxed) {
+        if stop.load(Ordering::Relaxed) || dead.load(Ordering::Relaxed) {
             return Ok(());
         }
-        let payload = match wire::read_frame(&mut reader, opts.max_frame) {
+        let payload = match wire::read_frame(reader, opts.max_frame) {
             Ok(wire::Frame::Payload(p)) => p,
             Ok(wire::Frame::Eof) => return Ok(()),
             Ok(wire::Frame::Idle) => continue,
@@ -207,102 +350,95 @@ fn handle_conn(
                 // resynchronize the stream
                 stats.wire_errors.fetch_add(1, Ordering::Relaxed);
                 let reply = WireResponse::Error { id: 0, msg: format!("{e:#}") };
-                let _ = wire::write_frame(&mut writer, &reply.encode());
+                write_direct(writer, &reply, dead);
                 return Err(e);
             }
         };
         stats.served.fetch_add(1, Ordering::Relaxed);
-        let reply = match WireRequest::decode(&payload) {
+        let req = match WireRequest::decode(&payload, version) {
             Err(e) => {
-                // framed but garbled: reply with an error, keep serving —
-                // the length prefix kept the stream in sync
+                // framed but garbled: error reply echoing the request id,
+                // keep serving — the length prefix kept the stream in
+                // sync, and the other in-flight requests (and every other
+                // model) are untouched
                 stats.wire_errors.fetch_add(1, Ordering::Relaxed);
-                WireResponse::Error { id: wire::peek_id(&payload), msg: format!("{e:#}") }
+                let reply = WireResponse::Error {
+                    id: wire::peek_id(&payload),
+                    msg: format!("{e:#}"),
+                };
+                write_direct(writer, &reply, dead);
+                continue;
             }
-            Ok(req) => dispatch(req, coord, stats, opts),
+            Ok(req) => req,
         };
-        wire::write_frame(&mut writer, &reply.encode())?;
-    }
-}
-
-/// Map a decoded wire request onto the coordinator and its reply back onto
-/// the wire.
-fn dispatch(
-    req: WireRequest,
-    coord: &Coordinator,
-    stats: &ServerStats,
-    opts: &ServeOptions,
-) -> WireResponse {
-    match req {
-        WireRequest::Infer { id, mode, features } => {
-            let payload = match mode {
+        // hello: negotiate the version and advertise the registry, without
+        // ever crossing an executor
+        if let ReqBody::Hello { version: proposed } = &req.body {
+            version = (*proposed).clamp(wire::WIRE_V1, wire::WIRE_V2);
+            let ack = WireResponse::Hello {
+                id: req.id,
+                version,
+                default_model: registry.default_name().to_string(),
+                models: registry.names().to_vec(),
+            };
+            write_direct(writer, &ack, dead);
+            continue;
+        }
+        // route to the target model
+        let coord = match registry.get(&req.model) {
+            Ok(c) => c,
+            Err(e) => {
+                let reply = WireResponse::Error { id: req.id, msg: format!("{e:#}") };
+                write_direct(writer, &reply, dead);
+                continue;
+            }
+        };
+        let id = req.id;
+        let payload = match req.body {
+            ReqBody::Infer { mode, features } => match mode {
                 wire::MODE_L1 => Payload::FeaturesWithMode(features, SearchMode::L1Int8),
                 wire::MODE_PACKED => {
                     Payload::FeaturesWithMode(features, SearchMode::HammingPacked)
                 }
                 _ => Payload::Features(features),
-            };
-            match coord.call(payload) {
-                Err(e) => WireResponse::Error { id, msg: format!("{e:#}") },
-                Ok(r) => match r.error {
-                    Some(msg) => WireResponse::Error { id, msg },
-                    None => WireResponse::Infer {
-                        id,
-                        class: r.class.unwrap_or(0) as u32,
-                        segments: r.segments_used as u32,
-                        early: r.early_exit,
-                    },
-                },
-            }
-        }
-        WireRequest::Learn { id, class, features } => {
-            match coord.call(Payload::Learn(features, class as usize)) {
-                Err(e) => WireResponse::Error { id, msg: format!("{e:#}") },
-                Ok(r) => match r.error {
-                    Some(msg) => WireResponse::Error { id, msg },
-                    None => {
-                        stats.learns.fetch_add(1, Ordering::Relaxed);
-                        WireResponse::Learn { id, class }
-                    }
-                },
-            }
-        }
-        WireRequest::Snapshot { id, path } => {
-            if !path.is_empty() && !opts.allow_snapshot_paths {
-                return WireResponse::Error {
-                    id,
-                    msg: "client-supplied snapshot paths are disabled on this server; \
-                          send an empty path to checkpoint to the configured default"
-                        .into(),
-                };
-            }
-            let target = if path.is_empty() { None } else { Some(PathBuf::from(path)) };
-            match coord.call(Payload::Snapshot(target)) {
-                Err(e) => WireResponse::Error { id, msg: format!("{e:#}") },
-                Ok(r) => match r.error {
-                    Some(msg) => WireResponse::Error { id, msg },
-                    None => WireResponse::Snapshot { id, path: r.detail.unwrap_or_default() },
-                },
-            }
-        }
-        WireRequest::Stats { id } => match coord.call(Payload::Stats) {
-            Err(e) => WireResponse::Error { id, msg: format!("{e:#}") },
-            Ok(r) => match r.error {
-                Some(msg) => WireResponse::Error { id, msg },
-                None => {
-                    let k = r.stats.unwrap_or_default();
-                    WireResponse::Stats {
-                        id,
-                        stats: WireStats {
-                            served: stats.served.load(Ordering::Relaxed),
-                            wire_errors: stats.wire_errors.load(Ordering::Relaxed),
-                            learns: k.learns,
-                            trained_classes: k.trained_classes as u32,
-                            snapshots: k.snapshots,
-                        },
-                    }
-                }
             },
-        },
+            ReqBody::Learn { class, features } => Payload::Learn(features, class as usize),
+            ReqBody::Snapshot { path } => {
+                if !path.is_empty() && !opts.allow_snapshot_paths {
+                    let reply = WireResponse::Error {
+                        id,
+                        msg: "client-supplied snapshot paths are disabled on this server; \
+                              send an empty path to checkpoint to the configured default"
+                            .into(),
+                    };
+                    write_direct(writer, &reply, dead);
+                    continue;
+                }
+                Payload::Snapshot(if path.is_empty() { None } else { Some(PathBuf::from(path)) })
+            }
+            ReqBody::Stats => Payload::Stats,
+            ReqBody::Hello { .. } => unreachable!("hello handled above"),
+        };
+        // pipelining backpressure: wait for an in-flight slot before
+        // submitting (keeps the reply channel from ever filling). A short
+        // sleep-poll, engaged only at cap saturation: up to ~200us of
+        // added dispatch latency per frame on a saturated connection —
+        // accepted over a Condvar handshake with the writer for now
+        // (replace if saturated-pipeline latency ever matters).
+        loop {
+            if inflight.load(Ordering::Relaxed) < cap {
+                break;
+            }
+            if stop.load(Ordering::Relaxed) || dead.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        inflight.fetch_add(1, Ordering::Relaxed);
+        if coord.submit_with(id, payload, reply_tx.clone()).is_err() {
+            inflight.fetch_sub(1, Ordering::Relaxed);
+            let reply = WireResponse::Error { id, msg: "model executor is gone".into() };
+            write_direct(writer, &reply, dead);
+        }
     }
 }

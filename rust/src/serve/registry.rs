@@ -1,0 +1,177 @@
+//! Multi-model registry: N named `(Coordinator, knowledge)` entries behind
+//! one server.
+//!
+//! Clo-HDnn's dual-mode story is that one chip hosts both easy datasets
+//! (HDC-only bypass mode) and hard ones (WCFE + HDC); the registry is the
+//! software shape of that — independently schedulable engines, FSL-HDnn
+//! style. Each model owns its own executor thread (the backend never
+//! leaves it), its own knowledge checkpoint cadence, and its own stats;
+//! the serving layer routes wire-v2 frames to entries by name, so one slow
+//! model never blocks another's replies on a pipelined connection.
+//!
+//! Dropping the registry drops every coordinator, which drains each
+//! executor queue and runs the per-model shutdown snapshot flush.
+
+use crate::coordinator::{Coordinator, CoordinatorOptions};
+use crate::Result;
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// One model to register: its registry name plus the full executor
+/// configuration (backend, search mode, thread budget, knowledge wiring).
+#[derive(Debug)]
+pub struct ModelSpec {
+    /// registry name — what wire-v2 frames address
+    pub name: String,
+    /// the model's executor configuration
+    pub opts: CoordinatorOptions,
+}
+
+impl ModelSpec {
+    /// Build a spec, stamping `name` into the options' model identity so
+    /// the model's knowledge checkpoints carry it (and restores verify it).
+    pub fn new(name: impl Into<String>, mut opts: CoordinatorOptions) -> ModelSpec {
+        let name = name.into();
+        opts.model = name.clone();
+        ModelSpec { name, opts }
+    }
+}
+
+/// Named coordinators behind one server. The first registered model is the
+/// default — what v1 connections and empty-model v2 frames hit.
+pub struct Registry {
+    models: BTreeMap<String, Arc<Coordinator>>,
+    /// registration order (the wire hello advertises it)
+    order: Vec<String>,
+    default_model: String,
+}
+
+impl Registry {
+    /// Start every model's coordinator (one executor thread each). The
+    /// first spec becomes the default model. Fails on an empty spec list,
+    /// an empty or duplicate name, or any executor failing to boot.
+    pub fn start(specs: Vec<ModelSpec>) -> Result<Registry> {
+        if specs.is_empty() {
+            bail!("registry needs at least one model");
+        }
+        let default_model = specs[0].name.clone();
+        let mut models = BTreeMap::new();
+        let mut order = Vec::with_capacity(specs.len());
+        for spec in specs {
+            if spec.name.is_empty() {
+                bail!("registry model names must be non-empty");
+            }
+            if models.contains_key(&spec.name) {
+                bail!("duplicate registry model '{}'", spec.name);
+            }
+            let coord = Coordinator::start(spec.opts)
+                .with_context(|| format!("starting model '{}'", spec.name))?;
+            order.push(spec.name.clone());
+            models.insert(spec.name, Arc::new(coord));
+        }
+        Ok(Registry { models, order, default_model })
+    }
+
+    /// Wrap an already-running coordinator as a one-model registry (the
+    /// single-model serving path).
+    pub fn single(name: impl Into<String>, coord: Coordinator) -> Registry {
+        let name = name.into();
+        let mut models = BTreeMap::new();
+        models.insert(name.clone(), Arc::new(coord));
+        Registry { models, order: vec![name.clone()], default_model: name }
+    }
+
+    /// Resolve a wire model name (`""` = the default model).
+    pub fn get(&self, model: &str) -> Result<&Arc<Coordinator>> {
+        let name = if model.is_empty() { self.default_model.as_str() } else { model };
+        self.models.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no model '{name}' on this server (have: {})",
+                self.order.join(", ")
+            )
+        })
+    }
+
+    /// The default model's name (what v1 clients are served by).
+    pub fn default_name(&self) -> &str {
+        &self.default_model
+    }
+
+    /// Every model name, in registration order.
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Whether the registry is empty (never true for a started registry).
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HdConfig;
+    use crate::coordinator::Payload;
+
+    fn cfg(name: &str, classes: usize) -> HdConfig {
+        HdConfig::synthetic(name, 8, 8, 32, 32, 8, classes)
+    }
+
+    #[test]
+    fn starts_routes_and_defaults() {
+        let reg = Registry::start(vec![
+            ModelSpec::new("alpha", CoordinatorOptions::software(cfg("a", 4))),
+            ModelSpec::new("beta", CoordinatorOptions::software(cfg("b", 6))),
+        ])
+        .unwrap();
+        assert_eq!(reg.len(), 2);
+        assert!(!reg.is_empty());
+        assert_eq!(reg.default_name(), "alpha");
+        assert_eq!(reg.names(), ["alpha".to_string(), "beta".to_string()]);
+        // "" routes to the default; names route to their entries; stats
+        // prove each entry is a live executor
+        for name in ["", "alpha", "beta"] {
+            let r = reg.get(name).unwrap().call(Payload::Stats).unwrap();
+            assert!(r.error.is_none(), "{name}: {:?}", r.error);
+        }
+        let e = reg.get("gamma").unwrap_err().to_string();
+        assert!(e.contains("gamma") && e.contains("alpha"), "{e}");
+    }
+
+    #[test]
+    fn rejects_bad_spec_lists() {
+        assert!(Registry::start(vec![]).is_err());
+        assert!(Registry::start(vec![ModelSpec::new(
+            "",
+            CoordinatorOptions::software(cfg("a", 4))
+        )])
+        .is_err());
+        assert!(Registry::start(vec![
+            ModelSpec::new("dup", CoordinatorOptions::software(cfg("a", 4))),
+            ModelSpec::new("dup", CoordinatorOptions::software(cfg("b", 4))),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn spec_stamps_model_identity_into_options() {
+        let spec = ModelSpec::new("gamma", CoordinatorOptions::software(cfg("g", 4)));
+        assert_eq!(spec.opts.model, "gamma");
+    }
+
+    #[test]
+    fn single_wraps_a_running_coordinator() {
+        let coord = Coordinator::start(CoordinatorOptions::software(cfg("solo", 4))).unwrap();
+        let reg = Registry::single("solo", coord);
+        assert_eq!(reg.default_name(), "solo");
+        assert_eq!(reg.len(), 1);
+        assert!(reg.get("").unwrap().call(Payload::Stats).unwrap().error.is_none());
+    }
+}

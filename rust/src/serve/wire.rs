@@ -5,14 +5,33 @@
 //! [`MAX_FRAME`] (an oversized length cannot desynchronize the stream into
 //! unbounded allocation). Payloads are little-endian throughout.
 //!
-//! ## Request payloads
+//! Two request encodings exist — see `docs/PROTOCOL.md` for the full
+//! byte-level specification (its constants are pinned against this module
+//! by `tests/protocol_doc.rs`):
+//!
+//! * **v1** (the launch protocol): `id: u64, op: u8, body` — one implicit
+//!   model (the server default), one request in flight at a time by
+//!   convention.
+//! * **v2** (negotiated): `id: u64, op: u8, model: str16, body` — every
+//!   request names its target model (`""` = server default) and a
+//!   connection may keep up to [`MAX_INFLIGHT`] client-id'd frames in
+//!   flight; replies are matched by id and may complete out of order.
+//!
+//! Version negotiation: a client sends [`ReqBody::Hello`] — always encoded
+//! in the v1 shape, so it parses before any negotiation has happened — and
+//! the server replies [`WireResponse::Hello`] with the negotiated version,
+//! its default model, and the model list. A v1 client simply never says
+//! hello and is served exactly as before. Response frames use one shape in
+//! both versions.
+//!
+//! ## Request payloads (after the version-dependent header)
 //!
 //! ```text
-//! id: u64, op: u8, then per op:
-//!   OP_INFER     mode u8 (0 default | 1 l1 | 2 packed), n u32, n × f32
-//!   OP_LEARN     class u32, n u32, n × f32
-//!   OP_SNAPSHOT  path_len u16, path utf-8 (empty = server default)
-//!   OP_STATS     (empty)
+//! OP_INFER     mode u8 (0 default | 1 l1 | 2 packed), n u32, n × f32
+//! OP_LEARN     class u32, n u32, n × f32
+//! OP_SNAPSHOT  path_len u16, path utf-8 (empty = server default)
+//! OP_STATS     (empty)
+//! OP_HELLO     version u32 (the highest version the client speaks)
 //! ```
 //!
 //! ## Response payloads
@@ -24,14 +43,19 @@
 //!   OP_SNAPSHOT  path_len u16, path utf-8
 //!   OP_STATS     served u64, wire_errors u64, learns u64,
 //!                trained_classes u32, snapshots u64
+//!   OP_HELLO     version u32, default_model str16,
+//!                count u16, count × model str16
 //!   KIND_ERROR   msg_len u16, msg utf-8
 //! ```
 //!
 //! Error recovery contract: a payload that *frames* correctly but decodes
 //! badly (garbage opcode, truncated body, trailing bytes) gets a
-//! [`WireResponse::Error`] reply and the connection survives — framing
-//! keeps the stream in sync. Only a broken frame header or an oversized
-//! length tears the connection down (after a best-effort error reply).
+//! [`WireResponse::Error`] reply — echoing the request id whenever the
+//! payload carried one — and the connection survives: framing keeps the
+//! stream in sync, so under pipelining the other in-flight requests (and
+//! every other model on the server) are unaffected. Only a broken frame
+//! header or an oversized length tears the connection down (after a
+//! best-effort error reply).
 
 use crate::Result;
 use anyhow::bail;
@@ -41,16 +65,37 @@ use std::io::{Read, Write};
 /// configs can produce, small enough to bound a malicious allocation).
 pub const MAX_FRAME: usize = 16 * 1024 * 1024;
 
+/// Wire protocol v1: single implicit model, no model field in requests.
+pub const WIRE_V1: u32 = 1;
+/// Wire protocol v2: model-addressed, pipelined requests (negotiated via
+/// a hello frame).
+pub const WIRE_V2: u32 = 2;
+
+/// Server-side cap on in-flight (pipelined) frames per connection. A v2
+/// client may keep up to this many requests outstanding; further frames
+/// are simply not read until replies drain (TCP backpressure).
+pub const MAX_INFLIGHT: usize = 64;
+
+/// Classification request/reply opcode.
 pub const OP_INFER: u8 = 1;
+/// Learning (bundle one labeled sample) request/reply opcode.
 pub const OP_LEARN: u8 = 2;
+/// Knowledge-checkpoint request/reply opcode.
 pub const OP_SNAPSHOT: u8 = 3;
+/// Counter-snapshot request/reply opcode.
 pub const OP_STATS: u8 = 4;
+/// Version-negotiation request/reply opcode (always v1-shaped on the
+/// request side).
+pub const OP_HELLO: u8 = 5;
 /// Response-only kind tag for error replies.
 pub const KIND_ERROR: u8 = 0xEE;
 
-/// Per-request search-mode selector on [`WireRequest::Infer`].
+/// Per-request search-mode selector on [`ReqBody::Infer`]: the server's
+/// configured default kernel.
 pub const MODE_DEFAULT: u8 = 0;
+/// Per-request search-mode selector: scalar INT8 L1.
 pub const MODE_L1: u8 = 1;
+/// Per-request search-mode selector: bit-packed INT1 Hamming.
 pub const MODE_PACKED: u8 = 2;
 
 /// One frame-read outcome.
@@ -155,122 +200,245 @@ fn put_str16(out: &mut Vec<u8>, s: &str) {
     out.extend_from_slice(&b[..n]);
 }
 
-/// A decoded client request.
+/// The operation-specific body of a request frame (everything after the
+/// id/op/model header).
 #[derive(Clone, Debug, PartialEq)]
-pub enum WireRequest {
-    Infer { id: u64, mode: u8, features: Vec<f32> },
-    Learn { id: u64, class: u32, features: Vec<f32> },
-    Snapshot { id: u64, path: String },
-    Stats { id: u64 },
+pub enum ReqBody {
+    /// classify a feature vector (optionally forcing a search kernel via
+    /// [`MODE_L1`]/[`MODE_PACKED`])
+    Infer {
+        /// search-kernel selector ([`MODE_DEFAULT`]/[`MODE_L1`]/[`MODE_PACKED`])
+        mode: u8,
+        /// the feature vector (length must match the target model's config)
+        features: Vec<f32>,
+    },
+    /// bundle one labeled sample into the target model's knowledge store
+    Learn {
+        /// the sample's class label
+        class: u32,
+        /// the feature vector
+        features: Vec<f32>,
+    },
+    /// checkpoint the target model's knowledge (empty path = the server's
+    /// configured default for that model)
+    Snapshot {
+        /// server-side checkpoint path ("" = configured default)
+        path: String,
+    },
+    /// report serving + knowledge counters for the target model
+    Stats,
+    /// negotiate the wire version (always encoded in the v1 shape)
+    Hello {
+        /// highest protocol version the client speaks
+        version: u32,
+    },
+}
+
+/// A decoded client request: client-assigned id, target model (`""` =
+/// server default; only encodable on wire v2), and the operation body.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    /// client-assigned request id, echoed on the matching reply (including
+    /// error replies). Pipelined clients must keep in-flight ids unique.
+    pub id: u64,
+    /// target model name; empty = the server's default model
+    pub model: String,
+    /// the operation
+    pub body: ReqBody,
 }
 
 impl WireRequest {
-    pub fn id(&self) -> u64 {
-        match self {
-            WireRequest::Infer { id, .. }
-            | WireRequest::Learn { id, .. }
-            | WireRequest::Snapshot { id, .. }
-            | WireRequest::Stats { id } => *id,
+    /// A request for the server's default model.
+    pub fn new(id: u64, body: ReqBody) -> WireRequest {
+        WireRequest { id, model: String::new(), body }
+    }
+
+    /// A request targeting a named model (requires wire v2 on encode).
+    pub fn for_model(id: u64, model: impl Into<String>, body: ReqBody) -> WireRequest {
+        WireRequest { id, model: model.into(), body }
+    }
+
+    /// The opcode byte this request encodes with.
+    pub fn op(&self) -> u8 {
+        match self.body {
+            ReqBody::Infer { .. } => OP_INFER,
+            ReqBody::Learn { .. } => OP_LEARN,
+            ReqBody::Snapshot { .. } => OP_SNAPSHOT,
+            ReqBody::Stats => OP_STATS,
+            ReqBody::Hello { .. } => OP_HELLO,
         }
     }
 
-    pub fn encode(&self) -> Vec<u8> {
+    /// Encode at the given wire version. Model-targeted requests refuse
+    /// the v1 encoding (silently dropping the model would route the
+    /// request to the wrong knowledge store).
+    pub fn encode(&self, version: u32) -> Result<Vec<u8>> {
+        if version != WIRE_V1 && version != WIRE_V2 {
+            bail!("unknown wire version {version} (have {WIRE_V1} and {WIRE_V2})");
+        }
+        let hello = matches!(self.body, ReqBody::Hello { .. });
+        if !self.model.is_empty() && (version == WIRE_V1 || hello) {
+            bail!(
+                "model-targeted requests need wire v2 (negotiate with a hello \
+                 frame first; hello itself is model-free)"
+            );
+        }
         let mut out = Vec::new();
-        match self {
-            WireRequest::Infer { id, mode, features } => {
-                out.extend_from_slice(&id.to_le_bytes());
-                out.push(OP_INFER);
+        out.extend_from_slice(&self.id.to_le_bytes());
+        out.push(self.op());
+        if version == WIRE_V2 && !hello {
+            put_str16(&mut out, &self.model);
+        }
+        match &self.body {
+            ReqBody::Infer { mode, features } => {
                 out.push(*mode);
                 out.extend_from_slice(&(features.len() as u32).to_le_bytes());
                 for v in features {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
             }
-            WireRequest::Learn { id, class, features } => {
-                out.extend_from_slice(&id.to_le_bytes());
-                out.push(OP_LEARN);
+            ReqBody::Learn { class, features } => {
                 out.extend_from_slice(&class.to_le_bytes());
                 out.extend_from_slice(&(features.len() as u32).to_le_bytes());
                 for v in features {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
             }
-            WireRequest::Snapshot { id, path } => {
-                out.extend_from_slice(&id.to_le_bytes());
-                out.push(OP_SNAPSHOT);
-                put_str16(&mut out, path);
-            }
-            WireRequest::Stats { id } => {
-                out.extend_from_slice(&id.to_le_bytes());
-                out.push(OP_STATS);
-            }
+            ReqBody::Snapshot { path } => put_str16(&mut out, path),
+            ReqBody::Stats => {}
+            ReqBody::Hello { version } => out.extend_from_slice(&version.to_le_bytes()),
         }
-        out
+        Ok(out)
     }
 
-    pub fn decode(payload: &[u8]) -> Result<WireRequest> {
+    /// Decode a request payload under the connection's negotiated version.
+    /// Hello frames are always v1-shaped (they are what negotiates v2), so
+    /// the model field is skipped for them in either version.
+    pub fn decode(payload: &[u8], version: u32) -> Result<WireRequest> {
+        if version != WIRE_V1 && version != WIRE_V2 {
+            bail!("unknown wire version {version} (have {WIRE_V1} and {WIRE_V2})");
+        }
         let mut c = crate::util::Cursor::new(payload);
         let id = c.u64()?;
         let op = c.u8()?;
-        let req = match op {
+        let model = if version == WIRE_V2 && op != OP_HELLO {
+            c.str16()?
+        } else {
+            String::new()
+        };
+        let body = match op {
             OP_INFER => {
                 let mode = c.u8()?;
                 if mode > MODE_PACKED {
                     bail!("unknown infer mode {mode} (0=default 1=l1 2=packed)");
                 }
                 let n = c.u32()? as usize;
-                WireRequest::Infer { id, mode, features: c.f32s(n)? }
+                ReqBody::Infer { mode, features: c.f32s(n)? }
             }
             OP_LEARN => {
                 let class = c.u32()?;
                 let n = c.u32()? as usize;
-                WireRequest::Learn { id, class, features: c.f32s(n)? }
+                ReqBody::Learn { class, features: c.f32s(n)? }
             }
-            OP_SNAPSHOT => WireRequest::Snapshot { id, path: c.str16()? },
-            OP_STATS => WireRequest::Stats { id },
+            OP_SNAPSHOT => ReqBody::Snapshot { path: c.str16()? },
+            OP_STATS => ReqBody::Stats,
+            OP_HELLO => ReqBody::Hello { version: c.u32()? },
             other => bail!("unknown opcode {other:#04x}"),
         };
         c.finish()?;
-        Ok(req)
+        Ok(WireRequest { id, model, body })
     }
 }
 
-/// Server-side counters a Stats reply carries.
+/// Server-side counters a Stats reply carries. `served`/`wire_errors` are
+/// process-wide; the knowledge counters belong to the model the Stats
+/// request targeted.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct WireStats {
-    /// frames served (all opcodes, error replies included)
+    /// frames served process-wide (all opcodes, error replies included)
     pub served: u64,
-    /// frames that decoded badly (the error-reply count)
+    /// frames that decoded badly process-wide (the error-reply count)
     pub wire_errors: u64,
-    /// total bundled learns in the live knowledge store
+    /// total bundled learns in the target model's live knowledge store
     pub learns: u64,
-    /// classes with at least one bundled sample
+    /// target-model classes with at least one bundled sample
     pub trained_classes: u32,
-    /// snapshots written this process
+    /// snapshots the target model wrote this process
     pub snapshots: u64,
 }
 
-/// A decoded server reply.
+/// A decoded server reply (one shape in both wire versions; replies are
+/// matched to requests by id and may arrive out of order on a pipelined
+/// connection).
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireResponse {
-    Infer { id: u64, class: u32, segments: u32, early: bool },
-    Learn { id: u64, class: u32 },
-    Snapshot { id: u64, path: String },
-    Stats { id: u64, stats: WireStats },
-    Error { id: u64, msg: String },
+    /// classification result
+    Infer {
+        /// echoed request id
+        id: u64,
+        /// predicted class
+        class: u32,
+        /// progressive-search segments evaluated
+        segments: u32,
+        /// whether the search exited before the last segment
+        early: bool,
+    },
+    /// learn acknowledgement
+    Learn {
+        /// echoed request id
+        id: u64,
+        /// the class that was bundled
+        class: u32,
+    },
+    /// checkpoint acknowledgement
+    Snapshot {
+        /// echoed request id
+        id: u64,
+        /// the server-side path written
+        path: String,
+    },
+    /// counter snapshot
+    Stats {
+        /// echoed request id
+        id: u64,
+        /// the counters
+        stats: WireStats,
+    },
+    /// version-negotiation acknowledgement
+    Hello {
+        /// echoed request id
+        id: u64,
+        /// negotiated version (min of client's and server's newest)
+        version: u32,
+        /// the model Infer/Learn/... frames with an empty model hit
+        default_model: String,
+        /// every model this server hosts, in registration order
+        models: Vec<String>,
+    },
+    /// request failure; `id` echoes the failed request (0 when the frame
+    /// was too garbled to carry one)
+    Error {
+        /// echoed request id (best effort — 0 if unrecoverable)
+        id: u64,
+        /// server-side error detail
+        msg: String,
+    },
 }
 
 impl WireResponse {
+    /// The echoed request id.
     pub fn id(&self) -> u64 {
         match self {
             WireResponse::Infer { id, .. }
             | WireResponse::Learn { id, .. }
             | WireResponse::Snapshot { id, .. }
             | WireResponse::Stats { id, .. }
+            | WireResponse::Hello { id, .. }
             | WireResponse::Error { id, .. } => *id,
         }
     }
 
+    /// Encode the reply payload (version-independent shape).
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
         match self {
@@ -300,6 +468,17 @@ impl WireResponse {
                 out.extend_from_slice(&stats.trained_classes.to_le_bytes());
                 out.extend_from_slice(&stats.snapshots.to_le_bytes());
             }
+            WireResponse::Hello { id, version, default_model, models } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(OP_HELLO);
+                out.extend_from_slice(&version.to_le_bytes());
+                put_str16(&mut out, default_model);
+                let n = models.len().min(u16::MAX as usize);
+                out.extend_from_slice(&(n as u16).to_le_bytes());
+                for m in &models[..n] {
+                    put_str16(&mut out, m);
+                }
+            }
             WireResponse::Error { id, msg } => {
                 out.extend_from_slice(&id.to_le_bytes());
                 out.push(KIND_ERROR);
@@ -309,6 +488,7 @@ impl WireResponse {
         out
     }
 
+    /// Decode a reply payload.
     pub fn decode(payload: &[u8]) -> Result<WireResponse> {
         let mut c = crate::util::Cursor::new(payload);
         let id = c.u64()?;
@@ -332,6 +512,16 @@ impl WireResponse {
                     snapshots: c.u64()?,
                 },
             },
+            OP_HELLO => {
+                let version = c.u32()?;
+                let default_model = c.str16()?;
+                let n = c.u16()? as usize;
+                let mut models = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    models.push(c.str16()?);
+                }
+                WireResponse::Hello { id, version, default_model, models }
+            }
             KIND_ERROR => WireResponse::Error { id, msg: c.str16()? },
             other => bail!("unknown response kind {other:#04x}"),
         };
@@ -344,9 +534,9 @@ impl WireResponse {
 mod tests {
     use super::*;
 
-    fn roundtrip_req(r: WireRequest) {
-        let bytes = r.encode();
-        assert_eq!(WireRequest::decode(&bytes).unwrap(), r);
+    fn roundtrip_req(r: WireRequest, version: u32) {
+        let bytes = r.encode(version).unwrap();
+        assert_eq!(WireRequest::decode(&bytes, version).unwrap(), r);
     }
 
     fn roundtrip_resp(r: WireResponse) {
@@ -355,17 +545,68 @@ mod tests {
     }
 
     #[test]
-    fn request_roundtrips() {
-        roundtrip_req(WireRequest::Infer {
-            id: 7,
-            mode: MODE_PACKED,
-            features: vec![1.5, -2.25, 0.0],
-        });
-        roundtrip_req(WireRequest::Infer { id: 8, mode: MODE_DEFAULT, features: vec![] });
-        roundtrip_req(WireRequest::Learn { id: 9, class: 3, features: vec![42.0; 64] });
-        roundtrip_req(WireRequest::Snapshot { id: 10, path: "k.clok".into() });
-        roundtrip_req(WireRequest::Snapshot { id: 11, path: String::new() });
-        roundtrip_req(WireRequest::Stats { id: 12 });
+    fn v1_request_roundtrips() {
+        roundtrip_req(
+            WireRequest::new(
+                7,
+                ReqBody::Infer { mode: MODE_PACKED, features: vec![1.5, -2.25, 0.0] },
+            ),
+            WIRE_V1,
+        );
+        roundtrip_req(
+            WireRequest::new(8, ReqBody::Infer { mode: MODE_DEFAULT, features: vec![] }),
+            WIRE_V1,
+        );
+        roundtrip_req(
+            WireRequest::new(9, ReqBody::Learn { class: 3, features: vec![42.0; 64] }),
+            WIRE_V1,
+        );
+        roundtrip_req(WireRequest::new(10, ReqBody::Snapshot { path: "k.clok".into() }), WIRE_V1);
+        roundtrip_req(WireRequest::new(11, ReqBody::Snapshot { path: String::new() }), WIRE_V1);
+        roundtrip_req(WireRequest::new(12, ReqBody::Stats), WIRE_V1);
+        roundtrip_req(WireRequest::new(13, ReqBody::Hello { version: WIRE_V2 }), WIRE_V1);
+    }
+
+    #[test]
+    fn v2_request_roundtrips_with_models() {
+        for model in ["", "tiny", "isolet-prod"] {
+            roundtrip_req(
+                WireRequest::for_model(
+                    21,
+                    model,
+                    ReqBody::Infer { mode: MODE_L1, features: vec![0.5, 1.0] },
+                ),
+                WIRE_V2,
+            );
+            roundtrip_req(
+                WireRequest::for_model(
+                    22,
+                    model,
+                    ReqBody::Learn { class: 1, features: vec![9.0; 8] },
+                ),
+                WIRE_V2,
+            );
+            roundtrip_req(
+                WireRequest::for_model(23, model, ReqBody::Snapshot { path: "x".into() }),
+                WIRE_V2,
+            );
+            roundtrip_req(WireRequest::for_model(24, model, ReqBody::Stats), WIRE_V2);
+        }
+        // hello is v1-shaped even on a v2 connection
+        roundtrip_req(WireRequest::new(25, ReqBody::Hello { version: 7 }), WIRE_V2);
+    }
+
+    #[test]
+    fn v1_encode_refuses_model_targeting() {
+        let req = WireRequest::for_model(1, "tiny", ReqBody::Stats);
+        let e = req.encode(WIRE_V1).unwrap_err().to_string();
+        assert!(e.contains("wire v2"), "{e}");
+        // hello never carries a model in either version
+        let req = WireRequest::for_model(2, "tiny", ReqBody::Hello { version: WIRE_V2 });
+        assert!(req.encode(WIRE_V2).is_err());
+        // unknown versions refused outright
+        assert!(WireRequest::new(3, ReqBody::Stats).encode(9).is_err());
+        assert!(WireRequest::decode(&[0u8; 16], 9).is_err());
     }
 
     #[test]
@@ -383,28 +624,61 @@ mod tests {
                 snapshots: 1,
             },
         });
+        roundtrip_resp(WireResponse::Hello {
+            id: 6,
+            version: WIRE_V2,
+            default_model: "tiny".into(),
+            models: vec!["tiny".into(), "isolet".into()],
+        });
+        roundtrip_resp(WireResponse::Hello {
+            id: 7,
+            version: WIRE_V1,
+            default_model: String::new(),
+            models: vec![],
+        });
         roundtrip_resp(WireResponse::Error { id: 5, msg: "class 99 out of range".into() });
     }
 
     #[test]
     fn decode_rejects_garbage_opcode_truncation_and_trailing() {
-        let good = WireRequest::Infer { id: 1, mode: 0, features: vec![1.0] }.encode();
+        let good = WireRequest::new(1, ReqBody::Infer { mode: 0, features: vec![1.0] })
+            .encode(WIRE_V1)
+            .unwrap();
         // garbage opcode
         let mut bad = good.clone();
         bad[8] = 0x77;
-        assert!(WireRequest::decode(&bad).unwrap_err().to_string().contains("opcode"));
+        assert!(WireRequest::decode(&bad, WIRE_V1)
+            .unwrap_err()
+            .to_string()
+            .contains("opcode"));
         // truncated feature block
-        assert!(WireRequest::decode(&good[..good.len() - 2]).is_err());
+        assert!(WireRequest::decode(&good[..good.len() - 2], WIRE_V1).is_err());
         // short header
-        assert!(WireRequest::decode(&good[..5]).is_err());
+        assert!(WireRequest::decode(&good[..5], WIRE_V1).is_err());
         // trailing bytes
         let mut bad = good.clone();
         bad.push(0);
-        assert!(WireRequest::decode(&bad).unwrap_err().to_string().contains("trailing"));
+        assert!(WireRequest::decode(&bad, WIRE_V1)
+            .unwrap_err()
+            .to_string()
+            .contains("trailing"));
         // bad infer mode
         let mut bad = good;
         bad[9] = 9;
-        assert!(WireRequest::decode(&bad).unwrap_err().to_string().contains("mode"));
+        assert!(WireRequest::decode(&bad, WIRE_V1)
+            .unwrap_err()
+            .to_string()
+            .contains("mode"));
+    }
+
+    #[test]
+    fn v2_decode_rejects_truncated_model_field() {
+        let good = WireRequest::for_model(1, "tiny", ReqBody::Stats).encode(WIRE_V2).unwrap();
+        // cut inside the model string
+        assert!(WireRequest::decode(&good[..good.len() - 2], WIRE_V2).is_err());
+        // a v1-encoded stats frame is NOT a valid v2 frame (missing model)
+        let v1 = WireRequest::new(1, ReqBody::Stats).encode(WIRE_V1).unwrap();
+        assert!(WireRequest::decode(&v1, WIRE_V2).is_err());
     }
 
     #[test]
@@ -415,7 +689,7 @@ mod tests {
         b.push(OP_INFER);
         b.push(MODE_DEFAULT);
         b.extend_from_slice(&(u32::MAX).to_le_bytes());
-        assert!(WireRequest::decode(&b).is_err());
+        assert!(WireRequest::decode(&b, WIRE_V1).is_err());
     }
 
     #[test]
@@ -463,8 +737,9 @@ mod tests {
 
     #[test]
     fn peek_id_best_effort() {
-        let req = WireRequest::Stats { id: 0xDEAD_BEEF };
-        assert_eq!(peek_id(&req.encode()), 0xDEAD_BEEF);
+        let req = WireRequest::new(0xDEAD_BEEF, ReqBody::Stats);
+        assert_eq!(peek_id(&req.encode(WIRE_V1).unwrap()), 0xDEAD_BEEF);
+        assert_eq!(peek_id(&req.encode(WIRE_V2).unwrap()), 0xDEAD_BEEF);
         assert_eq!(peek_id(&[1, 2, 3]), 0);
     }
 
@@ -475,5 +750,24 @@ mod tests {
         assert_eq!(&buf[..4], &8u32.to_le_bytes());
         assert_eq!(buf.len(), 12);
         assert!(MAX_FRAME >= 1 << 20);
+    }
+
+    #[test]
+    fn header_byte_layout_is_pinned() {
+        // the offsets docs/PROTOCOL.md documents: id at 0 (8 bytes), op at
+        // 8, and — v2 only — the model str16 at 9
+        let v1 = WireRequest::new(0x0102_0304_0506_0708, ReqBody::Stats)
+            .encode(WIRE_V1)
+            .unwrap();
+        assert_eq!(v1[8], OP_STATS);
+        assert_eq!(v1.len(), 9);
+        let v2 = WireRequest::for_model(1, "ab", ReqBody::Stats).encode(WIRE_V2).unwrap();
+        assert_eq!(v2[8], OP_STATS);
+        assert_eq!(&v2[9..11], &2u16.to_le_bytes());
+        assert_eq!(&v2[11..13], b"ab");
+        assert_eq!(v2.len(), 13);
+        // responses: id at 0, kind at 8
+        let resp = WireResponse::Learn { id: 3, class: 1 }.encode();
+        assert_eq!(resp[8], OP_LEARN);
     }
 }

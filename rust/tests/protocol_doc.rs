@@ -1,0 +1,129 @@
+//! Pins `docs/PROTOCOL.md` to the implementation: the documented magic
+//! numbers, opcodes, versions, caps, and header offsets must match the
+//! constants in `serve::wire` and `hdc::knowledge`, so the written spec
+//! cannot drift from the code it describes.
+
+use clo_hdnn::hdc::knowledge;
+use clo_hdnn::serve::wire;
+
+fn spec() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/PROTOCOL.md");
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("docs/PROTOCOL.md must exist next to the code it pins: {e}"))
+}
+
+/// Assert the spec's constants table carries exactly this row.
+fn pin(doc: &str, name: &str, value: &str) {
+    let row = format!("| `{name}` | `{value}` |");
+    assert!(
+        doc.contains(&row),
+        "docs/PROTOCOL.md is out of date: expected the constants table row\n  {row}\n\
+         (the implementation constant changed, or the doc did)"
+    );
+}
+
+#[test]
+fn wire_constants_match_the_documented_table() {
+    let doc = spec();
+    pin(&doc, "MAX_FRAME", &wire::MAX_FRAME.to_string());
+    pin(&doc, "WIRE_V1", &wire::WIRE_V1.to_string());
+    pin(&doc, "WIRE_V2", &wire::WIRE_V2.to_string());
+    pin(&doc, "MAX_INFLIGHT", &wire::MAX_INFLIGHT.to_string());
+    pin(&doc, "OP_INFER", &format!("{:#04X}", wire::OP_INFER));
+    pin(&doc, "OP_LEARN", &format!("{:#04X}", wire::OP_LEARN));
+    pin(&doc, "OP_SNAPSHOT", &format!("{:#04X}", wire::OP_SNAPSHOT));
+    pin(&doc, "OP_STATS", &format!("{:#04X}", wire::OP_STATS));
+    pin(&doc, "OP_HELLO", &format!("{:#04X}", wire::OP_HELLO));
+    pin(&doc, "KIND_ERROR", &format!("{:#04X}", wire::KIND_ERROR));
+    pin(&doc, "MODE_DEFAULT", &format!("{:#04X}", wire::MODE_DEFAULT));
+    pin(&doc, "MODE_L1", &format!("{:#04X}", wire::MODE_L1));
+    pin(&doc, "MODE_PACKED", &format!("{:#04X}", wire::MODE_PACKED));
+    // the 16 MiB cap really is 16 MiB
+    assert_eq!(wire::MAX_FRAME, 16 * 1024 * 1024);
+}
+
+#[test]
+fn clok_constants_match_the_documented_table() {
+    let doc = spec();
+    pin(
+        &doc,
+        "CLOK_MAGIC",
+        &format!("\"{}\"", std::str::from_utf8(knowledge::MAGIC).unwrap()),
+    );
+    pin(&doc, "CLOK_VERSION", &knowledge::VERSION.to_string());
+    pin(&doc, "CLOK_VERSION_MIN", &knowledge::VERSION_MIN.to_string());
+    // the documented header offsets (magic 0, version 4, checksum 8,
+    // payload 16) are the ones the loader actually reads
+    for line in [
+        "offset 0    magic     \"CLOK\"",
+        "offset 4    version   u32",
+        "offset 8    checksum  u64",
+        "offset 16   payload:",
+    ] {
+        assert!(doc.contains(line), "CLOK layout line missing from spec: {line:?}");
+    }
+}
+
+#[test]
+fn documented_request_header_offsets_match_the_encoder() {
+    let doc = spec();
+    // the spec promises: id at 0 (u64), op at 8, v2 model str16 at 9 —
+    // verify against real encoded frames, and that the doc states it
+    for line in ["offset 8   op   u8", "offset 9   model  str16"] {
+        assert!(doc.contains(line), "wire header line missing from spec: {line:?}");
+    }
+    let v1 = wire::WireRequest::new(0xAABB, wire::ReqBody::Stats)
+        .encode(wire::WIRE_V1)
+        .unwrap();
+    assert_eq!(u64::from_le_bytes(v1[0..8].try_into().unwrap()), 0xAABB);
+    assert_eq!(v1[8], wire::OP_STATS);
+    let v2 = wire::WireRequest::for_model(1, "ab", wire::ReqBody::Stats)
+        .encode(wire::WIRE_V2)
+        .unwrap();
+    assert_eq!(v2[8], wire::OP_STATS);
+    assert_eq!(&v2[9..11], &2u16.to_le_bytes());
+    assert_eq!(&v2[11..13], b"ab");
+    // responses: id at 0, kind at 8 (KIND_ERROR for errors)
+    let err = wire::WireResponse::Error { id: 7, msg: "x".into() }.encode();
+    assert_eq!(err[8], wire::KIND_ERROR);
+}
+
+#[test]
+fn clok_model_field_sits_where_the_spec_says() {
+    // the spec's version history: v2 = v1 + one model str16 placed
+    // immediately after the config name. Pin that structurally: in a v2
+    // image the two bytes right after the name str16 ARE the model length
+    // (0 for an unnamed save), followed by the model bytes — and naming a
+    // model grows the image by exactly len(model) over the unnamed v2
+    // image (whose always-present model_len field covers the +2).
+    use clo_hdnn::config::HdConfig;
+    use clo_hdnn::hdc::chv::ChvStore;
+    let cfg = HdConfig::synthetic("tcfg", 8, 8, 32, 32, 8, 4);
+    let store = ChvStore::new(cfg);
+    let unnamed = knowledge::to_bytes(&store);
+    let named = knowledge::to_bytes_named(&store, "alpha");
+    assert_eq!(named.len(), unnamed.len() + "alpha".len());
+    assert_eq!(&unnamed[4..8], &knowledge::VERSION.to_le_bytes());
+    // walk the payload: name str16, then the model str16 at the documented
+    // offset in both images
+    let payload = &unnamed[16..];
+    let name_len = u16::from_le_bytes(payload[0..2].try_into().unwrap()) as usize;
+    assert_eq!(&payload[2..2 + name_len], b"tcfg");
+    let off = 2 + name_len;
+    assert_eq!(
+        &payload[off..off + 2],
+        &0u16.to_le_bytes(),
+        "unnamed v2 image carries an empty model field after the name"
+    );
+    let npayload = &named[16..];
+    assert_eq!(
+        &npayload[off..off + 2],
+        &(b"alpha".len() as u16).to_le_bytes(),
+        "model length immediately follows the config name"
+    );
+    assert_eq!(&npayload[off + 2..off + 2 + 5], b"alpha");
+    // a v1 image (no model field) still loads — the back-compat fixture
+    // lives in the knowledge unit tests; here we pin that the loader
+    // window is exactly 1..=current
+    assert_eq!(knowledge::VERSION_MIN, 1);
+}

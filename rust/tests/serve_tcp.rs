@@ -1,13 +1,15 @@
 //! End-to-end tests for the TCP serving layer and the durable knowledge
 //! store: live learn/infer/snapshot/stats over a loopback socket,
 //! malformed-frame fuzzing against the wire contract, concurrent-client
-//! multiplexing, and the warm-restart invariant (learn -> snapshot ->
-//! restart -> bit-identical predictions in both search modes).
+//! multiplexing, wire-v2 pipelining across a two-model registry (replies
+//! matched by client-assigned id, cross-model isolation under garbled
+//! frames), v1 back-compat, and the warm-restart invariant (learn ->
+//! snapshot -> restart -> bit-identical predictions in both search modes).
 
 use clo_hdnn::config::HdConfig;
 use clo_hdnn::coordinator::{Coordinator, CoordinatorOptions};
 use clo_hdnn::hdc::{knowledge, SearchMode};
-use clo_hdnn::serve::{wire, Client, ServeOptions, Server};
+use clo_hdnn::serve::{wire, Client, ModelSpec, Registry, ReqBody, ServeOptions, Server};
 use clo_hdnn::util::Rng;
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -28,7 +30,22 @@ fn start_server(opts: CoordinatorOptions) -> Server {
     // tests exercise explicit snapshot paths over the wire, which the
     // default (hardened) options refuse — opt in here
     let serve_opts = ServeOptions { allow_snapshot_paths: true, ..ServeOptions::default() };
-    Server::start("127.0.0.1:0", coord, serve_opts).unwrap()
+    Server::start("127.0.0.1:0", Registry::single("t", coord), serve_opts).unwrap()
+}
+
+/// Two models with *different* feature widths behind one server — a frame
+/// routed to the wrong model cannot silently succeed.
+fn start_two_model_server() -> (Server, HdConfig, HdConfig) {
+    let cfg_a = HdConfig::synthetic("a", 8, 8, 32, 32, 8, 4); // F=64
+    let cfg_b = HdConfig::synthetic("b", 4, 4, 32, 32, 8, 3); // F=16
+    let registry = Registry::start(vec![
+        ModelSpec::new("alpha", CoordinatorOptions::software(cfg_a.clone())),
+        ModelSpec::new("beta", CoordinatorOptions::software(cfg_b.clone())),
+    ])
+    .unwrap();
+    let serve_opts = ServeOptions { allow_snapshot_paths: true, ..ServeOptions::default() };
+    let server = Server::start("127.0.0.1:0", registry, serve_opts).unwrap();
+    (server, cfg_a, cfg_b)
 }
 
 fn tmp(name: &str) -> std::path::PathBuf {
@@ -155,12 +172,11 @@ fn malformed_frames_get_error_replies_and_framing_survives() {
         other => panic!("{other:?}"),
     }
     // the connection survives: a valid infer on the same socket works
-    let good = wire::WireRequest::Infer {
-        id: 43,
-        mode: wire::MODE_DEFAULT,
-        features: ps[0].clone(),
-    };
-    wire::write_frame(&mut raw, &good.encode()).unwrap();
+    let good = wire::WireRequest::new(
+        43,
+        ReqBody::Infer { mode: wire::MODE_DEFAULT, features: ps[0].clone() },
+    );
+    wire::write_frame(&mut raw, &good.encode(wire::WIRE_V1).unwrap()).unwrap();
     match wire::read_frame(&mut reader, wire::MAX_FRAME).unwrap() {
         wire::Frame::Payload(p) => match wire::WireResponse::decode(&p).unwrap() {
             wire::WireResponse::Infer { id, class, .. } => {
@@ -306,7 +322,9 @@ fn remote_snapshot_paths_are_refused_by_default() {
     let mut opts = CoordinatorOptions::software(cfg.clone());
     opts.snapshot_path = Some(snap.clone());
     let coord = Coordinator::start(opts).unwrap();
-    let server = Server::start("127.0.0.1:0", coord, ServeOptions::default()).unwrap();
+    let server =
+        Server::start("127.0.0.1:0", Registry::single("t", coord), ServeOptions::default())
+            .unwrap();
     let addr = server.local_addr().to_string();
     let ps = protos(&cfg, 97);
 
@@ -352,4 +370,271 @@ fn server_default_snapshot_path_and_auto_cadence_work_over_tcp() {
     server.stop();
     // shutdown flush appended nothing new (no learns since), file loads
     assert_eq!(knowledge::load(&snap).unwrap().total_learns(), 4);
+}
+
+#[test]
+fn hello_negotiates_v2_and_lists_models() {
+    let (server, _, _) = start_two_model_server();
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    assert_eq!(client.version(), wire::WIRE_V1);
+    let (version, default_model, models) = client.hello().unwrap();
+    assert_eq!(version, wire::WIRE_V2);
+    assert_eq!(client.version(), wire::WIRE_V2);
+    assert_eq!(default_model, "alpha");
+    assert_eq!(models, ["alpha".to_string(), "beta".to_string()]);
+    // connect_v2 is the one-call form of the same negotiation
+    let client2 = Client::connect_v2(&addr).unwrap();
+    assert_eq!(client2.version(), wire::WIRE_V2);
+    drop(client);
+    drop(client2);
+    server.stop();
+}
+
+#[test]
+fn model_targeting_without_hello_is_refused_client_side() {
+    let (server, cfg_a, _) = start_two_model_server();
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    let e = client.set_model("beta").unwrap_err().to_string();
+    assert!(e.contains("hello"), "{e}");
+    let e = client
+        .send_for("beta", ReqBody::Stats)
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("wire v2"), "{e}");
+    // the default model still works on the un-upgraded connection
+    let ps = protos(&cfg_a, 90);
+    client.learn(&ps[0], 0).unwrap();
+    drop(client);
+    server.stop();
+}
+
+#[test]
+fn v1_client_round_trips_against_the_default_model_unchanged() {
+    // a never-upgraded client against a multi-model server behaves exactly
+    // like the single-model protocol: every frame lands on the default
+    let (server, cfg_a, _) = start_two_model_server();
+    let addr = server.local_addr().to_string();
+    let ps = protos(&cfg_a, 91);
+    let mut client = Client::connect(&addr).unwrap();
+    for (c, p) in ps.iter().enumerate() {
+        for _ in 0..3 {
+            client.learn(p, c).unwrap();
+        }
+    }
+    for (c, p) in ps.iter().enumerate() {
+        assert_eq!(client.infer(p).unwrap().class, c);
+    }
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.learns, 12, "v1 stats report the default model");
+    assert_eq!(stats.trained_classes, 4);
+    assert_eq!(stats.wire_errors, 0);
+    drop(client);
+    server.stop();
+}
+
+#[test]
+fn pipelined_mixed_traffic_across_two_models_matches_ids() {
+    let (server, cfg_a, cfg_b) = start_two_model_server();
+    let addr = server.local_addr().to_string();
+    let ps_a = protos(&cfg_a, 92);
+    let ps_b = protos(&cfg_b, 93);
+
+    // seed both models
+    let mut seeder = Client::connect_v2(&addr).unwrap();
+    for (c, p) in ps_a.iter().enumerate() {
+        seeder.set_model("alpha").unwrap();
+        for _ in 0..3 {
+            seeder.learn(p, c).unwrap();
+        }
+    }
+    for (c, p) in ps_b.iter().enumerate() {
+        seeder.set_model("beta").unwrap();
+        for _ in 0..3 {
+            seeder.learn(p, c).unwrap();
+        }
+    }
+
+    // one connection, K = 8 mixed Infer/Learn frames across both models,
+    // all written before ANY reply is read
+    let mut client = Client::connect_v2(&addr).unwrap();
+    // (id, model, expected class for infers / None for learns)
+    let mut expected: std::collections::HashMap<u64, (&str, Option<usize>)> =
+        std::collections::HashMap::new();
+    for round in 0..2 {
+        let id = client
+            .send_for("alpha", ReqBody::Infer { mode: 0, features: ps_a[round].clone() })
+            .unwrap();
+        expected.insert(id, ("alpha", Some(round)));
+        let id = client
+            .send_for("beta", ReqBody::Infer { mode: 0, features: ps_b[round].clone() })
+            .unwrap();
+        expected.insert(id, ("beta", Some(round)));
+        let id = client
+            .send_for(
+                "alpha",
+                ReqBody::Learn { class: round as u32, features: ps_a[round].clone() },
+            )
+            .unwrap();
+        expected.insert(id, ("alpha", None));
+        let id = client
+            .send_for(
+                "beta",
+                ReqBody::Learn { class: round as u32, features: ps_b[round].clone() },
+            )
+            .unwrap();
+        expected.insert(id, ("beta", None));
+    }
+    assert_eq!(expected.len(), 8, "8 frames in flight");
+    for _ in 0..8 {
+        let resp = client.recv().unwrap();
+        let (model, expect) = expected
+            .remove(&resp.id())
+            .unwrap_or_else(|| panic!("unmatched reply id {}", resp.id()));
+        match (resp, expect) {
+            (wire::WireResponse::Infer { class, .. }, Some(want)) => {
+                assert_eq!(class as usize, want, "model {model}");
+            }
+            (wire::WireResponse::Learn { class, .. }, None) => {
+                assert!((class as usize) < 4, "model {model}");
+            }
+            (other, _) => panic!("model {model}: unexpected reply {other:?}"),
+        }
+    }
+    assert!(expected.is_empty(), "every in-flight frame got exactly one reply");
+
+    // the pipelined learns landed in the right stores: per-model counts
+    client.set_model("alpha").unwrap();
+    assert_eq!(client.stats().unwrap().learns, 3 * 4 + 2);
+    client.set_model("beta").unwrap();
+    assert_eq!(client.stats().unwrap().learns, 3 * 3 + 2);
+    drop(seeder);
+    drop(client);
+    server.stop();
+}
+
+#[test]
+fn error_replies_echo_request_ids_under_pipelining() {
+    let (server, cfg_a, _) = start_two_model_server();
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect_v2(&addr).unwrap();
+    let ps = protos(&cfg_a, 94);
+    // three failures in flight at once: class out of range, wrong feature
+    // width, unknown model — each error must name its request
+    let id_class = client
+        .send_for("alpha", ReqBody::Learn { class: 99, features: ps[0].clone() })
+        .unwrap();
+    let id_width = client
+        .send_for("alpha", ReqBody::Infer { mode: 0, features: vec![0.0; 3] })
+        .unwrap();
+    let id_model = client.send_for("gamma", ReqBody::Stats).unwrap();
+    let id_good = client
+        .send_for("alpha", ReqBody::Learn { class: 0, features: ps[0].clone() })
+        .unwrap();
+    let mut seen = std::collections::HashMap::new();
+    for _ in 0..4 {
+        let resp = client.recv().unwrap();
+        seen.insert(resp.id(), resp);
+    }
+    for (id, needle) in [(id_class, "class"), (id_width, "len"), (id_model, "gamma")] {
+        match &seen[&id] {
+            wire::WireResponse::Error { id: eid, msg } => {
+                assert_eq!(*eid, id);
+                assert!(msg.contains(needle), "id {id}: {msg}");
+            }
+            other => panic!("expected error for id {id}, got {other:?}"),
+        }
+    }
+    assert!(
+        matches!(seen[&id_good], wire::WireResponse::Learn { .. }),
+        "the valid request in the same burst still succeeds"
+    );
+    drop(client);
+    server.stop();
+}
+
+#[test]
+fn garbled_frames_on_a_pipelined_connection_leave_the_other_model_untouched() {
+    let (server, cfg_a, cfg_b) = start_two_model_server();
+    let addr = server.local_addr().to_string();
+    let ps_a = protos(&cfg_a, 95);
+    let ps_b = protos(&cfg_b, 96);
+    let snap_before = tmp("isolation_before.clok");
+    let snap_after = tmp("isolation_after.clok");
+    let _ = std::fs::remove_file(&snap_before);
+    let _ = std::fs::remove_file(&snap_after);
+
+    // seed beta, then checkpoint it: the reference image
+    let mut seeder = Client::connect_v2(&addr).unwrap();
+    seeder.set_model("beta").unwrap();
+    for (c, p) in ps_b.iter().enumerate() {
+        seeder.learn(p, c).unwrap();
+    }
+    seeder.snapshot(Some(snap_before.to_str().unwrap())).unwrap();
+
+    // a v2 connection interleaves valid alpha traffic with garbage frames
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    let mut reader = std::io::BufReader::new(raw.try_clone().unwrap());
+    let hello = wire::WireRequest::new(1, ReqBody::Hello { version: wire::WIRE_V2 });
+    wire::write_frame(&mut raw, &hello.encode(wire::WIRE_V1).unwrap()).unwrap();
+    match wire::read_frame(&mut reader, wire::MAX_FRAME).unwrap() {
+        wire::Frame::Payload(p) => {
+            assert!(matches!(
+                wire::WireResponse::decode(&p).unwrap(),
+                wire::WireResponse::Hello { .. }
+            ));
+        }
+        other => panic!("{other:?}"),
+    }
+    // burst: valid infer(alpha), garbage opcode, truncated body, valid
+    // learn(alpha) — all pipelined before reading anything back
+    let infer = wire::WireRequest::for_model(
+        10,
+        "alpha",
+        ReqBody::Infer { mode: 0, features: ps_a[1].clone() },
+    );
+    wire::write_frame(&mut raw, &infer.encode(wire::WIRE_V2).unwrap()).unwrap();
+    let mut garbage = Vec::new();
+    garbage.extend_from_slice(&11u64.to_le_bytes());
+    garbage.push(0x7F); // no such opcode
+    wire::write_frame(&mut raw, &garbage).unwrap();
+    let mut truncated = Vec::new();
+    truncated.extend_from_slice(&12u64.to_le_bytes());
+    wire::write_frame(&mut raw, &truncated).unwrap();
+    let learn = wire::WireRequest::for_model(
+        13,
+        "alpha",
+        ReqBody::Learn { class: 2, features: ps_a[2].clone() },
+    );
+    wire::write_frame(&mut raw, &learn.encode(wire::WIRE_V2).unwrap()).unwrap();
+
+    let mut seen = std::collections::HashMap::new();
+    for _ in 0..4 {
+        match wire::read_frame(&mut reader, wire::MAX_FRAME).unwrap() {
+            wire::Frame::Payload(p) => {
+                let resp = wire::WireResponse::decode(&p).unwrap();
+                seen.insert(resp.id(), resp);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+    assert!(matches!(seen[&10], wire::WireResponse::Infer { .. }));
+    assert!(matches!(seen[&11], wire::WireResponse::Error { .. }));
+    assert!(matches!(seen[&12], wire::WireResponse::Error { .. }));
+    assert!(matches!(seen[&13], wire::WireResponse::Learn { .. }));
+    drop(reader);
+    drop(raw);
+
+    // beta's knowledge is bit-identical to before the fuzzing: snapshot
+    // again and compare the CLOK images byte for byte
+    seeder.snapshot(Some(snap_after.to_str().unwrap())).unwrap();
+    let before = std::fs::read(&snap_before).unwrap();
+    let after = std::fs::read(&snap_after).unwrap();
+    assert_eq!(before, after, "model beta must be untouched by the fuzzed connection");
+    // while alpha DID change (the valid learn landed)
+    seeder.set_model("alpha").unwrap();
+    assert_eq!(seeder.stats().unwrap().learns, 1);
+    drop(seeder);
+    server.stop();
 }

@@ -32,6 +32,9 @@ pub struct ServeMetrics {
     pub learns: u64,
     /// failed requests
     pub errors: u64,
+    /// requests that never saw a reply within the client's deadline (a
+    /// subset of `errors` — timeouts are also counted as errors)
+    pub timeouts: u64,
     /// all requests (infer + learn + error)
     pub total: u64,
     /// wall-clock of the whole run (the caller sets it; thread walls
@@ -61,6 +64,14 @@ impl ServeMetrics {
         self.total += 1;
     }
 
+    /// A request that timed out waiting for its reply (counts as an error
+    /// too, so error gates catch it).
+    pub fn record_timeout(&mut self) {
+        self.timeouts += 1;
+        self.errors += 1;
+        self.total += 1;
+    }
+
     /// Merge another collector (per-client loadgen metrics folded into the
     /// run total; `wall_s` is the caller's to set — thread walls overlap).
     pub fn merge(&mut self, other: &ServeMetrics) {
@@ -70,6 +81,7 @@ impl ServeMetrics {
         self.wcfe_runs += other.wcfe_runs;
         self.learns += other.learns;
         self.errors += other.errors;
+        self.timeouts += other.timeouts;
         self.total += other.total;
     }
 

@@ -11,6 +11,6 @@ pub mod router;
 pub mod server;
 
 pub use metrics::{LatencySummary, ServeMetrics};
-pub use request::{CoordStats, Payload, ReplyKind, Request, Response};
+pub use request::{CoordStats, Payload, ReplyKind, ReplySink, ReplyTo, Request, Response};
 pub use router::Router;
-pub use server::{BackendSpec, Coordinator, CoordinatorOptions};
+pub use server::{BackendSpec, Coordinator, CoordinatorOptions, TrySubmit};

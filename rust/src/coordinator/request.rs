@@ -2,6 +2,8 @@
 
 use crate::hdc::SearchMode;
 use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// What the client submits.
@@ -28,7 +30,52 @@ pub enum Payload {
     Stats,
 }
 
-/// One queued unit of work: a payload plus the reply channel the executor
+/// Where an executor delivers a completed [`Response`]. The sink variant
+/// never blocks: the serving reactor's single event-loop thread must stay
+/// responsive, so completions are handed to a routing sink (which tags
+/// them with a connection token and wakes the loop) instead of a bounded
+/// channel an executor could stall on.
+pub trait ReplySink: Send + Sync {
+    /// Deliver one completed response. Must not block.
+    fn complete(&self, resp: Response);
+}
+
+/// The reply half of a [`Request`]: either a caller-owned channel (the
+/// blocking `call`/`submit` paths) or a non-blocking [`ReplySink`] (the
+/// serving reactor path).
+#[derive(Clone)]
+pub enum ReplyTo {
+    /// a caller-owned channel; the caller sizes it so the executor's send
+    /// cannot block (see `Coordinator::submit_with`)
+    Channel(mpsc::SyncSender<Response>),
+    /// a non-blocking routing sink (see `Coordinator::try_submit_sink`)
+    Sink(Arc<dyn ReplySink>),
+}
+
+impl ReplyTo {
+    /// Deliver the response; returns `false` when the receiving side is
+    /// gone (the executor ignores that — a dead client is not an error).
+    pub fn send(&self, resp: Response) -> bool {
+        match self {
+            ReplyTo::Channel(tx) => tx.send(resp).is_ok(),
+            ReplyTo::Sink(sink) => {
+                sink.complete(resp);
+                true
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for ReplyTo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReplyTo::Channel(_) => f.write_str("ReplyTo::Channel"),
+            ReplyTo::Sink(_) => f.write_str("ReplyTo::Sink"),
+        }
+    }
+}
+
+/// One queued unit of work: a payload plus the reply route the executor
 /// answers on.
 #[derive(Debug)]
 pub struct Request {
@@ -39,8 +86,8 @@ pub struct Request {
     pub payload: Payload,
     /// submission timestamp (queueing-latency accounting)
     pub submitted: Instant,
-    /// reply channel (one-shot)
-    pub reply: std::sync::mpsc::SyncSender<Response>,
+    /// reply route (one response per request)
+    pub reply: ReplyTo,
 }
 
 /// Which operation a [`Response`] answers. The serving layer translates

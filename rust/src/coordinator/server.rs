@@ -10,7 +10,7 @@
 
 use crate::config::HdConfig;
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
-use crate::coordinator::request::{CoordStats, Payload, Request, Response};
+use crate::coordinator::request::{CoordStats, Payload, ReplySink, ReplyTo, Request, Response};
 use crate::coordinator::router::{ModePolicy, Router};
 use crate::data::TensorFile;
 use crate::hdc::{knowledge, HdBackend, HdClassifier, ProgressiveSearch, SearchMode};
@@ -21,6 +21,7 @@ use crate::sim::Mode;
 use crate::wcfe::WcfeModel;
 use crate::Result;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Which backend the executor thread builds.
@@ -134,7 +135,12 @@ impl Coordinator {
         self.tx
             .as_ref()
             .expect("coordinator stopped")
-            .send(Request { id, payload, submitted: Instant::now(), reply: reply_tx })
+            .send(Request {
+                id,
+                payload,
+                submitted: Instant::now(),
+                reply: ReplyTo::Channel(reply_tx),
+            })
             .map_err(|_| anyhow::anyhow!("executor gone"))?;
         Ok(reply_rx.recv()?)
     }
@@ -148,7 +154,12 @@ impl Coordinator {
         self.tx
             .as_ref()
             .expect("coordinator stopped")
-            .send(Request { id, payload, submitted: Instant::now(), reply: reply_tx })
+            .send(Request {
+                id,
+                payload,
+                submitted: Instant::now(),
+                reply: ReplyTo::Channel(reply_tx),
+            })
             .map_err(|_| anyhow::anyhow!("executor gone"))?;
         Ok(reply_rx)
     }
@@ -170,9 +181,43 @@ impl Coordinator {
         self.tx
             .as_ref()
             .expect("coordinator stopped")
-            .send(Request { id, payload, submitted: Instant::now(), reply })
+            .send(Request {
+                id,
+                payload,
+                submitted: Instant::now(),
+                reply: ReplyTo::Channel(reply),
+            })
             .map_err(|_| anyhow::anyhow!("executor gone"))
     }
+
+    /// Non-blocking submit for the serving reactor: the request carries the
+    /// caller's id and completes into `sink` (a [`ReplySink`] never blocks
+    /// the executor, so a dead or slow connection cannot stall a model).
+    /// When the executor queue is full the payload is handed back so the
+    /// caller can defer the frame and retry after a completion drains.
+    pub fn try_submit_sink(
+        &self,
+        id: u64,
+        payload: Payload,
+        sink: Arc<dyn ReplySink>,
+    ) -> std::result::Result<(), TrySubmit> {
+        let req = Request { id, payload, submitted: Instant::now(), reply: ReplyTo::Sink(sink) };
+        match self.tx.as_ref().expect("coordinator stopped").try_send(req) {
+            Ok(()) => Ok(()),
+            Err(mpsc::TrySendError::Full(req)) => Err(TrySubmit::Full(req.payload)),
+            Err(mpsc::TrySendError::Disconnected(req)) => Err(TrySubmit::Gone(req.payload)),
+        }
+    }
+}
+
+/// Why a [`Coordinator::try_submit_sink`] did not enqueue; both variants
+/// hand the payload back to the caller.
+#[derive(Debug)]
+pub enum TrySubmit {
+    /// executor queue full — defer the frame and retry later
+    Full(Payload),
+    /// executor has shut down — fail the request
+    Gone(Payload),
 }
 
 impl Drop for Coordinator {

@@ -103,20 +103,29 @@ serve flags: --listen <host:port> switches from the Poisson demo to the TCP
   with a graceful shutdown flush; default 0 = forever — a killed process
   keeps at most --snapshot-every learns unsaved per model),
   --allow-remote-snapshot-paths (honor client-supplied Snapshot paths; off
-  by default — the socket is unauthenticated)
+  by default — the socket is unauthenticated), --idle-timeout <secs> (close
+  connections that send nothing for this long; default 60),
+  --max-conns <n> (simultaneous-connection cap, peers beyond it are shed
+  with an error frame; default 10240)
 
 loadgen flags: --connect <host:port> (required), --clients <n> (default 4),
-  --requests <n> per client (default 200), --learn-frac <f> (default 0.25),
-  --model <name> / --models <a,b> (wire-v2 model targeting; mixes the
-  request stream across models and reports per-model latency percentiles;
-  model names must be synthetic config names), --pipeline <k> (keep k
-  requests in flight per connection over wire v2; default 1),
+  --connections <n> (concurrent connections, spread across the client
+  threads; default = --clients), --requests <n> per client (default 200),
+  --learn-frac <f> (default 0.25), --model <name> / --models <a,b>
+  (wire-v2 model targeting; mixes the request stream across models and
+  reports per-model latency percentiles; model names must be synthetic
+  config names), --pipeline <k> (keep k requests in flight per connection
+  over wire v2; default 1), --timeout <secs> (per-reply deadline, counted
+  per connection and per model; default 30, 0 = wait forever),
   --search default|l1|packed, --out <file> (default BENCH_serve.json),
   --snapshot-default (ask the server to checkpoint every driven model to
   its configured default at the end), --snapshot-out <file> (checkpoint to
   an explicit server-side path; single-model; needs
   --allow-remote-snapshot-paths on the server),
-  --per-class <n> (synthetic workload size, must match the server's)
+  --per-class <n> (synthetic workload size, must match the server's),
+  --scale-connections <a,b,c> (after the main run, hold a..c concurrent
+  connections open and drive --scale-requests (default 2) infer rounds on
+  every one -> the JSON's connection-scaling section)
 
 info flags: --knowledge <file> verifies + summarizes a knowledge
   checkpoint; --model <name> shows one serving model's registry entry
@@ -825,7 +834,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// learns auto-checkpoint every `--snapshot-every` bundles, and shutdown
 /// flushes whatever is unsaved.
 fn cmd_serve_listen(args: &Args) -> Result<()> {
-    use clo_hdnn::serve::{Registry, ServeOptions, Server};
+    use clo_hdnn::serve::{
+        DEFAULT_IDLE_TIMEOUT_SECS, DEFAULT_MAX_CONNS, Registry, ServeOptions, Server,
+    };
 
     let listen = args.str_or("listen", "127.0.0.1:7311");
     let dir = artifacts_dir(args);
@@ -894,13 +905,18 @@ fn cmd_serve_listen(args: &Args) -> Result<()> {
         }
         println!("pre-learned {learn_n} samples into model {default}");
     }
+    let idle_secs = args.f64_or("idle-timeout", DEFAULT_IDLE_TIMEOUT_SECS as f64)?;
+    let max_conns = args.usize_or("max-conns", DEFAULT_MAX_CONNS)?.max(1);
     let serve_opts = ServeOptions {
         allow_snapshot_paths: args.flag("allow-remote-snapshot-paths"),
+        idle_timeout: std::time::Duration::from_secs_f64(idle_secs.max(0.001)),
+        max_conns,
         ..ServeOptions::default()
     };
     let server = Server::start(&listen, registry, serve_opts)?;
     println!(
-        "listening on {} | {} model(s): {} | wire v1+v2 (pipelined)",
+        "listening on {} | {} model(s): {} | wire v1+v2 (pipelined) | \
+         idle-timeout {idle_secs}s | max {max_conns} conns",
         server.local_addr(),
         names.len(),
         names.join(", ")
@@ -939,22 +955,83 @@ struct LoadgenPending {
     t0: std::time::Instant,
 }
 
+/// Per-connection loadgen accounting. A single process-wide error counter
+/// cannot attribute scaling failures, so errors and timeouts are counted
+/// on the connection that saw them (the JSON's `per_connection` section).
+struct ConnReport {
+    /// global connection index (thread-strided across client threads)
+    conn: usize,
+    requests: u64,
+    errors: u64,
+    timeouts: u64,
+}
+
+/// One live loadgen connection: its client, its in-flight window, and its
+/// own report.
+struct LoadgenConn {
+    client: clo_hdnn::serve::Client,
+    pending: std::collections::HashMap<u64, LoadgenPending>,
+    report: ConnReport,
+}
+
+/// Connect (negotiating wire v2 when asked) with a short retry/backoff
+/// loop — a server draining a large accept burst can leave the listen
+/// backlog momentarily full — and arm the per-reply deadline.
+fn loadgen_connect(
+    addr: &str,
+    v2: bool,
+    timeout: Option<std::time::Duration>,
+) -> Result<clo_hdnn::serve::Client> {
+    use clo_hdnn::serve::Client;
+    let mut last = None;
+    for attempt in 0u64..40 {
+        match if v2 { Client::connect_v2(addr) } else { Client::connect(addr) } {
+            Ok(mut c) => {
+                c.set_timeout(timeout)?;
+                return Ok(c);
+            }
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(std::time::Duration::from_millis(5 + 5 * attempt));
+            }
+        }
+    }
+    Err(last.unwrap_or_else(|| anyhow::anyhow!("connect {addr} failed")))
+}
+
 /// Collect one reply off a pipelined connection and fold it into the
-/// per-model accumulators `(metrics, correct, infers)`.
+/// per-model accumulators `(metrics, correct, infers)` plus the
+/// connection's own report. Returns `Ok(false)` when the receive deadline
+/// expired — every request in flight on this connection is then counted as
+/// a timeout (attributed to its model) and the caller reconnects; other
+/// transport failures still abort.
 fn loadgen_drain_one(
-    client: &mut clo_hdnn::serve::Client,
-    pending: &mut std::collections::HashMap<u64, LoadgenPending>,
+    conn: &mut LoadgenConn,
     per: &mut [(clo_hdnn::coordinator::ServeMetrics, usize, usize)],
-) -> Result<()> {
-    use clo_hdnn::serve::WireResponse;
-    let resp = client.recv()?;
-    let p = pending
+) -> Result<bool> {
+    use clo_hdnn::serve::{RecvTimeout, WireResponse};
+    let resp = match conn.client.recv() {
+        Ok(r) => r,
+        Err(e) if e.downcast_ref::<RecvTimeout>().is_some() => {
+            for (_, p) in conn.pending.drain() {
+                per[p.model].0.record_timeout();
+                conn.report.timeouts += 1;
+            }
+            return Ok(false);
+        }
+        Err(e) => return Err(e),
+    };
+    let p = conn
+        .pending
         .remove(&resp.id())
         .ok_or_else(|| anyhow::anyhow!("reply id {} matches no in-flight request", resp.id()))?;
     let dt = p.t0.elapsed().as_secs_f64();
     let (m, correct, infers) = &mut per[p.model];
     match (&resp, p.expect) {
-        (WireResponse::Error { .. }, _) => m.record_error(),
+        (WireResponse::Error { .. }, _) => {
+            m.record_error();
+            conn.report.errors += 1;
+        }
         (WireResponse::Infer { class, segments, early, .. }, Some(label)) => {
             m.record(dt, *segments as usize, *early, false);
             *infers += 1;
@@ -963,17 +1040,122 @@ fn loadgen_drain_one(
         (WireResponse::Learn { .. }, None) => m.record_learn(dt),
         (other, _) => anyhow::bail!("reply type does not match its request: {other:?}"),
     }
-    Ok(())
+    Ok(true)
+}
+
+/// One point of the connection-scaling curve: hold `n` concurrent
+/// connections open (spread over `threads` client threads) and drive
+/// `rounds` lockstep infer round-trips on every one — pipeline 1,
+/// infer-only, pure transport concurrency. Returns the point's JSON row.
+#[allow(clippy::too_many_arguments)]
+fn loadgen_scale_point(
+    addr: &str,
+    v2: bool,
+    work: &LoadgenWork,
+    n: usize,
+    rounds: usize,
+    threads: usize,
+    mode: Option<SearchMode>,
+    timeout: Option<std::time::Duration>,
+) -> Result<clo_hdnn::util::json::Json> {
+    use clo_hdnn::coordinator::ServeMetrics;
+    use clo_hdnn::serve::{RecvTimeout, ReqBody, WireResponse};
+    use clo_hdnn::util::json::Json;
+
+    let t0 = std::time::Instant::now();
+    let results: Vec<Result<ServeMetrics>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                s.spawn(move || -> Result<ServeMetrics> {
+                    // global connection ids owned by this thread: t, t+threads, ...
+                    let mut conns = Vec::new();
+                    for g in (0..n).filter(|g| g % threads == t) {
+                        conns.push((g, loadgen_connect(addr, v2, timeout)?));
+                    }
+                    let mut m = ServeMetrics::default();
+                    for r in 0..rounds {
+                        // send one infer on every connection, then collect
+                        // every reply — all n stay concurrently in flight
+                        let mut sends = Vec::with_capacity(conns.len());
+                        for (slot, (g, c)) in conns.iter_mut().enumerate() {
+                            let idx = (*g + r * n) % work.test.n;
+                            let body = ReqBody::Infer {
+                                mode: clo_hdnn::serve::Client::mode_byte(mode),
+                                features: work.test.sample(idx).to_vec(),
+                            };
+                            let q0 = std::time::Instant::now();
+                            let id = c.send_for(&work.wire_model, body)?;
+                            sends.push((slot, id, q0));
+                        }
+                        for (slot, id, q0) in sends {
+                            let c = &mut conns[slot].1;
+                            match c.recv() {
+                                Ok(resp) if resp.id() == id => match resp {
+                                    WireResponse::Error { .. } => m.record_error(),
+                                    _ => m.record(q0.elapsed().as_secs_f64(), 0, false, false),
+                                },
+                                Ok(_) => m.record_error(),
+                                Err(e) if e.downcast_ref::<RecvTimeout>().is_some() => {
+                                    m.record_timeout()
+                                }
+                                Err(e) => return Err(e),
+                            }
+                        }
+                    }
+                    Ok(m)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("scaling thread panicked"))
+            .collect()
+    });
+    let mut m = ServeMetrics::default();
+    for r in results {
+        m.merge(&r?);
+    }
+    m.wall_s = t0.elapsed().as_secs_f64();
+    let lat = m.latency_summary();
+    println!(
+        "scale {n} conns: {} requests | errors {} | timeouts {} | p50 {} | p99 {} | {:.0} req/s",
+        m.total,
+        m.errors,
+        m.timeouts,
+        fmt_secs(lat.p50_s),
+        fmt_secs(lat.p99_s),
+        m.throughput_rps()
+    );
+    Ok(Json::obj(vec![
+        ("connections", Json::Num(n as f64)),
+        ("requests", Json::Num(m.total as f64)),
+        ("errors", Json::Num(m.errors as f64)),
+        ("timeouts", Json::Num(m.timeouts as f64)),
+        ("wall_s", Json::Num(m.wall_s)),
+        ("throughput_rps", Json::Num(m.throughput_rps())),
+        (
+            "latency",
+            Json::obj(vec![
+                ("p50_s", Json::Num(lat.p50_s)),
+                ("p99_s", Json::Num(lat.p99_s)),
+            ]),
+        ),
+    ]))
 }
 
 /// `clo_hdnn loadgen`: drive a live TCP server with N concurrent client
 /// threads mixing Infer and Learn traffic over deterministic synthetic
 /// workloads, then report throughput + latency percentiles (per model when
-/// driving several) and write `BENCH_serve.json`. `--models a,b` targets a
+/// driving several) and write `BENCH_serve.json` (version 3, with
+/// per-connection error/timeout attribution). `--models a,b` targets a
 /// model mix over wire v2, `--pipeline k` keeps k requests in flight per
-/// connection. With `--learn-frac 0` the per-model request streams are
+/// connection, `--connections n` spreads the streams over n sockets, and
+/// `--scale-connections a,b,c` appends a connection-scaling curve against
+/// the reactor. With `--learn-frac 0` the per-model request streams are
 /// fully deterministic, so accuracy comparisons across a server restart
-/// are exact — the warm-restart CI gate relies on that.
+/// are exact — the warm-restart CI gate relies on that (the sample
+/// schedule is per client *thread*, so connection count doesn't perturb
+/// it).
 fn cmd_loadgen(args: &Args) -> Result<()> {
     use clo_hdnn::coordinator::ServeMetrics;
     use clo_hdnn::serve::{Client, ReqBody};
@@ -1020,35 +1202,49 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             .collect::<Result<_>>()?
     };
     let clients = args.usize_or("clients", 4)?.max(1);
+    // total concurrent connections, spread across the client threads
+    // (thread t owns connections t, t+clients, ...); the default of one
+    // per thread reproduces the historical thread-per-connection shape
+    let connections = args.usize_or("connections", clients)?.max(clients);
     let requests = args.usize_or("requests", 200)?;
     let learn_frac = args.f64_or("learn-frac", 0.25)?.clamp(0.0, 1.0);
+    let timeout_s = args.f64_or("timeout", 30.0)?;
+    let timeout = (timeout_s > 0.0).then(|| std::time::Duration::from_secs_f64(timeout_s));
     let mode = match args.str_or("search", "default").as_str() {
         "default" => None,
         other => Some(SearchMode::parse(other)?),
     };
 
     println!(
-        "loadgen -> {addr}: {clients} clients x {requests} requests, learn-frac {learn_frac}, \
-         pipeline {pipeline}, models [{}], search {:?}",
+        "loadgen -> {addr}: {clients} clients x {requests} requests over {connections} \
+         connection(s), learn-frac {learn_frac}, pipeline {pipeline}, models [{}], search {:?}",
         works.iter().map(|w| w.label.as_str()).collect::<Vec<_>>().join(","),
         mode
     );
     type PerModel = Vec<(ServeMetrics, usize, usize)>;
     let t0 = std::time::Instant::now();
-    let results: Vec<Result<PerModel>> = std::thread::scope(|s| {
+    let results: Vec<Result<(PerModel, Vec<ConnReport>)>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..clients)
             .map(|t| {
                 let (addr, works) = (&addr, &works);
-                s.spawn(move || -> Result<PerModel> {
-                    let mut client =
-                        if v2 { Client::connect_v2(addr)? } else { Client::connect(addr)? };
+                s.spawn(move || -> Result<(PerModel, Vec<ConnReport>)> {
+                    let mut conns: Vec<LoadgenConn> = Vec::new();
+                    for g in (0..connections).filter(|g| g % clients == t) {
+                        conns.push(LoadgenConn {
+                            client: loadgen_connect(addr, v2, timeout)?,
+                            pending: HashMap::new(),
+                            report: ConnReport { conn: g, requests: 0, errors: 0, timeouts: 0 },
+                        });
+                    }
                     let mut rng = Rng::new(0xC0FF_EE00 + t as u64);
                     let mut per: PerModel =
                         works.iter().map(|_| (ServeMetrics::default(), 0, 0)).collect();
                     // per-model deterministic sample schedule: client t
-                    // covers a strided slice of each model's dataset
+                    // covers a strided slice of each model's dataset (the
+                    // schedule is per *thread*, so adding connections never
+                    // changes which samples are sent — only which socket
+                    // carries them)
                     let mut sent = vec![0usize; works.len()];
-                    let mut pending: HashMap<u64, LoadgenPending> = HashMap::new();
                     for i in 0..requests {
                         let mi = (t + i) % works.len();
                         let w = &works[mi];
@@ -1069,17 +1265,26 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                             };
                             (body, Some(w.test.label(idx)))
                         };
+                        let conn = &mut conns[i % conns.len()];
                         let q0 = std::time::Instant::now();
-                        let id = client.send_for(&w.wire_model, body)?;
-                        pending.insert(id, LoadgenPending { model: mi, expect, t0: q0 });
-                        while pending.len() >= pipeline {
-                            loadgen_drain_one(&mut client, &mut pending, &mut per)?;
+                        let id = conn.client.send_for(&w.wire_model, body)?;
+                        conn.report.requests += 1;
+                        conn.pending.insert(id, LoadgenPending { model: mi, expect, t0: q0 });
+                        // the pipeline window is per connection
+                        while conn.pending.len() >= pipeline {
+                            if !loadgen_drain_one(conn, &mut per)? {
+                                conn.client = loadgen_connect(addr, v2, timeout)?;
+                            }
                         }
                     }
-                    while !pending.is_empty() {
-                        loadgen_drain_one(&mut client, &mut pending, &mut per)?;
+                    for conn in &mut conns {
+                        while !conn.pending.is_empty() {
+                            if !loadgen_drain_one(conn, &mut per)? {
+                                conn.client = loadgen_connect(addr, v2, timeout)?;
+                            }
+                        }
                     }
-                    Ok(per)
+                    Ok((per, conns.into_iter().map(|c| c.report).collect()))
                 })
             })
             .collect();
@@ -1091,13 +1296,17 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let wall_s = t0.elapsed().as_secs_f64();
 
     let mut by_model: PerModel = works.iter().map(|_| (ServeMetrics::default(), 0, 0)).collect();
+    let mut conn_reports: Vec<ConnReport> = Vec::with_capacity(connections);
     for r in results {
-        for (i, (m, c, n)) in r?.into_iter().enumerate() {
+        let (per, reports) = r?;
+        for (i, (m, c, n)) in per.into_iter().enumerate() {
             by_model[i].0.merge(&m);
             by_model[i].1 += c;
             by_model[i].2 += n;
         }
+        conn_reports.extend(reports);
     }
+    conn_reports.sort_by_key(|r| r.conn);
     let mut metrics = ServeMetrics::default();
     let (mut correct, mut infers) = (0usize, 0usize);
     for (m, c, n) in &mut by_model {
@@ -1114,6 +1323,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     table.row(&["requests".into(), format!("{}", metrics.total)]);
     table.row(&["learns".into(), format!("{}", metrics.learns)]);
     table.row(&["errors".into(), format!("{}", metrics.errors)]);
+    table.row(&["timeouts".into(), format!("{}", metrics.timeouts)]);
     table.row(&["accuracy".into(), format!("{accuracy:.4}")]);
     table.row(&["throughput".into(), format!("{:.1} req/s", metrics.throughput_rps())]);
     table.row(&["p50".into(), fmt_secs(lat.p50_s)]);
@@ -1137,6 +1347,44 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             ]);
         }
         mt.print();
+    }
+    // name offending connections (an operator's first isolation question:
+    // "which connection is misbehaving?"); quiet when the run is clean
+    if conn_reports.iter().any(|r| r.errors + r.timeouts > 0) {
+        let mut ct = Table::new(&["conn", "requests", "errors", "timeouts"]);
+        for r in conn_reports.iter().filter(|r| r.errors + r.timeouts > 0) {
+            ct.row(&[
+                format!("{}", r.conn),
+                format!("{}", r.requests),
+                format!("{}", r.errors),
+                format!("{}", r.timeouts),
+            ]);
+        }
+        ct.print();
+    }
+
+    // optional connection-scaling sweep: how does the server hold up as
+    // concurrent connections grow? (infer-only, driven on the first model)
+    let mut scaling: Vec<Json> = Vec::new();
+    if let Some(list) = args.get("scale-connections") {
+        let rounds = args.usize_or("scale-requests", 2)?.max(1);
+        for tok in list.split(',').filter(|s| !s.trim().is_empty()) {
+            let n: usize = tok
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad --scale-connections entry '{tok}'"))?;
+            let threads = clients.min(n.max(1));
+            scaling.push(loadgen_scale_point(
+                &addr,
+                v2,
+                &works[0],
+                n.max(1),
+                rounds,
+                threads,
+                mode,
+                timeout,
+            )?);
+        }
     }
 
     // end-of-run server-side actions: optional snapshots + per-model stats
@@ -1212,12 +1460,13 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     );
 
     let doc = Json::obj(vec![
-        ("version", Json::Num(2.0)),
+        ("version", Json::Num(3.0)),
         (
             "config",
             Json::Str(works.iter().map(|w| w.label.clone()).collect::<Vec<_>>().join(",")),
         ),
         ("clients", Json::Num(clients as f64)),
+        ("connections", Json::Num(connections as f64)),
         ("requests_per_client", Json::Num(requests as f64)),
         ("learn_frac", Json::Num(learn_frac)),
         ("pipeline", Json::Num(pipeline as f64)),
@@ -1226,6 +1475,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         ("learns", Json::Num(metrics.learns as f64)),
         ("infers", Json::Num(infers as f64)),
         ("errors", Json::Num(metrics.errors as f64)),
+        ("timeouts", Json::Num(metrics.timeouts as f64)),
         ("accuracy", Json::Num(accuracy)),
         ("wall_s", Json::Num(wall_s)),
         ("throughput_rps", Json::Num(metrics.throughput_rps())),
@@ -1238,6 +1488,23 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 ("p99_s", Json::Num(lat.p99_s)),
             ]),
         ),
+        (
+            "per_connection",
+            Json::Arr(
+                conn_reports
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("conn", Json::Num(r.conn as f64)),
+                            ("requests", Json::Num(r.requests as f64)),
+                            ("errors", Json::Num(r.errors as f64)),
+                            ("timeouts", Json::Num(r.timeouts as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("scaling", Json::Arr(scaling)),
         ("models", Json::Obj(models_json)),
         (
             "server",

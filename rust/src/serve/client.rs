@@ -32,11 +32,12 @@
 //! ```
 
 use crate::hdc::SearchMode;
-use crate::serve::wire::{self, ReqBody, WireRequest, WireResponse, WireStats};
+use crate::serve::wire::{self, ReqBody, WireConnStats, WireRequest, WireResponse, WireStats};
 use crate::Result;
 use anyhow::{bail, Context};
 use std::io::BufReader;
 use std::net::TcpStream;
+use std::time::Duration;
 
 /// A server-reported request failure: the echoed request id plus the
 /// server-side detail string. Carried inside the `anyhow` error chain so
@@ -59,6 +60,25 @@ impl std::fmt::Display for ServerError {
 
 impl std::error::Error for ServerError {}
 
+/// A receive deadline expired with no reply frame (only produced after
+/// [`Client::set_timeout`]). Carried inside the `anyhow` chain so callers
+/// — loadgen's per-connection timeout accounting, most importantly — can
+/// `downcast_ref::<RecvTimeout>()` to tell a timeout apart from transport
+/// failure or a [`ServerError`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecvTimeout {
+    /// the configured deadline that expired
+    pub after: Duration,
+}
+
+impl std::fmt::Display for RecvTimeout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "no reply within {:?}", self.after)
+    }
+}
+
+impl std::error::Error for RecvTimeout {}
+
 /// One classification reply over the wire.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct InferReply {
@@ -79,6 +99,7 @@ pub struct Client {
     next_id: u64,
     version: u32,
     model: String,
+    timeout: Option<Duration>,
 }
 
 impl Client {
@@ -93,7 +114,18 @@ impl Client {
             next_id: 1,
             version: wire::WIRE_V1,
             model: String::new(),
+            timeout: None,
         })
+    }
+
+    /// Bound every subsequent [`Client::recv`] (and the high-level calls
+    /// built on it): when no reply frame arrives within `timeout`, recv
+    /// fails with a typed [`RecvTimeout`] instead of waiting forever.
+    /// `None` restores unbounded blocking reads.
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        self.timeout = timeout;
+        Ok(())
     }
 
     /// Connect and negotiate wire v2, failing if the server won't speak it.
@@ -193,7 +225,11 @@ impl Client {
     pub fn recv(&mut self) -> Result<WireResponse> {
         loop {
             match wire::read_frame(&mut self.reader, wire::MAX_FRAME)? {
-                wire::Frame::Idle => continue, // no read timeout set; defensive
+                wire::Frame::Idle => match self.timeout {
+                    // the configured deadline passed at a frame boundary
+                    Some(after) => return Err(RecvTimeout { after }.into()),
+                    None => continue, // no read timeout set; defensive
+                },
                 wire::Frame::Eof => bail!("server closed the connection"),
                 wire::Frame::Payload(p) => return WireResponse::decode(&p),
             }
@@ -273,6 +309,16 @@ impl Client {
         match self.call(ReqBody::Stats)? {
             WireResponse::Stats { stats, .. } => Ok(stats),
             other => bail!("unexpected reply to stats: {other:?}"),
+        }
+    }
+
+    /// This connection's own reactor-side counters (answered by the
+    /// server's event loop without crossing an executor — useful exactly
+    /// when the executors are saturated).
+    pub fn conn_stats(&mut self) -> Result<WireConnStats> {
+        match self.call(ReqBody::ConnStats)? {
+            WireResponse::ConnStats { stats, .. } => Ok(stats),
+            other => bail!("unexpected reply to conn-stats: {other:?}"),
         }
     }
 }

@@ -1,16 +1,18 @@
 //! Zero-dependency TCP serving layer: a multi-model [`Registry`] behind a
-//! pipelined wire protocol.
+//! pipelined wire protocol, served by a single event-driven reactor.
 //!
-//! A [`Server`] binds a std `TcpListener`, accepts connections on a
-//! dedicated accept thread, and runs one lightweight reader thread plus
-//! one reply-writer thread per connection. Every connection decodes
-//! length-prefixed [`wire`] frames, routes each to the named model's
-//! [`Coordinator`](crate::coordinator::Coordinator) in the shared
-//! [`Registry`], and forwards it with the *client's* request id and a
-//! per-connection reply channel
-//! ([`Coordinator::submit_with`](crate::coordinator::Coordinator::submit_with)).
-//! Replies flow back through the writer thread as each model's executor
-//! completes them — so one connection can keep up to
+//! A [`Server`] binds a std `TcpListener` and runs one reactor thread
+//! that owns every client socket: non-blocking accepts, incremental frame
+//! reassembly ([`wire::FrameAssembler`]), per-connection write buffers
+//! with partial-write continuation, and readiness-driven scheduling over a
+//! `poll(2)` shim — so connection count is bounded by file descriptors and
+//! buffer memory, not threads. Each decoded frame is routed to the named
+//! model's [`Coordinator`](crate::coordinator::Coordinator) in the shared
+//! [`Registry`] with the *client's* request id and a non-blocking reply
+//! sink
+//! ([`Coordinator::try_submit_sink`](crate::coordinator::Coordinator::try_submit_sink));
+//! completed replies land back in the owning connection's write buffer as
+//! each executor finishes them. One connection can keep up to
 //! [`wire::MAX_INFLIGHT`] frames in flight, replies are matched by id, and
 //! a fast model's replies overtake a slow model's. Each model keeps the
 //! coordinator's leader/worker shape: the backend never leaves its
@@ -22,33 +24,50 @@
 //!
 //! Error containment mirrors the wire contract: a request that frames
 //! correctly but decodes badly gets an error *reply* echoing its id and
-//! the connection lives on; only a torn frame header or an oversized
-//! length closes the connection (after a best-effort error reply). A
-//! stalled client trips the write timeout, after which its replies are
-//! drained and discarded — a dead connection can never block a model's
-//! executor. Server counters (`served`, `wire_errors`, `learns`) are
-//! process-wide atomics reported through the Stats opcode together with
-//! the target model's knowledge counters.
+//! the connection lives on; only a torn frame (EOF mid-frame) or an
+//! oversized length closes the connection (after a best-effort error
+//! reply). Hostile or broken peers are bounded in every dimension: a
+//! connection beyond [`ServeOptions::max_conns`] is shed at accept, a
+//! silent one is closed at [`ServeOptions::idle_timeout`], and one that
+//! stops reading its replies is shed once its write buffer stalls past
+//! [`ServeOptions::write_stall_timeout`] or grows past
+//! [`ServeOptions::max_wbuf`] — in every case without an executor ever
+//! blocking. Server counters (`served`, `wire_errors`, `learns`, `sheds`)
+//! are process-wide atomics reported through the Stats opcode together
+//! with the target model's knowledge counters; per-connection counters are
+//! reported by the reactor itself through the ConnStats opcode.
 
 pub mod client;
+mod reactor;
 pub mod registry;
 pub mod wire;
 
-pub use client::{Client, InferReply, ServerError};
+pub use client::{Client, InferReply, RecvTimeout, ServerError};
 pub use registry::{ModelSpec, Registry};
-pub use wire::{ReqBody, WireRequest, WireResponse, WireStats};
+pub use wire::{ReqBody, WireConnStats, WireRequest, WireResponse, WireStats};
 
-use crate::coordinator::{Payload, ReplyKind, Response};
-use crate::hdc::SearchMode;
+use crate::coordinator::{ReplyKind, Response};
 use crate::Result;
 use anyhow::Context;
-use std::io::{BufReader, BufWriter};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
+
+/// Default [`ServeOptions::idle_timeout`] in seconds: how long a
+/// connection may sit with no request bytes and nothing owed before the
+/// server closes it.
+pub const DEFAULT_IDLE_TIMEOUT_SECS: u64 = 60;
+/// Default [`ServeOptions::write_stall_timeout`] in seconds: how long
+/// queued reply bytes may sit unaccepted by the peer's socket before the
+/// connection is shed.
+pub const DEFAULT_WRITE_STALL_SECS: u64 = 10;
+/// Default [`ServeOptions::max_conns`]: simultaneous connections accepted
+/// before new peers are shed with an error frame.
+pub const DEFAULT_MAX_CONNS: usize = 10_240;
+/// Default [`ServeOptions::max_wbuf`] in bytes: per-connection queued
+/// reply cap before a non-reading peer is shed.
+pub const DEFAULT_MAX_WBUF: usize = 4 * 1024 * 1024;
 
 /// Serving knobs.
 #[derive(Clone, Debug)]
@@ -64,6 +83,19 @@ pub struct ServeOptions {
     /// `1..=`[`wire::MAX_INFLIGHT`] (further frames are simply not read
     /// until replies drain — TCP backpressure)
     pub max_inflight: usize,
+    /// close a connection that has sent no request bytes for this long
+    /// while nothing is owed to it (default
+    /// [`DEFAULT_IDLE_TIMEOUT_SECS`])
+    pub idle_timeout: Duration,
+    /// shed a connection whose queued replies have made no progress into
+    /// the socket for this long (default [`DEFAULT_WRITE_STALL_SECS`])
+    pub write_stall_timeout: Duration,
+    /// simultaneous-connection cap; peers beyond it are shed at accept
+    /// with a best-effort error frame (default [`DEFAULT_MAX_CONNS`])
+    pub max_conns: usize,
+    /// per-connection queued-reply-bytes cap; a peer that stops reading is
+    /// shed once its buffer exceeds this (default [`DEFAULT_MAX_WBUF`])
+    pub max_wbuf: usize,
 }
 
 impl Default for ServeOptions {
@@ -72,6 +104,10 @@ impl Default for ServeOptions {
             max_frame: wire::MAX_FRAME,
             allow_snapshot_paths: false,
             max_inflight: wire::MAX_INFLIGHT,
+            idle_timeout: Duration::from_secs(DEFAULT_IDLE_TIMEOUT_SECS),
+            write_stall_timeout: Duration::from_secs(DEFAULT_WRITE_STALL_SECS),
+            max_conns: DEFAULT_MAX_CONNS,
+            max_wbuf: DEFAULT_MAX_WBUF,
         }
     }
 }
@@ -85,16 +121,21 @@ pub struct ServerStats {
     pub wire_errors: AtomicU64,
     /// successful Learn replies across all models
     pub learns: AtomicU64,
+    /// connections shed: refused at the connection cap, stalled past the
+    /// write deadline, or over the write-buffer cap
+    pub sheds: AtomicU64,
 }
 
-/// A running TCP server. Dropping (or calling [`Server::stop`]) shuts the
-/// accept loop down, joins every connection thread, and finally drops the
-/// registry — each model's coordinator drains its queue and runs its
-/// executor's shutdown snapshot flush.
+/// A running TCP server. Dropping (or calling [`Server::stop`]) flips the
+/// stop flag, wakes the reactor, joins it, and — inside the reactor
+/// thread — drops the registry: each model's coordinator drains its queue
+/// and runs its executor's shutdown snapshot flush before the join
+/// returns.
 pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    accept: Option<std::thread::JoinHandle<()>>,
+    waker: reactor::Waker,
+    reactor: Option<std::thread::JoinHandle<()>>,
     stats: Arc<ServerStats>,
 }
 
@@ -103,20 +144,26 @@ impl Server {
     /// start serving the registry over it.
     pub fn start(listen: &str, registry: Registry, opts: ServeOptions) -> Result<Server> {
         let listener = TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
-        // non-blocking accept: shutdown must never depend on the wakeup
-        // poke reaching the socket (it can't on e.g. a firewalled bind)
+        // the reactor multiplexes accepts with connection I/O; everything
+        // it owns is non-blocking
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(ServerStats::default());
-        let registry = Arc::new(registry);
-        let accept = {
-            let (stop, stats) = (stop.clone(), stats.clone());
-            std::thread::Builder::new()
-                .name("clo-hdnn-accept".into())
-                .spawn(move || accept_loop(listener, registry, stats, stop, opts))?
-        };
-        Ok(Server { addr, stop, accept: Some(accept), stats })
+        let (waker, waker_rx) = reactor::waker();
+        let r = reactor::Reactor::new(
+            listener,
+            Arc::new(registry),
+            stats.clone(),
+            stop.clone(),
+            opts,
+            waker.clone(),
+            waker_rx,
+        );
+        let handle = std::thread::Builder::new()
+            .name("clo-hdnn-reactor".into())
+            .spawn(move || r.run())?;
+        Ok(Server { addr, stop, waker, reactor: Some(handle), stats })
     }
 
     /// The bound address (resolves port 0 to the actual ephemeral port).
@@ -133,17 +180,22 @@ impl Server {
         )
     }
 
-    /// Graceful shutdown: stop accepting, join connections, drop the
-    /// registry (each model flushes its shutdown snapshot if configured).
+    /// Connections shed so far (capacity refusals + stalled-writer sheds).
+    pub fn sheds(&self) -> u64 {
+        self.stats.sheds.load(Ordering::Relaxed)
+    }
+
+    /// Graceful shutdown: stop the reactor (closing every connection),
+    /// then drop the registry (each model flushes its shutdown snapshot if
+    /// configured). Snapshots are on disk when this returns.
     pub fn stop(mut self) {
         self.shutdown();
     }
 
     fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // the accept loop polls the stop flag (non-blocking accept), so
-        // this join is bounded even when no wakeup connection can land
-        if let Some(h) = self.accept.take() {
+        self.waker.wake();
+        if let Some(h) = self.reactor.take() {
             let _ = h.join();
         }
     }
@@ -155,78 +207,9 @@ impl Drop for Server {
     }
 }
 
-fn accept_loop(
-    listener: TcpListener,
-    registry: Arc<Registry>,
-    stats: Arc<ServerStats>,
-    stop: Arc<AtomicBool>,
-    opts: ServeOptions,
-) {
-    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    loop {
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-        let stream = match listener.accept() {
-            Ok((s, _)) => s,
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                // nothing pending: nap briefly, then re-check the stop flag
-                std::thread::sleep(Duration::from_millis(25));
-                continue;
-            }
-            Err(_) => {
-                // transient accept error (e.g. ECONNABORTED): don't spin
-                std::thread::sleep(Duration::from_millis(25));
-                continue;
-            }
-        };
-        // accepted sockets may inherit the listener's non-blocking mode on
-        // some platforms; connections use blocking reads with a timeout
-        if stream.set_nonblocking(false).is_err() {
-            continue;
-        }
-        let (registry, stats, stop, opts) =
-            (registry.clone(), stats.clone(), stop.clone(), opts.clone());
-        match std::thread::Builder::new()
-            .name("clo-hdnn-conn".into())
-            .spawn(move || {
-                let _ = handle_conn(stream, &registry, &stats, &stop, &opts);
-            }) {
-            Ok(h) => conns.push(h),
-            Err(_) => continue,
-        }
-        conns.retain(|h| !h.is_finished());
-    }
-    for h in conns {
-        let _ = h.join();
-    }
-    // `registry` (the last Arc once clients are gone) drops here: every
-    // model's executor drains, flushes its shutdown snapshot, and exits
-}
-
-/// Shared write half of a connection. The reply-writer thread and the
-/// reader (hello acks, pre-dispatch error replies) both write whole frames
-/// under the lock, so frames never interleave.
-type SharedWriter = Arc<Mutex<BufWriter<TcpStream>>>;
-
-/// Write one reply frame directly (reader-side control path). Any failure
-/// marks the connection dead — there is no way to retry a partial frame.
-fn write_direct(writer: &SharedWriter, resp: &WireResponse, dead: &AtomicBool) {
-    if dead.load(Ordering::Relaxed) {
-        return;
-    }
-    let ok = match writer.lock() {
-        Ok(mut w) => wire::write_frame(&mut *w, &resp.encode()).is_ok(),
-        Err(_) => false,
-    };
-    if !ok {
-        dead.store(true, Ordering::Relaxed);
-    }
-}
-
 /// Translate an executor reply onto the wire using its [`ReplyKind`] tag —
 /// the stateless mapping that lets replies complete out of order.
-fn translate(resp: &Response, stats: &ServerStats) -> WireResponse {
+pub(crate) fn translate(resp: &Response, stats: &ServerStats) -> WireResponse {
     let id = resp.id;
     if let Some(msg) = &resp.error {
         return WireResponse::Error { id, msg: msg.clone() };
@@ -255,190 +238,6 @@ fn translate(resp: &Response, stats: &ServerStats) -> WireResponse {
                     snapshots: k.snapshots,
                 },
             }
-        }
-    }
-}
-
-/// The reply-writer loop: drain executor replies off the connection's
-/// channel, translate, write. When the connection dies (stalled client,
-/// torn socket) it keeps draining and discarding so a model's executor can
-/// never block on a dead connection's reply channel. Exits when every
-/// sender (the reader plus all in-flight requests) is gone.
-fn reply_loop(
-    rx: mpsc::Receiver<Response>,
-    writer: SharedWriter,
-    inflight: Arc<AtomicUsize>,
-    dead: Arc<AtomicBool>,
-    stats: Arc<ServerStats>,
-) {
-    while let Ok(resp) = rx.recv() {
-        let frame = translate(&resp, &stats);
-        if matches!(frame, WireResponse::Learn { .. }) {
-            stats.learns.fetch_add(1, Ordering::Relaxed);
-        }
-        write_direct(&writer, &frame, &dead);
-        inflight.fetch_sub(1, Ordering::Relaxed);
-    }
-}
-
-/// One connection: a reader loop (this thread) decoding and dispatching
-/// frames, plus a reply-writer thread streaming executor replies back.
-fn handle_conn(
-    stream: TcpStream,
-    registry: &Arc<Registry>,
-    stats: &Arc<ServerStats>,
-    stop: &AtomicBool,
-    opts: &ServeOptions,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    // short read timeout so idle connections observe the stop flag; a
-    // write timeout so a client that stops reading can't pin the writer
-    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
-    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let writer: SharedWriter = Arc::new(Mutex::new(BufWriter::new(stream)));
-    let cap = opts.max_inflight.clamp(1, wire::MAX_INFLIGHT);
-    // sized to the in-flight cap: with the reader gating submissions on
-    // `inflight < cap`, an executor's reply send can never block
-    let (reply_tx, reply_rx) = mpsc::sync_channel::<Response>(cap);
-    let inflight = Arc::new(AtomicUsize::new(0));
-    let dead = Arc::new(AtomicBool::new(false));
-    let writer_thread = {
-        let (writer, inflight, dead, stats) =
-            (writer.clone(), inflight.clone(), dead.clone(), stats.clone());
-        std::thread::Builder::new()
-            .name("clo-hdnn-reply".into())
-            .spawn(move || reply_loop(reply_rx, writer, inflight, dead, stats))?
-    };
-    let result = conn_reader(
-        &mut reader, &writer, registry, stats, stop, opts, &reply_tx, &inflight, &dead, cap,
-    );
-    // close the reader's sender: once the in-flight requests complete, the
-    // writer drains their replies and exits
-    drop(reply_tx);
-    let _ = writer_thread.join();
-    result
-}
-
-/// The per-connection reader loop: frame → decode (at the negotiated
-/// version) → route to the target model → submit with the client's id.
-#[allow(clippy::too_many_arguments)]
-fn conn_reader(
-    reader: &mut BufReader<TcpStream>,
-    writer: &SharedWriter,
-    registry: &Registry,
-    stats: &ServerStats,
-    stop: &AtomicBool,
-    opts: &ServeOptions,
-    reply_tx: &mpsc::SyncSender<Response>,
-    inflight: &AtomicUsize,
-    dead: &AtomicBool,
-    cap: usize,
-) -> Result<()> {
-    let mut version = wire::WIRE_V1;
-    loop {
-        if stop.load(Ordering::Relaxed) || dead.load(Ordering::Relaxed) {
-            return Ok(());
-        }
-        let payload = match wire::read_frame(reader, opts.max_frame) {
-            Ok(wire::Frame::Payload(p)) => p,
-            Ok(wire::Frame::Eof) => return Ok(()),
-            Ok(wire::Frame::Idle) => continue,
-            Err(e) => {
-                // framing is broken (torn header/body or oversized length):
-                // best-effort error reply, then close — there is no way to
-                // resynchronize the stream
-                stats.wire_errors.fetch_add(1, Ordering::Relaxed);
-                let reply = WireResponse::Error { id: 0, msg: format!("{e:#}") };
-                write_direct(writer, &reply, dead);
-                return Err(e);
-            }
-        };
-        stats.served.fetch_add(1, Ordering::Relaxed);
-        let req = match WireRequest::decode(&payload, version) {
-            Err(e) => {
-                // framed but garbled: error reply echoing the request id,
-                // keep serving — the length prefix kept the stream in
-                // sync, and the other in-flight requests (and every other
-                // model) are untouched
-                stats.wire_errors.fetch_add(1, Ordering::Relaxed);
-                let reply = WireResponse::Error {
-                    id: wire::peek_id(&payload),
-                    msg: format!("{e:#}"),
-                };
-                write_direct(writer, &reply, dead);
-                continue;
-            }
-            Ok(req) => req,
-        };
-        // hello: negotiate the version and advertise the registry, without
-        // ever crossing an executor
-        if let ReqBody::Hello { version: proposed } = &req.body {
-            version = (*proposed).clamp(wire::WIRE_V1, wire::WIRE_V2);
-            let ack = WireResponse::Hello {
-                id: req.id,
-                version,
-                default_model: registry.default_name().to_string(),
-                models: registry.names().to_vec(),
-            };
-            write_direct(writer, &ack, dead);
-            continue;
-        }
-        // route to the target model
-        let coord = match registry.get(&req.model) {
-            Ok(c) => c,
-            Err(e) => {
-                let reply = WireResponse::Error { id: req.id, msg: format!("{e:#}") };
-                write_direct(writer, &reply, dead);
-                continue;
-            }
-        };
-        let id = req.id;
-        let payload = match req.body {
-            ReqBody::Infer { mode, features } => match mode {
-                wire::MODE_L1 => Payload::FeaturesWithMode(features, SearchMode::L1Int8),
-                wire::MODE_PACKED => {
-                    Payload::FeaturesWithMode(features, SearchMode::HammingPacked)
-                }
-                _ => Payload::Features(features),
-            },
-            ReqBody::Learn { class, features } => Payload::Learn(features, class as usize),
-            ReqBody::Snapshot { path } => {
-                if !path.is_empty() && !opts.allow_snapshot_paths {
-                    let reply = WireResponse::Error {
-                        id,
-                        msg: "client-supplied snapshot paths are disabled on this server; \
-                              send an empty path to checkpoint to the configured default"
-                            .into(),
-                    };
-                    write_direct(writer, &reply, dead);
-                    continue;
-                }
-                Payload::Snapshot(if path.is_empty() { None } else { Some(PathBuf::from(path)) })
-            }
-            ReqBody::Stats => Payload::Stats,
-            ReqBody::Hello { .. } => unreachable!("hello handled above"),
-        };
-        // pipelining backpressure: wait for an in-flight slot before
-        // submitting (keeps the reply channel from ever filling). A short
-        // sleep-poll, engaged only at cap saturation: up to ~200us of
-        // added dispatch latency per frame on a saturated connection —
-        // accepted over a Condvar handshake with the writer for now
-        // (replace if saturated-pipeline latency ever matters).
-        loop {
-            if inflight.load(Ordering::Relaxed) < cap {
-                break;
-            }
-            if stop.load(Ordering::Relaxed) || dead.load(Ordering::Relaxed) {
-                return Ok(());
-            }
-            std::thread::sleep(Duration::from_micros(200));
-        }
-        inflight.fetch_add(1, Ordering::Relaxed);
-        if coord.submit_with(id, payload, reply_tx.clone()).is_err() {
-            inflight.fetch_sub(1, Ordering::Relaxed);
-            let reply = WireResponse::Error { id, msg: "model executor is gone".into() };
-            write_direct(writer, &reply, dead);
         }
     }
 }

@@ -1,0 +1,839 @@
+//! The serving reactor: one event-loop thread owning every client socket.
+//!
+//! The thread-per-connection server (PR 4/5) capped connection scale at
+//! thread count and let one slow peer pin a thread. This module replaces
+//! it with a single non-blocking readiness loop — `poll(2)` through a
+//! minimal `extern "C"` shim on unix, a bounded-nap optimistic sweep
+//! elsewhere — so ten thousand connections cost ten thousand small
+//! buffers, not ten thousand stacks.
+//!
+//! Ownership split (see DESIGN.md): the **reactor owns sockets** — accept,
+//! incremental frame reassembly ([`FrameAssembler`]), decode, routing,
+//! write buffering, timeouts — while **executors own backends**, exactly
+//! as before. The seam is [`ReplySink`]: the reactor hands each request to
+//! a model's [`Coordinator`] with a non-blocking
+//! [`Coordinator::try_submit_sink`], and the executor completes it onto an
+//! unbounded channel tagged with the owning connection's token, poking a
+//! loopback [`Waker`] so the loop wakes promptly. An executor can
+//! therefore never block on — or be blocked by — any connection.
+//!
+//! Per-connection flow control: at most `max_inflight` (≤
+//! [`wire::MAX_INFLIGHT`]) requests may be parsed-but-unanswered. At the
+//! cap the reactor simply stops *reading* that socket — kernel-buffer
+//! backpressure, no bookkeeping, nothing dropped. Slow readers accumulate
+//! reply bytes in the connection's write buffer until either the
+//! write-stall timeout or the buffer cap sheds them; silent connections
+//! are closed at the idle timeout; connections beyond `max_conns` are
+//! refused at accept with a best-effort error frame.
+
+use crate::coordinator::{Coordinator, Payload, ReplySink, Response, TrySubmit};
+use crate::hdc::SearchMode;
+use crate::serve::registry::Registry;
+use crate::serve::wire::{self, FrameAssembler, ReqBody, WireConnStats, WireRequest, WireResponse};
+use crate::serve::{translate, ServeOptions, ServerStats};
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::io::AsRawFd;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// poll(2) shim
+
+/// What a poll entry wants to be woken for.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct Interest {
+    /// wake when the fd is readable (or the peer closed)
+    pub read: bool,
+    /// wake when the fd accepts writes again
+    pub write: bool,
+}
+
+/// What [`Poller::wait`] observed for one entry.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct Ready {
+    /// readable now (a read will not block; 0 bytes means EOF)
+    pub read: bool,
+    /// writable now
+    pub write: bool,
+    /// error/hangup condition (`POLLERR`/`POLLHUP`/`POLLNVAL`)
+    pub err: bool,
+}
+
+#[cfg(unix)]
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+#[cfg(unix)]
+const POLLIN: i16 = 0x001;
+#[cfg(unix)]
+const POLLOUT: i16 = 0x004;
+#[cfg(unix)]
+const POLLERR: i16 = 0x008;
+#[cfg(unix)]
+const POLLHUP: i16 = 0x010;
+#[cfg(unix)]
+const POLLNVAL: i16 = 0x020;
+
+/// `nfds_t`: `unsigned long` on Linux, `unsigned int` on the BSD family.
+#[cfg(all(unix, target_os = "linux"))]
+type Nfds = std::os::raw::c_ulong;
+#[cfg(all(unix, not(target_os = "linux")))]
+type Nfds = std::os::raw::c_uint;
+
+#[cfg(unix)]
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: Nfds, timeout: i32) -> i32;
+}
+
+/// Level-triggered readiness, `poll(2)`-backed on unix. The non-unix
+/// fallback naps briefly and reports every interested entry ready — the
+/// sockets are non-blocking, so a wrong guess costs one `WouldBlock`, not
+/// correctness.
+#[derive(Default)]
+pub(crate) struct Poller {
+    #[cfg(unix)]
+    fds: Vec<PollFd>,
+    ready: Vec<Ready>,
+}
+
+impl Poller {
+    /// Wait up to `timeout` for readiness on `entries` (an fd plus its
+    /// [`Interest`]; negative fds are skipped, matching `poll(2)`).
+    /// Returns one [`Ready`] per entry, in order.
+    pub fn wait(&mut self, entries: &[(i32, Interest)], timeout: Duration) -> &[Ready] {
+        self.ready.clear();
+        self.ready.resize(entries.len(), Ready::default());
+        #[cfg(unix)]
+        {
+            self.fds.clear();
+            for &(fd, want) in entries {
+                let mut events = 0i16;
+                if want.read {
+                    events |= POLLIN;
+                }
+                if want.write {
+                    events |= POLLOUT;
+                }
+                // entries with no interest are parked on fd -1 so they
+                // cannot report spurious hangups either
+                let fd = if events != 0 { fd } else { -1 };
+                self.fds.push(PollFd { fd, events, revents: 0 });
+            }
+            let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+            let rc = unsafe { poll(self.fds.as_mut_ptr(), self.fds.len() as Nfds, ms) };
+            if rc > 0 {
+                for (i, p) in self.fds.iter().enumerate() {
+                    let r = &mut self.ready[i];
+                    r.read = p.revents & POLLIN != 0;
+                    r.write = p.revents & POLLOUT != 0;
+                    r.err = p.revents & (POLLERR | POLLHUP | POLLNVAL) != 0;
+                }
+            }
+            // rc == 0: timeout; rc < 0: transient (EINTR) — either way the
+            // caller loops and recomputes, nothing is lost
+        }
+        #[cfg(not(unix))]
+        {
+            std::thread::sleep(timeout.min(Duration::from_millis(5)));
+            for (&(_, want), r) in entries.iter().zip(self.ready.iter_mut()) {
+                r.read = want.read;
+                r.write = want.write;
+            }
+        }
+        &self.ready
+    }
+}
+
+#[cfg(unix)]
+pub(crate) fn stream_fd(s: &TcpStream) -> i32 {
+    s.as_raw_fd()
+}
+#[cfg(unix)]
+fn listener_fd(l: &TcpListener) -> i32 {
+    l.as_raw_fd()
+}
+#[cfg(not(unix))]
+pub(crate) fn stream_fd(_s: &TcpStream) -> i32 {
+    0
+}
+#[cfg(not(unix))]
+fn listener_fd(_l: &TcpListener) -> i32 {
+    0
+}
+
+// ---------------------------------------------------------------------------
+// waker
+
+/// Wakes the reactor out of `poll` from another thread (an executor
+/// completing a request, or [`Server::stop`](crate::serve::Server::stop)).
+/// Implemented as the write end of a loopback socket pair the reactor
+/// polls; when the pair cannot be built the waker is a no-op and the
+/// reactor compensates with a short poll timeout.
+#[derive(Clone)]
+pub(crate) struct Waker {
+    tx: Option<Arc<TcpStream>>,
+}
+
+impl Waker {
+    /// Poke the reactor. Never blocks: the socket is non-blocking, and a
+    /// full buffer means a wakeup byte is already pending.
+    pub fn wake(&self) {
+        if let Some(s) = &self.tx {
+            let _ = (&**s).write(&[1u8]);
+        }
+    }
+}
+
+/// Build the waker and the read end the reactor polls. `(noop, None)` when
+/// the loopback pair cannot be built (e.g. no loopback interface).
+pub(crate) fn waker() -> (Waker, Option<TcpStream>) {
+    fn pair() -> Option<(TcpStream, TcpStream)> {
+        let l = TcpListener::bind("127.0.0.1:0").ok()?;
+        let addr = l.local_addr().ok()?;
+        let tx = TcpStream::connect(addr).ok()?;
+        let (rx, _) = l.accept().ok()?;
+        tx.set_nonblocking(true).ok()?;
+        rx.set_nonblocking(true).ok()?;
+        tx.set_nodelay(true).ok();
+        Some((tx, rx))
+    }
+    match pair() {
+        Some((tx, rx)) => (Waker { tx: Some(Arc::new(tx)) }, Some(rx)),
+        None => (Waker { tx: None }, None),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the reply seam
+
+/// The per-connection [`ReplySink`]: tags each completed [`Response`] with
+/// the owning connection's token, pushes it onto the reactor's unbounded
+/// completion channel, and wakes the loop. `complete` never blocks, which
+/// is the whole point — see the module docs.
+struct ConnSink {
+    token: u64,
+    /// `mpsc::Sender` is only `Sync` on newer toolchains; the mutex makes
+    /// the sink unconditionally shareable at the cost of one uncontended
+    /// lock per completion
+    tx: Mutex<mpsc::Sender<(u64, Response)>>,
+    waker: Waker,
+}
+
+impl ReplySink for ConnSink {
+    fn complete(&self, resp: Response) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send((self.token, resp));
+        }
+        self.waker.wake();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-connection state
+
+/// One connection's reactor-side state: the socket, the reassembly buffer,
+/// the write buffer with partial-write continuation, and the dispatch
+/// window accounting.
+struct Conn {
+    stream: TcpStream,
+    asm: FrameAssembler,
+    /// negotiated wire version (v1 until a hello frame says otherwise)
+    version: u32,
+    /// queued reply bytes; `wpos..` is not yet accepted by the socket
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// requests currently inside an executor
+    inflight: usize,
+    /// decoded requests waiting for an executor queue slot
+    pending: VecDeque<(u64, Arc<Coordinator>, Payload)>,
+    sink: Arc<ConnSink>,
+    opened: Instant,
+    last_read: Instant,
+    /// last instant the write buffer was empty or draining (the stall
+    /// clock measures from here)
+    last_write_ok: Instant,
+    read_eof: bool,
+    /// tearing down: stop reading, flush what's queued, then close
+    closing: bool,
+    frames: u64,
+    replies: u64,
+    errors: u64,
+    peak_window: u32,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, sink: Arc<ConnSink>, max_frame: usize, now: Instant) -> Conn {
+        Conn {
+            stream,
+            asm: FrameAssembler::new(max_frame),
+            version: wire::WIRE_V1,
+            wbuf: Vec::new(),
+            wpos: 0,
+            inflight: 0,
+            pending: VecDeque::new(),
+            sink,
+            opened: now,
+            last_read: now,
+            last_write_ok: now,
+            read_eof: false,
+            closing: false,
+            frames: 0,
+            replies: 0,
+            errors: 0,
+            peak_window: 0,
+        }
+    }
+
+    /// Unanswered requests (in an executor or waiting for one) — what the
+    /// ≤ `max_inflight` pipeline window bounds.
+    fn window(&self) -> usize {
+        self.inflight + self.pending.len()
+    }
+
+    /// Reply bytes queued but not yet accepted by the socket.
+    fn queued(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// Append one reply frame to the write buffer (flushed by the loop).
+    fn queue_resp(&mut self, resp: &WireResponse) {
+        if matches!(resp, WireResponse::Error { .. }) {
+            self.errors += 1;
+        }
+        self.replies += 1;
+        let payload = resp.encode();
+        self.wbuf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        self.wbuf.extend_from_slice(&payload);
+    }
+
+    /// The counters an [`ReqBody::ConnStats`] request reports.
+    fn wire_stats(&self, token: u64, now: Instant) -> WireConnStats {
+        WireConnStats {
+            conn_id: token,
+            age_ms: now.saturating_duration_since(self.opened).as_millis() as u64,
+            frames: self.frames,
+            replies: self.replies,
+            errors: self.errors,
+            inflight: self.inflight as u32,
+            pending: self.pending.len() as u32,
+            peak_window: self.peak_window,
+            queued_write_bytes: self.queued() as u64,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the reactor
+
+/// The event loop: owns the listener, every connection, and the completion
+/// channel executors answer on. Built by
+/// [`Server::start`](crate::serve::Server::start), runs on one dedicated
+/// thread until the stop flag flips, then drops every connection and
+/// finally the registry (each model's executor drains and flushes its
+/// shutdown snapshot before `run` returns).
+pub(crate) struct Reactor {
+    listener: TcpListener,
+    registry: Arc<Registry>,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+    opts: ServeOptions,
+    waker: Waker,
+    waker_rx: Option<TcpStream>,
+    done_tx: mpsc::Sender<(u64, Response)>,
+    done_rx: mpsc::Receiver<(u64, Response)>,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+}
+
+impl Reactor {
+    pub fn new(
+        listener: TcpListener,
+        registry: Arc<Registry>,
+        stats: Arc<ServerStats>,
+        stop: Arc<AtomicBool>,
+        opts: ServeOptions,
+        waker: Waker,
+        waker_rx: Option<TcpStream>,
+    ) -> Reactor {
+        let (done_tx, done_rx) = mpsc::channel();
+        Reactor {
+            listener,
+            registry,
+            stats,
+            stop,
+            opts,
+            waker,
+            waker_rx,
+            done_tx,
+            done_rx,
+            conns: HashMap::new(),
+            next_token: 1,
+        }
+    }
+
+    pub fn run(mut self) {
+        let registry = self.registry.clone();
+        let stats = self.stats.clone();
+        let opts = self.opts.clone();
+        let cap = opts.max_inflight.clamp(1, wire::MAX_INFLIGHT);
+        let mut poller = Poller::default();
+        let mut entries: Vec<(i32, Interest)> = Vec::new();
+        let mut order: Vec<u64> = Vec::new();
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let now = Instant::now();
+            entries.clear();
+            order.clear();
+            entries.push((listener_fd(&self.listener), Interest { read: true, write: false }));
+            let wfd = self.waker_rx.as_ref().map(stream_fd).unwrap_or(-1);
+            entries.push((wfd, Interest { read: true, write: false }));
+            // poll timeout: the nearest connection deadline, capped so the
+            // stop flag is observed promptly (tightly when no waker exists)
+            let mut timeout = if self.waker_rx.is_some() {
+                Duration::from_millis(250)
+            } else {
+                Duration::from_millis(5)
+            };
+            for (&token, c) in &self.conns {
+                let read = !c.read_eof && !c.closing && c.window() < cap;
+                let write = c.queued() > 0;
+                entries.push((stream_fd(&c.stream), Interest { read, write }));
+                order.push(token);
+                if c.queued() > 0 {
+                    if let Some(dl) = c.last_write_ok.checked_add(opts.write_stall_timeout) {
+                        timeout = timeout.min(dl.saturating_duration_since(now));
+                    }
+                }
+                if c.window() == 0 && c.queued() == 0 && !c.read_eof && !c.closing {
+                    if let Some(dl) = c.last_read.checked_add(opts.idle_timeout) {
+                        timeout = timeout.min(dl.saturating_duration_since(now));
+                    }
+                }
+            }
+            let ready: Vec<Ready> = poller.wait(&entries, timeout).to_vec();
+            let now = Instant::now();
+            if ready[1].read {
+                self.drain_waker();
+            }
+            // executor completions → owning connection's write buffer
+            while let Ok((token, resp)) = self.done_rx.try_recv() {
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    let frame = translate(&resp, &stats);
+                    if matches!(frame, WireResponse::Learn { .. }) {
+                        stats.learns.fetch_add(1, Ordering::Relaxed);
+                    }
+                    conn.inflight = conn.inflight.saturating_sub(1);
+                    conn.queue_resp(&frame);
+                }
+                // completions for a token that died are simply dropped
+            }
+            let mut dead: Vec<u64> = Vec::new();
+            for (i, &token) in order.iter().enumerate() {
+                let conn = self.conns.get_mut(&token).expect("token tracked");
+                if !process_conn(conn, token, ready[i + 2], now, &registry, &stats, &opts, cap) {
+                    dead.push(token);
+                }
+            }
+            for t in dead {
+                self.conns.remove(&t);
+            }
+            if ready[0].read {
+                self.accept_ready(now);
+            }
+        }
+        // teardown: connections drop here (their sinks die with them; late
+        // executor completions land on a closed channel and are ignored),
+        // then the registry Arc drops — every executor drains its queue
+        // and flushes its shutdown snapshot before run() returns, so
+        // Server::stop's join really means "snapshots are on disk"
+    }
+
+    fn drain_waker(&mut self) {
+        if let Some(rx) = self.waker_rx.as_mut() {
+            let mut b = [0u8; 256];
+            loop {
+                match rx.read(&mut b) {
+                    Ok(0) => break,
+                    Ok(_) => continue,
+                    Err(e) if would_block(&e) => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => break,
+                }
+            }
+        }
+    }
+
+    /// Accept everything pending. Beyond `max_conns` a peer gets a
+    /// best-effort error frame and an immediate close (graceful shed).
+    fn accept_ready(&mut self, now: Instant) {
+        loop {
+            let stream = match self.listener.accept() {
+                Ok((s, _)) => s,
+                Err(e) if would_block(&e) => break,
+                // transient (e.g. ECONNABORTED): retry on the next sweep
+                Err(_) => break,
+            };
+            if self.conns.len() >= self.opts.max_conns {
+                self.stats.sheds.fetch_add(1, Ordering::Relaxed);
+                let _ = stream.set_nonblocking(true);
+                let resp = WireResponse::Error {
+                    id: 0,
+                    msg: format!(
+                        "server at connection capacity ({}); retry later",
+                        self.opts.max_conns
+                    ),
+                };
+                let payload = resp.encode();
+                let mut buf = Vec::with_capacity(4 + payload.len());
+                buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                buf.extend_from_slice(&payload);
+                let _ = (&stream).write(&buf);
+                continue; // dropped → closed
+            }
+            if stream.set_nonblocking(true).is_err() {
+                continue;
+            }
+            stream.set_nodelay(true).ok();
+            let token = self.next_token;
+            self.next_token += 1;
+            let sink = Arc::new(ConnSink {
+                token,
+                tx: Mutex::new(self.done_tx.clone()),
+                waker: self.waker.clone(),
+            });
+            self.conns.insert(token, Conn::new(stream, sink, self.opts.max_frame, now));
+        }
+    }
+}
+
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// One connection's turn: read what the socket has, reassemble and handle
+/// complete frames, dispatch toward executors, flush the write buffer, and
+/// enforce the shed/idle deadlines. Returns `false` when the connection is
+/// finished (cleanly or not) and must be removed.
+#[allow(clippy::too_many_arguments)]
+fn process_conn(
+    conn: &mut Conn,
+    token: u64,
+    ready: Ready,
+    now: Instant,
+    registry: &Registry,
+    stats: &ServerStats,
+    opts: &ServeOptions,
+    cap: usize,
+) -> bool {
+    // hangup with nothing readable: the peer is gone and nothing more can
+    // be learned from the socket (readable hangups drain the data first)
+    if ready.err && !ready.read {
+        return false;
+    }
+    if ready.read && !conn.read_eof && !conn.closing {
+        // bounded per-sweep read so one firehose connection cannot starve
+        // the rest of the loop; level-triggered polling picks the rest up
+        // on the next sweep
+        let mut scratch = [0u8; 16 * 1024];
+        let mut budget = 256 * 1024usize;
+        loop {
+            if budget == 0 {
+                break;
+            }
+            let want = scratch.len().min(budget);
+            match conn.stream.read(&mut scratch[..want]) {
+                Ok(0) => {
+                    conn.read_eof = true;
+                    if conn.asm.mid_frame() {
+                        // EOF inside a frame: unrecoverable framing error
+                        stats.wire_errors.fetch_add(1, Ordering::Relaxed);
+                        conn.queue_resp(&WireResponse::Error {
+                            id: 0,
+                            msg: "connection closed mid-frame".into(),
+                        });
+                        conn.closing = true;
+                    }
+                    break;
+                }
+                Ok(n) => {
+                    conn.asm.extend(&scratch[..n]);
+                    conn.last_read = now;
+                    budget -= n;
+                }
+                Err(e) if would_block(&e) => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+    }
+    // reassemble + handle, stopping at the pipeline window (unparsed bytes
+    // wait in the assembler; unread bytes wait in the kernel — that IS the
+    // backpressure)
+    while !conn.closing && conn.window() < cap {
+        match conn.asm.next_payload() {
+            Ok(Some(payload)) => handle_frame(conn, token, &payload, registry, stats, opts, now),
+            Ok(None) => break,
+            Err(e) => {
+                // oversized length: no resynchronization is possible
+                stats.wire_errors.fetch_add(1, Ordering::Relaxed);
+                conn.queue_resp(&WireResponse::Error { id: 0, msg: format!("{e:#}") });
+                conn.closing = true;
+            }
+        }
+    }
+    dispatch(conn);
+    if !flush(conn, now) {
+        return false;
+    }
+    let queued = conn.queued();
+    if queued > opts.max_wbuf {
+        // the peer is not reading and the buffer cap is blown; an error
+        // frame could not be delivered either — close outright
+        stats.sheds.fetch_add(1, Ordering::Relaxed);
+        return false;
+    }
+    if queued > 0 && now.saturating_duration_since(conn.last_write_ok) > opts.write_stall_timeout {
+        stats.sheds.fetch_add(1, Ordering::Relaxed);
+        return false;
+    }
+    if conn.window() == 0 && queued == 0 {
+        if conn.read_eof || conn.closing {
+            // everything owed has been delivered
+            return false;
+        }
+        if now.saturating_duration_since(conn.last_read) > opts.idle_timeout {
+            // best-effort goodbye; close regardless of writability
+            conn.queue_resp(&WireResponse::Error {
+                id: 0,
+                msg: format!("idle timeout ({:?} without a request)", opts.idle_timeout),
+            });
+            let _ = flush(conn, now);
+            return false;
+        }
+    }
+    true
+}
+
+/// Handle one reassembled request payload: decode at the negotiated
+/// version, answer hello/conn-stats in the reactor, route everything else
+/// to the target model's pending queue.
+#[allow(clippy::too_many_arguments)]
+fn handle_frame(
+    conn: &mut Conn,
+    token: u64,
+    payload: &[u8],
+    registry: &Registry,
+    stats: &ServerStats,
+    opts: &ServeOptions,
+    now: Instant,
+) {
+    stats.served.fetch_add(1, Ordering::Relaxed);
+    conn.frames += 1;
+    let req = match WireRequest::decode(payload, conn.version) {
+        Err(e) => {
+            // framed but garbled: error reply echoing the id, connection
+            // lives — framing kept the stream in sync
+            stats.wire_errors.fetch_add(1, Ordering::Relaxed);
+            conn.queue_resp(&WireResponse::Error {
+                id: wire::peek_id(payload),
+                msg: format!("{e:#}"),
+            });
+            return;
+        }
+        Ok(req) => req,
+    };
+    match &req.body {
+        // hello: negotiate and advertise, without crossing an executor
+        ReqBody::Hello { version: proposed } => {
+            conn.version = (*proposed).clamp(wire::WIRE_V1, wire::WIRE_V2);
+            let ack = WireResponse::Hello {
+                id: req.id,
+                version: conn.version,
+                default_model: registry.default_name().to_string(),
+                models: registry.names().to_vec(),
+            };
+            conn.queue_resp(&ack);
+            return;
+        }
+        // per-connection stats: reactor-answered, so it works even when
+        // every executor queue is saturated
+        ReqBody::ConnStats => {
+            let stats_now = conn.wire_stats(token, now);
+            conn.queue_resp(&WireResponse::ConnStats { id: req.id, stats: stats_now });
+            return;
+        }
+        _ => {}
+    }
+    let coord = match registry.get(&req.model) {
+        Ok(c) => c.clone(),
+        Err(e) => {
+            conn.queue_resp(&WireResponse::Error { id: req.id, msg: format!("{e:#}") });
+            return;
+        }
+    };
+    let id = req.id;
+    let exec_payload = match req.body {
+        ReqBody::Infer { mode, features } => match mode {
+            wire::MODE_L1 => Payload::FeaturesWithMode(features, SearchMode::L1Int8),
+            wire::MODE_PACKED => Payload::FeaturesWithMode(features, SearchMode::HammingPacked),
+            _ => Payload::Features(features),
+        },
+        ReqBody::Learn { class, features } => Payload::Learn(features, class as usize),
+        ReqBody::Snapshot { path } => {
+            if !path.is_empty() && !opts.allow_snapshot_paths {
+                conn.queue_resp(&WireResponse::Error {
+                    id,
+                    msg: "client-supplied snapshot paths are disabled on this server; \
+                          send an empty path to checkpoint to the configured default"
+                        .into(),
+                });
+                return;
+            }
+            Payload::Snapshot(if path.is_empty() { None } else { Some(PathBuf::from(path)) })
+        }
+        ReqBody::Stats => Payload::Stats,
+        ReqBody::ConnStats | ReqBody::Hello { .. } => unreachable!("handled above"),
+    };
+    conn.pending.push_back((id, coord, exec_payload));
+    conn.peak_window = conn.peak_window.max(conn.window() as u32);
+}
+
+/// Move pending requests into executors until a queue reports full (the
+/// retry happens on the next sweep — a completion always wakes one).
+fn dispatch(conn: &mut Conn) {
+    while let Some((id, coord, payload)) = conn.pending.pop_front() {
+        match coord.try_submit_sink(id, payload, conn.sink.clone()) {
+            Ok(()) => conn.inflight += 1,
+            Err(TrySubmit::Full(payload)) => {
+                conn.pending.push_front((id, coord, payload));
+                break;
+            }
+            Err(TrySubmit::Gone(_)) => {
+                conn.queue_resp(&WireResponse::Error { id, msg: "model executor is gone".into() });
+            }
+        }
+    }
+}
+
+/// Push buffered reply bytes until the socket pushes back. Partial writes
+/// continue exactly where they stopped (`wpos`); consumed prefixes are
+/// compacted lazily. Returns `false` on a dead socket.
+fn flush(conn: &mut Conn, now: Instant) -> bool {
+    while conn.wpos < conn.wbuf.len() {
+        match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => return false,
+            Ok(n) => {
+                conn.wpos += n;
+                conn.last_write_ok = now;
+            }
+            Err(e) if would_block(&e) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    if conn.wpos == conn.wbuf.len() {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+        conn.last_write_ok = now;
+    } else if conn.wpos > 64 * 1024 {
+        conn.wbuf.drain(..conn.wpos);
+        conn.wpos = 0;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg(unix)]
+    fn poller_reports_read_and_write_readiness() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (b, _) = l.accept().unwrap();
+        a.set_nonblocking(true).unwrap();
+        let mut p = Poller::default();
+        // a fresh socket: writable (empty send buffer), not readable
+        let e = [(stream_fd(&a), Interest { read: true, write: true })];
+        let r = p.wait(&e, Duration::from_millis(200)).to_vec();
+        assert!(r[0].write, "{r:?}");
+        assert!(!r[0].read, "{r:?}");
+        // after the peer writes, readable
+        (&b).write_all(b"x").unwrap();
+        let e = [(stream_fd(&a), Interest { read: true, write: false })];
+        let mut saw_read = false;
+        for _ in 0..50 {
+            if p.wait(&e, Duration::from_millis(100))[0].read {
+                saw_read = true;
+                break;
+            }
+        }
+        assert!(saw_read);
+        // after the peer closes, err-or-read (data then hangup)
+        drop(b);
+        let mut saw_close = false;
+        for _ in 0..50 {
+            let r = p.wait(&e, Duration::from_millis(100)).to_vec();
+            if r[0].read || r[0].err {
+                saw_close = true;
+                break;
+            }
+        }
+        assert!(saw_close);
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn negative_fds_are_ignored() {
+        let mut p = Poller::default();
+        let e = [(-1, Interest { read: true, write: false })];
+        let r = p.wait(&e, Duration::from_millis(1)).to_vec();
+        assert!(!r[0].read && !r[0].write && !r[0].err);
+    }
+
+    #[test]
+    fn waker_wakes_the_poller() {
+        let (w, rx) = waker();
+        let mut rx = match rx {
+            Some(rx) => rx,
+            None => return, // no loopback: the no-op waker is the contract
+        };
+        let mut p = Poller::default();
+        w.wake();
+        let e = [(stream_fd(&rx), Interest { read: true, write: false })];
+        let mut woke = false;
+        for _ in 0..50 {
+            if p.wait(&e, Duration::from_millis(100))[0].read {
+                woke = true;
+                break;
+            }
+        }
+        assert!(woke);
+        // drain works and the channel goes quiet again
+        let mut b = [0u8; 8];
+        assert!(rx.read(&mut b).unwrap() >= 1);
+        // clones wake too
+        w.clone().wake();
+        let mut woke = false;
+        for _ in 0..50 {
+            if p.wait(&e, Duration::from_millis(100))[0].read {
+                woke = true;
+                break;
+            }
+        }
+        assert!(woke);
+    }
+}

@@ -6,8 +6,11 @@
 //! software shape of that — independently schedulable engines, FSL-HDnn
 //! style. Each model owns its own executor thread (the backend never
 //! leaves it), its own knowledge checkpoint cadence, and its own stats;
-//! the serving layer routes wire-v2 frames to entries by name, so one slow
-//! model never blocks another's replies on a pipelined connection.
+//! the serving reactor routes wire-v2 frames to entries by name, so one
+//! slow model never blocks another's replies on a pipelined connection.
+//! The ownership split is strict: the reactor owns every socket, each
+//! registry entry's executor owns its backend, and the two meet only at
+//! the coordinator's non-blocking submit/reply seam.
 //!
 //! Dropping the registry drops every coordinator, which drains each
 //! executor queue and runs the per-model shutdown snapshot flush.

@@ -27,11 +27,12 @@
 //! ## Request payloads (after the version-dependent header)
 //!
 //! ```text
-//! OP_INFER     mode u8 (0 default | 1 l1 | 2 packed), n u32, n × f32
-//! OP_LEARN     class u32, n u32, n × f32
-//! OP_SNAPSHOT  path_len u16, path utf-8 (empty = server default)
-//! OP_STATS     (empty)
-//! OP_HELLO     version u32 (the highest version the client speaks)
+//! OP_INFER      mode u8 (0 default | 1 l1 | 2 packed), n u32, n × f32
+//! OP_LEARN      class u32, n u32, n × f32
+//! OP_SNAPSHOT   path_len u16, path utf-8 (empty = server default)
+//! OP_STATS      (empty)
+//! OP_HELLO      version u32 (the highest version the client speaks)
+//! OP_CONN_STATS (empty — answered by the reactor, never an executor)
 //! ```
 //!
 //! ## Response payloads
@@ -45,6 +46,9 @@
 //!                trained_classes u32, snapshots u64
 //!   OP_HELLO     version u32, default_model str16,
 //!                count u16, count × model str16
+//!   OP_CONN_STATS conn_id u64, age_ms u64, frames u64, replies u64,
+//!                errors u64, inflight u32, pending u32, peak_window u32,
+//!                queued_write_bytes u64
 //!   KIND_ERROR   msg_len u16, msg utf-8
 //! ```
 //!
@@ -87,6 +91,11 @@ pub const OP_STATS: u8 = 4;
 /// Version-negotiation request/reply opcode (always v1-shaped on the
 /// request side).
 pub const OP_HELLO: u8 = 5;
+/// Per-connection counter-snapshot request/reply opcode. Scoped to the
+/// connection that sends it (the model field, if present, is ignored) and
+/// answered by the serving reactor directly — it never crosses an
+/// executor, so it stays answerable even when the executors are saturated.
+pub const OP_CONN_STATS: u8 = 6;
 /// Response-only kind tag for error replies.
 pub const KIND_ERROR: u8 = 0xEE;
 
@@ -193,6 +202,86 @@ pub fn peek_id(payload: &[u8]) -> u64 {
     }
 }
 
+/// Incremental frame reassembly for a non-blocking connection: bytes
+/// arrive in arbitrary chunks (a read may split a frame anywhere, even
+/// mid-length-prefix), [`FrameAssembler::extend`] buffers them, and
+/// [`FrameAssembler::next_payload`] yields each complete payload exactly
+/// as [`read_frame`] would have on a blocking stream.
+///
+/// The only hard failure is an oversized length prefix — it is rejected
+/// as soon as the four header bytes are present, before any payload
+/// allocation, and the assembler is then poisoned (the stream can no
+/// longer be trusted to be at a frame boundary).
+#[derive(Debug)]
+pub struct FrameAssembler {
+    buf: Vec<u8>,
+    /// bytes of `buf` already consumed by completed frames (compacted
+    /// lazily so each arriving chunk is not memmoved)
+    pos: usize,
+    max: usize,
+    poisoned: bool,
+}
+
+impl FrameAssembler {
+    /// An empty assembler enforcing the given payload cap (normally
+    /// [`MAX_FRAME`]).
+    pub fn new(max: usize) -> FrameAssembler {
+        FrameAssembler { buf: Vec::new(), pos: 0, max, poisoned: false }
+    }
+
+    /// Buffer one arriving chunk (any size, including empty).
+    pub fn extend(&mut self, chunk: &[u8]) {
+        self.buf.extend_from_slice(chunk);
+    }
+
+    /// Bytes buffered but not yet consumed by a completed frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Whether the buffered bytes start a frame that has not completed —
+    /// i.e. the peer went away mid-frame if EOF arrives now.
+    pub fn mid_frame(&self) -> bool {
+        self.buffered() > 0
+    }
+
+    /// Pop the next complete payload: `Ok(None)` when more bytes are
+    /// needed (an incomplete header or body), `Err` when the length
+    /// prefix exceeds the cap (connection-fatal, see type docs).
+    pub fn next_payload(&mut self) -> Result<Option<Vec<u8>>> {
+        if self.poisoned {
+            bail!("frame stream poisoned by an earlier oversized length");
+        }
+        if self.buffered() < 4 {
+            self.compact();
+            return Ok(None);
+        }
+        let hdr: [u8; 4] = self.buf[self.pos..self.pos + 4].try_into().unwrap();
+        let len = u32::from_le_bytes(hdr) as usize;
+        if len > self.max {
+            self.poisoned = true;
+            bail!("frame length {len} exceeds the {}-byte cap", self.max);
+        }
+        if self.buffered() < 4 + len {
+            self.compact();
+            return Ok(None);
+        }
+        let payload = self.buf[self.pos + 4..self.pos + 4 + len].to_vec();
+        self.pos += 4 + len;
+        self.compact();
+        Ok(Some(payload))
+    }
+
+    /// Drop consumed bytes once they dominate the buffer (keeps the
+    /// amortized cost of `extend` linear without memmoving every frame).
+    fn compact(&mut self) {
+        if self.pos >= 4096 && self.pos * 2 >= self.buf.len() {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+}
+
 fn put_str16(out: &mut Vec<u8>, s: &str) {
     let b = s.as_bytes();
     let n = b.len().min(u16::MAX as usize);
@@ -227,6 +316,10 @@ pub enum ReqBody {
     },
     /// report serving + knowledge counters for the target model
     Stats,
+    /// report the sending connection's own reactor-side counters (the
+    /// model field is carried-but-ignored on v2; the reply never touches
+    /// an executor)
+    ConnStats,
     /// negotiate the wire version (always encoded in the v1 shape)
     Hello {
         /// highest protocol version the client speaks
@@ -265,6 +358,7 @@ impl WireRequest {
             ReqBody::Learn { .. } => OP_LEARN,
             ReqBody::Snapshot { .. } => OP_SNAPSHOT,
             ReqBody::Stats => OP_STATS,
+            ReqBody::ConnStats => OP_CONN_STATS,
             ReqBody::Hello { .. } => OP_HELLO,
         }
     }
@@ -305,7 +399,7 @@ impl WireRequest {
                 }
             }
             ReqBody::Snapshot { path } => put_str16(&mut out, path),
-            ReqBody::Stats => {}
+            ReqBody::Stats | ReqBody::ConnStats => {}
             ReqBody::Hello { version } => out.extend_from_slice(&version.to_le_bytes()),
         }
         Ok(out)
@@ -342,6 +436,7 @@ impl WireRequest {
             }
             OP_SNAPSHOT => ReqBody::Snapshot { path: c.str16()? },
             OP_STATS => ReqBody::Stats,
+            OP_CONN_STATS => ReqBody::ConnStats,
             OP_HELLO => ReqBody::Hello { version: c.u32()? },
             other => bail!("unknown opcode {other:#04x}"),
         };
@@ -365,6 +460,33 @@ pub struct WireStats {
     pub trained_classes: u32,
     /// snapshots the target model wrote this process
     pub snapshots: u64,
+}
+
+/// Reactor-side counters for one connection, as carried by an
+/// [`OP_CONN_STATS`] reply. Everything here is scoped to the connection
+/// that asked — a misbehaving client can be diagnosed without trusting its
+/// own accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireConnStats {
+    /// the reactor's token for this connection (monotonic per server)
+    pub conn_id: u64,
+    /// milliseconds since the connection was accepted
+    pub age_ms: u64,
+    /// request frames decoded on this connection (this one included)
+    pub frames: u64,
+    /// reply frames queued to this connection (this one excluded)
+    pub replies: u64,
+    /// error replies among those (decode failures, refusals, sheds)
+    pub errors: u64,
+    /// requests currently inside an executor
+    pub inflight: u32,
+    /// requests parsed but not yet dispatched (executor queue was full)
+    pub pending: u32,
+    /// high-water mark of inflight + pending (the pipeline window actually
+    /// used; never exceeds [`MAX_INFLIGHT`])
+    pub peak_window: u32,
+    /// reply bytes buffered but not yet accepted by the peer's socket
+    pub queued_write_bytes: u64,
 }
 
 /// A decoded server reply (one shape in both wire versions; replies are
@@ -404,6 +526,13 @@ pub enum WireResponse {
         /// the counters
         stats: WireStats,
     },
+    /// per-connection counter snapshot (reactor-answered)
+    ConnStats {
+        /// echoed request id
+        id: u64,
+        /// the sending connection's counters
+        stats: WireConnStats,
+    },
     /// version-negotiation acknowledgement
     Hello {
         /// echoed request id
@@ -433,6 +562,7 @@ impl WireResponse {
             | WireResponse::Learn { id, .. }
             | WireResponse::Snapshot { id, .. }
             | WireResponse::Stats { id, .. }
+            | WireResponse::ConnStats { id, .. }
             | WireResponse::Hello { id, .. }
             | WireResponse::Error { id, .. } => *id,
         }
@@ -467,6 +597,19 @@ impl WireResponse {
                 out.extend_from_slice(&stats.learns.to_le_bytes());
                 out.extend_from_slice(&stats.trained_classes.to_le_bytes());
                 out.extend_from_slice(&stats.snapshots.to_le_bytes());
+            }
+            WireResponse::ConnStats { id, stats } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(OP_CONN_STATS);
+                out.extend_from_slice(&stats.conn_id.to_le_bytes());
+                out.extend_from_slice(&stats.age_ms.to_le_bytes());
+                out.extend_from_slice(&stats.frames.to_le_bytes());
+                out.extend_from_slice(&stats.replies.to_le_bytes());
+                out.extend_from_slice(&stats.errors.to_le_bytes());
+                out.extend_from_slice(&stats.inflight.to_le_bytes());
+                out.extend_from_slice(&stats.pending.to_le_bytes());
+                out.extend_from_slice(&stats.peak_window.to_le_bytes());
+                out.extend_from_slice(&stats.queued_write_bytes.to_le_bytes());
             }
             WireResponse::Hello { id, version, default_model, models } => {
                 out.extend_from_slice(&id.to_le_bytes());
@@ -510,6 +653,20 @@ impl WireResponse {
                     learns: c.u64()?,
                     trained_classes: c.u32()?,
                     snapshots: c.u64()?,
+                },
+            },
+            OP_CONN_STATS => WireResponse::ConnStats {
+                id,
+                stats: WireConnStats {
+                    conn_id: c.u64()?,
+                    age_ms: c.u64()?,
+                    frames: c.u64()?,
+                    replies: c.u64()?,
+                    errors: c.u64()?,
+                    inflight: c.u32()?,
+                    pending: c.u32()?,
+                    peak_window: c.u32()?,
+                    queued_write_bytes: c.u64()?,
                 },
             },
             OP_HELLO => {
@@ -565,6 +722,7 @@ mod tests {
         roundtrip_req(WireRequest::new(11, ReqBody::Snapshot { path: String::new() }), WIRE_V1);
         roundtrip_req(WireRequest::new(12, ReqBody::Stats), WIRE_V1);
         roundtrip_req(WireRequest::new(13, ReqBody::Hello { version: WIRE_V2 }), WIRE_V1);
+        roundtrip_req(WireRequest::new(14, ReqBody::ConnStats), WIRE_V1);
     }
 
     #[test]
@@ -591,6 +749,7 @@ mod tests {
                 WIRE_V2,
             );
             roundtrip_req(WireRequest::for_model(24, model, ReqBody::Stats), WIRE_V2);
+            roundtrip_req(WireRequest::for_model(26, model, ReqBody::ConnStats), WIRE_V2);
         }
         // hello is v1-shaped even on a v2 connection
         roundtrip_req(WireRequest::new(25, ReqBody::Hello { version: 7 }), WIRE_V2);
@@ -637,6 +796,20 @@ mod tests {
             models: vec![],
         });
         roundtrip_resp(WireResponse::Error { id: 5, msg: "class 99 out of range".into() });
+        roundtrip_resp(WireResponse::ConnStats {
+            id: 8,
+            stats: WireConnStats {
+                conn_id: 41,
+                age_ms: 12_345,
+                frames: 100,
+                replies: 99,
+                errors: 1,
+                inflight: 7,
+                pending: 3,
+                peak_window: 64,
+                queued_write_bytes: 4096,
+            },
+        });
     }
 
     #[test]
@@ -750,6 +923,134 @@ mod tests {
         assert_eq!(&buf[..4], &8u32.to_le_bytes());
         assert_eq!(buf.len(), 12);
         assert!(MAX_FRAME >= 1 << 20);
+    }
+
+    #[test]
+    fn assembler_yields_whole_frames_from_any_split() {
+        let mut stream = Vec::new();
+        write_frame(&mut stream, b"alpha").unwrap();
+        write_frame(&mut stream, b"").unwrap();
+        write_frame(&mut stream, &[7u8; 300]).unwrap();
+        // one byte at a time — every header and length prefix is torn
+        let mut asm = FrameAssembler::new(MAX_FRAME);
+        let mut got = Vec::new();
+        for b in &stream {
+            asm.extend(std::slice::from_ref(b));
+            while let Some(p) = asm.next_payload().unwrap() {
+                got.push(p);
+            }
+        }
+        assert_eq!(got, vec![b"alpha".to_vec(), Vec::new(), vec![7u8; 300]]);
+        assert!(!asm.mid_frame(), "stream ended at a frame boundary");
+        // all at once
+        let mut asm = FrameAssembler::new(MAX_FRAME);
+        asm.extend(&stream);
+        let mut got2 = Vec::new();
+        while let Some(p) = asm.next_payload().unwrap() {
+            got2.push(p);
+        }
+        assert_eq!(got2, got);
+    }
+
+    #[test]
+    fn assembler_tracks_mid_frame_and_rejects_oversize() {
+        let mut asm = FrameAssembler::new(MAX_FRAME);
+        assert!(!asm.mid_frame());
+        asm.extend(&[3, 0]); // half a length prefix
+        assert!(asm.mid_frame());
+        assert!(asm.next_payload().unwrap().is_none());
+        asm.extend(&[0, 0, b'a']); // header complete, body 1/3
+        assert!(asm.next_payload().unwrap().is_none());
+        asm.extend(b"bc");
+        assert_eq!(asm.next_payload().unwrap().unwrap(), b"abc");
+        assert!(!asm.mid_frame());
+        // oversized length rejected at the header, then poisoned
+        let mut asm = FrameAssembler::new(10);
+        asm.extend(&100u32.to_le_bytes());
+        assert!(asm.next_payload().is_err());
+        assert!(asm.next_payload().is_err(), "stays poisoned");
+    }
+
+    #[test]
+    fn assembler_compacts_without_losing_frames() {
+        // enough traffic to cross the compaction threshold several times
+        let mut asm = FrameAssembler::new(MAX_FRAME);
+        let mut expect = Vec::new();
+        let mut stream = Vec::new();
+        for i in 0..200u32 {
+            let payload = vec![(i % 251) as u8; 40 + (i as usize % 17)];
+            write_frame(&mut stream, &payload).unwrap();
+            expect.push(payload);
+        }
+        let mut got = Vec::new();
+        for chunk in stream.chunks(33) {
+            asm.extend(chunk);
+            while let Some(p) = asm.next_payload().unwrap() {
+                got.push(p);
+            }
+        }
+        assert_eq!(got, expect);
+        assert_eq!(asm.buffered(), 0);
+    }
+
+    /// Satellite: arbitrary valid v1/v2 frame sequences, split at random
+    /// chunk boundaries (including mid-header and mid-length-prefix),
+    /// reassemble bit-identically to whole-frame decoding.
+    #[test]
+    fn prop_chunked_reassembly_matches_whole_frame_decode() {
+        use crate::util::prop::forall;
+        forall(60, 0xC0FF_EE00, |rng| {
+            let version = if rng.bool(0.5) { WIRE_V1 } else { WIRE_V2 };
+            let nframes = 1 + rng.below(8);
+            let mut reqs = Vec::new();
+            for i in 0..nframes {
+                let model = if version == WIRE_V2 && rng.bool(0.5) {
+                    ["", "tiny", "isolet", "m3"][rng.below(4)].to_string()
+                } else {
+                    String::new()
+                };
+                let body = match rng.below(6) {
+                    0 => ReqBody::Infer {
+                        mode: rng.below(3) as u8,
+                        features: (0..rng.below(40)).map(|_| rng.sign() * 3.0).collect(),
+                    },
+                    1 => ReqBody::Learn {
+                        class: rng.below(32) as u32,
+                        features: (0..rng.below(40)).map(|_| rng.sign()).collect(),
+                    },
+                    2 => ReqBody::Snapshot { path: "snap/k.clok"[..rng.below(12)].to_string() },
+                    3 => ReqBody::Stats,
+                    4 => ReqBody::ConnStats,
+                    _ => ReqBody::Hello { version: WIRE_V2 },
+                };
+                let hello = matches!(body, ReqBody::Hello { .. });
+                let model = if hello { String::new() } else { model };
+                reqs.push(WireRequest { id: i as u64 + 1, model, body });
+            }
+            // whole-frame reference: encode + frame each request
+            let mut stream = Vec::new();
+            let mut reference = Vec::new();
+            for r in &reqs {
+                let payload = r.encode(version).unwrap();
+                reference.push(WireRequest::decode(&payload, version).unwrap());
+                write_frame(&mut stream, &payload).unwrap();
+            }
+            // chunked reassembly at random split points
+            let mut asm = FrameAssembler::new(MAX_FRAME);
+            let mut decoded = Vec::new();
+            let mut off = 0;
+            while off < stream.len() {
+                let n = 1 + rng.below(11).min(stream.len() - off - 1);
+                asm.extend(&stream[off..off + n]);
+                off += n;
+                while let Some(p) = asm.next_payload().unwrap() {
+                    decoded.push(WireRequest::decode(&p, version).unwrap());
+                }
+            }
+            assert_eq!(decoded, reference);
+            assert_eq!(decoded, reqs);
+            assert!(!asm.mid_frame());
+        });
     }
 
     #[test]

@@ -34,6 +34,7 @@ fn wire_constants_match_the_documented_table() {
     pin(&doc, "OP_SNAPSHOT", &format!("{:#04X}", wire::OP_SNAPSHOT));
     pin(&doc, "OP_STATS", &format!("{:#04X}", wire::OP_STATS));
     pin(&doc, "OP_HELLO", &format!("{:#04X}", wire::OP_HELLO));
+    pin(&doc, "OP_CONN_STATS", &format!("{:#04X}", wire::OP_CONN_STATS));
     pin(&doc, "KIND_ERROR", &format!("{:#04X}", wire::KIND_ERROR));
     pin(&doc, "MODE_DEFAULT", &format!("{:#04X}", wire::MODE_DEFAULT));
     pin(&doc, "MODE_L1", &format!("{:#04X}", wire::MODE_L1));
@@ -86,6 +87,38 @@ fn documented_request_header_offsets_match_the_encoder() {
     // responses: id at 0, kind at 8 (KIND_ERROR for errors)
     let err = wire::WireResponse::Error { id: 7, msg: "x".into() }.encode();
     assert_eq!(err[8], wire::KIND_ERROR);
+}
+
+#[test]
+fn documented_conn_stats_reply_layout_matches_the_encoder() {
+    // the spec promises the conn-stats reply body in this exact order:
+    // conn_id u64, age_ms u64, frames u64, replies u64, errors u64,
+    // inflight u32, pending u32, peak_window u32, queued_write_bytes u64
+    let stats = wire::WireConnStats {
+        conn_id: 0x1111,
+        age_ms: 0x2222,
+        frames: 0x3333,
+        replies: 0x4444,
+        errors: 0x5555,
+        inflight: 0x66,
+        pending: 0x77,
+        peak_window: 0x88,
+        queued_write_bytes: 0x9999,
+    };
+    let buf = wire::WireResponse::ConnStats { id: 9, stats }.encode();
+    assert_eq!(u64::from_le_bytes(buf[0..8].try_into().unwrap()), 9);
+    assert_eq!(buf[8], wire::OP_CONN_STATS);
+    let body = &buf[9..];
+    assert_eq!(u64::from_le_bytes(body[0..8].try_into().unwrap()), 0x1111);
+    assert_eq!(u64::from_le_bytes(body[8..16].try_into().unwrap()), 0x2222);
+    assert_eq!(u64::from_le_bytes(body[16..24].try_into().unwrap()), 0x3333);
+    assert_eq!(u64::from_le_bytes(body[24..32].try_into().unwrap()), 0x4444);
+    assert_eq!(u64::from_le_bytes(body[32..40].try_into().unwrap()), 0x5555);
+    assert_eq!(u32::from_le_bytes(body[40..44].try_into().unwrap()), 0x66);
+    assert_eq!(u32::from_le_bytes(body[44..48].try_into().unwrap()), 0x77);
+    assert_eq!(u32::from_le_bytes(body[48..52].try_into().unwrap()), 0x88);
+    assert_eq!(u64::from_le_bytes(body[52..60].try_into().unwrap()), 0x9999);
+    assert_eq!(body.len(), 60, "no trailing bytes in the conn-stats body");
 }
 
 #[test]

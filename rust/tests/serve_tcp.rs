@@ -5,6 +5,13 @@
 //! matched by client-assigned id, cross-model isolation under garbled
 //! frames), v1 back-compat, and the warm-restart invariant (learn ->
 //! snapshot -> restart -> bit-identical predictions in both search modes).
+//!
+//! The fault-injection half of the suite pins the reactor's survival
+//! contract: a byte-dribbling slowloris peer is served without starving
+//! anyone, silent connections are reaped at the idle timeout, a peer that
+//! stops reading its replies is shed without an executor ever blocking,
+//! and the per-connection pipeline window holds under a 3x overload blast
+//! (observable through the reactor-answered ConnStats opcode).
 
 use clo_hdnn::config::HdConfig;
 use clo_hdnn::coordinator::{Coordinator, CoordinatorOptions};
@@ -636,5 +643,273 @@ fn garbled_frames_on_a_pipelined_connection_leave_the_other_model_untouched() {
     seeder.set_model("alpha").unwrap();
     assert_eq!(seeder.stats().unwrap().learns, 1);
     drop(seeder);
+    server.stop();
+}
+
+#[test]
+fn conn_stats_reports_per_connection_counters() {
+    let cfg = cfg4();
+    let server = start_server(CoordinatorOptions::software(cfg.clone()));
+    let addr = server.local_addr().to_string();
+    let ps = protos(&cfg, 98);
+
+    let mut client = Client::connect_v2(&addr).unwrap();
+    for _ in 0..3 {
+        client.learn(&ps[0], 0).unwrap();
+    }
+    client.infer(&ps[0]).unwrap();
+    let st = client.conn_stats().unwrap();
+    assert!(st.conn_id > 0);
+    // hello + 3 learns + 1 infer + the conn-stats frame itself
+    assert_eq!(st.frames, 6);
+    // ... while `replies` is counted before the conn-stats reply
+    assert_eq!(st.replies, 5);
+    assert_eq!(st.errors, 0);
+    assert_eq!(st.inflight, 0, "a synchronous client leaves nothing in flight");
+    assert_eq!(st.pending, 0);
+    assert!(st.peak_window >= 1);
+    assert!(st.peak_window as usize <= wire::MAX_INFLIGHT);
+
+    // a second connection has its own token and fresh counters
+    let mut other = Client::connect_v2(&addr).unwrap();
+    let st2 = other.conn_stats().unwrap();
+    assert_ne!(st2.conn_id, st.conn_id);
+    assert_eq!(st2.frames, 2, "hello + conn-stats");
+    assert_eq!(st2.replies, 1);
+
+    // error replies are attributed to the connection that earned them
+    let id = client.send_for("nope", ReqBody::Stats).unwrap();
+    match client.recv().unwrap() {
+        wire::WireResponse::Error { id: eid, .. } => assert_eq!(eid, id),
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(client.conn_stats().unwrap().errors, 1);
+    assert_eq!(other.conn_stats().unwrap().errors, 0);
+    drop(client);
+    drop(other);
+    server.stop();
+}
+
+#[test]
+fn slowloris_byte_dribble_is_served_without_starving_others() {
+    let cfg = cfg4();
+    let coord = Coordinator::start(CoordinatorOptions::software(cfg.clone())).unwrap();
+    let serve_opts = ServeOptions {
+        idle_timeout: std::time::Duration::from_millis(400),
+        ..ServeOptions::default()
+    };
+    let server = Server::start("127.0.0.1:0", Registry::single("t", coord), serve_opts).unwrap();
+    let addr = server.local_addr().to_string();
+    let ps = protos(&cfg, 99);
+    let mut seeder = Client::connect(&addr).unwrap();
+    for (c, p) in ps.iter().enumerate() {
+        seeder.learn(p, c).unwrap();
+    }
+
+    // the dribbler: one valid v1 infer frame, one byte at a time — the
+    // whole frame takes ~2x the idle timeout to arrive, but no single gap
+    // approaches it, so the server must keep the connection and answer
+    let req = wire::WireRequest::new(
+        7,
+        ReqBody::Infer { mode: wire::MODE_DEFAULT, features: ps[2].clone() },
+    );
+    let payload = req.encode(wire::WIRE_V1).unwrap();
+    let mut framed = Vec::with_capacity(4 + payload.len());
+    framed.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    framed.extend_from_slice(&payload);
+    let dribbler = std::thread::spawn({
+        let addr = addr.clone();
+        move || {
+            let mut raw = TcpStream::connect(&addr).unwrap();
+            raw.set_nodelay(true).unwrap();
+            for &b in &framed {
+                raw.write_all(&[b]).unwrap();
+                raw.flush().unwrap();
+                std::thread::sleep(std::time::Duration::from_millis(3));
+            }
+            let mut reader = std::io::BufReader::new(raw);
+            match wire::read_frame(&mut reader, wire::MAX_FRAME).unwrap() {
+                wire::Frame::Payload(p) => match wire::WireResponse::decode(&p).unwrap() {
+                    wire::WireResponse::Infer { id, class, .. } => {
+                        assert_eq!(id, 7);
+                        assert_eq!(class, 2, "the dribbled frame is answered correctly");
+                    }
+                    other => panic!("dribbled frame must be answered: {other:?}"),
+                },
+                other => panic!("{other:?}"),
+            }
+        }
+    });
+    // while the dribbler crawls, a normal client is served at full speed
+    for round in 0..20 {
+        let c = round % ps.len();
+        assert_eq!(seeder.infer(&ps[c]).unwrap().class, c);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    dribbler.join().unwrap();
+    let (_, wire_errors, _) = server.counters();
+    assert_eq!(wire_errors, 0, "a slow but well-formed peer is not a protocol error");
+    drop(seeder);
+    server.stop();
+}
+
+#[test]
+fn idle_connections_are_reaped_with_a_goodbye_error() {
+    let cfg = cfg4();
+    let coord = Coordinator::start(CoordinatorOptions::software(cfg.clone())).unwrap();
+    let serve_opts = ServeOptions {
+        idle_timeout: std::time::Duration::from_millis(300),
+        ..ServeOptions::default()
+    };
+    let server = Server::start("127.0.0.1:0", Registry::single("t", coord), serve_opts).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // a connection that never sends anything is told why, then closed
+    let raw = TcpStream::connect(&addr).unwrap();
+    raw.set_read_timeout(Some(std::time::Duration::from_secs(10))).unwrap();
+    let mut reader = std::io::BufReader::new(raw);
+    let frame = loop {
+        match wire::read_frame(&mut reader, wire::MAX_FRAME).unwrap() {
+            wire::Frame::Idle => continue,
+            f => break f,
+        }
+    };
+    match frame {
+        wire::Frame::Payload(p) => match wire::WireResponse::decode(&p).unwrap() {
+            wire::WireResponse::Error { id, msg } => {
+                assert_eq!(id, 0);
+                assert!(msg.contains("idle timeout"), "{msg}");
+            }
+            other => panic!("{other:?}"),
+        },
+        other => panic!("expected an idle-timeout goodbye, got {other:?}"),
+    }
+    // ... followed by EOF, not limbo
+    let mut rest = Vec::new();
+    let _ = reader.read_to_end(&mut rest);
+    assert!(rest.is_empty());
+
+    // a client that stays under the idle timeout is never reaped
+    let ps = protos(&cfg, 90);
+    let mut client = Client::connect(&addr).unwrap();
+    client.learn(&ps[0], 0).unwrap();
+    for _ in 0..6 {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        assert_eq!(client.infer(&ps[0]).unwrap().class, 0);
+    }
+    drop(client);
+    server.stop();
+}
+
+#[test]
+fn stalled_reader_is_shed_without_stalling_the_executors() {
+    let cfg = cfg4();
+    let coord = Coordinator::start(CoordinatorOptions::software(cfg.clone())).unwrap();
+    let serve_opts = ServeOptions {
+        max_wbuf: 32 * 1024,
+        write_stall_timeout: std::time::Duration::from_millis(500),
+        ..ServeOptions::default()
+    };
+    let server = Server::start("127.0.0.1:0", Registry::single("t", coord), serve_opts).unwrap();
+    let addr = server.local_addr().to_string();
+    let ps = protos(&cfg, 89);
+    let mut seeder = Client::connect(&addr).unwrap();
+    for (c, p) in ps.iter().enumerate() {
+        seeder.learn(p, c).unwrap();
+    }
+
+    // the stalled reader: pump pipelined infers and never read a reply.
+    // Replies fill the kernel buffers, then the server-side write buffer,
+    // until the shed trips; the pump then sees a dead socket.
+    let pump = std::thread::spawn({
+        let addr = addr.clone();
+        let q = ps[0].clone();
+        move || {
+            let mut raw = TcpStream::connect(&addr).unwrap();
+            let req = wire::WireRequest::new(
+                1,
+                ReqBody::Infer { mode: wire::MODE_DEFAULT, features: q },
+            );
+            let payload = req.encode(wire::WIRE_V1).unwrap();
+            let mut framed = Vec::with_capacity(4 + payload.len());
+            framed.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            framed.extend_from_slice(&payload);
+            for _ in 0..200_000 {
+                if raw.write_all(&framed).is_err() {
+                    return true; // shed: the server closed on us
+                }
+            }
+            false
+        }
+    });
+    // a victim connection stays responsive the whole time the pump floods
+    let mut victim = Client::connect(&addr).unwrap();
+    victim.set_timeout(Some(std::time::Duration::from_secs(10))).unwrap();
+    let t0 = std::time::Instant::now();
+    while server.sheds() == 0 {
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(30),
+            "the stalled reader was never shed"
+        );
+        assert_eq!(victim.infer(&ps[1]).unwrap().class, 1);
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(pump.join().unwrap(), "the pump must observe the shed as a dead socket");
+    assert!(server.sheds() >= 1);
+    // and a fresh connection is served as if nothing happened
+    let mut fresh = Client::connect(&addr).unwrap();
+    assert_eq!(fresh.infer(&ps[2]).unwrap().class, 2);
+    drop(victim);
+    drop(fresh);
+    drop(seeder);
+    server.stop();
+}
+
+#[test]
+fn pipeline_window_is_enforced_under_overload() {
+    let cfg = cfg4();
+    let server = start_server(CoordinatorOptions::software(cfg.clone()));
+    let addr = server.local_addr().to_string();
+    let ps = protos(&cfg, 88);
+    let mut seeder = Client::connect(&addr).unwrap();
+    for (c, p) in ps.iter().enumerate() {
+        seeder.learn(p, c).unwrap();
+    }
+
+    // blast 200 pipelined infers — 3x the window — without reading a reply
+    let mut blaster = Client::connect_v2(&addr).unwrap();
+    let mut ids = std::collections::HashSet::new();
+    for i in 0..200usize {
+        let id = blaster
+            .send_for("", ReqBody::Infer { mode: 0, features: ps[i % ps.len()].clone() })
+            .unwrap();
+        ids.insert(id);
+    }
+    // a second connection is not starved by the blast
+    let mut bystander = Client::connect(&addr).unwrap();
+    bystander.set_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+    assert_eq!(bystander.infer(&ps[1]).unwrap().class, 1);
+    // every blasted request is answered exactly once
+    for _ in 0..200 {
+        let resp = blaster.recv().unwrap();
+        assert!(ids.remove(&resp.id()), "duplicate or unknown reply id {}", resp.id());
+        assert!(matches!(resp, wire::WireResponse::Infer { .. }));
+    }
+    assert!(ids.is_empty());
+    // the reactor never admitted more than the window into execution
+    let st = blaster.conn_stats().unwrap();
+    assert!(st.peak_window >= 1);
+    assert!(
+        st.peak_window as usize <= wire::MAX_INFLIGHT,
+        "window blown: peak {} > {}",
+        st.peak_window,
+        wire::MAX_INFLIGHT
+    );
+    assert_eq!(st.frames, 202, "hello + 200 infers + conn-stats");
+    assert_eq!(st.replies, 201);
+    assert_eq!(st.errors, 0);
+    drop(seeder);
+    drop(blaster);
+    drop(bystander);
     server.stop();
 }

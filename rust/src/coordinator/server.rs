@@ -29,6 +29,11 @@ use std::time::Instant;
 pub enum BackendSpec {
     /// pure-Rust NativeBackend, seeded ±1 factors (no artifacts needed)
     Native { cfg: HdConfig, seed: u64 },
+    /// pure-Rust NativeBackend with **rematerialized** seed-derived factor
+    /// planes: only the plane seeds stay resident; the sign-GEMM kernels
+    /// regenerate factor rows on the fly, so large-D registries scale with
+    /// models × classes instead of models × D × F
+    NativeRemat { cfg: HdConfig, seed: u64 },
     /// pure-Rust NativeBackend with the production factors (and, for image
     /// configs, the software WCFE) from an artifact directory
     NativeArtifacts { artifacts: std::path::PathBuf, config: String },
@@ -345,6 +350,19 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
         BackendSpec::Native { cfg, seed } => Executor {
             classifier: HdClassifier::new(
                 Box::new(NativeBackend::seeded(cfg.clone(), *seed, NATIVE_MAX_BATCH)?),
+                policy,
+            ),
+            router,
+            #[cfg(feature = "pjrt")]
+            wcfe_exe: None,
+            wcfe_native: None,
+            image_elems: 0,
+            learn_batch_cap: NATIVE_MAX_BATCH,
+            knowledge: KnowledgeState::default(),
+        },
+        BackendSpec::NativeRemat { cfg, seed } => Executor {
+            classifier: HdClassifier::new(
+                Box::new(NativeBackend::seeded_remat(cfg.clone(), *seed, NATIVE_MAX_BATCH)?),
                 policy,
             ),
             router,

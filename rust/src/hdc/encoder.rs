@@ -17,7 +17,11 @@
 //! Both kernels share one raw-accumulator core (`encode_rows_raw`), which is
 //! what [`SoftwareEncoder::calibrate`] drives too — calibration always
 //! exercises whichever kernel serves traffic instead of re-implementing the
-//! loops. [`SoftwareEncoder::encode_batch`] is the batched engine: it
+//! loops. Factor planes come in two representations behind one seam:
+//! stored ([`SoftwareEncoder::new`]/[`SoftwareEncoder::random`]) or
+//! seed-derived **rematerialized** ([`SoftwareEncoder::random_remat`]),
+//! which keeps only the plane seeds resident and regenerates rows inside
+//! the kernels — bit-identical to the stored twin by construction. [`SoftwareEncoder::encode_batch`] is the batched engine: it
 //! amortizes the per-sample reshape across rows, optionally shards rows over
 //! a [`WorkerPool`], and emits word-granular bit-packed QHV segments next to
 //! the INT8 values so the progressive-search packed path consumes encoder
@@ -26,7 +30,7 @@
 use crate::config::HdConfig;
 use crate::hdc::packed;
 use crate::hdc::quantize;
-use crate::hdc::signmat::{self, SignMat};
+use crate::hdc::signmat::{self, derive_stream, SeededSignMat, SignMat};
 use crate::hdc::HdBackend;
 use crate::util::pool::WorkerPool;
 use crate::util::Rng;
@@ -54,21 +58,29 @@ impl EncodeKernel {
     }
 }
 
+/// How the ±1 factor planes are held (private: kernels and accessors are the
+/// only readers, so the representations can never desync).
+#[derive(Clone, Debug)]
+enum FactorPlanes {
+    /// Dense f32 factors plus their bit-packed sign planes, built once at
+    /// construction from the same values.
+    Stored { a: Vec<f32>, b: Vec<f32>, a_signs: SignMat, b_signs: SignMat },
+    /// Seed-derived **rematerialized** planes: only the seeds + geometry are
+    /// resident; rows regenerate on the fly inside the sign-GEMM kernels.
+    Seeded { a_signs: SeededSignMat, b_signs: SeededSignMat },
+}
+
+/// Stream ids for the seed-derived factor planes. Fixed constants so a
+/// rematerializing encoder and its materialized twin
+/// ([`SoftwareEncoder::random_remat_materialized`]) agree by construction.
+const A_PLANE_STREAM: u64 = 1;
+const B_PLANE_STREAM: u64 = 2;
+
 /// Pure-Rust Kronecker encoder + L1 search backend.
 #[derive(Clone, Debug)]
 pub struct SoftwareEncoder {
     cfg: HdConfig,
-    /// A: (d1, f1) row-major +-1 (private: the packed sign planes are built
-    /// from it once at construction and must never desync — read via
-    /// [`SoftwareEncoder::a`])
-    a: Vec<f32>,
-    /// B: (d2, f2) row-major +-1 (private, see `a`; read via
-    /// [`SoftwareEncoder::b`])
-    b: Vec<f32>,
-    /// bit-packed sign plane of A (1 bit per entry)
-    a_signs: SignMat,
-    /// bit-packed sign plane of B
-    b_signs: SignMat,
+    planes: FactorPlanes,
     /// scratch for stage-1 output (seg_rows x f2 max = d1 x f2)
     scratch: Vec<f32>,
     kernel: EncodeKernel,
@@ -88,8 +100,9 @@ impl SoftwareEncoder {
         // even on degenerate non-±1 factors.
         let a_signs = SignMat::from_signs(&a, cfg.d1, cfg.f1);
         let b_signs = SignMat::from_signs(&b, cfg.d2, cfg.f2);
+        let planes = FactorPlanes::Stored { a, b, a_signs, b_signs };
         let kernel = EncodeKernel::default();
-        Ok(SoftwareEncoder { cfg, a, b, a_signs, b_signs, scratch, kernel })
+        Ok(SoftwareEncoder { cfg, planes, scratch, kernel })
     }
 
     /// Random +-1 factors (matches the build-time generator's distribution;
@@ -102,14 +115,66 @@ impl SoftwareEncoder {
         SoftwareEncoder::new(cfg, a, b).unwrap()
     }
 
-    /// The A factor, (d1, f1) row-major ±1.
-    pub fn a(&self) -> &[f32] {
-        &self.a
+    /// Random seed-derived factors held as **rematerialized** planes: only
+    /// the two plane seeds stay resident ([`SoftwareEncoder::factor_bytes`]
+    /// is O(1) instead of O(D·F)), and the sign-GEMM kernels regenerate rows
+    /// on the fly. Encodes are bit-identical to the stored twin built by
+    /// [`SoftwareEncoder::random_remat_materialized`] from the same seed.
+    ///
+    /// Note the factor *values* differ from [`SoftwareEncoder::random`] at
+    /// the same seed: remat planes draw per-row streams (so any row is
+    /// reachable in O(cols)), while `random` draws one sequential stream.
+    pub fn random_remat(cfg: HdConfig, seed: u64) -> SoftwareEncoder {
+        let a_signs = SeededSignMat::new(derive_stream(seed, A_PLANE_STREAM), cfg.d1, cfg.f1);
+        let b_signs = SeededSignMat::new(derive_stream(seed, B_PLANE_STREAM), cfg.d2, cfg.f2);
+        let scratch = vec![0.0; cfg.d1 * cfg.f2];
+        let planes = FactorPlanes::Seeded { a_signs, b_signs };
+        SoftwareEncoder { cfg, planes, scratch, kernel: EncodeKernel::default() }
     }
 
-    /// The B factor, (d2, f2) row-major ±1.
-    pub fn b(&self) -> &[f32] {
-        &self.b
+    /// The stored twin of [`SoftwareEncoder::random_remat`]: same seed, same
+    /// factor values, but fully materialized planes. Exists so bit-equality
+    /// of the two representations is pinned by construction (the tests
+    /// encode through both and compare).
+    pub fn random_remat_materialized(cfg: HdConfig, seed: u64) -> SoftwareEncoder {
+        let a = SeededSignMat::new(derive_stream(seed, A_PLANE_STREAM), cfg.d1, cfg.f1).to_pm1();
+        let b = SeededSignMat::new(derive_stream(seed, B_PLANE_STREAM), cfg.d2, cfg.f2).to_pm1();
+        SoftwareEncoder::new(cfg, a, b).expect("remat factor shapes are correct by construction")
+    }
+
+    /// Whether the factor planes are rematerialized (seed-derived).
+    pub fn is_remat(&self) -> bool {
+        matches!(self.planes, FactorPlanes::Seeded { .. })
+    }
+
+    /// Resident factor memory in bytes: dense f32 factors + packed sign
+    /// planes when stored; a few words of seed + geometry when
+    /// rematerialized (the models × classes registry-memory story).
+    pub fn factor_bytes(&self) -> usize {
+        match &self.planes {
+            FactorPlanes::Stored { a, b, a_signs, b_signs } => {
+                (a.len() + b.len()) * std::mem::size_of::<f32>() + a_signs.bytes() + b_signs.bytes()
+            }
+            FactorPlanes::Seeded { a_signs, b_signs } => a_signs.bytes() + b_signs.bytes(),
+        }
+    }
+
+    /// The A factor, (d1, f1) row-major ±1. Stored planes return the
+    /// constructor's dense factor; rematerialized planes regenerate it
+    /// (an O(d1·f1) materialization per call).
+    pub fn a(&self) -> Vec<f32> {
+        match &self.planes {
+            FactorPlanes::Stored { a, .. } => a.clone(),
+            FactorPlanes::Seeded { a_signs, .. } => a_signs.to_pm1(),
+        }
+    }
+
+    /// The B factor, (d2, f2) row-major ±1 (see [`SoftwareEncoder::a`]).
+    pub fn b(&self) -> Vec<f32> {
+        match &self.planes {
+            FactorPlanes::Stored { b, .. } => b.clone(),
+            FactorPlanes::Seeded { b_signs, .. } => b_signs.to_pm1(),
+        }
     }
 
     /// The kernel currently serving encode traffic.
@@ -161,40 +226,42 @@ impl SoftwareEncoder {
         let (f1, f2, d2) = (self.cfg.f1, self.cfg.f2, self.cfg.d2);
         debug_assert_eq!(x.len(), f1 * f2);
         debug_assert!(out.len() >= rows * d2);
-        match self.kernel {
-            EncodeKernel::SignGemm => {
-                signmat::stage1(&self.a_signs, row0, rows, x, f2, scratch);
-                signmat::stage2(&self.b_signs, scratch, rows, f2, out);
+        match (&self.planes, self.kernel) {
+            (FactorPlanes::Stored { a_signs, b_signs, .. }, EncodeKernel::SignGemm) => {
+                signmat::stage1(a_signs, row0, rows, x, f2, scratch);
+                signmat::stage2(b_signs, scratch, rows, f2, out);
             }
-            EncodeKernel::Scalar => {
-                // Stage 1: T = A_rows @ X  (rows x f2); A is +-1 -> adds only.
+            (FactorPlanes::Seeded { a_signs, b_signs }, EncodeKernel::SignGemm) => {
+                // the rematerialized hot path: identical kernels, rows
+                // regenerated from the seed inside stage1/stage2
+                signmat::stage1(a_signs, row0, rows, x, f2, scratch);
+                signmat::stage2(b_signs, scratch, rows, f2, out);
+            }
+            (FactorPlanes::Stored { a, b, .. }, EncodeKernel::Scalar) => {
                 for r in 0..rows {
-                    let arow = &self.a[(row0 + r) * f1..(row0 + r + 1) * f1];
-                    let trow = &mut scratch[r * f2..(r + 1) * f2];
-                    trow.fill(0.0);
-                    for (j1, &aval) in arow.iter().enumerate() {
-                        let xrow = &x[j1 * f2..(j1 + 1) * f2];
-                        if aval >= 0.0 {
-                            for (t, &xv) in trow.iter_mut().zip(xrow) {
-                                *t += xv;
-                            }
-                        } else {
-                            for (t, &xv) in trow.iter_mut().zip(xrow) {
-                                *t -= xv;
-                            }
-                        }
-                    }
+                    let arow = &a[(row0 + r) * f1..(row0 + r + 1) * f1];
+                    scalar_stage1_row(arow, x, f2, &mut scratch[r * f2..(r + 1) * f2]);
                 }
-                // Stage 2: Y = T @ B^T (rows x d2), raw.
                 for r in 0..rows {
                     let trow = &scratch[r * f2..(r + 1) * f2];
                     for i2 in 0..d2 {
-                        let brow = &self.b[i2 * f2..(i2 + 1) * f2];
-                        let mut acc = 0.0f32;
-                        for (&t, &bv) in trow.iter().zip(brow) {
-                            acc += if bv >= 0.0 { t } else { -t };
-                        }
-                        out[r * d2 + i2] = acc;
+                        out[r * d2 + i2] = scalar_stage2_row(&b[i2 * f2..(i2 + 1) * f2], trow);
+                    }
+                }
+            }
+            (FactorPlanes::Seeded { a_signs, b_signs }, EncodeKernel::Scalar) => {
+                // reference path for remat planes: regenerate each ±1 row
+                // and run the same branchy loops (bit unpacking yields exact
+                // ±1, so scalar and sign-GEMM stay bit-identical here too)
+                for r in 0..rows {
+                    let arow = a_signs.row_pm1(row0 + r);
+                    scalar_stage1_row(&arow, x, f2, &mut scratch[r * f2..(r + 1) * f2]);
+                }
+                for i2 in 0..d2 {
+                    let brow = b_signs.row_pm1(i2);
+                    for r in 0..rows {
+                        let trow = &scratch[r * f2..(r + 1) * f2];
+                        out[r * d2 + i2] = scalar_stage2_row(&brow, trow);
                     }
                 }
             }
@@ -282,6 +349,34 @@ impl SoftwareEncoder {
             packed: packed_rows,
         })
     }
+}
+
+/// Reference scalar stage 1 for one A row: `trow = ±x` accumulated
+/// `j1`-ascending with the branchy `aval >= 0.0` sign select — the
+/// accumulation order every fast kernel must preserve.
+fn scalar_stage1_row(arow: &[f32], x: &[f32], f2: usize, trow: &mut [f32]) {
+    trow.fill(0.0);
+    for (j1, &aval) in arow.iter().enumerate() {
+        let xrow = &x[j1 * f2..(j1 + 1) * f2];
+        if aval >= 0.0 {
+            for (t, &xv) in trow.iter_mut().zip(xrow) {
+                *t += xv;
+            }
+        } else {
+            for (t, &xv) in trow.iter_mut().zip(xrow) {
+                *t -= xv;
+            }
+        }
+    }
+}
+
+/// Reference scalar stage 2 for one B row: a single `j2`-ascending chain.
+fn scalar_stage2_row(brow: &[f32], trow: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (&t, &bv) in trow.iter().zip(brow) {
+        acc += if bv >= 0.0 { t } else { -t };
+    }
+    acc
 }
 
 /// One batched encode's output: INT8 QHVs plus the bit-packed segment image
@@ -480,7 +575,7 @@ mod tests {
         let mut enc = SoftwareEncoder::random(cfg.clone(), 1);
         let mut rng = Rng::new(2);
         let x: Vec<f32> = (0..cfg.features()).map(|_| rng.range(-100, 101) as f32).collect();
-        let want = dense_oracle(&cfg, &enc.a.clone(), &enc.b.clone(), &x);
+        let want = dense_oracle(&cfg, &enc.a(), &enc.b(), &x);
         for kernel in [EncodeKernel::Scalar, EncodeKernel::SignGemm] {
             enc.set_kernel(kernel);
             let got = enc.encode_full(&x, 1).unwrap();
@@ -661,9 +756,52 @@ mod tests {
         let cfg = tiny();
         let enc = SoftwareEncoder::random(cfg.clone(), 2);
         let k = kron_cost(&cfg);
-        let packed_bits = (enc.a_signs.bytes() + enc.b_signs.bytes()) as u64 * 8;
+        let FactorPlanes::Stored { a_signs, b_signs, .. } = &enc.planes else {
+            panic!("SoftwareEncoder::new builds stored planes");
+        };
+        let packed_bits = (a_signs.bytes() + b_signs.bytes()) as u64 * 8;
         assert!(packed_bits >= k.mem_bits);
         // padding slack is bounded by 63 bits per row
         assert!(packed_bits <= k.mem_bits + 63 * (cfg.d1 + cfg.d2) as u64);
+    }
+
+    #[test]
+    fn remat_encoder_bit_equals_materialized_twin() {
+        // The tentpole remat property: a seed-only encoder and its fully
+        // materialized twin produce identical factors, QHVs, and packed
+        // segments — under both kernels.
+        let cfg = tiny();
+        let mut remat = SoftwareEncoder::random_remat(cfg.clone(), 0xBEEF);
+        let mut stored = SoftwareEncoder::random_remat_materialized(cfg.clone(), 0xBEEF);
+        assert!(remat.is_remat());
+        assert!(!stored.is_remat());
+        assert_eq!(remat.a(), stored.a());
+        assert_eq!(remat.b(), stored.b());
+        // the memory story: seeds + geometry vs dense f32 + sign planes
+        assert!(remat.factor_bytes() < stored.factor_bytes() / 10);
+        let mut rng = Rng::new(21);
+        let xs: Vec<f32> = (0..2 * cfg.features()).map(|_| rng.range(-80, 81) as f32).collect();
+        remat.calibrate(&xs, 2);
+        stored.calibrate(&xs, 2);
+        assert_eq!(remat.cfg().scale_q, stored.cfg().scale_q);
+        for kernel in [EncodeKernel::Scalar, EncodeKernel::SignGemm] {
+            remat.set_kernel(kernel);
+            stored.set_kernel(kernel);
+            assert_eq!(
+                remat.encode_full(&xs, 2).unwrap(),
+                stored.encode_full(&xs, 2).unwrap(),
+                "{kernel:?}"
+            );
+            for s in 0..cfg.segments {
+                assert_eq!(
+                    remat.encode_segment_packed(&xs, 2, s).unwrap(),
+                    stored.encode_segment_packed(&xs, 2, s).unwrap(),
+                    "{kernel:?} segment {s}"
+                );
+            }
+        }
+        // different seeds give different planes (streams are separated)
+        let other = SoftwareEncoder::random_remat(cfg, 0xBEF0);
+        assert_ne!(other.a(), remat.a());
     }
 }

@@ -17,6 +17,7 @@ pub mod packed;
 pub mod progressive;
 pub mod quantize;
 pub mod signmat;
+pub mod simd;
 pub mod train;
 
 pub use chv::ChvStore;
@@ -24,7 +25,8 @@ pub use classifier::HdClassifier;
 pub use encoder::{EncodeKernel, EncodedBatch, SoftwareEncoder};
 pub use packed::{PackedChvStore, PackedHv};
 pub use progressive::{ProgressiveResult, ProgressiveSearch, SearchMode};
-pub use signmat::SignMat;
+pub use signmat::{SeededSignMat, SignMat, SignRows};
+pub use simd::SimdLevel;
 pub use train::{RetrainReport, Trainer};
 
 use crate::config::HdConfig;

@@ -22,6 +22,7 @@
 //! exactly additive (the invariant progressive accumulation relies on).
 
 use crate::config::HdConfig;
+use crate::hdc::simd;
 use crate::Result;
 use anyhow::bail;
 
@@ -135,12 +136,17 @@ fn check_search_shapes(
 
 /// Hamming distance between two equal-length packed rows: XOR + popcount.
 /// Equal-length padding cancels (0 ^ 0 = 0), so tail bits never contribute.
+/// Dispatches to the process-wide SIMD level; popcount sums are integer, so
+/// every level returns the identical count.
 pub fn hamming_words(a: &[u64], b: &[u64]) -> usize {
+    hamming_words_with(simd::active(), a, b)
+}
+
+/// [`hamming_words`] at an explicit SIMD level (differential tests force
+/// scalar vs wide paths against each other through this seam).
+pub fn hamming_words_with(level: simd::SimdLevel, a: &[u64], b: &[u64]) -> usize {
     debug_assert_eq!(a.len(), b.len());
-    a.iter()
-        .zip(b)
-        .map(|(&x, &y)| (x ^ y).count_ones() as usize)
-        .sum()
+    simd::xor_popcount(level, a, b) as usize
 }
 
 /// Packed associative search: qs (batch, words) vs chvs (classes, words) ->
@@ -155,6 +161,19 @@ pub fn hamming_search(
     classes: usize,
     len: usize,
 ) -> Result<Vec<f32>> {
+    hamming_search_with(simd::active(), qs, batch, chvs, classes, len)
+}
+
+/// [`hamming_search`] at an explicit SIMD level. The distance is an integer
+/// popcount scaled by 2, so every level is bit-identical to scalar.
+pub fn hamming_search_with(
+    level: simd::SimdLevel,
+    qs: &[u64],
+    batch: usize,
+    chvs: &[u64],
+    classes: usize,
+    len: usize,
+) -> Result<Vec<f32>> {
     let w = check_search_shapes(qs, batch, chvs, classes, len)?;
     let mut out = vec![0.0f32; batch * classes];
     for n in 0..batch {
@@ -162,10 +181,7 @@ pub fn hamming_search(
         let row = &mut out[n * classes..(n + 1) * classes];
         for (c, o) in row.iter_mut().enumerate() {
             let chv = &chvs[c * w..(c + 1) * w];
-            let mut ham = 0u32;
-            for (&x, &y) in q.iter().zip(chv) {
-                ham += (x ^ y).count_ones();
-            }
+            let ham = simd::xor_popcount(level, q, chv);
             // 2 * Hamming == L1 over ±1; exact in f32 for D <= 2^22
             *o = 2.0 * ham as f32;
         }
@@ -188,16 +204,30 @@ pub fn hamming_search_pool(
     classes: usize,
     len: usize,
 ) -> Result<Vec<f32>> {
+    hamming_search_pool_with(simd::active(), pool, qs, batch, chvs, classes, len)
+}
+
+/// [`hamming_search_pool`] at an explicit SIMD level: every shard runs the
+/// same level's kernel, so sharding and dispatch compose bit-identically.
+pub fn hamming_search_pool_with(
+    level: simd::SimdLevel,
+    pool: &crate::util::pool::WorkerPool,
+    qs: &[u64],
+    batch: usize,
+    chvs: &[u64],
+    classes: usize,
+    len: usize,
+) -> Result<Vec<f32>> {
     // Same shape contract as hamming_search, checked up front so every
     // shard works on verified operands.
     let w = check_search_shapes(qs, batch, chvs, classes, len)?;
     // Below ~2 classes per worker the scope/merge overhead dominates.
     if pool.is_serial() || classes < 2 * pool.threads() {
-        return hamming_search(qs, batch, chvs, classes, len);
+        return hamming_search_with(level, qs, batch, chvs, classes, len);
     }
     let blocks = pool.run_blocks(classes, |c0, n_classes| {
         let sub = &chvs[c0 * w..(c0 + n_classes) * w];
-        hamming_search(qs, batch, sub, n_classes, len)
+        hamming_search_with(level, qs, batch, sub, n_classes, len)
             .expect("hamming_search_pool: block shapes verified up front")
     });
     let mut out = vec![0.0f32; batch * classes];

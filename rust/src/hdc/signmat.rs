@@ -23,14 +23,22 @@
 //!
 //! Blocking: stage 1 walks X in [`COL_TILE`]-column tiles (1 KB of f32 — an
 //! L1-resident strip of the stage-1 accumulator row), streaming all f1 rows
-//! of the tile before moving right; stage 2 processes four B rows per pass
-//! (four independent accumulator chains hide the f32 add latency that
-//! bounds the single-chain scalar loop). No branches depend on the (random)
-//! sign data anywhere — the scalar kernel's per-element `if bv >= 0.0`
-//! mispredicts ~50% of the time on ±1 factors, which is the other cost the
-//! sign-GEMM rewrite removes.
+//! of the tile before moving right; stage 2 processes a small block of B
+//! rows per pass (independent accumulator chains hide the f32 add latency
+//! that bounds the single-chain scalar loop). No branches depend on the
+//! (random) sign data anywhere — the scalar kernel's per-element
+//! `if bv >= 0.0` mispredicts ~50% of the time on ±1 factors, which is the
+//! other cost the sign-GEMM rewrite removes.
+//!
+//! Both kernels dispatch through [`crate::hdc::simd`] (stage 1 vectorizes
+//! across the tile's output columns, stage 2 across eight B rows — always
+//! across independent chains, never within one), and both are generic over
+//! [`SignRows`], so they run identically off a stored [`SignMat`] or a
+//! seed-derived [`SeededSignMat`] that regenerates rows on the fly.
 
 use crate::hdc::packed::{pack_signs, unpack_pm1, words_for};
+use crate::hdc::simd::{self, SimdLevel};
+use crate::util::Rng;
 use crate::Result;
 use anyhow::bail;
 
@@ -116,6 +124,167 @@ impl SignMat {
     }
 }
 
+/// Row access over bit-packed ±1 sign planes — the seam that lets the
+/// sign-GEMM kernels run off either a stored [`SignMat`] or a seed-derived
+/// [`SeededSignMat`] regenerating rows on the fly.
+pub trait SignRows {
+    /// Row count.
+    fn rows(&self) -> usize;
+    /// Column count (elements per row).
+    fn cols(&self) -> usize;
+    /// Words per packed row (`words_for(cols)`).
+    fn words_per_row(&self) -> usize;
+    /// Row `r`'s packed sign words, written into `buf` (at least
+    /// `words_per_row` long) when the implementation must materialize them.
+    fn row_into<'a>(&'a self, r: usize, buf: &'a mut [u64]) -> &'a [u64];
+}
+
+impl SignRows for SignMat {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    fn row_into<'a>(&'a self, r: usize, _buf: &'a mut [u64]) -> &'a [u64] {
+        self.row(r)
+    }
+}
+
+/// splitmix64-style avalanche mix: an independent child seed for `stream`
+/// derived from `seed`. Used for [`SeededSignMat`]'s per-row streams (and by
+/// the encoder for its per-plane streams); a plain `seed + stream` would make
+/// adjacent seeds share row streams.
+pub fn derive_stream(seed: u64, stream: u64) -> u64 {
+    let mut z = seed ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A **rematerialized** ±1 sign plane: instead of storing `rows × cols` bits,
+/// store the RNG seed and regenerate any row's packed words on demand
+/// (Schmuck/Benini/Rahimi-style hypervector rematerialization). Registry
+/// memory then scales with models × classes instead of models × D × F, and
+/// arbitrarily large factor planes stay cache-resident.
+///
+/// The canonical generation rule — row `r` draws `cols` signs from a fresh
+/// `Rng::new(derive_stream(seed, r + 1))` via [`Rng::sign`], packed with the
+/// [`pack_signs`] convention (bit set ⇔ +1) — is also how [`materialize`]
+/// builds the stored twin, so on-the-fly rows are bit-equal to the stored
+/// plane *by construction*, not by test luck.
+///
+/// [`materialize`]: SeededSignMat::materialize
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SeededSignMat {
+    seed: u64,
+    rows: usize,
+    cols: usize,
+    words_per_row: usize,
+}
+
+impl SeededSignMat {
+    /// A seed-derived `rows × cols` plane. O(1) memory; rows are generated
+    /// on access.
+    pub fn new(seed: u64, rows: usize, cols: usize) -> SeededSignMat {
+        SeededSignMat { seed, rows, cols, words_per_row: words_for(cols) }
+    }
+
+    /// The plane's seed (per-row streams are derived from it).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Words per packed row (`words_for(cols)`).
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// Regenerate row `r`'s packed sign words into `buf[..words_per_row]`
+    /// (tail bits zero, same layout as [`SignMat::row`]).
+    pub fn generate_row(&self, r: usize, buf: &mut [u64]) {
+        assert!(r < self.rows, "SeededSignMat row {r} out of {}", self.rows);
+        let w = self.words_per_row;
+        assert!(buf.len() >= w, "SeededSignMat row buffer {} < {w} words", buf.len());
+        let mut rng = Rng::new(derive_stream(self.seed, r as u64 + 1));
+        for word in buf[..w].iter_mut() {
+            *word = 0;
+        }
+        for c in 0..self.cols {
+            if rng.sign() > 0.0 {
+                buf[c / 64] |= 1 << (c % 64);
+            }
+        }
+    }
+
+    /// Row `r` as a ±1 vector (allocates; the reference/scalar path).
+    pub fn row_pm1(&self, r: usize) -> Vec<f32> {
+        let mut buf = vec![0u64; self.words_per_row];
+        self.generate_row(r, &mut buf);
+        unpack_pm1(&buf, self.cols)
+    }
+
+    /// Materialize the stored twin — the memory-for-compute trade in
+    /// reverse. Uses the same per-row generator as [`generate_row`], so the
+    /// result is bit-equal to the on-the-fly rows by construction.
+    ///
+    /// [`generate_row`]: SeededSignMat::generate_row
+    pub fn materialize(&self) -> SignMat {
+        let mut words = vec![0u64; self.rows * self.words_per_row];
+        for r in 0..self.rows {
+            let span = &mut words[r * self.words_per_row..(r + 1) * self.words_per_row];
+            self.generate_row(r, span);
+        }
+        SignMat { rows: self.rows, cols: self.cols, words_per_row: self.words_per_row, words }
+    }
+
+    /// Unpack to a row-major ±1 matrix (materializes each row).
+    pub fn to_pm1(&self) -> Vec<f32> {
+        self.materialize().to_pm1()
+    }
+
+    /// Resident bytes: seed + geometry only, independent of `rows × cols`.
+    pub fn bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+    }
+}
+
+impl SignRows for SeededSignMat {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    fn row_into<'a>(&'a self, r: usize, buf: &'a mut [u64]) -> &'a [u64] {
+        let w = self.words_per_row;
+        self.generate_row(r, &mut buf[..w]);
+        &buf[..w]
+    }
+}
+
 /// IEEE sign mask for sign bit `i` of a packed row: 0 for +1 (keep the
 /// operand), `1 << 31` for −1 (flip the operand's sign — exact negation).
 #[inline(always)]
@@ -125,15 +294,39 @@ fn sign_mask(row: &[u64], i: usize) -> u32 {
 
 /// Stage 1: `T = A[row0..row0+rows] @ X` over one sample, X row-major
 /// (f1 × f2), T row-major (rows × f2). Mask-selected adds over
-/// [`COL_TILE`]-column tiles; per output element the `j1`-ascending
-/// accumulation order of the scalar reference is preserved exactly.
-pub fn stage1(a: &SignMat, row0: usize, rows: usize, x: &[f32], f2: usize, t: &mut [f32]) {
+/// [`COL_TILE`]-column tiles at the process-wide SIMD level; per output
+/// element the `j1`-ascending accumulation order of the scalar reference is
+/// preserved exactly.
+pub fn stage1<P: SignRows + ?Sized>(
+    a: &P,
+    row0: usize,
+    rows: usize,
+    x: &[f32],
+    f2: usize,
+    t: &mut [f32],
+) {
+    stage1_with(simd::active(), a, row0, rows, x, f2, t)
+}
+
+/// [`stage1`] at an explicit SIMD level (the differential-test seam). The
+/// tile's output columns are independent accumulation chains, so the
+/// vectorized sign-apply ([`simd::add_signed`]) is bit-identical to scalar.
+pub fn stage1_with<P: SignRows + ?Sized>(
+    level: SimdLevel,
+    a: &P,
+    row0: usize,
+    rows: usize,
+    x: &[f32],
+    f2: usize,
+    t: &mut [f32],
+) {
     let f1 = a.cols();
     debug_assert_eq!(x.len(), f1 * f2);
     debug_assert!(t.len() >= rows * f2);
     debug_assert!(row0 + rows <= a.rows());
+    let mut rbuf = vec![0u64; a.words_per_row()];
     for r in 0..rows {
-        let arow = a.row(row0 + r);
+        let arow = a.row_into(row0 + r, &mut rbuf);
         let trow = &mut t[r * f2..(r + 1) * f2];
         trow.fill(0.0);
         let mut col = 0usize;
@@ -143,9 +336,7 @@ pub fn stage1(a: &SignMat, row0: usize, rows: usize, x: &[f32], f2: usize, t: &m
             for j1 in 0..f1 {
                 let mask = sign_mask(arow, j1);
                 let xrow = &x[j1 * f2 + col..j1 * f2 + col + tile];
-                for (tv, &xv) in tchunk.iter_mut().zip(xrow) {
-                    *tv += f32::from_bits(xv.to_bits() ^ mask);
-                }
+                simd::add_signed(level, tchunk, xrow, mask);
             }
             col += tile;
         }
@@ -153,25 +344,62 @@ pub fn stage1(a: &SignMat, row0: usize, rows: usize, x: &[f32], f2: usize, t: &m
 }
 
 /// Stage 2 (raw accumulators): `out[r * d2 + i2] = Σ_j2 ±t[r][j2]` with
-/// signs from B row `i2`. B rows are processed **four at a time**: the four
-/// accumulator chains are independent, so the f32 add latency overlaps
-/// (the single-chain scalar loop is latency-bound on `acc`), while each
-/// row's own `j2`-ascending accumulation order — and therefore bit-exact
-/// agreement with the scalar reference — is untouched. Quantization is the
-/// caller's separate pass (which is what lets calibration reuse this
-/// kernel).
-pub fn stage2(b: &SignMat, t: &[f32], rows: usize, f2: usize, out: &mut [f32]) {
+/// signs from B row `i2`, at the process-wide SIMD level. B rows are
+/// processed in small blocks: the per-row accumulator chains are independent,
+/// so the f32 add latency overlaps (the single-chain scalar loop is
+/// latency-bound on `acc`), while each row's own `j2`-ascending accumulation
+/// order — and therefore bit-exact agreement with the scalar reference — is
+/// untouched. Quantization is the caller's separate pass (which is what lets
+/// calibration reuse this kernel).
+pub fn stage2<P: SignRows + ?Sized>(b: &P, t: &[f32], rows: usize, f2: usize, out: &mut [f32]) {
+    stage2_with(simd::active(), b, t, rows, f2, out)
+}
+
+/// [`stage2`] at an explicit SIMD level (the differential-test seam). The
+/// scalar level runs 4-row blocks of scalar chains; wide levels run 8-row
+/// blocks through [`simd::dot8_signed`], one lane per B row — either way
+/// every output element sees the same `j2`-ascending chain.
+pub fn stage2_with<P: SignRows + ?Sized>(
+    level: SimdLevel,
+    b: &P,
+    t: &[f32],
+    rows: usize,
+    f2: usize,
+    out: &mut [f32],
+) {
     let d2 = b.rows();
     debug_assert_eq!(b.cols(), f2);
     debug_assert!(t.len() >= rows * f2);
     debug_assert!(out.len() >= rows * d2);
-    for r in 0..rows {
-        let trow = &t[r * f2..(r + 1) * f2];
-        let orow = &mut out[r * d2..(r + 1) * d2];
-        let mut i2 = 0usize;
-        while i2 + 4 <= d2 {
-            let (b0, b1, b2, b3) =
-                (b.row(i2), b.row(i2 + 1), b.row(i2 + 2), b.row(i2 + 3));
+    if level == SimdLevel::Scalar {
+        stage2_scalar_level(b, t, rows, f2, d2, out);
+    } else {
+        stage2_simd_level(level, b, t, rows, f2, d2, out);
+    }
+}
+
+/// Four B rows per pass, each a scalar accumulator chain.
+fn stage2_scalar_level<P: SignRows + ?Sized>(
+    b: &P,
+    t: &[f32],
+    rows: usize,
+    f2: usize,
+    d2: usize,
+    out: &mut [f32],
+) {
+    let wpr = b.words_per_row();
+    let mut scratch = vec![0u64; 4 * wpr];
+    let mut i2 = 0usize;
+    while i2 + 4 <= d2 {
+        let (s0, rest) = scratch.split_at_mut(wpr);
+        let (s1, rest) = rest.split_at_mut(wpr);
+        let (s2, s3) = rest.split_at_mut(wpr);
+        let b0 = b.row_into(i2, s0);
+        let b1 = b.row_into(i2 + 1, s1);
+        let b2 = b.row_into(i2 + 2, s2);
+        let b3 = b.row_into(i2 + 3, s3);
+        for r in 0..rows {
+            let trow = &t[r * f2..(r + 1) * f2];
             let mut acc = [0.0f32; 4];
             for (j2, &tv) in trow.iter().enumerate() {
                 let bits = tv.to_bits();
@@ -180,20 +408,87 @@ pub fn stage2(b: &SignMat, t: &[f32], rows: usize, f2: usize, out: &mut [f32]) {
                 acc[2] += f32::from_bits(bits ^ sign_mask(b2, j2));
                 acc[3] += f32::from_bits(bits ^ sign_mask(b3, j2));
             }
-            orow[i2..i2 + 4].copy_from_slice(&acc);
-            i2 += 4;
+            out[r * d2 + i2..r * d2 + i2 + 4].copy_from_slice(&acc);
         }
-        // tail rows (d2 not a multiple of 4): single-chain, same order
-        while i2 < d2 {
-            let brow = b.row(i2);
+        i2 += 4;
+    }
+    // tail rows (d2 not a multiple of 4): single-chain, same order
+    stage2_tail(b, t, rows, f2, d2, i2, &mut scratch[..wpr], out);
+}
+
+/// Eight B rows per pass, one SIMD lane each.
+fn stage2_simd_level<P: SignRows + ?Sized>(
+    level: SimdLevel,
+    b: &P,
+    t: &[f32],
+    rows: usize,
+    f2: usize,
+    d2: usize,
+    out: &mut [f32],
+) {
+    let wpr = b.words_per_row();
+    let mut scratch = vec![0u64; 8 * wpr];
+    let mut i2 = 0usize;
+    while i2 + 8 <= d2 {
+        let [c0, c1, c2, c3, c4, c5, c6, c7] = split8(&mut scratch, wpr);
+        let rows8: [&[u64]; 8] = [
+            b.row_into(i2, c0),
+            b.row_into(i2 + 1, c1),
+            b.row_into(i2 + 2, c2),
+            b.row_into(i2 + 3, c3),
+            b.row_into(i2 + 4, c4),
+            b.row_into(i2 + 5, c5),
+            b.row_into(i2 + 6, c6),
+            b.row_into(i2 + 7, c7),
+        ];
+        for r in 0..rows {
+            let trow = &t[r * f2..(r + 1) * f2];
+            let mut acc = [0.0f32; 8];
+            simd::dot8_signed(level, trow, &rows8, &mut acc);
+            out[r * d2 + i2..r * d2 + i2 + 8].copy_from_slice(&acc);
+        }
+        i2 += 8;
+    }
+    // tail rows (d2 not a multiple of 8): single-chain, same order
+    stage2_tail(b, t, rows, f2, d2, i2, &mut scratch[..wpr], out);
+}
+
+/// Shared single-chain tail for B rows `i2..d2`.
+#[allow(clippy::too_many_arguments)]
+fn stage2_tail<P: SignRows + ?Sized>(
+    b: &P,
+    t: &[f32],
+    rows: usize,
+    f2: usize,
+    d2: usize,
+    mut i2: usize,
+    rbuf: &mut [u64],
+    out: &mut [f32],
+) {
+    while i2 < d2 {
+        let brow = b.row_into(i2, &mut *rbuf);
+        for r in 0..rows {
+            let trow = &t[r * f2..(r + 1) * f2];
             let mut acc = 0.0f32;
             for (j2, &tv) in trow.iter().enumerate() {
                 acc += f32::from_bits(tv.to_bits() ^ sign_mask(brow, j2));
             }
-            orow[i2] = acc;
-            i2 += 1;
+            out[r * d2 + i2] = acc;
         }
+        i2 += 1;
     }
+}
+
+/// Split a `8 * w`-word scratch buffer into eight disjoint `w`-word rows.
+fn split8(buf: &mut [u64], w: usize) -> [&mut [u64]; 8] {
+    let (a0, rest) = buf.split_at_mut(w);
+    let (a1, rest) = rest.split_at_mut(w);
+    let (a2, rest) = rest.split_at_mut(w);
+    let (a3, rest) = rest.split_at_mut(w);
+    let (a4, rest) = rest.split_at_mut(w);
+    let (a5, rest) = rest.split_at_mut(w);
+    let (a6, a7) = rest.split_at_mut(w);
+    [a0, a1, a2, a3, a4, a5, a6, a7]
 }
 
 #[cfg(test)]
@@ -323,5 +618,68 @@ mod tests {
         let mut window = vec![0.0f32; 2 * f2];
         stage1(&am, 3, 2, &x, f2, &mut window);
         assert_eq!(&window[..], &full[3 * f2..5 * f2]);
+    }
+
+    #[test]
+    fn seeded_rows_equal_materialized_plane() {
+        let sm = SeededSignMat::new(0xC0FFEE, 9, 130);
+        let stored = sm.materialize();
+        assert_eq!(SignRows::rows(&stored), 9);
+        assert_eq!(SignRows::cols(&stored), 130);
+        let mut buf = vec![0u64; sm.words_per_row()];
+        for r in 0..9 {
+            sm.generate_row(r, &mut buf);
+            assert_eq!(&buf[..], stored.row(r), "row {r}");
+            assert_eq!(sm.row_pm1(r), unpack_pm1(stored.row(r), 130));
+        }
+        assert_eq!(sm.to_pm1(), stored.to_pm1());
+        // tail bits beyond cols stay zero (the word-granular invariant)
+        assert_eq!(buf[sm.words_per_row() - 1] >> (130 % 64), 0);
+        // O(1) resident cost vs the stored plane
+        assert!(sm.bytes() < stored.bytes());
+    }
+
+    #[test]
+    fn derive_stream_separates_adjacent_seeds_and_streams() {
+        assert_ne!(derive_stream(1, 0), derive_stream(0, 1));
+        assert_ne!(derive_stream(5, 2), derive_stream(5, 3));
+        assert_ne!(derive_stream(5, 2), derive_stream(6, 2));
+    }
+
+    #[test]
+    fn prop_stages_with_levels_bit_exact_stored_and_seeded() {
+        // Scalar vs the host's widest level, over stored and rematerialized
+        // planes, on dims that exercise vector bodies and ragged tails.
+        let levels = [SimdLevel::Scalar, simd::detect()];
+        forall(10, 0x51C, |rng| {
+            let f1 = 1 + rng.below(70);
+            let f2 = 1 + rng.below(200);
+            let d1 = 1 + rng.below(6);
+            let d2 = 1 + rng.below(70);
+            let seeded_a = SeededSignMat::new(rng.next_u64(), d1, f1);
+            let seeded_b = SeededSignMat::new(rng.next_u64(), d2, f2);
+            let stored_a = seeded_a.materialize();
+            let stored_b = seeded_b.materialize();
+            let x = gen::normal_vec(rng, f1 * f2, 4.0);
+            let mut t_ref = vec![0.0f32; d1 * f2];
+            stage1_with(SimdLevel::Scalar, &stored_a, 0, d1, &x, f2, &mut t_ref);
+            let mut y_ref = vec![0.0f32; d1 * d2];
+            stage2_with(SimdLevel::Scalar, &stored_b, &t_ref, d1, f2, &mut y_ref);
+            for &lvl in &levels {
+                for seeded in [false, true] {
+                    let mut t = vec![0.0f32; d1 * f2];
+                    let mut y = vec![0.0f32; d1 * d2];
+                    if seeded {
+                        stage1_with(lvl, &seeded_a, 0, d1, &x, f2, &mut t);
+                        stage2_with(lvl, &seeded_b, &t, d1, f2, &mut y);
+                    } else {
+                        stage1_with(lvl, &stored_a, 0, d1, &x, f2, &mut t);
+                        stage2_with(lvl, &stored_b, &t, d1, f2, &mut y);
+                    }
+                    assert_eq!(t, t_ref, "stage1 lvl={lvl:?} seeded={seeded}");
+                    assert_eq!(y, y_ref, "stage2 lvl={lvl:?} seeded={seeded}");
+                }
+            }
+        });
     }
 }

@@ -1,0 +1,536 @@
+//! Runtime-dispatched SIMD kernels for the two HDC hot paths.
+//!
+//! The chip wins its energy numbers by keeping the hot loops trivially
+//! parallel: XOR+popcount Hamming distance over bit-packed hypervectors
+//! (classifier search) and the sign-applied accumulations of the Kronecker
+//! sign-GEMM (encode). This module gives the software reproduction the same
+//! property on commodity CPUs: one feature detection at first use picks the
+//! widest instruction set the machine offers, and every wide kernel is
+//! **bit-identical** to the scalar fallback.
+//!
+//! Why bit-identity is achievable at all:
+//!
+//! * Hamming distances are integer popcount sums — addition over the naturals
+//!   is associative, so any lane order produces the same count.
+//! * The sign-GEMM never multiplies: applying a ±1 weight is an IEEE sign-bit
+//!   XOR (exact), and the SIMD layouts vectorize *across independent
+//!   accumulation chains* (stage1: output columns; stage2: output rows), never
+//!   *within* one chain. Each scalar f32 accumulator therefore sees exactly
+//!   the same additions in exactly the same order as the scalar kernel.
+//!
+//! Dispatch is resolved once per process from [`detect`] plus the
+//! [`SIMD_ENV`] (`CLO_HDNN_SIMD`) override, threaded exactly like
+//! `CLO_HDNN_THREADS`:
+//!
+//! * unset / `auto` / empty — use the widest detected level;
+//! * `off` / `scalar` — force the scalar reference kernels;
+//! * `avx2`, `avx512`, `neon` — force a named level; if the CPU lacks it,
+//!   warn on stderr and fall back to the detected level.
+//!
+//! The `unsafe` boundary is confined to this module: every `#[target_feature]`
+//! kernel is only reachable through a dispatcher that re-checks availability,
+//! so calling the safe entry points is sound on any CPU.
+
+use std::sync::OnceLock;
+
+/// Environment variable overriding kernel dispatch (`off|scalar|auto|avx2|avx512|neon`).
+pub const SIMD_ENV: &str = "CLO_HDNN_SIMD";
+
+/// An instruction-set level the hot-path kernels can dispatch to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar reference kernels (always available, the bit-identity oracle).
+    Scalar,
+    /// x86_64 AVX2: 256-bit XOR + nibble-LUT popcount, 8-lane f32 sign-apply.
+    Avx2,
+    /// x86_64 AVX-512F + VPOPCNTDQ: 512-bit XOR + hardware 64-bit popcount.
+    Avx512,
+    /// aarch64 NEON: 128-bit XOR + `vcnt` byte popcount, 4-lane f32 sign-apply.
+    Neon,
+}
+
+impl SimdLevel {
+    /// Stable lowercase name, as reported in BENCH_*.json (`"kernel": "avx2"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Avx512 => "avx512",
+            SimdLevel::Neon => "neon",
+        }
+    }
+}
+
+/// Can `level`'s kernels run on a machine whose detected best level is
+/// `detected`? (AVX-512 machines can run the AVX2 kernels; nothing runs a
+/// foreign architecture's kernels.)
+fn is_available(level: SimdLevel, detected: SimdLevel) -> bool {
+    matches!(
+        (level, detected),
+        (SimdLevel::Scalar, _)
+            | (SimdLevel::Avx2, SimdLevel::Avx2 | SimdLevel::Avx512)
+            | (SimdLevel::Avx512, SimdLevel::Avx512)
+            | (SimdLevel::Neon, SimdLevel::Neon)
+    )
+}
+
+/// Detect the widest level this CPU supports. AVX-512 is only claimed when
+/// both `avx512f` and `avx512vpopcntdq` are present (the Hamming kernel needs
+/// the hardware popcount); aarch64 baselines NEON.
+#[allow(unreachable_code)]
+pub fn detect() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512vpopcntdq") {
+            return SimdLevel::Avx512;
+        }
+        if is_x86_feature_detected!("avx2") {
+            return SimdLevel::Avx2;
+        }
+        return SimdLevel::Scalar;
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return SimdLevel::Neon;
+    }
+    SimdLevel::Scalar
+}
+
+/// Resolve an override string against a detected level. Pure (no environment
+/// reads) so the spelling table is unit-testable; warnings go to stderr, the
+/// return value is always a level that [`is_available`] approves.
+pub fn resolve(value: Option<&str>, detected: SimdLevel) -> SimdLevel {
+    let spelled = match value {
+        None => return detected,
+        Some(v) => v.trim().to_ascii_lowercase(),
+    };
+    let forced = match spelled.as_str() {
+        "" | "auto" => return detected,
+        "off" | "scalar" | "none" => return SimdLevel::Scalar,
+        "avx2" => SimdLevel::Avx2,
+        "avx512" | "avx-512" => SimdLevel::Avx512,
+        "neon" => SimdLevel::Neon,
+        other => {
+            eprintln!(
+                "clo_hdnn: unrecognized {SIMD_ENV}='{other}' (want off|scalar|auto|avx2|avx512|neon); using detected '{}'",
+                detected.name()
+            );
+            return detected;
+        }
+    };
+    if is_available(forced, detected) {
+        forced
+    } else {
+        eprintln!(
+            "clo_hdnn: {SIMD_ENV}='{}' not supported on this CPU (detected '{}'); using detected level",
+            forced.name(),
+            detected.name()
+        );
+        detected
+    }
+}
+
+/// The process-wide dispatched level: `detect()` filtered through the
+/// [`SIMD_ENV`] override, resolved once and cached.
+pub fn active() -> SimdLevel {
+    static ACTIVE: OnceLock<SimdLevel> = OnceLock::new();
+    *ACTIVE.get_or_init(|| resolve(std::env::var(SIMD_ENV).ok().as_deref(), detect()))
+}
+
+// ---------------------------------------------------------------------------
+// Kernel 1: XOR + popcount over packed u64 words (Hamming distance).
+// ---------------------------------------------------------------------------
+
+/// Popcount of `a XOR b` over equal-length packed words. Integer sum, so the
+/// result is identical at every level by associativity.
+pub fn xor_popcount(level: SimdLevel, a: &[u64], b: &[u64]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if level == SimdLevel::Avx512 && avx512_ok() {
+            return unsafe { xor_popcount_avx512(a, b) };
+        }
+        if level != SimdLevel::Scalar && is_x86_feature_detected!("avx2") {
+            return unsafe { xor_popcount_avx2(a, b) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if level == SimdLevel::Neon {
+            return unsafe { xor_popcount_neon(a, b) };
+        }
+    }
+    let _ = level;
+    xor_popcount_scalar(a, b)
+}
+
+/// Both AVX-512 features the Hamming kernel needs are present.
+#[cfg(target_arch = "x86_64")]
+fn avx512_ok() -> bool {
+    is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512vpopcntdq")
+}
+
+fn xor_popcount_scalar(a: &[u64], b: &[u64]) -> u64 {
+    a.iter().zip(b).map(|(&x, &y)| (x ^ y).count_ones() as u64).sum()
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn xor_popcount_avx2(a: &[u64], b: &[u64]) -> u64 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    // Mula's nibble-LUT popcount: per-byte counts via two shuffles, then
+    // horizontal byte sums into the four u64 lanes with SAD against zero.
+    #[rustfmt::skip]
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+        let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+        let x = _mm256_xor_si256(va, vb);
+        let lo = _mm256_and_si256(x, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(x), low_mask);
+        let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, _mm256_setzero_si256()));
+        i += 4;
+    }
+    let mut lanes = [0u64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    let mut total = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+    while i < n {
+        total += (a[i] ^ b[i]).count_ones() as u64;
+        i += 1;
+    }
+    total
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vpopcntdq")]
+unsafe fn xor_popcount_avx512(a: &[u64], b: &[u64]) -> u64 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let mut acc = _mm512_setzero_si512();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let va = _mm512_loadu_si512(a.as_ptr().add(i) as *const _);
+        let vb = _mm512_loadu_si512(b.as_ptr().add(i) as *const _);
+        acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(_mm512_xor_si512(va, vb)));
+        i += 8;
+    }
+    let mut lanes = [0u64; 8];
+    _mm512_storeu_si512(lanes.as_mut_ptr() as *mut _, acc);
+    let mut total: u64 = lanes.iter().sum();
+    while i < n {
+        total += (a[i] ^ b[i]).count_ones() as u64;
+        i += 1;
+    }
+    total
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn xor_popcount_neon(a: &[u64], b: &[u64]) -> u64 {
+    use std::arch::aarch64::*;
+    let n = a.len();
+    let mut total: u64 = 0;
+    let mut i = 0usize;
+    while i + 2 <= n {
+        let va = vld1q_u64(a.as_ptr().add(i));
+        let vb = vld1q_u64(b.as_ptr().add(i));
+        let cnt = vcntq_u8(vreinterpretq_u8_u64(veorq_u64(va, vb)));
+        total += vaddlvq_u8(cnt) as u64;
+        i += 2;
+    }
+    while i < n {
+        total += (a[i] ^ b[i]).count_ones() as u64;
+        i += 1;
+    }
+    total
+}
+
+// ---------------------------------------------------------------------------
+// Kernel 2: sign-applied accumulate, dst[i] += ±src[i] (sign-GEMM stage1).
+// ---------------------------------------------------------------------------
+
+/// `dst[i] += sign_apply(src[i])` where the sign is `mask` (0 keeps the value,
+/// `1 << 31` flips it). Lanes are independent accumulation chains, and sign
+/// application is an exact IEEE sign-bit XOR, so every level is bit-identical.
+pub fn add_signed(level: SimdLevel, dst: &mut [f32], src: &[f32], mask: u32) {
+    debug_assert_eq!(dst.len(), src.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if level == SimdLevel::Avx512 && is_x86_feature_detected!("avx512f") {
+            return unsafe { add_signed_avx512(dst, src, mask) };
+        }
+        if level != SimdLevel::Scalar && is_x86_feature_detected!("avx2") {
+            return unsafe { add_signed_avx2(dst, src, mask) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if level == SimdLevel::Neon {
+            return unsafe { add_signed_neon(dst, src, mask) };
+        }
+    }
+    let _ = level;
+    add_signed_scalar(dst, src, mask)
+}
+
+fn add_signed_scalar(dst: &mut [f32], src: &[f32], mask: u32) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += f32::from_bits(s.to_bits() ^ mask);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn add_signed_avx2(dst: &mut [f32], src: &[f32], mask: u32) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let vm = _mm256_castsi256_ps(_mm256_set1_epi32(mask as i32));
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let vs = _mm256_loadu_ps(src.as_ptr().add(i));
+        let vd = _mm256_loadu_ps(dst.as_ptr().add(i));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(vd, _mm256_xor_ps(vs, vm)));
+        i += 8;
+    }
+    add_signed_scalar(&mut dst[i..], &src[i..], mask);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn add_signed_avx512(dst: &mut [f32], src: &[f32], mask: u32) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let vm = _mm512_castsi512_ps(_mm512_set1_epi32(mask as i32));
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let vs = _mm512_loadu_ps(src.as_ptr().add(i));
+        let vd = _mm512_loadu_ps(dst.as_ptr().add(i));
+        _mm512_storeu_ps(dst.as_mut_ptr().add(i), _mm512_add_ps(vd, _mm512_xor_ps(vs, vm)));
+        i += 16;
+    }
+    add_signed_scalar(&mut dst[i..], &src[i..], mask);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn add_signed_neon(dst: &mut [f32], src: &[f32], mask: u32) {
+    use std::arch::aarch64::*;
+    let n = dst.len();
+    let vm = vdupq_n_u32(mask);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let vs = vld1q_f32(src.as_ptr().add(i));
+        let vd = vld1q_f32(dst.as_ptr().add(i));
+        let signed = vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(vs), vm));
+        vst1q_f32(dst.as_mut_ptr().add(i), vaddq_f32(vd, signed));
+        i += 4;
+    }
+    add_signed_scalar(&mut dst[i..], &src[i..], mask);
+}
+
+// ---------------------------------------------------------------------------
+// Kernel 3: eight sign-dot-products sharing one dense row (stage2 block).
+// ---------------------------------------------------------------------------
+
+/// For eight packed ±1 rows, accumulate `acc[k] += Σ_j ±trow[j]` with the sign
+/// taken from bit `j` of `rows[k]` (bit set ⇔ +1). Each `acc[k]` is one
+/// scalar accumulation chain over `j` ascending — the SIMD layouts vectorize
+/// across `k`, so every lane replays the scalar chain exactly.
+pub fn dot8_signed(level: SimdLevel, trow: &[f32], rows: &[&[u64]; 8], acc: &mut [f32; 8]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        // 8 lanes is a natural AVX2 shape; the AVX-512 level reuses it
+        // (256-bit ops avoid frequency downclocking on short stage2 rows).
+        if level != SimdLevel::Scalar && is_x86_feature_detected!("avx2") {
+            return unsafe { dot8_signed_avx2(trow, rows, acc) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if level == SimdLevel::Neon {
+            return unsafe { dot8_signed_neon(trow, rows, acc) };
+        }
+    }
+    let _ = level;
+    dot8_signed_scalar(trow, rows, acc)
+}
+
+/// Sign mask for element `j` of a packed ±1 row: `0` when the bit is set
+/// (+1), `1 << 31` when clear (-1). Mirrors `signmat::sign_mask`.
+#[inline(always)]
+fn row_sign_mask(row: &[u64], j: usize) -> u32 {
+    ((((row[j / 64] >> (j % 64)) & 1) as u32) ^ 1) << 31
+}
+
+fn dot8_signed_scalar(trow: &[f32], rows: &[&[u64]; 8], acc: &mut [f32; 8]) {
+    for (j, &tv) in trow.iter().enumerate() {
+        let bits = tv.to_bits();
+        for (k, row) in rows.iter().enumerate() {
+            acc[k] += f32::from_bits(bits ^ row_sign_mask(row, j));
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot8_signed_avx2(trow: &[f32], rows: &[&[u64]; 8], acc: &mut [f32; 8]) {
+    use std::arch::x86_64::*;
+    let mut vacc = _mm256_loadu_ps(acc.as_ptr());
+    let mut masks = [0u32; 8];
+    for (j, &tv) in trow.iter().enumerate() {
+        for (k, row) in rows.iter().enumerate() {
+            masks[k] = row_sign_mask(row, j);
+        }
+        let vm = _mm256_loadu_si256(masks.as_ptr() as *const __m256i);
+        let signed = _mm256_xor_ps(_mm256_castsi256_ps(vm), _mm256_set1_ps(tv));
+        vacc = _mm256_add_ps(vacc, signed);
+    }
+    _mm256_storeu_ps(acc.as_mut_ptr(), vacc);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot8_signed_neon(trow: &[f32], rows: &[&[u64]; 8], acc: &mut [f32; 8]) {
+    use std::arch::aarch64::*;
+    let mut lo = vld1q_f32(acc.as_ptr());
+    let mut hi = vld1q_f32(acc.as_ptr().add(4));
+    let mut masks = [0u32; 8];
+    for (j, &tv) in trow.iter().enumerate() {
+        for (k, row) in rows.iter().enumerate() {
+            masks[k] = row_sign_mask(row, j);
+        }
+        let vt = vdupq_n_f32(tv);
+        let tb = vreinterpretq_u32_f32(vt);
+        let slo = vreinterpretq_f32_u32(veorq_u32(tb, vld1q_u32(masks.as_ptr())));
+        let shi = vreinterpretq_f32_u32(veorq_u32(tb, vld1q_u32(masks.as_ptr().add(4))));
+        lo = vaddq_f32(lo, slo);
+        hi = vaddq_f32(hi, shi);
+    }
+    vst1q_f32(acc.as_mut_ptr(), lo);
+    vst1q_f32(acc.as_mut_ptr().add(4), hi);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn resolve_spellings() {
+        let d = SimdLevel::Avx512;
+        assert_eq!(resolve(None, d), d);
+        assert_eq!(resolve(Some(""), d), d);
+        assert_eq!(resolve(Some("auto"), d), d);
+        assert_eq!(resolve(Some(" AUTO "), d), d);
+        assert_eq!(resolve(Some("off"), d), SimdLevel::Scalar);
+        assert_eq!(resolve(Some("scalar"), d), SimdLevel::Scalar);
+        assert_eq!(resolve(Some("none"), d), SimdLevel::Scalar);
+        assert_eq!(resolve(Some("avx2"), d), SimdLevel::Avx2);
+        assert_eq!(resolve(Some("AVX512"), d), SimdLevel::Avx512);
+        assert_eq!(resolve(Some("avx-512"), d), SimdLevel::Avx512);
+        // a forced level the CPU lacks falls back to detected, with a warning
+        assert_eq!(resolve(Some("neon"), d), d);
+        assert_eq!(resolve(Some("avx512"), SimdLevel::Avx2), SimdLevel::Avx2);
+        assert_eq!(resolve(Some("avx2"), SimdLevel::Neon), SimdLevel::Neon);
+        // unknown spellings keep the detected level
+        assert_eq!(resolve(Some("sse9"), d), d);
+        // forcing scalar is always honored
+        assert_eq!(resolve(Some("off"), SimdLevel::Scalar), SimdLevel::Scalar);
+    }
+
+    #[test]
+    fn availability_lattice() {
+        use SimdLevel::*;
+        for d in [Scalar, Avx2, Avx512, Neon] {
+            assert!(is_available(Scalar, d));
+        }
+        assert!(is_available(Avx2, Avx512));
+        assert!(!is_available(Avx512, Avx2));
+        assert!(!is_available(Neon, Avx512));
+        assert!(!is_available(Avx2, Neon));
+    }
+
+    /// Every level the host actually supports must agree with scalar, bit for
+    /// bit, across ragged lengths that exercise both vector body and tail.
+    fn host_levels() -> Vec<SimdLevel> {
+        vec![SimdLevel::Scalar, detect()]
+    }
+
+    #[test]
+    fn xor_popcount_matches_scalar_on_host() {
+        let mut rng = Rng::new(0x51AD);
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 33, 64, 129] {
+            let a: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let want = xor_popcount_scalar(&a, &b);
+            for lvl in host_levels() {
+                assert_eq!(xor_popcount(lvl, &a, &b), want, "level {:?} n {}", lvl, n);
+            }
+        }
+    }
+
+    #[test]
+    fn add_signed_matches_scalar_on_host() {
+        let mut rng = Rng::new(0xADD5);
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 32, 100] {
+            let src: Vec<f32> = (0..n).map(|_| rng.uniform() as f32 - 0.5).collect();
+            let base: Vec<f32> = (0..n).map(|_| rng.uniform() as f32).collect();
+            for mask in [0u32, 1 << 31] {
+                let mut want = base.clone();
+                add_signed_scalar(&mut want, &src, mask);
+                for lvl in host_levels() {
+                    let mut got = base.clone();
+                    add_signed(lvl, &mut got, &src, mask);
+                    assert_eq!(
+                        got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "level {:?} n {} mask {:#x}",
+                        lvl,
+                        n,
+                        mask
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot8_signed_matches_scalar_on_host() {
+        let mut rng = Rng::new(0xD078);
+        for cols in [1usize, 5, 31, 64, 65, 200] {
+            let words = cols.div_ceil(64);
+            let planes: Vec<Vec<u64>> =
+                (0..8).map(|_| (0..words).map(|_| rng.next_u64()).collect()).collect();
+            let rows: [&[u64]; 8] = std::array::from_fn(|k| planes[k].as_slice());
+            let trow: Vec<f32> = (0..cols).map(|_| rng.uniform() as f32 - 0.5).collect();
+            let base = [0.1f32, -0.2, 0.3, 0.0, 1.5, -2.5, 0.25, 4.0];
+            let mut want = base;
+            dot8_signed_scalar(&trow, &rows, &mut want);
+            for lvl in host_levels() {
+                let mut got = base;
+                dot8_signed(lvl, &trow, &rows, &mut got);
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "level {:?} cols {}",
+                    lvl,
+                    cols
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn active_is_available_on_host() {
+        assert!(is_available(active(), detect()));
+        assert!(!active().name().is_empty());
+    }
+}

@@ -52,6 +52,7 @@ const BOOL_FLAGS: &[&str] = &[
     "no-restore",
     "allow-remote-snapshot-paths",
     "snapshot-default",
+    "remat",
 ];
 
 fn run() -> Result<()> {
@@ -83,6 +84,10 @@ const HELP: &str = "clo-hdnn <info|infer|cl-run|sim|serve|loadgen|bench|asm> [fl
                       (default 0 = auto: CLO_HDNN_THREADS if set, else all cores)
   --encode <kernel>   encode kernel on infer|cl-run|bench: signgemm (fast
                       default) or scalar (branchy reference; both bit-exact)
+  --remat             regenerate seeded factor planes from their seed on the
+                      fly instead of storing them (O(1) resident factor
+                      memory per model; bit-identical results; ignored when
+                      artifact factors exist)
   --tau <f>           progressive-search confidence (default 0.5)
   --min-seg <n>       minimum segments before early exit (default 1)
   --samples <n>       evaluation sample cap
@@ -135,6 +140,10 @@ bench flags: --config tiny|isolet|ucihar|all, --quick (small sweep),
   --taus a,b,c (progressive sweep points),
   --encoder-out <file> (default BENCH_encoder.json: scalar vs sign-GEMM vs
   sign-GEMM+pool encode throughput over growing row counts)
+
+Env: CLO_HDNN_THREADS caps worker threads (same as --threads);
+  CLO_HDNN_SIMD=off|avx2|avx512|neon overrides the runtime-dispatched SIMD
+  kernel level (default auto-detect; every level is bit-identical to scalar)
 
 With no artifacts present, commands fall back to built-in synthetic configs
 and deterministic blob datasets — no Python toolchain required.";
@@ -220,7 +229,11 @@ fn native_backend(
             return Ok(backend);
         }
     }
-    let mut backend = NativeBackend::seeded(cfg.clone(), 7, 8)?;
+    let mut backend = if args.flag("remat") {
+        NativeBackend::seeded_remat(cfg.clone(), 7, 8)?
+    } else {
+        NativeBackend::seeded(cfg.clone(), 7, 8)?
+    };
     backend.set_threads(threads);
     backend.set_encode_kernel(kernel);
     // Seeded factors come with the config's default scale_q; recalibrate on
@@ -634,6 +647,9 @@ fn serve_coordinator_opts(
         "native" if has_factors => {
             BackendSpec::NativeArtifacts { artifacts: dir, config: cfg_name.to_string() }
         }
+        "native" if args.flag("remat") => {
+            BackendSpec::NativeRemat { cfg: cfg.clone(), seed: 7 }
+        }
         "native" => BackendSpec::Native { cfg: cfg.clone(), seed: 7 },
         #[cfg(feature = "pjrt")]
         "pjrt" => BackendSpec::Pjrt { artifacts: dir, config: cfg_name.to_string() },
@@ -707,6 +723,9 @@ fn listen_model_spec(
             artifacts: dir.clone(),
             config: cfg_name.clone(),
         },
+        "native" if args.flag("remat") => {
+            BackendSpec::NativeRemat { cfg: cfg.clone(), seed: 7 }
+        }
         "native" => BackendSpec::Native { cfg: cfg.clone(), seed: 7 },
         #[cfg(feature = "pjrt")]
         "pjrt" => BackendSpec::Pjrt { artifacts: dir.clone(), config: cfg_name.clone() },
@@ -1146,6 +1165,28 @@ fn loadgen_scale_point(
 /// `clo_hdnn loadgen`: drive a live TCP server with N concurrent client
 /// threads mixing Infer and Learn traffic over deterministic synthetic
 /// workloads, then report throughput + latency percentiles (per model when
+/// Accuracy for report tables: `n/a` when the run produced no inferences
+/// (e.g. an all-learn mix) instead of formatting the NaN that 0/0 yields.
+fn accuracy_cell(correct: usize, infers: usize) -> String {
+    if infers == 0 {
+        "n/a".to_string()
+    } else {
+        format!("{:.4}", correct as f64 / infers as f64)
+    }
+}
+
+/// Accuracy for `BENCH_serve.json`: explicit `null` when no inferences
+/// ran, so downstream tooling sees a typed absent value rather than a NaN
+/// the JSON writer has to degrade silently.
+fn accuracy_json(correct: usize, infers: usize) -> clo_hdnn::util::json::Json {
+    use clo_hdnn::util::json::Json;
+    if infers == 0 {
+        Json::Null
+    } else {
+        Json::Num(correct as f64 / infers as f64)
+    }
+}
+
 /// driving several) and write `BENCH_serve.json` (version 3, with
 /// per-connection error/timeout attribution). `--models a,b` targets a
 /// model mix over wire v2, `--pipeline k` keeps k requests in flight per
@@ -1316,7 +1357,6 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         infers += *n;
     }
     metrics.wall_s = wall_s;
-    let accuracy = if infers > 0 { correct as f64 / infers as f64 } else { f64::NAN };
 
     let lat = metrics.latency_summary();
     let mut table = Table::new(&["metric", "value"]);
@@ -1324,7 +1364,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     table.row(&["learns".into(), format!("{}", metrics.learns)]);
     table.row(&["errors".into(), format!("{}", metrics.errors)]);
     table.row(&["timeouts".into(), format!("{}", metrics.timeouts)]);
-    table.row(&["accuracy".into(), format!("{accuracy:.4}")]);
+    table.row(&["accuracy".into(), accuracy_cell(correct, infers)]);
     table.row(&["throughput".into(), format!("{:.1} req/s", metrics.throughput_rps())]);
     table.row(&["p50".into(), fmt_secs(lat.p50_s)]);
     table.row(&["p95".into(), fmt_secs(lat.p95_s)]);
@@ -1334,13 +1374,12 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         let mut mt = Table::new(&["model", "requests", "learns", "errors", "acc", "p50", "p95", "p99"]);
         for (w, (m, c, n)) in works.iter().zip(&by_model) {
             let s = m.latency_summary();
-            let acc = if *n > 0 { *c as f64 / *n as f64 } else { f64::NAN };
             mt.row(&[
                 w.label.clone(),
                 format!("{}", m.total),
                 format!("{}", m.learns),
                 format!("{}", m.errors),
-                format!("{acc:.4}"),
+                accuracy_cell(*c, *n),
                 fmt_secs(s.p50_s),
                 fmt_secs(s.p95_s),
                 fmt_secs(s.p99_s),
@@ -1420,7 +1459,6 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         total_classes += st.trained_classes as u64;
         total_snapshots += st.snapshots;
         let s = m.latency_summary();
-        let acc = if *n > 0 { *c as f64 / *n as f64 } else { f64::NAN };
         models_json.insert(
             w.label.clone(),
             Json::obj(vec![
@@ -1428,7 +1466,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 ("learns", Json::Num(m.learns as f64)),
                 ("infers", Json::Num(*n as f64)),
                 ("errors", Json::Num(m.errors as f64)),
-                ("accuracy", Json::Num(acc)),
+                ("accuracy", accuracy_json(*c, *n)),
                 (
                     "latency",
                     Json::obj(vec![
@@ -1476,7 +1514,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         ("infers", Json::Num(infers as f64)),
         ("errors", Json::Num(metrics.errors as f64)),
         ("timeouts", Json::Num(metrics.timeouts as f64)),
-        ("accuracy", Json::Num(accuracy)),
+        ("accuracy", accuracy_json(correct, infers)),
         ("wall_s", Json::Num(wall_s)),
         ("throughput_rps", Json::Num(metrics.throughput_rps())),
         (
@@ -1563,6 +1601,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .map(|t| t.trim().parse::<f32>().map_err(|_| anyhow::anyhow!("bad tau '{t}'")))
         .collect::<Result<_>>()?;
 
+    // which SIMD level the dispatcher actually selected for this run — the
+    // bench gate compares like against like by keying baselines on it
+    let kernel = clo_hdnn::hdc::simd::active().name();
+
     let mut reports: BTreeMap<String, Json> = BTreeMap::new();
     for name in &names {
         reports.insert(name.clone(), bench_config(name, &bench, &taus, quick, args)?);
@@ -1570,6 +1612,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let doc = Json::obj(vec![
         ("version", Json::Num(1.0)),
         ("quick", Json::Bool(quick)),
+        ("kernel", Json::Str(kernel.to_string())),
         ("warmup", Json::Num(bench.warmup as f64)),
         ("iters", Json::Num(bench.iters as f64)),
         ("configs", Json::Obj(reports)),
@@ -1587,6 +1630,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let enc_doc = Json::obj(vec![
         ("version", Json::Num(1.0)),
         ("quick", Json::Bool(quick)),
+        ("kernel", Json::Str(kernel.to_string())),
         ("warmup", Json::Num(bench.warmup as f64)),
         ("iters", Json::Num(bench.iters as f64)),
         ("configs", Json::Obj(enc_reports)),

@@ -50,6 +50,26 @@ impl NativeBackend {
         NativeBackend::new(SoftwareEncoder::random(cfg, seed), max_batch)
     }
 
+    /// Like [`NativeBackend::seeded`], but holding the factors as
+    /// **rematerialized** seed-derived planes: only the plane seeds stay
+    /// resident and the sign-GEMM kernels regenerate rows on the fly, so a
+    /// registry of many large-D models scales with models × classes instead
+    /// of models × D × F. Encodes are bit-identical to a backend built on
+    /// [`SoftwareEncoder::random_remat_materialized`] with the same seed.
+    pub fn seeded_remat(cfg: HdConfig, seed: u64, max_batch: usize) -> Result<NativeBackend> {
+        NativeBackend::new(SoftwareEncoder::random_remat(cfg, seed), max_batch)
+    }
+
+    /// Whether the encoder's factor planes are rematerialized.
+    pub fn is_remat(&self) -> bool {
+        self.inner.is_remat()
+    }
+
+    /// Resident factor memory in bytes (O(1) for rematerialized planes).
+    pub fn factor_bytes(&self) -> usize {
+        self.inner.factor_bytes()
+    }
+
     /// Load the production factors referenced by an already-open manifest.
     pub fn from_manifest(
         manifest: &Manifest,

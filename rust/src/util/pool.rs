@@ -53,13 +53,22 @@ fn resolve(threads: usize) -> usize {
     }
 }
 
-/// Parse an explicit `CLO_HDNN_THREADS`-style value (pure, testable):
-/// empty/invalid strings fall back to `default`; `0` resolves like
-/// [`WorkerPool::new`]'s auto spelling.
+/// Parse an explicit `CLO_HDNN_THREADS`-style value (pure, testable).
+/// Unset or whitespace-only values fall back to `default`; `0` resolves
+/// like [`WorkerPool::new`]'s auto spelling. A non-empty value that is not
+/// a thread count (junk, negative, overflow) warns once on stderr and
+/// resolves to all cores — deterministically, instead of silently adopting
+/// whatever `default` the call site happened to pass.
 pub fn parse_threads(value: Option<&str>, default: usize) -> usize {
-    match value.and_then(|v| v.trim().parse::<usize>().ok()) {
-        Some(n) => resolve(n),
-        None => resolve(default),
+    match value.map(str::trim) {
+        None | Some("") => resolve(default),
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => resolve(n),
+            Err(_) => {
+                eprintln!("warning: {THREADS_ENV}='{v}' is not a thread count; using all cores");
+                WorkerPool::available()
+            }
+        },
     }
 }
 
@@ -178,7 +187,15 @@ mod tests {
         assert_eq!(parse_threads(Some("4"), 1), 4);
         assert_eq!(parse_threads(Some(" 2 "), 1), 2);
         assert_eq!(parse_threads(None, 3), 3);
-        assert_eq!(parse_threads(Some("nope"), 3), 3);
+        // whitespace-only behaves exactly like unset: take the default
+        assert_eq!(parse_threads(Some(""), 3), 3);
+        assert_eq!(parse_threads(Some("   "), 3), 3);
+        // junk, negatives and overflow warn and resolve to all cores — the
+        // same value no matter which default the call site passed
+        let cores = WorkerPool::available();
+        assert_eq!(parse_threads(Some("nope"), 3), cores);
+        assert_eq!(parse_threads(Some("-2"), 1), cores);
+        assert_eq!(parse_threads(Some("99999999999999999999999999"), 3), cores);
         // "0" and a default of 0 both mean all cores
         assert!(parse_threads(Some("0"), 1) >= 1);
         assert!(parse_threads(None, 0) >= 1);
@@ -245,6 +262,23 @@ mod tests {
             let want: Vec<usize> = (0..11).map(|i| i * i).collect();
             assert_eq!(covered, want, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn fan_out_clamps_to_work_size() {
+        // more threads than rows: one shard per row, never an empty shard
+        let pool = WorkerPool::new(8);
+        let calls = AtomicUsize::new(0);
+        let mut data = vec![0u8; 3];
+        pool.run_rows(&mut data, 1, |_, block| {
+            assert_eq!(block.len(), 1);
+            calls.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 3, "shards clamp to row count");
+        // and run_blocks clamps to the range length the same way
+        let blocks = pool.run_blocks(2, |start, len| (start, len));
+        assert_eq!(blocks.len(), 2);
+        assert!(blocks.iter().all(|&(_, len, _)| len == 1));
     }
 
     #[test]

@@ -20,13 +20,27 @@ pub struct Summary {
 }
 
 impl Summary {
-    pub fn from_secs(mut xs: Vec<f64>) -> Summary {
-        assert!(!xs.is_empty());
+    /// Panicking variant of [`Summary::try_from_secs`] for callers that
+    /// guarantee at least one sample (the bench runner always does).
+    pub fn from_secs(xs: Vec<f64>) -> Summary {
+        Summary::try_from_secs(xs).expect("Summary::from_secs on empty sample set")
+    }
+
+    /// Summarize per-iteration durations; `None` when there are no samples.
+    ///
+    /// Empty inputs are a real condition (e.g. a loadgen run whose request
+    /// mix produced zero operations of some kind) — callers that would
+    /// otherwise serialize NaN into a report must branch on the `None` and
+    /// make the empty case explicit instead.
+    pub fn try_from_secs(mut xs: Vec<f64>) -> Option<Summary> {
+        if xs.is_empty() {
+            return None;
+        }
         xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
-        Summary {
+        Some(Summary {
             n,
             mean,
             median: percentile_sorted(&xs, 50.0),
@@ -34,22 +48,30 @@ impl Summary {
             min: xs[0],
             max: xs[n - 1],
             stddev: var.sqrt(),
-        }
+        })
     }
 }
 
-/// Percentile over a pre-sorted slice (linear interpolation).
+/// Percentile over a pre-sorted slice (linear interpolation). Panics on an
+/// empty slice; use [`try_percentile_sorted`] when emptiness is reachable.
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
-    assert!(!sorted.is_empty());
+    try_percentile_sorted(sorted, p).expect("percentile_sorted on empty slice")
+}
+
+/// Percentile over a pre-sorted slice; `None` on an empty slice.
+pub fn try_percentile_sorted(sorted: &[f64], p: f64) -> Option<f64> {
+    if sorted.is_empty() {
+        return None;
+    }
     let rank = (p / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
-    if lo == hi {
+    Some(if lo == hi {
         sorted[lo]
     } else {
         let w = rank - lo as f64;
         sorted[lo] * (1.0 - w) + sorted[hi] * w
-    }
+    })
 }
 
 /// Micro-benchmark runner.
@@ -169,6 +191,25 @@ mod tests {
         assert!((percentile_sorted(&xs, 50.0) - 5.0).abs() < 1e-12);
         assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
         assert_eq!(percentile_sorted(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn empty_inputs_are_explicit_not_nan() {
+        // The panicking entry points stay panicking (their contract), while
+        // the try_ variants return None so report writers can never leak a
+        // NaN row into a JSON document.
+        assert!(Summary::try_from_secs(vec![]).is_none());
+        assert!(try_percentile_sorted(&[], 50.0).is_none());
+        let s = Summary::try_from_secs(vec![2.0]).unwrap();
+        assert_eq!(s.n, 1);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(try_percentile_sorted(&[1.0, 3.0], 50.0), Some(2.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn from_secs_empty_panics_with_message() {
+        let _ = Summary::from_secs(vec![]);
     }
 
     #[test]

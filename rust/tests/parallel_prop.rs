@@ -7,6 +7,8 @@
 use clo_hdnn::config::HdConfig;
 use clo_hdnn::hdc::encoder::SoftwareEncoder;
 use clo_hdnn::hdc::quantize::quantize_features;
+use clo_hdnn::hdc::signmat::{self, SeededSignMat, SignMat};
+use clo_hdnn::hdc::simd::{self, SimdLevel};
 use clo_hdnn::hdc::{best_two, packed, ChvStore, HdBackend, ProgressiveSearch, SearchMode};
 use clo_hdnn::runtime::NativeBackend;
 use clo_hdnn::util::pool::WorkerPool;
@@ -127,6 +129,156 @@ fn threaded_batch_encode_through_backend_matches_per_sample_software_encode() {
             .encode_full(&xs[n * cfg.features()..(n + 1) * cfg.features()], 1)
             .unwrap();
         assert_eq!(&got[n * cfg.dim()..(n + 1) * cfg.dim()], &want[..], "row {n}");
+    }
+}
+
+#[test]
+fn prop_forced_simd_levels_bit_match_scalar_hamming() {
+    // The host's detected SIMD level vs forced scalar, through the
+    // explicit-level seams: word counts off the 4/8-word SIMD strides,
+    // non-64-multiple bit tails, empty batches, and the pool-sharded
+    // composition. Distances are integer popcounts scaled by 2, so every
+    // level must agree exactly (on a scalar-only host this degenerates to
+    // scalar vs scalar, and the CI SIMD matrix still covers dispatch).
+    let detected = simd::detect();
+    forall(12, 0xB01, |rng| {
+        let classes = 1 + rng.below(20);
+        let len = 1 + rng.below(520); // 1..9 words incl. partial tail bits
+        let batch = rng.below(4); // 0 is a legal (empty) batch
+        let mut chvs_f = Vec::with_capacity(classes * len);
+        for _ in 0..classes {
+            chvs_f.extend(gen::pm1_vec(rng, len));
+        }
+        let chvs = packed::pack_rows(&chvs_f, classes, len).unwrap();
+        let mut qs = Vec::new();
+        for _ in 0..batch {
+            qs.extend(packed::pack_signs(&gen::pm1_vec(rng, len)));
+        }
+        let want =
+            packed::hamming_search_with(SimdLevel::Scalar, &qs, batch, &chvs, classes, len)
+                .unwrap();
+        let got = packed::hamming_search_with(detected, &qs, batch, &chvs, classes, len).unwrap();
+        assert_eq!(want, got, "level={detected:?} len={len} classes={classes}");
+        if batch > 0 {
+            // the word-granular kernel (the segment-partial distance arm
+            // accumulates through it) agrees on every prefix length too
+            let w = packed::words_for(len);
+            for words in [1usize, w / 2, w] {
+                let words = words.max(1);
+                assert_eq!(
+                    packed::hamming_words_with(SimdLevel::Scalar, &qs[..words], &chvs[..words]),
+                    packed::hamming_words_with(detected, &qs[..words], &chvs[..words]),
+                    "words={words}"
+                );
+            }
+        }
+        let pool = WorkerPool::new(3);
+        let pooled =
+            packed::hamming_search_pool_with(detected, &pool, &qs, batch, &chvs, classes, len)
+                .unwrap();
+        assert_eq!(want, pooled, "pool-sharded level={detected:?}");
+    });
+}
+
+#[test]
+fn prop_forced_simd_levels_bit_match_scalar_signgemm() {
+    // Sign-GEMM stage1/stage2 at the detected level vs forced scalar, over
+    // stored AND seed-rematerialized planes: ragged shapes off the column
+    // tile and off the 4/8-row stage2 blocks, compared bit for bit (the
+    // per-element accumulation chains are identical by construction).
+    let detected = simd::detect();
+    forall(8, 0xB02, |rng| {
+        let d1 = 1 + rng.below(12);
+        let d2 = 1 + rng.below(20);
+        let f1 = 1 + rng.below(10);
+        let f2 = 1 + rng.below(30);
+        let a_stored = SignMat::from_pm1(&gen::pm1_vec(rng, d1 * f1), d1, f1).unwrap();
+        let b_stored = SignMat::from_pm1(&gen::pm1_vec(rng, d2 * f2), d2, f2).unwrap();
+        let a_seeded = SeededSignMat::new(rng.next_u64(), d1, f1);
+        let b_seeded = SeededSignMat::new(rng.next_u64(), d2, f2);
+        let x = gen::normal_vec(rng, f1 * f2, 1.0);
+
+        let mut t_ref = vec![0.0f32; d1 * f2];
+        signmat::stage1_with(SimdLevel::Scalar, &a_stored, 0, d1, &x, f2, &mut t_ref);
+        let mut y_ref = vec![0.0f32; d1 * d2];
+        signmat::stage2_with(SimdLevel::Scalar, &b_stored, &t_ref, d1, f2, &mut y_ref);
+
+        // stored planes, detected level
+        let mut t = vec![0.0f32; d1 * f2];
+        signmat::stage1_with(detected, &a_stored, 0, d1, &x, f2, &mut t);
+        assert_eq!(t_bits(&t_ref), t_bits(&t), "stage1 stored level={detected:?}");
+        let mut y = vec![0.0f32; d1 * d2];
+        signmat::stage2_with(detected, &b_stored, &t_ref, d1, f2, &mut y);
+        assert_eq!(t_bits(&y_ref), t_bits(&y), "stage2 stored level={detected:?}");
+
+        // seeded planes: scalar must equal the materialized twin, and the
+        // detected level must equal seeded-scalar
+        let am = a_seeded.materialize();
+        let bm = b_seeded.materialize();
+        let mut ts_ref = vec![0.0f32; d1 * f2];
+        signmat::stage1_with(SimdLevel::Scalar, &am, 0, d1, &x, f2, &mut ts_ref);
+        for level in [SimdLevel::Scalar, detected] {
+            let mut ts = vec![0.0f32; d1 * f2];
+            signmat::stage1_with(level, &a_seeded, 0, d1, &x, f2, &mut ts);
+            assert_eq!(t_bits(&ts_ref), t_bits(&ts), "stage1 seeded level={level:?}");
+            let mut ys_ref = vec![0.0f32; d1 * d2];
+            signmat::stage2_with(SimdLevel::Scalar, &bm, &ts_ref, d1, f2, &mut ys_ref);
+            let mut ys = vec![0.0f32; d1 * d2];
+            signmat::stage2_with(level, &b_seeded, &ts_ref, d1, f2, &mut ys);
+            assert_eq!(t_bits(&ys_ref), t_bits(&ys), "stage2 seeded level={level:?}");
+        }
+    });
+}
+
+/// Bit images of an f32 slice — the strictest equality (also -0.0 vs 0.0).
+fn t_bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn remat_backend_matches_its_materialized_twin_end_to_end() {
+    // A rematerializing backend (planes regenerated from the seed on every
+    // encode) against the backend holding the materialized copy of the
+    // exact same planes: full encode, fused packed-segment encode, and the
+    // complete progressive pipeline in both search modes must agree bit
+    // for bit — while the remat side holds an order-of-magnitude less
+    // factor memory resident.
+    let cfg = cfg_with_classes(6);
+    let seed = 0xC0FFEE;
+    let mut remat = NativeBackend::seeded_remat(cfg.clone(), seed, 8).unwrap();
+    let mut stored =
+        NativeBackend::new(SoftwareEncoder::random_remat_materialized(cfg.clone(), seed), 8)
+            .unwrap();
+    assert!(remat.is_remat() && !stored.is_remat());
+    assert!(remat.factor_bytes() < stored.factor_bytes());
+
+    let mut rng = Rng::new(41);
+    let batch = 5;
+    let xs: Vec<f32> =
+        (0..batch * cfg.features()).map(|_| rng.range(-90, 91) as f32).collect();
+    assert_eq!(remat.encode_full(&xs, batch).unwrap(), stored.encode_full(&xs, batch).unwrap());
+    for s in 0..cfg.segments {
+        assert_eq!(
+            remat.encode_segment_packed(&xs, batch, s).unwrap(),
+            stored.encode_segment_packed(&xs, batch, s).unwrap(),
+            "segment {s}"
+        );
+    }
+
+    let mut store = ChvStore::new(cfg.clone());
+    for c in 0..cfg.classes {
+        store.update(c, &gen::int8_vec(&mut rng, cfg.dim()), 1.0).unwrap();
+    }
+    for mode in [SearchMode::L1Int8, SearchMode::HammingPacked] {
+        let ps = ProgressiveSearch { tau: 0.5, min_segments: 1, mode };
+        for i in 0..batch {
+            let xq = &xs[i * cfg.features()..(i + 1) * cfg.features()];
+            let a = ps.classify(&mut remat, &store, xq).unwrap();
+            let b = ps.classify(&mut stored, &store, xq).unwrap();
+            assert_eq!(a.class, b.class, "{mode:?}");
+            assert_eq!(a.segments_used, b.segments_used, "{mode:?}");
+            assert_eq!(a.dists, b.dists, "{mode:?}");
+        }
     }
 }
 

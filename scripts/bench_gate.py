@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Gate bench JSON documents against a committed ratio baseline.
+
+The old CI gate asserted raw "fast path beats scalar" inequalities
+(packed >= scalar, sign-GEMM >= scalar) directly against one noisy run,
+which flaked whenever a shared runner's scheduler jitter landed on the
+nanosecond-scale single-row timings. This gate compares *regression
+deltas* instead: every tracked speedup ratio must stay at or above
+gate_fraction x its committed baseline (bench/BASELINE.json). The ratios
+are dimensionless -- fast path vs scalar measured in the SAME process on
+the SAME machine -- so a slow runner shifts both numerators and
+denominators together and the gate only trips on genuine kernel
+regressions.
+
+Exit status 0 iff every check passes; the full per-metric comparison is
+written to --out (BENCH_delta.json) for artifact upload either way.
+Stdlib only; no third-party dependencies.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--classifier", required=True, help="BENCH_classifier.json path")
+    ap.add_argument("--encoder", required=True, help="BENCH_encoder.json path")
+    ap.add_argument("--baseline", required=True, help="bench/BASELINE.json path")
+    ap.add_argument("--out", default="BENCH_delta.json", help="delta report output path")
+    args = ap.parse_args()
+
+    cls_doc = load(args.classifier)
+    enc_doc = load(args.encoder)
+    base = load(args.baseline)
+    frac = float(base.get("gate_fraction", 0.9))
+
+    checks = []
+
+    def check(metric, measured, baseline):
+        floor = baseline * frac
+        checks.append(
+            {
+                "metric": metric,
+                "measured": measured,
+                "baseline": baseline,
+                "floor": floor,
+                "ratio_to_baseline": (measured / baseline) if baseline else None,
+                "pass": measured >= floor,
+            }
+        )
+
+    # Structural sanity first (cheap, catches format drift), then the
+    # delta checks for every ratio the baseline tracks.
+    for cfg_name, b in base.get("classifier", {}).items():
+        cfg = cls_doc["configs"][cfg_name]
+        for row in cfg["progressive"]:
+            assert 0.0 <= row["complexity_saving"] <= 1.0, row
+        check(f"classifier.{cfg_name}.search.speedup", cfg["search"]["speedup"], b["search_speedup"])
+
+    for cfg_name, b in base.get("encoder", {}).items():
+        cfg = enc_doc["configs"][cfg_name]
+        assert cfg["rows"], f"encoder bench emitted no rows for {cfg_name}"
+        for row in cfg["rows"]:
+            assert row["signgemm_ns_per_encode"] > 0.0, row
+            assert row["signgemm_samples_per_s"] > 0.0, row
+        by_rows = {int(r["rows"]): r for r in cfg["rows"]}
+        for rows_key, spec in b["rows"].items():
+            row = by_rows.get(int(rows_key))
+            assert row is not None, f"baseline tracks rows={rows_key} but the bench skipped it"
+            check(
+                f"encoder.{cfg_name}.rows{rows_key}.signgemm_speedup",
+                row["signgemm_speedup"],
+                spec["signgemm_speedup"],
+            )
+
+    assert checks, "baseline tracks no metrics; nothing was gated"
+    delta = {
+        "version": 1,
+        "gate_fraction": frac,
+        "kernel": cls_doc.get("kernel", "unknown"),
+        "checks": checks,
+        "pass": all(c["pass"] for c in checks),
+    }
+    with open(args.out, "w") as f:
+        json.dump(delta, f, indent=2)
+        f.write("\n")
+
+    for c in checks:
+        tag = "ok  " if c["pass"] else "FAIL"
+        print(
+            "%s %s: measured %.3f vs baseline %.3f (floor %.3f)"
+            % (tag, c["metric"], c["measured"], c["baseline"], c["floor"])
+        )
+    if not delta["pass"]:
+        print(f"bench gate FAILED; full comparison in {args.out}", file=sys.stderr)
+        return 1
+    print("bench gate ok: %d metrics, kernel=%s" % (len(checks), delta["kernel"]))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

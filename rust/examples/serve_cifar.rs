@@ -40,6 +40,8 @@ fn main() -> clo_hdnn::Result<()> {
         snapshot_path: None,
         snapshot_every: 0,
         restore_path: None,
+        wal_path: None,
+        wal_fsync_every: 1,
     })?;
 
     // online gradient-free learning on WCFE features

@@ -1,5 +1,6 @@
 //! Request/response types crossing the client <-> executor channel.
 
+use crate::hdc::wal::WalRecord;
 use crate::hdc::SearchMode;
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -26,8 +27,21 @@ pub enum Payload {
     /// replace the live knowledge store with the checkpoint at the path
     /// (geometry must match the serving backend's config)
     Restore(PathBuf),
+    /// replace the live knowledge store with an in-memory CLOK image
+    /// (a follower bootstrapping from `OP_SNAPSHOT_FETCH` bytes); same
+    /// identity/geometry checks as [`Payload::Restore`]
+    RestoreImage(Vec<u8>),
     /// report knowledge/serving counters (no classification)
     Stats,
+    /// the learn-log records with sequence number greater than `after`
+    /// (replication tailing; requires the coordinator to run with a WAL)
+    WalTail {
+        /// the highest sequence number the caller has already applied
+        after: u64,
+    },
+    /// serialize the live knowledge store to an in-memory CLOK image
+    /// (replication bootstrap; works with or without a WAL)
+    SnapshotFetch,
 }
 
 /// Where an executor delivers a completed [`Response`]. The sink variant
@@ -104,10 +118,16 @@ pub enum ReplyKind {
     Learn,
     /// a [`Payload::Snapshot`] acknowledgement (`detail` carries the path)
     Snapshot,
-    /// a [`Payload::Restore`] acknowledgement (`detail` carries the path)
+    /// a [`Payload::Restore`]/[`Payload::RestoreImage`] acknowledgement
+    /// (`detail` carries the path or image provenance)
     Restore,
     /// a [`Payload::Stats`] reply (`stats` carries the counters)
     Stats,
+    /// a [`Payload::WalTail`] reply (`records` carries the suffix, `stats`
+    /// the counters — `stats.learn_seq` is the log's current last sequence)
+    WalTail,
+    /// a [`Payload::SnapshotFetch`] reply (`image` carries the CLOK bytes)
+    SnapshotImage,
 }
 
 /// Knowledge counters a [`Payload::Stats`] request reports.
@@ -119,6 +139,11 @@ pub struct CoordStats {
     pub trained_classes: usize,
     /// snapshots taken this process (explicit + auto)
     pub snapshots: u64,
+    /// monotonic learn sequence number: the WAL's last acknowledged
+    /// sequence when the coordinator logs learns, else the store's total
+    /// learn count — what followers compare against the primary to detect
+    /// stale reads
+    pub learn_seq: u64,
 }
 
 /// What the executor returns.
@@ -140,8 +165,17 @@ pub struct Response {
     pub latency_s: f64,
     /// free-form success detail (e.g. the snapshot path written)
     pub detail: Option<String>,
-    /// knowledge counters (set for [`Payload::Stats`] replies)
+    /// knowledge counters (set for [`Payload::Stats`] and
+    /// [`Payload::WalTail`] replies)
     pub stats: Option<CoordStats>,
+    /// learn-log suffix (set for [`Payload::WalTail`] replies)
+    pub records: Option<Vec<WalRecord>>,
+    /// the log segment's fold point (set for [`Payload::WalTail`]
+    /// replies): learns at or before this sequence live only in the
+    /// snapshot the segment was rotated against
+    pub wal_base: Option<u64>,
+    /// serialized CLOK image (set for [`Payload::SnapshotFetch`] replies)
+    pub image: Option<Vec<u8>>,
     /// failure detail; when set, every other result field is meaningless
     pub error: Option<String>,
 }
@@ -159,6 +193,9 @@ impl Response {
             latency_s: 0.0,
             detail: None,
             stats: None,
+            records: None,
+            wal_base: None,
+            image: None,
             error: None,
         }
     }

@@ -13,6 +13,7 @@ use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::request::{CoordStats, Payload, ReplySink, ReplyTo, Request, Response};
 use crate::coordinator::router::{ModePolicy, Router};
 use crate::data::TensorFile;
+use crate::hdc::wal::Wal;
 use crate::hdc::{knowledge, HdBackend, HdClassifier, ProgressiveSearch, SearchMode};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, PjrtBackend};
@@ -20,6 +21,7 @@ use crate::runtime::{Manifest, NativeBackend};
 use crate::sim::Mode;
 use crate::wcfe::WcfeModel;
 use crate::Result;
+use anyhow::Context;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
@@ -78,6 +80,14 @@ pub struct CoordinatorOptions {
     /// warm restart: load this checkpoint into the store before serving
     /// (the file's geometry must match the backend config)
     pub restore_path: Option<std::path::PathBuf>,
+    /// durable learn log: append every Learn here **before** applying it,
+    /// replay the suffix newer than the restored checkpoint at boot, and
+    /// fold the log into the default snapshot on every successful
+    /// checkpoint (see [`crate::hdc::wal`])
+    pub wal_path: Option<std::path::PathBuf>,
+    /// fsync the WAL after every N appended learns (0/1 = every learn is
+    /// durable before it is acknowledged — the safe default)
+    pub wal_fsync_every: usize,
 }
 
 impl CoordinatorOptions {
@@ -96,6 +106,8 @@ impl CoordinatorOptions {
             snapshot_path: None,
             snapshot_every: 0,
             restore_path: None,
+            wal_path: None,
+            wal_fsync_every: 1,
         }
     }
 }
@@ -104,6 +116,11 @@ impl CoordinatorOptions {
 /// executor's batch assembly and Learn-run cap, so every grouped run is
 /// guaranteed to fit `encode_full(batch)`.
 const NATIVE_MAX_BATCH: usize = 8;
+
+/// Byte budget for one `Payload::WalTail` reply's records: a catching-up
+/// follower drains a big backlog over several bounded polls instead of one
+/// enormous frame (the wire caps frames at 16 MiB).
+const WAL_TAIL_BUDGET: usize = 1024 * 1024;
 
 /// Client handle: submit requests, join on drop.
 pub struct Coordinator {
@@ -247,6 +264,10 @@ struct KnowledgeState {
     since_snapshot: usize,
     /// snapshots written this process (explicit + auto)
     snapshots: u64,
+    /// consecutive auto-snapshot failures: the warning is emitted only when
+    /// this is a power of two (1, 2, 4, 8, …), so a full disk warns with
+    /// exponential backoff instead of flooding stderr at learn rate
+    snapshot_fail_streak: u64,
 }
 
 /// Executor state living on the worker thread.
@@ -263,6 +284,9 @@ struct Executor {
     /// grouped learning — the PJRT path is lowered at batch 1)
     learn_batch_cap: usize,
     knowledge: KnowledgeState,
+    /// durable learn log: every Learn is appended (and per the fsync
+    /// cadence, durable) here before it touches the store
+    wal: Option<Wal>,
 }
 
 fn executor_main(
@@ -359,6 +383,7 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
             image_elems: 0,
             learn_batch_cap: NATIVE_MAX_BATCH,
             knowledge: KnowledgeState::default(),
+            wal: None,
         },
         BackendSpec::NativeRemat { cfg, seed } => Executor {
             classifier: HdClassifier::new(
@@ -372,6 +397,7 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
             image_elems: 0,
             learn_batch_cap: NATIVE_MAX_BATCH,
             knowledge: KnowledgeState::default(),
+            wal: None,
         },
         BackendSpec::NativeArtifacts { artifacts, config } => {
             let manifest = Manifest::load(artifacts)?;
@@ -386,6 +412,7 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
                 image_elems,
                 learn_batch_cap: NATIVE_MAX_BATCH,
                 knowledge: KnowledgeState::default(),
+                wal: None,
             }
         }
         #[cfg(feature = "pjrt")]
@@ -407,6 +434,7 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
                 image_elems,
                 learn_batch_cap: 1,
                 knowledge: KnowledgeState::default(),
+                wal: None,
             }
         }
     };
@@ -419,10 +447,71 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
         snapshot_every: opts.snapshot_every,
         since_snapshot: 0,
         snapshots: 0,
+        snapshot_fail_streak: 0,
     };
     // warm restart: swap in the checkpointed store before any request runs
     if let Some(path) = &opts.restore_path {
         ex.restore_store(path)?;
+    }
+    // crash recovery: open (or create) the learn log and replay the suffix
+    // newer than whatever the restore landed — commutative bundling through
+    // the same deterministic backend makes the replayed store bit-identical
+    // to the acknowledged prefix the log holds
+    if let Some(path) = &opts.wal_path {
+        let (features, classes) =
+            (ex.classifier.cfg().features(), ex.classifier.cfg().classes);
+        let have = ex.classifier.store.total_learns();
+        let mut wal = Wal::open(
+            path,
+            &opts.model,
+            features,
+            classes,
+            have,
+            opts.wal_fsync_every,
+        )?;
+        if wal.base_seq() > have {
+            anyhow::bail!(
+                "WAL segment {} starts at learn {} but the restored knowledge \
+                 holds only {have}: the learns in between are gone — restore \
+                 the snapshot the log was rotated against",
+                path.display(),
+                wal.base_seq()
+            );
+        }
+        let mut replayed = 0usize;
+        for rec in wal.records() {
+            if rec.seq <= have {
+                continue; // the snapshot already folded this learn in
+            }
+            ex.classifier
+                .learn(&rec.features, rec.class as usize)
+                .with_context(|| format!("replay WAL learn {}", rec.seq))?;
+            replayed += 1;
+        }
+        if have > wal.last_seq() {
+            // the checkpoint is newer than the whole log (e.g. a shutdown
+            // flush landed after the last rotation): fold and move on
+            wal.rotate(have)?;
+        }
+        if ex.classifier.store.total_learns() != wal.last_seq() {
+            anyhow::bail!(
+                "WAL replay desync: store holds {} learns but {} ends at seq {}",
+                ex.classifier.store.total_learns(),
+                path.display(),
+                wal.last_seq()
+            );
+        }
+        if replayed > 0 {
+            eprintln!(
+                "recovered {replayed} learn(s) from {} (store now holds {})",
+                path.display(),
+                ex.classifier.store.total_learns()
+            );
+            // the replayed learns are not in any checkpoint yet; let the
+            // auto-snapshot cadence fold them
+            ex.knowledge.since_snapshot = replayed;
+        }
+        ex.wal = Some(wal);
     }
     Ok(ex)
 }
@@ -433,22 +522,39 @@ impl Executor {
     /// wrong answers).
     fn restore_store(&mut self, path: &std::path::Path) -> Result<()> {
         let (store, model) = knowledge::load_named(path)?;
+        self.install_store(store, &model, &path.display().to_string())
+    }
+
+    /// Replace the live store with an in-memory CLOK image (a follower
+    /// bootstrapping from `Payload::SnapshotFetch` bytes); same checks as
+    /// [`Executor::restore_store`].
+    fn restore_image(&mut self, bytes: &[u8]) -> Result<()> {
+        let (store, model) = knowledge::from_bytes_named(bytes)?;
+        self.install_store(store, &model, "snapshot image")
+    }
+
+    /// The shared tail of restore: verify identity/geometry/calibration,
+    /// swap the store in, and re-anchor the learn log at the new state.
+    fn install_store(
+        &mut self,
+        store: crate::hdc::ChvStore,
+        model: &str,
+        origin: &str,
+    ) -> Result<()> {
         if !model.is_empty()
             && !self.knowledge.model.is_empty()
             && model != self.knowledge.model
         {
             anyhow::bail!(
-                "knowledge checkpoint {} belongs to model '{model}' \
+                "knowledge checkpoint {origin} belongs to model '{model}' \
                  (this executor serves model '{}')",
-                path.display(),
                 self.knowledge.model
             );
         }
         if !knowledge::compatible(store.cfg(), self.classifier.cfg()) {
             anyhow::bail!(
-                "knowledge checkpoint {} was trained for config '{}' \
+                "knowledge checkpoint {origin} was trained for config '{}' \
                  (geometry differs from serving config '{}')",
-                path.display(),
                 store.cfg().name,
                 self.classifier.cfg().name
             );
@@ -456,12 +562,11 @@ impl Executor {
         if !knowledge::calibration_matches(store.cfg(), self.classifier.cfg()) {
             let (a, b) = (store.cfg(), self.classifier.cfg());
             anyhow::bail!(
-                "knowledge checkpoint {} was calibrated differently \
+                "knowledge checkpoint {origin} was calibrated differently \
                  (qbits/scale_x/scale_q {}/{}/{} vs serving {}/{}/{}): \
                  its class hypervectors are incommensurable with queries \
                  quantized under the serving config — re-train or restore \
                  into a matching config",
-                path.display(),
                 a.qbits,
                 a.scale_x,
                 a.scale_q,
@@ -473,6 +578,22 @@ impl Executor {
         self.classifier.store = store;
         // the live store now equals a checkpoint: nothing is unsaved
         self.knowledge.since_snapshot = 0;
+        // the old log's seq numbering no longer matches the store; restart
+        // the segment at the restored learn count. Rotation failure would
+        // leave a log that desyncs replay, so it disables durable logging
+        // (loudly) rather than risking a wrong recovery.
+        let total = self.classifier.store.total_learns();
+        let rotate_err = match self.wal.as_mut() {
+            Some(wal) => wal.rotate(total).err(),
+            None => None,
+        };
+        if let Some(e) = rotate_err {
+            eprintln!(
+                "WAL could not be re-anchored after restore; durable logging \
+                 disabled for this process: {e:#}"
+            );
+            self.wal = None;
+        }
         Ok(())
     }
 
@@ -491,12 +612,33 @@ impl Executor {
         knowledge::save_named(&self.classifier.store, &target, &self.knowledge.model)?;
         self.knowledge.snapshots += 1;
         self.knowledge.since_snapshot = 0;
+        self.knowledge.snapshot_fail_streak = 0;
+        // compaction: a snapshot at the default path is what a restart
+        // restores from, so the log up to here is redundant — fold it.
+        // (A snapshot anywhere else must NOT rotate: the default
+        // checkpoint on disk still predates the fold point, and recovery
+        // restores from it.) Rotation failure is benign for correctness —
+        // replay skips records the snapshot already holds — so it only
+        // warns.
+        if self.knowledge.snapshot_path.as_deref() == Some(target.as_path()) {
+            let total = self.classifier.store.total_learns();
+            if let Some(wal) = self.wal.as_mut() {
+                if let Err(e) = wal.rotate(total) {
+                    eprintln!(
+                        "WAL rotation after snapshot failed (log keeps \
+                         growing; recovery unaffected): {e:#}"
+                    );
+                }
+            }
+        }
         Ok(target)
     }
 
     /// Record `n` successful learns and run the auto-snapshot cadence. A
-    /// failed auto-snapshot must not take down serving: it is reported on
-    /// stderr and retried after the next learn.
+    /// failed auto-snapshot must not take down serving: it is retried after
+    /// the next learn, and reported on stderr with exponential backoff
+    /// (consecutive-failure streaks warn at 1, 2, 4, 8, …) so a full disk
+    /// cannot flood the log at learn rate.
     fn note_learns(&mut self, n: usize) {
         self.knowledge.since_snapshot += n;
         if self.knowledge.snapshot_every == 0
@@ -506,20 +648,45 @@ impl Executor {
             return;
         }
         if let Err(e) = self.snapshot_store(None) {
-            eprintln!("auto-snapshot failed (serving continues): {e:#}");
+            self.knowledge.snapshot_fail_streak += 1;
+            let streak = self.knowledge.snapshot_fail_streak;
+            if streak.is_power_of_two() {
+                eprintln!(
+                    "auto-snapshot failed (attempt {streak}; serving \
+                     continues): {e:#}"
+                );
+            }
         }
     }
 
-    /// Shutdown flush: a configured snapshot path means learned knowledge
-    /// is meant to be durable, so any learns not yet checkpointed are
-    /// persisted on graceful shutdown — with or without an auto-snapshot
-    /// cadence.
+    /// Shutdown flush: any acknowledged learns still inside the WAL's fsync
+    /// cadence window are flushed, and — when a snapshot path is configured
+    /// — learns not yet checkpointed are persisted on graceful shutdown,
+    /// with or without an auto-snapshot cadence.
     fn final_snapshot(&mut self) {
+        if let Some(wal) = self.wal.as_mut() {
+            if let Err(e) = wal.sync() {
+                eprintln!("shutdown WAL flush failed: {e:#}");
+            }
+        }
         if self.knowledge.since_snapshot == 0 || self.knowledge.snapshot_path.is_none() {
             return;
         }
         if let Err(e) = self.snapshot_store(None) {
             eprintln!("shutdown snapshot failed: {e:#}");
+        }
+    }
+
+    /// The knowledge counters STATS and WAL-TAIL replies carry.
+    fn coord_stats(&self) -> CoordStats {
+        CoordStats {
+            learns: self.classifier.store.total_learns(),
+            trained_classes: self.classifier.store.trained_classes(),
+            snapshots: self.knowledge.snapshots,
+            learn_seq: self
+                .wal
+                .as_ref()
+                .map_or(self.classifier.store.total_learns(), |w| w.last_seq()),
         }
     }
 
@@ -559,7 +726,31 @@ impl Executor {
         if valid.is_empty() {
             return;
         }
+        // WAL-before-apply: the whole validated run is logged (and, per the
+        // fsync cadence, durable) before any of it touches the store; a
+        // failed append errors the run with the store untouched, so error
+        // replies, store state, and the log always agree
+        if let Some(wal) = self.wal.as_mut() {
+            let items: Vec<(u32, &[f32])> =
+                samples.iter().map(|&(x, class)| (class as u32, x)).collect();
+            if let Err(e) = wal.append_batch(&items) {
+                let msg = format!("learn: wal append: {e:#}");
+                for r in &valid {
+                    let _ = r.reply.send(Response::error(r.id, msg.clone()));
+                }
+                return;
+            }
+        }
         let result = self.classifier.learn_batch(&samples);
+        if result.is_err() {
+            // compensate: the logged run never reached the store, so a
+            // replay must not include it
+            if let Some(wal) = self.wal.as_mut() {
+                if let Err(e) = wal.rollback(samples.len()) {
+                    eprintln!("WAL rollback after failed learn run: {e:#}");
+                }
+            }
+        }
         let segments = self.classifier.cfg().segments;
         for (r, (_, class)) in valid.iter().zip(&samples) {
             let resp = match &result {
@@ -600,7 +791,28 @@ impl Executor {
         let t0 = Instant::now();
         match &req.payload {
             Payload::Learn(x, class) => {
-                self.classifier.learn(x, *class)?;
+                // validate before the WAL append: a record the log accepts
+                // must always be replayable
+                let (feat, classes) =
+                    (self.classifier.cfg().features(), self.classifier.cfg().classes);
+                if x.len() != feat {
+                    anyhow::bail!("learn: features len {} != F {feat}", x.len());
+                }
+                if *class >= classes {
+                    anyhow::bail!("learn: class {class} out of range (< {classes})");
+                }
+                if let Some(wal) = self.wal.as_mut() {
+                    wal.append(*class as u32, x).context("learn: wal append")?;
+                }
+                if let Err(e) = self.classifier.learn(x, *class) {
+                    // compensate: the logged learn never reached the store
+                    if let Some(wal) = self.wal.as_mut() {
+                        if let Err(re) = wal.rollback(1) {
+                            eprintln!("WAL rollback after failed learn: {re:#}");
+                        }
+                    }
+                    return Err(e);
+                }
                 self.note_learns(1);
                 Ok(Response {
                     kind: crate::coordinator::ReplyKind::Learn,
@@ -628,13 +840,66 @@ impl Executor {
                     ..Response::ok(req.id)
                 })
             }
+            Payload::RestoreImage(bytes) => {
+                self.restore_image(bytes)?;
+                Ok(Response {
+                    kind: crate::coordinator::ReplyKind::Restore,
+                    detail: Some(format!("image ({} bytes)", bytes.len())),
+                    latency_s: t0.elapsed().as_secs_f64(),
+                    ..Response::ok(req.id)
+                })
+            }
             Payload::Stats => Ok(Response {
                 kind: crate::coordinator::ReplyKind::Stats,
-                stats: Some(CoordStats {
-                    learns: self.classifier.store.total_learns(),
-                    trained_classes: self.classifier.store.trained_classes(),
-                    snapshots: self.knowledge.snapshots,
-                }),
+                stats: Some(self.coord_stats()),
+                latency_s: t0.elapsed().as_secs_f64(),
+                ..Response::ok(req.id)
+            }),
+            Payload::WalTail { after } => {
+                let wal = self.wal.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "wal-tail: this model keeps no learn log (serve with --wal)"
+                    )
+                })?;
+                if *after < wal.base_seq() {
+                    anyhow::bail!(
+                        "wal-tail: learns up to {} were compacted into a snapshot \
+                         (caller is at {after}); bootstrap again with snapshot-fetch",
+                        wal.base_seq()
+                    );
+                }
+                // cap one reply's record bytes so a huge backlog streams in
+                // bounded frames over several polls; the first record always
+                // goes through
+                let mut records = Vec::new();
+                let mut budget = WAL_TAIL_BUDGET;
+                for r in wal.records() {
+                    if r.seq <= *after {
+                        continue;
+                    }
+                    let cost = 16 + 4 * r.features.len();
+                    if !records.is_empty() && cost > budget {
+                        break;
+                    }
+                    budget = budget.saturating_sub(cost);
+                    records.push(r.clone());
+                }
+                Ok(Response {
+                    kind: crate::coordinator::ReplyKind::WalTail,
+                    records: Some(records),
+                    wal_base: Some(wal.base_seq()),
+                    stats: Some(self.coord_stats()),
+                    latency_s: t0.elapsed().as_secs_f64(),
+                    ..Response::ok(req.id)
+                })
+            }
+            Payload::SnapshotFetch => Ok(Response {
+                kind: crate::coordinator::ReplyKind::SnapshotImage,
+                image: Some(knowledge::to_bytes_named(
+                    &self.classifier.store,
+                    &self.knowledge.model,
+                )),
+                stats: Some(self.coord_stats()),
                 latency_s: t0.elapsed().as_secs_f64(),
                 ..Response::ok(req.id)
             }),
@@ -647,7 +912,7 @@ impl Executor {
                     (Payload::Image(img), Mode::Bypass) => (img.clone(), false, None),
                     (Payload::Features(x), _) => (x.clone(), false, None),
                     (Payload::FeaturesWithMode(x, m), _) => (x.clone(), false, Some(*m)),
-                    _ => unreachable!("learn/snapshot/restore/stats handled above"),
+                    _ => unreachable!("learn/snapshot/restore/stats/wal ops handled above"),
                 };
                 // per-request search-mode override: swap the policy's kernel
                 // for this one classification, then restore the default
@@ -748,6 +1013,8 @@ mod tests {
             snapshot_path: None,
             snapshot_every: 0,
             restore_path: None,
+            wal_path: None,
+            wal_fsync_every: 1,
         };
         assert!(Coordinator::start(opts).is_err());
     }
@@ -1012,6 +1279,168 @@ mod tests {
         drop(coord);
         let snap = crate::hdc::knowledge::load(&path).unwrap();
         assert_eq!(snap.total_learns(), 6);
+    }
+
+    #[test]
+    fn wal_recovery_is_bit_identical_to_the_acknowledged_prefix() {
+        // crash simulation: no snapshot path, so dropping the coordinator
+        // flushes nothing — the WAL is the only durability. The recovered
+        // store must byte-match a store that learned the same stream live.
+        let dir = snap_dir("wal_recover");
+        let wal = dir.join("w.clog");
+        let _ = std::fs::remove_file(&wal);
+        let cfg = HdConfig::synthetic("t", 8, 8, 32, 32, 8, 4);
+        let mut opts = CoordinatorOptions::software(cfg.clone());
+        opts.wal_path = Some(wal.clone());
+        let coord = Coordinator::start(opts).unwrap();
+        let (reference, protos) = proto_and_coordinator();
+        for (c, p) in protos.iter().enumerate() {
+            for _ in 0..3 {
+                assert!(coord.call(Payload::Learn(p.clone(), c)).unwrap().error.is_none());
+                reference.call(Payload::Learn(p.clone(), c)).unwrap();
+            }
+        }
+        let s = coord.call(Payload::Stats).unwrap().stats.unwrap();
+        assert_eq!(s.learns, 12);
+        assert_eq!(s.learn_seq, 12, "stats must stamp the log's seq");
+        drop(coord);
+
+        let mut opts = CoordinatorOptions::software(cfg.clone());
+        opts.wal_path = Some(wal.clone());
+        let recovered = Coordinator::start(opts).unwrap();
+        let s = recovered.call(Payload::Stats).unwrap().stats.unwrap();
+        assert_eq!(s.learns, 12, "every logged learn must replay");
+        // bit-identity: snapshots of the recovered and reference stores
+        // are byte-equal files
+        let (pa, pb) = (dir.join("rec.clok"), dir.join("ref.clok"));
+        recovered.call(Payload::Snapshot(Some(pa.clone()))).unwrap();
+        reference.call(Payload::Snapshot(Some(pb.clone()))).unwrap();
+        assert_eq!(
+            std::fs::read(&pa).unwrap(),
+            std::fs::read(&pb).unwrap(),
+            "recovered store must be bit-identical to the live-learned one"
+        );
+        for (c, p) in protos.iter().enumerate() {
+            assert_eq!(recovered.call(Payload::Features(p.clone())).unwrap().class, Some(c));
+        }
+    }
+
+    #[test]
+    fn wal_recovery_composes_with_a_snapshot_restore() {
+        // snapshot at learn 4 (rotates the log), more learns, "crash",
+        // restart restoring the snapshot: replay covers only the suffix
+        let dir = snap_dir("wal_compose");
+        let (wal, snap) = (dir.join("w.clog"), dir.join("k.clok"));
+        let _ = std::fs::remove_file(&wal);
+        let _ = std::fs::remove_file(&snap);
+        let cfg = HdConfig::synthetic("t", 8, 8, 32, 32, 8, 4);
+        let mut opts = CoordinatorOptions::software(cfg.clone());
+        opts.wal_path = Some(wal.clone());
+        opts.snapshot_path = Some(snap.clone());
+        let coord = Coordinator::start(opts).unwrap();
+        let (reference, protos) = proto_and_coordinator();
+        for (c, p) in protos.iter().enumerate() {
+            coord.call(Payload::Learn(p.clone(), c)).unwrap();
+            reference.call(Payload::Learn(p.clone(), c)).unwrap();
+        }
+        coord.call(Payload::Snapshot(None)).unwrap();
+        // the snapshot rotated the segment: a tail from before its fold
+        // point now directs the caller to re-bootstrap
+        let r = coord.call(Payload::WalTail { after: 0 }).unwrap();
+        assert!(r.error.unwrap().contains("snapshot-fetch"));
+        for (c, p) in protos.iter().enumerate() {
+            coord.call(Payload::Learn(p.clone(), c)).unwrap();
+            reference.call(Payload::Learn(p.clone(), c)).unwrap();
+        }
+        drop(coord);
+
+        let mut opts = CoordinatorOptions::software(cfg);
+        opts.wal_path = Some(wal);
+        opts.restore_path = Some(snap);
+        let recovered = Coordinator::start(opts).unwrap();
+        let s = recovered.call(Payload::Stats).unwrap().stats.unwrap();
+        assert_eq!(s.learns, 8);
+        assert_eq!(s.learn_seq, 8);
+        let (pa, pb) = (dir.join("rec.clok"), dir.join("ref.clok"));
+        recovered.call(Payload::Snapshot(Some(pa.clone()))).unwrap();
+        reference.call(Payload::Snapshot(Some(pb.clone()))).unwrap();
+        assert_eq!(std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+    }
+
+    #[test]
+    fn wal_tail_and_snapshot_fetch_through_channels() {
+        let dir = snap_dir("wal_tail");
+        let wal = dir.join("w.clog");
+        let _ = std::fs::remove_file(&wal);
+        let cfg = HdConfig::synthetic("t", 8, 8, 32, 32, 8, 4);
+        let mut opts = CoordinatorOptions::software(cfg.clone());
+        opts.wal_path = Some(wal);
+        let coord = Coordinator::start(opts).unwrap();
+        let (_, protos) = proto_and_coordinator();
+        for (c, p) in protos.iter().enumerate() {
+            coord.call(Payload::Learn(p.clone(), c)).unwrap();
+        }
+        // tail from 0: every record, in seq order, with the sample intact
+        let r = coord.call(Payload::WalTail { after: 0 }).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.kind, crate::coordinator::ReplyKind::WalTail);
+        let records = r.records.unwrap();
+        assert_eq!(records.len(), 4);
+        for (i, rec) in records.iter().enumerate() {
+            assert_eq!(rec.seq, i as u64 + 1);
+            assert_eq!(rec.class, i as u32);
+            assert_eq!(rec.features, protos[i]);
+        }
+        assert_eq!(r.stats.unwrap().learn_seq, 4);
+        // tail from the tip: empty, not an error (the follower's idle poll)
+        let r = coord.call(Payload::WalTail { after: 4 }).unwrap();
+        assert!(r.error.is_none());
+        assert!(r.records.unwrap().is_empty());
+        // snapshot-fetch: the image parses and matches the live store
+        let r = coord.call(Payload::SnapshotFetch).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.kind, crate::coordinator::ReplyKind::SnapshotImage);
+        let (store, model) =
+            crate::hdc::knowledge::from_bytes_named(&r.image.unwrap()).unwrap();
+        assert_eq!(model, "");
+        assert_eq!(store.total_learns(), 4);
+        // a fresh coordinator bootstrapped from the image serves identically
+        let fresh = Coordinator::start(CoordinatorOptions::software(cfg)).unwrap();
+        let img = coord.call(Payload::SnapshotFetch).unwrap().image.unwrap();
+        assert!(fresh.call(Payload::RestoreImage(img)).unwrap().error.is_none());
+        for (c, p) in protos.iter().enumerate() {
+            assert_eq!(fresh.call(Payload::Features(p.clone())).unwrap().class, Some(c));
+        }
+        // without a WAL, tailing errors cleanly
+        let r = fresh.call(Payload::WalTail { after: 0 }).unwrap();
+        assert!(r.error.unwrap().contains("--wal"));
+    }
+
+    #[test]
+    fn auto_snapshot_failure_keeps_serving_and_the_wal_consistent() {
+        // an impossible snapshot target: every cadence hit fails, serving
+        // and the learn log keep going (the warn-rate-limit path runs too)
+        let dir = snap_dir("wal_failsnap");
+        let wal = dir.join("w.clog");
+        let _ = std::fs::remove_file(&wal);
+        let cfg = HdConfig::synthetic("t", 8, 8, 32, 32, 8, 4);
+        let block = dir.join("block");
+        std::fs::write(&block, b"not a directory").unwrap();
+        let mut opts = CoordinatorOptions::software(cfg.clone());
+        opts.wal_path = Some(wal);
+        // the snapshot parent is a regular file: create_dir_all fails
+        opts.snapshot_path = Some(block.join("k.clok"));
+        opts.snapshot_every = 2;
+        let coord = Coordinator::start(opts).unwrap();
+        let mut rng = Rng::new(99);
+        let x: Vec<f32> = (0..cfg.features()).map(|_| rng.normal_f32() * 40.0).collect();
+        for _ in 0..6 {
+            assert!(coord.call(Payload::Learn(x.clone(), 0)).unwrap().error.is_none());
+        }
+        let s = coord.call(Payload::Stats).unwrap().stats.unwrap();
+        assert_eq!(s.learns, 6);
+        assert_eq!(s.learn_seq, 6);
+        assert_eq!(s.snapshots, 0, "every auto-snapshot failed");
     }
 
     #[test]

@@ -38,9 +38,10 @@
 //! [`save`] writes the whole image to a sibling `<file>.tmp`, fsyncs, then
 //! `rename`s over the target and (on unix) fsyncs the directory entry — so
 //! a crash mid-save can never corrupt the last good checkpoint, and a save
-//! that returned success survives power loss: the loader only ever reads
-//! the target path, and a leftover partial `.tmp` is simply overwritten by
-//! the next save.
+//! that returned success survives power loss. The loader only ever reads
+//! the target path; a leftover partial `.tmp` from a crashed save is
+//! detected and **removed** by [`load`]/[`load_named`], so directory scans
+//! and `info --knowledge` can never mistake it for a checkpoint.
 
 use crate::config::HdConfig;
 use crate::hdc::chv::ChvStore;
@@ -293,7 +294,7 @@ pub fn save_named(store: &ChvStore, path: impl AsRef<Path>, model: &str) -> Resu
 }
 
 /// Load and verify a knowledge checkpoint. Only ever reads `path` itself —
-/// a leftover partial `.tmp` from a crashed save is ignored.
+/// a leftover partial `.tmp` from a crashed save is removed, never read.
 pub fn load(path: impl AsRef<Path>) -> Result<ChvStore> {
     Ok(load_named(path)?.0)
 }
@@ -302,6 +303,21 @@ pub fn load(path: impl AsRef<Path>) -> Result<ChvStore> {
 /// v1 files and unowned checkpoints) for the registry's identity check.
 pub fn load_named(path: impl AsRef<Path>) -> Result<(ChvStore, String)> {
     let path = path.as_ref();
+    // a leftover `<path>.tmp` can only be the torn staging file of a save
+    // that crashed before its rename — never a checkpoint. Remove it at
+    // restore time so directory scans and `info --knowledge` can't confuse
+    // it for one. (Saves and loads share the executor thread, so this
+    // never races an in-flight save.)
+    let tmp = tmp_path(path);
+    if tmp.exists() {
+        match std::fs::remove_file(&tmp) {
+            Ok(()) => eprintln!("removed stale checkpoint staging file {}", tmp.display()),
+            Err(e) => eprintln!(
+                "could not remove stale checkpoint staging file {}: {e}",
+                tmp.display()
+            ),
+        }
+    }
     let bytes = std::fs::read(path)
         .with_context(|| format!("read knowledge file {}", path.display()))?;
     from_bytes_named(&bytes)
@@ -460,7 +476,7 @@ mod tests {
     #[test]
     fn partial_tmp_file_never_shadows_last_good_checkpoint() {
         // crash-safety: a torn .tmp from a crashed save sits next to the
-        // checkpoint; the loader ignores it and the next save replaces it
+        // checkpoint; the loader removes it and reads only the good file
         let dir = tmp_dir("crash");
         let path = dir.join("k.bin");
         let mut rng = crate::util::Rng::new(0xD06);
@@ -469,7 +485,11 @@ mod tests {
         std::fs::write(tmp_path(&path), b"CLOK\x01\x00\x00\x00partial-garbage").unwrap();
         let back = load(&path).unwrap();
         assert_eq!(back.packed(), store.packed(), "good checkpoint survived");
-        // the next save just overwrites the torn tmp
+        assert!(
+            !tmp_path(&path).exists(),
+            "restore must clean up the stale staging file"
+        );
+        // and the next save still works from the clean state
         save(&back, &path).unwrap();
         assert!(!tmp_path(&path).exists());
         assert!(load(&path).is_ok());

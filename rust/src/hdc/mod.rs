@@ -19,6 +19,7 @@ pub mod quantize;
 pub mod signmat;
 pub mod simd;
 pub mod train;
+pub mod wal;
 
 pub use chv::ChvStore;
 pub use classifier::HdClassifier;

@@ -1,0 +1,802 @@
+//! Durable learn write-ahead log (WAL).
+//!
+//! The paper's gradient-free CL keeps all learned knowledge as class
+//! hypervectors updated by **commutative bundling** — replaying the learn
+//! stream through the same deterministic encoder reconstructs the exact
+//! same [`crate::hdc::ChvStore`]. That makes the learn stream itself the
+//! natural unit of durability: the executor appends each `(class,
+//! features)` sample here **before** applying it, so a `kill -9` at any
+//! point loses nothing that was acknowledged. On restart the coordinator
+//! restores the last CLOK snapshot and replays the log suffix newer than
+//! it; the recovered store is bit-identical to the acknowledged-learn
+//! prefix.
+//!
+//! ## CLOW segment layout (little-endian; full spec in `docs/PROTOCOL.md`)
+//!
+//! ```text
+//! offset 0   magic    b"CLOW"
+//!        4   version  u32 (1)
+//!        8   header frame (framed exactly like a record):
+//!            [len u32][checksum u64 = FNV-1a over payload]
+//!            [payload: model str16, features u32, classes u32, base_seq u64]
+//! then records, each:
+//!            [len u32][checksum u64][payload: seq u64, class u32,
+//!                                    n u32, n × f32]
+//! ```
+//!
+//! `base_seq` is the store's `total_learns()` at segment creation: record
+//! seqs continue `base_seq + 1, base_seq + 2, …`, and a record's seq equals
+//! `total_learns()` *after* it applies. Replay therefore skips records with
+//! `seq <= restored total_learns()` — the snapshot already folded them in.
+//!
+//! ## Torn-tail recovery
+//!
+//! A crash mid-append leaves a torn final frame: a short header, a short
+//! body, or a checksum mismatch. [`Wal::open`] scans the segment record by
+//! record, keeps the longest valid prefix, and truncates the file at the
+//! first bad frame — a torn tail can only ever hold a learn that was never
+//! acknowledged (acks happen after the append's write, and fsync cadence 1,
+//! the default, makes the ack strictly after durability). The segment
+//! header itself is never torn: creation and rotation stage the fresh
+//! segment in `<path>.tmp`, fsync, and rename — the same atomic idiom as
+//! [`crate::hdc::knowledge::save`].
+//!
+//! ## Compaction
+//!
+//! A successful snapshot to the coordinator's default checkpoint path folds
+//! every logged learn into the CLOK file; [`Wal::rotate`] then atomically
+//! replaces the segment with a fresh one whose `base_seq` is the snapshot's
+//! learn count. The log never grows past one snapshot cadence.
+
+use crate::hdc::knowledge::fnv1a64;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::io::{Seek, Write};
+use std::path::{Path, PathBuf};
+
+/// File magic of a WAL segment.
+pub const MAGIC: &[u8; 4] = b"CLOW";
+/// Current segment format version.
+pub const VERSION: u32 = 1;
+/// Per-frame overhead: the `len: u32` prefix plus the `checksum: u64`.
+pub const FRAME_OVERHEAD: usize = 12;
+/// Hard cap on one frame's payload — matches the serve wire's frame cap,
+/// so any record the log accepts is also streamable to a follower, and a
+/// garbage length field in a torn tail cannot drive a huge allocation.
+pub const MAX_RECORD: usize = 16 * 1024 * 1024;
+
+/// One logged learn: the raw sample exactly as the executor received it.
+/// Replay re-encodes through the same deterministic backend, so applying a
+/// record is bit-identical to the original learn.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WalRecord {
+    /// the store's `total_learns()` after this record applies (1-based,
+    /// strictly monotonic across segments)
+    pub seq: u64,
+    /// the sample's class label
+    pub class: u32,
+    /// the raw feature vector (pre-encode)
+    pub features: Vec<f32>,
+}
+
+impl WalRecord {
+    /// The record payload bytes (everything inside the frame).
+    pub fn payload(&self) -> Vec<u8> {
+        let mut p = Vec::with_capacity(16 + 4 * self.features.len());
+        p.extend_from_slice(&self.seq.to_le_bytes());
+        p.extend_from_slice(&self.class.to_le_bytes());
+        p.extend_from_slice(&(self.features.len() as u32).to_le_bytes());
+        for v in &self.features {
+            p.extend_from_slice(&v.to_le_bytes());
+        }
+        p
+    }
+
+    /// Decode a record payload (the checksum has already been verified).
+    pub fn from_payload(bytes: &[u8]) -> Result<WalRecord> {
+        let mut c = crate::util::Cursor::new(bytes);
+        let seq = c.u64()?;
+        let class = c.u32()?;
+        let n = c.u32()? as usize;
+        let features = c.f32s(n)?;
+        c.finish()?;
+        Ok(WalRecord { seq, class, features })
+    }
+
+    /// The full on-disk frame: `[len][checksum][payload]`.
+    pub fn frame(&self) -> Vec<u8> {
+        frame_bytes(&self.payload())
+    }
+}
+
+fn frame_bytes(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_OVERHEAD + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// The segment identity header: which model and geometry the records
+/// belong to, and where the seq numbering resumes. Mirrors the CLOK
+/// identity checks — a WAL recorded under one model/geometry must never
+/// replay into another.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SegmentHeader {
+    /// owning model's registry name ("" = unowned, matches any model)
+    pub model: String,
+    /// feature count F of the recording config (replay sanity check)
+    pub features: u32,
+    /// class count of the recording config (replay sanity check)
+    pub classes: u32,
+    /// the store's `total_learns()` when this segment started; the first
+    /// record is `base_seq + 1`
+    pub base_seq: u64,
+}
+
+impl SegmentHeader {
+    fn payload(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        let b = self.model.as_bytes();
+        p.extend_from_slice(&(b.len().min(u16::MAX as usize) as u16).to_le_bytes());
+        p.extend_from_slice(&b[..b.len().min(u16::MAX as usize)]);
+        p.extend_from_slice(&self.features.to_le_bytes());
+        p.extend_from_slice(&self.classes.to_le_bytes());
+        p.extend_from_slice(&self.base_seq.to_le_bytes());
+        p
+    }
+
+    fn from_payload(bytes: &[u8]) -> Result<SegmentHeader> {
+        let mut c = crate::util::Cursor::new(bytes);
+        let model = c.str16()?;
+        let features = c.u32()?;
+        let classes = c.u32()?;
+        let base_seq = c.u64()?;
+        c.finish()?;
+        Ok(SegmentHeader { model, features, classes, base_seq })
+    }
+
+    /// The full segment preamble: magic, version, and the framed header.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&frame_bytes(&self.payload()));
+        out
+    }
+}
+
+/// Pop one `[len][checksum][payload]` frame from `bytes[*off..]`.
+/// `Ok(None)` = a torn tail starts at `*off` (short header, short body,
+/// oversized length, or checksum mismatch — all indistinguishable from a
+/// crash mid-write). `Err` = the frame is intact but its payload is
+/// malformed, which a torn write cannot produce: real corruption.
+fn next_frame<'a>(bytes: &'a [u8], off: &mut usize) -> Result<Option<&'a [u8]>> {
+    let rest = &bytes[*off..];
+    if rest.len() < FRAME_OVERHEAD {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+    if len > MAX_RECORD || rest.len() < FRAME_OVERHEAD + len {
+        return Ok(None);
+    }
+    let checksum = u64::from_le_bytes(rest[4..12].try_into().unwrap());
+    let payload = &rest[FRAME_OVERHEAD..FRAME_OVERHEAD + len];
+    if fnv1a64(payload) != checksum {
+        return Ok(None);
+    }
+    *off += FRAME_OVERHEAD + len;
+    Ok(Some(payload))
+}
+
+/// Stage a fresh segment (preamble only) in `<path>.tmp`, fsync, rename
+/// over `path`, fsync the directory entry — and keep the fd, which follows
+/// the inode across the rename. A crash anywhere leaves either the old
+/// segment or the new one, never a torn header.
+fn create_segment(path: &Path, header: &SegmentHeader) -> Result<std::fs::File> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create WAL dir {}", parent.display()))?;
+        }
+    }
+    let tmp = crate::hdc::knowledge::tmp_path(path);
+    let mut f = std::fs::OpenOptions::new()
+        .read(true)
+        .write(true)
+        .create(true)
+        .truncate(true)
+        .open(&tmp)
+        .with_context(|| format!("create {}", tmp.display()))?;
+    f.write_all(&header.to_bytes())?;
+    f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+    #[cfg(unix)]
+    {
+        let dir = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p,
+            _ => Path::new("."),
+        };
+        std::fs::File::open(dir)
+            .and_then(|d| d.sync_all())
+            .with_context(|| format!("fsync WAL dir {}", dir.display()))?;
+    }
+    Ok(f)
+}
+
+/// An open WAL segment: append-only writer plus the in-memory record tail
+/// (what [`crate::coordinator::Payload::WalTail`] serves to followers
+/// without touching the disk on the read path).
+pub struct Wal {
+    path: PathBuf,
+    file: std::fs::File,
+    header: SegmentHeader,
+    records: Vec<WalRecord>,
+    /// append records between fsyncs (1 = every append is durable before
+    /// it is acknowledged — the default; larger trades the tail of the
+    /// cadence for throughput)
+    fsync_every: usize,
+    unsynced: usize,
+    /// file length known fully written; a failed append truncates back to
+    /// this so later appends can never strand good records behind a tear
+    good_len: u64,
+    /// a failed append that could not be rolled back poisons the log
+    broken: bool,
+}
+
+impl Wal {
+    /// Open the segment at `path`, creating it when absent (or empty).
+    ///
+    /// An existing segment is verified against the caller's identity —
+    /// model (empty matches anything, as for CLOK restore), feature count,
+    /// class count — its torn tail is truncated on disk, and its valid
+    /// records are loaded for replay/serving. `base_seq_if_new` seeds a
+    /// freshly created segment (the restored store's `total_learns()`);
+    /// it is ignored when the segment already exists.
+    pub fn open(
+        path: impl AsRef<Path>,
+        model: &str,
+        features: usize,
+        classes: usize,
+        base_seq_if_new: u64,
+        fsync_every: usize,
+    ) -> Result<Wal> {
+        let path = path.as_ref();
+        let fsync_every = fsync_every.max(1);
+        let existing = std::fs::metadata(path).map(|m| m.len() > 0).unwrap_or(false);
+        if !existing {
+            let header = SegmentHeader {
+                model: model.to_string(),
+                features: features as u32,
+                classes: classes as u32,
+                base_seq: base_seq_if_new,
+            };
+            let file = create_segment(path, &header)?;
+            let good_len = header.to_bytes().len() as u64;
+            return Ok(Wal {
+                path: path.to_path_buf(),
+                file,
+                header,
+                records: Vec::new(),
+                fsync_every,
+                unsynced: 0,
+                good_len,
+                broken: false,
+            });
+        }
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read WAL segment {}", path.display()))?;
+        if bytes.len() < 8 || &bytes[0..4] != MAGIC {
+            bail!("{} is not a CLOW WAL segment (bad magic)", path.display());
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != VERSION {
+            bail!(
+                "unsupported WAL version {version} in {} (expected {VERSION})",
+                path.display()
+            );
+        }
+        let mut off = 8usize;
+        // the header frame is written atomically (tmp+fsync+rename): a torn
+        // or corrupt header cannot come from a crash mid-append, so it is a
+        // hard error rather than a truncation point
+        let header = match next_frame(&bytes, &mut off)? {
+            Some(p) => SegmentHeader::from_payload(p)
+                .with_context(|| format!("parse WAL header of {}", path.display()))?,
+            None => bail!("WAL segment {} has a corrupt header", path.display()),
+        };
+        if !header.model.is_empty() && !model.is_empty() && header.model != model {
+            bail!(
+                "WAL segment {} belongs to model '{}' (this executor serves model '{model}')",
+                path.display(),
+                header.model
+            );
+        }
+        if header.features as usize != features || header.classes as usize != classes {
+            bail!(
+                "WAL segment {} was recorded under F={}/classes={} \
+                 (serving config has F={features}/classes={classes})",
+                path.display(),
+                header.features,
+                header.classes
+            );
+        }
+        let mut records = Vec::new();
+        let mut expect = header.base_seq + 1;
+        let good_end = loop {
+            let start = off;
+            match next_frame(&bytes, &mut off)? {
+                None => break start,
+                Some(p) => {
+                    let rec = WalRecord::from_payload(p).with_context(|| {
+                        format!("parse WAL record at offset {start} of {}", path.display())
+                    })?;
+                    if rec.seq != expect {
+                        bail!(
+                            "WAL record at offset {start} of {} has seq {} (expected {expect}): \
+                             the log is out of order — refusing to replay",
+                            path.display(),
+                            rec.seq
+                        );
+                    }
+                    expect += 1;
+                    records.push(rec);
+                }
+            }
+        };
+        let mut file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("open WAL segment {}", path.display()))?;
+        if (good_end as u64) < bytes.len() as u64 {
+            // torn tail: drop the partial frame so future appends land on a
+            // clean boundary
+            file.set_len(good_end as u64)
+                .with_context(|| format!("truncate torn WAL tail of {}", path.display()))?;
+            file.sync_all()?;
+        }
+        file.seek(std::io::SeekFrom::Start(good_end as u64))?;
+        Ok(Wal {
+            path: path.to_path_buf(),
+            file,
+            header,
+            records,
+            fsync_every,
+            unsynced: 0,
+            good_len: good_end as u64,
+            broken: false,
+        })
+    }
+
+    /// The segment path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The segment identity header.
+    pub fn header(&self) -> &SegmentHeader {
+        &self.header
+    }
+
+    /// `total_learns()` at segment start; records continue from here.
+    pub fn base_seq(&self) -> u64 {
+        self.header.base_seq
+    }
+
+    /// Seq of the newest logged record (== `base_seq` when the segment is
+    /// empty). This is the monotonic learn sequence number STATS reports.
+    pub fn last_seq(&self) -> u64 {
+        self.records.last().map_or(self.header.base_seq, |r| r.seq)
+    }
+
+    /// The current segment's records, oldest first.
+    pub fn records(&self) -> &[WalRecord] {
+        &self.records
+    }
+
+    /// Append one learn; returns its assigned seq. The record is on disk
+    /// (and, per the fsync cadence, durable) before this returns — the
+    /// caller applies the learn and acknowledges only afterwards.
+    pub fn append(&mut self, class: u32, features: &[f32]) -> Result<u64> {
+        self.append_batch(std::slice::from_ref(&(class, features)))
+    }
+
+    /// Append a run of learns in one write (one cadence check, at most one
+    /// fsync); returns the first assigned seq. All-or-nothing: on a write
+    /// error the file is rolled back to the last good boundary and no seq
+    /// is consumed.
+    pub fn append_batch(&mut self, items: &[(u32, &[f32])]) -> Result<u64> {
+        if self.broken {
+            bail!("WAL {} is broken by an earlier failed append", self.path.display());
+        }
+        if items.is_empty() {
+            return Ok(self.last_seq());
+        }
+        let first = self.last_seq() + 1;
+        let mut buf = Vec::new();
+        let mut pending = Vec::with_capacity(items.len());
+        for (i, (class, features)) in items.iter().enumerate() {
+            let rec = WalRecord {
+                seq: first + i as u64,
+                class: *class,
+                features: features.to_vec(),
+            };
+            buf.extend_from_slice(&rec.frame());
+            pending.push(rec);
+        }
+        if let Err(e) = self.file.write_all(&buf) {
+            // roll back to the known-good boundary; if even that fails the
+            // log can no longer be trusted and every later append refuses
+            if self.file.set_len(self.good_len).is_err()
+                || self
+                    .file
+                    .seek(std::io::SeekFrom::Start(self.good_len))
+                    .is_err()
+            {
+                self.broken = true;
+            }
+            return Err(anyhow::Error::from(e)
+                .context(format!("append to WAL {}", self.path.display())));
+        }
+        self.good_len += buf.len() as u64;
+        self.unsynced += items.len();
+        if self.unsynced >= self.fsync_every {
+            self.sync()?;
+        }
+        self.records.extend(pending);
+        Ok(first)
+    }
+
+    /// Drop the newest `n` records from the log (disk and memory) — the
+    /// executor's compensation when a validated learn fails *after* its
+    /// append: the sample never reached the store, so leaving it logged
+    /// would replay an unacknowledged learn on restart. A failed rollback
+    /// poisons the log (every later append refuses) rather than risking a
+    /// replay/store mismatch.
+    pub fn rollback(&mut self, n: usize) -> Result<u64> {
+        let keep = self.records.len().saturating_sub(n);
+        let dropped: u64 = self.records[keep..]
+            .iter()
+            .map(|r| (FRAME_OVERHEAD + 16 + 4 * r.features.len()) as u64)
+            .sum();
+        let target = self.good_len - dropped;
+        if let Err(e) = self
+            .file
+            .set_len(target)
+            .and_then(|_| self.file.seek(std::io::SeekFrom::Start(target)).map(|_| ()))
+        {
+            self.broken = true;
+            return Err(anyhow::Error::from(e)
+                .context(format!("roll back WAL {}", self.path.display())));
+        }
+        self.good_len = target;
+        self.records.truncate(keep);
+        self.unsynced = self.unsynced.min(keep);
+        Ok(self.last_seq())
+    }
+
+    /// Flush appended records to stable storage now, regardless of cadence.
+    pub fn sync(&mut self) -> Result<()> {
+        if self.unsynced > 0 {
+            self.file
+                .sync_data()
+                .with_context(|| format!("fsync WAL {}", self.path.display()))?;
+            self.unsynced = 0;
+        }
+        Ok(())
+    }
+
+    /// Fold-point: a snapshot holding `base_seq` learns is durable, so the
+    /// segment restarts empty from there. Atomic (tmp+fsync+rename): a
+    /// crash mid-rotation leaves either the old segment or the new one.
+    pub fn rotate(&mut self, base_seq: u64) -> Result<()> {
+        let header = SegmentHeader { base_seq, ..self.header.clone() };
+        let file = create_segment(&self.path, &header)?;
+        self.good_len = header.to_bytes().len() as u64;
+        self.file = file;
+        self.header = header;
+        self.records.clear();
+        self.unsynced = 0;
+        self.broken = false;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HdConfig;
+    use crate::hdc::{HdClassifier, ProgressiveSearch};
+    use crate::runtime::NativeBackend;
+    use crate::util::prop::forall;
+    use crate::util::Rng;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("clo_hdnn_wal_{name}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn tiny() -> HdConfig {
+        HdConfig::synthetic("t", 8, 8, 32, 32, 8, 4)
+    }
+
+    fn classifier(cfg: &HdConfig) -> HdClassifier {
+        HdClassifier::new(
+            Box::new(NativeBackend::seeded(cfg.clone(), 7, 8).unwrap()),
+            ProgressiveSearch { tau: 0.5, min_segments: 1, mode: Default::default() },
+        )
+    }
+
+    fn sample(rng: &mut Rng, cfg: &HdConfig) -> (u32, Vec<f32>) {
+        let class = rng.below(cfg.classes) as u32;
+        let x: Vec<f32> = (0..cfg.features()).map(|_| rng.normal_f32() * 40.0).collect();
+        (class, x)
+    }
+
+    #[test]
+    fn fresh_segment_roundtrips_across_reopen() {
+        let path = tmp_dir("roundtrip").join("w.clog");
+        let _ = std::fs::remove_file(&path);
+        let cfg = tiny();
+        let mut rng = Rng::new(0xE01);
+        let mut wal = Wal::open(&path, "m", cfg.features(), cfg.classes, 0, 1).unwrap();
+        assert_eq!(wal.base_seq(), 0);
+        assert_eq!(wal.last_seq(), 0);
+        let mut expect = Vec::new();
+        for i in 0..5u64 {
+            let (class, x) = sample(&mut rng, &cfg);
+            assert_eq!(wal.append(class, &x).unwrap(), i + 1);
+            expect.push(WalRecord { seq: i + 1, class, features: x });
+        }
+        assert_eq!(wal.records(), expect.as_slice());
+        assert_eq!(wal.last_seq(), 5);
+        drop(wal);
+        let wal = Wal::open(&path, "m", cfg.features(), cfg.classes, 99, 1).unwrap();
+        assert_eq!(wal.base_seq(), 0, "base_seq_if_new ignored for existing segments");
+        assert_eq!(wal.records(), expect.as_slice());
+        assert_eq!(wal.last_seq(), 5);
+    }
+
+    #[test]
+    fn append_batch_matches_singles_and_continues_after_reopen() {
+        let dir = tmp_dir("batch");
+        let pa = dir.join("a.clog");
+        let pb = dir.join("b.clog");
+        let _ = std::fs::remove_file(&pa);
+        let _ = std::fs::remove_file(&pb);
+        let cfg = tiny();
+        let mut rng = Rng::new(0xE02);
+        let samples: Vec<(u32, Vec<f32>)> = (0..6).map(|_| sample(&mut rng, &cfg)).collect();
+        let mut a = Wal::open(&pa, "", cfg.features(), cfg.classes, 3, 2).unwrap();
+        for (c, x) in &samples {
+            a.append(*c, x).unwrap();
+        }
+        let mut b = Wal::open(&pb, "", cfg.features(), cfg.classes, 3, 2).unwrap();
+        let items: Vec<(u32, &[f32])> =
+            samples.iter().map(|(c, x)| (*c, x.as_slice())).collect();
+        assert_eq!(b.append_batch(&items).unwrap(), 4, "first seq after base 3");
+        assert_eq!(a.records(), b.records());
+        assert_eq!(std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+        drop(b);
+        // seq numbering resumes where the segment left off
+        let mut b = Wal::open(&pb, "", cfg.features(), cfg.classes, 0, 1).unwrap();
+        let (c, x) = sample(&mut rng, &cfg);
+        assert_eq!(b.append(c, &x).unwrap(), 10);
+    }
+
+    #[test]
+    fn identity_mismatches_are_refused() {
+        let path = tmp_dir("identity").join("w.clog");
+        let _ = std::fs::remove_file(&path);
+        let cfg = tiny();
+        let (f, k) = (cfg.features(), cfg.classes);
+        drop(Wal::open(&path, "alpha", f, k, 0, 1).unwrap());
+        let e = Wal::open(&path, "beta", f, k, 0, 1).unwrap_err().to_string();
+        assert!(e.contains("alpha") && e.contains("beta"), "{e}");
+        assert!(Wal::open(&path, "alpha", f + 1, k, 0, 1).is_err(), "feature mismatch");
+        assert!(Wal::open(&path, "alpha", f, k + 1, 0, 1).is_err(), "class mismatch");
+        // an empty caller model matches any stamped model (CLOK semantics)
+        assert!(Wal::open(&path, "", f, k, 0, 1).is_ok());
+        // garbage file refused outright
+        let junk = tmp_dir("identity").join("junk.clog");
+        std::fs::write(&junk, b"not a wal").unwrap();
+        assert!(Wal::open(&junk, "", f, k, 0, 1).unwrap_err().to_string().contains("magic"));
+    }
+
+    #[test]
+    fn rotation_starts_an_empty_segment_at_the_fold_point() {
+        let path = tmp_dir("rotate").join("w.clog");
+        let _ = std::fs::remove_file(&path);
+        let cfg = tiny();
+        let mut rng = Rng::new(0xE03);
+        let mut wal = Wal::open(&path, "m", cfg.features(), cfg.classes, 0, 1).unwrap();
+        for _ in 0..3 {
+            let (c, x) = sample(&mut rng, &cfg);
+            wal.append(c, &x).unwrap();
+        }
+        wal.rotate(3).unwrap();
+        assert_eq!(wal.base_seq(), 3);
+        assert_eq!(wal.last_seq(), 3);
+        assert!(wal.records().is_empty());
+        assert!(
+            !crate::hdc::knowledge::tmp_path(&path).exists(),
+            "rotation tmp must be renamed away"
+        );
+        let (c, x) = sample(&mut rng, &cfg);
+        assert_eq!(wal.append(c, &x).unwrap(), 4);
+        drop(wal);
+        let wal = Wal::open(&path, "m", cfg.features(), cfg.classes, 0, 1).unwrap();
+        assert_eq!(wal.base_seq(), 3);
+        assert_eq!(wal.records().len(), 1);
+        assert_eq!(wal.last_seq(), 4);
+    }
+
+    #[test]
+    fn out_of_order_seq_is_real_corruption_not_a_torn_tail() {
+        let path = tmp_dir("order").join("w.clog");
+        let _ = std::fs::remove_file(&path);
+        let cfg = tiny();
+        let mut wal = Wal::open(&path, "", cfg.features(), cfg.classes, 0, 1).unwrap();
+        wal.append(0, &vec![0.0; cfg.features()]).unwrap();
+        drop(wal);
+        // append a frame that skips seq 2 -> 7: checksums fine, order wrong
+        let rogue = WalRecord { seq: 7, class: 0, features: vec![0.0; cfg.features()] };
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&rogue.frame());
+        std::fs::write(&path, &bytes).unwrap();
+        let e = Wal::open(&path, "", cfg.features(), cfg.classes, 0, 1)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("seq"), "{e}");
+    }
+
+    /// Satellite: truncate the segment at **every byte boundary** of the
+    /// final record; recovery must yield exactly the records of the log
+    /// stopped one learn earlier, and replaying the recovered log into a
+    /// fresh classifier must land bit-identically on the store that never
+    /// saw the final learn (mirrors the CLOK corruption proptests).
+    #[test]
+    fn prop_torn_tail_recovers_the_previous_learn_boundary() {
+        forall(6, 0xE04, |rng| {
+            let dir = tmp_dir("torn");
+            let path = dir.join("w.clog");
+            let _ = std::fs::remove_file(&path);
+            let cfg = tiny();
+            let n = 2 + rng.below(4);
+            let samples: Vec<(u32, Vec<f32>)> =
+                (0..n).map(|_| sample(rng, &cfg)).collect();
+            let mut wal = Wal::open(&path, "m", cfg.features(), cfg.classes, 0, 1).unwrap();
+            let mut len_before_last = 0u64;
+            for (i, (c, x)) in samples.iter().enumerate() {
+                if i + 1 == n {
+                    len_before_last = std::fs::metadata(&path).unwrap().len();
+                }
+                wal.append(*c, x).unwrap();
+            }
+            let full = wal.records().to_vec();
+            drop(wal);
+            let bytes = std::fs::read(&path).unwrap();
+            assert!(len_before_last > 0 && (len_before_last as usize) < bytes.len());
+
+            // replay references: all n learns vs the first n-1
+            let mut with_last = classifier(&cfg);
+            let mut without_last = classifier(&cfg);
+            for (i, (c, x)) in samples.iter().enumerate() {
+                with_last.learn(x, *c as usize).unwrap();
+                if i + 1 < n {
+                    without_last.learn(x, *c as usize).unwrap();
+                }
+            }
+            assert_ne!(
+                with_last.store.packed(),
+                without_last.store.packed(),
+                "the final learn must change the store for the assertion to bite"
+            );
+
+            let torn = dir.join("torn.clog");
+            for cut in (len_before_last as usize)..bytes.len() {
+                std::fs::write(&torn, &bytes[..cut]).unwrap();
+                let wal =
+                    Wal::open(&torn, "m", cfg.features(), cfg.classes, 0, 1).unwrap();
+                assert_eq!(
+                    wal.records(),
+                    &full[..n - 1],
+                    "cut at byte {cut} of {}",
+                    bytes.len()
+                );
+                assert_eq!(
+                    std::fs::metadata(&torn).unwrap().len(),
+                    len_before_last,
+                    "the torn tail must be truncated on disk (cut {cut})"
+                );
+            }
+            // one full replay check: the recovered log reconstructs the
+            // stopped-one-earlier store bit for bit
+            std::fs::write(&torn, &bytes[..bytes.len() - 1]).unwrap();
+            let wal = Wal::open(&torn, "m", cfg.features(), cfg.classes, 0, 1).unwrap();
+            let mut replayed = classifier(&cfg);
+            for r in wal.records() {
+                replayed.learn(&r.features, r.class as usize).unwrap();
+            }
+            assert_eq!(replayed.store.packed(), without_last.store.packed());
+            assert_eq!(replayed.store.total_learns(), wal.last_seq());
+            for s in 0..cfg.segments {
+                assert_eq!(
+                    replayed.store.sums_segment(s),
+                    without_last.store.sums_segment(s)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn checksum_flip_in_the_final_record_truncates_there() {
+        let path = tmp_dir("flip").join("w.clog");
+        let _ = std::fs::remove_file(&path);
+        let cfg = tiny();
+        let mut rng = Rng::new(0xE05);
+        let mut wal = Wal::open(&path, "", cfg.features(), cfg.classes, 0, 1).unwrap();
+        let mut boundary = 0u64;
+        for i in 0..3 {
+            if i == 2 {
+                boundary = std::fs::metadata(&path).unwrap().len();
+            }
+            let (c, x) = sample(&mut rng, &cfg);
+            wal.append(c, &x).unwrap();
+        }
+        drop(wal);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40; // flip inside the final record's payload
+        std::fs::write(&path, &bytes).unwrap();
+        let wal = Wal::open(&path, "", cfg.features(), cfg.classes, 0, 1).unwrap();
+        assert_eq!(wal.records().len(), 2);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), boundary);
+    }
+
+    #[test]
+    fn rollback_drops_the_newest_records_on_disk_and_in_memory() {
+        let path = tmp_dir("rollback").join("w.clog");
+        let _ = std::fs::remove_file(&path);
+        let cfg = tiny();
+        let mut rng = Rng::new(0xE06);
+        let mut wal = Wal::open(&path, "", cfg.features(), cfg.classes, 0, 1).unwrap();
+        let mut boundary = 0u64;
+        for i in 0..4 {
+            if i == 2 {
+                boundary = std::fs::metadata(&path).unwrap().len();
+            }
+            let (c, x) = sample(&mut rng, &cfg);
+            wal.append(c, &x).unwrap();
+        }
+        assert_eq!(wal.rollback(2).unwrap(), 2);
+        assert_eq!(wal.records().len(), 2);
+        assert_eq!(wal.last_seq(), 2);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), boundary);
+        // seq numbering resumes at the rolled-back boundary, on disk too
+        let (c, x) = sample(&mut rng, &cfg);
+        assert_eq!(wal.append(c, &x).unwrap(), 3);
+        drop(wal);
+        let wal = Wal::open(&path, "", cfg.features(), cfg.classes, 0, 1).unwrap();
+        assert_eq!(wal.last_seq(), 3);
+    }
+
+    #[test]
+    fn record_payload_roundtrips_and_rejects_malformed() {
+        let rec = WalRecord { seq: 42, class: 3, features: vec![1.5, -2.25, 0.0] };
+        let p = rec.payload();
+        assert_eq!(WalRecord::from_payload(&p).unwrap(), rec);
+        assert!(WalRecord::from_payload(&p[..p.len() - 1]).is_err(), "truncated");
+        let mut bad = p.clone();
+        bad.push(0);
+        assert!(WalRecord::from_payload(&bad).is_err(), "trailing");
+        // the frame pins [len][fnv][payload]
+        let f = rec.frame();
+        assert_eq!(&f[0..4], &(p.len() as u32).to_le_bytes());
+        assert_eq!(&f[4..12], &fnv1a64(&p).to_le_bytes());
+        assert_eq!(&f[12..], p.as_slice());
+    }
+}

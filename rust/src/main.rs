@@ -111,7 +111,15 @@ serve flags: --listen <host:port> switches from the Poisson demo to the TCP
   by default — the socket is unauthenticated), --idle-timeout <secs> (close
   connections that send nothing for this long; default 60),
   --max-conns <n> (simultaneous-connection cap, peers beyond it are shed
-  with an error frame; default 10240)
+  with an error frame; default 10240), --wal <file> (durable learn log:
+  every Learn is appended + fsynced before it is acknowledged, a crashed
+  server replays the suffix on restart — per-model-ized like --snapshot;
+  a successful snapshot folds + rotates the log), --wal-fsync-every <n>
+  (fsync cadence in learns; default 1 = every learn durable before its
+  ack), --replicate-from <host:port> (follower mode: each hosted model
+  bootstraps from the same-named model on that primary, tails its learn
+  log, and serves reads locally — when the primary dies the follower keeps
+  serving its last-converged state and reconnects with backoff)
 
 loadgen flags: --connect <host:port> (required), --clients <n> (default 4),
   --connections <n> (concurrent connections, spread across the client
@@ -128,12 +136,17 @@ loadgen flags: --connect <host:port> (required), --clients <n> (default 4),
   an explicit server-side path; single-model; needs
   --allow-remote-snapshot-paths on the server),
   --per-class <n> (synthetic workload size, must match the server's),
+  --replicas <a,b> (read fan-out: infers round-robin across the primary
+  and these follower servers, learns stay pinned to the primary; the
+  JSON's targets section attributes traffic per server),
   --scale-connections <a,b,c> (after the main run, hold a..c concurrent
   connections open and drive --scale-requests (default 2) infer rounds on
   every one -> the JSON's connection-scaling section)
 
 info flags: --knowledge <file> verifies + summarizes a knowledge
-  checkpoint; --model <name> shows one serving model's registry entry
+  checkpoint; --model <name> shows one serving model's registry entry;
+  --connect <host:port> polls a live server and prints one stats line per
+  model (learns, classes, snapshots, the replication learn_seq)
 
 bench flags: --config tiny|isolet|ucihar|all, --quick (small sweep),
   --out <file> (default BENCH_classifier.json), --iters/--warmup,
@@ -251,6 +264,12 @@ fn native_backend(
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
+    // live-server polling: one stats line per hosted model. learn_seq is
+    // what a replication operator watches — compare a follower's against
+    // the primary's to measure staleness.
+    if let Some(addr) = args.get("connect") {
+        return cmd_info_connect(args, addr);
+    }
     // knowledge-checkpoint inspection: verify (magic, checksum, shapes,
     // view bit-identity) and summarize, exiting nonzero on corruption
     if let Some(path) = args.get("knowledge") {
@@ -350,6 +369,39 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 /// `clo_hdnn info --model <name>`: one serving model's registry view.
+/// `clo_hdnn info --connect <addr>`: poll a live server and print one
+/// stats line per hosted model (or only `--model`'s) — knowledge counters
+/// plus the monotonic `learn_seq` that replication staleness checks key
+/// off. Exits nonzero when the server is unreachable, so scripts can use
+/// it both as a health probe and a catch-up poll.
+fn cmd_info_connect(args: &Args, addr: &str) -> Result<()> {
+    use clo_hdnn::serve::Client;
+    let mut c = Client::connect_with_retry(addr, 5, std::time::Duration::from_millis(20))?;
+    c.set_timeout(Some(std::time::Duration::from_secs(10)))?;
+    let (version, default_model, mut models) = c.hello()?;
+    if let Some(one) = args.get("model") {
+        models = vec![one.to_string()];
+    } else if models.is_empty() {
+        models = vec![String::new()];
+    }
+    for m in &models {
+        if !m.is_empty() && version < clo_hdnn::serve::wire::WIRE_V2 {
+            anyhow::bail!(
+                "server at {addr} only speaks wire v{version}: cannot target model '{m}'"
+            );
+        }
+        c.set_model(m)?;
+        let st = c.stats()?;
+        let label = if m.is_empty() { default_model.as_str() } else { m.as_str() };
+        println!(
+            "model {label}: learns {} | classes {} | snapshots {} | learn_seq {} | \
+             served {} | wire_errors {}",
+            st.learns, st.trained_classes, st.snapshots, st.learn_seq, st.served, st.wire_errors
+        );
+    }
+    Ok(())
+}
+
 fn cmd_info_model(args: &Args, model: &str) -> Result<()> {
     let dir = artifacts_dir(args);
     if !dir.join("manifest.json").exists() {
@@ -669,6 +721,10 @@ fn serve_coordinator_opts(
         snapshot_path,
         snapshot_every,
         restore_path,
+        // the Poisson demo is ephemeral by design; durability is a listen-
+        // mode concern (--wal)
+        wal_path: None,
+        wal_fsync_every: 1,
     })
 }
 
@@ -780,6 +836,11 @@ fn listen_model_spec(
         None if args.flag("no-restore") => None,
         None => snapshot_path.clone().filter(|p| p.exists()),
     };
+    // durable learn log: per-model-ized exactly like --snapshot, so every
+    // model gets its own segment file (w.clow -> w_<model>.clow)
+    let wal_path = args
+        .get("wal")
+        .map(|p| per_model_path(std::path::Path::new(p), name, multi));
     let opts = CoordinatorOptions {
         backend,
         model: name.to_string(),
@@ -792,6 +853,8 @@ fn listen_model_spec(
         snapshot_path,
         snapshot_every,
         restore_path,
+        wal_path,
+        wal_fsync_every: args.usize_or("wal-fsync-every", 1)?,
     };
     Ok(clo_hdnn::serve::ModelSpec::new(name, opts))
 }
@@ -893,16 +956,28 @@ fn cmd_serve_listen(args: &Args) -> Result<()> {
     }
     for spec in &specs {
         println!(
-            "model {:12} on {:?} | search {:?} | snapshot {:?} (every {} learns) | restore {:?}",
+            "model {:12} on {:?} | search {:?} | snapshot {:?} (every {} learns) | restore {:?} | wal {:?}",
             spec.name,
             spec.opts.backend,
             spec.opts.search_mode,
             spec.opts.snapshot_path,
             spec.opts.snapshot_every,
-            spec.opts.restore_path
+            spec.opts.restore_path,
+            spec.opts.wal_path
         );
     }
     let registry = Registry::start(specs)?;
+    // follower mode: each hosted model tails the same-named model on the
+    // primary (grab the coordinator handles before the server takes the
+    // registry)
+    let replica_coords: Vec<(String, std::sync::Arc<Coordinator>)> =
+        match args.get("replicate-from") {
+            Some(_) => names
+                .iter()
+                .map(|n| registry.get(n).map(|c| (n.clone(), c.clone())))
+                .collect::<Result<_>>()?,
+            None => Vec::new(),
+        };
     // optional pre-learn phase into the default model (default 0:
     // knowledge comes from the checkpoints and from Learn traffic)
     let learn_arg = args.usize_or("learn", 0)?;
@@ -940,9 +1015,27 @@ fn cmd_serve_listen(args: &Args) -> Result<()> {
         names.len(),
         names.join(", ")
     );
+    let mut replicas: Vec<clo_hdnn::serve::Replica> = Vec::new();
+    if let Some(primary) = args.get("replicate-from") {
+        for (name, coord) in replica_coords {
+            let mut ropts = clo_hdnn::serve::ReplicaOptions::new(primary);
+            ropts.model = name;
+            replicas.push(clo_hdnn::serve::Replica::start(coord, ropts)?);
+        }
+        println!(
+            "following {} model(s) on primary {primary} (serving local reads; \
+             learns arrive via the primary's log)",
+            replicas.len()
+        );
+    }
     let duration = args.f64_or("duration", 0.0)?;
     if duration > 0.0 {
         std::thread::sleep(std::time::Duration::from_secs_f64(duration));
+        // quiesce replication first so no learn lands between the server's
+        // shutdown snapshot flush and process exit
+        for r in replicas {
+            r.stop();
+        }
         let (served, wire_errors, learns) = server.counters();
         println!(
             "shutting down after {duration}s: served {served} frames | {learns} learns | {wire_errors} wire errors"
@@ -980,6 +1073,9 @@ struct LoadgenPending {
 struct ConnReport {
     /// global connection index (thread-strided across client threads)
     conn: usize,
+    /// which server this connection talks to: 0 = the primary (--connect),
+    /// 1.. = the matching --replicas entry
+    target: usize,
     requests: u64,
     errors: u64,
     timeouts: u64,
@@ -993,29 +1089,26 @@ struct LoadgenConn {
     report: ConnReport,
 }
 
-/// Connect (negotiating wire v2 when asked) with a short retry/backoff
-/// loop — a server draining a large accept burst can leave the listen
-/// backlog momentarily full — and arm the per-reply deadline.
+/// Connect (negotiating wire v2 when asked) via the client's bounded
+/// retry/backoff-with-jitter loop — a server draining a large accept burst
+/// can leave the listen backlog momentarily full, and a hundred loadgen
+/// threads retrying in lockstep would keep it full — then arm the
+/// per-reply deadline.
 fn loadgen_connect(
     addr: &str,
     v2: bool,
     timeout: Option<std::time::Duration>,
 ) -> Result<clo_hdnn::serve::Client> {
     use clo_hdnn::serve::Client;
-    let mut last = None;
-    for attempt in 0u64..40 {
-        match if v2 { Client::connect_v2(addr) } else { Client::connect(addr) } {
-            Ok(mut c) => {
-                c.set_timeout(timeout)?;
-                return Ok(c);
-            }
-            Err(e) => {
-                last = Some(e);
-                std::thread::sleep(std::time::Duration::from_millis(5 + 5 * attempt));
-            }
+    let mut c = Client::connect_with_retry(addr, 10, std::time::Duration::from_millis(10))?;
+    if v2 {
+        let (version, _, _) = c.hello()?;
+        if version < clo_hdnn::serve::wire::WIRE_V2 {
+            anyhow::bail!("server at {addr} only speaks wire v{version}");
         }
     }
-    Err(last.unwrap_or_else(|| anyhow::anyhow!("connect {addr} failed")))
+    c.set_timeout(timeout)?;
+    Ok(c)
 }
 
 /// Collect one reply off a pipelined connection and fold it into the
@@ -1187,16 +1280,17 @@ fn accuracy_json(correct: usize, infers: usize) -> clo_hdnn::util::json::Json {
     }
 }
 
-/// driving several) and write `BENCH_serve.json` (version 3, with
-/// per-connection error/timeout attribution). `--models a,b` targets a
-/// model mix over wire v2, `--pipeline k` keeps k requests in flight per
-/// connection, `--connections n` spreads the streams over n sockets, and
-/// `--scale-connections a,b,c` appends a connection-scaling curve against
-/// the reactor. With `--learn-frac 0` the per-model request streams are
-/// fully deterministic, so accuracy comparisons across a server restart
-/// are exact — the warm-restart CI gate relies on that (the sample
-/// schedule is per client *thread*, so connection count doesn't perturb
-/// it).
+/// driving several) and write `BENCH_serve.json` (version 4, with
+/// per-connection and per-target error/timeout attribution). `--models
+/// a,b` targets a model mix over wire v2, `--pipeline k` keeps k requests
+/// in flight per connection, `--connections n` spreads the streams over n
+/// sockets, `--replicas a,b` fans Infer traffic out over follower servers
+/// (learns stay pinned to the primary), and `--scale-connections a,b,c`
+/// appends a connection-scaling curve against the reactor. With
+/// `--learn-frac 0` the per-model request streams are fully deterministic,
+/// so accuracy comparisons across a server restart are exact — the
+/// warm-restart CI gate relies on that (the sample schedule is per client
+/// *thread*, so connection count doesn't perturb it).
 fn cmd_loadgen(args: &Args) -> Result<()> {
     use clo_hdnn::coordinator::ServeMetrics;
     use clo_hdnn::serve::{Client, ReqBody};
@@ -1208,6 +1302,11 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         .get("connect")
         .ok_or_else(|| anyhow::anyhow!("loadgen needs --connect <host:port>"))?
         .to_string();
+    // read fan-out: follower servers that serve Infer traffic alongside the
+    // primary. Learns always go to the primary — follower knowledge must
+    // arrive through the primary's learn log, or the stores would diverge.
+    let replica_addrs: Vec<String> =
+        args.get("replicas").map(parse_model_list).unwrap_or_default();
     let model_names: Vec<String> = match args.get("models") {
         Some(list) => parse_model_list(list),
         None => args.get("model").map(|m| vec![m.to_string()]).unwrap_or_default(),
@@ -1258,23 +1357,48 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
 
     println!(
         "loadgen -> {addr}: {clients} clients x {requests} requests over {connections} \
-         connection(s), learn-frac {learn_frac}, pipeline {pipeline}, models [{}], search {:?}",
+         connection(s), learn-frac {learn_frac}, pipeline {pipeline}, models [{}], \
+         search {:?}, replicas [{}]",
         works.iter().map(|w| w.label.as_str()).collect::<Vec<_>>().join(","),
-        mode
+        mode,
+        replica_addrs.join(",")
     );
     type PerModel = Vec<(ServeMetrics, usize, usize)>;
     let t0 = std::time::Instant::now();
     let results: Vec<Result<(PerModel, Vec<ConnReport>)>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..clients)
             .map(|t| {
-                let (addr, works) = (&addr, &works);
+                let (addr, works, replica_addrs) = (&addr, &works, &replica_addrs);
                 s.spawn(move || -> Result<(PerModel, Vec<ConnReport>)> {
                     let mut conns: Vec<LoadgenConn> = Vec::new();
                     for g in (0..connections).filter(|g| g % clients == t) {
                         conns.push(LoadgenConn {
                             client: loadgen_connect(addr, v2, timeout)?,
                             pending: HashMap::new(),
-                            report: ConnReport { conn: g, requests: 0, errors: 0, timeouts: 0 },
+                            report: ConnReport {
+                                conn: g,
+                                target: 0,
+                                requests: 0,
+                                errors: 0,
+                                timeouts: 0,
+                            },
+                        });
+                    }
+                    // primary connections first; then one connection per
+                    // follower (per thread), with globally unique ids past
+                    // the primary range
+                    let primary_count = conns.len().max(1);
+                    for (ri, raddr) in replica_addrs.iter().enumerate() {
+                        conns.push(LoadgenConn {
+                            client: loadgen_connect(raddr, v2, timeout)?,
+                            pending: HashMap::new(),
+                            report: ConnReport {
+                                conn: connections + ri * clients + t,
+                                target: ri + 1,
+                                requests: 0,
+                                errors: 0,
+                                timeouts: 0,
+                            },
                         });
                     }
                     let mut rng = Rng::new(0xC0FF_EE00 + t as u64);
@@ -1306,7 +1430,16 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                             };
                             (body, Some(w.test.label(idx)))
                         };
-                        let conn = &mut conns[i % conns.len()];
+                        // learns stay pinned to the primary's connections;
+                        // infers round-robin across every target (a lagging
+                        // follower answers from its last-converged state —
+                        // stale, never wrong-model)
+                        let slot = if expect.is_none() && !replica_addrs.is_empty() {
+                            i % primary_count
+                        } else {
+                            i % conns.len()
+                        };
+                        let conn = &mut conns[slot];
                         let q0 = std::time::Instant::now();
                         let id = conn.client.send_for(&w.wire_model, body)?;
                         conn.report.requests += 1;
@@ -1314,14 +1447,24 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                         // the pipeline window is per connection
                         while conn.pending.len() >= pipeline {
                             if !loadgen_drain_one(conn, &mut per)? {
-                                conn.client = loadgen_connect(addr, v2, timeout)?;
+                                let taddr = if conn.report.target == 0 {
+                                    addr.as_str()
+                                } else {
+                                    replica_addrs[conn.report.target - 1].as_str()
+                                };
+                                conn.client = loadgen_connect(taddr, v2, timeout)?;
                             }
                         }
                     }
                     for conn in &mut conns {
                         while !conn.pending.is_empty() {
                             if !loadgen_drain_one(conn, &mut per)? {
-                                conn.client = loadgen_connect(addr, v2, timeout)?;
+                                let taddr = if conn.report.target == 0 {
+                                    addr.as_str()
+                                } else {
+                                    replica_addrs[conn.report.target - 1].as_str()
+                                };
+                                conn.client = loadgen_connect(taddr, v2, timeout)?;
                             }
                         }
                     }
@@ -1390,16 +1533,39 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     // name offending connections (an operator's first isolation question:
     // "which connection is misbehaving?"); quiet when the run is clean
     if conn_reports.iter().any(|r| r.errors + r.timeouts > 0) {
-        let mut ct = Table::new(&["conn", "requests", "errors", "timeouts"]);
+        let mut ct = Table::new(&["conn", "target", "requests", "errors", "timeouts"]);
         for r in conn_reports.iter().filter(|r| r.errors + r.timeouts > 0) {
             ct.row(&[
                 format!("{}", r.conn),
+                format!("{}", r.target),
                 format!("{}", r.requests),
                 format!("{}", r.errors),
                 format!("{}", r.timeouts),
             ]);
         }
         ct.print();
+    }
+
+    // per-target attribution (primary first, then each --replicas entry):
+    // which server carried the traffic, and which one produced the errors
+    let mut per_target = vec![(0u64, 0u64, 0u64); 1 + replica_addrs.len()];
+    for r in &conn_reports {
+        let t = &mut per_target[r.target];
+        t.0 += r.requests;
+        t.1 += r.errors;
+        t.2 += r.timeouts;
+    }
+    if !replica_addrs.is_empty() {
+        let mut tt = Table::new(&["target", "requests", "errors", "timeouts"]);
+        for (ti, (req, err, to)) in per_target.iter().enumerate() {
+            let label = if ti == 0 {
+                format!("{addr} (primary)")
+            } else {
+                replica_addrs[ti - 1].clone()
+            };
+            tt.row(&[label, format!("{req}"), format!("{err}"), format!("{to}")]);
+        }
+        tt.print();
     }
 
     // optional connection-scaling sweep: how does the server hold up as
@@ -1498,7 +1664,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     );
 
     let doc = Json::obj(vec![
-        ("version", Json::Num(3.0)),
+        ("version", Json::Num(4.0)),
         (
             "config",
             Json::Str(works.iter().map(|w| w.label.clone()).collect::<Vec<_>>().join(",")),
@@ -1534,9 +1700,40 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                     .map(|r| {
                         Json::obj(vec![
                             ("conn", Json::Num(r.conn as f64)),
+                            ("target", Json::Num(r.target as f64)),
                             ("requests", Json::Num(r.requests as f64)),
                             ("errors", Json::Num(r.errors as f64)),
                             ("timeouts", Json::Num(r.timeouts as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "targets",
+            Json::Arr(
+                per_target
+                    .iter()
+                    .enumerate()
+                    .map(|(ti, (req, err, to))| {
+                        Json::obj(vec![
+                            (
+                                "addr",
+                                Json::Str(if ti == 0 {
+                                    addr.clone()
+                                } else {
+                                    replica_addrs[ti - 1].clone()
+                                }),
+                            ),
+                            (
+                                "role",
+                                Json::Str(
+                                    if ti == 0 { "primary" } else { "replica" }.to_string(),
+                                ),
+                            ),
+                            ("requests", Json::Num(*req as f64)),
+                            ("errors", Json::Num(*err as f64)),
+                            ("timeouts", Json::Num(*to as f64)),
                         ])
                     })
                     .collect(),

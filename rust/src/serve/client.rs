@@ -31,6 +31,7 @@
 //! # }
 //! ```
 
+use crate::hdc::wal::WalRecord;
 use crate::hdc::SearchMode;
 use crate::serve::wire::{self, ReqBody, WireConnStats, WireRequest, WireResponse, WireStats};
 use crate::Result;
@@ -79,6 +80,19 @@ impl std::fmt::Display for RecvTimeout {
 
 impl std::error::Error for RecvTimeout {}
 
+/// One learn-log tail reply over the wire (see [`Client::wal_tail`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WalTailReply {
+    /// the primary log segment's fold point: learns at or before this
+    /// sequence live only in the snapshot the segment was rotated against
+    pub base_seq: u64,
+    /// the primary log's newest acknowledged sequence (the reply may stop
+    /// short of it when byte-budget-capped — keep tailing until caught up)
+    pub last_seq: u64,
+    /// the records newer than the request's `after`, oldest first
+    pub records: Vec<WalRecord>,
+}
+
 /// One classification reply over the wire.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct InferReply {
@@ -116,6 +130,47 @@ impl Client {
             model: String::new(),
             timeout: None,
         })
+    }
+
+    /// Like [`Client::connect`], but retry a refused or unreachable server
+    /// for up to `attempts` tries with exponential backoff and full jitter
+    /// starting from `base_delay` (capped at 2 s per sleep) — the polite
+    /// way to wait out a server that is still binding its port, or a
+    /// replication primary that is restarting. The total worst-case wait
+    /// is bounded; the last connect error is returned when every attempt
+    /// fails.
+    pub fn connect_with_retry(
+        addr: &str,
+        attempts: usize,
+        base_delay: Duration,
+    ) -> Result<Client> {
+        const MAX_DELAY: Duration = Duration::from_secs(2);
+        let attempts = attempts.max(1);
+        let seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos() as u64 ^ d.as_secs())
+            .unwrap_or(0x9E37_79B9);
+        let mut rng = crate::util::Rng::new(seed ^ addr.len() as u64);
+        let mut delay = base_delay.max(Duration::from_millis(1)).min(MAX_DELAY);
+        let mut last = None;
+        for attempt in 0..attempts {
+            match Client::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => last = Some(e),
+            }
+            if attempt + 1 < attempts {
+                // full jitter in (delay/2, delay]: concurrent retriers
+                // (loadgen threads, follower tailers) spread out instead
+                // of stampeding the listen backlog in lockstep
+                let nanos = delay.as_nanos() as u64;
+                let jittered = nanos / 2 + rng.next_u64() % (nanos / 2 + 1);
+                std::thread::sleep(Duration::from_nanos(jittered));
+                delay = (delay * 2).min(MAX_DELAY);
+            }
+        }
+        Err(last
+            .expect("attempts >= 1, so at least one connect ran")
+            .context(format!("connect {addr}: still failing after {attempts} attempts")))
     }
 
     /// Bound every subsequent [`Client::recv`] (and the high-level calls
@@ -319,6 +374,30 @@ impl Client {
         match self.call(ReqBody::ConnStats)? {
             WireResponse::ConnStats { stats, .. } => Ok(stats),
             other => bail!("unexpected reply to conn-stats: {other:?}"),
+        }
+    }
+
+    /// Fetch the targeted model's learn-log records newer than `after`
+    /// (replication tailing). Fails with a typed [`ServerError`] when the
+    /// model keeps no WAL, or when `after` predates the log's fold point —
+    /// re-bootstrap with [`Client::snapshot_fetch`] in the latter case.
+    pub fn wal_tail(&mut self, after: u64) -> Result<WalTailReply> {
+        match self.call(ReqBody::WalTail { after })? {
+            WireResponse::WalTail { base_seq, last_seq, records, .. } => {
+                Ok(WalTailReply { base_seq, last_seq, records })
+            }
+            other => bail!("unexpected reply to wal-tail: {other:?}"),
+        }
+    }
+
+    /// Fetch the targeted model's live knowledge store as CLOK checkpoint
+    /// bytes plus the learn sequence the image captures (replication
+    /// bootstrap; feed the bytes to a local restore, then tail from the
+    /// returned sequence).
+    pub fn snapshot_fetch(&mut self) -> Result<(u64, Vec<u8>)> {
+        match self.call(ReqBody::SnapshotFetch)? {
+            WireResponse::SnapshotImage { last_seq, image, .. } => Ok((last_seq, image)),
+            other => bail!("unexpected reply to snapshot-fetch: {other:?}"),
         }
     }
 }

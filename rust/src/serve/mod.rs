@@ -40,10 +40,12 @@
 pub mod client;
 mod reactor;
 pub mod registry;
+pub mod replica;
 pub mod wire;
 
-pub use client::{Client, InferReply, RecvTimeout, ServerError};
+pub use client::{Client, InferReply, RecvTimeout, ServerError, WalTailReply};
 pub use registry::{ModelSpec, Registry};
+pub use replica::{Replica, ReplicaOptions, ReplicaStatus};
 pub use wire::{ReqBody, WireConnStats, WireRequest, WireResponse, WireStats};
 
 use crate::coordinator::{ReplyKind, Response};
@@ -236,7 +238,36 @@ pub(crate) fn translate(resp: &Response, stats: &ServerStats) -> WireResponse {
                     learns: k.learns,
                     trained_classes: k.trained_classes as u32,
                     snapshots: k.snapshots,
+                    learn_seq: k.learn_seq,
                 },
+            }
+        }
+        ReplyKind::WalTail => WireResponse::WalTail {
+            id,
+            base_seq: resp.wal_base.unwrap_or(0),
+            last_seq: resp.stats.map(|s| s.learn_seq).unwrap_or(0),
+            records: resp.records.clone().unwrap_or_default(),
+        },
+        ReplyKind::SnapshotImage => {
+            let image = resp.image.clone().unwrap_or_default();
+            // the reply header adds id/kind/last_seq/img_len (21 bytes);
+            // refuse anything the frame cap could not carry rather than
+            // tearing the connection down at write time
+            if image.len() + 64 > wire::MAX_FRAME {
+                return WireResponse::Error {
+                    id,
+                    msg: format!(
+                        "snapshot image is {} bytes — too large for the \
+                         {}-byte frame cap",
+                        image.len(),
+                        wire::MAX_FRAME
+                    ),
+                };
+            }
+            WireResponse::SnapshotImage {
+                id,
+                last_seq: resp.stats.map(|s| s.learn_seq).unwrap_or(0),
+                image,
             }
         }
     }

@@ -704,6 +704,8 @@ fn handle_frame(
             Payload::Snapshot(if path.is_empty() { None } else { Some(PathBuf::from(path)) })
         }
         ReqBody::Stats => Payload::Stats,
+        ReqBody::WalTail { after } => Payload::WalTail { after },
+        ReqBody::SnapshotFetch => Payload::SnapshotFetch,
         ReqBody::ConnStats | ReqBody::Hello { .. } => unreachable!("handled above"),
     };
     conn.pending.push_back((id, coord, exec_payload));

@@ -33,6 +33,8 @@
 //! OP_STATS      (empty)
 //! OP_HELLO      version u32 (the highest version the client speaks)
 //! OP_CONN_STATS (empty — answered by the reactor, never an executor)
+//! OP_WAL_TAIL   after u64 (highest learn sequence the caller has applied)
+//! OP_SNAPSHOT_FETCH (empty)
 //! ```
 //!
 //! ## Response payloads
@@ -43,12 +45,16 @@
 //!   OP_LEARN     class u32
 //!   OP_SNAPSHOT  path_len u16, path utf-8
 //!   OP_STATS     served u64, wire_errors u64, learns u64,
-//!                trained_classes u32, snapshots u64
+//!                trained_classes u32, snapshots u64, learn_seq u64
 //!   OP_HELLO     version u32, default_model str16,
 //!                count u16, count × model str16
 //!   OP_CONN_STATS conn_id u64, age_ms u64, frames u64, replies u64,
 //!                errors u64, inflight u32, pending u32, peak_window u32,
 //!                queued_write_bytes u64
+//!   OP_WAL_TAIL  base_seq u64, last_seq u64, count u32,
+//!                count × (rec_len u32, rec: seq u64, class u32,
+//!                         n u32, n × f32)
+//!   OP_SNAPSHOT_FETCH last_seq u64, img_len u32, image (CLOK bytes)
 //!   KIND_ERROR   msg_len u16, msg utf-8
 //! ```
 //!
@@ -61,6 +67,7 @@
 //! header or an oversized length tears the connection down (after a
 //! best-effort error reply).
 
+use crate::hdc::wal::WalRecord;
 use crate::Result;
 use anyhow::bail;
 use std::io::{Read, Write};
@@ -96,6 +103,13 @@ pub const OP_HELLO: u8 = 5;
 /// answered by the serving reactor directly — it never crosses an
 /// executor, so it stays answerable even when the executors are saturated.
 pub const OP_CONN_STATS: u8 = 6;
+/// Learn-log tail request/reply opcode: the records with sequence number
+/// greater than the caller's `after` (replication tailing; requires the
+/// target model to run with a WAL).
+pub const OP_WAL_TAIL: u8 = 7;
+/// In-memory knowledge-image request/reply opcode: the target model's live
+/// store serialized as CLOK bytes (replication bootstrap).
+pub const OP_SNAPSHOT_FETCH: u8 = 8;
 /// Response-only kind tag for error replies.
 pub const KIND_ERROR: u8 = 0xEE;
 
@@ -320,6 +334,17 @@ pub enum ReqBody {
     /// model field is carried-but-ignored on v2; the reply never touches
     /// an executor)
     ConnStats,
+    /// fetch the target model's learn-log records newer than `after`
+    /// (replication tailing; errors when the model keeps no WAL, or when
+    /// `after` predates the log's fold point — re-bootstrap with
+    /// [`ReqBody::SnapshotFetch`] in that case)
+    WalTail {
+        /// the highest learn sequence the caller has already applied
+        after: u64,
+    },
+    /// fetch the target model's live knowledge store as CLOK bytes
+    /// (replication bootstrap; works with or without a WAL)
+    SnapshotFetch,
     /// negotiate the wire version (always encoded in the v1 shape)
     Hello {
         /// highest protocol version the client speaks
@@ -359,6 +384,8 @@ impl WireRequest {
             ReqBody::Snapshot { .. } => OP_SNAPSHOT,
             ReqBody::Stats => OP_STATS,
             ReqBody::ConnStats => OP_CONN_STATS,
+            ReqBody::WalTail { .. } => OP_WAL_TAIL,
+            ReqBody::SnapshotFetch => OP_SNAPSHOT_FETCH,
             ReqBody::Hello { .. } => OP_HELLO,
         }
     }
@@ -399,7 +426,8 @@ impl WireRequest {
                 }
             }
             ReqBody::Snapshot { path } => put_str16(&mut out, path),
-            ReqBody::Stats | ReqBody::ConnStats => {}
+            ReqBody::Stats | ReqBody::ConnStats | ReqBody::SnapshotFetch => {}
+            ReqBody::WalTail { after } => out.extend_from_slice(&after.to_le_bytes()),
             ReqBody::Hello { version } => out.extend_from_slice(&version.to_le_bytes()),
         }
         Ok(out)
@@ -437,6 +465,8 @@ impl WireRequest {
             OP_SNAPSHOT => ReqBody::Snapshot { path: c.str16()? },
             OP_STATS => ReqBody::Stats,
             OP_CONN_STATS => ReqBody::ConnStats,
+            OP_WAL_TAIL => ReqBody::WalTail { after: c.u64()? },
+            OP_SNAPSHOT_FETCH => ReqBody::SnapshotFetch,
             OP_HELLO => ReqBody::Hello { version: c.u32()? },
             other => bail!("unknown opcode {other:#04x}"),
         };
@@ -460,6 +490,11 @@ pub struct WireStats {
     pub trained_classes: u32,
     /// snapshots the target model wrote this process
     pub snapshots: u64,
+    /// the target model's monotonic learn sequence: its WAL's last
+    /// acknowledged sequence when it logs learns, else its live learn
+    /// count. A follower compares this against its own applied sequence to
+    /// detect stale reads.
+    pub learn_seq: u64,
 }
 
 /// Reactor-side counters for one connection, as carried by an
@@ -533,6 +568,32 @@ pub enum WireResponse {
         /// the sending connection's counters
         stats: WireConnStats,
     },
+    /// learn-log suffix (replication tailing)
+    WalTail {
+        /// echoed request id
+        id: u64,
+        /// the log segment's fold point: records at or before this
+        /// sequence live only in the snapshot the segment was rotated
+        /// against
+        base_seq: u64,
+        /// the log's newest acknowledged sequence (the suffix may stop
+        /// short of it when the reply was byte-budget-capped — keep
+        /// tailing until `records` catches up)
+        last_seq: u64,
+        /// the records with sequence greater than the request's `after`,
+        /// oldest first
+        records: Vec<WalRecord>,
+    },
+    /// serialized live knowledge store (replication bootstrap)
+    SnapshotImage {
+        /// echoed request id
+        id: u64,
+        /// the learn sequence the image captures (apply tail records
+        /// newer than this)
+        last_seq: u64,
+        /// the CLOK checkpoint bytes
+        image: Vec<u8>,
+    },
     /// version-negotiation acknowledgement
     Hello {
         /// echoed request id
@@ -563,6 +624,8 @@ impl WireResponse {
             | WireResponse::Snapshot { id, .. }
             | WireResponse::Stats { id, .. }
             | WireResponse::ConnStats { id, .. }
+            | WireResponse::WalTail { id, .. }
+            | WireResponse::SnapshotImage { id, .. }
             | WireResponse::Hello { id, .. }
             | WireResponse::Error { id, .. } => *id,
         }
@@ -597,6 +660,7 @@ impl WireResponse {
                 out.extend_from_slice(&stats.learns.to_le_bytes());
                 out.extend_from_slice(&stats.trained_classes.to_le_bytes());
                 out.extend_from_slice(&stats.snapshots.to_le_bytes());
+                out.extend_from_slice(&stats.learn_seq.to_le_bytes());
             }
             WireResponse::ConnStats { id, stats } => {
                 out.extend_from_slice(&id.to_le_bytes());
@@ -610,6 +674,26 @@ impl WireResponse {
                 out.extend_from_slice(&stats.pending.to_le_bytes());
                 out.extend_from_slice(&stats.peak_window.to_le_bytes());
                 out.extend_from_slice(&stats.queued_write_bytes.to_le_bytes());
+            }
+            WireResponse::WalTail { id, base_seq, last_seq, records } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(OP_WAL_TAIL);
+                out.extend_from_slice(&base_seq.to_le_bytes());
+                out.extend_from_slice(&last_seq.to_le_bytes());
+                let n = records.len().min(u32::MAX as usize);
+                out.extend_from_slice(&(n as u32).to_le_bytes());
+                for rec in &records[..n] {
+                    let p = rec.payload();
+                    out.extend_from_slice(&(p.len() as u32).to_le_bytes());
+                    out.extend_from_slice(&p);
+                }
+            }
+            WireResponse::SnapshotImage { id, last_seq, image } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(OP_SNAPSHOT_FETCH);
+                out.extend_from_slice(&last_seq.to_le_bytes());
+                out.extend_from_slice(&(image.len() as u32).to_le_bytes());
+                out.extend_from_slice(image);
             }
             WireResponse::Hello { id, version, default_model, models } => {
                 out.extend_from_slice(&id.to_le_bytes());
@@ -653,6 +737,7 @@ impl WireResponse {
                     learns: c.u64()?,
                     trained_classes: c.u32()?,
                     snapshots: c.u64()?,
+                    learn_seq: c.u64()?,
                 },
             },
             OP_CONN_STATS => WireResponse::ConnStats {
@@ -669,6 +754,22 @@ impl WireResponse {
                     queued_write_bytes: c.u64()?,
                 },
             },
+            OP_WAL_TAIL => {
+                let base_seq = c.u64()?;
+                let last_seq = c.u64()?;
+                let n = c.u32()? as usize;
+                let mut records = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    let len = c.u32()? as usize;
+                    records.push(WalRecord::from_payload(c.take(len)?)?);
+                }
+                WireResponse::WalTail { id, base_seq, last_seq, records }
+            }
+            OP_SNAPSHOT_FETCH => {
+                let last_seq = c.u64()?;
+                let len = c.u32()? as usize;
+                WireResponse::SnapshotImage { id, last_seq, image: c.take(len)?.to_vec() }
+            }
             OP_HELLO => {
                 let version = c.u32()?;
                 let default_model = c.str16()?;
@@ -723,6 +824,9 @@ mod tests {
         roundtrip_req(WireRequest::new(12, ReqBody::Stats), WIRE_V1);
         roundtrip_req(WireRequest::new(13, ReqBody::Hello { version: WIRE_V2 }), WIRE_V1);
         roundtrip_req(WireRequest::new(14, ReqBody::ConnStats), WIRE_V1);
+        roundtrip_req(WireRequest::new(15, ReqBody::WalTail { after: 0 }), WIRE_V1);
+        roundtrip_req(WireRequest::new(16, ReqBody::WalTail { after: u64::MAX }), WIRE_V1);
+        roundtrip_req(WireRequest::new(17, ReqBody::SnapshotFetch), WIRE_V1);
     }
 
     #[test]
@@ -750,6 +854,11 @@ mod tests {
             );
             roundtrip_req(WireRequest::for_model(24, model, ReqBody::Stats), WIRE_V2);
             roundtrip_req(WireRequest::for_model(26, model, ReqBody::ConnStats), WIRE_V2);
+            roundtrip_req(
+                WireRequest::for_model(27, model, ReqBody::WalTail { after: 42 }),
+                WIRE_V2,
+            );
+            roundtrip_req(WireRequest::for_model(28, model, ReqBody::SnapshotFetch), WIRE_V2);
         }
         // hello is v1-shaped even on a v2 connection
         roundtrip_req(WireRequest::new(25, ReqBody::Hello { version: 7 }), WIRE_V2);
@@ -781,6 +890,7 @@ mod tests {
                 learns: 40,
                 trained_classes: 9,
                 snapshots: 1,
+                learn_seq: 40,
             },
         });
         roundtrip_resp(WireResponse::Hello {
@@ -796,6 +906,28 @@ mod tests {
             models: vec![],
         });
         roundtrip_resp(WireResponse::Error { id: 5, msg: "class 99 out of range".into() });
+        roundtrip_resp(WireResponse::WalTail {
+            id: 9,
+            base_seq: 4,
+            last_seq: 7,
+            records: vec![
+                WalRecord { seq: 5, class: 0, features: vec![0.25, -1.0] },
+                WalRecord { seq: 6, class: 3, features: vec![] },
+                WalRecord { seq: 7, class: 1, features: vec![9.5; 16] },
+            ],
+        });
+        roundtrip_resp(WireResponse::WalTail {
+            id: 10,
+            base_seq: 0,
+            last_seq: 0,
+            records: vec![],
+        });
+        roundtrip_resp(WireResponse::SnapshotImage {
+            id: 11,
+            last_seq: 12,
+            image: vec![0xC1, 0x00, 0xFF, 0x7E],
+        });
+        roundtrip_resp(WireResponse::SnapshotImage { id: 12, last_seq: 0, image: vec![] });
         roundtrip_resp(WireResponse::ConnStats {
             id: 8,
             stats: WireConnStats {
@@ -1009,7 +1141,7 @@ mod tests {
                 } else {
                     String::new()
                 };
-                let body = match rng.below(6) {
+                let body = match rng.below(8) {
                     0 => ReqBody::Infer {
                         mode: rng.below(3) as u8,
                         features: (0..rng.below(40)).map(|_| rng.sign() * 3.0).collect(),
@@ -1021,6 +1153,8 @@ mod tests {
                     2 => ReqBody::Snapshot { path: "snap/k.clok"[..rng.below(12)].to_string() },
                     3 => ReqBody::Stats,
                     4 => ReqBody::ConnStats,
+                    5 => ReqBody::WalTail { after: rng.below(1 << 20) as u64 },
+                    6 => ReqBody::SnapshotFetch,
                     _ => ReqBody::Hello { version: WIRE_V2 },
                 };
                 let hello = matches!(body, ReqBody::Hello { .. });
@@ -1070,5 +1204,66 @@ mod tests {
         // responses: id at 0, kind at 8
         let resp = WireResponse::Learn { id: 3, class: 1 }.encode();
         assert_eq!(resp[8], OP_LEARN);
+    }
+
+    #[test]
+    fn wal_tail_byte_layout_is_pinned() {
+        // request: id u64, op, after u64 (v1 shape)
+        let req = WireRequest::new(2, ReqBody::WalTail { after: 0x0102 }).encode(WIRE_V1).unwrap();
+        assert_eq!(req[8], OP_WAL_TAIL);
+        assert_eq!(&req[9..17], &0x0102u64.to_le_bytes());
+        assert_eq!(req.len(), 17);
+        // response: base_seq at 9, last_seq at 17, count at 25, then
+        // length-prefixed record payloads (seq u64, class u32, n u32, n×f32)
+        let resp = WireResponse::WalTail {
+            id: 3,
+            base_seq: 10,
+            last_seq: 11,
+            records: vec![WalRecord { seq: 11, class: 2, features: vec![1.0] }],
+        }
+        .encode();
+        assert_eq!(resp[8], OP_WAL_TAIL);
+        assert_eq!(&resp[9..17], &10u64.to_le_bytes());
+        assert_eq!(&resp[17..25], &11u64.to_le_bytes());
+        assert_eq!(&resp[25..29], &1u32.to_le_bytes());
+        assert_eq!(&resp[29..33], &20u32.to_le_bytes(), "record payload length");
+        assert_eq!(&resp[33..41], &11u64.to_le_bytes(), "record seq");
+        assert_eq!(&resp[41..45], &2u32.to_le_bytes(), "record class");
+        assert_eq!(&resp[45..49], &1u32.to_le_bytes(), "record n");
+        assert_eq!(&resp[49..53], &1.0f32.to_le_bytes());
+        assert_eq!(resp.len(), 53);
+        // snapshot-fetch response: last_seq at 9, img_len at 17
+        let resp = WireResponse::SnapshotImage { id: 4, last_seq: 6, image: vec![0xAA; 3] }
+            .encode();
+        assert_eq!(resp[8], OP_SNAPSHOT_FETCH);
+        assert_eq!(&resp[9..17], &6u64.to_le_bytes());
+        assert_eq!(&resp[17..21], &3u32.to_le_bytes());
+        assert_eq!(&resp[21..], &[0xAA; 3]);
+    }
+
+    #[test]
+    fn wal_tail_decode_rejects_truncated_records() {
+        let good = WireResponse::WalTail {
+            id: 1,
+            base_seq: 0,
+            last_seq: 2,
+            records: vec![
+                WalRecord { seq: 1, class: 0, features: vec![1.0, 2.0] },
+                WalRecord { seq: 2, class: 1, features: vec![3.0] },
+            ],
+        }
+        .encode();
+        assert!(WireResponse::decode(&good).is_ok());
+        // cut inside the final record's feature block
+        assert!(WireResponse::decode(&good[..good.len() - 2]).is_err());
+        // trailing bytes after the last record
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(WireResponse::decode(&bad).is_err());
+        // a record length that claims more bytes than the frame holds
+        let mut bad = good;
+        let count_at = 25;
+        bad[count_at + 4..count_at + 8].copy_from_slice(&1_000_000u32.to_le_bytes());
+        assert!(WireResponse::decode(&bad).is_err());
     }
 }

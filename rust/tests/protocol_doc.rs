@@ -35,6 +35,8 @@ fn wire_constants_match_the_documented_table() {
     pin(&doc, "OP_STATS", &format!("{:#04X}", wire::OP_STATS));
     pin(&doc, "OP_HELLO", &format!("{:#04X}", wire::OP_HELLO));
     pin(&doc, "OP_CONN_STATS", &format!("{:#04X}", wire::OP_CONN_STATS));
+    pin(&doc, "OP_WAL_TAIL", &format!("{:#04X}", wire::OP_WAL_TAIL));
+    pin(&doc, "OP_SNAPSHOT_FETCH", &format!("{:#04X}", wire::OP_SNAPSHOT_FETCH));
     pin(&doc, "KIND_ERROR", &format!("{:#04X}", wire::KIND_ERROR));
     pin(&doc, "MODE_DEFAULT", &format!("{:#04X}", wire::MODE_DEFAULT));
     pin(&doc, "MODE_L1", &format!("{:#04X}", wire::MODE_L1));
@@ -119,6 +121,158 @@ fn documented_conn_stats_reply_layout_matches_the_encoder() {
     assert_eq!(u32::from_le_bytes(body[48..52].try_into().unwrap()), 0x88);
     assert_eq!(u64::from_le_bytes(body[52..60].try_into().unwrap()), 0x9999);
     assert_eq!(body.len(), 60, "no trailing bytes in the conn-stats body");
+}
+
+#[test]
+fn clow_constants_and_segment_layout_match_the_documented_spec() {
+    use clo_hdnn::hdc::wal;
+    let doc = spec();
+    pin(
+        &doc,
+        "CLOW_MAGIC",
+        &format!("\"{}\"", std::str::from_utf8(wal::MAGIC).unwrap()),
+    );
+    pin(&doc, "CLOW_VERSION", &wal::VERSION.to_string());
+    pin(&doc, "CLOW_FRAME_OVERHEAD", &wal::FRAME_OVERHEAD.to_string());
+    pin(&doc, "CLOW_MAX_RECORD", &wal::MAX_RECORD.to_string());
+    // the documented segment layout lines are present verbatim
+    for line in [
+        "offset 0   magic    \"CLOW\" (4 bytes)",
+        "offset 4   version  u32    current = 1",
+        "header payload:   model str16, features u32, classes u32, base_seq u64",
+        "record payload:   seq u64, class u32, n u32, n × f32",
+    ] {
+        assert!(doc.contains(line), "CLOW layout line missing from spec: {line:?}");
+    }
+    // ... and they are the bytes the writer actually emits. Segment
+    // preamble: magic, version, framed header payload.
+    let hdr = wal::SegmentHeader {
+        model: "alpha".into(),
+        features: 0x0101,
+        classes: 0x0202,
+        base_seq: 0x0303,
+    };
+    let b = hdr.to_bytes();
+    assert_eq!(&b[0..4], wal::MAGIC);
+    assert_eq!(&b[4..8], &wal::VERSION.to_le_bytes());
+    let payload = &b[8 + wal::FRAME_OVERHEAD..];
+    assert_eq!(
+        u32::from_le_bytes(b[8..12].try_into().unwrap()) as usize,
+        payload.len(),
+        "frame length prefix covers exactly the payload"
+    );
+    assert_eq!(
+        u64::from_le_bytes(b[12..20].try_into().unwrap()),
+        knowledge::fnv1a64(payload),
+        "frame checksum is CLOK's FNV-1a over the payload"
+    );
+    assert_eq!(&payload[0..2], &5u16.to_le_bytes());
+    assert_eq!(&payload[2..7], b"alpha");
+    assert_eq!(&payload[7..11], &0x0101u32.to_le_bytes());
+    assert_eq!(&payload[11..15], &0x0202u32.to_le_bytes());
+    assert_eq!(&payload[15..23], &0x0303u64.to_le_bytes());
+    assert_eq!(payload.len(), 23, "no trailing bytes in the header payload");
+    // record frame: [len][checksum][seq u64, class u32, n u32, n × f32]
+    let rec = wal::WalRecord { seq: 7, class: 3, features: vec![1.5, -2.5] };
+    let f = rec.frame();
+    assert_eq!(u32::from_le_bytes(f[0..4].try_into().unwrap()), 16 + 2 * 4);
+    assert_eq!(
+        u64::from_le_bytes(f[4..12].try_into().unwrap()),
+        knowledge::fnv1a64(&f[12..])
+    );
+    assert_eq!(&f[12..20], &7u64.to_le_bytes());
+    assert_eq!(&f[20..24], &3u32.to_le_bytes());
+    assert_eq!(&f[24..28], &2u32.to_le_bytes());
+    assert_eq!(&f[28..32], &1.5f32.to_le_bytes());
+    assert_eq!(&f[32..36], &(-2.5f32).to_le_bytes());
+    assert_eq!(f.len(), wal::FRAME_OVERHEAD + 24, "no trailing bytes in the record frame");
+    // round-trip through the decoder the loader and the wire share
+    assert_eq!(wal::WalRecord::from_payload(&f[12..]).unwrap(), rec);
+}
+
+#[test]
+fn documented_stats_reply_layout_matches_the_encoder() {
+    let doc = spec();
+    // the spec promises the stats reply body in this exact order, with
+    // learn_seq — the staleness signal — as the final u64
+    for line in [
+        "OP_STATS     served u64, wire_errors u64, learns u64,",
+        "             trained_classes u32, snapshots u64, learn_seq u64",
+    ] {
+        assert!(doc.contains(line), "stats reply line missing from spec: {line:?}");
+    }
+    let stats = wire::WireStats {
+        served: 0x1111,
+        wire_errors: 0x2222,
+        learns: 0x3333,
+        trained_classes: 0x44,
+        snapshots: 0x5555,
+        learn_seq: 0x6666,
+    };
+    let buf = wire::WireResponse::Stats { id: 9, stats }.encode();
+    assert_eq!(u64::from_le_bytes(buf[0..8].try_into().unwrap()), 9);
+    assert_eq!(buf[8], wire::OP_STATS);
+    let body = &buf[9..];
+    assert_eq!(u64::from_le_bytes(body[0..8].try_into().unwrap()), 0x1111);
+    assert_eq!(u64::from_le_bytes(body[8..16].try_into().unwrap()), 0x2222);
+    assert_eq!(u64::from_le_bytes(body[16..24].try_into().unwrap()), 0x3333);
+    assert_eq!(u32::from_le_bytes(body[24..28].try_into().unwrap()), 0x44);
+    assert_eq!(u64::from_le_bytes(body[28..36].try_into().unwrap()), 0x5555);
+    assert_eq!(u64::from_le_bytes(body[36..44].try_into().unwrap()), 0x6666);
+    assert_eq!(body.len(), 44, "no trailing bytes in the stats body");
+}
+
+#[test]
+fn documented_replication_frame_layouts_match_the_encoders() {
+    use clo_hdnn::hdc::wal::WalRecord;
+    let doc = spec();
+    for line in [
+        "OP_WAL_TAIL  after u64",
+        "OP_WAL_TAIL  base_seq u64, last_seq u64, count u32,",
+        "             last_seq u64, img_len u32, img_len × u8",
+    ] {
+        assert!(doc.contains(line), "replication frame line missing from spec: {line:?}");
+    }
+    // request: after at the body offset (9 in v1)
+    let req = wire::WireRequest::new(1, wire::ReqBody::WalTail { after: 0xABCD })
+        .encode(wire::WIRE_V1)
+        .unwrap();
+    assert_eq!(req[8], wire::OP_WAL_TAIL);
+    assert_eq!(&req[9..17], &0xABCDu64.to_le_bytes());
+    assert_eq!(req.len(), 17);
+    // wal-tail reply: base_seq, last_seq, count, then each record as
+    // [rec_len u32][record payload] — the CLOW payload WITHOUT the
+    // on-disk len/checksum frame
+    let rec = WalRecord { seq: 5, class: 2, features: vec![0.25] };
+    let buf = wire::WireResponse::WalTail {
+        id: 3,
+        base_seq: 0x0A,
+        last_seq: 0x0B,
+        records: vec![rec.clone()],
+    }
+    .encode();
+    assert_eq!(buf[8], wire::OP_WAL_TAIL);
+    let body = &buf[9..];
+    assert_eq!(u64::from_le_bytes(body[0..8].try_into().unwrap()), 0x0A);
+    assert_eq!(u64::from_le_bytes(body[8..16].try_into().unwrap()), 0x0B);
+    assert_eq!(u32::from_le_bytes(body[16..20].try_into().unwrap()), 1);
+    let rec_len = u32::from_le_bytes(body[20..24].try_into().unwrap()) as usize;
+    assert_eq!(rec_len, 16 + 4, "seq u64 + class u32 + n u32 + one f32");
+    assert_eq!(&body[24..24 + rec_len], &rec.payload()[..]);
+    assert_eq!(body.len(), 24 + rec_len, "no trailing bytes after the last record");
+    // snapshot-fetch reply: last_seq, img_len, raw CLOK bytes
+    let buf = wire::WireResponse::SnapshotImage {
+        id: 4,
+        last_seq: 0x0C,
+        image: vec![0xAA, 0xBB, 0xCC],
+    }
+    .encode();
+    assert_eq!(buf[8], wire::OP_SNAPSHOT_FETCH);
+    let body = &buf[9..];
+    assert_eq!(u64::from_le_bytes(body[0..8].try_into().unwrap()), 0x0C);
+    assert_eq!(u32::from_le_bytes(body[8..12].try_into().unwrap()), 3);
+    assert_eq!(&body[12..15], &[0xAA, 0xBB, 0xCC]);
+    assert_eq!(body.len(), 15, "no trailing bytes after the image");
 }
 
 #[test]

@@ -1,0 +1,233 @@
+//! End-to-end durability + replication tests over live TCP sockets: a
+//! primary that logs every acknowledged Learn to its WAL, a torn-tail
+//! "crash" whose recovery rebuilds a bit-identical knowledge store, the
+//! `OP_WAL_TAIL` / `OP_SNAPSHOT_FETCH` replication opcodes spoken through
+//! the real client, and a follower server that keeps answering Infer
+//! traffic with zero wire errors after the primary dies.
+//!
+//! These complement the module-level tests: `hdc::wal` pins the record
+//! format and torn-tail truncation, `coordinator::server` pins the
+//! executor-side handlers, and `serve::replica` pins the tailer against an
+//! in-process coordinator. Here every hop crosses a real socket.
+
+use clo_hdnn::config::HdConfig;
+use clo_hdnn::coordinator::{Coordinator, CoordinatorOptions};
+use clo_hdnn::hdc::knowledge;
+use clo_hdnn::serve::{Client, Registry, Replica, ReplicaOptions, ServeOptions, Server};
+use clo_hdnn::util::Rng;
+use std::io::Write;
+use std::time::Duration;
+
+fn cfg4() -> HdConfig {
+    HdConfig::synthetic("t", 8, 8, 32, 32, 8, 4)
+}
+
+fn protos(cfg: &HdConfig, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..cfg.classes)
+        .map(|_| (0..cfg.features()).map(|_| rng.normal_f32() * 40.0).collect())
+        .collect()
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("clo_hdnn_replication");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Poll `f` every 10 ms until it holds or `ms` elapses.
+fn wait_until(f: impl Fn() -> bool, ms: u64) -> bool {
+    let deadline = std::time::Instant::now() + Duration::from_millis(ms);
+    while std::time::Instant::now() < deadline {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    f()
+}
+
+/// A single-model server named "t", optionally logging learns to `wal`.
+fn start_server(cfg: &HdConfig, wal: Option<&std::path::Path>) -> Server {
+    let mut opts = CoordinatorOptions::software(cfg.clone());
+    opts.wal_path = wal.map(|p| p.to_path_buf());
+    let coord = Coordinator::start(opts).unwrap();
+    let serve_opts = ServeOptions { allow_snapshot_paths: true, ..ServeOptions::default() };
+    Server::start("127.0.0.1:0", Registry::single("t", coord), serve_opts).unwrap()
+}
+
+#[test]
+fn acked_learns_survive_a_torn_tail_and_rebuild_bit_identically() {
+    let cfg = cfg4();
+    let ps = protos(&cfg, 91);
+    let wal = tmp("crash.clow");
+    let _ = std::fs::remove_file(&wal);
+
+    // learn over the wire: every reply here means the record is fsynced
+    let server = start_server(&cfg, Some(&wal));
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    for _ in 0..3 {
+        for (c, p) in ps.iter().enumerate() {
+            client.learn(p, c).unwrap();
+        }
+    }
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.learns, 12);
+    assert_eq!(stats.learn_seq, 12, "every acknowledged learn is sequenced");
+    drop(client);
+    server.stop();
+
+    // simulate the crash artifact a kill -9 leaves behind: a torn,
+    // half-written append at the tail of the segment
+    let before = std::fs::metadata(&wal).unwrap().len();
+    let mut f = std::fs::OpenOptions::new().append(true).open(&wal).unwrap();
+    f.write_all(&[0x55; 7]).unwrap();
+    drop(f);
+
+    // recovery: the torn tail is discarded, the 12 acknowledged learns
+    // replay, and the server answers exactly as before the crash
+    let recovered = start_server(&cfg, Some(&wal));
+    let addr = recovered.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.learns, 12, "replay recovers the acknowledged prefix");
+    assert_eq!(stats.learn_seq, 12);
+    assert!(
+        std::fs::metadata(&wal).unwrap().len() <= before,
+        "recovery must not keep the torn bytes"
+    );
+    for (c, p) in ps.iter().enumerate() {
+        assert_eq!(client.infer(p).unwrap().class, c);
+    }
+    let rec_snap = tmp("crash_recovered.clok");
+    let _ = std::fs::remove_file(&rec_snap);
+    client.snapshot(Some(rec_snap.to_str().unwrap())).unwrap();
+    drop(client);
+    recovered.stop();
+
+    // reference: the same 12 learns into a fresh store, never crashed
+    let reference = start_server(&cfg, None);
+    let addr = reference.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    for _ in 0..3 {
+        for (c, p) in ps.iter().enumerate() {
+            client.learn(p, c).unwrap();
+        }
+    }
+    let ref_snap = tmp("crash_reference.clok");
+    let _ = std::fs::remove_file(&ref_snap);
+    client.snapshot(Some(ref_snap.to_str().unwrap())).unwrap();
+    drop(client);
+    reference.stop();
+
+    let rec = std::fs::read(&rec_snap).unwrap();
+    let reference = std::fs::read(&ref_snap).unwrap();
+    assert_eq!(rec, reference, "recovered store must be bit-identical to the reference");
+}
+
+#[test]
+fn wal_tail_and_snapshot_fetch_speak_over_live_sockets() {
+    let cfg = cfg4();
+    let ps = protos(&cfg, 91);
+    let wal = tmp("tail.clow");
+    let _ = std::fs::remove_file(&wal);
+    let server = start_server(&cfg, Some(&wal));
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    for (c, p) in ps.iter().enumerate() {
+        client.learn(p, c).unwrap();
+    }
+
+    // full tail from the origin: every acknowledged learn, in order
+    let t = client.wal_tail(0).unwrap();
+    assert_eq!(t.base_seq, 0);
+    assert_eq!(t.last_seq, 4);
+    assert_eq!(t.records.len(), 4);
+    for (i, rec) in t.records.iter().enumerate() {
+        assert_eq!(rec.seq, i as u64 + 1);
+        assert_eq!(rec.class as usize, i);
+        assert_eq!(rec.features, ps[i]);
+    }
+
+    // caught-up tail: an empty (idle) reply, not an error
+    let t = client.wal_tail(4).unwrap();
+    assert_eq!(t.last_seq, 4);
+    assert!(t.records.is_empty());
+
+    // bootstrap image: a loadable CLOK checkpoint of the live store,
+    // stamped with the sequence it captures
+    let (seq, image) = client.snapshot_fetch().unwrap();
+    assert_eq!(seq, 4);
+    assert_eq!(&image[..4], b"CLOK");
+    let store = knowledge::from_bytes(&image).unwrap();
+    assert_eq!(store.total_learns(), 4);
+    assert_eq!(store.trained_classes(), 4);
+
+    drop(client);
+    server.stop();
+}
+
+#[test]
+fn follower_serves_reads_over_tcp_with_zero_wire_errors_while_primary_down() {
+    let cfg = cfg4();
+    let ps = protos(&cfg, 91);
+    let wal = tmp("fanout.clow");
+    let _ = std::fs::remove_file(&wal);
+
+    let primary = start_server(&cfg, Some(&wal));
+    let primary_addr = primary.local_addr().to_string();
+    let mut feeder = Client::connect(&primary_addr).unwrap();
+    for _ in 0..2 {
+        for (c, p) in ps.iter().enumerate() {
+            feeder.learn(p, c).unwrap();
+        }
+    }
+
+    // the follower is itself a full TCP server; the tailer applies the
+    // primary's log to the same coordinator the socket serves from
+    let follower_coord =
+        Coordinator::start(CoordinatorOptions::software(cfg.clone())).unwrap();
+    let registry = Registry::single("t", follower_coord);
+    let local = registry.get("t").unwrap().clone();
+    let follower = Server::start("127.0.0.1:0", registry, ServeOptions::default()).unwrap();
+    let follower_addr = follower.local_addr().to_string();
+    let replica = Replica::start(local, ReplicaOptions::new(&primary_addr)).unwrap();
+
+    // convergence is observable over the wire: the follower's own Stats
+    // carries the applied learn_seq
+    let mut reader = Client::connect(&follower_addr).unwrap();
+    assert!(
+        wait_until(
+            || {
+                let mut c = Client::connect(&follower_addr).unwrap();
+                c.stats().map(|s| s.learn_seq == 8).unwrap_or(false)
+            },
+            5000
+        ),
+        "follower never caught up to learn_seq 8 (status {:?})",
+        replica.status()
+    );
+
+    // kill the primary; the follower keeps answering from its converged
+    // state — no wire errors, no stale-model misclassification
+    drop(feeder);
+    primary.stop();
+    assert!(
+        wait_until(|| !replica.status().connected, 5000),
+        "tailer never noticed the dead primary"
+    );
+    for _ in 0..3 {
+        for (c, p) in ps.iter().enumerate() {
+            let r = reader.infer(p).unwrap();
+            assert_eq!(r.class, c, "follower must serve class {c} while the primary is down");
+        }
+    }
+    let stats = reader.stats().unwrap();
+    assert_eq!(stats.wire_errors, 0, "read fan-out must be error-free");
+    assert_eq!(stats.learn_seq, 8, "the follower's applied sequence is stable");
+
+    drop(reader);
+    replica.stop();
+    follower.stop();
+}

@@ -10,7 +10,9 @@
 //! * [`Context`] — `.context(..)` / `.with_context(..)` on any `Result`
 //!   whose error converts into [`Error`];
 //! * `From<E>` for every `E: std::error::Error + Send + Sync + 'static`,
-//!   so `?` lifts std errors (io, utf8, parse, channel recv, ...).
+//!   so `?` lifts std errors (io, utf8, parse, channel recv, ...);
+//! * [`Error::downcast_ref`] — recover the typed root error (e.g. a
+//!   serving client telling a `ServerError` apart from transport failure).
 //!
 //! Display semantics match anyhow: `{}` prints the outermost message,
 //! `{:#}` prints the whole chain joined by `": "`, and `{:?}` prints the
@@ -22,15 +24,19 @@ use std::fmt;
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// A dynamic error value: a chain of human-readable messages, outermost
-/// context first, root cause last.
+/// context first, root cause last. When the value was lifted from a typed
+/// `std::error::Error` (via `?` or `.into()`), that root error is kept and
+/// recoverable through [`Error::downcast_ref`] — attaching context never
+/// erases it.
 pub struct Error {
     msgs: Vec<String>,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
 }
 
 impl Error {
     /// Construct from a single printable message.
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { msgs: vec![message.to_string()] }
+        Error { msgs: vec![message.to_string()], source: None }
     }
 
     /// Prepend a layer of context (the new outermost message).
@@ -47,6 +53,16 @@ impl Error {
     /// The innermost (root-cause) message.
     pub fn root_cause(&self) -> &str {
         self.msgs.last().expect("error has at least one message")
+    }
+
+    /// The typed root error, when this value was lifted from one and the
+    /// type matches — `None` for message-only errors ([`anyhow!`]/
+    /// [`bail!`]). Context layers are transparent, like real anyhow.
+    pub fn downcast_ref<E>(&self) -> Option<&E>
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        self.source.as_deref().and_then(|s| s.downcast_ref::<E>())
     }
 }
 
@@ -87,7 +103,7 @@ where
             msgs.push(s.to_string());
             src = s.source();
         }
-        Error { msgs }
+        Error { msgs, source: Some(Box::new(e)) }
     }
 }
 
@@ -192,5 +208,19 @@ mod tests {
         let e = io_missing().unwrap_err();
         let dbg = format!("{e:?}");
         assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn downcast_ref_recovers_the_typed_root_through_context() {
+        let e = io_missing().unwrap_err();
+        let io = e.downcast_ref::<std::io::Error>().expect("typed root survives context");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        // wrong type: no match
+        assert!(e.downcast_ref::<std::num::ParseIntError>().is_none());
+        // message-only errors carry no typed root
+        let e: Error = anyhow!("just a message");
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+        let e = e.context("outer");
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
     }
 }

@@ -35,6 +35,7 @@ fn main() -> clo_hdnn::Result<()> {
         min_segments: args.usize_or("min-seg", 1)?,
         search_mode: Default::default(),
         mode_policy: Default::default(),
+        wcfe: Default::default(),
         queue_depth: 256,
         threads: args.usize_or("threads", 0)?,
         snapshot_path: None,

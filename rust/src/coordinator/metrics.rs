@@ -28,6 +28,12 @@ pub struct ServeMetrics {
     pub early_exits: u64,
     /// inferences that ran the WCFE (normal mode)
     pub wcfe_runs: u64,
+    /// inferences the Confidence policy escalated through the WCFE after
+    /// a thin bypass margin (a subset of `wcfe_runs`)
+    pub escalations: u64,
+    /// summed modeled energy over recorded inferences (joules); 0 when
+    /// the responses carried no energy accounting
+    pub energy_j: f64,
     /// learn requests served
     pub learns: u64,
     /// failed requests
@@ -49,6 +55,22 @@ impl ServeMetrics {
         self.early_exits += u64::from(early);
         self.wcfe_runs += u64::from(wcfe);
         self.total += 1;
+    }
+
+    /// An inference with dual-mode accounting: `record` plus the
+    /// escalation flag and the modeled per-query energy.
+    pub fn record_infer(
+        &mut self,
+        latency_s: f64,
+        segments: usize,
+        early: bool,
+        wcfe: bool,
+        escalated: bool,
+        energy_j: f64,
+    ) {
+        self.record(latency_s, segments, early, wcfe);
+        self.escalations += u64::from(escalated);
+        self.energy_j += energy_j;
     }
 
     /// A served learn request (latency tracked, no segments — learning
@@ -79,6 +101,8 @@ impl ServeMetrics {
         self.segments_used.extend_from_slice(&other.segments_used);
         self.early_exits += other.early_exits;
         self.wcfe_runs += other.wcfe_runs;
+        self.escalations += other.escalations;
+        self.energy_j += other.energy_j;
         self.learns += other.learns;
         self.errors += other.errors;
         self.timeouts += other.timeouts;
@@ -136,6 +160,31 @@ impl ServeMetrics {
     pub fn complexity_reduction(&self, total_segments: usize) -> f64 {
         1.0 - self.mean_segments() / total_segments as f64
     }
+
+    /// Inferences answered without the WCFE (total inferences minus
+    /// normal-mode runs).
+    pub fn bypass_runs(&self) -> u64 {
+        self.segments_used.len() as u64 - self.wcfe_runs
+    }
+
+    /// Fraction of inferences served in bypass mode (the dual-mode
+    /// complexity-saving headline; 0 with no inferences).
+    pub fn bypass_fraction(&self) -> f64 {
+        let infers = self.segments_used.len() as u64;
+        if infers == 0 {
+            return 0.0;
+        }
+        self.bypass_runs() as f64 / infers as f64
+    }
+
+    /// Mean modeled energy per inference in joules (0 with no samples).
+    pub fn energy_per_query_j(&self) -> f64 {
+        let infers = self.segments_used.len();
+        if infers == 0 {
+            return 0.0;
+        }
+        self.energy_j / infers as f64
+    }
 }
 
 #[cfg(test)]
@@ -157,6 +206,26 @@ mod tests {
         assert!((m.complexity_reduction(8) - 0.25).abs() < 1e-12);
         assert_eq!(m.throughput_rps(), 3.0);
         assert!(m.latency_percentile(95.0) >= m.latency_percentile(50.0));
+    }
+
+    #[test]
+    fn dual_mode_accounting() {
+        let mut m = ServeMetrics::default();
+        m.record_infer(0.010, 4, true, false, false, 2.0e-9);
+        m.record_infer(0.020, 8, false, true, true, 6.0e-9);
+        m.record_infer(0.015, 8, false, true, false, 6.0e-9);
+        m.record_learn(0.001);
+        assert_eq!(m.wcfe_runs, 2);
+        assert_eq!(m.bypass_runs(), 1);
+        assert_eq!(m.escalations, 1);
+        assert!((m.bypass_fraction() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((m.energy_per_query_j() - 14.0e-9 / 3.0).abs() < 1e-20);
+        let mut other = ServeMetrics::default();
+        other.record_infer(0.010, 4, true, false, false, 2.0e-9);
+        other.merge(&m);
+        assert_eq!(other.escalations, 1);
+        assert!((other.energy_j - 16.0e-9).abs() < 1e-20);
+        assert_eq!(other.bypass_runs(), 2);
     }
 
     #[test]

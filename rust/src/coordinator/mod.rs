@@ -12,5 +12,5 @@ pub mod server;
 
 pub use metrics::{LatencySummary, ServeMetrics};
 pub use request::{CoordStats, Payload, ReplyKind, ReplySink, ReplyTo, Request, Response};
-pub use router::Router;
-pub use server::{BackendSpec, Coordinator, CoordinatorOptions, TrySubmit};
+pub use router::{ModePolicy, Router};
+pub use server::{BackendSpec, Coordinator, CoordinatorOptions, TrySubmit, WcfeSpec};

@@ -16,10 +16,18 @@ pub enum Payload {
     /// (overrides the coordinator's default INT8-L1 / packed-Hamming choice
     /// for this one classification)
     FeaturesWithMode(Vec<f32>, SearchMode),
-    /// raw image (h*w*c in [0,1]) — requires the WCFE (normal mode)
+    /// raw image (h*w*c in [0,1]) — the WCFE extracts features in normal
+    /// mode; under a bypass policy the pixels feed the encoder directly
     Image(Vec<f32>),
+    /// raw image with an explicit per-request search mode (the image
+    /// analogue of [`Payload::FeaturesWithMode`])
+    ImageWithMode(Vec<f32>, SearchMode),
     /// labeled sample: learn instead of classify
     Learn(Vec<f32>, usize),
+    /// labeled raw image: the WCFE extracts features first (unless the
+    /// policy forces bypass), then the sample is learned — what lets
+    /// normal-mode models learn from images, not just features
+    LearnImage(Vec<f32>, usize),
     /// persist the learned knowledge (class hypervectors) to the given
     /// path, or to the coordinator's configured default when `None`;
     /// atomic write-rename, see `crate::hdc::knowledge`
@@ -131,7 +139,7 @@ pub enum ReplyKind {
 }
 
 /// Knowledge counters a [`Payload::Stats`] request reports.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CoordStats {
     /// total bundled (positive) learns in the live store
     pub learns: u64,
@@ -144,6 +152,18 @@ pub struct CoordStats {
     /// learn count — what followers compare against the primary to detect
     /// stale reads
     pub learn_seq: u64,
+    /// classifications answered without the WCFE (bypass mode)
+    pub bypass: u64,
+    /// classifications answered through the WCFE (normal mode)
+    pub normal: u64,
+    /// bypass-first classifications the Confidence policy re-ran through
+    /// the WCFE because the top-2 margin fell below its threshold
+    pub escalations: u64,
+    /// active mode policy (`ModePolicy::code`: 0 auto, 1 force-bypass,
+    /// 2 force-normal, 3 confidence)
+    pub policy: u8,
+    /// the Confidence policy's escalation margin (0 for other policies)
+    pub policy_margin: f32,
 }
 
 /// What the executor returns.
@@ -161,6 +181,13 @@ pub struct Response {
     pub early_exit: bool,
     /// whether the WCFE ran (normal mode)
     pub used_wcfe: bool,
+    /// whether the Confidence policy re-ran this request through the WCFE
+    /// after a thin bypass margin (implies `used_wcfe`)
+    pub escalated: bool,
+    /// modeled energy for this query in joules (chip datapath op counts x
+    /// the calibrated per-op energies at the serving voltage; 0 when the
+    /// executor has no energy accounting attached)
+    pub energy_j: f64,
     /// executor-side latency in seconds
     pub latency_s: f64,
     /// free-form success detail (e.g. the snapshot path written)
@@ -190,6 +217,8 @@ impl Response {
             segments_used: 0,
             early_exit: false,
             used_wcfe: false,
+            escalated: false,
+            energy_j: 0.0,
             latency_s: 0.0,
             detail: None,
             stats: None,

@@ -2,13 +2,17 @@
 //! (normal mode) or is bypassed. The chip's rule is payload-driven — raw
 //! images need feature extraction, pre-extracted features go straight to
 //! the HD module through the CDC FIFO — with an optional force override
-//! (the host can pin a mode for a deployment).
+//! (the host can pin a mode for a deployment) and a confidence-escalating
+//! policy that serves images bypass-first and upgrades to the WCFE only
+//! when the progressive search terminates with a thin top-2 margin.
 
 use crate::coordinator::request::Payload;
 use crate::sim::Mode;
+use crate::Result;
+use anyhow::bail;
 
 /// How the router picks between WCFE (normal) and bypass mode.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub enum ModePolicy {
     /// payload-driven (images -> normal, features -> bypass)
     #[default]
@@ -17,6 +21,83 @@ pub enum ModePolicy {
     ForceBypass,
     /// always run the WCFE
     ForceNormal,
+    /// bypass-first with escalation: an image query is first classified on
+    /// its raw pixels; when the progressive search's terminal top-2 margin
+    /// (Hamming or L1, in distance units) lands **below** `margin`, the
+    /// executor re-runs the same request through the WCFE — so easy
+    /// queries pay bypass cost and only ambiguous ones pay for feature
+    /// extraction. Escalated predictions are bit-identical to
+    /// [`ModePolicy::ForceNormal`] on the same request, non-escalated ones
+    /// to [`ModePolicy::ForceBypass`].
+    Confidence {
+        /// escalation threshold on the terminal top-2 margin
+        margin: f32,
+    },
+}
+
+impl ModePolicy {
+    /// Parse a CLI/manifest spelling: `auto`, `bypass`, `normal`, or
+    /// `confidence:<margin>` (e.g. `confidence:96`).
+    pub fn parse(s: &str) -> Result<ModePolicy> {
+        match s {
+            "auto" => Ok(ModePolicy::Auto),
+            "bypass" | "force-bypass" => Ok(ModePolicy::ForceBypass),
+            "normal" | "force-normal" => Ok(ModePolicy::ForceNormal),
+            other => match other.strip_prefix("confidence:") {
+                Some(m) => {
+                    let margin: f32 = m.parse().map_err(|_| {
+                        anyhow::anyhow!("confidence policy margin '{m}' is not a number")
+                    })?;
+                    if !margin.is_finite() || margin < 0.0 {
+                        bail!("confidence policy margin must be finite and >= 0 (got {margin})");
+                    }
+                    Ok(ModePolicy::Confidence { margin })
+                }
+                None => bail!(
+                    "unknown mode policy '{other}' (auto|bypass|normal|confidence:<margin>)"
+                ),
+            },
+        }
+    }
+
+    /// Stable wire code for the policy (what stats replies carry).
+    pub fn code(&self) -> u8 {
+        match self {
+            ModePolicy::Auto => 0,
+            ModePolicy::ForceBypass => 1,
+            ModePolicy::ForceNormal => 2,
+            ModePolicy::Confidence { .. } => 3,
+        }
+    }
+
+    /// Inverse of [`ModePolicy::code`] (stats decode); unknown codes fall
+    /// back to `Auto` so old clients stay readable against newer servers.
+    pub fn from_code(code: u8, margin: f32) -> ModePolicy {
+        match code {
+            1 => ModePolicy::ForceBypass,
+            2 => ModePolicy::ForceNormal,
+            3 => ModePolicy::Confidence { margin },
+            _ => ModePolicy::Auto,
+        }
+    }
+
+    /// The escalation threshold (0 for non-confidence policies).
+    pub fn margin(&self) -> f32 {
+        match self {
+            ModePolicy::Confidence { margin } => *margin,
+            _ => 0.0,
+        }
+    }
+
+    /// Human spelling, `ModePolicy::parse`-compatible.
+    pub fn spelling(&self) -> String {
+        match self {
+            ModePolicy::Auto => "auto".into(),
+            ModePolicy::ForceBypass => "bypass".into(),
+            ModePolicy::ForceNormal => "normal".into(),
+            ModePolicy::Confidence { margin } => format!("confidence:{margin}"),
+        }
+    }
 }
 
 /// The per-request dual-mode router.
@@ -27,13 +108,21 @@ pub struct Router {
 }
 
 impl Router {
-    /// Pick the execution mode for one payload.
+    /// Pick the **initial** execution mode for one payload. The Confidence
+    /// policy starts image queries in bypass; the escalation re-run is the
+    /// executor's decision (it needs the classify margin).
     pub fn route(&self, payload: &Payload) -> Mode {
         match (self.policy, payload) {
             (ModePolicy::ForceBypass, _) => Mode::Bypass,
             (ModePolicy::ForceNormal, _) => Mode::Normal,
-            (ModePolicy::Auto, Payload::Image(_)) => Mode::Normal,
+            // learns from raw pixels always need the FE (outside a forced
+            // bypass): there is no second chance to re-extract once the
+            // sample is bundled into the store
+            (_, Payload::LearnImage(..)) => Mode::Normal,
+            (ModePolicy::Auto, Payload::Image(_) | Payload::ImageWithMode(..)) => Mode::Normal,
             (ModePolicy::Auto, _) => Mode::Bypass,
+            // bypass-first: the executor escalates after seeing the margin
+            (ModePolicy::Confidence { .. }, _) => Mode::Bypass,
         }
     }
 }
@@ -47,17 +136,55 @@ mod tests {
         let r = Router::default();
         assert_eq!(r.route(&Payload::Features(vec![0.0])), Mode::Bypass);
         assert_eq!(r.route(&Payload::Image(vec![0.0])), Mode::Normal);
+        // feature-space learns bypass; raw-image learns need the FE
         assert_eq!(r.route(&Payload::Learn(vec![0.0], 1)), Mode::Bypass);
+        assert_eq!(r.route(&Payload::LearnImage(vec![0.0], 1)), Mode::Normal);
         // the search-mode override does not affect WCFE routing
         let p = Payload::FeaturesWithMode(vec![0.0], crate::hdc::SearchMode::HammingPacked);
         assert_eq!(r.route(&p), Mode::Bypass);
+        let p = Payload::ImageWithMode(vec![0.0], crate::hdc::SearchMode::HammingPacked);
+        assert_eq!(r.route(&p), Mode::Normal);
     }
 
     #[test]
     fn overrides_win() {
         let rb = Router { policy: ModePolicy::ForceBypass };
         assert_eq!(rb.route(&Payload::Image(vec![0.0])), Mode::Bypass);
+        assert_eq!(rb.route(&Payload::LearnImage(vec![0.0], 1)), Mode::Bypass);
         let rn = Router { policy: ModePolicy::ForceNormal };
         assert_eq!(rn.route(&Payload::Features(vec![0.0])), Mode::Normal);
+    }
+
+    #[test]
+    fn confidence_starts_in_bypass_except_learns() {
+        let r = Router { policy: ModePolicy::Confidence { margin: 50.0 } };
+        assert_eq!(r.route(&Payload::Image(vec![0.0])), Mode::Bypass);
+        assert_eq!(r.route(&Payload::Features(vec![0.0])), Mode::Bypass);
+        assert_eq!(r.route(&Payload::LearnImage(vec![0.0], 1)), Mode::Normal);
+        assert_eq!(r.route(&Payload::Learn(vec![0.0], 1)), Mode::Bypass);
+    }
+
+    #[test]
+    fn policy_parse_and_codes() {
+        assert_eq!(ModePolicy::parse("auto").unwrap(), ModePolicy::Auto);
+        assert_eq!(ModePolicy::parse("bypass").unwrap(), ModePolicy::ForceBypass);
+        assert_eq!(ModePolicy::parse("normal").unwrap(), ModePolicy::ForceNormal);
+        assert_eq!(
+            ModePolicy::parse("confidence:96.5").unwrap(),
+            ModePolicy::Confidence { margin: 96.5 }
+        );
+        assert!(ModePolicy::parse("confidence:x").is_err());
+        assert!(ModePolicy::parse("confidence:-1").is_err());
+        assert!(ModePolicy::parse("dual").is_err());
+        for p in [
+            ModePolicy::Auto,
+            ModePolicy::ForceBypass,
+            ModePolicy::ForceNormal,
+            ModePolicy::Confidence { margin: 12.0 },
+        ] {
+            assert_eq!(ModePolicy::from_code(p.code(), p.margin()), p);
+            assert_eq!(ModePolicy::parse(&p.spelling()).unwrap(), p);
+        }
+        assert_eq!(ModePolicy::from_code(200, 1.0), ModePolicy::Auto);
     }
 }

@@ -13,13 +13,15 @@ use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::request::{CoordStats, Payload, ReplySink, ReplyTo, Request, Response};
 use crate::coordinator::router::{ModePolicy, Router};
 use crate::data::TensorFile;
+use crate::energy::DualModeEnergy;
 use crate::hdc::wal::Wal;
 use crate::hdc::{knowledge, HdBackend, HdClassifier, ProgressiveSearch, SearchMode};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, PjrtBackend};
 use crate::runtime::{Manifest, NativeBackend};
-use crate::sim::Mode;
-use crate::wcfe::WcfeModel;
+use crate::sim::{Chip, Mode};
+use crate::util::pool::WorkerPool;
+use crate::wcfe::{ClusteredWcfe, WcfeModel};
 use crate::Result;
 use anyhow::Context;
 use std::sync::mpsc;
@@ -44,6 +46,39 @@ pub enum BackendSpec {
     Pjrt { artifacts: std::path::PathBuf, config: String },
 }
 
+/// Where the executor's WCFE front-end (normal mode) comes from. The FE
+/// always runs the cluster-factored kernel ([`ClusteredWcfe`]) — bit-exact
+/// against the naive forward over the same codebook-reconstructed weights,
+/// at a fraction of the multiplies.
+#[derive(Clone, Debug, Default)]
+pub enum WcfeSpec {
+    /// no front-end: normal-mode image requests error cleanly
+    Disabled,
+    /// cluster the dense WCFE weights from the backend's artifact manifest
+    /// (when the manifest carries one for an image config; backends without
+    /// a manifest simply get no front-end) — the pre-existing artifact path
+    #[default]
+    Artifacts,
+    /// hermetic seeded front-end (the scenario-matrix path): deterministic
+    /// He-scaled weights from `seed`, clustered at `clusters` centroids;
+    /// `fc_out` is pinned to the serving config's feature count
+    Seeded {
+        /// square image side in pixels
+        image_hw: usize,
+        /// image channels
+        image_c: usize,
+        /// conv-stack output channels, one entry per layer
+        channels: Vec<usize>,
+        /// codebook size per layer
+        clusters: usize,
+        /// weight seed (equal seeds ⇒ bit-identical front-ends)
+        seed: u64,
+    },
+}
+
+/// Codebook size used when clustering artifact-loaded WCFE weights.
+const ARTIFACT_FE_CLUSTERS: usize = 16;
+
 /// Everything the executor thread needs to build and run one serving model.
 #[derive(Clone, Debug)]
 pub struct CoordinatorOptions {
@@ -62,8 +97,11 @@ pub struct CoordinatorOptions {
     /// individual requests can override it via
     /// [`Payload::FeaturesWithMode`].
     pub search_mode: SearchMode,
-    /// dual-mode routing policy (normal/bypass)
+    /// dual-mode routing policy (normal/bypass/confidence-escalating)
     pub mode_policy: ModePolicy,
+    /// where the WCFE front-end comes from (artifacts, a seeded scenario
+    /// model, or disabled)
+    pub wcfe: WcfeSpec,
     /// bound on the executor's MPSC request queue
     pub queue_depth: usize,
     /// worker threads the backend may fan out to within one call. `0` (the
@@ -101,6 +139,7 @@ impl CoordinatorOptions {
             min_segments: 1,
             search_mode: SearchMode::default(),
             mode_policy: ModePolicy::Auto,
+            wcfe: WcfeSpec::default(),
             queue_depth: 256,
             threads: 0,
             snapshot_path: None,
@@ -270,16 +309,35 @@ struct KnowledgeState {
     snapshot_fail_streak: u64,
 }
 
+/// Dual-mode serving counters maintained by the executor and reported in
+/// [`CoordStats`].
+#[derive(Clone, Copy, Debug, Default)]
+struct ModeCounters {
+    /// classifications answered without the WCFE
+    bypass: u64,
+    /// classifications answered through the WCFE
+    normal: u64,
+    /// Confidence-policy bypass-first classifications re-run through the
+    /// WCFE after a thin top-2 margin
+    escalations: u64,
+}
+
 /// Executor state living on the worker thread.
 struct Executor {
     classifier: HdClassifier,
     router: Router,
-    /// WCFE forward executable (normal mode) through PJRT
-    #[cfg(feature = "pjrt")]
-    wcfe_exe: Option<std::rc::Rc<crate::runtime::Executable>>,
-    /// software WCFE model (normal mode) on the native path
-    wcfe_native: Option<WcfeModel>,
+    /// cluster-factored WCFE front-end (normal mode); `None` means image
+    /// requests can only be served under a bypass route
+    fe: Option<ClusteredWcfe>,
+    /// worker-pool budget for batched feature extraction (contiguous
+    /// normal-mode image runs fan out one image per scoped thread)
+    fe_pool: WorkerPool,
     image_elems: usize,
+    /// per-query energy/ops accounting (chip datapath op counts priced by
+    /// the calibrated energy model at 0.7 V)
+    energy: DualModeEnergy,
+    /// dual-mode counters Stats replies surface
+    modes: ModeCounters,
     /// largest Learn run the backend can encode in one call (1 disables
     /// grouped learning — the PJRT path is lowered at batch 1)
     learn_batch_cap: usize,
@@ -329,14 +387,26 @@ fn executor_main(
             if j - i >= 2 {
                 ex.handle_learn_run(&batch[i..j]);
                 i = j;
-            } else {
-                let req = &batch[i];
-                let resp = ex.handle(req);
-                let _ = req
-                    .reply
-                    .send(resp.unwrap_or_else(|e| Response::error(req.id, format!("{e:#}"))));
-                i += 1;
+                continue;
             }
+            // contiguous normal-mode image classifications: one batched
+            // feature extraction through the worker pool, then per-request
+            // classify/replies in arrival order
+            let mut j = i;
+            while j < batch.len() && ex.image_batchable(&batch[j].payload) {
+                j += 1;
+            }
+            if j - i >= 2 {
+                ex.handle_image_run(&batch[i..j]);
+                i = j;
+                continue;
+            }
+            let req = &batch[i];
+            let resp = ex.handle(req);
+            let _ = req
+                .reply
+                .send(resp.unwrap_or_else(|e| Response::error(req.id, format!("{e:#}"))));
+            i += 1;
         }
     }
     // graceful shutdown: if an auto-snapshot cadence is configured and
@@ -363,6 +433,46 @@ fn load_native_wcfe(manifest: &Manifest, config: &str) -> Result<(Option<WcfeMod
     }
 }
 
+/// Build the cluster-factored FE stage per the [`WcfeSpec`]; returns
+/// `(fe, image_elems)`.
+fn build_fe(
+    spec: &WcfeSpec,
+    manifest: Option<(&Manifest, &str)>,
+    cfg: &HdConfig,
+) -> Result<(Option<ClusteredWcfe>, usize)> {
+    match spec {
+        WcfeSpec::Disabled => Ok((None, 0)),
+        WcfeSpec::Artifacts => match manifest {
+            Some((m, config)) => {
+                let (model, image_elems) = load_native_wcfe(m, config)?;
+                Ok((
+                    model.map(|m| ClusteredWcfe::cluster(m, ARTIFACT_FE_CLUSTERS)),
+                    image_elems,
+                ))
+            }
+            None => Ok((None, 0)),
+        },
+        WcfeSpec::Seeded { image_hw, image_c, channels, clusters, seed } => {
+            if channels.is_empty() {
+                anyhow::bail!("seeded WCFE needs at least one conv layer");
+            }
+            let pooled = image_hw >> channels.len();
+            if pooled == 0 || image_hw % (1 << channels.len()) != 0 {
+                anyhow::bail!(
+                    "seeded WCFE: image side {image_hw} does not survive {} maxpool halvings",
+                    channels.len()
+                );
+            }
+            let model =
+                WcfeModel::seeded(*image_hw, *image_c, channels, cfg.features(), *seed);
+            Ok((
+                Some(ClusteredWcfe::cluster(model, (*clusters).max(1))),
+                image_hw * image_hw * image_c,
+            ))
+        }
+    }
+}
+
 fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
     let policy = ProgressiveSearch {
         tau: opts.tau,
@@ -370,73 +480,70 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
         mode: opts.search_mode,
     };
     let router = Router { policy: opts.mode_policy };
-    let mut ex = match &opts.backend {
-        BackendSpec::Native { cfg, seed } => Executor {
-            classifier: HdClassifier::new(
+    // backend + (for artifact specs) the manifest the FE may come from
+    let (classifier, learn_batch_cap, manifest) = match &opts.backend {
+        BackendSpec::Native { cfg, seed } => (
+            HdClassifier::new(
                 Box::new(NativeBackend::seeded(cfg.clone(), *seed, NATIVE_MAX_BATCH)?),
                 policy,
             ),
-            router,
-            #[cfg(feature = "pjrt")]
-            wcfe_exe: None,
-            wcfe_native: None,
-            image_elems: 0,
-            learn_batch_cap: NATIVE_MAX_BATCH,
-            knowledge: KnowledgeState::default(),
-            wal: None,
-        },
-        BackendSpec::NativeRemat { cfg, seed } => Executor {
-            classifier: HdClassifier::new(
+            NATIVE_MAX_BATCH,
+            None,
+        ),
+        BackendSpec::NativeRemat { cfg, seed } => (
+            HdClassifier::new(
                 Box::new(NativeBackend::seeded_remat(cfg.clone(), *seed, NATIVE_MAX_BATCH)?),
                 policy,
             ),
-            router,
-            #[cfg(feature = "pjrt")]
-            wcfe_exe: None,
-            wcfe_native: None,
-            image_elems: 0,
-            learn_batch_cap: NATIVE_MAX_BATCH,
-            knowledge: KnowledgeState::default(),
-            wal: None,
-        },
+            NATIVE_MAX_BATCH,
+            None,
+        ),
         BackendSpec::NativeArtifacts { artifacts, config } => {
             let manifest = Manifest::load(artifacts)?;
             let backend = NativeBackend::from_manifest(&manifest, config, NATIVE_MAX_BATCH)?;
-            let (wcfe_native, image_elems) = load_native_wcfe(&manifest, config)?;
-            Executor {
-                classifier: HdClassifier::new(Box::new(backend), policy),
-                router,
-                #[cfg(feature = "pjrt")]
-                wcfe_exe: None,
-                wcfe_native,
-                image_elems,
-                learn_batch_cap: NATIVE_MAX_BATCH,
-                knowledge: KnowledgeState::default(),
-                wal: None,
-            }
+            (
+                HdClassifier::new(Box::new(backend), policy),
+                NATIVE_MAX_BATCH,
+                Some((manifest, config.clone())),
+            )
         }
         #[cfg(feature = "pjrt")]
         BackendSpec::Pjrt { artifacts, config } => {
+            let manifest = Manifest::load(artifacts)?;
             let mut engine = Engine::load(artifacts)?;
             let backend = PjrtBackend::new(&mut engine, config, 1)?;
-            let (wcfe_exe, image_elems) = match engine.manifest.wcfe.clone() {
-                Some(meta) if engine.manifest.config(config)?.image => {
-                    let exe = engine.executable("wcfe_fwd_b1")?;
-                    (Some(exe), meta.image_hw * meta.image_hw * meta.image_c)
-                }
-                _ => (None, 0),
-            };
-            Executor {
-                classifier: HdClassifier::new(Box::new(backend), policy),
-                router,
-                wcfe_exe,
-                wcfe_native: None,
-                image_elems,
-                learn_batch_cap: 1,
-                knowledge: KnowledgeState::default(),
-                wal: None,
-            }
+            (
+                HdClassifier::new(Box::new(backend), policy),
+                1,
+                Some((manifest, config.clone())),
+            )
         }
+    };
+    let (fe, image_elems) = build_fe(
+        &opts.wcfe,
+        manifest.as_ref().map(|(m, c)| (m, c.as_str())),
+        classifier.cfg(),
+    )?;
+    // price the datapaths once: HDC encode+search ops per progressive
+    // segment from the chip formulas, FE ops from the clustered stack
+    let chip = Chip::default();
+    let hdc_ops =
+        chip.encode_segment_ops(classifier.cfg()) + chip.search_segment_ops(classifier.cfg());
+    let (fe_ops, fe_dense_ops) = fe
+        .as_ref()
+        .map(|f| (f.clustered_ops(), f.dense_ops()))
+        .unwrap_or((0, 0));
+    let mut ex = Executor {
+        classifier,
+        router,
+        fe,
+        fe_pool: WorkerPool::new(opts.threads),
+        image_elems,
+        energy: DualModeEnergy::new(hdc_ops, fe_ops, fe_dense_ops, 0.7),
+        modes: ModeCounters::default(),
+        learn_batch_cap,
+        knowledge: KnowledgeState::default(),
+        wal: None,
     };
     // size the backend's per-call worker pool (0 = all cores); backends
     // without an internal pool ignore the hint
@@ -687,6 +794,11 @@ impl Executor {
                 .wal
                 .as_ref()
                 .map_or(self.classifier.store.total_learns(), |w| w.last_seq()),
+            bypass: self.modes.bypass,
+            normal: self.modes.normal,
+            escalations: self.modes.escalations,
+            policy: self.router.policy.code(),
+            policy_margin: self.router.policy.margin(),
         }
     }
 
@@ -771,56 +883,149 @@ impl Executor {
     }
 
     fn extract_features(&mut self, img: &[f32]) -> Result<Vec<f32>> {
-        if self.image_elems == 0 {
-            anyhow::bail!("normal mode needs WCFE artifacts");
-        }
+        let fe = self.fe.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("normal mode needs a WCFE front-end (artifacts or a seeded spec)")
+        })?;
         if img.len() != self.image_elems {
             anyhow::bail!("image has {} elems, expected {}", img.len(), self.image_elems);
         }
-        #[cfg(feature = "pjrt")]
-        if let Some(exe) = &self.wcfe_exe {
-            return exe.run(&[crate::runtime::Arg::F32(img, &[1, 32, 32, 3])]);
+        fe.forward(img)
+    }
+
+    /// True when the payload is an image classification the router sends
+    /// through the FE up front — the grouping predicate for batched
+    /// extraction (Confidence starts in bypass, so it never batches here).
+    fn image_batchable(&self, payload: &Payload) -> bool {
+        matches!(payload, Payload::Image(_) | Payload::ImageWithMode(..))
+            && self.fe.is_some()
+            && self.router.route(payload) == Mode::Normal
+    }
+
+    /// A contiguous run of normal-mode image classifications: one batched
+    /// feature extraction fanned out over the worker pool, then the usual
+    /// per-request classify + reply in arrival order. Per-image results are
+    /// bit-identical to the singleton path; a bad image errors alone.
+    fn handle_image_run(&mut self, run: &[Request]) {
+        let t0 = Instant::now();
+        let imgs: Vec<&[f32]> = run
+            .iter()
+            .map(|r| match &r.payload {
+                Payload::Image(img) | Payload::ImageWithMode(img, _) => img.as_slice(),
+                _ => unreachable!("image_batchable gates this run"),
+            })
+            .collect();
+        let expected = self.image_elems;
+        let features: Vec<Result<Vec<f32>>> = match self.fe.as_ref() {
+            Some(fe) => fe.forward_batch(&imgs, &self.fe_pool),
+            None => unreachable!("image_batchable requires an FE"),
+        };
+        for (r, (img, feats)) in run.iter().zip(imgs.iter().zip(features)) {
+            let over = match &r.payload {
+                Payload::ImageWithMode(_, m) => Some(*m),
+                _ => None,
+            };
+            let resp = (|| -> Result<Response> {
+                if img.len() != expected {
+                    anyhow::bail!("image has {} elems, expected {expected}", img.len());
+                }
+                let res = self.classify_with(&feats?, over)?;
+                self.modes.normal += 1;
+                Ok(self.classify_response(r.id, &res, true, false, t0))
+            })();
+            let _ = r
+                .reply
+                .send(resp.unwrap_or_else(|e| Response::error(r.id, format!("{e:#}"))));
         }
-        if let Some(model) = &self.wcfe_native {
-            return model.forward(img);
+    }
+
+    /// One classification with an optional per-request search-mode
+    /// override: swap the policy's kernel for this call, then restore it.
+    fn classify_with(
+        &mut self,
+        features: &[f32],
+        over: Option<SearchMode>,
+    ) -> Result<crate::hdc::ProgressiveResult> {
+        let default_mode = self.classifier.policy.mode;
+        if let Some(m) = over {
+            self.classifier.policy.mode = m;
         }
-        anyhow::bail!("normal mode needs WCFE artifacts")
+        let r = self.classifier.classify(features);
+        self.classifier.policy.mode = default_mode;
+        r
+    }
+
+    /// Assemble a classify reply with dual-mode flags + energy accounting.
+    fn classify_response(
+        &self,
+        id: u64,
+        r: &crate::hdc::ProgressiveResult,
+        used_wcfe: bool,
+        escalated: bool,
+        t0: Instant,
+    ) -> Response {
+        Response {
+            class: Some(r.class),
+            segments_used: r.segments_used,
+            early_exit: r.early_exit,
+            used_wcfe,
+            escalated,
+            energy_j: self.energy.query_energy_j(r.segments_used, used_wcfe),
+            latency_s: t0.elapsed().as_secs_f64(),
+            ..Response::ok(id)
+        }
+    }
+
+    /// The shared learn path (`Learn` carries features; `LearnImage` lands
+    /// here after extraction): validate, WAL-append, bundle, reply.
+    fn do_learn(&mut self, id: u64, t0: Instant, x: &[f32], class: usize) -> Result<Response> {
+        // validate before the WAL append: a record the log accepts must
+        // always be replayable
+        let (feat, classes) =
+            (self.classifier.cfg().features(), self.classifier.cfg().classes);
+        if x.len() != feat {
+            anyhow::bail!("learn: features len {} != F {feat}", x.len());
+        }
+        if class >= classes {
+            anyhow::bail!("learn: class {class} out of range (< {classes})");
+        }
+        if let Some(wal) = self.wal.as_mut() {
+            wal.append(class as u32, x).context("learn: wal append")?;
+        }
+        if let Err(e) = self.classifier.learn(x, class) {
+            // compensate: the logged learn never reached the store
+            if let Some(wal) = self.wal.as_mut() {
+                if let Err(re) = wal.rollback(1) {
+                    eprintln!("WAL rollback after failed learn: {re:#}");
+                }
+            }
+            return Err(e);
+        }
+        self.note_learns(1);
+        Ok(Response {
+            kind: crate::coordinator::ReplyKind::Learn,
+            class: Some(class),
+            segments_used: self.classifier.cfg().segments,
+            latency_s: t0.elapsed().as_secs_f64(),
+            ..Response::ok(id)
+        })
     }
 
     fn handle(&mut self, req: &Request) -> Result<Response> {
         let t0 = Instant::now();
         match &req.payload {
-            Payload::Learn(x, class) => {
-                // validate before the WAL append: a record the log accepts
-                // must always be replayable
-                let (feat, classes) =
-                    (self.classifier.cfg().features(), self.classifier.cfg().classes);
-                if x.len() != feat {
-                    anyhow::bail!("learn: features len {} != F {feat}", x.len());
-                }
-                if *class >= classes {
-                    anyhow::bail!("learn: class {class} out of range (< {classes})");
-                }
-                if let Some(wal) = self.wal.as_mut() {
-                    wal.append(*class as u32, x).context("learn: wal append")?;
-                }
-                if let Err(e) = self.classifier.learn(x, *class) {
-                    // compensate: the logged learn never reached the store
-                    if let Some(wal) = self.wal.as_mut() {
-                        if let Err(re) = wal.rollback(1) {
-                            eprintln!("WAL rollback after failed learn: {re:#}");
-                        }
-                    }
-                    return Err(e);
-                }
-                self.note_learns(1);
-                Ok(Response {
-                    kind: crate::coordinator::ReplyKind::Learn,
-                    class: Some(*class),
-                    segments_used: self.classifier.cfg().segments,
-                    latency_s: t0.elapsed().as_secs_f64(),
-                    ..Response::ok(req.id)
-                })
+            Payload::Learn(x, class) => self.do_learn(req.id, t0, x, *class),
+            Payload::LearnImage(img, class) => {
+                // the fix for image learns: under Auto (and Confidence) the
+                // router sends raw-pixel learns through the FE, so the
+                // bundled sample lives in the same feature space queries are
+                // answered in; ForceBypass bundles the pixels directly. The
+                // WAL logs the post-extraction features either way — replay
+                // and replication stay pure feature-space operations.
+                let x = match self.router.route(&req.payload) {
+                    Mode::Normal => self.extract_features(img)?,
+                    Mode::Bypass => img.clone(),
+                };
+                self.do_learn(req.id, t0, &x, *class)
             }
             Payload::Snapshot(path) => {
                 let target = self.snapshot_store(path.as_deref())?;
@@ -904,33 +1109,76 @@ impl Executor {
                 ..Response::ok(req.id)
             }),
             payload => {
-                let mode = self.router.route(payload);
-                let (features, used_wcfe, search_override) = match (payload, mode) {
-                    (Payload::Image(img), Mode::Normal) => {
-                        (self.extract_features(img)?, true, None)
+                let mut mode = self.router.route(payload);
+                let mut forced_escalation = false;
+                // Confidence serves images bypass-first, which feeds raw
+                // pixels to the encoder — only well-formed when the image
+                // has exactly F elements. When the geometry rules bypass
+                // out, the request escalates unconditionally (identical to
+                // ForceNormal), rather than erroring on a doomed first pass.
+                if let (
+                    ModePolicy::Confidence { .. },
+                    Payload::Image(img) | Payload::ImageWithMode(img, _),
+                    Mode::Bypass,
+                ) = (self.router.policy, payload, mode)
+                {
+                    if img.len() != self.classifier.cfg().features() && self.fe.is_some() {
+                        mode = Mode::Normal;
+                        forced_escalation = true;
                     }
-                    (Payload::Image(img), Mode::Bypass) => (img.clone(), false, None),
-                    (Payload::Features(x), _) => (x.clone(), false, None),
-                    (Payload::FeaturesWithMode(x, m), _) => (x.clone(), false, Some(*m)),
-                    _ => unreachable!("learn/snapshot/restore/stats/wal ops handled above"),
-                };
-                // per-request search-mode override: swap the policy's kernel
-                // for this one classification, then restore the default
-                let default_mode = self.classifier.policy.mode;
-                if let Some(m) = search_override {
-                    self.classifier.policy.mode = m;
                 }
-                let r = self.classifier.classify(&features);
-                self.classifier.policy.mode = default_mode;
-                let r = r?;
-                Ok(Response {
-                    class: Some(r.class),
-                    segments_used: r.segments_used,
-                    early_exit: r.early_exit,
-                    used_wcfe,
-                    latency_s: t0.elapsed().as_secs_f64(),
-                    ..Response::ok(req.id)
-                })
+                // `escalatable` keeps the raw pixels around when a
+                // Confidence policy serves an image bypass-first: a thin
+                // margin re-runs exactly the ForceNormal path on them
+                let (features, used_wcfe, search_override, escalatable) =
+                    match (payload, mode) {
+                        (Payload::Image(img), Mode::Normal) => {
+                            (self.extract_features(img)?, true, None, None)
+                        }
+                        (Payload::Image(img), Mode::Bypass) => {
+                            (img.clone(), false, None, Some(img))
+                        }
+                        (Payload::ImageWithMode(img, m), Mode::Normal) => {
+                            (self.extract_features(img)?, true, Some(*m), None)
+                        }
+                        (Payload::ImageWithMode(img, m), Mode::Bypass) => {
+                            (img.clone(), false, Some(*m), Some(img))
+                        }
+                        (Payload::Features(x), _) => (x.clone(), false, None, None),
+                        (Payload::FeaturesWithMode(x, m), _) => {
+                            (x.clone(), false, Some(*m), None)
+                        }
+                        _ => unreachable!("learn/snapshot/restore/stats/wal ops handled above"),
+                    };
+                let mut used_wcfe = used_wcfe;
+                let mut escalated = forced_escalation;
+                let mut first_pass_segments = 0usize;
+                let mut r = self.classify_with(&features, search_override)?;
+                if let (ModePolicy::Confidence { margin }, Some(img), false) =
+                    (self.router.policy, escalatable, used_wcfe)
+                {
+                    if r.margin < margin && self.fe.is_some() {
+                        first_pass_segments = r.segments_used;
+                        let features = self.extract_features(img)?;
+                        r = self.classify_with(&features, search_override)?;
+                        used_wcfe = true;
+                        escalated = true;
+                    }
+                }
+                if used_wcfe {
+                    self.modes.normal += 1;
+                } else {
+                    self.modes.bypass += 1;
+                }
+                self.modes.escalations += u64::from(escalated);
+                let mut resp = self.classify_response(req.id, &r, used_wcfe, escalated, t0);
+                if first_pass_segments > 0 {
+                    // the query really ran twice: the abandoned bypass pass
+                    // is paid for on top of the normal-mode re-run (a
+                    // geometry-forced escalation never ran a first pass)
+                    resp.energy_j += self.energy.query_energy_j(first_pass_segments, false);
+                }
+                Ok(resp)
             }
         }
     }
@@ -1008,6 +1256,7 @@ mod tests {
             min_segments: 1,
             search_mode: SearchMode::default(),
             mode_policy: ModePolicy::Auto,
+            wcfe: WcfeSpec::default(),
             queue_depth: 8,
             threads: 1,
             snapshot_path: None,
@@ -1441,6 +1690,169 @@ mod tests {
         assert_eq!(s.learns, 6);
         assert_eq!(s.learn_seq, 6);
         assert_eq!(s.snapshots, 0, "every auto-snapshot failed");
+    }
+
+    /// A WCFE-equipped coordinator over a 16x16x1 image geometry whose
+    /// pixel count equals the HD feature count (256), so bypass and normal
+    /// are both well-formed — the scenario-matrix shape. `scale_x` is tuned
+    /// down so both [0,1] pixels and the FE's small GAP+FC outputs spread
+    /// across the int8 range instead of rounding to {0, 1}.
+    fn image_coordinator(policy: ModePolicy) -> (Coordinator, HdConfig) {
+        let mut cfg = HdConfig::synthetic("img", 16, 16, 32, 32, 8, 4);
+        cfg.scale_x = 0.02;
+        let mut opts = CoordinatorOptions::software(cfg.clone());
+        opts.mode_policy = policy;
+        opts.wcfe = WcfeSpec::Seeded {
+            image_hw: 16,
+            image_c: 1,
+            channels: vec![4, 8],
+            clusters: 4,
+            seed: 11,
+        };
+        (Coordinator::start(opts).unwrap(), cfg)
+    }
+
+    /// Class-distinct images: each class gets its own brightness band plus
+    /// per-pixel texture, so both raw pixels and GAP-pooled FE features
+    /// separate the classes.
+    fn image_protos(cfg: &HdConfig, n_classes: usize) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(55);
+        (0..n_classes)
+            .map(|c| {
+                let base = 0.1 + 0.25 * c as f32;
+                (0..cfg.features())
+                    .map(|_| (base + rng.normal_f32() * 0.08).clamp(0.0, 1.0))
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn seeded_wcfe_serves_images_and_counts_modes() {
+        let (coord, cfg) = image_coordinator(ModePolicy::Auto);
+        let protos = image_protos(&cfg, 4);
+        // image learns route through the FE under Auto (the satellite fix)
+        for (c, p) in protos.iter().enumerate() {
+            for _ in 0..3 {
+                let r = coord.call(Payload::LearnImage(p.clone(), c)).unwrap();
+                assert!(r.error.is_none(), "{:?}", r.error);
+            }
+        }
+        // image queries run normal mode and recover the learned class
+        for (c, p) in protos.iter().enumerate() {
+            let r = coord.call(Payload::Image(p.clone())).unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert_eq!(r.class, Some(c));
+            assert!(r.used_wcfe && !r.escalated);
+            assert!(r.energy_j > 0.0, "normal-mode queries carry energy");
+        }
+        // feature-space queries on extracted features bypass
+        let s = coord.call(Payload::Stats).unwrap().stats.unwrap();
+        assert_eq!(s.normal, 4);
+        assert_eq!(s.bypass, 0);
+        assert_eq!(s.escalations, 0);
+        assert_eq!(s.policy, ModePolicy::Auto.code());
+        assert_eq!(s.learns, 12);
+    }
+
+    #[test]
+    fn burst_image_queries_batch_identically_to_singletons() {
+        let (coord, cfg) = image_coordinator(ModePolicy::Auto);
+        let protos = image_protos(&cfg, 4);
+        for (c, p) in protos.iter().enumerate() {
+            coord.call(Payload::LearnImage(p.clone(), c)).unwrap();
+        }
+        // singleton answers first
+        let singles: Vec<_> = protos
+            .iter()
+            .map(|p| coord.call(Payload::Image(p.clone())).unwrap())
+            .collect();
+        // now fire the same queries as a burst (plus one malformed image):
+        // the executor groups them into handle_image_run
+        let mut rxs = Vec::new();
+        for _ in 0..3 {
+            for p in &protos {
+                rxs.push((false, coord.submit(Payload::Image(p.clone())).unwrap()));
+            }
+            rxs.push((true, coord.submit(Payload::Image(vec![0.5; 7])).unwrap()));
+        }
+        for (k, (expect_err, rx)) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.error.is_some(), expect_err, "req {k}: {:?}", r.error);
+            if !expect_err {
+                let single = &singles[k % (protos.len() + 1)];
+                assert_eq!(r.class, single.class);
+                assert_eq!(r.segments_used, single.segments_used);
+                assert!(r.used_wcfe);
+            }
+        }
+    }
+
+    #[test]
+    fn confidence_policy_matches_forced_modes_bitwise() {
+        // the escalation-correctness property at the coordinator level:
+        // per request, Confidence == ForceNormal when it escalates and
+        // == ForceBypass when it does not. All three coordinators learn an
+        // IDENTICAL feature-space stream (Payload::Learn bypasses routing),
+        // so their stores are bit-identical and any prediction divergence
+        // could only come from the routing layer under test.
+        let (bypass, cfg) = image_coordinator(ModePolicy::ForceBypass);
+        let (normal, _) = image_coordinator(ModePolicy::ForceNormal);
+        let protos = image_protos(&cfg, 4);
+        let mut rng = Rng::new(77);
+        let stream: Vec<Vec<f32>> = (0..24)
+            .map(|i| {
+                let noise = if i % 2 == 0 { 0.02 } else { 0.45 };
+                protos[i % 4]
+                    .iter()
+                    .map(|&v| (v + rng.normal_f32() * noise).clamp(0.0, 1.0))
+                    .collect()
+            })
+            .collect();
+        for (c, p) in protos.iter().enumerate() {
+            for coord in [&bypass, &normal] {
+                for _ in 0..3 {
+                    assert!(coord
+                        .call(Payload::Learn(p.clone(), c))
+                        .unwrap()
+                        .error
+                        .is_none());
+                }
+            }
+        }
+        // low and high thresholds pull the escalation rate toward the two
+        // extremes; equality with the matching reference must hold at any
+        // rate in between
+        for margin in [25.0f32, 100_000.0] {
+            let (conf, _) = image_coordinator(ModePolicy::Confidence { margin });
+            for (c, p) in protos.iter().enumerate() {
+                for _ in 0..3 {
+                    conf.call(Payload::Learn(p.clone(), c)).unwrap();
+                }
+            }
+            let mut fired = 0u64;
+            for q in &stream {
+                let rc = conf.call(Payload::Image(q.clone())).unwrap();
+                assert!(rc.error.is_none(), "{:?}", rc.error);
+                let reference = if rc.escalated {
+                    assert!(rc.used_wcfe);
+                    fired += 1;
+                    normal.call(Payload::Image(q.clone())).unwrap()
+                } else {
+                    assert!(!rc.used_wcfe);
+                    bypass.call(Payload::Image(q.clone())).unwrap()
+                };
+                assert_eq!(rc.class, reference.class);
+                assert_eq!(rc.segments_used, reference.segments_used);
+                assert_eq!(rc.early_exit, reference.early_exit);
+            }
+            let s = conf.call(Payload::Stats).unwrap().stats.unwrap();
+            assert_eq!(s.escalations, fired);
+            assert_eq!(s.normal, fired);
+            assert_eq!(s.bypass, stream.len() as u64 - fired);
+            assert_eq!(s.policy, 3);
+            assert_eq!(s.policy_margin, margin);
+        }
     }
 
     #[test]

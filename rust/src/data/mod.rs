@@ -3,6 +3,7 @@
 //! workloads for artifact-free runs.
 
 pub mod dataset;
+pub mod scenario;
 pub mod stream;
 pub mod synthetic;
 pub mod tensors;

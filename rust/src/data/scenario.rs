@@ -1,0 +1,256 @@
+//! Self-contained dual-mode scenario matrix: MNIST/ISOLET/UCIHAR-style
+//! image workloads with an explicit easy/hard axis, shared by the CL
+//! harness, `bench --dualmode`, and `loadgen --payload image|mix`.
+//!
+//! Each scenario fixes one geometry where the raw pixel count equals the
+//! serving config's feature count, so the same sample is valid in both
+//! operating modes: bypass mode feeds the pixels straight to the HDC
+//! encoder, normal mode runs them through a seeded clustered WCFE first
+//! (the paper's dual-mode split — skip the feature extractor on easy
+//! datasets, engage it on hard ones). The easy/hard axis only changes the
+//! per-sample noise around class-distinct brightness prototypes: easy
+//! samples sit far apart (wide top-2 margins, confident bypass), hard
+//! samples overlap (thin margins, confidence-policy escalation).
+//!
+//! Everything is seed-deterministic: two processes building the same
+//! scenario get bit-identical datasets and (via the recorded WCFE seed)
+//! bit-identical front-ends — what the loadgen↔server split and the CI
+//! escalation gates rely on.
+
+use crate::config::HdConfig;
+use crate::data::Dataset;
+use crate::util::Rng;
+use crate::Result;
+use anyhow::bail;
+
+/// Per-sample noise σ of the easy axis: well under the brightness-band
+/// spacing, so bypass classification is confident.
+pub const EASY_NOISE: f32 = 0.04;
+/// Per-sample noise σ of the hard axis: comparable to the band spacing,
+/// so top-2 margins thin out and escalation fires.
+pub const HARD_NOISE: f32 = 0.28;
+/// Input quantization scale shared by every scenario config: pixels live
+/// in [0,1] and seeded-WCFE features are small, so the serving quantizer
+/// must divide by a small scale to stay discriminative in INT8.
+pub const SCENARIO_SCALE_X: f32 = 0.02;
+
+/// One cell of the scenario matrix: a dataset family at one difficulty,
+/// carrying everything a dual-mode server needs — the HD config, the
+/// image geometry, and the seeded-WCFE build parameters.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// matrix cell name, `<family>-easy` / `<family>-hard`
+    pub name: String,
+    /// dataset family (`mnist` | `isolet` | `ucihar` style)
+    pub family: &'static str,
+    /// the hard end of the difficulty axis?
+    pub hard: bool,
+    /// serving config; `cfg.features()` equals the pixel count
+    pub cfg: HdConfig,
+    /// square image side in pixels
+    pub image_hw: usize,
+    /// image channels
+    pub image_c: usize,
+    /// seeded-WCFE conv output channels, in layer order
+    pub channels: Vec<usize>,
+    /// seeded-WCFE codebook size per conv layer
+    pub clusters: usize,
+    /// seed for both the dataset draw and the WCFE weights (shared per
+    /// family, so easy and hard differ only in sample noise)
+    pub seed: u64,
+    /// per-sample Gaussian noise σ around the class prototype
+    pub noise: f32,
+}
+
+impl Scenario {
+    /// Raw pixel count of one sample (= `cfg.features()` by construction).
+    pub fn pixels(&self) -> usize {
+        self.image_hw * self.image_hw * self.image_c
+    }
+
+    /// Deterministic (train, test) image datasets: per class, a prototype
+    /// on a class-distinct brightness band with fixed per-pixel texture;
+    /// samples add the difficulty axis' noise. Classes are round-robin
+    /// interleaved so truncated prefixes stay class-balanced (the same
+    /// contract as [`synthetic::blobs`](crate::data::synthetic::blobs)).
+    pub fn images(&self, train_per_class: usize, test_per_class: usize) -> (Dataset, Dataset) {
+        let mut rng = Rng::new(self.seed);
+        let n_px = self.pixels();
+        let classes = self.cfg.classes;
+        // brightness bands spread over [0.08, 0.92]; texture keeps classes
+        // apart pixel-wise even when bands sit close (26-class families),
+        // while the band keeps them apart after the WCFE's global pooling
+        let protos: Vec<Vec<f32>> = (0..classes)
+            .map(|c| {
+                let base = 0.08 + 0.84 * c as f32 / (classes - 1).max(1) as f32;
+                (0..n_px)
+                    .map(|_| (base + rng.normal_f32() * 0.12).clamp(0.0, 1.0))
+                    .collect()
+            })
+            .collect();
+        let noise = self.noise;
+        let mut draw = |per_class: usize, rng: &mut Rng| {
+            let mut x = Vec::with_capacity(classes * per_class * n_px);
+            let mut y = Vec::with_capacity(classes * per_class);
+            for _ in 0..per_class {
+                for (c, p) in protos.iter().enumerate() {
+                    x.extend(p.iter().map(|&v| (v + rng.normal_f32() * noise).clamp(0.0, 1.0)));
+                    y.push(c as u16);
+                }
+            }
+            Dataset::from_parts(x, y, n_px, classes).expect("scenario parts are consistent")
+        };
+        let train = draw(train_per_class, &mut rng);
+        let test = draw(test_per_class, &mut rng);
+        (train, test)
+    }
+}
+
+/// Names of the matrix cells, easy before hard within each family.
+pub fn names() -> &'static [&'static str] {
+    &[
+        "mnist-easy",
+        "mnist-hard",
+        "isolet-easy",
+        "isolet-hard",
+        "ucihar-easy",
+        "ucihar-hard",
+    ]
+}
+
+/// One family axis: (family, image_hw, image_c, f1, f2, d1, d2, segments,
+/// classes, seed). Geometry invariant: hw²·c == f1·f2, and hw survives
+/// one maxpool halving per conv layer.
+fn family(name: &str) -> Option<(&'static str, usize, usize, [usize; 6], u64)> {
+    match name {
+        // 16×16×1 = 256 px | F=256 D=1024 seg=8, 10 classes
+        "mnist" => Some(("mnist", 16, 1, [16, 16, 32, 32, 8, 10], 101)),
+        // 16×16×2 = 512 px | F=512 D=2048 seg=16, 26 classes
+        "isolet" => Some(("isolet", 16, 2, [32, 16, 64, 32, 16, 26], 202)),
+        // 24×24×1 = 576 px | F=576 D=2048 seg=16, 6 classes
+        "ucihar" => Some(("ucihar", 24, 1, [24, 24, 64, 32, 16, 6], 303)),
+        _ => None,
+    }
+}
+
+/// A matrix cell by name (`mnist-easy`, `ucihar-hard`, ...).
+pub fn get(name: &str) -> Result<Scenario> {
+    let (fam_name, difficulty) = match name.rsplit_once('-') {
+        Some(parts) => parts,
+        None => bail!("no scenario '{name}' (have {})", names().join("|")),
+    };
+    let hard = match difficulty {
+        "easy" => false,
+        "hard" => true,
+        _ => bail!("no scenario '{name}' (have {})", names().join("|")),
+    };
+    let (family, hw, c, [f1, f2, d1, d2, segments, classes], seed) = match family(fam_name) {
+        Some(f) => f,
+        None => bail!("no scenario '{name}' (have {})", names().join("|")),
+    };
+    let mut cfg = HdConfig::synthetic(name, f1, f2, d1, d2, segments, classes);
+    cfg.scale_x = SCENARIO_SCALE_X;
+    Ok(Scenario {
+        name: name.to_string(),
+        family,
+        hard,
+        cfg,
+        image_hw: hw,
+        image_c: c,
+        // conv widths well above the codebook size: weight clustering
+        // only saves compute when c_out >> clusters (K centroid multiplies
+        // replace c_out dense ones per input scalar)
+        channels: vec![16, 32],
+        clusters: 8,
+        seed,
+        noise: if hard { HARD_NOISE } else { EASY_NOISE },
+    })
+}
+
+/// The whole matrix, in [`names`] order.
+pub fn matrix() -> Vec<Scenario> {
+    names().iter().map(|n| get(n).expect("built-in scenarios resolve")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_cells_resolve_and_validate() {
+        for sc in matrix() {
+            assert!(sc.cfg.validate().is_ok(), "{}", sc.name);
+            // bypass feasibility: pixels double as the feature vector
+            assert_eq!(sc.pixels(), sc.cfg.features(), "{}", sc.name);
+            // normal feasibility: the image survives one halving per layer
+            assert_eq!(sc.image_hw % (1 << sc.channels.len()), 0, "{}", sc.name);
+            assert_eq!(sc.cfg.scale_x, SCENARIO_SCALE_X);
+            // the complexity-savings premise the energy report relies on:
+            // the cell's clustered FE is strictly cheaper than dense
+            let fe = crate::wcfe::ClusteredWcfe::cluster(
+                crate::wcfe::WcfeModel::seeded(
+                    sc.image_hw,
+                    sc.image_c,
+                    &sc.channels,
+                    sc.cfg.features(),
+                    sc.seed,
+                ),
+                sc.clusters,
+            );
+            assert!(fe.clustered_ops() < fe.dense_ops(), "{}", sc.name);
+        }
+        assert!(get("mnist-medium").is_err());
+        assert!(get("cifar-easy").is_err());
+        assert!(get("mnist").is_err());
+    }
+
+    #[test]
+    fn easy_and_hard_share_prototypes_but_not_noise() {
+        let easy = get("mnist-easy").unwrap();
+        let hard = get("mnist-hard").unwrap();
+        assert_eq!(easy.seed, hard.seed);
+        assert!(easy.noise < hard.noise);
+        let (e_train, _) = easy.images(3, 2);
+        let (h_train, _) = hard.images(3, 2);
+        assert_eq!(e_train.n, h_train.n);
+        assert_ne!(e_train.x, h_train.x, "noise must differ across the axis");
+        // determinism: the same cell twice is bit-identical
+        let (e2, _) = easy.images(3, 2);
+        assert_eq!(e_train.x, e2.x);
+    }
+
+    #[test]
+    fn images_are_shaped_balanced_and_in_range() {
+        let sc = get("ucihar-hard").unwrap();
+        let (train, test) = sc.images(5, 3);
+        assert_eq!(train.n, 5 * sc.cfg.classes);
+        assert_eq!(test.n, 3 * sc.cfg.classes);
+        assert_eq!(train.dim, sc.pixels());
+        assert_eq!(train.class_histogram(), vec![5; sc.cfg.classes]);
+        assert!(train.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn easy_scenarios_separate_in_pixel_space() {
+        // the bypass-mode premise: raw pixels of an easy cell classify by
+        // nearest prototype distance alone
+        let sc = get("mnist-easy").unwrap();
+        let (train, test) = sc.images(1, 4);
+        let correct = (0..test.n)
+            .filter(|&i| {
+                let s = test.sample(i);
+                let nearest = (0..train.n)
+                    .min_by_key(|&j| {
+                        train.sample(j)
+                            .iter()
+                            .zip(s)
+                            .map(|(a, b)| ((a - b).abs() * 1e4) as u64)
+                            .sum::<u64>()
+                    })
+                    .unwrap();
+                train.label(nearest) == test.label(i)
+            })
+            .count();
+        assert!(correct * 10 >= test.n * 9, "{correct}/{}", test.n);
+    }
+}

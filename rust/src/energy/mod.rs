@@ -7,4 +7,4 @@ pub mod model;
 pub mod report;
 
 pub use model::{Domain, EnergyModel};
-pub use report::{comparison_table, SotaChip};
+pub use report::{comparison_table, DualModeEnergy, SotaChip};

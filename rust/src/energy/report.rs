@@ -5,6 +5,64 @@
 
 use crate::energy::model::{Domain, EnergyModel};
 
+/// Per-query energy accounting for dual-mode serving: the executor (and the
+/// bench/loadgen measurement layer) precomputes the op counts of its
+/// datapaths once — HDC encode+search ops per progressive segment, and the
+/// clustered vs dense WCFE forward — then prices each served query by how
+/// far the progressive search actually ran and whether the front-end fired.
+/// Everything is priced by [`EnergyModel`] at one operating voltage, so
+/// energy-per-query lines up with the paper's 0.7 V efficiency endpoints.
+#[derive(Clone, Debug)]
+pub struct DualModeEnergy {
+    /// operating voltage the per-op energies are evaluated at
+    pub v: f64,
+    /// HDC ops (encode + search) per progressive-search segment
+    pub hdc_ops_per_segment: u64,
+    /// cluster-factored WCFE ops per image forward (0 without a front-end)
+    pub fe_ops: u64,
+    /// what a dense (un-clustered) forward would cost — the FE ops a
+    /// bypassed query avoids
+    pub fe_dense_ops: u64,
+    /// the calibrated per-op energy model
+    pub model: EnergyModel,
+}
+
+impl DualModeEnergy {
+    /// Accounting at the paper's 0.7 V peak-efficiency point.
+    pub fn new(hdc_ops_per_segment: u64, fe_ops: u64, fe_dense_ops: u64, v: f64) -> DualModeEnergy {
+        DualModeEnergy {
+            v,
+            hdc_ops_per_segment,
+            fe_ops,
+            fe_dense_ops,
+            model: EnergyModel::default(),
+        }
+    }
+
+    /// Modeled energy of one classification that terminated after
+    /// `segments_used` progressive segments, plus the WCFE forward when the
+    /// query ran in normal mode.
+    pub fn query_energy_j(&self, segments_used: usize, used_wcfe: bool) -> f64 {
+        let hdc_ops = self.hdc_ops_per_segment * segments_used.max(1) as u64;
+        let mut e = self.model.energy_j(Domain::Hdc, hdc_ops, self.v);
+        if used_wcfe {
+            e += self.model.energy_j(Domain::Wcfe, self.fe_ops, self.v);
+        }
+        e
+    }
+
+    /// The dense-FE ops a bypassed query avoided (the complexity-saving
+    /// numerator loadgen/bench report).
+    pub fn fe_ops_avoided(&self, used_wcfe: bool) -> u64 {
+        if used_wcfe {
+            // the clustered kernel still saved the dense-vs-clustered gap
+            self.fe_dense_ops.saturating_sub(self.fe_ops)
+        } else {
+            self.fe_dense_ops
+        }
+    }
+}
+
 /// One comparison row (constants transcribed from Fig.11).
 #[derive(Clone, Debug)]
 pub struct SotaChip {
@@ -143,6 +201,21 @@ pub fn comparison_table(model: &EnergyModel) -> (SotaChip, Vec<SotaChip>, Headli
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn dual_mode_energy_prices_modes_and_segments() {
+        let e = DualModeEnergy::new(1000, 50_000, 200_000, 0.7);
+        let bypass_early = e.query_energy_j(4, false);
+        let bypass_full = e.query_energy_j(16, false);
+        let normal_full = e.query_energy_j(16, true);
+        assert!(bypass_early > 0.0);
+        assert!((bypass_full / bypass_early - 4.0).abs() < 1e-9);
+        assert!(normal_full > bypass_full, "the FE forward must cost extra");
+        assert_eq!(e.fe_ops_avoided(false), 200_000);
+        assert_eq!(e.fe_ops_avoided(true), 150_000);
+        // segments clamp at 1 so a degenerate report never prices at zero
+        assert_eq!(e.query_energy_j(0, false), e.query_energy_j(1, false));
+    }
 
     #[test]
     fn headline_ratios_match_paper() {

@@ -26,8 +26,10 @@
 use clo_hdnn::cl::learners::HdLearner;
 use clo_hdnn::cl::ClHarness;
 use clo_hdnn::config::HdConfig;
-use clo_hdnn::coordinator::{BackendSpec, Coordinator, CoordinatorOptions, Payload};
-use clo_hdnn::data::{synthetic, Dataset, TaskStream};
+use clo_hdnn::coordinator::{
+    BackendSpec, Coordinator, CoordinatorOptions, ModePolicy, Payload, WcfeSpec,
+};
+use clo_hdnn::data::{scenario, synthetic, Dataset, TaskStream};
 use clo_hdnn::hdc::quantize::quantize_features;
 use clo_hdnn::hdc::{HdClassifier, ProgressiveSearch, SearchMode, Trainer};
 #[cfg(feature = "pjrt")]
@@ -77,7 +79,9 @@ fn run() -> Result<()> {
 const HELP: &str = "clo-hdnn <info|infer|cl-run|sim|serve|loadgen|bench|asm> [flags]
   --artifacts <dir>   artifact directory (default ./artifacts)
   --backend <name>    native (default, pure Rust) or pjrt (needs --features pjrt)
-  --config <name>     HD config: tiny|isolet|ucihar (built-in) or any manifest config
+  --config <name>     HD config: tiny|isolet|ucihar (built-in), a dual-mode
+                      scenario cell (mnist|isolet|ucihar × -easy|-hard, e.g.
+                      mnist-easy), or any manifest config
   --search <mode>     associative-search kernel: l1 (INT8, default) or packed
                       (bit-packed INT1 Hamming via XOR+popcount)
   --threads <n>       per-call worker threads for the native backend
@@ -93,6 +97,14 @@ const HELP: &str = "clo-hdnn <info|infer|cl-run|sim|serve|loadgen|bench|asm> [fl
   --samples <n>       evaluation sample cap
   --tasks <n>         CL tasks (default 5)
   --voltage <v>       DVFS point for sim (default 0.9)
+
+dual-mode flags (serve + listen): --policy auto|bypass|normal|
+  confidence:<margin> (routing policy; auto = images run the WCFE, features
+  bypass; confidence = bypass first, re-run through the WCFE when the top-2
+  distance margin falls below <margin> — see README \"Dual-mode operation\"),
+  --wcfe off|artifacts|scenario:<name> (where the serving WCFE front-end
+  comes from; serving a scenario config equips that cell's seeded front-end
+  automatically)
 
 serve flags: --listen <host:port> switches from the Poisson demo to the TCP
   wire-protocol server; --models <a,b,c> hosts several models side by side
@@ -135,6 +147,10 @@ loadgen flags: --connect <host:port> (required), --clients <n> (default 4),
   its configured default at the end), --snapshot-out <file> (checkpoint to
   an explicit server-side path; single-model; needs
   --allow-remote-snapshot-paths on the server),
+  --payload features|image|mix (request body shape: features = bypass-space
+  Infer/Learn, image = raw-pixel InferImage/LearnImage through the server's
+  WCFE, mix = alternate both; image|mix need scenario configs and write the
+  dual-mode report), --dualmode-out <file> (default BENCH_dualmode.json),
   --per-class <n> (synthetic workload size, must match the server's),
   --replicas <a,b> (read fan-out: infers round-robin across the primary
   and these follower servers, learns stay pinned to the primary; the
@@ -152,7 +168,10 @@ bench flags: --config tiny|isolet|ucihar|all, --quick (small sweep),
   --out <file> (default BENCH_classifier.json), --iters/--warmup,
   --taus a,b,c (progressive sweep points),
   --encoder-out <file> (default BENCH_encoder.json: scalar vs sign-GEMM vs
-  sign-GEMM+pool encode throughput over growing row counts)
+  sign-GEMM+pool encode throughput over growing row counts),
+  --margin <f> (confidence-escalation margin for the dual-mode scenario
+  matrix; default 2000), --dualmode-out <file> (default BENCH_dualmode.json:
+  per-scenario bypass fraction, escalations, energy/query, FE ops avoided)
 
 Env: CLO_HDNN_THREADS caps worker threads (same as --threads);
   CLO_HDNN_SIMD=off|avx2|avx512|neon overrides the runtime-dispatched SIMD
@@ -204,11 +223,87 @@ fn load_workload(
         let (train, test) = load_datasets(&m, cfg_name)?;
         Ok((cfg, train, test, Some(m)))
     } else {
-        let cfg = synthetic::config(cfg_name)?;
+        let (cfg, sc) = builtin_config(cfg_name)?;
         let per_class = args.usize_or("per-class", 40)?;
-        let (train, test) = synthetic::blobs(&cfg, per_class, 10, 17);
+        // a scenario cell's pixels double as its bypass feature vector, so
+        // the image datasets drive the feature-space paths (infer, cl-run,
+        // the serve demo) unchanged
+        let (train, test) = match &sc {
+            Some(sc) => sc.images(per_class, 10),
+            None => synthetic::blobs(&cfg, per_class, 10, 17),
+        };
         Ok((cfg, train, test, None))
     }
+}
+
+/// Resolve a built-in config name: a synthetic feature-space config
+/// (tiny|isolet|ucihar) or a dual-mode scenario cell (mnist-easy, ...,
+/// ucihar-hard), returned with its scenario when it is one.
+fn builtin_config(name: &str) -> Result<(HdConfig, Option<scenario::Scenario>)> {
+    if let Ok(cfg) = synthetic::config(name) {
+        return Ok((cfg, None));
+    }
+    match scenario::get(name) {
+        Ok(sc) => Ok((sc.cfg.clone(), Some(sc))),
+        Err(_) => anyhow::bail!(
+            "no built-in config or scenario '{name}' (configs {}; scenarios {}); \
+             image-mode configs such as cifar100 need AOT artifacts",
+            synthetic::names().join("|"),
+            scenario::names().join("|")
+        ),
+    }
+}
+
+/// The `--policy` dual-mode routing policy; `fallback` carries a
+/// manifest-supplied per-model spelling when one exists.
+fn mode_policy_arg(args: &Args, fallback: Option<&str>) -> Result<ModePolicy> {
+    match args.get("policy").or(fallback) {
+        Some(s) => ModePolicy::parse(s),
+        None => Ok(ModePolicy::default()),
+    }
+}
+
+/// A scenario cell's seeded-WCFE build spec.
+fn scenario_wcfe(sc: &scenario::Scenario) -> WcfeSpec {
+    WcfeSpec::Seeded {
+        image_hw: sc.image_hw,
+        image_c: sc.image_c,
+        channels: sc.channels.clone(),
+        clusters: sc.clusters,
+        seed: sc.seed,
+    }
+}
+
+/// The `--wcfe` front-end source. Default: the served scenario's seeded
+/// front-end when the config is a scenario cell, else the artifact path.
+fn wcfe_arg(args: &Args, cfg: &HdConfig, sc: Option<&scenario::Scenario>) -> Result<WcfeSpec> {
+    let spec = match args.get("wcfe") {
+        Some(s) => s,
+        None => {
+            return Ok(match sc {
+                Some(sc) => scenario_wcfe(sc),
+                None => WcfeSpec::Artifacts,
+            })
+        }
+    };
+    Ok(match spec {
+        "off" | "disabled" => WcfeSpec::Disabled,
+        "artifacts" => WcfeSpec::Artifacts,
+        other => match other.strip_prefix("scenario:") {
+            Some(name) => {
+                let s = scenario::get(name)?;
+                anyhow::ensure!(
+                    s.cfg.features() == cfg.features(),
+                    "scenario '{name}' extracts {} features but the served config \
+                     has {} — the front-end would feed the wrong geometry",
+                    s.cfg.features(),
+                    cfg.features()
+                );
+                scenario_wcfe(&s)
+            }
+            None => anyhow::bail!("bad --wcfe '{other}' (off|artifacts|scenario:<name>)"),
+        },
+    })
 }
 
 /// The `--threads` budget for in-call backend parallelism. `0` (the
@@ -393,10 +488,21 @@ fn cmd_info_connect(args: &Args, addr: &str) -> Result<()> {
         c.set_model(m)?;
         let st = c.stats()?;
         let label = if m.is_empty() { default_model.as_str() } else { m.as_str() };
+        let policy = ModePolicy::from_code(st.policy, st.policy_margin);
         println!(
             "model {label}: learns {} | classes {} | snapshots {} | learn_seq {} | \
-             served {} | wire_errors {}",
-            st.learns, st.trained_classes, st.snapshots, st.learn_seq, st.served, st.wire_errors
+             served {} | wire_errors {} | policy {} | bypass {} | normal {} | \
+             escalations {}",
+            st.learns,
+            st.trained_classes,
+            st.snapshots,
+            st.learn_seq,
+            st.served,
+            st.wire_errors,
+            policy.spelling(),
+            st.bypass,
+            st.normal,
+            st.escalations
         );
     }
     Ok(())
@@ -709,13 +815,15 @@ fn serve_coordinator_opts(
     };
     let (snapshot_path, snapshot_every, restore_path) =
         knowledge_opts(args, manifest, cfg_name, manifest_knowledge_defaults)?;
+    let sc = scenario::get(cfg_name).ok();
     Ok(CoordinatorOptions {
         backend,
         model: String::new(),
         tau: args.f64_or("tau", 0.5)? as f32,
         min_segments: args.usize_or("min-seg", 1)?,
         search_mode: search_mode(args)?,
-        mode_policy: Default::default(),
+        mode_policy: mode_policy_arg(args, None)?,
+        wcfe: wcfe_arg(args, cfg, sc.as_ref())?,
         queue_depth: 256,
         threads: threads_arg(args)?,
         snapshot_path,
@@ -768,9 +876,9 @@ fn listen_model_spec(
         .as_ref()
         .map(|m| m.config.clone())
         .unwrap_or_else(|| name.to_string());
-    let cfg = match manifest {
-        Some(m) => m.config(&cfg_name)?.clone(),
-        None => synthetic::config(&cfg_name)?,
+    let (cfg, sc) = match manifest {
+        Some(m) => (m.config(&cfg_name)?.clone(), None),
+        None => builtin_config(&cfg_name)?,
     };
     let has_factors =
         manifest.is_some() && dir.join(format!("hd_factors_{cfg_name}.bin")).exists();
@@ -841,13 +949,18 @@ fn listen_model_spec(
     let wal_path = args
         .get("wal")
         .map(|p| per_model_path(std::path::Path::new(p), name, multi));
+    // dual-mode routing: explicit --policy > the model's manifest entry >
+    // auto (the same precedence as search/tau)
+    let mode_policy =
+        mode_policy_arg(args, meta.as_ref().and_then(|m| m.policy.as_deref()))?;
     let opts = CoordinatorOptions {
         backend,
         model: name.to_string(),
         tau,
         min_segments: args.usize_or("min-seg", 1)?,
         search_mode,
-        mode_policy: Default::default(),
+        mode_policy,
+        wcfe: wcfe_arg(args, &cfg, sc.as_ref())?,
         queue_depth: 256,
         threads,
         snapshot_path,
@@ -867,14 +980,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (cfg, train, test, manifest) = load_workload(args, &cfg_name)?;
     let opts = serve_coordinator_opts(args, &cfg, &cfg_name, manifest.as_ref(), false)?;
     let mode = opts.search_mode;
-    println!("serving config {cfg_name} on {:?} | search {mode:?}", opts.backend);
+    let policy = opts.mode_policy;
+    // only the hermetic path yields scenario (image) datasets; artifact
+    // datasets are feature-space even if a config name were to collide
+    let is_scenario = manifest.is_none() && scenario::get(&cfg_name).is_ok();
+    println!(
+        "serving config {cfg_name} on {:?} | search {mode:?} | policy {}",
+        opts.backend,
+        policy.spelling()
+    );
     let coord = Coordinator::start(opts)?;
     // online learning phase
     let learn_n = args.usize_or("learn", 400)?.min(train.n);
     for i in 0..learn_n {
         coord.call(Payload::Learn(train.sample(i).to_vec(), train.label(i)))?;
     }
-    // serving phase with Poisson arrivals
+    // serving phase with Poisson arrivals; scenario cells send their raw
+    // pixels as images so the routing policy decides the mode per request
     let n = args.usize_or("samples", 200)?.min(test.n);
     let rate = args.f64_or("rate", 200.0)?;
     let mut rng = Rng::new(9);
@@ -883,12 +1005,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     for i in 0..n {
         std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(rate)));
-        let r = coord.call(Payload::Features(test.sample(i).to_vec()))?;
+        let sample = test.sample(i).to_vec();
+        let r = coord.call(if is_scenario {
+            Payload::Image(sample)
+        } else {
+            Payload::Features(sample)
+        })?;
         if r.error.is_some() {
             metrics.record_error();
             continue;
         }
-        metrics.record(r.latency_s, r.segments_used, r.early_exit, r.used_wcfe);
+        metrics.record_infer(
+            r.latency_s,
+            r.segments_used,
+            r.early_exit,
+            r.used_wcfe,
+            r.escalated,
+            r.energy_j,
+        );
         correct += usize::from(r.class == Some(test.label(i)));
     }
     metrics.wall_s = t0.elapsed().as_secs_f64();
@@ -902,6 +1036,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         metrics.mean_segments(),
         cfg.segments,
         metrics.complexity_reduction(cfg.segments) * 100.0
+    );
+    println!(
+        "dual-mode: policy {} | bypass {:.0}% ({} of {}) | escalations {} | {:.3e} J/query",
+        policy.spelling(),
+        metrics.bypass_fraction() * 100.0,
+        metrics.bypass_runs(),
+        metrics.segments_used.len(),
+        metrics.escalations,
+        metrics.energy_per_query_j()
     );
     Ok(())
 }
@@ -956,10 +1099,11 @@ fn cmd_serve_listen(args: &Args) -> Result<()> {
     }
     for spec in &specs {
         println!(
-            "model {:12} on {:?} | search {:?} | snapshot {:?} (every {} learns) | restore {:?} | wal {:?}",
+            "model {:12} on {:?} | search {:?} | policy {} | snapshot {:?} (every {} learns) | restore {:?} | wal {:?}",
             spec.name,
             spec.opts.backend,
             spec.opts.search_mode,
+            spec.opts.mode_policy.spelling(),
             spec.opts.snapshot_path,
             spec.opts.snapshot_every,
             spec.opts.restore_path,
@@ -1051,12 +1195,47 @@ fn cmd_serve_listen(args: &Args) -> Result<()> {
 }
 
 /// One loadgen target: a wire model name ("" = server default) plus its
-/// deterministic synthetic workload.
+/// deterministic synthetic workload. Scenario cells additionally carry
+/// their image geometry so the driver can send image-shaped bodies and
+/// reconstruct the cell's WCFE cost model for the dual-mode report.
 struct LoadgenWork {
     wire_model: String,
     label: String,
     train: Dataset,
     test: Dataset,
+    scenario: Option<scenario::Scenario>,
+}
+
+/// Which request shape `loadgen` puts on the wire. Image bodies need a
+/// scenario workload (they carry raw pixels the server's WCFE geometry
+/// must match); `Mix` alternates per request so one run exercises both
+/// the bypass feature path and the image routing path.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum PayloadKind {
+    Features,
+    Image,
+    Mix,
+}
+
+impl PayloadKind {
+    fn parse(s: &str) -> Result<PayloadKind> {
+        Ok(match s {
+            "features" => PayloadKind::Features,
+            "image" => PayloadKind::Image,
+            "mix" => PayloadKind::Mix,
+            other => anyhow::bail!("bad --payload '{other}' (features|image|mix)"),
+        })
+    }
+
+    /// Does a thread's `i`-th request go out image-shaped? Deterministic
+    /// in `i` so the mix is reproducible across runs.
+    fn image_for(self, i: usize) -> bool {
+        match self {
+            PayloadKind::Features => false,
+            PayloadKind::Image => true,
+            PayloadKind::Mix => i % 2 == 0,
+        }
+    }
 }
 
 /// A request in flight on a pipelined loadgen connection.
@@ -1144,8 +1323,11 @@ fn loadgen_drain_one(
             m.record_error();
             conn.report.errors += 1;
         }
-        (WireResponse::Infer { class, segments, early, .. }, Some(label)) => {
-            m.record(dt, *segments as usize, *early, false);
+        (
+            WireResponse::Infer { class, segments, early, wcfe, escalated, energy_j, .. },
+            Some(label),
+        ) => {
+            m.record_infer(dt, *segments as usize, *early, *wcfe, *escalated, *energy_j);
             *infers += 1;
             *correct += usize::from(*class as usize == label);
         }
@@ -1280,6 +1462,66 @@ fn accuracy_json(correct: usize, infers: usize) -> clo_hdnn::util::json::Json {
     }
 }
 
+/// One scenario cell of `BENCH_dualmode.json` — the shape is shared by
+/// `bench` and `loadgen` so `scripts/bench_gate.py` gates either source.
+/// The FE complexity-savings ledger rebuilds the cell's seeded WCFE
+/// locally (deterministic, so client and server agree on the cost model):
+/// a bypassed query avoids the dense FE entirely, a normal-mode query
+/// still avoids the dense-vs-clustered op gap.
+fn dualmode_cell(
+    sc: &scenario::Scenario,
+    m: &clo_hdnn::coordinator::ServeMetrics,
+    correct: usize,
+    infers: usize,
+    policy: &str,
+) -> clo_hdnn::util::json::Json {
+    use clo_hdnn::util::json::Json;
+    let fe = clo_hdnn::wcfe::ClusteredWcfe::cluster(
+        clo_hdnn::wcfe::WcfeModel::seeded(
+            sc.image_hw,
+            sc.image_c,
+            &sc.channels,
+            sc.cfg.features(),
+            sc.seed,
+        ),
+        sc.clusters,
+    );
+    let (dense, clustered) = (fe.dense_ops(), fe.clustered_ops());
+    let avoided =
+        m.bypass_runs() * dense + m.wcfe_runs * dense.saturating_sub(clustered);
+    let s = m.latency_summary();
+    Json::obj(vec![
+        ("family", Json::Str(sc.family.to_string())),
+        ("hard", Json::Bool(sc.hard)),
+        ("policy", Json::Str(policy.to_string())),
+        ("infers", Json::Num(m.segments_used.len() as f64)),
+        ("learns", Json::Num(m.learns as f64)),
+        ("errors", Json::Num(m.errors as f64)),
+        ("bypass", Json::Num(m.bypass_runs() as f64)),
+        ("normal", Json::Num(m.wcfe_runs as f64)),
+        ("escalations", Json::Num(m.escalations as f64)),
+        ("bypass_fraction", Json::Num(m.bypass_fraction())),
+        ("accuracy", accuracy_json(correct, infers)),
+        ("energy_total_j", Json::Num(m.energy_j)),
+        ("energy_per_query_j", Json::Num(m.energy_per_query_j())),
+        (
+            "fe_ops",
+            Json::obj(vec![
+                ("dense_per_query", Json::Num(dense as f64)),
+                ("clustered_per_query", Json::Num(clustered as f64)),
+                ("avoided_total", Json::Num(avoided as f64)),
+            ]),
+        ),
+        (
+            "latency",
+            Json::obj(vec![
+                ("p50_s", Json::Num(s.p50_s)),
+                ("p99_s", Json::Num(s.p99_s)),
+            ]),
+        ),
+    ])
+}
+
 /// driving several) and write `BENCH_serve.json` (version 4, with
 /// per-connection and per-target error/timeout attribution). `--models
 /// a,b` targets a model mix over wire v2, `--pipeline k` keeps k requests
@@ -1312,35 +1554,40 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         None => args.get("model").map(|m| vec![m.to_string()]).unwrap_or_default(),
     };
     let pipeline = args.usize_or("pipeline", 1)?.clamp(1, 64);
+    let payload = PayloadKind::parse(&args.str_or("payload", "features"))?;
     // model targeting and pipelining both need wire v2; a plain run stays
     // on v1 so the launch protocol keeps getting exercised end to end
     let v2 = !model_names.is_empty() || pipeline > 1;
     let per_class = args.usize_or("per-class", 40)?;
+    let build_work = |name: &str, wire_model: String| -> Result<LoadgenWork> {
+        let (cfg, sc) = builtin_config(name).map_err(|e| {
+            anyhow::anyhow!(
+                "loadgen workloads are hermetic, so --models entries must be \
+                 synthetic config or scenario names: {e}"
+            )
+        })?;
+        let (train, test) = match &sc {
+            Some(sc) => sc.images(per_class, 10),
+            None => synthetic::blobs(&cfg, per_class, 10, 17),
+        };
+        Ok(LoadgenWork { wire_model, label: name.to_string(), train, test, scenario: sc })
+    };
     let works: Vec<LoadgenWork> = if model_names.is_empty() {
         let cfg_name = args.str_or("config", "tiny");
-        let cfg = synthetic::config(&cfg_name)?;
-        let (train, test) = synthetic::blobs(&cfg, per_class, 10, 17);
-        vec![LoadgenWork { wire_model: String::new(), label: cfg_name, train, test }]
+        vec![build_work(&cfg_name, String::new())?]
     } else {
-        model_names
-            .iter()
-            .map(|name| {
-                let cfg = synthetic::config(name).map_err(|e| {
-                    anyhow::anyhow!(
-                        "loadgen workloads are synthetic, so --models entries must \
-                         be synthetic config names: {e}"
-                    )
-                })?;
-                let (train, test) = synthetic::blobs(&cfg, per_class, 10, 17);
-                Ok(LoadgenWork {
-                    wire_model: name.clone(),
-                    label: name.clone(),
-                    train,
-                    test,
-                })
-            })
-            .collect::<Result<_>>()?
+        model_names.iter().map(|name| build_work(name, name.clone())).collect::<Result<_>>()?
     };
+    if payload != PayloadKind::Features {
+        if let Some(w) = works.iter().find(|w| w.scenario.is_none()) {
+            anyhow::bail!(
+                "--payload {payload:?} sends image bodies, so every driven workload \
+                 must be a scenario cell — '{}' is not (have {})",
+                w.label,
+                scenario::names().join("|")
+            );
+        }
+    }
     let clients = args.usize_or("clients", 4)?.max(1);
     // total concurrent connections, spread across the client threads
     // (thread t owns connections t, t+clients, ...); the default of one
@@ -1415,18 +1662,34 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                         let w = &works[mi];
                         let k = sent[mi];
                         sent[mi] += 1;
+                        // scenario geometry guarantees pixels == features,
+                        // so either body shape is valid — image bodies take
+                        // the routed (policy-decided) path, feature bodies
+                        // the bypass path
+                        let as_image = payload.image_for(i);
                         let (body, expect) = if rng.uniform() < learn_frac {
                             let j = (t + k * clients) % w.train.n;
-                            let body = ReqBody::Learn {
-                                class: w.train.label(j) as u32,
-                                features: w.train.sample(j).to_vec(),
+                            let class = w.train.label(j) as u32;
+                            let sample = w.train.sample(j).to_vec();
+                            let body = if as_image {
+                                ReqBody::LearnImage { class, pixels: sample }
+                            } else {
+                                ReqBody::Learn { class, features: sample }
                             };
                             (body, None)
                         } else {
                             let idx = (t + k * clients) % w.test.n;
-                            let body = ReqBody::Infer {
-                                mode: Client::mode_byte(mode),
-                                features: w.test.sample(idx).to_vec(),
+                            let sample = w.test.sample(idx).to_vec();
+                            let body = if as_image {
+                                ReqBody::InferImage {
+                                    mode: Client::mode_byte(mode),
+                                    pixels: sample,
+                                }
+                            } else {
+                                ReqBody::Infer {
+                                    mode: Client::mode_byte(mode),
+                                    features: sample,
+                                }
                             };
                             (body, Some(w.test.label(idx)))
                         };
@@ -1614,7 +1877,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         snapshot_paths.push(written);
     }
     let mut models_json: BTreeMap<String, Json> = BTreeMap::new();
-    let mut last_stats = None;
+    let mut model_stats: Vec<clo_hdnn::serve::WireStats> = Vec::with_capacity(works.len());
     // knowledge counters summed across driven models (the process-wide
     // served/wire_errors counters are identical in every reply)
     let (mut total_learns, mut total_classes, mut total_snapshots) = (0u64, 0u64, 0u64);
@@ -1648,13 +1911,22 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                         ("learns", Json::Num(st.learns as f64)),
                         ("trained_classes", Json::Num(st.trained_classes as f64)),
                         ("snapshots", Json::Num(st.snapshots as f64)),
+                        (
+                            "policy",
+                            Json::Str(
+                                ModePolicy::from_code(st.policy, st.policy_margin).spelling(),
+                            ),
+                        ),
+                        ("bypass", Json::Num(st.bypass as f64)),
+                        ("normal", Json::Num(st.normal as f64)),
+                        ("escalations", Json::Num(st.escalations as f64)),
                     ]),
                 ),
             ]),
         );
-        last_stats = Some(st);
+        model_stats.push(st);
     }
-    let server_stats = last_stats.expect("at least one model is always driven");
+    let server_stats = *model_stats.last().expect("at least one model is always driven");
     println!(
         "server: served {} | learns {} (across {} driven model(s)) | wire errors {}",
         server_stats.served,
@@ -1766,6 +2038,46 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let out_path = args.str_or("out", "BENCH_serve.json");
     std::fs::write(&out_path, doc.dump())?;
     println!("wrote {out_path}");
+
+    // dual-mode report: written whenever the run drove scenario workloads
+    // (even under --payload features — the routing policy picks the mode,
+    // the payload shape only picks the wire encoding), so one loadgen run
+    // yields both the serving report and the energy/complexity ledger
+    let dual: Vec<usize> =
+        (0..works.len()).filter(|&i| works[i].scenario.is_some()).collect();
+    if !dual.is_empty() {
+        let mut cells: BTreeMap<String, Json> = BTreeMap::new();
+        let mut dt = Table::new(&[
+            "scenario", "infers", "bypass", "normal", "escalations", "energy/query",
+        ]);
+        let mut policy = String::new();
+        for &i in &dual {
+            let w = &works[i];
+            let sc = w.scenario.as_ref().expect("filtered on scenario");
+            let (m, c, n) = &by_model[i];
+            let st = &model_stats[i];
+            policy = ModePolicy::from_code(st.policy, st.policy_margin).spelling();
+            dt.row(&[
+                w.label.clone(),
+                format!("{}", m.segments_used.len()),
+                format!("{}", m.bypass_runs()),
+                format!("{}", m.wcfe_runs),
+                format!("{}", m.escalations),
+                format!("{:.3e} J", m.energy_per_query_j()),
+            ]);
+            cells.insert(w.label.clone(), dualmode_cell(sc, m, *c, *n, &policy));
+        }
+        dt.print();
+        let dm = Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("source", Json::Str("loadgen".into())),
+            ("policy", Json::Str(policy)),
+            ("scenarios", Json::Obj(cells)),
+        ]);
+        let dm_path = args.str_or("dualmode-out", "BENCH_dualmode.json");
+        std::fs::write(&dm_path, dm.dump())?;
+        println!("wrote {dm_path}");
+    }
     Ok(())
 }
 
@@ -1834,6 +2146,98 @@ fn cmd_bench(args: &Args) -> Result<()> {
     ]);
     std::fs::write(&enc_out, enc_doc.dump())?;
     println!("wrote {enc_out}");
+
+    // the dual-mode scenario matrix -> BENCH_dualmode.json: every cell
+    // served end to end through a local coordinator under the Confidence
+    // policy, with energy + FE-complexity-savings accounting
+    bench_dualmode(args, quick)?;
+    Ok(())
+}
+
+/// `bench`'s dual-mode phase: drive every scenario-matrix cell through a
+/// local coordinator under the Confidence policy (`--margin`, default
+/// 2000 — raw top-2 distance units, see README's tuning recipe) and write
+/// `BENCH_dualmode.json` in the same cell shape `loadgen` emits. The
+/// store is taught in pixel space (`Payload::Learn` bypasses routing), so
+/// bypass answers are grounded and escalated re-runs hit the same store
+/// deterministically; the easy/hard axis then shows up as the bypass
+/// fraction and the per-query energy spread.
+fn bench_dualmode(args: &Args, quick: bool) -> Result<()> {
+    use clo_hdnn::coordinator::ServeMetrics;
+    use clo_hdnn::util::json::Json;
+    use clo_hdnn::util::stats::Table;
+    use std::collections::BTreeMap;
+
+    let margin = args.f64_or("margin", 2000.0)? as f32;
+    let policy = ModePolicy::Confidence { margin };
+    let (learn_pc, test_pc) = if quick { (6, 4) } else { (12, 10) };
+    println!("\n== bench-dualmode: scenario matrix under {} ==", policy.spelling());
+    let mut cells: BTreeMap<String, Json> = BTreeMap::new();
+    let mut table = Table::new(&[
+        "scenario",
+        "infers",
+        "bypass",
+        "escalations",
+        "acc",
+        "energy/query",
+        "ns/query",
+    ]);
+    for sc in scenario::matrix() {
+        let mut opts = CoordinatorOptions::software(sc.cfg.clone());
+        opts.mode_policy = policy;
+        opts.wcfe = scenario_wcfe(&sc);
+        opts.threads = threads_arg(args)?;
+        let coord = Coordinator::start(opts)?;
+        let (train, test) = sc.images(learn_pc, test_pc);
+        for i in 0..train.n {
+            let r = coord.call(Payload::Learn(train.sample(i).to_vec(), train.label(i)))?;
+            if let Some(e) = r.error {
+                anyhow::bail!("dual-mode bench learn failed on {}: {e}", sc.name);
+            }
+        }
+        let mut m = ServeMetrics::default();
+        let mut correct = 0usize;
+        let t0 = std::time::Instant::now();
+        for i in 0..test.n {
+            let r = coord.call(Payload::Image(test.sample(i).to_vec()))?;
+            if let Some(e) = r.error {
+                anyhow::bail!("dual-mode bench infer failed on {}: {e}", sc.name);
+            }
+            m.record_infer(
+                r.latency_s,
+                r.segments_used,
+                r.early_exit,
+                r.used_wcfe,
+                r.escalated,
+                r.energy_j,
+            );
+            correct += usize::from(r.class == Some(test.label(i)));
+        }
+        m.wall_s = t0.elapsed().as_secs_f64();
+        table.row(&[
+            sc.name.clone(),
+            format!("{}", test.n),
+            format!("{:.0}%", 100.0 * m.bypass_fraction()),
+            format!("{}", m.escalations),
+            accuracy_cell(correct, test.n),
+            format!("{:.3e} J", m.energy_per_query_j()),
+            format!("{:.0}", m.mean_latency() * 1e9),
+        ]);
+        cells.insert(
+            sc.name.clone(),
+            dualmode_cell(&sc, &m, correct, test.n, &policy.spelling()),
+        );
+    }
+    table.print();
+    let doc = Json::obj(vec![
+        ("version", Json::Num(1.0)),
+        ("source", Json::Str("bench".into())),
+        ("policy", Json::Str(policy.spelling())),
+        ("scenarios", Json::Obj(cells)),
+    ]);
+    let path = args.str_or("dualmode-out", "BENCH_dualmode.json");
+    std::fs::write(&path, doc.dump())?;
+    println!("wrote {path}");
     Ok(())
 }
 

@@ -67,7 +67,8 @@ pub struct KnowledgeMeta {
 /// "models": [
 ///   {"name": "tiny", "config": "tiny",
 ///    "knowledge": "knowledge_tiny.clok", "every_learns": 256,
-///    "search": "packed", "threads": 0, "tau": 0.5}
+///    "search": "packed", "threads": 0, "tau": 0.5,
+///    "policy": "confidence:40"}
 /// ]
 /// ```
 #[derive(Clone, Debug)]
@@ -82,6 +83,10 @@ pub struct ModelMeta {
     pub threads: usize,
     /// progressive-search confidence override
     pub tau: Option<f64>,
+    /// dual-mode routing policy spelling
+    /// (`auto`|`bypass`|`normal`|`confidence:<margin>`; absent = auto) —
+    /// parsed by `ModePolicy::parse` when the model is served
+    pub policy: Option<String>,
     /// knowledge checkpoint file, relative to the artifact dir
     pub knowledge_file: Option<String>,
     /// auto-snapshot cadence (every N learns; 0 = explicit snapshots only)
@@ -245,6 +250,7 @@ impl Manifest {
                 search: m.get("search").and_then(Json::as_str).map(str::to_string),
                 threads: m.get("threads").and_then(Json::as_usize).unwrap_or(0),
                 tau: m.get("tau").and_then(Json::as_f64),
+                policy: m.get("policy").and_then(Json::as_str).map(str::to_string),
                 knowledge_file: m
                     .get("knowledge")
                     .and_then(Json::as_str)
@@ -351,7 +357,7 @@ mod tests {
                     "every_learns":256},
       "models": [
         {"name":"tiny","knowledge":"knowledge_tiny.clok","every_learns":128,
-         "search":"packed","threads":2,"tau":0.25},
+         "search":"packed","threads":2,"tau":0.25,"policy":"confidence:40"},
         {"name":"tiny-l1","config":"tiny"}
       ]
     }"#;
@@ -385,6 +391,7 @@ mod tests {
         assert_eq!(tiny.search.as_deref(), Some("packed"));
         assert_eq!(tiny.threads, 2);
         assert_eq!(tiny.tau, Some(0.25));
+        assert_eq!(tiny.policy.as_deref(), Some("confidence:40"));
         assert_eq!(tiny.every_learns, 128);
         assert_eq!(
             m.model_knowledge_path("tiny").unwrap(),
@@ -393,6 +400,7 @@ mod tests {
         let l1 = m.model("tiny-l1").unwrap();
         assert_eq!(l1.config, "tiny", "two registry names may share one config");
         assert!(l1.search.is_none());
+        assert!(l1.policy.is_none());
         assert_eq!(l1.threads, 0);
         assert!(m.model_knowledge_path("tiny-l1").is_none());
         assert!(m.model("absent").is_none());

@@ -94,7 +94,7 @@ pub struct WalTailReply {
 }
 
 /// One classification reply over the wire.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct InferReply {
     /// predicted class
     pub class: usize,
@@ -102,6 +102,13 @@ pub struct InferReply {
     pub segments_used: usize,
     /// whether the search exited before the last segment
     pub early_exit: bool,
+    /// whether the WCFE front-end ran for this query (normal mode)
+    pub used_wcfe: bool,
+    /// whether a confidence-policy bypass pass escalated into the WCFE
+    pub escalated: bool,
+    /// server-modeled energy of this query in joules (0 when the server
+    /// has no energy accounting for the model)
+    pub energy_j: f64,
 }
 
 /// A synchronous connection. The high-level calls (`infer`/`learn`/…)
@@ -324,14 +331,7 @@ impl Client {
             mode: Client::mode_byte(mode),
             features: features.to_vec(),
         };
-        match self.call(body)? {
-            WireResponse::Infer { class, segments, early, .. } => Ok(InferReply {
-                class: class as usize,
-                segments_used: segments as usize,
-                early_exit: early,
-            }),
-            other => bail!("unexpected reply to infer: {other:?}"),
-        }
+        self.infer_call(body)
     }
 
     /// Classify with the server's default search mode.
@@ -339,9 +339,57 @@ impl Client {
         self.infer_mode(features, None)
     }
 
+    /// Classify a raw image: the server's mode policy decides whether the
+    /// pixels run through the model's WCFE front-end (normal mode) or feed
+    /// the HDC encoder directly (bypass), and the reply's `used_wcfe` /
+    /// `escalated` flags report which path actually served it.
+    pub fn infer_image_mode(
+        &mut self,
+        pixels: &[f32],
+        mode: Option<SearchMode>,
+    ) -> Result<InferReply> {
+        let body = ReqBody::InferImage {
+            mode: Client::mode_byte(mode),
+            pixels: pixels.to_vec(),
+        };
+        self.infer_call(body)
+    }
+
+    /// Classify a raw image with the server's default search mode.
+    pub fn infer_image(&mut self, pixels: &[f32]) -> Result<InferReply> {
+        self.infer_image_mode(pixels, None)
+    }
+
+    fn infer_call(&mut self, body: ReqBody) -> Result<InferReply> {
+        match self.call(body)? {
+            WireResponse::Infer { class, segments, early, wcfe, escalated, energy_j, .. } => {
+                Ok(InferReply {
+                    class: class as usize,
+                    segments_used: segments as usize,
+                    early_exit: early,
+                    used_wcfe: wcfe,
+                    escalated,
+                    energy_j,
+                })
+            }
+            other => bail!("unexpected reply to infer: {other:?}"),
+        }
+    }
+
     /// Bundle a labeled sample into the targeted model's knowledge store.
     pub fn learn(&mut self, features: &[f32], class: usize) -> Result<()> {
         let body = ReqBody::Learn { class: class as u32, features: features.to_vec() };
+        match self.call(body)? {
+            WireResponse::Learn { .. } => Ok(()),
+            other => bail!("unexpected reply to learn: {other:?}"),
+        }
+    }
+
+    /// Bundle a labeled raw image: the server routes it through the
+    /// model's WCFE front-end when its mode policy says images train in
+    /// feature space.
+    pub fn learn_image(&mut self, pixels: &[f32], class: usize) -> Result<()> {
+        let body = ReqBody::LearnImage { class: class as u32, pixels: pixels.to_vec() };
         match self.call(body)? {
             WireResponse::Learn { .. } => Ok(()),
             other => bail!("unexpected reply to learn: {other:?}"),

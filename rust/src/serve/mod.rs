@@ -222,6 +222,9 @@ pub(crate) fn translate(resp: &Response, stats: &ServerStats) -> WireResponse {
             class: resp.class.unwrap_or(0) as u32,
             segments: resp.segments_used as u32,
             early: resp.early_exit,
+            wcfe: resp.used_wcfe,
+            escalated: resp.escalated,
+            energy_j: resp.energy_j,
         },
         ReplyKind::Learn => WireResponse::Learn { id, class: resp.class.unwrap_or(0) as u32 },
         ReplyKind::Snapshot | ReplyKind::Restore => WireResponse::Snapshot {
@@ -239,6 +242,11 @@ pub(crate) fn translate(resp: &Response, stats: &ServerStats) -> WireResponse {
                     trained_classes: k.trained_classes as u32,
                     snapshots: k.snapshots,
                     learn_seq: k.learn_seq,
+                    bypass: k.bypass,
+                    normal: k.normal,
+                    escalations: k.escalations,
+                    policy: k.policy,
+                    policy_margin: k.policy_margin,
                 },
             }
         }

@@ -691,6 +691,12 @@ fn handle_frame(
             _ => Payload::Features(features),
         },
         ReqBody::Learn { class, features } => Payload::Learn(features, class as usize),
+        ReqBody::InferImage { mode, pixels } => match mode {
+            wire::MODE_L1 => Payload::ImageWithMode(pixels, SearchMode::L1Int8),
+            wire::MODE_PACKED => Payload::ImageWithMode(pixels, SearchMode::HammingPacked),
+            _ => Payload::Image(pixels),
+        },
+        ReqBody::LearnImage { class, pixels } => Payload::LearnImage(pixels, class as usize),
         ReqBody::Snapshot { path } => {
             if !path.is_empty() && !opts.allow_snapshot_paths {
                 conn.queue_resp(&WireResponse::Error {

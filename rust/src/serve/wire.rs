@@ -35,17 +35,25 @@
 //! OP_CONN_STATS (empty — answered by the reactor, never an executor)
 //! OP_WAL_TAIL   after u64 (highest learn sequence the caller has applied)
 //! OP_SNAPSHOT_FETCH (empty)
+//! OP_INFER_IMAGE mode u8 (as OP_INFER), n u32, n × f32 raw pixels — the
+//!                server routes per its mode policy (WCFE or bypass)
+//! OP_LEARN_IMAGE class u32, n u32, n × f32 raw pixels
 //! ```
 //!
 //! ## Response payloads
 //!
 //! ```text
 //! id: u64, kind: u8, then per kind:
-//!   OP_INFER     class u32, segments u32, early u8
+//!   OP_INFER     class u32, segments u32, early u8, flags u8
+//!                (bit0 = WCFE ran, bit1 = confidence-escalated),
+//!                energy_j f64 (image infers reply with this kind too)
 //!   OP_LEARN     class u32
 //!   OP_SNAPSHOT  path_len u16, path utf-8
 //!   OP_STATS     served u64, wire_errors u64, learns u64,
-//!                trained_classes u32, snapshots u64, learn_seq u64
+//!                trained_classes u32, snapshots u64, learn_seq u64,
+//!                bypass u64, normal u64, escalations u64, policy u8
+//!                (0 auto | 1 force-bypass | 2 force-normal | 3 confidence),
+//!                policy_margin f32
 //!   OP_HELLO     version u32, default_model str16,
 //!                count u16, count × model str16
 //!   OP_CONN_STATS conn_id u64, age_ms u64, frames u64, replies u64,
@@ -110,8 +118,24 @@ pub const OP_WAL_TAIL: u8 = 7;
 /// In-memory knowledge-image request/reply opcode: the target model's live
 /// store serialized as CLOK bytes (replication bootstrap).
 pub const OP_SNAPSHOT_FETCH: u8 = 8;
+/// Image-classification request opcode: the body carries raw pixels
+/// (h*w*c row-major, values in [0,1]) instead of features; the server's
+/// dual-mode router decides whether the WCFE runs. Replies use the
+/// [`OP_INFER`] kind.
+pub const OP_INFER_IMAGE: u8 = 9;
+/// Image-learning request opcode: a labeled raw image; the server extracts
+/// features per its mode policy before bundling. Replies use the
+/// [`OP_LEARN`] kind.
+pub const OP_LEARN_IMAGE: u8 = 10;
 /// Response-only kind tag for error replies.
 pub const KIND_ERROR: u8 = 0xEE;
+
+/// [`WireResponse::Infer`] flags bit: the WCFE front-end ran (normal mode).
+pub const FLAG_WCFE: u8 = 1;
+/// [`WireResponse::Infer`] flags bit: a Confidence policy re-ran the
+/// request through the WCFE after a thin bypass margin (implies
+/// [`FLAG_WCFE`]).
+pub const FLAG_ESCALATED: u8 = 2;
 
 /// Per-request search-mode selector on [`ReqBody::Infer`]: the server's
 /// configured default kernel.
@@ -345,6 +369,25 @@ pub enum ReqBody {
     /// fetch the target model's live knowledge store as CLOK bytes
     /// (replication bootstrap; works with or without a WAL)
     SnapshotFetch,
+    /// classify a raw image (the server's dual-mode router decides whether
+    /// the WCFE front-end runs); the reply is an ordinary
+    /// [`WireResponse::Infer`] whose flags report what the router did
+    InferImage {
+        /// search-kernel selector ([`MODE_DEFAULT`]/[`MODE_L1`]/[`MODE_PACKED`])
+        mode: u8,
+        /// raw pixels, h*w*c row-major in [0,1] (length must match the
+        /// target model's WCFE image geometry — or its feature count,
+        /// under a bypass route)
+        pixels: Vec<f32>,
+    },
+    /// bundle one labeled raw image (features are extracted server-side
+    /// when the mode policy routes image learns through the WCFE)
+    LearnImage {
+        /// the sample's class label
+        class: u32,
+        /// raw pixels, h*w*c row-major in [0,1]
+        pixels: Vec<f32>,
+    },
     /// negotiate the wire version (always encoded in the v1 shape)
     Hello {
         /// highest protocol version the client speaks
@@ -386,6 +429,8 @@ impl WireRequest {
             ReqBody::ConnStats => OP_CONN_STATS,
             ReqBody::WalTail { .. } => OP_WAL_TAIL,
             ReqBody::SnapshotFetch => OP_SNAPSHOT_FETCH,
+            ReqBody::InferImage { .. } => OP_INFER_IMAGE,
+            ReqBody::LearnImage { .. } => OP_LEARN_IMAGE,
             ReqBody::Hello { .. } => OP_HELLO,
         }
     }
@@ -411,14 +456,15 @@ impl WireRequest {
             put_str16(&mut out, &self.model);
         }
         match &self.body {
-            ReqBody::Infer { mode, features } => {
+            ReqBody::Infer { mode, features } | ReqBody::InferImage { mode, pixels: features } => {
                 out.push(*mode);
                 out.extend_from_slice(&(features.len() as u32).to_le_bytes());
                 for v in features {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
             }
-            ReqBody::Learn { class, features } => {
+            ReqBody::Learn { class, features }
+            | ReqBody::LearnImage { class, pixels: features } => {
                 out.extend_from_slice(&class.to_le_bytes());
                 out.extend_from_slice(&(features.len() as u32).to_le_bytes());
                 for v in features {
@@ -467,6 +513,19 @@ impl WireRequest {
             OP_CONN_STATS => ReqBody::ConnStats,
             OP_WAL_TAIL => ReqBody::WalTail { after: c.u64()? },
             OP_SNAPSHOT_FETCH => ReqBody::SnapshotFetch,
+            OP_INFER_IMAGE => {
+                let mode = c.u8()?;
+                if mode > MODE_PACKED {
+                    bail!("unknown infer mode {mode} (0=default 1=l1 2=packed)");
+                }
+                let n = c.u32()? as usize;
+                ReqBody::InferImage { mode, pixels: c.f32s(n)? }
+            }
+            OP_LEARN_IMAGE => {
+                let class = c.u32()?;
+                let n = c.u32()? as usize;
+                ReqBody::LearnImage { class, pixels: c.f32s(n)? }
+            }
             OP_HELLO => ReqBody::Hello { version: c.u32()? },
             other => bail!("unknown opcode {other:#04x}"),
         };
@@ -478,7 +537,7 @@ impl WireRequest {
 /// Server-side counters a Stats reply carries. `served`/`wire_errors` are
 /// process-wide; the knowledge counters belong to the model the Stats
 /// request targeted.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct WireStats {
     /// frames served process-wide (all opcodes, error replies included)
     pub served: u64,
@@ -495,6 +554,18 @@ pub struct WireStats {
     /// count. A follower compares this against its own applied sequence to
     /// detect stale reads.
     pub learn_seq: u64,
+    /// target-model classifications answered without the WCFE
+    pub bypass: u64,
+    /// target-model classifications answered through the WCFE
+    pub normal: u64,
+    /// target-model bypass-first classifications re-run through the WCFE
+    /// by a Confidence policy
+    pub escalations: u64,
+    /// the target model's active mode policy (0 auto, 1 force-bypass,
+    /// 2 force-normal, 3 confidence)
+    pub policy: u8,
+    /// the Confidence policy's escalation margin (0 for other policies)
+    pub policy_margin: f32,
 }
 
 /// Reactor-side counters for one connection, as carried by an
@@ -529,7 +600,7 @@ pub struct WireConnStats {
 /// connection).
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireResponse {
-    /// classification result
+    /// classification result (feature and image infers alike)
     Infer {
         /// echoed request id
         id: u64,
@@ -539,6 +610,14 @@ pub enum WireResponse {
         segments: u32,
         /// whether the search exited before the last segment
         early: bool,
+        /// whether the WCFE front-end ran ([`FLAG_WCFE`] on the wire)
+        wcfe: bool,
+        /// whether a Confidence policy re-ran the request through the
+        /// WCFE after a thin bypass margin ([`FLAG_ESCALATED`])
+        escalated: bool,
+        /// modeled energy for this query in joules (0 when the server
+        /// keeps no energy accounting)
+        energy_j: f64,
     },
     /// learn acknowledgement
     Learn {
@@ -635,12 +714,16 @@ impl WireResponse {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
         match self {
-            WireResponse::Infer { id, class, segments, early } => {
+            WireResponse::Infer { id, class, segments, early, wcfe, escalated, energy_j } => {
                 out.extend_from_slice(&id.to_le_bytes());
                 out.push(OP_INFER);
                 out.extend_from_slice(&class.to_le_bytes());
                 out.extend_from_slice(&segments.to_le_bytes());
                 out.push(u8::from(*early));
+                let flags =
+                    u8::from(*wcfe) * FLAG_WCFE | u8::from(*escalated) * FLAG_ESCALATED;
+                out.push(flags);
+                out.extend_from_slice(&energy_j.to_le_bytes());
             }
             WireResponse::Learn { id, class } => {
                 out.extend_from_slice(&id.to_le_bytes());
@@ -661,6 +744,11 @@ impl WireResponse {
                 out.extend_from_slice(&stats.trained_classes.to_le_bytes());
                 out.extend_from_slice(&stats.snapshots.to_le_bytes());
                 out.extend_from_slice(&stats.learn_seq.to_le_bytes());
+                out.extend_from_slice(&stats.bypass.to_le_bytes());
+                out.extend_from_slice(&stats.normal.to_le_bytes());
+                out.extend_from_slice(&stats.escalations.to_le_bytes());
+                out.push(stats.policy);
+                out.extend_from_slice(&stats.policy_margin.to_le_bytes());
             }
             WireResponse::ConnStats { id, stats } => {
                 out.extend_from_slice(&id.to_le_bytes());
@@ -721,12 +809,22 @@ impl WireResponse {
         let id = c.u64()?;
         let kind = c.u8()?;
         let resp = match kind {
-            OP_INFER => WireResponse::Infer {
-                id,
-                class: c.u32()?,
-                segments: c.u32()?,
-                early: c.u8()? != 0,
-            },
+            OP_INFER => {
+                let (class, segments, early) = (c.u32()?, c.u32()?, c.u8()? != 0);
+                let flags = c.u8()?;
+                if flags & !(FLAG_WCFE | FLAG_ESCALATED) != 0 {
+                    bail!("unknown infer flags {flags:#04x}");
+                }
+                WireResponse::Infer {
+                    id,
+                    class,
+                    segments,
+                    early,
+                    wcfe: flags & FLAG_WCFE != 0,
+                    escalated: flags & FLAG_ESCALATED != 0,
+                    energy_j: c.f64()?,
+                }
+            }
             OP_LEARN => WireResponse::Learn { id, class: c.u32()? },
             OP_SNAPSHOT => WireResponse::Snapshot { id, path: c.str16()? },
             OP_STATS => WireResponse::Stats {
@@ -738,6 +836,11 @@ impl WireResponse {
                     trained_classes: c.u32()?,
                     snapshots: c.u64()?,
                     learn_seq: c.u64()?,
+                    bypass: c.u64()?,
+                    normal: c.u64()?,
+                    escalations: c.u64()?,
+                    policy: c.u8()?,
+                    policy_margin: c.f32()?,
                 },
             },
             OP_CONN_STATS => WireResponse::ConnStats {
@@ -827,6 +930,17 @@ mod tests {
         roundtrip_req(WireRequest::new(15, ReqBody::WalTail { after: 0 }), WIRE_V1);
         roundtrip_req(WireRequest::new(16, ReqBody::WalTail { after: u64::MAX }), WIRE_V1);
         roundtrip_req(WireRequest::new(17, ReqBody::SnapshotFetch), WIRE_V1);
+        roundtrip_req(
+            WireRequest::new(
+                18,
+                ReqBody::InferImage { mode: MODE_PACKED, pixels: vec![0.5; 256] },
+            ),
+            WIRE_V1,
+        );
+        roundtrip_req(
+            WireRequest::new(19, ReqBody::LearnImage { class: 2, pixels: vec![0.25; 64] }),
+            WIRE_V1,
+        );
     }
 
     #[test]
@@ -859,6 +973,22 @@ mod tests {
                 WIRE_V2,
             );
             roundtrip_req(WireRequest::for_model(28, model, ReqBody::SnapshotFetch), WIRE_V2);
+            roundtrip_req(
+                WireRequest::for_model(
+                    29,
+                    model,
+                    ReqBody::InferImage { mode: MODE_DEFAULT, pixels: vec![1.0, 0.0] },
+                ),
+                WIRE_V2,
+            );
+            roundtrip_req(
+                WireRequest::for_model(
+                    30,
+                    model,
+                    ReqBody::LearnImage { class: 0, pixels: vec![] },
+                ),
+                WIRE_V2,
+            );
         }
         // hello is v1-shaped even on a v2 connection
         roundtrip_req(WireRequest::new(25, ReqBody::Hello { version: 7 }), WIRE_V2);
@@ -879,7 +1009,24 @@ mod tests {
 
     #[test]
     fn response_roundtrips() {
-        roundtrip_resp(WireResponse::Infer { id: 1, class: 4, segments: 3, early: true });
+        roundtrip_resp(WireResponse::Infer {
+            id: 1,
+            class: 4,
+            segments: 3,
+            early: true,
+            wcfe: false,
+            escalated: false,
+            energy_j: 0.0,
+        });
+        roundtrip_resp(WireResponse::Infer {
+            id: 14,
+            class: 0,
+            segments: 16,
+            early: false,
+            wcfe: true,
+            escalated: true,
+            energy_j: 3.75e-6,
+        });
         roundtrip_resp(WireResponse::Learn { id: 2, class: 0 });
         roundtrip_resp(WireResponse::Snapshot { id: 3, path: "a/b.clok".into() });
         roundtrip_resp(WireResponse::Stats {
@@ -891,6 +1038,11 @@ mod tests {
                 trained_classes: 9,
                 snapshots: 1,
                 learn_seq: 40,
+                bypass: 70,
+                normal: 30,
+                escalations: 12,
+                policy: 3,
+                policy_margin: 48.5,
             },
         });
         roundtrip_resp(WireResponse::Hello {
@@ -1204,6 +1356,86 @@ mod tests {
         // responses: id at 0, kind at 8
         let resp = WireResponse::Learn { id: 3, class: 1 }.encode();
         assert_eq!(resp[8], OP_LEARN);
+    }
+
+    #[test]
+    fn dual_mode_byte_layout_is_pinned() {
+        // image-infer request (v1): id u64, op, mode u8 at 9, n u32 at 10,
+        // then n raw little-endian f32 pixels
+        let req = WireRequest::new(7, ReqBody::InferImage { mode: MODE_L1, pixels: vec![0.5] })
+            .encode(WIRE_V1)
+            .unwrap();
+        assert_eq!(req[8], OP_INFER_IMAGE);
+        assert_eq!(req[9], MODE_L1);
+        assert_eq!(&req[10..14], &1u32.to_le_bytes());
+        assert_eq!(&req[14..18], &0.5f32.to_le_bytes());
+        assert_eq!(req.len(), 18);
+        // image-learn request (v1): id u64, op, class u32 at 9, n u32 at 13
+        let req = WireRequest::new(8, ReqBody::LearnImage { class: 3, pixels: vec![1.0] })
+            .encode(WIRE_V1)
+            .unwrap();
+        assert_eq!(req[8], OP_LEARN_IMAGE);
+        assert_eq!(&req[9..13], &3u32.to_le_bytes());
+        assert_eq!(&req[13..17], &1u32.to_le_bytes());
+        assert_eq!(req.len(), 21);
+        // infer reply: class at 9, segments at 13, early at 17, flags at 18,
+        // energy_j f64 at 19..27
+        let resp = WireResponse::Infer {
+            id: 9,
+            class: 6,
+            segments: 5,
+            early: true,
+            wcfe: true,
+            escalated: true,
+            energy_j: 2.5e-6,
+        }
+        .encode();
+        assert_eq!(resp[8], OP_INFER);
+        assert_eq!(&resp[9..13], &6u32.to_le_bytes());
+        assert_eq!(&resp[13..17], &5u32.to_le_bytes());
+        assert_eq!(resp[17], 1);
+        assert_eq!(resp[18], FLAG_WCFE | FLAG_ESCALATED);
+        assert_eq!(&resp[19..27], &2.5e-6f64.to_le_bytes());
+        assert_eq!(resp.len(), 27);
+        // stats reply: dual-mode counters follow learn_seq — bypass at 53,
+        // normal at 61, escalations at 69, policy at 77, margin f32 at 78
+        let resp = WireResponse::Stats {
+            id: 10,
+            stats: WireStats {
+                served: 1,
+                wire_errors: 0,
+                learns: 2,
+                trained_classes: 3,
+                snapshots: 4,
+                learn_seq: 5,
+                bypass: 6,
+                normal: 7,
+                escalations: 8,
+                policy: 3,
+                policy_margin: 12.5,
+            },
+        }
+        .encode();
+        assert_eq!(resp[8], OP_STATS);
+        assert_eq!(&resp[53..61], &6u64.to_le_bytes());
+        assert_eq!(&resp[61..69], &7u64.to_le_bytes());
+        assert_eq!(&resp[69..77], &8u64.to_le_bytes());
+        assert_eq!(resp[77], 3);
+        assert_eq!(&resp[78..82], &12.5f32.to_le_bytes());
+        assert_eq!(resp.len(), 82);
+        // an infer reply with unknown flag bits must be rejected
+        let mut bad = WireResponse::Infer {
+            id: 11,
+            class: 0,
+            segments: 1,
+            early: false,
+            wcfe: false,
+            escalated: false,
+            energy_j: 0.0,
+        }
+        .encode();
+        bad[18] = 0x80;
+        assert!(WireResponse::decode(&bad).is_err());
     }
 
     #[test]

@@ -59,6 +59,10 @@ impl<'a> Cursor<'a> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
     /// `n` consecutive f32 values (the wire protocol's feature blocks).
     pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
         let total = n
@@ -98,6 +102,7 @@ mod tests {
         b.extend_from_slice(&70000u32.to_le_bytes());
         b.extend_from_slice(&u64::MAX.to_le_bytes());
         b.extend_from_slice(&(-2.5f32).to_le_bytes());
+        b.extend_from_slice(&1.25e-7f64.to_le_bytes());
         b.extend_from_slice(&2u16.to_le_bytes());
         b.extend_from_slice(b"hi");
         let mut c = Cursor::new(&b);
@@ -106,6 +111,7 @@ mod tests {
         assert_eq!(c.u32().unwrap(), 70000);
         assert_eq!(c.u64().unwrap(), u64::MAX);
         assert_eq!(c.f32().unwrap(), -2.5);
+        assert_eq!(c.f64().unwrap(), 1.25e-7);
         assert_eq!(c.str16().unwrap(), "hi");
         assert!(c.finish().is_ok());
         assert_eq!(c.offset(), b.len());

@@ -49,6 +49,40 @@ impl WcfeModel {
         })
     }
 
+    /// A deterministic seeded WCFE — the scenario matrix's hermetic
+    /// front-end: He-scaled normal weights drawn from `seed`, same layer
+    /// plan as [`WcfeModel::load`]. Two calls with equal arguments build
+    /// bit-identical models, so primaries, replicas and test references
+    /// extract identical features without any artifact directory.
+    pub fn seeded(
+        image_hw: usize,
+        image_c: usize,
+        channels: &[usize],
+        fc_out: usize,
+        seed: u64,
+    ) -> WcfeModel {
+        let mut rng = crate::util::Rng::new(seed);
+        let mut convs = Vec::with_capacity(channels.len());
+        let mut c_in = image_c;
+        for &c_out in channels {
+            let scale = (2.0 / (9 * c_in) as f32).sqrt();
+            convs.push(ConvLayer {
+                w: (0..9 * c_in * c_out).map(|_| rng.normal_f32() * scale).collect(),
+                c_in,
+                c_out,
+            });
+            c_in = c_out;
+        }
+        let fc_scale = (2.0 / c_in as f32).sqrt();
+        WcfeModel {
+            convs,
+            fc: (0..c_in * fc_out).map(|_| rng.normal_f32() * fc_scale).collect(),
+            fc_out,
+            image_hw,
+            image_c,
+        }
+    }
+
     /// Forward one image (h*w*c row-major, values in [0,1]) to features.
     pub fn forward(&self, img: &[f32]) -> Result<Vec<f32>> {
         self.forward_with(img, |layer, x, h, c_in| {
@@ -228,6 +262,23 @@ mod tests {
         ];
         let y = maxpool2(&x, 4, 1);
         assert_eq!(y, vec![5.0, 7.0, 2.0, 9.0]);
+    }
+
+    #[test]
+    fn seeded_models_are_deterministic() {
+        let a = WcfeModel::seeded(8, 1, &[4, 8], 16, 42);
+        let b = WcfeModel::seeded(8, 1, &[4, 8], 16, 42);
+        assert_eq!(a.fc, b.fc);
+        for (la, lb) in a.convs.iter().zip(&b.convs) {
+            assert_eq!(la.w, lb.w);
+        }
+        let c = WcfeModel::seeded(8, 1, &[4, 8], 16, 43);
+        assert_ne!(a.fc, c.fc, "different seeds must differ");
+        let img: Vec<f32> = (0..8 * 8).map(|i| (i % 7) as f32 / 7.0).collect();
+        let fa = a.forward(&img).unwrap();
+        assert_eq!(fa.len(), 16);
+        assert!(fa.iter().all(|v| v.is_finite()));
+        assert_eq!(fa, b.forward(&img).unwrap());
     }
 
     #[test]

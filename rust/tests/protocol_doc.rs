@@ -37,10 +37,14 @@ fn wire_constants_match_the_documented_table() {
     pin(&doc, "OP_CONN_STATS", &format!("{:#04X}", wire::OP_CONN_STATS));
     pin(&doc, "OP_WAL_TAIL", &format!("{:#04X}", wire::OP_WAL_TAIL));
     pin(&doc, "OP_SNAPSHOT_FETCH", &format!("{:#04X}", wire::OP_SNAPSHOT_FETCH));
+    pin(&doc, "OP_INFER_IMAGE", &format!("{:#04X}", wire::OP_INFER_IMAGE));
+    pin(&doc, "OP_LEARN_IMAGE", &format!("{:#04X}", wire::OP_LEARN_IMAGE));
     pin(&doc, "KIND_ERROR", &format!("{:#04X}", wire::KIND_ERROR));
     pin(&doc, "MODE_DEFAULT", &format!("{:#04X}", wire::MODE_DEFAULT));
     pin(&doc, "MODE_L1", &format!("{:#04X}", wire::MODE_L1));
     pin(&doc, "MODE_PACKED", &format!("{:#04X}", wire::MODE_PACKED));
+    pin(&doc, "FLAG_WCFE", &format!("{:#04X}", wire::FLAG_WCFE));
+    pin(&doc, "FLAG_ESCALATED", &format!("{:#04X}", wire::FLAG_ESCALATED));
     // the 16 MiB cap really is 16 MiB
     assert_eq!(wire::MAX_FRAME, 16 * 1024 * 1024);
 }
@@ -208,6 +212,11 @@ fn documented_stats_reply_layout_matches_the_encoder() {
         trained_classes: 0x44,
         snapshots: 0x5555,
         learn_seq: 0x6666,
+        bypass: 0x7777,
+        normal: 0x8888,
+        escalations: 0x9999,
+        policy: 3,
+        policy_margin: 6.5,
     };
     let buf = wire::WireResponse::Stats { id: 9, stats }.encode();
     assert_eq!(u64::from_le_bytes(buf[0..8].try_into().unwrap()), 9);
@@ -219,7 +228,68 @@ fn documented_stats_reply_layout_matches_the_encoder() {
     assert_eq!(u32::from_le_bytes(body[24..28].try_into().unwrap()), 0x44);
     assert_eq!(u64::from_le_bytes(body[28..36].try_into().unwrap()), 0x5555);
     assert_eq!(u64::from_le_bytes(body[36..44].try_into().unwrap()), 0x6666);
-    assert_eq!(body.len(), 44, "no trailing bytes in the stats body");
+    assert_eq!(u64::from_le_bytes(body[44..52].try_into().unwrap()), 0x7777);
+    assert_eq!(u64::from_le_bytes(body[52..60].try_into().unwrap()), 0x8888);
+    assert_eq!(u64::from_le_bytes(body[60..68].try_into().unwrap()), 0x9999);
+    assert_eq!(body[68], 3);
+    assert_eq!(f32::from_le_bytes(body[69..73].try_into().unwrap()), 6.5);
+    assert_eq!(body.len(), 73, "no trailing bytes in the stats body");
+}
+
+#[test]
+fn documented_dual_mode_layouts_match_the_encoders() {
+    let doc = spec();
+    // the spec promises the extended infer reply, the image request
+    // bodies, and the stats counter extension in these exact lines
+    for line in [
+        "OP_INFER     class u32, segments u32, early u8 (0|1),",
+        "             flags u8, energy_j f64",
+        "OP_INFER_IMAGE mode u8, n u32, n × f32",
+        "OP_LEARN_IMAGE class u32, n u32, n × f32",
+        "             bypass u64, normal u64, escalations u64,",
+        "             policy u8, policy_margin f32",
+    ] {
+        assert!(doc.contains(line), "dual-mode line missing from spec: {line:?}");
+    }
+    // image-infer request: mode at 9, n at 10, pixels from 14 (v1 shape)
+    let req = wire::WireRequest::new(
+        2,
+        wire::ReqBody::InferImage { mode: wire::MODE_PACKED, pixels: vec![0.25, -1.0] },
+    )
+    .encode(wire::WIRE_V1)
+    .unwrap();
+    assert_eq!(req[8], wire::OP_INFER_IMAGE);
+    assert_eq!(req[9], wire::MODE_PACKED);
+    assert_eq!(&req[10..14], &2u32.to_le_bytes());
+    assert_eq!(&req[14..18], &0.25f32.to_le_bytes());
+    assert_eq!(req.len(), 22);
+    // image-learn request: class at 9, n at 13, pixels from 17
+    let req = wire::WireRequest::new(3, wire::ReqBody::LearnImage { class: 6, pixels: vec![1.0] })
+        .encode(wire::WIRE_V1)
+        .unwrap();
+    assert_eq!(req[8], wire::OP_LEARN_IMAGE);
+    assert_eq!(&req[9..13], &6u32.to_le_bytes());
+    assert_eq!(&req[13..17], &1u32.to_le_bytes());
+    assert_eq!(req.len(), 21);
+    // infer reply: flags at body offset 9, energy_j at 10..18
+    let buf = wire::WireResponse::Infer {
+        id: 5,
+        class: 2,
+        segments: 7,
+        early: true,
+        wcfe: true,
+        escalated: false,
+        energy_j: 1.5e-6,
+    }
+    .encode();
+    assert_eq!(buf[8], wire::OP_INFER);
+    let body = &buf[9..];
+    assert_eq!(u32::from_le_bytes(body[0..4].try_into().unwrap()), 2);
+    assert_eq!(u32::from_le_bytes(body[4..8].try_into().unwrap()), 7);
+    assert_eq!(body[8], 1);
+    assert_eq!(body[9], wire::FLAG_WCFE);
+    assert_eq!(f64::from_le_bytes(body[10..18].try_into().unwrap()), 1.5e-6);
+    assert_eq!(body.len(), 18, "no trailing bytes in the infer body");
 }
 
 #[test]

@@ -32,6 +32,11 @@ def main():
     ap.add_argument("--classifier", required=True, help="BENCH_classifier.json path")
     ap.add_argument("--encoder", required=True, help="BENCH_encoder.json path")
     ap.add_argument("--baseline", required=True, help="bench/BASELINE.json path")
+    ap.add_argument(
+        "--dualmode",
+        default=None,
+        help="BENCH_dualmode.json path (structural dual-mode invariants; no baseline)",
+    )
     ap.add_argument("--out", default="BENCH_delta.json", help="delta report output path")
     args = ap.parse_args()
 
@@ -78,6 +83,28 @@ def main():
                 row["signgemm_speedup"],
                 spec["signgemm_speedup"],
             )
+
+    # Dual-mode report: rate-independent invariants only. Escalation *rates*
+    # depend on the margin and the noise draw, so gating an easy/hard
+    # ordering would flake; the accounting identities below hold for every
+    # margin by construction.
+    if args.dualmode:
+        dm = load(args.dualmode)
+        cells = dm.get("scenarios", {})
+        assert cells, f"{args.dualmode} carries no scenario cells"
+        for name, c in cells.items():
+            assert c["errors"] == 0, (name, c["errors"])
+            assert 0.0 <= c["bypass_fraction"] <= 1.0, (name, c["bypass_fraction"])
+            assert c["bypass"] + c["normal"] == c["infers"], (name, c)
+            assert c["escalations"] <= c["normal"], (name, c)
+            if c["infers"] > 0:
+                assert c["energy_per_query_j"] > 0.0, (name, c["energy_per_query_j"])
+            ops = c["fe_ops"]
+            assert 0 < ops["clustered_per_query"] < ops["dense_per_query"], (name, ops)
+        print(
+            "dualmode ok: %d cells (%s), policy=%s"
+            % (len(cells), ",".join(sorted(cells)), dm.get("policy", "?"))
+        )
 
     assert checks, "baseline tracks no metrics; nothing was gated"
     delta = {

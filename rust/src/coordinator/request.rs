@@ -50,6 +50,20 @@ pub enum Payload {
     /// serialize the live knowledge store to an in-memory CLOK image
     /// (replication bootstrap; works with or without a WAL)
     SnapshotFetch,
+    /// follower promotion: bump the model's epoch (generation counter) to
+    /// `max(current, min_epoch) + 1` and — when the coordinator keeps a
+    /// WAL — seal the inherited log position by rotating to a fresh
+    /// segment at `base_seq = total_learns()` under the new epoch. After
+    /// this the model is a primary of the new generation: stale
+    /// lower-epoch peers are fenced by every wal-tail/stats reply carrying
+    /// the epoch. `min_epoch` is the promotion floor: a follower that
+    /// tailed its primary at epoch E passes E here, so the new generation
+    /// outranks the failed primary even when the follower's own lineage
+    /// started at 0 (pass 0 when no source epoch is known).
+    Promote {
+        /// highest source epoch the caller observed (0 = none known)
+        min_epoch: u64,
+    },
 }
 
 /// Where an executor delivers a completed [`Response`]. The sink variant
@@ -136,6 +150,9 @@ pub enum ReplyKind {
     WalTail,
     /// a [`Payload::SnapshotFetch`] reply (`image` carries the CLOK bytes)
     SnapshotImage,
+    /// a [`Payload::Promote`] acknowledgement (`stats.epoch` is the new
+    /// generation, `stats.learn_seq` the sealed base)
+    Promote,
 }
 
 /// Knowledge counters a [`Payload::Stats`] request reports.
@@ -164,6 +181,10 @@ pub struct CoordStats {
     pub policy: u8,
     /// the Confidence policy's escalation margin (0 for other policies)
     pub policy_margin: f32,
+    /// promotion generation: 0 on an original primary's lineage, +1 per
+    /// [`Payload::Promote`]. Stamped into WAL segment headers and carried
+    /// by stats/wal-tail wire replies so stale old primaries are fenced.
+    pub epoch: u64,
 }
 
 /// What the executor returns.

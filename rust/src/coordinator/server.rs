@@ -345,6 +345,9 @@ struct Executor {
     /// durable learn log: every Learn is appended (and per the fsync
     /// cadence, durable) here before it touches the store
     wal: Option<Wal>,
+    /// promotion generation (mirrors the WAL segment header when a WAL is
+    /// kept; tracked in memory otherwise so fencing still works)
+    epoch: u64,
 }
 
 fn executor_main(
@@ -544,6 +547,7 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
         learn_batch_cap,
         knowledge: KnowledgeState::default(),
         wal: None,
+        epoch: 0,
     };
     // size the backend's per-call worker pool (0 = all cores); backends
     // without an internal pool ignore the hint
@@ -618,6 +622,8 @@ fn build_executor(opts: &CoordinatorOptions) -> Result<Executor> {
             // auto-snapshot cadence fold them
             ex.knowledge.since_snapshot = replayed;
         }
+        // a restarted promoted primary resumes its sealed generation
+        ex.epoch = wal.epoch();
         ex.wal = Some(wal);
     }
     Ok(ex)
@@ -799,7 +805,24 @@ impl Executor {
             escalations: self.modes.escalations,
             policy: self.router.policy.code(),
             policy_margin: self.router.policy.margin(),
+            epoch: self.epoch,
         }
+    }
+
+    /// Follower promotion: seal the inherited log position and step into
+    /// the next generation. With a WAL the seal is durable **before** the
+    /// in-memory epoch commits (a crash between the two recovers the
+    /// sealed epoch from the segment header); without one the epoch is
+    /// tracked in memory so fencing still works for the process lifetime.
+    fn promote(&mut self, min_epoch: u64) -> Result<()> {
+        let next = self.epoch.max(min_epoch) + 1;
+        let sealed = self.classifier.store.total_learns();
+        if let Some(wal) = self.wal.as_mut() {
+            wal.rotate_to(sealed, next)
+                .context("promote: seal the WAL under the new epoch")?;
+        }
+        self.epoch = next;
+        Ok(())
     }
 
     /// One batched encode for a contiguous run of Learn requests, then
@@ -1094,6 +1117,20 @@ impl Executor {
                     records: Some(records),
                     wal_base: Some(wal.base_seq()),
                     stats: Some(self.coord_stats()),
+                    latency_s: t0.elapsed().as_secs_f64(),
+                    ..Response::ok(req.id)
+                })
+            }
+            Payload::Promote { min_epoch } => {
+                self.promote(min_epoch)?;
+                Ok(Response {
+                    kind: crate::coordinator::ReplyKind::Promote,
+                    stats: Some(self.coord_stats()),
+                    detail: Some(format!(
+                        "promoted to epoch {} at learn {}",
+                        self.epoch,
+                        self.classifier.store.total_learns()
+                    )),
                     latency_s: t0.elapsed().as_secs_f64(),
                     ..Response::ok(req.id)
                 })

@@ -15,10 +15,11 @@
 //!
 //! ```text
 //! offset 0   magic    b"CLOW"
-//!        4   version  u32 (1)
+//!        4   version  u32 (2; v1 segments remain readable)
 //!        8   header frame (framed exactly like a record):
 //!            [len u32][checksum u64 = FNV-1a over payload]
-//!            [payload: model str16, features u32, classes u32, base_seq u64]
+//!            [payload: model str16, features u32, classes u32, base_seq u64,
+//!                      epoch u64 (v2; absent in v1 = epoch 0)]
 //! then records, each:
 //!            [len u32][checksum u64][payload: seq u64, class u32,
 //!                                    n u32, n × f32]
@@ -56,8 +57,12 @@ use std::path::{Path, PathBuf};
 
 /// File magic of a WAL segment.
 pub const MAGIC: &[u8; 4] = b"CLOW";
-/// Current segment format version.
-pub const VERSION: u32 = 1;
+/// Current segment format version. v2 adds the promotion `epoch` to the
+/// header payload; writers always emit v2.
+pub const VERSION: u32 = 2;
+/// Oldest segment version still readable (v1 = no epoch field; such
+/// segments load with epoch 0).
+pub const VERSION_MIN: u32 = 1;
 /// Per-frame overhead: the `len: u32` prefix plus the `checksum: u64`.
 pub const FRAME_OVERHEAD: usize = 12;
 /// Hard cap on one frame's payload — matches the serve wire's frame cap,
@@ -132,6 +137,11 @@ pub struct SegmentHeader {
     /// the store's `total_learns()` when this segment started; the first
     /// record is `base_seq + 1`
     pub base_seq: u64,
+    /// promotion generation: 0 for a segment opened by an original primary,
+    /// bumped by one each time a follower is promoted over this log. Stale
+    /// primaries are fenced by comparing epochs — a lower-epoch peer must
+    /// never feed learns into a higher-epoch store.
+    pub epoch: u64,
 }
 
 impl SegmentHeader {
@@ -143,17 +153,21 @@ impl SegmentHeader {
         p.extend_from_slice(&self.features.to_le_bytes());
         p.extend_from_slice(&self.classes.to_le_bytes());
         p.extend_from_slice(&self.base_seq.to_le_bytes());
+        p.extend_from_slice(&self.epoch.to_le_bytes());
         p
     }
 
-    fn from_payload(bytes: &[u8]) -> Result<SegmentHeader> {
+    fn from_payload(bytes: &[u8], version: u32) -> Result<SegmentHeader> {
         let mut c = crate::util::Cursor::new(bytes);
         let model = c.str16()?;
         let features = c.u32()?;
         let classes = c.u32()?;
         let base_seq = c.u64()?;
+        // v1 headers predate promotion: they carry no epoch and load as
+        // generation 0 (writers always rewrite v2 on the next rotation)
+        let epoch = if version >= 2 { c.u64()? } else { 0 };
         c.finish()?;
-        Ok(SegmentHeader { model, features, classes, base_seq })
+        Ok(SegmentHeader { model, features, classes, base_seq, epoch })
     }
 
     /// The full segment preamble: magic, version, and the framed header.
@@ -271,6 +285,7 @@ impl Wal {
                 features: features as u32,
                 classes: classes as u32,
                 base_seq: base_seq_if_new,
+                epoch: 0,
             };
             let file = create_segment(path, &header)?;
             let good_len = header.to_bytes().len() as u64;
@@ -291,9 +306,10 @@ impl Wal {
             bail!("{} is not a CLOW WAL segment (bad magic)", path.display());
         }
         let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
-        if version != VERSION {
+        if !(VERSION_MIN..=VERSION).contains(&version) {
             bail!(
-                "unsupported WAL version {version} in {} (expected {VERSION})",
+                "unsupported WAL version {version} in {} (readable: \
+                 {VERSION_MIN}..={VERSION})",
                 path.display()
             );
         }
@@ -302,7 +318,7 @@ impl Wal {
         // or corrupt header cannot come from a crash mid-append, so it is a
         // hard error rather than a truncation point
         let header = match next_frame(&bytes, &mut off)? {
-            Some(p) => SegmentHeader::from_payload(p)
+            Some(p) => SegmentHeader::from_payload(p, version)
                 .with_context(|| format!("parse WAL header of {}", path.display()))?,
             None => bail!("WAL segment {} has a corrupt header", path.display()),
         };
@@ -383,6 +399,11 @@ impl Wal {
     /// `total_learns()` at segment start; records continue from here.
     pub fn base_seq(&self) -> u64 {
         self.header.base_seq
+    }
+
+    /// The segment's promotion generation (0 = original primary lineage).
+    pub fn epoch(&self) -> u64 {
+        self.header.epoch
     }
 
     /// Seq of the newest logged record (== `base_seq` when the segment is
@@ -491,8 +512,26 @@ impl Wal {
     /// Fold-point: a snapshot holding `base_seq` learns is durable, so the
     /// segment restarts empty from there. Atomic (tmp+fsync+rename): a
     /// crash mid-rotation leaves either the old segment or the new one.
+    /// The epoch is preserved — rotation is a compaction, not a promotion.
     pub fn rotate(&mut self, base_seq: u64) -> Result<()> {
-        let header = SegmentHeader { base_seq, ..self.header.clone() };
+        self.rotate_to(base_seq, self.header.epoch)
+    }
+
+    /// Promotion seal: replace the segment with a fresh one at `base_seq`
+    /// under a new `epoch`. Everything at or before `base_seq` is sealed —
+    /// the old segment's records are atomically discarded with the rename,
+    /// so no recovery path can ever resurrect a pre-promotion record past
+    /// the fold point, torn tail or not. `epoch` must not move backwards
+    /// (a lower generation could be mistaken for the fenced old primary).
+    pub fn rotate_to(&mut self, base_seq: u64, epoch: u64) -> Result<()> {
+        if epoch < self.header.epoch {
+            bail!(
+                "WAL {} epoch may not move backwards ({} -> {epoch})",
+                self.path.display(),
+                self.header.epoch
+            );
+        }
+        let header = SegmentHeader { base_seq, epoch, ..self.header.clone() };
         let file = create_segment(&self.path, &header)?;
         self.good_len = header.to_bytes().len() as u64;
         self.file = file;
@@ -798,5 +837,144 @@ mod tests {
         assert_eq!(&f[0..4], &(p.len() as u32).to_le_bytes());
         assert_eq!(&f[4..12], &fnv1a64(&p).to_le_bytes());
         assert_eq!(&f[12..], p.as_slice());
+    }
+
+    /// Hand-build a v1 segment (no epoch in the header payload) holding
+    /// `records`, exactly as a pre-promotion build wrote it.
+    fn write_v1_segment(path: &Path, header: &SegmentHeader, records: &[WalRecord]) {
+        let mut p = Vec::new();
+        let b = header.model.as_bytes();
+        p.extend_from_slice(&(b.len() as u16).to_le_bytes());
+        p.extend_from_slice(b);
+        p.extend_from_slice(&header.features.to_le_bytes());
+        p.extend_from_slice(&header.classes.to_le_bytes());
+        p.extend_from_slice(&header.base_seq.to_le_bytes());
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&frame_bytes(&p));
+        for r in records {
+            bytes.extend_from_slice(&r.frame());
+        }
+        std::fs::write(path, &bytes).unwrap();
+    }
+
+    #[test]
+    fn v1_segments_remain_readable_as_epoch_zero() {
+        let path = tmp_dir("v1compat").join("w.clog");
+        let _ = std::fs::remove_file(&path);
+        let cfg = tiny();
+        let header = SegmentHeader {
+            model: "m".into(),
+            features: cfg.features() as u32,
+            classes: cfg.classes as u32,
+            base_seq: 2,
+            epoch: 0,
+        };
+        let recs = vec![
+            WalRecord { seq: 3, class: 1, features: vec![0.5; cfg.features()] },
+            WalRecord { seq: 4, class: 0, features: vec![-1.0; cfg.features()] },
+        ];
+        write_v1_segment(&path, &header, &recs);
+        let mut wal = Wal::open(&path, "m", cfg.features(), cfg.classes, 0, 1).unwrap();
+        assert_eq!(wal.epoch(), 0, "v1 segments load as generation 0");
+        assert_eq!(wal.records(), recs.as_slice());
+        assert_eq!(wal.base_seq(), 2);
+        // appends continue against the v1 file; the next rotation rewrites
+        // the segment at the current version
+        assert_eq!(wal.append(2, &vec![1.0; cfg.features()]).unwrap(), 5);
+        wal.rotate(5).unwrap();
+        drop(wal);
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), VERSION);
+        // unknown future versions stay refused
+        let mut future = bytes.clone();
+        future[4..8].copy_from_slice(&(VERSION + 1).to_le_bytes());
+        std::fs::write(&path, &future).unwrap();
+        let e = Wal::open(&path, "m", cfg.features(), cfg.classes, 0, 1)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unsupported WAL version"), "{e}");
+    }
+
+    #[test]
+    fn rotation_preserves_the_epoch_and_promotion_bumps_it() {
+        let path = tmp_dir("epoch").join("w.clog");
+        let _ = std::fs::remove_file(&path);
+        let cfg = tiny();
+        let mut rng = Rng::new(0xE07);
+        let mut wal = Wal::open(&path, "m", cfg.features(), cfg.classes, 0, 1).unwrap();
+        assert_eq!(wal.epoch(), 0);
+        let (c, x) = sample(&mut rng, &cfg);
+        wal.append(c, &x).unwrap();
+        // compaction keeps the generation
+        wal.rotate(1).unwrap();
+        assert_eq!(wal.epoch(), 0);
+        // promotion bumps it, durably
+        wal.rotate_to(1, 1).unwrap();
+        assert_eq!(wal.epoch(), 1);
+        drop(wal);
+        let mut wal = Wal::open(&path, "m", cfg.features(), cfg.classes, 0, 1).unwrap();
+        assert_eq!(wal.epoch(), 1);
+        assert_eq!(wal.base_seq(), 1);
+        // the generation can never move backwards
+        let e = wal.rotate_to(1, 0).unwrap_err().to_string();
+        assert!(e.contains("backwards"), "{e}");
+        assert_eq!(wal.epoch(), 1);
+    }
+
+    /// Satellite: tear a **promoted** follower's log at every byte offset
+    /// past the sealed header. Recovery must never resurrect a
+    /// pre-promotion record (all of which sit at or before the sealed
+    /// `base_seq`), must keep the promoted epoch, and must keep every
+    /// surviving record's seq strictly past the seal — the epoch-fencing
+    /// analogue of the plain torn-tail proptest above.
+    #[test]
+    fn prop_promoted_log_torn_anywhere_never_resurrects_sealed_records() {
+        forall(6, 0xE08, |rng| {
+            let dir = tmp_dir("promote_torn");
+            let path = dir.join("w.clog");
+            let _ = std::fs::remove_file(&path);
+            let cfg = tiny();
+            // pre-promotion lineage: epoch 0 records the seal must bury
+            let pre = 1 + rng.below(3) as u64;
+            let mut wal = Wal::open(&path, "m", cfg.features(), cfg.classes, 0, 1).unwrap();
+            for _ in 0..pre {
+                let (c, x) = sample(rng, &cfg);
+                wal.append(c, &x).unwrap();
+            }
+            // promotion: seal at the applied position under epoch 1
+            wal.rotate_to(pre, 1).unwrap();
+            let sealed_len = std::fs::metadata(&path).unwrap().len();
+            // post-promotion learns under the new generation
+            let post = 1 + rng.below(3) as u64;
+            for _ in 0..post {
+                let (c, x) = sample(rng, &cfg);
+                wal.append(c, &x).unwrap();
+            }
+            drop(wal);
+            let bytes = std::fs::read(&path).unwrap();
+            assert!(sealed_len as usize <= bytes.len());
+            let torn = dir.join("torn.clog");
+            for cut in (sealed_len as usize)..=bytes.len() {
+                std::fs::write(&torn, &bytes[..cut]).unwrap();
+                let wal =
+                    Wal::open(&torn, "m", cfg.features(), cfg.classes, 0, 1).unwrap();
+                assert_eq!(wal.epoch(), 1, "cut {cut}: promoted epoch must survive");
+                assert_eq!(wal.base_seq(), pre, "cut {cut}: seal point must survive");
+                for r in wal.records() {
+                    assert!(
+                        r.seq > pre,
+                        "cut {cut}: recovery resurrected sealed record seq {} \
+                         (seal is {pre})",
+                        r.seq
+                    );
+                }
+                // the recovered suffix is exactly a prefix of the
+                // post-promotion appends: nothing reordered, nothing invented
+                assert!(wal.records().len() as u64 <= post);
+                assert_eq!(wal.last_seq(), pre + wal.records().len() as u64);
+            }
+        });
     }
 }

@@ -9,7 +9,11 @@
 //!                                --listen <addr> a TCP server speaking the
 //!                                length-prefixed wire protocol
 //!   loadgen --connect <addr>     concurrent-client load generator against a
-//!                                live server -> BENCH_serve.json
+//!                                live server -> BENCH_serve.json (or
+//!                                --fleet a,b,c through the health-checked
+//!                                failover client)
+//!   admin   --connect <addr>     runtime fleet administration: follower
+//!                                promotion and model add/remove
 //!   bench   --config <name>      packed-vs-scalar perf harness -> BENCH_classifier.json
 //!   asm     <file>               assemble + disassemble an ISA program
 //!
@@ -67,6 +71,7 @@ fn run() -> Result<()> {
         "sim" => cmd_sim(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "admin" => cmd_admin(&args),
         "bench" => cmd_bench(&args),
         "asm" => cmd_asm(&args),
         _ => {
@@ -76,7 +81,7 @@ fn run() -> Result<()> {
     }
 }
 
-const HELP: &str = "clo-hdnn <info|infer|cl-run|sim|serve|loadgen|bench|asm> [flags]
+const HELP: &str = "clo-hdnn <info|infer|cl-run|sim|serve|loadgen|admin|bench|asm> [flags]
   --artifacts <dir>   artifact directory (default ./artifacts)
   --backend <name>    native (default, pure Rust) or pjrt (needs --features pjrt)
   --config <name>     HD config: tiny|isolet|ucihar (built-in), a dual-mode
@@ -131,7 +136,12 @@ serve flags: --listen <host:port> switches from the Poisson demo to the TCP
   ack), --replicate-from <host:port> (follower mode: each hosted model
   bootstraps from the same-named model on that primary, tails its learn
   log, and serves reads locally — when the primary dies the follower keeps
-  serving its last-converged state and reconnects with backoff)
+  serving its last-converged state and reconnects with backoff),
+  --promote-on down:<millis> (follower failure detector: when a tailed
+  primary has been continuously unreachable for this long, promote the
+  local model — it bumps its epoch (generation counter), seals the
+  inherited learn log, and starts accepting learns as the new primary;
+  a stale old primary that returns is fenced by the epoch)
 
 loadgen flags: --connect <host:port> (required), --clients <n> (default 4),
   --connections <n> (concurrent connections, spread across the client
@@ -154,10 +164,32 @@ loadgen flags: --connect <host:port> (required), --clients <n> (default 4),
   --per-class <n> (synthetic workload size, must match the server's),
   --replicas <a,b> (read fan-out: infers round-robin across the primary
   and these follower servers, learns stay pinned to the primary; the
-  JSON's targets section attributes traffic per server),
+  JSON's targets section attributes traffic per server — a target that
+  dies mid-run is failed over: its owed replies count as its errors and
+  reads re-route to the remaining live targets),
+  --fleet <a,b,c> (drive the servers through the health-checked fleet
+  client instead of pinned connections: learns follow the current primary
+  by (epoch, learn_seq) — re-discovered automatically after a follower
+  promotion — reads spread round-robin over live endpoints within
+  --staleness learns of the freshest, and every request retries across
+  the fleet with capped backoff; single-threaded and seeded, so the
+  request schedule is deterministic), --staleness <n> (fleet
+  read-staleness bound in learns; default unbounded), --retries <n>
+  (fleet per-request attempt budget; default 3), --probe-interval-ms <n>
+  (fleet health-probe cadence; default 100),
   --scale-connections <a,b,c> (after the main run, hold a..c concurrent
   connections open and drive --scale-requests (default 2) infer rounds on
   every one -> the JSON's connection-scaling section)
+
+admin flags: --connect <host:port> (required) plus one action: promote
+  (promote the --model (default model when omitted) to a new epoch —
+  follower takeover; the model seals its inherited learn log and accepts
+  learns as the new primary generation), model-add <name> (boot a new
+  model at runtime, cloning the executor configuration of --from <model>
+  (default model when omitted); knowledge starts empty and per-model
+  snapshot/WAL paths are derived), model-remove <name> (tear a model down
+  at runtime; its knowledge flushes to disk before the acknowledgement;
+  the default model is refused)
 
 info flags: --knowledge <file> verifies + summarizes a knowledge
   checkpoint; --model <name> shows one serving model's registry entry;
@@ -491,12 +523,13 @@ fn cmd_info_connect(args: &Args, addr: &str) -> Result<()> {
         let policy = ModePolicy::from_code(st.policy, st.policy_margin);
         println!(
             "model {label}: learns {} | classes {} | snapshots {} | learn_seq {} | \
-             served {} | wire_errors {} | policy {} | bypass {} | normal {} | \
-             escalations {}",
+             epoch {} | served {} | wire_errors {} | policy {} | bypass {} | \
+             normal {} | escalations {}",
             st.learns,
             st.trained_classes,
             st.snapshots,
             st.learn_seq,
+            st.epoch,
             st.served,
             st.wire_errors,
             policy.spelling(),
@@ -1172,24 +1205,125 @@ fn cmd_serve_listen(args: &Args) -> Result<()> {
             replicas.len()
         );
     }
+    let promote_on = args.get("promote-on").map(parse_promote_on).transpose()?;
+    if promote_on.is_some() && replicas.is_empty() {
+        anyhow::bail!("--promote-on needs --replicate-from (there is no follower to promote)");
+    }
     let duration = args.f64_or("duration", 0.0)?;
-    if duration > 0.0 {
-        std::thread::sleep(std::time::Duration::from_secs_f64(duration));
-        // quiesce replication first so no learn lands between the server's
-        // shutdown snapshot flush and process exit
-        for r in replicas {
-            r.stop();
+    let deadline = (duration > 0.0)
+        .then(|| std::time::Instant::now() + std::time::Duration::from_secs_f64(duration));
+    // failure-detector state: when each follower's tailer lost its primary
+    // (None while connected)
+    let mut down_since: Vec<Option<std::time::Instant>> = vec![None; replicas.len()];
+    loop {
+        if let Some(d) = deadline {
+            if std::time::Instant::now() >= d {
+                break;
+            }
         }
-        let (served, wire_errors, learns) = server.counters();
-        println!(
-            "shutting down after {duration}s: served {served} frames | {learns} learns | {wire_errors} wire errors"
-        );
-        server.stop(); // joins connections, flushes the shutdown snapshots
-    } else {
-        // serve until killed
-        loop {
-            std::thread::sleep(std::time::Duration::from_secs(3600));
+        let tick = match (promote_on, deadline) {
+            // nothing to watch, serve until killed
+            (None, None) => std::time::Duration::from_secs(3600),
+            (None, Some(_)) => std::time::Duration::from_millis(250),
+            // the failure detector's resolution
+            (Some(_), _) => std::time::Duration::from_millis(25),
+        };
+        std::thread::sleep(tick);
+        if let Some(threshold) = promote_on {
+            // promote() consumes the replica, so a promoted follower leaves
+            // both vectors; its model keeps serving as the new primary
+            let mut i = 0;
+            while i < replicas.len() {
+                if replicas[i].status().connected {
+                    down_since[i] = None;
+                    i += 1;
+                    continue;
+                }
+                let since = *down_since[i].get_or_insert_with(std::time::Instant::now);
+                if since.elapsed() < threshold {
+                    i += 1;
+                    continue;
+                }
+                let r = replicas.remove(i);
+                down_since.remove(i);
+                match r.promote() {
+                    Ok((epoch, base)) => println!(
+                        "promote-on: primary down past {threshold:?}; promoted to \
+                         epoch {epoch} (log sealed at learn {base}) — accepting learns"
+                    ),
+                    Err(e) => eprintln!("promote-on: promotion failed: {e:#}"),
+                }
+            }
         }
+    }
+    // quiesce replication first so no learn lands between the server's
+    // shutdown snapshot flush and process exit
+    for r in replicas {
+        r.stop();
+    }
+    let (served, wire_errors, learns) = server.counters();
+    println!(
+        "shutting down after {duration}s: served {served} frames | {learns} learns | {wire_errors} wire errors"
+    );
+    server.stop(); // joins connections, flushes the shutdown snapshots
+    Ok(())
+}
+
+/// Parse `--promote-on down:<millis>`: the listen server's promotion
+/// failure detector — a followed model is promoted once its tailer has
+/// been continuously disconnected from its primary for this long.
+fn parse_promote_on(spec: &str) -> Result<std::time::Duration> {
+    let ms = spec
+        .strip_prefix("down:")
+        .and_then(|ms| ms.parse::<u64>().ok())
+        .ok_or_else(|| anyhow::anyhow!("bad --promote-on '{spec}' (down:<millis>)"))?;
+    Ok(std::time::Duration::from_millis(ms.max(1)))
+}
+
+/// `clo_hdnn admin`: runtime fleet administration over the wire. Actions:
+/// `promote` bumps the targeted model's epoch (follower takeover — the
+/// model seals its inherited learn log and serves learns as the new
+/// primary generation), `model-add <name>` boots a new model on the
+/// server cloning `--from`'s executor configuration, and `model-remove
+/// <name>` tears one down (knowledge flushes before the acknowledgement).
+fn cmd_admin(args: &Args) -> Result<()> {
+    use clo_hdnn::serve::Client;
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("admin needs --connect <host:port>"))?;
+    let action = args.positional().get(1).map(|s| s.as_str()).ok_or_else(|| {
+        anyhow::anyhow!("admin needs an action: promote | model-add <name> | model-remove <name>")
+    })?;
+    let mut c = Client::connect_v2(addr)?;
+    c.set_timeout(Some(std::time::Duration::from_secs(30)))?;
+    match action {
+        "promote" => {
+            let model = args.str_or("model", "");
+            c.set_model(&model)?;
+            let (epoch, base_seq) = c.promote()?;
+            println!(
+                "promoted model {} on {addr}: epoch {epoch}, log sealed at learn {base_seq}",
+                if model.is_empty() { "(default)" } else { model.as_str() }
+            );
+        }
+        "model-add" => {
+            let name = args
+                .positional()
+                .get(2)
+                .ok_or_else(|| anyhow::anyhow!("model-add needs a model name"))?;
+            let source = args.str_or("from", "");
+            let models = c.model_add(name, &source)?;
+            println!("added model {name} on {addr}; now hosting: {}", models.join(", "));
+        }
+        "model-remove" => {
+            let name = args
+                .positional()
+                .get(2)
+                .ok_or_else(|| anyhow::anyhow!("model-remove needs a model name"))?;
+            let models = c.model_remove(name)?;
+            println!("removed model {name} on {addr}; now hosting: {}", models.join(", "));
+        }
+        other => anyhow::bail!("unknown admin action '{other}' (promote|model-add|model-remove)"),
     }
     Ok(())
 }
@@ -1266,6 +1400,23 @@ struct LoadgenConn {
     client: clo_hdnn::serve::Client,
     pending: std::collections::HashMap<u64, LoadgenPending>,
     report: ConnReport,
+    /// false once the target died (transport failure with no reconnect);
+    /// dead connections stop receiving traffic and the stream fails over
+    /// to the remaining live targets
+    alive: bool,
+}
+
+/// What came of one `loadgen_drain_one` call.
+enum DrainOutcome {
+    /// a reply landed and was folded into the accumulators
+    Delivered,
+    /// the receive deadline expired: in-flight requests were counted as
+    /// timeouts; the caller may reconnect to the same target
+    TimedOut,
+    /// the transport failed outright (peer gone, e.g. a chaos kill -9):
+    /// in-flight requests were counted as errors; the caller must mark
+    /// the connection dead and fail the stream over
+    Died,
 }
 
 /// Connect (negotiating wire v2 when asked) via the client's bounded
@@ -1292,14 +1443,16 @@ fn loadgen_connect(
 
 /// Collect one reply off a pipelined connection and fold it into the
 /// per-model accumulators `(metrics, correct, infers)` plus the
-/// connection's own report. Returns `Ok(false)` when the receive deadline
-/// expired — every request in flight on this connection is then counted as
-/// a timeout (attributed to its model) and the caller reconnects; other
-/// transport failures still abort.
+/// connection's own report. A receive-deadline expiry counts every
+/// in-flight request as a timeout (attributed to its model) and lets the
+/// caller reconnect; a hard transport failure counts them as errors and
+/// tells the caller to mark the target dead — a killed server must fail
+/// the stream over, not abort the whole client thread. Only protocol
+/// violations (unmatched id, mismatched reply type) still abort.
 fn loadgen_drain_one(
     conn: &mut LoadgenConn,
     per: &mut [(clo_hdnn::coordinator::ServeMetrics, usize, usize)],
-) -> Result<bool> {
+) -> Result<DrainOutcome> {
     use clo_hdnn::serve::{RecvTimeout, WireResponse};
     let resp = match conn.client.recv() {
         Ok(r) => r,
@@ -1308,9 +1461,15 @@ fn loadgen_drain_one(
                 per[p.model].0.record_timeout();
                 conn.report.timeouts += 1;
             }
-            return Ok(false);
+            return Ok(DrainOutcome::TimedOut);
         }
-        Err(e) => return Err(e),
+        Err(_) => {
+            for (_, p) in conn.pending.drain() {
+                per[p.model].0.record_error();
+                conn.report.errors += 1;
+            }
+            return Ok(DrainOutcome::Died);
+        }
     };
     let p = conn
         .pending
@@ -1334,7 +1493,21 @@ fn loadgen_drain_one(
         (WireResponse::Learn { .. }, None) => m.record_learn(dt),
         (other, _) => anyhow::bail!("reply type does not match its request: {other:?}"),
     }
-    Ok(true)
+    Ok(DrainOutcome::Delivered)
+}
+
+/// Pick the connection slot for a request that may only go to the first
+/// `upto` connections (learns stay in the primary range; infers may use
+/// them all), skipping dead targets: start at the round-robin slot `i %
+/// upto` and walk forward until a live one turns up. `None` means every
+/// eligible target is dead.
+fn pick_live_slot(live: &[bool], upto: usize, i: usize) -> Option<usize> {
+    let upto = upto.min(live.len());
+    if upto == 0 {
+        return None;
+    }
+    let start = i % upto;
+    (0..upto).map(|k| (start + k) % upto).find(|&s| live[s])
 }
 
 /// One point of the connection-scaling curve: hold `n` concurrent
@@ -1540,6 +1713,12 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     use clo_hdnn::util::stats::Table;
     use std::collections::{BTreeMap, HashMap};
 
+    // --fleet switches loadgen into the health-checked failover client: a
+    // different driving loop (single Fleet, probe-routed), reported in the
+    // same BENCH_serve.json shape
+    if let Some(list) = args.get("fleet") {
+        return cmd_loadgen_fleet(args, &parse_model_list(list));
+    }
     let addr = args
         .get("connect")
         .ok_or_else(|| anyhow::anyhow!("loadgen needs --connect <host:port>"))?
@@ -1629,6 +1808,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                                 errors: 0,
                                 timeouts: 0,
                             },
+                            alive: true,
                         });
                     }
                     // primary connections first; then one connection per
@@ -1646,6 +1826,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                                 errors: 0,
                                 timeouts: 0,
                             },
+                            alive: true,
                         });
                     }
                     let mut rng = Rng::new(0xC0FF_EE00 + t as u64);
@@ -1696,38 +1877,92 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                         // learns stay pinned to the primary's connections;
                         // infers round-robin across every target (a lagging
                         // follower answers from its last-converged state —
-                        // stale, never wrong-model)
-                        let slot = if expect.is_none() && !replica_addrs.is_empty() {
-                            i % primary_count
+                        // stale, never wrong-model). Dead targets are
+                        // skipped: the stream fails over to whichever
+                        // eligible connections are still alive.
+                        let upto = if expect.is_none() && !replica_addrs.is_empty() {
+                            primary_count
                         } else {
-                            i % conns.len()
+                            conns.len()
+                        };
+                        let live: Vec<bool> = conns.iter().map(|c| c.alive).collect();
+                        let Some(slot) = pick_live_slot(&live, upto, i) else {
+                            anyhow::bail!(
+                                "every eligible loadgen target connection is dead"
+                            );
                         };
                         let conn = &mut conns[slot];
                         let q0 = std::time::Instant::now();
-                        let id = conn.client.send_for(&w.wire_model, body)?;
-                        conn.report.requests += 1;
-                        conn.pending.insert(id, LoadgenPending { model: mi, expect, t0: q0 });
+                        match conn.client.send_for(&w.wire_model, body) {
+                            Ok(id) => {
+                                conn.report.requests += 1;
+                                conn.pending
+                                    .insert(id, LoadgenPending { model: mi, expect, t0: q0 });
+                            }
+                            Err(_) => {
+                                // the socket died between replies (e.g. a
+                                // chaos kill -9 mid-stream): attribute the
+                                // failed send plus everything in flight,
+                                // mark the target dead, move on
+                                conn.alive = false;
+                                conn.report.errors += 1;
+                                per[mi].0.record_error();
+                                for (_, p) in conn.pending.drain() {
+                                    per[p.model].0.record_error();
+                                    conn.report.errors += 1;
+                                }
+                                continue;
+                            }
+                        }
                         // the pipeline window is per connection
                         while conn.pending.len() >= pipeline {
-                            if !loadgen_drain_one(conn, &mut per)? {
-                                let taddr = if conn.report.target == 0 {
-                                    addr.as_str()
-                                } else {
-                                    replica_addrs[conn.report.target - 1].as_str()
-                                };
-                                conn.client = loadgen_connect(taddr, v2, timeout)?;
+                            match loadgen_drain_one(conn, &mut per)? {
+                                DrainOutcome::Delivered => {}
+                                DrainOutcome::TimedOut => {
+                                    let taddr = if conn.report.target == 0 {
+                                        addr.as_str()
+                                    } else {
+                                        replica_addrs[conn.report.target - 1].as_str()
+                                    };
+                                    match loadgen_connect(taddr, v2, timeout) {
+                                        Ok(c) => conn.client = c,
+                                        Err(_) => {
+                                            conn.alive = false;
+                                            conn.report.errors += 1;
+                                            break;
+                                        }
+                                    }
+                                }
+                                DrainOutcome::Died => {
+                                    conn.alive = false;
+                                    break;
+                                }
                             }
                         }
                     }
                     for conn in &mut conns {
                         while !conn.pending.is_empty() {
-                            if !loadgen_drain_one(conn, &mut per)? {
-                                let taddr = if conn.report.target == 0 {
-                                    addr.as_str()
-                                } else {
-                                    replica_addrs[conn.report.target - 1].as_str()
-                                };
-                                conn.client = loadgen_connect(taddr, v2, timeout)?;
+                            match loadgen_drain_one(conn, &mut per)? {
+                                DrainOutcome::Delivered => {}
+                                DrainOutcome::TimedOut => {
+                                    let taddr = if conn.report.target == 0 {
+                                        addr.as_str()
+                                    } else {
+                                        replica_addrs[conn.report.target - 1].as_str()
+                                    };
+                                    match loadgen_connect(taddr, v2, timeout) {
+                                        Ok(c) => conn.client = c,
+                                        Err(_) => {
+                                            conn.alive = false;
+                                            conn.report.errors += 1;
+                                            break;
+                                        }
+                                    }
+                                }
+                                DrainOutcome::Died => {
+                                    conn.alive = false;
+                                    break;
+                                }
                             }
                         }
                     }
@@ -2078,6 +2313,212 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         std::fs::write(&dm_path, dm.dump())?;
         println!("wrote {dm_path}");
     }
+    Ok(())
+}
+
+/// `clo_hdnn loadgen --fleet a,b,c`: drive a replicated fleet through the
+/// health-checked failover [`Fleet`](clo_hdnn::serve::Fleet) client
+/// instead of raw per-target connections. Learns follow the probed
+/// primary (re-discovered by epoch after a promotion), staleness-bounded
+/// reads spread over the live followers, and every request carries the
+/// fleet's retry budget — so a primary kill mid-run costs at most the
+/// budgeted retries, not the stream. Single-threaded by design: the
+/// probe/route sequence is then deterministic, which is what the
+/// failover-drill CI gate replays. Reports `BENCH_serve.json` (version 4,
+/// `"mode": "fleet"`) with a per-target table built from the fleet's own
+/// probe views.
+fn cmd_loadgen_fleet(args: &Args, addrs: &[String]) -> Result<()> {
+    use clo_hdnn::coordinator::ServeMetrics;
+    use clo_hdnn::serve::{Fleet, FleetOptions};
+    use clo_hdnn::util::json::Json;
+    use clo_hdnn::util::stats::Table;
+
+    if addrs.is_empty() {
+        anyhow::bail!("--fleet needs at least one host:port entry");
+    }
+    // one workload: the fleet replicates one model, so a model mix would
+    // fight the staleness bound's single learn_seq axis
+    let cfg_name = args
+        .get("model")
+        .or_else(|| args.get("config"))
+        .unwrap_or("tiny")
+        .to_string();
+    let per_class = args.usize_or("per-class", 40)?;
+    let (cfg, sc) = builtin_config(&cfg_name).map_err(|e| {
+        anyhow::anyhow!(
+            "loadgen workloads are hermetic, so --model must be a synthetic \
+             config or scenario name: {e}"
+        )
+    })?;
+    let (train, test) = match &sc {
+        Some(sc) => sc.images(per_class, 10),
+        None => synthetic::blobs(&cfg, per_class, 10, 17),
+    };
+    let staleness = match args.get("staleness") {
+        Some(s) => s
+            .parse::<u64>()
+            .map_err(|_| anyhow::anyhow!("bad --staleness '{s}' (a learn count)"))?,
+        None => u64::MAX,
+    };
+    let requests = args.usize_or("requests", 200)?;
+    let learn_frac = args.f64_or("learn-frac", 0.25)?.clamp(0.0, 1.0);
+    let timeout_s = args.f64_or("timeout", 5.0)?;
+    let fopts = FleetOptions {
+        model: args.get("model").unwrap_or("").to_string(),
+        probe_interval: std::time::Duration::from_millis(
+            args.usize_or("probe-interval-ms", 100)? as u64,
+        ),
+        staleness,
+        retry_budget: args.usize_or("retries", 3)?.max(1),
+        timeout: std::time::Duration::from_secs_f64(timeout_s.max(0.01)),
+        ..FleetOptions::default()
+    };
+    let mut fleet = Fleet::connect(addrs, fopts)?;
+    println!(
+        "loadgen --fleet [{}]: {requests} requests, learn-frac {learn_frac}, \
+         staleness {}, primary {}",
+        addrs.join(","),
+        if staleness == u64::MAX { "unbounded".to_string() } else { staleness.to_string() },
+        fleet.primary().unwrap_or("<none>")
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::new(0xF1EE_7000);
+    let mut m = ServeMetrics::default();
+    let (mut correct, mut infers) = (0usize, 0usize);
+    let mut learns_acked = 0u64;
+    let mut sent_learn = 0usize;
+    let mut sent_infer = 0usize;
+    for _ in 0..requests {
+        if rng.uniform() < learn_frac {
+            let j = sent_learn % train.n;
+            sent_learn += 1;
+            let q0 = std::time::Instant::now();
+            match fleet.learn(train.sample(j), train.label(j)) {
+                Ok(()) => {
+                    learns_acked += 1;
+                    m.record_learn(q0.elapsed().as_secs_f64());
+                }
+                Err(_) => m.record_error(),
+            }
+        } else {
+            let idx = sent_infer % test.n;
+            sent_infer += 1;
+            let q0 = std::time::Instant::now();
+            match fleet.infer(test.sample(idx)) {
+                Ok(r) => {
+                    m.record_infer(
+                        q0.elapsed().as_secs_f64(),
+                        r.segments_used,
+                        r.early_exit,
+                        r.used_wcfe,
+                        r.escalated,
+                        r.energy_j,
+                    );
+                    infers += 1;
+                    correct += usize::from(r.class == test.label(idx));
+                }
+                Err(_) => m.record_error(),
+            }
+        }
+    }
+    m.wall_s = t0.elapsed().as_secs_f64();
+    let final_stats = fleet.primary_stats().ok();
+    let reports = fleet.target_reports();
+
+    let lat = m.latency_summary();
+    let mut table = Table::new(&["metric", "value"]);
+    table.row(&["requests".into(), format!("{}", m.total)]);
+    table.row(&["learns_acked".into(), format!("{learns_acked}")]);
+    table.row(&["errors".into(), format!("{}", m.errors)]);
+    table.row(&["timeouts".into(), format!("{}", m.timeouts)]);
+    table.row(&["accuracy".into(), accuracy_cell(correct, infers)]);
+    table.row(&["throughput".into(), format!("{:.1} req/s", m.throughput_rps())]);
+    table.row(&["p50".into(), fmt_secs(lat.p50_s)]);
+    table.row(&["p99".into(), fmt_secs(lat.p99_s)]);
+    table.print();
+    let mut tt = Table::new(&["target", "alive", "epoch", "learn_seq", "served", "errors"]);
+    for r in &reports {
+        tt.row(&[
+            r.addr.clone(),
+            format!("{}", r.alive),
+            format!("{}", r.epoch),
+            format!("{}", r.learn_seq),
+            format!("{}", r.served),
+            format!("{}", r.errors),
+        ]);
+    }
+    tt.print();
+    if let Some(st) = &final_stats {
+        println!(
+            "fleet primary {}: epoch {} | learn_seq {} | {} learns",
+            fleet.primary().unwrap_or("<none>"),
+            st.epoch,
+            st.learn_seq,
+            st.learns
+        );
+    }
+
+    let doc = Json::obj(vec![
+        ("version", Json::Num(4.0)),
+        ("mode", Json::Str("fleet".into())),
+        ("config", Json::Str(cfg_name)),
+        ("requests", Json::Num(m.total as f64)),
+        ("learns", Json::Num(m.learns as f64)),
+        ("learns_acked", Json::Num(learns_acked as f64)),
+        ("infers", Json::Num(infers as f64)),
+        ("errors", Json::Num(m.errors as f64)),
+        ("timeouts", Json::Num(m.timeouts as f64)),
+        ("accuracy", accuracy_json(correct, infers)),
+        ("learn_frac", Json::Num(learn_frac)),
+        ("wall_s", Json::Num(m.wall_s)),
+        ("throughput_rps", Json::Num(m.throughput_rps())),
+        (
+            "latency",
+            Json::obj(vec![
+                ("mean_s", Json::Num(lat.mean_s)),
+                ("p50_s", Json::Num(lat.p50_s)),
+                ("p95_s", Json::Num(lat.p95_s)),
+                ("p99_s", Json::Num(lat.p99_s)),
+            ]),
+        ),
+        (
+            "final_epoch",
+            final_stats.as_ref().map(|s| Json::Num(s.epoch as f64)).unwrap_or(Json::Null),
+        ),
+        (
+            "final_learn_seq",
+            final_stats
+                .as_ref()
+                .map(|s| Json::Num(s.learn_seq as f64))
+                .unwrap_or(Json::Null),
+        ),
+        (
+            "primary",
+            fleet.primary().map(|p| Json::Str(p.to_string())).unwrap_or(Json::Null),
+        ),
+        (
+            "targets",
+            Json::Arr(
+                reports
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("addr", Json::Str(r.addr.clone())),
+                            ("alive", Json::Bool(r.alive)),
+                            ("epoch", Json::Num(r.epoch as f64)),
+                            ("learn_seq", Json::Num(r.learn_seq as f64)),
+                            ("served", Json::Num(r.served as f64)),
+                            ("errors", Json::Num(r.errors as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let out_path = args.str_or("out", "BENCH_serve.json");
+    std::fs::write(&out_path, doc.dump())?;
+    println!("wrote {out_path}");
     Ok(())
 }
 
@@ -2510,4 +2951,42 @@ fn cmd_asm(args: &Args) -> Result<()> {
     }
     println!("\ndisassembly:\n{}", prog.disassemble());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_live_slot_skips_dead_targets_and_respects_the_learn_range() {
+        let live = [true, true, false, true];
+        // round-robin over all four, walking past the dead slot
+        assert_eq!(pick_live_slot(&live, 4, 0), Some(0));
+        assert_eq!(pick_live_slot(&live, 4, 2), Some(3));
+        assert_eq!(pick_live_slot(&live, 4, 3), Some(3));
+        // a learn confined to the primary range never reaches slot 3
+        assert_eq!(pick_live_slot(&live, 2, 1), Some(1));
+        // every slot in range dead -> no target, even with a live one
+        // outside the range
+        assert_eq!(pick_live_slot(&[false, false, true], 2, 0), None);
+        assert_eq!(pick_live_slot(&[false, false], 2, 1), None);
+        assert_eq!(pick_live_slot(&[], 4, 0), None);
+        assert_eq!(pick_live_slot(&[true], 0, 0), None);
+    }
+
+    #[test]
+    fn promote_on_parses_down_detector_specs() {
+        assert_eq!(
+            parse_promote_on("down:250").unwrap(),
+            std::time::Duration::from_millis(250)
+        );
+        // zero clamps to the minimum the monitor loop can act on
+        assert_eq!(
+            parse_promote_on("down:0").unwrap(),
+            std::time::Duration::from_millis(1)
+        );
+        assert!(parse_promote_on("down:").is_err());
+        assert!(parse_promote_on("up:5").is_err());
+        assert!(parse_promote_on("250").is_err());
+    }
 }

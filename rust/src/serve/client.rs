@@ -38,7 +38,7 @@ use crate::Result;
 use anyhow::{bail, Context};
 use std::io::BufReader;
 use std::net::TcpStream;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// A server-reported request failure: the echoed request id plus the
 /// server-side detail string. Carried inside the `anyhow` error chain so
@@ -89,6 +89,9 @@ pub struct WalTailReply {
     /// the primary log's newest acknowledged sequence (the reply may stop
     /// short of it when byte-budget-capped — keep tailing until caught up)
     pub last_seq: u64,
+    /// the serving model's promotion generation — a follower refuses a
+    /// tail source whose epoch is below its own (stale-primary fencing)
+    pub epoch: u64,
     /// the records newer than the request's `after`, oldest first
     pub records: Vec<WalRecord>,
 }
@@ -431,10 +434,41 @@ impl Client {
     /// re-bootstrap with [`Client::snapshot_fetch`] in the latter case.
     pub fn wal_tail(&mut self, after: u64) -> Result<WalTailReply> {
         match self.call(ReqBody::WalTail { after })? {
-            WireResponse::WalTail { base_seq, last_seq, records, .. } => {
-                Ok(WalTailReply { base_seq, last_seq, records })
+            WireResponse::WalTail { base_seq, last_seq, epoch, records, .. } => {
+                Ok(WalTailReply { base_seq, last_seq, epoch, records })
             }
             other => bail!("unexpected reply to wal-tail: {other:?}"),
+        }
+    }
+
+    /// Promote the targeted model to a new epoch (follower promotion: the
+    /// model seals its inherited WAL position under `epoch = old + 1` and
+    /// serves learns as the new primary generation). Returns `(epoch,
+    /// sealed_base_seq)`.
+    pub fn promote(&mut self) -> Result<(u64, u64)> {
+        match self.call(ReqBody::Promote)? {
+            WireResponse::Promote { epoch, base_seq, .. } => Ok((epoch, base_seq)),
+            other => bail!("unexpected reply to promote: {other:?}"),
+        }
+    }
+
+    /// Spin up a new model named `name` on the server at runtime, cloning
+    /// the executor configuration of `source` (`""` = the server's default
+    /// model). Returns the post-mutation model list.
+    pub fn model_add(&mut self, name: &str, source: &str) -> Result<Vec<String>> {
+        let body = ReqBody::ModelAdd { name: name.to_string(), source: source.to_string() };
+        match self.call(body)? {
+            WireResponse::ModelAdmin { models, .. } => Ok(models),
+            other => bail!("unexpected reply to model-add: {other:?}"),
+        }
+    }
+
+    /// Tear down the named model on the server at runtime (the server's
+    /// default model is refused). Returns the post-mutation model list.
+    pub fn model_remove(&mut self, name: &str) -> Result<Vec<String>> {
+        match self.call(ReqBody::ModelRemove { name: name.to_string() })? {
+            WireResponse::ModelAdmin { models, .. } => Ok(models),
+            other => bail!("unexpected reply to model-remove: {other:?}"),
         }
     }
 
@@ -447,5 +481,332 @@ impl Client {
             WireResponse::SnapshotImage { last_seq, image, .. } => Ok((last_seq, image)),
             other => bail!("unexpected reply to snapshot-fetch: {other:?}"),
         }
+    }
+}
+
+/// [`Fleet`] knobs.
+#[derive(Clone, Debug)]
+pub struct FleetOptions {
+    /// model every fleet request targets (`""` = each server's default)
+    pub model: String,
+    /// re-probe cadence: requests arriving later than this after the last
+    /// probe refresh every endpoint's health/epoch/learn_seq view first
+    pub probe_interval: Duration,
+    /// staleness bound for reads: an endpoint is read-eligible only when
+    /// its probed `learn_seq` is within this many learns of the most
+    /// advanced live endpoint (`u64::MAX` = read anywhere alive)
+    pub staleness: u64,
+    /// attempts per request across the fleet before the last error is
+    /// surfaced (each failed attempt marks its endpoint dead, re-probes,
+    /// and backs off)
+    pub retry_budget: usize,
+    /// first inter-attempt backoff (doubles per retry, deterministic)
+    pub backoff_base: Duration,
+    /// backoff cap
+    pub backoff_max: Duration,
+    /// per-connection receive deadline (a hung endpoint fails fast and
+    /// the request retries elsewhere)
+    pub timeout: Duration,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions {
+            model: String::new(),
+            probe_interval: Duration::from_millis(250),
+            staleness: u64::MAX,
+            retry_budget: 3,
+            backoff_base: Duration::from_millis(10),
+            backoff_max: Duration::from_millis(500),
+            timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+/// One endpoint's last-probed view, as reported by
+/// [`Fleet::target_reports`] (what `loadgen --fleet` attributes per-target
+/// results with).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FleetTargetReport {
+    /// the endpoint address as given to [`Fleet::connect`]
+    pub addr: String,
+    /// whether the last contact (probe or request) succeeded
+    pub alive: bool,
+    /// the endpoint's promotion generation at the last good probe
+    pub epoch: u64,
+    /// the endpoint's learn sequence at the last good probe
+    pub learn_seq: u64,
+    /// requests this endpoint answered successfully
+    pub served: u64,
+    /// requests (and probes) attributed to this endpoint as failures
+    pub errors: u64,
+}
+
+/// One fleet member: a lazily-(re)connected client plus its probed view.
+struct Endpoint {
+    addr: String,
+    client: Option<Client>,
+    alive: bool,
+    epoch: u64,
+    learn_seq: u64,
+    served: u64,
+    errors: u64,
+}
+
+impl Endpoint {
+    /// The connected client, dialing (without retry — the fleet's retry
+    /// budget is the retry loop) when there is none.
+    fn client(&mut self, opts: &FleetOptions) -> Result<&mut Client> {
+        if self.client.is_none() {
+            let mut c = Client::connect(&self.addr)?;
+            c.set_timeout(Some(opts.timeout))?;
+            if !opts.model.is_empty() {
+                c.hello()?;
+                c.set_model(&opts.model)?;
+            }
+            self.client = Some(c);
+        }
+        Ok(self.client.as_mut().expect("just connected"))
+    }
+
+    /// Mark a failed contact: drop the connection so the next attempt
+    /// redials, and attribute the error here.
+    fn mark_dead(&mut self) {
+        self.client = None;
+        self.alive = false;
+        self.errors += 1;
+    }
+}
+
+/// A health-checked multi-endpoint client: wraps N servers replicating one
+/// model, probes each with `OP_STATS` on a fixed cadence, routes learns to
+/// the current primary — the live endpoint with the highest `(epoch,
+/// learn_seq)`, re-discovered automatically after a follower promotion —
+/// and spreads staleness-bounded reads round-robin over the live endpoints
+/// whose probed `learn_seq` is close enough to the freshest one. Every
+/// request carries a retry budget with capped deterministic backoff; each
+/// failed attempt is attributed to its endpoint and the next attempt
+/// re-routes. Probing is synchronous (driven from the request path when
+/// the probe interval has elapsed), so a single-threaded caller — the
+/// chaos tests, most importantly — sees a deterministic sequence of probes
+/// and routes.
+pub struct Fleet {
+    endpoints: Vec<Endpoint>,
+    opts: FleetOptions,
+    last_probe: Option<Instant>,
+    rr: usize,
+}
+
+/// The primary's slot among `(alive, epoch, learn_seq)` endpoint views:
+/// the live endpoint with the highest `(epoch, learn_seq)`, lowest slot on
+/// ties (deterministic routing).
+fn pick_primary(views: &[(bool, u64, u64)]) -> Option<usize> {
+    views
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| v.0)
+        .max_by(|(ia, a), (ib, b)| (a.1, a.2, std::cmp::Reverse(*ia)).cmp(&(b.1, b.2, std::cmp::Reverse(*ib))))
+        .map(|(i, _)| i)
+}
+
+/// The read-eligible slots among `(alive, epoch, learn_seq)` views: live
+/// endpoints whose `learn_seq` is within `staleness` of the most advanced
+/// live endpoint's.
+fn eligible_reads(views: &[(bool, u64, u64)], staleness: u64) -> Vec<usize> {
+    let freshest = views.iter().filter(|v| v.0).map(|v| v.2).max().unwrap_or(0);
+    views
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| v.0 && freshest.saturating_sub(v.2) <= staleness)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+impl Fleet {
+    /// Wrap the given endpoints and run one initial probe sweep. Fails
+    /// only on an empty list — a fleet whose members are all down connects
+    /// fine and reports every request as exhausting its retry budget,
+    /// which is what a failover harness wants to observe.
+    pub fn connect(addrs: &[String], opts: FleetOptions) -> Result<Fleet> {
+        if addrs.is_empty() {
+            bail!("a fleet needs at least one endpoint");
+        }
+        let endpoints = addrs
+            .iter()
+            .map(|a| Endpoint {
+                addr: a.clone(),
+                client: None,
+                alive: false,
+                epoch: 0,
+                learn_seq: 0,
+                served: 0,
+                errors: 0,
+            })
+            .collect();
+        let mut fleet = Fleet { endpoints, opts, last_probe: None, rr: 0 };
+        fleet.probe();
+        Ok(fleet)
+    }
+
+    /// Probe every endpoint now: one `OP_STATS` round-trip each, updating
+    /// `alive`/`epoch`/`learn_seq` (dead endpoints get a reconnect
+    /// attempt — this is also the path that re-discovers a restarted
+    /// server).
+    pub fn probe(&mut self) {
+        for ep in &mut self.endpoints {
+            let stats = ep.client(&self.opts).and_then(|c| c.stats());
+            match stats {
+                Ok(s) => {
+                    ep.alive = true;
+                    ep.epoch = s.epoch;
+                    ep.learn_seq = s.learn_seq;
+                }
+                Err(_) => ep.mark_dead(),
+            }
+        }
+        self.last_probe = Some(Instant::now());
+    }
+
+    fn maybe_probe(&mut self) {
+        let due = match self.last_probe {
+            None => true,
+            Some(t) => t.elapsed() >= self.opts.probe_interval,
+        };
+        if due {
+            self.probe();
+        }
+    }
+
+    /// The current primary's address, if any endpoint is live.
+    pub fn primary(&self) -> Option<&str> {
+        pick_primary(&self.views()).map(|i| self.endpoints[i].addr.as_str())
+    }
+
+    fn views(&self) -> Vec<(bool, u64, u64)> {
+        self.endpoints.iter().map(|e| (e.alive, e.epoch, e.learn_seq)).collect()
+    }
+
+    /// Per-endpoint health/attribution snapshot (loadgen's `targets`
+    /// array).
+    pub fn target_reports(&self) -> Vec<FleetTargetReport> {
+        self.endpoints
+            .iter()
+            .map(|e| FleetTargetReport {
+                addr: e.addr.clone(),
+                alive: e.alive,
+                epoch: e.epoch,
+                learn_seq: e.learn_seq,
+                served: e.served,
+                errors: e.errors,
+            })
+            .collect()
+    }
+
+    /// Bundle a labeled sample on the current primary, failing over (and
+    /// re-discovering the primary by epoch) within the retry budget.
+    pub fn learn(&mut self, features: &[f32], class: usize) -> Result<()> {
+        self.with_retries(|fleet| pick_primary(&fleet.views()).into_iter().collect(), |c| {
+            c.learn(features, class)
+        })
+    }
+
+    /// Classify on any live, staleness-eligible endpoint (round-robin),
+    /// failing over within the retry budget.
+    pub fn infer(&mut self, features: &[f32]) -> Result<InferReply> {
+        let staleness = self.opts.staleness;
+        self.with_retries(
+            move |fleet| eligible_reads(&fleet.views(), staleness),
+            |c| c.infer(features),
+        )
+    }
+
+    /// Stats from the current primary (what the failover drill gates
+    /// learn-seq continuity on), with fleet retry semantics.
+    pub fn primary_stats(&mut self) -> Result<WireStats> {
+        self.with_retries(|fleet| pick_primary(&fleet.views()).into_iter().collect(), |c| c.stats())
+    }
+
+    /// The retry engine: pick candidate slots, try the round-robin next
+    /// one, attribute failures, re-probe, back off deterministically, and
+    /// repeat within the budget.
+    fn with_retries<T>(
+        &mut self,
+        candidates: impl Fn(&Fleet) -> Vec<usize>,
+        mut attempt: impl FnMut(&mut Client) -> Result<T>,
+    ) -> Result<T> {
+        let budget = self.opts.retry_budget.max(1);
+        let mut backoff = self.opts.backoff_base.max(Duration::from_millis(1));
+        let mut last: Option<anyhow::Error> = None;
+        for tries in 0..budget {
+            self.maybe_probe();
+            let slots = candidates(self);
+            if slots.is_empty() {
+                last = Some(anyhow::anyhow!("no live fleet endpoint is eligible"));
+            } else {
+                let slot = slots[self.rr % slots.len()];
+                self.rr = self.rr.wrapping_add(1);
+                let ep = &mut self.endpoints[slot];
+                match ep.client(&self.opts).and_then(&mut attempt) {
+                    Ok(v) => {
+                        ep.served += 1;
+                        return Ok(v);
+                    }
+                    Err(e) => {
+                        // a server-side refusal (e.g. unknown class) is the
+                        // caller's error, not the endpoint's death
+                        if e.downcast_ref::<ServerError>().is_none() {
+                            ep.mark_dead();
+                        } else {
+                            ep.errors += 1;
+                            return Err(e);
+                        }
+                        last = Some(e);
+                    }
+                }
+            }
+            if tries + 1 < budget {
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(self.opts.backoff_max);
+                // failures invalidate the probed view — refresh before the
+                // next routing decision instead of waiting out the cadence
+                self.last_probe = None;
+            }
+        }
+        Err(last
+            .expect("budget >= 1, so at least one attempt ran")
+            .context(format!("fleet request failed after {budget} attempts")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primary_is_highest_epoch_then_learn_seq_then_lowest_slot() {
+        // epoch dominates learn_seq: the promoted follower at slot 2 wins
+        // even though the stale old primary at slot 0 has more learns
+        let views = [(true, 0, 900), (false, 0, 0), (true, 1, 40)];
+        assert_eq!(pick_primary(&views), Some(2));
+        // equal epochs: learn_seq decides
+        let views = [(true, 1, 10), (true, 1, 40)];
+        assert_eq!(pick_primary(&views), Some(1));
+        // full tie: lowest slot, deterministically
+        let views = [(true, 1, 40), (true, 1, 40)];
+        assert_eq!(pick_primary(&views), Some(0));
+        // dead endpoints never win; an all-dead fleet has no primary
+        assert_eq!(pick_primary(&[(false, 9, 9)]), None);
+        assert_eq!(pick_primary(&[]), None);
+    }
+
+    #[test]
+    fn read_eligibility_is_staleness_bounded() {
+        let views = [(true, 0, 100), (true, 0, 95), (true, 0, 80), (false, 0, 100)];
+        // tight bound: only the freshest live endpoints qualify
+        assert_eq!(eligible_reads(&views, 5), vec![0, 1]);
+        assert_eq!(eligible_reads(&views, 0), vec![0]);
+        // unbounded: every live endpoint qualifies (never the dead one)
+        assert_eq!(eligible_reads(&views, u64::MAX), vec![0, 1, 2]);
+        assert!(eligible_reads(&[(false, 0, 1)], u64::MAX).is_empty());
     }
 }

@@ -43,9 +43,12 @@ pub mod registry;
 pub mod replica;
 pub mod wire;
 
-pub use client::{Client, InferReply, RecvTimeout, ServerError, WalTailReply};
+pub use client::{
+    Client, Fleet, FleetOptions, FleetTargetReport, InferReply, RecvTimeout, ServerError,
+    WalTailReply,
+};
 pub use registry::{ModelSpec, Registry};
-pub use replica::{Replica, ReplicaOptions, ReplicaStatus};
+pub use replica::{ModelSync, ModelSyncOptions, Replica, ReplicaOptions, ReplicaStatus};
 pub use wire::{ReqBody, WireConnStats, WireRequest, WireResponse, WireStats};
 
 use crate::coordinator::{ReplyKind, Response};
@@ -247,6 +250,7 @@ pub(crate) fn translate(resp: &Response, stats: &ServerStats) -> WireResponse {
                     escalations: k.escalations,
                     policy: k.policy,
                     policy_margin: k.policy_margin,
+                    epoch: k.epoch,
                 },
             }
         }
@@ -254,8 +258,13 @@ pub(crate) fn translate(resp: &Response, stats: &ServerStats) -> WireResponse {
             id,
             base_seq: resp.wal_base.unwrap_or(0),
             last_seq: resp.stats.map(|s| s.learn_seq).unwrap_or(0),
+            epoch: resp.stats.map(|s| s.epoch).unwrap_or(0),
             records: resp.records.clone().unwrap_or_default(),
         },
+        ReplyKind::Promote => {
+            let k = resp.stats.unwrap_or_default();
+            WireResponse::Promote { id, epoch: k.epoch, base_seq: k.learn_seq }
+        }
         ReplyKind::SnapshotImage => {
             let image = resp.image.clone().unwrap_or_default();
             // the reply header adds id/kind/last_seq/img_len (21 bytes);

@@ -662,7 +662,7 @@ fn handle_frame(
                 id: req.id,
                 version: conn.version,
                 default_model: registry.default_name().to_string(),
-                models: registry.names().to_vec(),
+                models: registry.names(),
             };
             conn.queue_resp(&ack);
             return;
@@ -674,10 +674,34 @@ fn handle_frame(
             conn.queue_resp(&WireResponse::ConnStats { id: req.id, stats: stats_now });
             return;
         }
+        // registry mutation: reactor-answered — the registry (not any one
+        // executor) owns the model set. Booting/draining an executor
+        // blocks the loop for the admin call's duration, which is the
+        // point: the mutation is visible to every later frame.
+        ReqBody::ModelAdd { name, source } => {
+            let resp = match registry.add(name, source) {
+                Ok(models) => {
+                    WireResponse::ModelAdmin { id: req.id, op: wire::OP_MODEL_ADD, models }
+                }
+                Err(e) => WireResponse::Error { id: req.id, msg: format!("{e:#}") },
+            };
+            conn.queue_resp(&resp);
+            return;
+        }
+        ReqBody::ModelRemove { name } => {
+            let resp = match registry.remove(name) {
+                Ok(models) => {
+                    WireResponse::ModelAdmin { id: req.id, op: wire::OP_MODEL_REMOVE, models }
+                }
+                Err(e) => WireResponse::Error { id: req.id, msg: format!("{e:#}") },
+            };
+            conn.queue_resp(&resp);
+            return;
+        }
         _ => {}
     }
     let coord = match registry.get(&req.model) {
-        Ok(c) => c.clone(),
+        Ok(c) => c,
         Err(e) => {
             conn.queue_resp(&WireResponse::Error { id: req.id, msg: format!("{e:#}") });
             return;
@@ -712,7 +736,13 @@ fn handle_frame(
         ReqBody::Stats => Payload::Stats,
         ReqBody::WalTail { after } => Payload::WalTail { after },
         ReqBody::SnapshotFetch => Payload::SnapshotFetch,
-        ReqBody::ConnStats | ReqBody::Hello { .. } => unreachable!("handled above"),
+        // the wire carries no source epoch: a server promoted over the
+        // wire fences everything below its own lineage
+        ReqBody::Promote => Payload::Promote { min_epoch: 0 },
+        ReqBody::ConnStats
+        | ReqBody::Hello { .. }
+        | ReqBody::ModelAdd { .. }
+        | ReqBody::ModelRemove { .. } => unreachable!("handled above"),
     };
     conn.pending.push_back((id, coord, exec_payload));
     conn.peak_window = conn.peak_window.max(conn.window() as u32);

@@ -12,6 +12,15 @@
 //! registry entry's executor owns its backend, and the two meet only at
 //! the coordinator's non-blocking submit/reply seam.
 //!
+//! The model set is mutable at runtime (the `OP_MODEL_ADD` /
+//! `OP_MODEL_REMOVE` admin opcodes): [`Registry::add`] clones a hosted
+//! model's executor configuration under a new name and boots it, and
+//! [`Registry::remove`] tears a model down — the drop drains its executor
+//! queue and runs the per-model shutdown snapshot flush, so knowledge is
+//! on disk before the acknowledgement. Lookups hand out cloned
+//! `Arc<Coordinator>`s, so a model removed mid-request finishes that
+//! request before its executor shuts down.
+//!
 //! Dropping the registry drops every coordinator, which drains each
 //! executor queue and runs the per-model shutdown snapshot flush.
 
@@ -19,7 +28,7 @@ use crate::coordinator::{Coordinator, CoordinatorOptions};
 use crate::Result;
 use anyhow::{bail, Context};
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 /// One model to register: its registry name plus the full executor
 /// configuration (backend, search mode, thread budget, knowledge wiring).
@@ -41,12 +50,29 @@ impl ModelSpec {
     }
 }
 
-/// Named coordinators behind one server. The first registered model is the
-/// default — what v1 connections and empty-model v2 frames hit.
-pub struct Registry {
-    models: BTreeMap<String, Arc<Coordinator>>,
+/// One hosted model: its running coordinator plus the configuration it was
+/// started from (the clone template for [`Registry::add`]; `None` when the
+/// coordinator was started outside the registry via [`Registry::single`]).
+struct Entry {
+    coord: Arc<Coordinator>,
+    template: Option<CoordinatorOptions>,
+}
+
+/// The mutable model set (everything a runtime add/remove touches moves
+/// together under one lock).
+struct Inner {
+    models: BTreeMap<String, Entry>,
     /// registration order (the wire hello advertises it)
     order: Vec<String>,
+}
+
+/// Named coordinators behind one server. The first registered model is the
+/// default — what v1 connections and empty-model v2 frames hit. The set is
+/// runtime-mutable ([`Registry::add`]/[`Registry::remove`]) behind a
+/// read-write lock; the default model is fixed for the server's lifetime
+/// and can never be removed.
+pub struct Registry {
+    inner: RwLock<Inner>,
     default_model: String,
 }
 
@@ -68,32 +94,115 @@ impl Registry {
             if models.contains_key(&spec.name) {
                 bail!("duplicate registry model '{}'", spec.name);
             }
-            let coord = Coordinator::start(spec.opts)
+            let coord = Coordinator::start(spec.opts.clone())
                 .with_context(|| format!("starting model '{}'", spec.name))?;
             order.push(spec.name.clone());
-            models.insert(spec.name, Arc::new(coord));
+            models.insert(
+                spec.name,
+                Entry { coord: Arc::new(coord), template: Some(spec.opts) },
+            );
         }
-        Ok(Registry { models, order, default_model })
+        Ok(Registry { inner: RwLock::new(Inner { models, order }), default_model })
     }
 
     /// Wrap an already-running coordinator as a one-model registry (the
-    /// single-model serving path).
+    /// single-model serving path). The entry keeps no configuration
+    /// template, so it cannot serve as an [`Registry::add`] source.
     pub fn single(name: impl Into<String>, coord: Coordinator) -> Registry {
         let name = name.into();
         let mut models = BTreeMap::new();
-        models.insert(name.clone(), Arc::new(coord));
-        Registry { models, order: vec![name.clone()], default_model: name }
+        models.insert(name.clone(), Entry { coord: Arc::new(coord), template: None });
+        Registry {
+            inner: RwLock::new(Inner { models, order: vec![name.clone()] }),
+            default_model: name,
+        }
     }
 
-    /// Resolve a wire model name (`""` = the default model).
-    pub fn get(&self, model: &str) -> Result<&Arc<Coordinator>> {
+    /// Resolve a wire model name (`""` = the default model) to its live
+    /// coordinator. The handle is a cloned `Arc`, so it stays valid even
+    /// if the model is removed while the request is in flight.
+    pub fn get(&self, model: &str) -> Result<Arc<Coordinator>> {
         let name = if model.is_empty() { self.default_model.as_str() } else { model };
-        self.models.get(name).ok_or_else(|| {
+        let inner = self.inner.read().expect("registry lock poisoned");
+        inner.models.get(name).map(|e| e.coord.clone()).ok_or_else(|| {
             anyhow::anyhow!(
                 "no model '{name}' on this server (have: {})",
-                self.order.join(", ")
+                inner.order.join(", ")
             )
         })
+    }
+
+    /// Boot a new model named `name` at runtime, cloning the executor
+    /// configuration of the hosted model `source` (`""` = the default
+    /// model). Knowledge starts empty: the snapshot/WAL/restore paths of
+    /// the source are re-derived per model (suffixed with the new name) so
+    /// two models never share a file, and no warm restore is inherited.
+    /// Returns the post-mutation model list.
+    pub fn add(&self, name: &str, source: &str) -> Result<Vec<String>> {
+        if name.is_empty() {
+            bail!("registry model names must be non-empty");
+        }
+        let src_name = if source.is_empty() { self.default_model.as_str() } else { source };
+        let mut opts = {
+            let inner = self.inner.read().expect("registry lock poisoned");
+            if inner.models.contains_key(name) {
+                bail!("model '{name}' already exists on this server");
+            }
+            let src = inner
+                .models
+                .get(src_name)
+                .ok_or_else(|| anyhow::anyhow!("no source model '{src_name}' to clone"))?;
+            src.template.clone().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "source model '{src_name}' keeps no configuration template \
+                     (it was started outside the registry)"
+                )
+            })?
+        };
+        opts.model = name.to_string();
+        opts.snapshot_path = opts.snapshot_path.map(|p| suffix_path(&p, name));
+        opts.wal_path = opts.wal_path.map(|p| suffix_path(&p, name));
+        // a clone starts with empty knowledge — inheriting the source's
+        // warm restore would serve model A's checkpoint as model B's
+        opts.restore_path = None;
+        let coord = Coordinator::start(opts.clone())
+            .with_context(|| format!("starting model '{name}'"))?;
+        let mut inner = self.inner.write().expect("registry lock poisoned");
+        // re-check: another add may have raced in while the executor booted
+        if inner.models.contains_key(name) {
+            bail!("model '{name}' already exists on this server");
+        }
+        inner.order.push(name.to_string());
+        inner.models.insert(
+            name.to_string(),
+            Entry { coord: Arc::new(coord), template: Some(opts) },
+        );
+        Ok(inner.order.clone())
+    }
+
+    /// Tear down the named model at runtime. The default model (and `""`,
+    /// which aliases it) is refused — a server always keeps the model its
+    /// v1 clients are wired to. The removed coordinator is dropped outside
+    /// the registry lock: its executor drains queued requests and runs the
+    /// shutdown snapshot flush, so knowledge is durable when this returns
+    /// (in-flight `Arc` holders extend the executor's life briefly but see
+    /// only a drained, flushed model). Returns the post-mutation model
+    /// list.
+    pub fn remove(&self, name: &str) -> Result<Vec<String>> {
+        if name.is_empty() || name == self.default_model {
+            bail!("the default model '{}' cannot be removed", self.default_model);
+        }
+        let (entry, names) = {
+            let mut inner = self.inner.write().expect("registry lock poisoned");
+            let entry = inner
+                .models
+                .remove(name)
+                .ok_or_else(|| anyhow::anyhow!("no model '{name}' on this server"))?;
+            inner.order.retain(|n| n != name);
+            (entry, inner.order.clone())
+        };
+        drop(entry);
+        Ok(names)
     }
 
     /// The default model's name (what v1 clients are served by).
@@ -102,18 +211,28 @@ impl Registry {
     }
 
     /// Every model name, in registration order.
-    pub fn names(&self) -> &[String] {
-        &self.order
+    pub fn names(&self) -> Vec<String> {
+        self.inner.read().expect("registry lock poisoned").order.clone()
     }
 
     /// Number of registered models.
     pub fn len(&self) -> usize {
-        self.models.len()
+        self.inner.read().expect("registry lock poisoned").models.len()
     }
 
     /// Whether the registry is empty (never true for a started registry).
     pub fn is_empty(&self) -> bool {
-        self.models.is_empty()
+        self.len() == 0
+    }
+}
+
+/// Derive a per-model sibling of a template path: `k.clok` cloned for
+/// model `shadow` becomes `k.shadow.clok` (extension preserved so tooling
+/// keyed on `.clok`/`.clog` keeps matching).
+fn suffix_path(p: &std::path::Path, name: &str) -> std::path::PathBuf {
+    match p.extension().and_then(|e| e.to_str()) {
+        Some(ext) => p.with_extension(format!("{name}.{ext}")),
+        None => p.with_extension(name),
     }
 }
 
@@ -176,5 +295,62 @@ mod tests {
         assert_eq!(reg.default_name(), "solo");
         assert_eq!(reg.len(), 1);
         assert!(reg.get("").unwrap().call(Payload::Stats).unwrap().error.is_none());
+        // no template ⇒ cannot be cloned as an add source
+        let e = reg.add("clone", "").unwrap_err().to_string();
+        assert!(e.contains("template"), "{e}");
+    }
+
+    #[test]
+    fn add_clones_geometry_and_remove_tears_down() {
+        let reg = Registry::start(vec![ModelSpec::new(
+            "alpha",
+            CoordinatorOptions::software(cfg("a", 4)),
+        )])
+        .unwrap();
+        // add from the default template; the new model serves immediately
+        assert_eq!(reg.add("shadow", "").unwrap(), ["alpha", "shadow"]);
+        let r = reg.get("shadow").unwrap().call(Payload::Stats).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.stats.unwrap().learns, 0, "clones start with empty knowledge");
+        // duplicates and bad sources refused
+        assert!(reg.add("shadow", "").is_err());
+        assert!(reg.add("x", "missing").is_err());
+        assert!(reg.add("", "").is_err());
+        // remove tears the clone down; the default is protected
+        assert_eq!(reg.remove("shadow").unwrap(), ["alpha"]);
+        assert!(reg.get("shadow").is_err());
+        assert!(reg.remove("shadow").is_err(), "double remove");
+        assert!(reg.remove("alpha").is_err(), "default model is protected");
+        assert!(reg.remove("").is_err());
+        assert_eq!(reg.names(), ["alpha".to_string()]);
+    }
+
+    #[test]
+    fn add_derives_distinct_knowledge_paths() {
+        let dir = std::env::temp_dir().join("clo_hdnn_registry_paths");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut opts = CoordinatorOptions::software(cfg("a", 4));
+        opts.snapshot_path = Some(dir.join("k.clok"));
+        opts.wal_path = Some(dir.join("k.clog"));
+        let reg = Registry::start(vec![ModelSpec::new("alpha", opts)]).unwrap();
+        reg.add("shadow", "alpha").unwrap();
+        // a learn against the clone must land in the clone's own WAL
+        let coord = reg.get("shadow").unwrap();
+        let r = coord.call(Payload::Learn(vec![1.0; 8], 0)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        drop(coord);
+        reg.remove("shadow").unwrap();
+        assert!(dir.join("k.shadow.clog").exists(), "per-model WAL path");
+        assert!(dir.join("k.shadow.clok").exists(), "shutdown flush wrote the clone's snapshot");
+        drop(reg);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn suffix_path_keeps_extensions() {
+        use std::path::Path;
+        assert_eq!(suffix_path(Path::new("a/k.clok"), "m"), Path::new("a/k.m.clok"));
+        assert_eq!(suffix_path(Path::new("k.clog"), "b2"), Path::new("k.b2.clog"));
+        assert_eq!(suffix_path(Path::new("bare"), "m"), Path::new("bare.m"));
     }
 }

@@ -27,6 +27,28 @@
 //! Staleness is observable, never hidden: [`Replica::status`] exposes the
 //! applied sequence, and the local model's own Stats reply carries it as
 //! `learn_seq` — compare against the primary's to detect a stale read.
+//!
+//! ## Promotion and fencing
+//!
+//! When the primary dies for good, [`Replica::promote`] ends the follower
+//! role: tailing quiesces (thread joined), then the local model executes a
+//! `Promote` — its epoch becomes `max(local, highest source epoch
+//! observed) + 1` and its WAL (if any) is sealed at `base_seq =
+//! applied_seq` under the new epoch. From then on the model is the primary
+//! of a new generation. The epoch travels in every stats and wal-tail
+//! reply, and the tailer enforces it in both directions: a tail source
+//! reporting an epoch *below* the local model's is a stale old primary —
+//! its records are refused, [`ReplicaStatus::fenced`] increments, and the
+//! connection retreats to backoff (divergence refusal, not convergence).
+//! Conversely, if the *local* model's epoch rises above what it was when
+//! tailing began (an `OP_PROMOTE` arrived over the wire while this tailer
+//! ran), the tailer quiesces itself: a primary must not apply another
+//! primary's log.
+//!
+//! [`ModelSync`] is the registry-level companion: it polls the primary's
+//! hello model list and converges a local [`Registry`] — adding missing
+//! models (each with its own tailer, so knowledge converges too) and
+//! removing models the primary dropped.
 
 use crate::coordinator::{Coordinator, Payload};
 use crate::serve::client::{Client, ServerError};
@@ -75,6 +97,9 @@ pub struct ReplicaStatus {
     pub reconnects: u64,
     /// snapshot-image bootstraps performed (initial sync + compaction gaps)
     pub bootstraps: u64,
+    /// tail sources refused for carrying an epoch below the local model's
+    /// (each refusal is one fenced contact with a stale old primary)
+    pub fenced: u64,
     /// whether the tailer currently holds a live connection to the primary
     pub connected: bool,
 }
@@ -84,6 +109,13 @@ struct Shared {
     applied_seq: AtomicU64,
     reconnects: AtomicU64,
     bootstraps: AtomicU64,
+    fenced: AtomicU64,
+    /// highest epoch any tail reply has reported (the promotion floor)
+    source_epoch: AtomicU64,
+    /// the local model's epoch when tailing began — a rise above this
+    /// means the local model was promoted over the wire and the tailer
+    /// must quiesce itself
+    epoch0: AtomicU64,
     connected: AtomicBool,
     stop: AtomicBool,
 }
@@ -93,6 +125,7 @@ struct Shared {
 /// it; the local coordinator lives on, still serving the last state.
 pub struct Replica {
     shared: Arc<Shared>,
+    local: Arc<Coordinator>,
     thread: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -112,11 +145,15 @@ impl Replica {
         shared
             .applied_seq
             .store(r.stats.map(|s| s.learn_seq).unwrap_or(0), Ordering::SeqCst);
+        shared
+            .epoch0
+            .store(r.stats.map(|s| s.epoch).unwrap_or(0), Ordering::SeqCst);
         let sh = shared.clone();
+        let coord = local.clone();
         let thread = std::thread::Builder::new()
             .name("clo-hdnn-replica".into())
-            .spawn(move || tail_loop(local, opts, sh))?;
-        Ok(Replica { shared, thread: Some(thread) })
+            .spawn(move || tail_loop(coord, opts, sh))?;
+        Ok(Replica { shared, local, thread: Some(thread) })
     }
 
     /// The follower's current progress counters.
@@ -125,8 +162,30 @@ impl Replica {
             applied_seq: self.shared.applied_seq.load(Ordering::SeqCst),
             reconnects: self.shared.reconnects.load(Ordering::SeqCst),
             bootstraps: self.shared.bootstraps.load(Ordering::SeqCst),
+            fenced: self.shared.fenced.load(Ordering::SeqCst),
             connected: self.shared.connected.load(Ordering::SeqCst),
         }
+    }
+
+    /// End the follower role and take over as primary: quiesce tailing
+    /// (the thread is joined — no record can land after this), then
+    /// promote the local model to `max(local epoch, highest epoch the
+    /// dead primary reported) + 1`, sealing the inherited WAL position at
+    /// `base_seq = applied_seq`. Consumes the replica — a promoted model
+    /// must never tail again under its old identity. Returns `(epoch,
+    /// sealed_base_seq)`.
+    pub fn promote(mut self) -> Result<(u64, u64)> {
+        self.shutdown();
+        let floor = self.shared.source_epoch.load(Ordering::SeqCst);
+        let r = self
+            .local
+            .call(Payload::Promote { min_epoch: floor })
+            .context("replica: promote local model")?;
+        if let Some(e) = r.error {
+            bail!("replica: promote local model: {e}");
+        }
+        let stats = r.stats.context("promote reply carries stats")?;
+        Ok((stats.epoch, stats.learn_seq))
     }
 
     /// Stop tailing and join the thread. The local model keeps serving.
@@ -226,6 +285,23 @@ fn serve_connection(
     client: &mut Client,
 ) -> Result<()> {
     while !shared.stop.load(Ordering::SeqCst) {
+        // self-quiesce: if the local model's epoch rose above what it was
+        // when tailing began, an OP_PROMOTE arrived over the wire — this
+        // model is a primary now, and a primary must not apply another
+        // primary's log
+        let r = local.call(Payload::Stats).context("replica: local stats")?;
+        if let Some(e) = r.error {
+            bail!("replica: local stats: {e}");
+        }
+        let my_epoch = r.stats.map(|s| s.epoch).unwrap_or(0);
+        if my_epoch > shared.epoch0.load(Ordering::SeqCst) {
+            eprintln!(
+                "replica: local model was promoted to epoch {my_epoch}; \
+                 quiescing the tailer"
+            );
+            shared.stop.store(true, Ordering::SeqCst);
+            return Ok(());
+        }
         let after = shared.applied_seq.load(Ordering::SeqCst);
         let tail = match client.wal_tail(after) {
             Ok(t) => t,
@@ -243,6 +319,18 @@ fn serve_connection(
                 None => return Err(e), // transport failure
             },
         };
+        // divergence refusal: a tail source below the local epoch is a
+        // stale old primary that lost a promotion race — applying its
+        // records would fork the lineage. Refuse and retreat to backoff.
+        if tail.epoch < my_epoch {
+            shared.fenced.fetch_add(1, Ordering::SeqCst);
+            bail!(
+                "fenced stale primary: its epoch {} is below the local \
+                 model's {my_epoch}; refusing its records",
+                tail.epoch
+            );
+        }
+        shared.source_epoch.fetch_max(tail.epoch, Ordering::SeqCst);
         let mut progressed = false;
         for rec in &tail.records {
             let have = shared.applied_seq.load(Ordering::SeqCst);
@@ -293,6 +381,189 @@ fn bootstrap(local: &Coordinator, shared: &Shared, client: &mut Client) -> Resul
     shared.bootstraps.fetch_add(1, Ordering::SeqCst);
     eprintln!("replica: bootstrapped from the primary's image at learn {last_seq}");
     Ok(())
+}
+
+/// Registry-convergence knobs for [`ModelSync`].
+#[derive(Clone, Debug)]
+pub struct ModelSyncOptions {
+    /// the primary server's address (`host:port`)
+    pub primary: String,
+    /// how often the primary's model list is polled
+    pub poll_interval: Duration,
+    /// per-model tailer knobs for the replicas ModelSync spawns (the
+    /// `primary` and `model` fields are overwritten per model)
+    pub replica: ReplicaOptions,
+}
+
+impl ModelSyncOptions {
+    /// Poll the primary's model list every 250ms with default tailer
+    /// cadences.
+    pub fn new(primary: impl Into<String>) -> ModelSyncOptions {
+        let primary = primary.into();
+        ModelSyncOptions {
+            replica: ReplicaOptions::new(primary.clone()),
+            primary,
+            poll_interval: Duration::from_millis(250),
+        }
+    }
+}
+
+#[derive(Default)]
+struct SyncShared {
+    stop: AtomicBool,
+    polls: AtomicU64,
+    added: AtomicU64,
+    removed: AtomicU64,
+}
+
+/// Registry-level replication: converge a local [`Registry`]'s model *set*
+/// with a primary's, so runtime `OP_MODEL_ADD`/`OP_MODEL_REMOVE` mutations
+/// propagate to followers.
+///
+/// One thread polls the primary's hello model list. A model the primary
+/// hosts that the local registry lacks is added ([`Registry::add`] clones
+/// the local default's configuration under the new name) and given its own
+/// [`Replica`] tailer, so its knowledge converges too. A non-default local
+/// model absent from the primary is torn down (tailer first, then
+/// [`Registry::remove`]). The local *default* model is never touched in
+/// either direction — it has its own tailer (or is itself the primary of
+/// record) and [`Registry::remove`] refuses it anyway.
+pub struct ModelSync {
+    shared: Arc<SyncShared>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ModelSync {
+    /// Start converging `registry`'s model set with the primary's.
+    pub fn start(registry: Arc<crate::serve::Registry>, opts: ModelSyncOptions) -> ModelSync {
+        let shared = Arc::new(SyncShared::default());
+        let sh = shared.clone();
+        let thread = std::thread::Builder::new()
+            .name("clo-hdnn-modelsync".into())
+            .spawn(move || sync_loop(registry, opts, sh))
+            .expect("spawn modelsync thread");
+        ModelSync { shared, thread: Some(thread) }
+    }
+
+    /// `(polls, models_added, models_removed)` so far.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (
+            self.shared.polls.load(Ordering::SeqCst),
+            self.shared.added.load(Ordering::SeqCst),
+            self.shared.removed.load(Ordering::SeqCst),
+        )
+    }
+
+    /// Stop polling and join the thread (per-model tailers stop too).
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ModelSync {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn sync_loop(
+    registry: Arc<crate::serve::Registry>,
+    opts: ModelSyncOptions,
+    shared: Arc<SyncShared>,
+) {
+    let mut tailers: std::collections::HashMap<String, Replica> = std::collections::HashMap::new();
+    while !shared.stop.load(Ordering::SeqCst) {
+        if let Err(e) = sync_once(&registry, &opts, &shared, &mut tailers) {
+            eprintln!("modelsync: primary {} unreachable ({e:#}); retrying", opts.primary);
+        }
+        shared.polls.fetch_add(1, Ordering::SeqCst);
+        sleep_sync(&shared, opts.poll_interval);
+    }
+    // explicit teardown order: tailers before their coordinators go away
+    // with the registry the caller still holds
+    for (_, r) in tailers.drain() {
+        r.stop();
+    }
+}
+
+/// One poll: fetch the primary's model list and apply the set difference.
+fn sync_once(
+    registry: &Arc<crate::serve::Registry>,
+    opts: &ModelSyncOptions,
+    shared: &SyncShared,
+    tailers: &mut std::collections::HashMap<String, Replica>,
+) -> Result<()> {
+    let mut client = Client::connect(&opts.primary)?;
+    client.set_timeout(Some(Duration::from_secs(5)))?;
+    let (version, _, remote) = client.hello()?;
+    if version < wire::WIRE_V2 {
+        bail!("primary at {} only speaks wire v{version}: no model list to sync", opts.primary);
+    }
+    drop(client);
+    let default = registry.default_name().to_string();
+    let local = registry.names();
+    // additions: every primary model the local registry lacks
+    for name in remote.iter().filter(|n| **n != default && !local.contains(n)) {
+        // clone the local default's configuration — geometry must match the
+        // primary's anyway for the tailer's bootstrap image to install
+        match registry.add(name, "") {
+            Ok(_) => {
+                shared.added.fetch_add(1, Ordering::SeqCst);
+                eprintln!("modelsync: added model '{name}' from the primary's list");
+            }
+            Err(e) => {
+                eprintln!("modelsync: cannot add model '{name}': {e:#}");
+                continue;
+            }
+        }
+        match registry.get(name) {
+            Ok(coord) => {
+                let mut ropts = opts.replica.clone();
+                ropts.primary = opts.primary.clone();
+                ropts.model = name.clone();
+                match Replica::start(coord, ropts) {
+                    Ok(r) => {
+                        tailers.insert(name.clone(), r);
+                    }
+                    Err(e) => eprintln!("modelsync: cannot tail model '{name}': {e:#}"),
+                }
+            }
+            Err(e) => eprintln!("modelsync: added model '{name}' vanished: {e:#}"),
+        }
+    }
+    // removals: every non-default local model the primary no longer hosts
+    for name in local.iter().filter(|n| **n != default && !remote.contains(n)) {
+        if let Some(r) = tailers.remove(name) {
+            r.stop();
+        }
+        match registry.remove(name) {
+            Ok(_) => {
+                shared.removed.fetch_add(1, Ordering::SeqCst);
+                eprintln!("modelsync: removed model '{name}' (dropped by the primary)");
+            }
+            Err(e) => eprintln!("modelsync: cannot remove model '{name}': {e:#}"),
+        }
+    }
+    Ok(())
+}
+
+/// Sleep up to `total`, waking early on stop (keeps [`ModelSync::stop`]
+/// prompt).
+fn sleep_sync(shared: &SyncShared, total: Duration) {
+    let slice = Duration::from_millis(20);
+    let mut left = total;
+    while !shared.stop.load(Ordering::SeqCst) && left > Duration::ZERO {
+        let d = left.min(slice);
+        std::thread::sleep(d);
+        left = left.saturating_sub(d);
+    }
 }
 
 #[cfg(test)]

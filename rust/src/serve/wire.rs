@@ -38,6 +38,10 @@
 //! OP_INFER_IMAGE mode u8 (as OP_INFER), n u32, n × f32 raw pixels — the
 //!                server routes per its mode policy (WCFE or bypass)
 //! OP_LEARN_IMAGE class u32, n u32, n × f32 raw pixels
+//! OP_PROMOTE    (empty — promotes the target model to a new epoch)
+//! OP_MODEL_ADD  name str16, source str16 (template model to clone the
+//!               geometry from; "" = the server default)
+//! OP_MODEL_REMOVE name str16
 //! ```
 //!
 //! ## Response payloads
@@ -53,16 +57,20 @@
 //!                trained_classes u32, snapshots u64, learn_seq u64,
 //!                bypass u64, normal u64, escalations u64, policy u8
 //!                (0 auto | 1 force-bypass | 2 force-normal | 3 confidence),
-//!                policy_margin f32
+//!                policy_margin f32, epoch u64
 //!   OP_HELLO     version u32, default_model str16,
 //!                count u16, count × model str16
 //!   OP_CONN_STATS conn_id u64, age_ms u64, frames u64, replies u64,
 //!                errors u64, inflight u32, pending u32, peak_window u32,
 //!                queued_write_bytes u64
-//!   OP_WAL_TAIL  base_seq u64, last_seq u64, count u32,
+//!   OP_WAL_TAIL  base_seq u64, last_seq u64, epoch u64, count u32,
 //!                count × (rec_len u32, rec: seq u64, class u32,
 //!                         n u32, n × f32)
 //!   OP_SNAPSHOT_FETCH last_seq u64, img_len u32, image (CLOK bytes)
+//!   OP_PROMOTE   epoch u64 (the new generation), base_seq u64 (the
+//!                sealed learn sequence the new segment opened at)
+//!   OP_MODEL_ADD / OP_MODEL_REMOVE (one shape, kind echoes the opcode)
+//!                count u16, count × model str16 (the post-mutation list)
 //!   KIND_ERROR   msg_len u16, msg utf-8
 //! ```
 //!
@@ -127,6 +135,19 @@ pub const OP_INFER_IMAGE: u8 = 9;
 /// features per its mode policy before bundling. Replies use the
 /// [`OP_LEARN`] kind.
 pub const OP_LEARN_IMAGE: u8 = 10;
+/// Follower-promotion admin opcode: the target model bumps its epoch
+/// (generation counter), seals its inherited WAL position by rotating to
+/// a fresh segment at `base_seq = learn_seq`, and starts a new primary
+/// lineage. The reply carries the new epoch and the sealed base.
+pub const OP_PROMOTE: u8 = 11;
+/// Dynamic-registry admin opcode: spin up a named model at runtime,
+/// cloning its geometry from a source template model. The reply carries
+/// the post-mutation model list.
+pub const OP_MODEL_ADD: u8 = 12;
+/// Dynamic-registry admin opcode: tear down a named model at runtime
+/// (knowledge flush + WAL close on the way out). The default model cannot
+/// be removed. The reply carries the post-mutation model list.
+pub const OP_MODEL_REMOVE: u8 = 13;
 /// Response-only kind tag for error replies.
 pub const KIND_ERROR: u8 = 0xEE;
 
@@ -393,6 +414,24 @@ pub enum ReqBody {
         /// highest protocol version the client speaks
         version: u32,
     },
+    /// promote the target model to a new epoch (follower promotion: seal
+    /// the inherited WAL position, open a fresh segment, start accepting
+    /// learns as the new primary generation)
+    Promote,
+    /// spin up a named model at runtime, cloning its serving geometry
+    /// from a source template model
+    ModelAdd {
+        /// the new model's name (must not collide with a hosted model)
+        name: String,
+        /// the template model whose configuration is cloned (`""` = the
+        /// server default model)
+        source: String,
+    },
+    /// tear down a named model at runtime (the default model is refused)
+    ModelRemove {
+        /// the model to remove
+        name: String,
+    },
 }
 
 /// A decoded client request: client-assigned id, target model (`""` =
@@ -432,6 +471,9 @@ impl WireRequest {
             ReqBody::InferImage { .. } => OP_INFER_IMAGE,
             ReqBody::LearnImage { .. } => OP_LEARN_IMAGE,
             ReqBody::Hello { .. } => OP_HELLO,
+            ReqBody::Promote => OP_PROMOTE,
+            ReqBody::ModelAdd { .. } => OP_MODEL_ADD,
+            ReqBody::ModelRemove { .. } => OP_MODEL_REMOVE,
         }
     }
 
@@ -472,9 +514,14 @@ impl WireRequest {
                 }
             }
             ReqBody::Snapshot { path } => put_str16(&mut out, path),
-            ReqBody::Stats | ReqBody::ConnStats | ReqBody::SnapshotFetch => {}
+            ReqBody::Stats | ReqBody::ConnStats | ReqBody::SnapshotFetch | ReqBody::Promote => {}
             ReqBody::WalTail { after } => out.extend_from_slice(&after.to_le_bytes()),
             ReqBody::Hello { version } => out.extend_from_slice(&version.to_le_bytes()),
+            ReqBody::ModelAdd { name, source } => {
+                put_str16(&mut out, name);
+                put_str16(&mut out, source);
+            }
+            ReqBody::ModelRemove { name } => put_str16(&mut out, name),
         }
         Ok(out)
     }
@@ -527,6 +574,9 @@ impl WireRequest {
                 ReqBody::LearnImage { class, pixels: c.f32s(n)? }
             }
             OP_HELLO => ReqBody::Hello { version: c.u32()? },
+            OP_PROMOTE => ReqBody::Promote,
+            OP_MODEL_ADD => ReqBody::ModelAdd { name: c.str16()?, source: c.str16()? },
+            OP_MODEL_REMOVE => ReqBody::ModelRemove { name: c.str16()? },
             other => bail!("unknown opcode {other:#04x}"),
         };
         c.finish()?;
@@ -566,6 +616,11 @@ pub struct WireStats {
     pub policy: u8,
     /// the Confidence policy's escalation margin (0 for other policies)
     pub policy_margin: f32,
+    /// the target model's promotion generation: 0 on an original primary's
+    /// lineage, +1 per promotion. A fleet client treats the endpoint with
+    /// the highest (epoch, learn_seq) as the current primary; a stale old
+    /// primary reappearing with a lower epoch is fenced.
+    pub epoch: u64,
 }
 
 /// Reactor-side counters for one connection, as carried by an
@@ -659,6 +714,10 @@ pub enum WireResponse {
         /// short of it when the reply was byte-budget-capped — keep
         /// tailing until `records` catches up)
         last_seq: u64,
+        /// the serving model's promotion generation. A follower refuses
+        /// records from a source whose epoch is below its own (a stale
+        /// old primary must not be replayed over a promoted lineage).
+        epoch: u64,
         /// the records with sequence greater than the request's `after`,
         /// oldest first
         records: Vec<WalRecord>,
@@ -684,6 +743,29 @@ pub enum WireResponse {
         /// every model this server hosts, in registration order
         models: Vec<String>,
     },
+    /// promotion acknowledgement: the target model now serves a new
+    /// generation
+    Promote {
+        /// echoed request id
+        id: u64,
+        /// the new epoch (old epoch + 1)
+        epoch: u64,
+        /// the learn sequence the promotion sealed — the fresh WAL
+        /// segment's fold point
+        base_seq: u64,
+    },
+    /// model add/remove acknowledgement (one shape for both opcodes; the
+    /// wire kind byte echoes the opcode that mutated the registry)
+    ModelAdmin {
+        /// echoed request id
+        id: u64,
+        /// which mutation this acknowledges ([`OP_MODEL_ADD`] or
+        /// [`OP_MODEL_REMOVE`]); doubles as the wire kind byte
+        op: u8,
+        /// every model the server hosts after the mutation, in
+        /// registration order
+        models: Vec<String>,
+    },
     /// request failure; `id` echoes the failed request (0 when the frame
     /// was too garbled to carry one)
     Error {
@@ -706,6 +788,8 @@ impl WireResponse {
             | WireResponse::WalTail { id, .. }
             | WireResponse::SnapshotImage { id, .. }
             | WireResponse::Hello { id, .. }
+            | WireResponse::Promote { id, .. }
+            | WireResponse::ModelAdmin { id, .. }
             | WireResponse::Error { id, .. } => *id,
         }
     }
@@ -749,6 +833,7 @@ impl WireResponse {
                 out.extend_from_slice(&stats.escalations.to_le_bytes());
                 out.push(stats.policy);
                 out.extend_from_slice(&stats.policy_margin.to_le_bytes());
+                out.extend_from_slice(&stats.epoch.to_le_bytes());
             }
             WireResponse::ConnStats { id, stats } => {
                 out.extend_from_slice(&id.to_le_bytes());
@@ -763,11 +848,12 @@ impl WireResponse {
                 out.extend_from_slice(&stats.peak_window.to_le_bytes());
                 out.extend_from_slice(&stats.queued_write_bytes.to_le_bytes());
             }
-            WireResponse::WalTail { id, base_seq, last_seq, records } => {
+            WireResponse::WalTail { id, base_seq, last_seq, epoch, records } => {
                 out.extend_from_slice(&id.to_le_bytes());
                 out.push(OP_WAL_TAIL);
                 out.extend_from_slice(&base_seq.to_le_bytes());
                 out.extend_from_slice(&last_seq.to_le_bytes());
+                out.extend_from_slice(&epoch.to_le_bytes());
                 let n = records.len().min(u32::MAX as usize);
                 out.extend_from_slice(&(n as u32).to_le_bytes());
                 for rec in &records[..n] {
@@ -788,6 +874,21 @@ impl WireResponse {
                 out.push(OP_HELLO);
                 out.extend_from_slice(&version.to_le_bytes());
                 put_str16(&mut out, default_model);
+                let n = models.len().min(u16::MAX as usize);
+                out.extend_from_slice(&(n as u16).to_le_bytes());
+                for m in &models[..n] {
+                    put_str16(&mut out, m);
+                }
+            }
+            WireResponse::Promote { id, epoch, base_seq } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(OP_PROMOTE);
+                out.extend_from_slice(&epoch.to_le_bytes());
+                out.extend_from_slice(&base_seq.to_le_bytes());
+            }
+            WireResponse::ModelAdmin { id, op, models } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(*op);
                 let n = models.len().min(u16::MAX as usize);
                 out.extend_from_slice(&(n as u16).to_le_bytes());
                 for m in &models[..n] {
@@ -841,6 +942,7 @@ impl WireResponse {
                     escalations: c.u64()?,
                     policy: c.u8()?,
                     policy_margin: c.f32()?,
+                    epoch: c.u64()?,
                 },
             },
             OP_CONN_STATS => WireResponse::ConnStats {
@@ -860,13 +962,14 @@ impl WireResponse {
             OP_WAL_TAIL => {
                 let base_seq = c.u64()?;
                 let last_seq = c.u64()?;
+                let epoch = c.u64()?;
                 let n = c.u32()? as usize;
                 let mut records = Vec::with_capacity(n.min(4096));
                 for _ in 0..n {
                     let len = c.u32()? as usize;
                     records.push(WalRecord::from_payload(c.take(len)?)?);
                 }
-                WireResponse::WalTail { id, base_seq, last_seq, records }
+                WireResponse::WalTail { id, base_seq, last_seq, epoch, records }
             }
             OP_SNAPSHOT_FETCH => {
                 let last_seq = c.u64()?;
@@ -882,6 +985,15 @@ impl WireResponse {
                     models.push(c.str16()?);
                 }
                 WireResponse::Hello { id, version, default_model, models }
+            }
+            OP_PROMOTE => WireResponse::Promote { id, epoch: c.u64()?, base_seq: c.u64()? },
+            OP_MODEL_ADD | OP_MODEL_REMOVE => {
+                let n = c.u16()? as usize;
+                let mut models = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    models.push(c.str16()?);
+                }
+                WireResponse::ModelAdmin { id, op: kind, models }
             }
             KIND_ERROR => WireResponse::Error { id, msg: c.str16()? },
             other => bail!("unknown response kind {other:#04x}"),
@@ -941,6 +1053,18 @@ mod tests {
             WireRequest::new(19, ReqBody::LearnImage { class: 2, pixels: vec![0.25; 64] }),
             WIRE_V1,
         );
+        roundtrip_req(WireRequest::new(20, ReqBody::Promote), WIRE_V1);
+        roundtrip_req(
+            WireRequest::new(
+                21,
+                ReqBody::ModelAdd { name: "shadow".into(), source: String::new() },
+            ),
+            WIRE_V1,
+        );
+        roundtrip_req(
+            WireRequest::new(22, ReqBody::ModelRemove { name: "shadow".into() }),
+            WIRE_V1,
+        );
     }
 
     #[test]
@@ -987,6 +1111,19 @@ mod tests {
                     model,
                     ReqBody::LearnImage { class: 0, pixels: vec![] },
                 ),
+                WIRE_V2,
+            );
+            roundtrip_req(WireRequest::for_model(31, model, ReqBody::Promote), WIRE_V2);
+            roundtrip_req(
+                WireRequest::for_model(
+                    32,
+                    model,
+                    ReqBody::ModelAdd { name: "b".into(), source: "a".into() },
+                ),
+                WIRE_V2,
+            );
+            roundtrip_req(
+                WireRequest::for_model(33, model, ReqBody::ModelRemove { name: "b".into() }),
                 WIRE_V2,
             );
         }
@@ -1043,6 +1180,7 @@ mod tests {
                 escalations: 12,
                 policy: 3,
                 policy_margin: 48.5,
+                epoch: 2,
             },
         });
         roundtrip_resp(WireResponse::Hello {
@@ -1062,6 +1200,7 @@ mod tests {
             id: 9,
             base_seq: 4,
             last_seq: 7,
+            epoch: 1,
             records: vec![
                 WalRecord { seq: 5, class: 0, features: vec![0.25, -1.0] },
                 WalRecord { seq: 6, class: 3, features: vec![] },
@@ -1072,7 +1211,19 @@ mod tests {
             id: 10,
             base_seq: 0,
             last_seq: 0,
+            epoch: 0,
             records: vec![],
+        });
+        roundtrip_resp(WireResponse::Promote { id: 13, epoch: 3, base_seq: 1_000_000 });
+        roundtrip_resp(WireResponse::ModelAdmin {
+            id: 14,
+            op: OP_MODEL_ADD,
+            models: vec!["tiny".into(), "shadow".into()],
+        });
+        roundtrip_resp(WireResponse::ModelAdmin {
+            id: 15,
+            op: OP_MODEL_REMOVE,
+            models: vec!["tiny".into()],
         });
         roundtrip_resp(WireResponse::SnapshotImage {
             id: 11,
@@ -1293,7 +1444,7 @@ mod tests {
                 } else {
                     String::new()
                 };
-                let body = match rng.below(8) {
+                let body = match rng.below(11) {
                     0 => ReqBody::Infer {
                         mode: rng.below(3) as u8,
                         features: (0..rng.below(40)).map(|_| rng.sign() * 3.0).collect(),
@@ -1307,6 +1458,12 @@ mod tests {
                     4 => ReqBody::ConnStats,
                     5 => ReqBody::WalTail { after: rng.below(1 << 20) as u64 },
                     6 => ReqBody::SnapshotFetch,
+                    7 => ReqBody::Promote,
+                    8 => ReqBody::ModelAdd {
+                        name: "added-m"[..1 + rng.below(7)].to_string(),
+                        source: ["", "tiny"][rng.below(2)].to_string(),
+                    },
+                    9 => ReqBody::ModelRemove { name: "victim"[..1 + rng.below(6)].to_string() },
                     _ => ReqBody::Hello { version: WIRE_V2 },
                 };
                 let hello = matches!(body, ReqBody::Hello { .. });
@@ -1398,7 +1555,8 @@ mod tests {
         assert_eq!(&resp[19..27], &2.5e-6f64.to_le_bytes());
         assert_eq!(resp.len(), 27);
         // stats reply: dual-mode counters follow learn_seq — bypass at 53,
-        // normal at 61, escalations at 69, policy at 77, margin f32 at 78
+        // normal at 61, escalations at 69, policy at 77, margin f32 at 78,
+        // epoch u64 at 82
         let resp = WireResponse::Stats {
             id: 10,
             stats: WireStats {
@@ -1413,6 +1571,7 @@ mod tests {
                 escalations: 8,
                 policy: 3,
                 policy_margin: 12.5,
+                epoch: 9,
             },
         }
         .encode();
@@ -1422,7 +1581,8 @@ mod tests {
         assert_eq!(&resp[69..77], &8u64.to_le_bytes());
         assert_eq!(resp[77], 3);
         assert_eq!(&resp[78..82], &12.5f32.to_le_bytes());
-        assert_eq!(resp.len(), 82);
+        assert_eq!(&resp[82..90], &9u64.to_le_bytes());
+        assert_eq!(resp.len(), 90);
         // an infer reply with unknown flag bits must be rejected
         let mut bad = WireResponse::Infer {
             id: 11,
@@ -1445,25 +1605,28 @@ mod tests {
         assert_eq!(req[8], OP_WAL_TAIL);
         assert_eq!(&req[9..17], &0x0102u64.to_le_bytes());
         assert_eq!(req.len(), 17);
-        // response: base_seq at 9, last_seq at 17, count at 25, then
-        // length-prefixed record payloads (seq u64, class u32, n u32, n×f32)
+        // response: base_seq at 9, last_seq at 17, epoch at 25, count at
+        // 33, then length-prefixed record payloads (seq u64, class u32,
+        // n u32, n×f32)
         let resp = WireResponse::WalTail {
             id: 3,
             base_seq: 10,
             last_seq: 11,
+            epoch: 4,
             records: vec![WalRecord { seq: 11, class: 2, features: vec![1.0] }],
         }
         .encode();
         assert_eq!(resp[8], OP_WAL_TAIL);
         assert_eq!(&resp[9..17], &10u64.to_le_bytes());
         assert_eq!(&resp[17..25], &11u64.to_le_bytes());
-        assert_eq!(&resp[25..29], &1u32.to_le_bytes());
-        assert_eq!(&resp[29..33], &20u32.to_le_bytes(), "record payload length");
-        assert_eq!(&resp[33..41], &11u64.to_le_bytes(), "record seq");
-        assert_eq!(&resp[41..45], &2u32.to_le_bytes(), "record class");
-        assert_eq!(&resp[45..49], &1u32.to_le_bytes(), "record n");
-        assert_eq!(&resp[49..53], &1.0f32.to_le_bytes());
-        assert_eq!(resp.len(), 53);
+        assert_eq!(&resp[25..33], &4u64.to_le_bytes());
+        assert_eq!(&resp[33..37], &1u32.to_le_bytes());
+        assert_eq!(&resp[37..41], &20u32.to_le_bytes(), "record payload length");
+        assert_eq!(&resp[41..49], &11u64.to_le_bytes(), "record seq");
+        assert_eq!(&resp[49..53], &2u32.to_le_bytes(), "record class");
+        assert_eq!(&resp[53..57], &1u32.to_le_bytes(), "record n");
+        assert_eq!(&resp[57..61], &1.0f32.to_le_bytes());
+        assert_eq!(resp.len(), 61);
         // snapshot-fetch response: last_seq at 9, img_len at 17
         let resp = WireResponse::SnapshotImage { id: 4, last_seq: 6, image: vec![0xAA; 3] }
             .encode();
@@ -1474,11 +1637,59 @@ mod tests {
     }
 
     #[test]
+    fn promotion_and_model_admin_byte_layout_is_pinned() {
+        // promote request (v1): header only — no body
+        let req = WireRequest::new(5, ReqBody::Promote).encode(WIRE_V1).unwrap();
+        assert_eq!(req[8], OP_PROMOTE);
+        assert_eq!(req.len(), 9);
+        // promote reply: epoch u64 at 9, base_seq u64 at 17
+        let resp = WireResponse::Promote { id: 5, epoch: 2, base_seq: 40 }.encode();
+        assert_eq!(resp[8], OP_PROMOTE);
+        assert_eq!(&resp[9..17], &2u64.to_le_bytes());
+        assert_eq!(&resp[17..25], &40u64.to_le_bytes());
+        assert_eq!(resp.len(), 25);
+        // model-add request (v1): name str16 at 9, source str16 after it
+        let req = WireRequest::new(
+            6,
+            ReqBody::ModelAdd { name: "ab".into(), source: "c".into() },
+        )
+        .encode(WIRE_V1)
+        .unwrap();
+        assert_eq!(req[8], OP_MODEL_ADD);
+        assert_eq!(&req[9..11], &2u16.to_le_bytes());
+        assert_eq!(&req[11..13], b"ab");
+        assert_eq!(&req[13..15], &1u16.to_le_bytes());
+        assert_eq!(&req[15..16], b"c");
+        assert_eq!(req.len(), 16);
+        // model-remove request (v1): name str16 at 9
+        let req =
+            WireRequest::new(7, ReqBody::ModelRemove { name: "ab".into() }).encode(WIRE_V1).unwrap();
+        assert_eq!(req[8], OP_MODEL_REMOVE);
+        assert_eq!(&req[9..11], &2u16.to_le_bytes());
+        assert_eq!(&req[11..13], b"ab");
+        assert_eq!(req.len(), 13);
+        // model-admin reply (both opcodes): count u16 at 9, then str16s;
+        // the kind byte echoes the mutating opcode
+        let resp = WireResponse::ModelAdmin {
+            id: 8,
+            op: OP_MODEL_REMOVE,
+            models: vec!["ab".into()],
+        }
+        .encode();
+        assert_eq!(resp[8], OP_MODEL_REMOVE);
+        assert_eq!(&resp[9..11], &1u16.to_le_bytes());
+        assert_eq!(&resp[11..13], &2u16.to_le_bytes());
+        assert_eq!(&resp[13..15], b"ab");
+        assert_eq!(resp.len(), 15);
+    }
+
+    #[test]
     fn wal_tail_decode_rejects_truncated_records() {
         let good = WireResponse::WalTail {
             id: 1,
             base_seq: 0,
             last_seq: 2,
+            epoch: 0,
             records: vec![
                 WalRecord { seq: 1, class: 0, features: vec![1.0, 2.0] },
                 WalRecord { seq: 2, class: 1, features: vec![3.0] },
@@ -1494,7 +1705,7 @@ mod tests {
         assert!(WireResponse::decode(&bad).is_err());
         // a record length that claims more bytes than the frame holds
         let mut bad = good;
-        let count_at = 25;
+        let count_at = 33;
         bad[count_at + 4..count_at + 8].copy_from_slice(&1_000_000u32.to_le_bytes());
         assert!(WireResponse::decode(&bad).is_err());
     }

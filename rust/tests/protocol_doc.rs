@@ -39,6 +39,9 @@ fn wire_constants_match_the_documented_table() {
     pin(&doc, "OP_SNAPSHOT_FETCH", &format!("{:#04X}", wire::OP_SNAPSHOT_FETCH));
     pin(&doc, "OP_INFER_IMAGE", &format!("{:#04X}", wire::OP_INFER_IMAGE));
     pin(&doc, "OP_LEARN_IMAGE", &format!("{:#04X}", wire::OP_LEARN_IMAGE));
+    pin(&doc, "OP_PROMOTE", &format!("{:#04X}", wire::OP_PROMOTE));
+    pin(&doc, "OP_MODEL_ADD", &format!("{:#04X}", wire::OP_MODEL_ADD));
+    pin(&doc, "OP_MODEL_REMOVE", &format!("{:#04X}", wire::OP_MODEL_REMOVE));
     pin(&doc, "KIND_ERROR", &format!("{:#04X}", wire::KIND_ERROR));
     pin(&doc, "MODE_DEFAULT", &format!("{:#04X}", wire::MODE_DEFAULT));
     pin(&doc, "MODE_L1", &format!("{:#04X}", wire::MODE_L1));
@@ -137,13 +140,15 @@ fn clow_constants_and_segment_layout_match_the_documented_spec() {
         &format!("\"{}\"", std::str::from_utf8(wal::MAGIC).unwrap()),
     );
     pin(&doc, "CLOW_VERSION", &wal::VERSION.to_string());
+    pin(&doc, "CLOW_VERSION_MIN", &wal::VERSION_MIN.to_string());
     pin(&doc, "CLOW_FRAME_OVERHEAD", &wal::FRAME_OVERHEAD.to_string());
     pin(&doc, "CLOW_MAX_RECORD", &wal::MAX_RECORD.to_string());
     // the documented segment layout lines are present verbatim
     for line in [
         "offset 0   magic    \"CLOW\" (4 bytes)",
-        "offset 4   version  u32    current = 1",
-        "header payload:   model str16, features u32, classes u32, base_seq u64",
+        "offset 4   version  u32    current = 2; loaders accept 1..=2",
+        "header payload:   model str16, features u32, classes u32, base_seq u64,",
+        "                  epoch u64 (v2; absent in v1 = epoch 0)",
         "record payload:   seq u64, class u32, n u32, n × f32",
     ] {
         assert!(doc.contains(line), "CLOW layout line missing from spec: {line:?}");
@@ -155,6 +160,7 @@ fn clow_constants_and_segment_layout_match_the_documented_spec() {
         features: 0x0101,
         classes: 0x0202,
         base_seq: 0x0303,
+        epoch: 0x0404,
     };
     let b = hdr.to_bytes();
     assert_eq!(&b[0..4], wal::MAGIC);
@@ -175,7 +181,8 @@ fn clow_constants_and_segment_layout_match_the_documented_spec() {
     assert_eq!(&payload[7..11], &0x0101u32.to_le_bytes());
     assert_eq!(&payload[11..15], &0x0202u32.to_le_bytes());
     assert_eq!(&payload[15..23], &0x0303u64.to_le_bytes());
-    assert_eq!(payload.len(), 23, "no trailing bytes in the header payload");
+    assert_eq!(&payload[23..31], &0x0404u64.to_le_bytes());
+    assert_eq!(payload.len(), 31, "no trailing bytes in the header payload");
     // record frame: [len][checksum][seq u64, class u32, n u32, n × f32]
     let rec = wal::WalRecord { seq: 7, class: 3, features: vec![1.5, -2.5] };
     let f = rec.frame();
@@ -198,10 +205,11 @@ fn clow_constants_and_segment_layout_match_the_documented_spec() {
 fn documented_stats_reply_layout_matches_the_encoder() {
     let doc = spec();
     // the spec promises the stats reply body in this exact order, with
-    // learn_seq — the staleness signal — as the final u64
+    // epoch — the promotion generation — as the final u64
     for line in [
         "OP_STATS     served u64, wire_errors u64, learns u64,",
         "             trained_classes u32, snapshots u64, learn_seq u64",
+        "             policy u8, policy_margin f32, epoch u64",
     ] {
         assert!(doc.contains(line), "stats reply line missing from spec: {line:?}");
     }
@@ -217,6 +225,7 @@ fn documented_stats_reply_layout_matches_the_encoder() {
         escalations: 0x9999,
         policy: 3,
         policy_margin: 6.5,
+        epoch: 0xAAAA,
     };
     let buf = wire::WireResponse::Stats { id: 9, stats }.encode();
     assert_eq!(u64::from_le_bytes(buf[0..8].try_into().unwrap()), 9);
@@ -233,7 +242,8 @@ fn documented_stats_reply_layout_matches_the_encoder() {
     assert_eq!(u64::from_le_bytes(body[60..68].try_into().unwrap()), 0x9999);
     assert_eq!(body[68], 3);
     assert_eq!(f32::from_le_bytes(body[69..73].try_into().unwrap()), 6.5);
-    assert_eq!(body.len(), 73, "no trailing bytes in the stats body");
+    assert_eq!(u64::from_le_bytes(body[73..81].try_into().unwrap()), 0xAAAA);
+    assert_eq!(body.len(), 81, "no trailing bytes in the stats body");
 }
 
 #[test]
@@ -298,7 +308,7 @@ fn documented_replication_frame_layouts_match_the_encoders() {
     let doc = spec();
     for line in [
         "OP_WAL_TAIL  after u64",
-        "OP_WAL_TAIL  base_seq u64, last_seq u64, count u32,",
+        "OP_WAL_TAIL  base_seq u64, last_seq u64, epoch u64, count u32,",
         "             last_seq u64, img_len u32, img_len × u8",
     ] {
         assert!(doc.contains(line), "replication frame line missing from spec: {line:?}");
@@ -310,14 +320,15 @@ fn documented_replication_frame_layouts_match_the_encoders() {
     assert_eq!(req[8], wire::OP_WAL_TAIL);
     assert_eq!(&req[9..17], &0xABCDu64.to_le_bytes());
     assert_eq!(req.len(), 17);
-    // wal-tail reply: base_seq, last_seq, count, then each record as
-    // [rec_len u32][record payload] — the CLOW payload WITHOUT the
+    // wal-tail reply: base_seq, last_seq, epoch, count, then each record
+    // as [rec_len u32][record payload] — the CLOW payload WITHOUT the
     // on-disk len/checksum frame
     let rec = WalRecord { seq: 5, class: 2, features: vec![0.25] };
     let buf = wire::WireResponse::WalTail {
         id: 3,
         base_seq: 0x0A,
         last_seq: 0x0B,
+        epoch: 0x0E,
         records: vec![rec.clone()],
     }
     .encode();
@@ -325,11 +336,12 @@ fn documented_replication_frame_layouts_match_the_encoders() {
     let body = &buf[9..];
     assert_eq!(u64::from_le_bytes(body[0..8].try_into().unwrap()), 0x0A);
     assert_eq!(u64::from_le_bytes(body[8..16].try_into().unwrap()), 0x0B);
-    assert_eq!(u32::from_le_bytes(body[16..20].try_into().unwrap()), 1);
-    let rec_len = u32::from_le_bytes(body[20..24].try_into().unwrap()) as usize;
+    assert_eq!(u64::from_le_bytes(body[16..24].try_into().unwrap()), 0x0E);
+    assert_eq!(u32::from_le_bytes(body[24..28].try_into().unwrap()), 1);
+    let rec_len = u32::from_le_bytes(body[28..32].try_into().unwrap()) as usize;
     assert_eq!(rec_len, 16 + 4, "seq u64 + class u32 + n u32 + one f32");
-    assert_eq!(&body[24..24 + rec_len], &rec.payload()[..]);
-    assert_eq!(body.len(), 24 + rec_len, "no trailing bytes after the last record");
+    assert_eq!(&body[32..32 + rec_len], &rec.payload()[..]);
+    assert_eq!(body.len(), 32 + rec_len, "no trailing bytes after the last record");
     // snapshot-fetch reply: last_seq, img_len, raw CLOK bytes
     let buf = wire::WireResponse::SnapshotImage {
         id: 4,
@@ -343,6 +355,72 @@ fn documented_replication_frame_layouts_match_the_encoders() {
     assert_eq!(u32::from_le_bytes(body[8..12].try_into().unwrap()), 3);
     assert_eq!(&body[12..15], &[0xAA, 0xBB, 0xCC]);
     assert_eq!(body.len(), 15, "no trailing bytes after the image");
+}
+
+#[test]
+fn documented_promotion_and_model_admin_layouts_match_the_encoders() {
+    let doc = spec();
+    for line in [
+        "OP_PROMOTE   (empty)",
+        "OP_PROMOTE   epoch u64, base_seq u64",
+        "OP_MODEL_ADD name str16, source str16",
+        "OP_MODEL_REMOVE name str16",
+        "count u16, count × model str16",
+    ] {
+        assert!(doc.contains(line), "fleet-lifecycle line missing from spec: {line:?}");
+    }
+    // promote request: empty body in both shapes
+    let req = wire::WireRequest::new(1, wire::ReqBody::Promote)
+        .encode(wire::WIRE_V1)
+        .unwrap();
+    assert_eq!(req[8], wire::OP_PROMOTE);
+    assert_eq!(req.len(), 9, "the promote request body is empty");
+    // promote reply: epoch u64, base_seq u64
+    let buf = wire::WireResponse::Promote { id: 5, epoch: 0x0D, base_seq: 0x0E }.encode();
+    assert_eq!(buf[8], wire::OP_PROMOTE);
+    let body = &buf[9..];
+    assert_eq!(u64::from_le_bytes(body[0..8].try_into().unwrap()), 0x0D);
+    assert_eq!(u64::from_le_bytes(body[8..16].try_into().unwrap()), 0x0E);
+    assert_eq!(body.len(), 16, "no trailing bytes in the promote body");
+    // model-add request: name str16, source str16
+    let req = wire::WireRequest::new(
+        2,
+        wire::ReqBody::ModelAdd { name: "xy".into(), source: "abc".into() },
+    )
+    .encode(wire::WIRE_V1)
+    .unwrap();
+    assert_eq!(req[8], wire::OP_MODEL_ADD);
+    assert_eq!(&req[9..11], &2u16.to_le_bytes());
+    assert_eq!(&req[11..13], b"xy");
+    assert_eq!(&req[13..15], &3u16.to_le_bytes());
+    assert_eq!(&req[15..18], b"abc");
+    assert_eq!(req.len(), 18);
+    // model-remove request: name str16
+    let req = wire::WireRequest::new(3, wire::ReqBody::ModelRemove { name: "xy".into() })
+        .encode(wire::WIRE_V1)
+        .unwrap();
+    assert_eq!(req[8], wire::OP_MODEL_REMOVE);
+    assert_eq!(&req[9..11], &2u16.to_le_bytes());
+    assert_eq!(&req[11..13], b"xy");
+    assert_eq!(req.len(), 13);
+    // model-admin reply: one shape, kind byte echoes the mutating opcode,
+    // body is the post-mutation model list
+    for op in [wire::OP_MODEL_ADD, wire::OP_MODEL_REMOVE] {
+        let buf = wire::WireResponse::ModelAdmin {
+            id: 7,
+            op,
+            models: vec!["a".into(), "bc".into()],
+        }
+        .encode();
+        assert_eq!(buf[8], op, "the reply kind echoes the mutating opcode");
+        let body = &buf[9..];
+        assert_eq!(&body[0..2], &2u16.to_le_bytes());
+        assert_eq!(&body[2..4], &1u16.to_le_bytes());
+        assert_eq!(&body[4..5], b"a");
+        assert_eq!(&body[5..7], &2u16.to_le_bytes());
+        assert_eq!(&body[7..9], b"bc");
+        assert_eq!(body.len(), 9, "no trailing bytes after the model list");
+    }
 }
 
 #[test]

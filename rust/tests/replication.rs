@@ -231,3 +231,472 @@ fn follower_serves_reads_over_tcp_with_zero_wire_errors_while_primary_down() {
     replica.stop();
     follower.stop();
 }
+
+// ---------------------------------------------------------------------------
+// Chaos-failover suite: seeded fault schedules in learn-seq space.
+// ---------------------------------------------------------------------------
+
+/// A seeded chaos schedule. Every trigger is expressed in learn-sequence
+/// space — "kill the primary after learn k" — never in wall-clock time, so
+/// the same plan replays identically on a loaded CI box and a fast laptop,
+/// and under any `CLO_HDNN_THREADS` setting: the drivers below are
+/// single-threaded clients, so the applied `(class, features)` stream (and
+/// therefore the CLOK bytes) does not depend on how many worker threads
+/// the backends use.
+struct FaultPlan {
+    seed: u64,
+    /// the primary dies after acknowledging exactly this many learns
+    kill_at: u64,
+    /// learns driven into the promoted follower after takeover
+    after_promotion: u64,
+}
+
+impl FaultPlan {
+    fn seeded(seed: u64) -> FaultPlan {
+        let mut rng = Rng::new(seed);
+        // kill strictly mid-stream: both sides of the failover must carry
+        // real work or the bit-identity check proves nothing
+        let kill_at = 4 + rng.next_u64() % 9;
+        let after_promotion = 4 + rng.next_u64() % 9;
+        FaultPlan { seed, kill_at, after_promotion }
+    }
+
+    /// Total learns the schedule acknowledges across both generations.
+    fn total(&self) -> u64 {
+        self.kill_at + self.after_promotion
+    }
+
+    /// The i-th learn of the schedule (0-based): class + features, derived
+    /// from the plan seed alone so the never-failed reference run replays
+    /// byte-identical samples without sharing any state with the chaos run.
+    fn learn(&self, cfg: &HdConfig, i: u64) -> (usize, Vec<f32>) {
+        let mut rng = Rng::new(self.seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i + 1));
+        let class = (rng.next_u64() % cfg.classes as u64) as usize;
+        let x = (0..cfg.features()).map(|_| rng.normal_f32() * 40.0).collect();
+        (class, x)
+    }
+}
+
+/// Snapshot a server's default model to `name` and return the CLOK bytes.
+fn clok_bytes(addr: &str, name: &str) -> Vec<u8> {
+    let path = tmp(name);
+    let _ = std::fs::remove_file(&path);
+    let mut c = Client::connect(addr).unwrap();
+    c.snapshot(Some(path.to_str().unwrap())).unwrap();
+    std::fs::read(&path).unwrap()
+}
+
+/// The tentpole drill: kill the primary at the plan's learn-seq point,
+/// promote the follower, keep learning through the new primary, let the
+/// stale old primary come back from its own WAL and get fenced — then
+/// prove the surviving store is bit-identical to a never-failed reference
+/// replaying the same plan.
+#[test]
+fn chaos_kill_primary_promote_follower_and_fence_the_stale_one_bit_identically() {
+    let cfg = cfg4();
+    let plan = FaultPlan::seeded(0xC7A0_5EED);
+    let wal_a = tmp("chaos_a.clow");
+    let wal_b = tmp("chaos_b.clow");
+    for f in [&wal_a, &wal_b] {
+        let _ = std::fs::remove_file(f);
+    }
+
+    // generation 0: primary A logs to its WAL; follower B is a full
+    // server with its own WAL, tailing A
+    let a = start_server(&cfg, Some(&wal_a));
+    let a_addr = a.local_addr().to_string();
+    let mut bopts = CoordinatorOptions::software(cfg.clone());
+    bopts.wal_path = Some(wal_b.clone());
+    let registry = Registry::single("t", Coordinator::start(bopts).unwrap());
+    let b_local = registry.get("t").unwrap();
+    let b_sopts = ServeOptions { allow_snapshot_paths: true, ..ServeOptions::default() };
+    let b = Server::start("127.0.0.1:0", registry, b_sopts).unwrap();
+    let b_addr = b.local_addr().to_string();
+    let replica = Replica::start(b_local.clone(), ReplicaOptions::new(a_addr.clone())).unwrap();
+
+    let mut c = Client::connect(&a_addr).unwrap();
+    for i in 0..plan.kill_at {
+        let (class, x) = plan.learn(&cfg, i);
+        c.learn(&x, class).unwrap();
+    }
+    assert!(
+        wait_until(|| replica.status().applied_seq == plan.kill_at, 5000),
+        "follower never converged before the kill point: {:?}",
+        replica.status()
+    );
+
+    // the plan's kill point: the primary is gone for good
+    drop(c);
+    a.stop();
+
+    // promotion: tailing quiesces, the inherited log position seals, and
+    // the follower steps into epoch 1
+    let (epoch, sealed) = replica.promote().unwrap();
+    assert_eq!(epoch, 1, "first promotion over an epoch-0 lineage");
+    assert_eq!(sealed, plan.kill_at, "the WAL seals at the applied sequence");
+
+    // generation 1: the promoted model accepts learns over its own socket
+    let mut cb = Client::connect(&b_addr).unwrap();
+    for i in plan.kill_at..plan.total() {
+        let (class, x) = plan.learn(&cfg, i);
+        cb.learn(&x, class).unwrap();
+    }
+    let st = cb.stats().unwrap();
+    assert_eq!(st.learn_seq, plan.total(), "no acknowledged learn was lost");
+    assert_eq!(st.epoch, 1, "the promotion epoch travels in stats replies");
+    drop(cb);
+
+    // the stale old primary reappears from its own WAL: same knowledge it
+    // died with, still epoch 0
+    let a2 = start_server(&cfg, Some(&wal_a));
+    let a2_addr = a2.local_addr().to_string();
+    {
+        let mut ca = Client::connect(&a2_addr).unwrap();
+        let sa = ca.stats().unwrap();
+        assert_eq!(sa.learn_seq, plan.kill_at);
+        assert_eq!(sa.epoch, 0, "the old primary recovered its stale epoch");
+    }
+
+    // divergence refusal: a tailer pointed at the stale primary fences it
+    // instead of applying its records over the promoted lineage
+    let fencer = Replica::start(b_local.clone(), ReplicaOptions::new(a2_addr.clone())).unwrap();
+    assert!(
+        wait_until(|| fencer.status().fenced >= 1, 5000),
+        "the stale primary was never fenced: {:?}",
+        fencer.status()
+    );
+    assert_eq!(
+        fencer.status().applied_seq,
+        plan.total(),
+        "no stale record may land on the promoted model"
+    );
+    fencer.stop();
+    a2.stop();
+
+    // bit-identity: the surviving store equals a never-failed reference
+    // that replayed the plan's full schedule on a single server
+    let survived = clok_bytes(&b_addr, "chaos_b.clok");
+    b.stop();
+    let reference = start_server(&cfg, None);
+    let ref_addr = reference.local_addr().to_string();
+    let mut cr = Client::connect(&ref_addr).unwrap();
+    for i in 0..plan.total() {
+        let (class, x) = plan.learn(&cfg, i);
+        cr.learn(&x, class).unwrap();
+    }
+    drop(cr);
+    let wanted = clok_bytes(&ref_addr, "chaos_ref.clok");
+    reference.stop();
+    assert_eq!(
+        survived, wanted,
+        "failover must be invisible in the knowledge bytes: the promoted \
+         store and the never-failed reference diverged"
+    );
+}
+
+/// The same drill under a second seed: a different kill point and
+/// post-promotion load, pinning that the failover invariants are not an
+/// artifact of one schedule.
+#[test]
+fn chaos_second_seed_replays_a_different_schedule_with_the_same_invariants() {
+    let cfg = cfg4();
+    let plan_a = FaultPlan::seeded(0xC7A0_5EED);
+    let plan = FaultPlan::seeded(0xBAD5_EED2);
+    assert!(
+        plan.kill_at != plan_a.kill_at || plan.after_promotion != plan_a.after_promotion,
+        "distinct seeds should yield distinct schedules"
+    );
+
+    let wal_a = tmp("chaos2_a.clow");
+    let _ = std::fs::remove_file(&wal_a);
+    let a = start_server(&cfg, Some(&wal_a));
+    let a_addr = a.local_addr().to_string();
+    // this follower keeps no WAL: promotion must still fence for the
+    // process lifetime (the epoch is tracked in memory)
+    let registry =
+        Registry::single("t", Coordinator::start(CoordinatorOptions::software(cfg.clone())).unwrap());
+    let b_local = registry.get("t").unwrap();
+    let b_sopts = ServeOptions { allow_snapshot_paths: true, ..ServeOptions::default() };
+    let b = Server::start("127.0.0.1:0", registry, b_sopts).unwrap();
+    let b_addr = b.local_addr().to_string();
+    let replica = Replica::start(b_local.clone(), ReplicaOptions::new(a_addr.clone())).unwrap();
+
+    let mut c = Client::connect(&a_addr).unwrap();
+    for i in 0..plan.kill_at {
+        let (class, x) = plan.learn(&cfg, i);
+        c.learn(&x, class).unwrap();
+    }
+    assert!(
+        wait_until(|| replica.status().applied_seq == plan.kill_at, 5000),
+        "follower never converged: {:?}",
+        replica.status()
+    );
+    drop(c);
+    a.stop();
+
+    let (epoch, sealed) = replica.promote().unwrap();
+    assert_eq!((epoch, sealed), (1, plan.kill_at));
+
+    let mut cb = Client::connect(&b_addr).unwrap();
+    for i in plan.kill_at..plan.total() {
+        let (class, x) = plan.learn(&cfg, i);
+        cb.learn(&x, class).unwrap();
+    }
+    let st = cb.stats().unwrap();
+    assert_eq!((st.learn_seq, st.epoch), (plan.total(), 1));
+    drop(cb);
+
+    let survived = clok_bytes(&b_addr, "chaos2_b.clok");
+    b.stop();
+    let reference = start_server(&cfg, None);
+    let ref_addr = reference.local_addr().to_string();
+    let mut cr = Client::connect(&ref_addr).unwrap();
+    for i in 0..plan.total() {
+        let (class, x) = plan.learn(&cfg, i);
+        cr.learn(&x, class).unwrap();
+    }
+    drop(cr);
+    let wanted = clok_bytes(&ref_addr, "chaos2_ref.clok");
+    reference.stop();
+    assert_eq!(survived, wanted);
+}
+
+/// Runtime registry mutation under load: `OP_MODEL_ADD` boots a model
+/// while learn traffic runs against the default, learns land on the new
+/// model, a `ModelSync` follower converges its model *set* (and the new
+/// model's knowledge), and `OP_MODEL_REMOVE` tears it down everywhere —
+/// all without a single wire error on the surviving models.
+#[test]
+fn model_add_and_remove_under_load_converge_on_the_follower() {
+    use clo_hdnn::serve::{ModelSpec, ModelSync, ModelSyncOptions};
+
+    let cfg = cfg4();
+    let ps = protos(&cfg, 91);
+    let dir = tmp("mutate");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // primary: a template-keeping registry (Registry::start), so runtime
+    // adds can clone the default model's configuration; WAL paths derive
+    // per model, so the added model is tailable
+    let mut popts = CoordinatorOptions::software(cfg.clone());
+    popts.wal_path = Some(dir.join("p.clog"));
+    let registry = Registry::start(vec![ModelSpec::new("m", popts)]).unwrap();
+    let primary = Server::start("127.0.0.1:0", registry, ServeOptions::default()).unwrap();
+    let p_addr = primary.local_addr().to_string();
+
+    // follower: its own registry + server, with ModelSync converging the
+    // model set and per-model tailers converging knowledge
+    let fregistry = std::sync::Arc::new(
+        Registry::start(vec![ModelSpec::new(
+            "m",
+            CoordinatorOptions::software(cfg.clone()),
+        )])
+        .unwrap(),
+    );
+    let mut sopts = ModelSyncOptions::new(p_addr.clone());
+    sopts.poll_interval = Duration::from_millis(25);
+    sopts.replica.poll_interval = Duration::from_millis(5);
+    let sync = ModelSync::start(fregistry.clone(), sopts);
+
+    // load phase 1: learns against the default model
+    let mut c = Client::connect_v2(&p_addr).unwrap();
+    for (cls, p) in ps.iter().enumerate() {
+        c.learn(p, cls).unwrap();
+    }
+
+    // mutate under that load: boot "x" from the default's template
+    let models = c.model_add("x", "").unwrap();
+    assert_eq!(models, ["m".to_string(), "x".to_string()]);
+    // load phase 2: interleave learns against both models
+    c.set_model("x").unwrap();
+    for (cls, p) in ps.iter().enumerate() {
+        c.learn(p, cls).unwrap();
+    }
+    c.set_model("").unwrap();
+    for (cls, p) in ps.iter().enumerate() {
+        c.learn(p, cls).unwrap();
+    }
+
+    // the follower observes the addition and converges both stores
+    assert!(
+        wait_until(|| fregistry.names().contains(&"x".to_string()), 5000),
+        "follower never added model 'x' (sync counters {:?})",
+        sync.counters()
+    );
+    let fx = || -> u64 {
+        fregistry
+            .get("x")
+            .ok()
+            .and_then(|co| co.call(clo_hdnn::coordinator::Payload::Stats).ok())
+            .and_then(|r| r.stats)
+            .map(|s| s.learn_seq)
+            .unwrap_or(0)
+    };
+    assert!(
+        wait_until(|| fx() == ps.len() as u64, 5000),
+        "follower's 'x' never converged (at {})",
+        fx()
+    );
+
+    // remove "x" (its executor flushes before the ack); the default model
+    // keeps serving untouched
+    let models = c.model_remove("x").unwrap();
+    assert_eq!(models, ["m".to_string()]);
+    c.set_model("x").unwrap();
+    assert!(c.learn(&ps[0], 0).is_err(), "removed model must refuse traffic");
+    c.set_model("").unwrap();
+    for (cls, p) in ps.iter().enumerate() {
+        assert_eq!(c.infer(p).unwrap().class, cls);
+    }
+    assert!(
+        wait_until(|| !fregistry.names().contains(&"x".to_string()), 5000),
+        "follower never removed model 'x'"
+    );
+    let st = c.stats().unwrap();
+    assert_eq!(st.learn_seq, 2 * ps.len() as u64, "the default model's log is untouched");
+
+    drop(c);
+    sync.stop();
+    primary.stop();
+}
+
+/// `Replica::status().connected` must flap false→true across a primary
+/// outage (capped-backoff reconnect), with `reconnects` counting the
+/// failed attempts — the signal `serve --promote-on down:<ms>` keys on.
+#[test]
+fn replica_status_connected_flaps_and_reconnects_count_across_an_outage() {
+    let cfg = cfg4();
+    let ps = protos(&cfg, 91);
+    let wal = tmp("flap.clow");
+    let _ = std::fs::remove_file(&wal);
+
+    let first = start_server(&cfg, Some(&wal));
+    let addr = first.local_addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+    for (cls, p) in ps.iter().enumerate() {
+        c.learn(p, cls).unwrap();
+    }
+
+    let follower = Coordinator::start(CoordinatorOptions::software(cfg.clone())).unwrap();
+    let registry = Registry::single("t", follower);
+    let local = registry.get("t").unwrap();
+    let mut ropts = ReplicaOptions::new(addr.clone());
+    ropts.poll_interval = Duration::from_millis(5);
+    ropts.reconnect_base = Duration::from_millis(20);
+    ropts.reconnect_max = Duration::from_millis(100);
+    let replica = Replica::start(local, ropts).unwrap();
+    assert!(
+        wait_until(|| replica.status().connected, 5000),
+        "never connected: {:?}",
+        replica.status()
+    );
+    assert!(
+        wait_until(|| replica.status().applied_seq == ps.len() as u64, 5000),
+        "never converged: {:?}",
+        replica.status()
+    );
+
+    // outage: connected must drop and reconnect attempts must accrue
+    drop(c);
+    first.stop();
+    assert!(
+        wait_until(|| !replica.status().connected, 5000),
+        "outage not observed: {:?}",
+        replica.status()
+    );
+    assert!(
+        wait_until(|| replica.status().reconnects >= 2, 5000),
+        "backoff retries not counted: {:?}",
+        replica.status()
+    );
+
+    // recovery on the same address — the restarted primary replays its
+    // WAL, so the returning tailer finds the same log and just idles:
+    // connected must rise again without losing the applied sequence
+    let second = match Server::start(&addr, Registry::single("t", {
+        let mut opts = CoordinatorOptions::software(cfg.clone());
+        opts.wal_path = Some(wal.clone());
+        Coordinator::start(opts).unwrap()
+    }), ServeOptions::default())
+    {
+        Ok(s) => s,
+        // the freed port was taken in the interim: extremely rare, and
+        // the flap-down half of the test already passed
+        Err(_) => {
+            replica.stop();
+            return;
+        }
+    };
+    assert!(
+        wait_until(|| replica.status().connected, 10_000),
+        "never re-connected: {:?}",
+        replica.status()
+    );
+    assert_eq!(replica.status().applied_seq, ps.len() as u64);
+    replica.stop();
+    second.stop();
+}
+
+/// `Replica::status().bootstraps` must increment when the tailer returns
+/// after the primary compacted past its position: the gap is answered by
+/// a snapshot-image re-bootstrap, not silent divergence.
+#[test]
+fn replica_bootstraps_increment_on_a_compaction_gap_rebootstrap() {
+    let cfg = cfg4();
+    let ps = protos(&cfg, 91);
+    let dir = tmp("gap");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut popts = CoordinatorOptions::software(cfg.clone());
+    popts.wal_path = Some(dir.join("p.clog"));
+    popts.snapshot_path = Some(dir.join("p.clok"));
+    let registry = Registry::start(vec![clo_hdnn::serve::ModelSpec::new("m", popts)]).unwrap();
+    let server = Server::start("127.0.0.1:0", registry, ServeOptions::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut c = Client::connect(&addr).unwrap();
+    for (cls, p) in ps.iter().enumerate() {
+        c.learn(p, cls).unwrap();
+    }
+
+    // first life: converge from the live log — zero bootstraps, since the
+    // log still reaches back to sequence 0
+    let follower = Coordinator::start(CoordinatorOptions::software(cfg.clone())).unwrap();
+    let local = std::sync::Arc::new(follower);
+    let mut ropts = ReplicaOptions::new(addr.clone());
+    ropts.poll_interval = Duration::from_millis(5);
+    let replica = Replica::start(local.clone(), ropts.clone()).unwrap();
+    assert!(
+        wait_until(|| replica.status().applied_seq == ps.len() as u64, 5000),
+        "never converged: {:?}",
+        replica.status()
+    );
+    assert_eq!(replica.status().bootstraps, 0, "{:?}", replica.status());
+    replica.stop();
+
+    // while the tailer is offline, the primary learns on and compacts:
+    // the snapshot rotates the log past the follower's position
+    for (cls, p) in ps.iter().enumerate() {
+        c.learn(p, cls).unwrap();
+    }
+    c.snapshot(None).unwrap();
+
+    // second life, same local store: the tail hits the compaction refusal
+    // and re-bootstraps from the primary's image
+    let replica = Replica::start(local.clone(), ropts).unwrap();
+    assert!(
+        wait_until(|| replica.status().applied_seq == 2 * ps.len() as u64, 5000),
+        "never re-converged: {:?}",
+        replica.status()
+    );
+    assert_eq!(replica.status().bootstraps, 1, "{:?}", replica.status());
+    for (cls, p) in ps.iter().enumerate() {
+        let r = local.call(clo_hdnn::coordinator::Payload::Features(p.clone())).unwrap();
+        assert_eq!(r.class, Some(cls));
+    }
+    replica.stop();
+    drop(c);
+    server.stop();
+}
